@@ -1,0 +1,79 @@
+//! Long-sequence serving with paged attention + ALiBi (paper §III.A).
+//!
+//! Demonstrates the two long-context claims:
+//! 1. ALiBi adds position bias with **zero** mask memory, while a
+//!    materialized causal mask grows as O(S²);
+//! 2. the paged cache spreads a long sequence across non-contiguous
+//!    blocks with bounded waste (< one block).
+//!
+//! ```bash
+//! cargo run --release --example longctx_alibi -- --seq 512
+//! ```
+
+use opt_gptq::attention::alibi::alibi_slopes;
+use opt_gptq::coordinator::{BucketPolicy, Engine, EngineConfig, SchedulerConfig};
+use opt_gptq::model::{ModelConfig, ModelWeights, NativeModel, SamplingParams};
+use opt_gptq::runtime::NativeBackend;
+use opt_gptq::tokenizer::ByteTokenizer;
+use opt_gptq::util::cli::Args;
+use opt_gptq::workload::synth_prompt;
+
+fn main() -> anyhow::Result<()> {
+    opt_gptq::util::logging::init();
+    let args = Args::from_env();
+    let seq = args.get_usize("seq", 512);
+    let gen = args.get_usize("gen", 32);
+    let cfg = ModelConfig::small(); // max_seq 1024, ALiBi on
+    assert!(seq + gen <= cfg.max_seq, "seq too long for the small preset");
+
+    // --- Claim 1: mask memory. -------------------------------------------
+    let mask_bytes = seq * seq * 4; // f32 [S, S] causal mask
+    let slope_bytes = cfg.n_heads * 4; // ALiBi slope vector
+    println!("sequence length {seq}:");
+    println!("  materialized causal mask : {:>12} bytes (O(S²))", mask_bytes);
+    println!("  ALiBi slopes             : {:>12} bytes (O(H))", slope_bytes);
+    println!(
+        "  slopes: {:?}…",
+        &alibi_slopes(cfg.n_heads)[..4.min(cfg.n_heads)]
+    );
+
+    // --- Claim 2: paged long-context serving. ----------------------------
+    let block_size = 16;
+    let backend = NativeBackend::new(NativeModel::new(ModelWeights::init(&cfg, 0)));
+    let mut engine = Engine::new(
+        Box::new(backend),
+        EngineConfig {
+            num_blocks: (seq + gen) / block_size + 8,
+            block_size,
+            sched: SchedulerConfig::default(),
+            decode_buckets: BucketPolicy::exact(4),
+            prefill_chunk: usize::MAX,
+            prefix_cache_blocks: 0,
+        },
+    );
+    let tok = ByteTokenizer::new();
+    let prompt = tok.encode(&synth_prompt(seq - 1, 42)); // -1 for BOS
+    assert_eq!(prompt.len(), seq);
+    let params = SamplingParams { max_tokens: gen, ..Default::default() };
+    engine.add_request(prompt, params)?;
+
+    let report = engine.run_to_completion();
+    let out = engine.take_outputs().pop().expect("one output");
+    println!();
+    println!("served 1 × {seq}-token prompt + {gen} generated:");
+    println!("  latency              : {:.3}s", out.latency_s);
+    println!("  TTFT (prefill)       : {:.3}s", out.ttft_s);
+    println!(
+        "  decode rate          : {:.1} tok/s",
+        (gen as f64 - 1.0) / (out.latency_s - out.ttft_s).max(1e-9)
+    );
+    println!("  peak KV blocks       : {}", report.peak_blocks);
+    let total = seq + gen;
+    let blocks_used = total.div_ceil(block_size);
+    println!(
+        "  cache waste          : {} slots of {} (< one block)",
+        blocks_used * block_size - total,
+        blocks_used * block_size
+    );
+    Ok(())
+}

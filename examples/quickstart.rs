@@ -1,0 +1,85 @@
+//! Quickstart: build an engine, serve a few requests, print the paper-style
+//! report.
+//!
+//! ```bash
+//! cargo run --release --example quickstart            # native backend
+//! cargo run --release --example quickstart -- --xla   # AOT/PJRT backend
+//! ```
+
+use opt_gptq::coordinator::{BucketPolicy, Engine, EngineConfig, SchedulerConfig};
+use opt_gptq::model::{ModelConfig, ModelWeights, NativeModel, SamplingParams};
+use opt_gptq::runtime::{ArtifactManifest, Backend, NativeBackend, XlaBackend};
+use opt_gptq::tokenizer::ByteTokenizer;
+use opt_gptq::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    opt_gptq::util::logging::init();
+    let args = Args::from_env();
+
+    // 1. A model. Presets: tiny (~1M), small (~13M), mini (~100M).
+    let cfg = ModelConfig::preset(args.get_str("model", "tiny")).expect("preset");
+    let weights = ModelWeights::init(&cfg, 0);
+
+    // 2. A backend: native Rust, or AOT-compiled HLO on PJRT (`--xla`,
+    //    needs `make artifacts`).
+    let (backend, econf): (Box<dyn Backend>, EngineConfig) = if args.flag("xla") {
+        let manifest = ArtifactManifest::load(std::path::Path::new("artifacts"))?;
+        let econf = EngineConfig {
+            num_blocks: manifest.num_blocks,
+            block_size: manifest.block_size,
+            sched: SchedulerConfig {
+                max_decode_batch: manifest.max_decode_batch(),
+                ..Default::default()
+            },
+            decode_buckets: BucketPolicy::new(
+                manifest.entries.iter().filter(|e| e.kind == "decode").map(|e| e.batch).collect(),
+            ),
+            prefill_chunk: manifest.max_prefill_seq(),
+            prefix_cache_blocks: 0,
+        };
+        (Box::new(XlaBackend::load(manifest, &weights)?), econf)
+    } else {
+        let econf = EngineConfig {
+            num_blocks: 128,
+            block_size: 16,
+            sched: SchedulerConfig::default(),
+            decode_buckets: BucketPolicy::exact(8),
+            prefill_chunk: usize::MAX,
+            prefix_cache_blocks: 0,
+        };
+        (Box::new(NativeBackend::new(NativeModel::new(weights))), econf)
+    };
+
+    // 3. The engine: paged KV cache + continuous batching.
+    let mut engine = Engine::new(backend, econf);
+    println!(
+        "engine up: backend={}, KV pool = {} tokens",
+        engine.backend_name(),
+        engine.capacity_tokens()
+    );
+
+    // 4. Requests.
+    let tok = ByteTokenizer::new();
+    let prompts = ["the paged cache", "grouped query heads", "share key values"];
+    for p in &prompts {
+        let params = SamplingParams { max_tokens: 12, ..Default::default() };
+        let id = engine.add_request(tok.encode(p), params)?;
+        println!("queued request {id}: {p:?}");
+    }
+
+    // 5. Run and report (the paper's three headline metrics).
+    let report = engine.run_to_completion();
+    for out in engine.take_outputs() {
+        println!(
+            "request {} → {:?} ({} tokens, latency {:.3}s, ttft {:.3}s)",
+            out.id,
+            tok.decode(&out.tokens),
+            out.tokens.len(),
+            out.latency_s,
+            out.ttft_s
+        );
+    }
+    print!("{}", report.paper_block("quickstart"));
+    println!("mean decode batch: {:.2}", engine.metrics.mean_decode_batch());
+    Ok(())
+}

@@ -1,0 +1,104 @@
+//! E2E driver: the ~100M-parameter `mini` model served under a batched
+//! workload through the full router→scheduler→paged-cache→backend path,
+//! reporting the paper's metrics (recorded in EXPERIMENTS.md).
+//!
+//! ```bash
+//! cargo run --release --example serve_batch                 # mini, 16 req
+//! cargo run --release --example serve_batch -- --model small --requests 32
+//! cargo run --release --example serve_batch -- --quantize   # GPTQ int4 first
+//! ```
+
+use opt_gptq::coordinator::{BucketPolicy, Engine, EngineConfig, SchedulerConfig};
+use opt_gptq::model::weights::{quantize_weights, QuantMethod};
+use opt_gptq::model::{ModelConfig, ModelWeights, NativeModel, SamplingParams};
+use opt_gptq::runtime::NativeBackend;
+use opt_gptq::tokenizer::ByteTokenizer;
+use opt_gptq::util::cli::Args;
+use opt_gptq::workload::{generate, synth_prompt, LenDist, WorkloadConfig};
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    opt_gptq::util::logging::init();
+    let args = Args::from_env();
+    let preset = args.get_str("model", "mini");
+    let cfg = ModelConfig::preset(preset).expect("preset");
+    println!("model: {preset} ({} params)", cfg.param_count());
+
+    // Weights, optionally GPTQ-quantized first (full calibration pipeline).
+    let t0 = Instant::now();
+    let mut weights = ModelWeights::init(&cfg, 0);
+    println!("initialized weights in {:.1}s", t0.elapsed().as_secs_f64());
+    if args.flag("quantize") {
+        let t = Instant::now();
+        let model = NativeModel::new(weights.clone());
+        let tok = ByteTokenizer::new();
+        let calib = tok.encode(&synth_prompt(128, 0));
+        let (a, m, f) = model.calibrate(&calib);
+        let report = quantize_weights(&mut weights, QuantMethod::Gptq, 4, 128, &a, &m, &f);
+        println!(
+            "GPTQ int4: mean rel err {:.5}, {:.2}× weight compression ({:.1}s)",
+            report.mean_error(),
+            report.compression_ratio(),
+            t.elapsed().as_secs_f64()
+        );
+    }
+
+    // Engine with a KV budget sized for real concurrency on this model.
+    let block_size = 16;
+    let kv_tokens = args.get_usize("kv-tokens", 4096);
+    let max_batch = args.get_usize("max-batch", 8);
+    let backend = NativeBackend::new(NativeModel::new(weights));
+    let mut engine = Engine::new(
+        Box::new(backend),
+        EngineConfig {
+            num_blocks: kv_tokens / block_size,
+            block_size,
+            sched: SchedulerConfig {
+                max_running: 32,
+                max_decode_batch: max_batch,
+                watermark_blocks: 2,
+            },
+            decode_buckets: BucketPolicy::exact(max_batch),
+            prefill_chunk: usize::MAX,
+            prefix_cache_blocks: 0,
+        },
+    );
+    println!(
+        "engine: {} blocks × {} slots = {} KV tokens",
+        kv_tokens / block_size,
+        block_size,
+        engine.capacity_tokens()
+    );
+
+    // Batched workload (the paper's offline-batch setting).
+    let wl = WorkloadConfig {
+        num_requests: args.get_usize("requests", 16),
+        arrival_rate: f64::INFINITY,
+        prompt_len: LenDist::Uniform(32, 96),
+        gen_len: LenDist::Uniform(16, 48),
+        seed: args.get_u64("seed", 0),
+    };
+    let trace = generate(&wl);
+    let tok = ByteTokenizer::new();
+    for (i, r) in trace.iter().enumerate() {
+        let params = SamplingParams { max_tokens: r.gen_len, ..Default::default() };
+        engine.add_request(tok.encode(&synth_prompt(r.prompt_len, i as u64)), params)?;
+    }
+    println!("queued {} requests; serving…", trace.len());
+
+    let report = engine.run_to_completion();
+    let outs = engine.take_outputs();
+    assert_eq!(outs.len(), trace.len(), "every request must complete");
+
+    println!();
+    print!("{}", report.paper_block(&format!("serve_batch ({preset})")));
+    println!();
+    println!("mean request latency : {:.3}s", report.mean_request_latency_s);
+    println!("p95 request latency  : {:.3}s", report.p95_request_latency_s);
+    println!("mean TTFT            : {:.3}s", report.mean_ttft_s);
+    println!("mean decode batch    : {:.2} seqs", report.mean_decode_batch);
+    println!("padding waste        : {:.1}%", report.padding_waste * 100.0);
+    println!("preemptions          : {}", report.preemptions);
+    println!("peak KV blocks       : {}/{}", report.peak_blocks, kv_tokens / block_size);
+    Ok(())
+}

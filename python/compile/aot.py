@@ -1,0 +1,158 @@
+"""AOT lowering: JAX model → HLO text artifacts + manifest.
+
+Usage (from `make artifacts`):
+
+    cd python && python -m compile.aot --out ../artifacts [--model tiny]
+
+Emits, for the chosen preset:
+
+* `prefill_s{S}.hlo.txt` for each prefill sequence bucket,
+* `decode_b{B}.hlo.txt` for each decode batch bucket,
+* `gptq_matmul.hlo.txt` — the packed dequant-matmul kernel as a
+  standalone executable (cross-language packing-format check),
+* `manifest.json` — geometry + entry index (see rust runtime/artifacts.rs).
+
+HLO **text** is the interchange format, not serialized protos: jax ≥ 0.5
+emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+parser reassigns ids (see /opt/xla-example/README.md).
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .kernels.gptq_matmul import gptq_matmul
+from .model import PRESETS, decode_fn, param_shapes, prefill_fn
+
+# Bucket grids per preset: (prefill seq buckets, decode batch buckets).
+BUCKETS = {
+    "tiny": ([16, 64], [1, 2, 4]),
+    "tiny-mha": ([16, 64], [1, 2, 4]),
+    "small": ([32, 128], [1, 4]),
+    "mini": ([32, 128], [1, 4, 8]),
+}
+
+# Paged-cache geometry baked into the decode artifacts.
+GEOMETRY = {
+    "tiny": dict(num_blocks=64, block_size=16),
+    "tiny-mha": dict(num_blocks=64, block_size=16),
+    "small": dict(num_blocks=128, block_size=16),
+    "mini": dict(num_blocks=256, block_size=16),
+}
+
+# GPTQ aux-kernel example shape (rows, cols, group_size, pack_bits, n).
+GPTQ_SHAPE = dict(rows=64, cols=64, group_size=32, pack_bits=4, n=4)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_prefill(cfg, seq: int) -> str:
+    params = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in param_shapes(cfg)]
+    tokens = jax.ShapeDtypeStruct((seq,), jnp.int32)
+    fn = functools.partial(prefill_fn, cfg)
+    return to_hlo_text(jax.jit(lambda *a: fn(list(a[:-1]), a[-1])).lower(*params, tokens))
+
+
+def lower_decode(cfg, batch: int, num_blocks: int, block_size: int, max_blocks_per_seq: int) -> str:
+    params = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in param_shapes(cfg)]
+    np_ = len(params)
+    tokens = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    ctx_lens = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    tables = jax.ShapeDtypeStruct((batch, max_blocks_per_seq), jnp.int32)
+    cache = jax.ShapeDtypeStruct(
+        (cfg.n_layers, num_blocks, block_size, cfg.n_kv_heads, cfg.head_dim), jnp.float32
+    )
+    fn = functools.partial(decode_fn, cfg)
+
+    def wrapper(*a):
+        return fn(list(a[:np_]), a[np_], a[np_ + 1], a[np_ + 2], a[np_ + 3], a[np_ + 4])
+
+    return to_hlo_text(jax.jit(wrapper).lower(*params, tokens, ctx_lens, tables, cache, cache))
+
+
+def lower_gptq_matmul() -> str:
+    s = GPTQ_SHAPE
+    lpw = 32 // s["pack_bits"]
+    words_per_row = -(-s["cols"] // lpw)
+    groups = -(-s["cols"] // s["group_size"])
+    x = jax.ShapeDtypeStruct((s["n"], s["cols"]), jnp.float32)
+    words = jax.ShapeDtypeStruct((s["rows"], words_per_row), jnp.int32)
+    scales = jax.ShapeDtypeStruct((s["rows"], groups), jnp.float32)
+    zeros = jax.ShapeDtypeStruct((s["rows"], groups), jnp.int32)
+    fn = functools.partial(
+        gptq_matmul, cols=s["cols"], pack_bits=s["pack_bits"], group_size=s["group_size"]
+    )
+    return to_hlo_text(jax.jit(lambda *a: (fn(*a),)).lower(x, words, scales, zeros))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--model", default="tiny", choices=sorted(PRESETS))
+    args = ap.parse_args()
+    cfg = PRESETS[args.model]
+    prefill_buckets, decode_buckets = BUCKETS[args.model]
+    geom = GEOMETRY[args.model]
+    max_blocks_per_seq = cfg.max_seq // geom["block_size"]
+    os.makedirs(args.out, exist_ok=True)
+
+    entries = []
+    for s in prefill_buckets:
+        path = f"prefill_s{s}.hlo.txt"
+        text = lower_prefill(cfg, s)
+        with open(os.path.join(args.out, path), "w") as f:
+            f.write(text)
+        entries.append({"kind": "prefill", "batch": 1, "seq": s, "path": path})
+        print(f"wrote {path} ({len(text)} chars)")
+    for b in decode_buckets:
+        path = f"decode_b{b}.hlo.txt"
+        text = lower_decode(cfg, b, geom["num_blocks"], geom["block_size"], max_blocks_per_seq)
+        with open(os.path.join(args.out, path), "w") as f:
+            f.write(text)
+        entries.append({"kind": "decode", "batch": b, "seq": 0, "path": path})
+        print(f"wrote {path} ({len(text)} chars)")
+
+    gptq_path = "gptq_matmul.hlo.txt"
+    text = lower_gptq_matmul()
+    with open(os.path.join(args.out, gptq_path), "w") as f:
+        f.write(text)
+    print(f"wrote {gptq_path} ({len(text)} chars)")
+
+    manifest = {
+        "model": args.model,
+        "config": {
+            "vocab": cfg.vocab,
+            "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads,
+            "n_kv_heads": cfg.n_kv_heads,
+            "d_ff": cfg.d_ff,
+            "max_seq": cfg.max_seq,
+            "alibi": cfg.alibi,
+            "rms_eps": cfg.rms_eps,
+        },
+        "num_blocks": geom["num_blocks"],
+        "block_size": geom["block_size"],
+        "max_blocks_per_seq": max_blocks_per_seq,
+        "entries": entries,
+        "aux": {"gptq_matmul": {"path": gptq_path, **GPTQ_SHAPE}},
+    }
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest.json ({len(entries)} entries)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""L1 Pallas kernel: GPTQ int4/int8 dequant-matmul.
+
+Consumes the packed format produced by rust `quant::packing::pack_rows`
+(little-endian fields in i32 words, group-wise scales/zeros) and fuses
+unpack → dequantize → matmul, so the f32 weight matrix never exists in
+memory — the weight-only-quantization serving pattern (W4A16) the paper's
+"GPTQ" side relies on.
+
+The grid tiles output rows; each program unpacks its tile of W once into
+registers/VMEM and contracts it against the full activation block on the
+MXU.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _dequant_matmul_kernel(
+    x_ref,  # [N, COLS]
+    w_ref,  # [TILE, WORDS] i32
+    sc_ref,  # [TILE, GROUPS]
+    zp_ref,  # [TILE, GROUPS] i32
+    out_ref,  # [N, TILE]
+    *,
+    cols: int,
+    pack_bits: int,
+    group_size: int,
+):
+    x = x_ref[...]
+    words = w_ref[...]
+    lpw = 32 // pack_bits
+    mask = (1 << pack_bits) - 1
+    # Unpack: level c of a row lives in word c//lpw, bits (c%lpw)*pack_bits.
+    c = jnp.arange(cols)
+    word_idx = c // lpw
+    shifts = (c % lpw) * pack_bits
+    # i32 >> with sign: mask after shift keeps the field unsigned.
+    fields = (words[:, word_idx] >> shifts[None, :]) & mask  # [TILE, COLS]
+    gidx = c // group_size
+    sc = sc_ref[...][:, gidx]  # [TILE, COLS]
+    zp = zp_ref[...][:, gidx]
+    w = (fields - zp).astype(jnp.float32) * sc
+    out_ref[...] = jnp.dot(x, w.T)
+
+
+def gptq_matmul(x, words, scales, zeros, *, cols: int, pack_bits: int, group_size: int, tile: int = 0):
+    """x `[N, cols]` · dequant(W packed `[rows, words]`)ᵀ → `[N, rows]`."""
+    n = x.shape[0]
+    rows = words.shape[0]
+    groups = -(-cols // group_size)
+    if tile <= 0 or rows % tile != 0:
+        tile = rows  # single tile fallback
+    words_per_row = words.shape[1]
+    kernel = functools.partial(
+        _dequant_matmul_kernel, cols=cols, pack_bits=pack_bits, group_size=group_size
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(rows // tile,),
+        in_specs=[
+            pl.BlockSpec((n, cols), lambda i: (0, 0)),
+            pl.BlockSpec((tile, words_per_row), lambda i: (i, 0)),
+            pl.BlockSpec((tile, groups), lambda i: (i, 0)),
+            pl.BlockSpec((tile, groups), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((n, tile), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((n, rows), jnp.float32),
+        interpret=True,
+    )(x, words, scales, zeros)

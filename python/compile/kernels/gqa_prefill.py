@@ -1,0 +1,85 @@
+"""L1 Pallas kernel: blocked causal GQA prefill attention with fused ALiBi.
+
+One grid step per KV head: the program loads that head's K/V once and
+serves all `G` query heads of the group — prefill-side KV sharing, the
+same `G×` traffic saving as the decode kernel. Causality and ALiBi are
+applied in-register from position arithmetic; no `[S, S]` mask tensor is
+ever built (paper §III.A).
+
+`q_offset` supports chunked prefill: query row i sits at absolute
+position `q_offset + i` over a KV span of `T` rows.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import alibi_slopes
+
+NEG_INF = -1.0e30
+
+
+def _prefill_kernel(
+    q_ref,  # [1, G, S, hd] — this KV head's query group
+    k_ref,  # [1, T, hd]
+    v_ref,  # [1, T, hd]
+    slopes_ref,  # [1, G]
+    out_ref,  # [1, G, S, hd]
+    *,
+    q_offset: int,
+):
+    q = q_ref[0]  # [G, S, hd]
+    k = k_ref[0]  # [T, hd]
+    v = v_ref[0]
+    g, s, hd = q.shape
+    t = k.shape[0]
+    scale = 1.0 / (hd**0.5)
+    scores = jnp.einsum("gsd,td->gst", q, k) * scale  # [G, S, T]
+    q_pos = q_offset + jnp.arange(s)[:, None]  # [S, 1]
+    k_pos = jnp.arange(t)[None, :]  # [1, T]
+    slopes = slopes_ref[0]  # [G]
+    # ALiBi + causality from position arithmetic (zero slopes = causal only).
+    scores = scores - slopes[:, None, None] * (q_pos - k_pos)[None, :, :]
+    scores = jnp.where((k_pos <= q_pos)[None, :, :], scores, NEG_INF)
+    m = scores.max(axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    w = p / p.sum(axis=-1, keepdims=True)
+    out_ref[0] = jnp.einsum("gst,td->gsd", w, v)
+
+
+def gqa_prefill_attention(q, k, v, *, alibi: bool, q_offset: int = 0):
+    """Causal GQA prefill attention (Pallas, interpret mode).
+
+    q: [S, H, hd]; k, v: [T, KVH, hd] (T ≥ q_offset + S).
+    Returns [S, H, hd].
+    """
+    s, h, hd = q.shape
+    t, kvh, _ = k.shape
+    g = h // kvh
+    # [KVH, G, S, hd]: group-major so one grid step owns one KV head.
+    qg = q.reshape(s, kvh, g, hd).transpose(1, 2, 0, 3)
+    kg = k.transpose(1, 0, 2)  # [KVH, T, hd]
+    vg = v.transpose(1, 0, 2)
+    if alibi:
+        slopes = jnp.asarray(alibi_slopes(h), dtype=jnp.float32).reshape(kvh, g)
+    else:
+        slopes = jnp.zeros((kvh, g), dtype=jnp.float32)
+
+    kernel = functools.partial(_prefill_kernel, q_offset=q_offset)
+    out = pl.pallas_call(
+        kernel,
+        grid=(kvh,),
+        in_specs=[
+            pl.BlockSpec((1, g, s, hd), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, t, hd), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, t, hd), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, g), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, g, s, hd), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((kvh, g, s, hd), jnp.float32),
+        interpret=True,
+    )(qg, kg, vg, slopes)
+    # [KVH, G, S, hd] → [S, H, hd]
+    return out.transpose(2, 0, 1, 3).reshape(s, h, hd)

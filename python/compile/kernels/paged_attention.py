@@ -1,0 +1,132 @@
+"""L1 Pallas kernel: paged grouped-query decode attention with fused ALiBi.
+
+The paper's DCU kernel restated for the TPU memory hierarchy (DESIGN.md
+§Hardware-Adaptation):
+
+* the grid runs one program per *sequence*; inside, a `fori_loop` walks
+  the sequence's KV blocks — each block is staged HBM→VMEM **once** and
+  consumed by *all* query heads of each KV group (`G×` fewer KV loads
+  than an MHA kernel, the paper's sharing win);
+* scores are `(KVH, G, hd) · (BS, KVH, hd)` contractions so a whole
+  query group hits the MXU as one matmul;
+* the ALiBi penalty is computed in-register from `(slope, distance)` —
+  no mask tensor is ever materialized (paper §III.A);
+* softmax is *online* (running max/normalizer across blocks), so VMEM
+  holds one KV block + `[KVH, G, hd]` accumulators regardless of context
+  length.
+
+Compiled with `interpret=True`: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel lowers to plain HLO ops. The structure above
+is what a real-TPU build would pin with BlockSpecs; EXPERIMENTS.md
+estimates its VMEM/MXU profile analytically.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import alibi_slopes
+
+NEG_INF = -1.0e30
+
+
+def _decode_kernel(
+    # refs (per grid step: one sequence)
+    q_ref,  # [1, KVH, G, hd]
+    bt_ref,  # [1, MBS] i32
+    ctx_ref,  # [1] i32
+    k_cur_ref,  # [1, KVH, hd]
+    v_cur_ref,  # [1, KVH, hd]
+    k_cache_ref,  # [NB, BS, KVH, hd] (whole pool)
+    v_cache_ref,  # [NB, BS, KVH, hd]
+    slopes_ref,  # [KVH, G]
+    out_ref,  # [1, KVH, G, hd]
+    *,
+    block_size: int,
+    max_blocks: int,
+):
+    q = q_ref[0]  # [KVH, G, hd]
+    ctx = ctx_ref[0]
+    kvh, g, hd = q.shape
+    scale = 1.0 / (hd**0.5)
+    slopes = slopes_ref[...]  # [KVH, G]
+
+    def body(j, carry):
+        m, l, acc = carry  # [KVH,G], [KVH,G], [KVH,G,hd]
+        bid = bt_ref[0, j]
+        # One KV block: staged once, shared by all G heads of each group.
+        k_blk = k_cache_ref[pl.dslice(bid, 1)][0]  # [BS, KVH, hd]
+        v_blk = v_cache_ref[pl.dslice(bid, 1)][0]
+        # Whole-group MXU contraction: [KVH, G, BS].
+        s = jnp.einsum("kgd,bkd->kgb", q, k_blk) * scale
+        k_pos = j * block_size + jnp.arange(block_size)  # [BS]
+        dist = (ctx - k_pos).astype(jnp.float32)  # q sits at position ctx
+        s = s - slopes[:, :, None] * dist[None, None, :]
+        valid = k_pos < ctx
+        s = jnp.where(valid[None, None, :], s, NEG_INF)
+        # Online softmax update.
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        corr = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[:, :, None])
+        p = jnp.where(valid[None, None, :], p, 0.0)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[:, :, None] + jnp.einsum("kgb,bkd->kgd", p, v_blk)
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((kvh, g), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((kvh, g), dtype=jnp.float32)
+    acc0 = jnp.zeros((kvh, g, hd), dtype=jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, max_blocks, body, (m0, l0, acc0))
+
+    # The current token (position ctx, ALiBi distance 0) — always valid.
+    k_cur = k_cur_ref[0]  # [KVH, hd]
+    v_cur = v_cur_ref[0]
+    s_cur = jnp.einsum("kgd,kd->kg", q, k_cur) * scale
+    m_new = jnp.maximum(m, s_cur)
+    corr = jnp.exp(m - m_new)
+    p_cur = jnp.exp(s_cur - m_new)
+    l = l * corr + p_cur
+    acc = acc * corr[:, :, None] + p_cur[:, :, None] * v_cur[:, None, :]
+
+    out_ref[0] = acc / l[:, :, None]
+
+
+def paged_decode_attention(q, k_cache, v_cache, block_tables, ctx_lens, k_cur, v_cur, *, alibi: bool):
+    """Paged GQA decode attention (Pallas, interpret mode).
+
+    q: [B, H, hd]; k_cache/v_cache: [NB, BS, KVH, hd];
+    block_tables: [B, MBS] i32; ctx_lens: [B] i32;
+    k_cur/v_cur: [B, KVH, hd]. Returns [B, H, hd].
+    """
+    b, h, hd = q.shape
+    nb, bs, kvh, _ = k_cache.shape
+    mbs = block_tables.shape[1]
+    g = h // kvh
+    # Head h = kv_head * G + gq ordering (matches rust attention/gqa.rs).
+    q_grouped = q.reshape(b, kvh, g, hd)
+    if alibi:
+        slopes = jnp.asarray(alibi_slopes(h), dtype=jnp.float32).reshape(kvh, g)
+    else:
+        slopes = jnp.zeros((kvh, g), dtype=jnp.float32)
+
+    kernel = functools.partial(_decode_kernel, block_size=bs, max_blocks=mbs)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, kvh, g, hd), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, mbs), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1, kvh, hd), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, kvh, hd), lambda i: (i, 0, 0)),
+            pl.BlockSpec((nb, bs, kvh, hd), lambda i: (0, 0, 0, 0)),
+            pl.BlockSpec((nb, bs, kvh, hd), lambda i: (0, 0, 0, 0)),
+            pl.BlockSpec((kvh, g), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, kvh, g, hd), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kvh, g, hd), jnp.float32),
+        interpret=True,
+    )(q_grouped, block_tables, ctx_lens, k_cur, v_cur, k_cache, v_cache, slopes)
+    return out.reshape(b, h, hd)

@@ -1,0 +1,127 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Every kernel in this package has a reference here written with plain
+jax.numpy ops in the most obvious way possible; pytest asserts
+allclose(kernel, ref) across a shape/seed sweep. These oracles also match
+the Rust native implementations (rust/src/attention/), closing the
+three-way loop: Rust native ↔ jnp ref ↔ Pallas kernel.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def alibi_slopes(num_heads: int) -> np.ndarray:
+    """Per-head ALiBi slopes (Press et al.), matching rust alibi.rs."""
+
+    def pow2_slopes(n):
+        start = 2.0 ** (-8.0 / n)
+        return [start ** (i + 1) for i in range(n)]
+
+    if num_heads & (num_heads - 1) == 0:
+        return np.asarray(pow2_slopes(num_heads), dtype=np.float32)
+    base = 1 << ((num_heads).bit_length() - 1)
+    slopes = pow2_slopes(base)
+    extra = pow2_slopes(2 * base)
+    slopes += extra[0::2][: num_heads - base]
+    return np.asarray(slopes, dtype=np.float32)
+
+
+def gqa_prefill_ref(q, k, v, *, alibi: bool, q_offset: int = 0):
+    """Causal grouped-query attention over contiguous K/V.
+
+    q: [S, H, hd]; k, v: [T, KVH, hd] with T >= q_offset + S.
+    Query row i sits at absolute position q_offset + i and may attend to
+    keys 0..=that position. Returns [S, H, hd].
+    """
+    s, h, hd = q.shape
+    t, kvh, _ = k.shape
+    g = h // kvh
+    scale = 1.0 / np.sqrt(hd)
+    # Expand K/V to per-query-head views.
+    k_exp = jnp.repeat(k, g, axis=1)  # [T, H, hd]
+    v_exp = jnp.repeat(v, g, axis=1)
+    scores = jnp.einsum("shd,thd->hst", q, k_exp) * scale  # [H, S, T]
+    q_pos = q_offset + jnp.arange(s)[:, None]  # [S, 1]
+    k_pos = jnp.arange(t)[None, :]  # [1, T]
+    if alibi:
+        slopes = jnp.asarray(alibi_slopes(h))[:, None, None]
+        scores = scores - slopes * (q_pos - k_pos)[None, :, :]
+    causal = k_pos <= q_pos  # [S, T]
+    scores = jnp.where(causal[None, :, :], scores, -jnp.inf)
+    w = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    w = w / w.sum(axis=-1, keepdims=True)
+    return jnp.einsum("hst,thd->shd", w, v_exp)
+
+
+def paged_decode_ref(q, k_cache, v_cache, block_tables, ctx_lens, k_cur, v_cur, *, alibi: bool):
+    """Paged decode attention reference.
+
+    q: [B, H, hd]; k_cache/v_cache: [NB, BS, KVH, hd];
+    block_tables: [B, MBS] i32; ctx_lens: [B] i32 (tokens already in the
+    cache); k_cur/v_cur: [B, KVH, hd] (the current token's K/V, logically
+    at position ctx_lens[b]). Returns [B, H, hd].
+    """
+    b, h, hd = q.shape
+    nb, bs, kvh, _ = k_cache.shape
+    mbs = block_tables.shape[1]
+    g = h // kvh
+    outs = []
+    for i in range(b):
+        ctx = int(ctx_lens[i])
+        # Gather the sequence's K/V from its blocks.
+        ks, vs = [], []
+        for j in range(mbs):
+            bid = int(block_tables[i, j])
+            ks.append(k_cache[bid])
+            vs.append(v_cache[bid])
+        ks = jnp.concatenate(ks, axis=0)[:ctx]  # [ctx, KVH, hd]
+        vs = jnp.concatenate(vs, axis=0)[:ctx]
+        ks = jnp.concatenate([ks, k_cur[i][None]], axis=0)  # + current
+        vs = jnp.concatenate([vs, v_cur[i][None]], axis=0)
+        out = gqa_prefill_ref(q[i][None], ks, vs, alibi=alibi, q_offset=ctx)
+        outs.append(out[0])
+    return jnp.stack(outs)
+
+
+# ---------------------------------------------------------------------------
+# GPTQ packed-matmul reference (format shared with rust quant/packing.rs).
+# ---------------------------------------------------------------------------
+
+
+def pack_rows_ref(q_levels: np.ndarray, pack_bits: int) -> np.ndarray:
+    """Pack integer levels [rows, cols] little-endian into i32 words.
+
+    Level k of a word occupies bits [k*pack_bits, (k+1)*pack_bits) —
+    identical to rust `quant::packing::pack_rows`.
+    """
+    rows, cols = q_levels.shape
+    lpw = 32 // pack_bits
+    words_per_row = -(-cols // lpw)
+    words = np.zeros((rows, words_per_row), dtype=np.int64)
+    for c in range(cols):
+        words[:, c // lpw] |= q_levels[:, c].astype(np.int64) << ((c % lpw) * pack_bits)
+    return words.astype(np.uint32).view(np.int32).reshape(rows, words_per_row)
+
+
+def unpack_rows_ref(words: np.ndarray, cols: int, pack_bits: int) -> np.ndarray:
+    """Inverse of pack_rows_ref → [rows, cols] uint8 levels."""
+    rows = words.shape[0]
+    lpw = 32 // pack_bits
+    mask = (1 << pack_bits) - 1
+    u = words.view(np.uint32)
+    out = np.zeros((rows, cols), dtype=np.uint8)
+    for c in range(cols):
+        out[:, c] = (u[:, c // lpw] >> ((c % lpw) * pack_bits)) & mask
+    return out
+
+
+def gptq_matmul_ref(x, words, scales, zeros, *, cols: int, pack_bits: int, group_size: int):
+    """x [N, cols] · dequant(packed W [rows, words]).T → [N, rows]."""
+    q = unpack_rows_ref(np.asarray(words), cols, pack_bits).astype(np.float32)
+    groups = -(-cols // group_size)
+    gidx = np.arange(cols) // group_size  # [cols]
+    sc = np.asarray(scales).reshape(-1, groups)[:, gidx]  # [rows, cols]
+    zp = np.asarray(zeros).reshape(-1, groups)[:, gidx]
+    w = (q - zp) * sc  # [rows, cols]
+    return jnp.asarray(x) @ jnp.asarray(w).T

@@ -1,0 +1,118 @@
+"""L1 analytic performance model: VMEM footprint + MXU utilization.
+
+Pallas runs under ``interpret=True`` here (CPU PJRT cannot execute Mosaic
+custom-calls), so real-TPU performance is *estimated* structurally from
+the kernel's block schedule rather than measured — exactly the analysis a
+kernel author does before committing a BlockSpec layout. EXPERIMENTS.md
+§Perf quotes these numbers.
+
+Model (TPU v4-ish single core):
+* VMEM budget ~16 MiB per core; a grid step must fit its blocks.
+* MXU: 128×128 systolic matmul; utilization of a (M, K)·(K, N)
+  contraction ≈ how well the operand dims fill 128-lanes.
+* HBM bandwidth dominates decode attention (small FLOP/byte), so the
+  figure of merit is bytes moved per grid step — where GQA's G× sharing
+  shows up directly.
+"""
+
+from dataclasses import dataclass
+
+VMEM_BYTES = 16 * 1024 * 1024
+MXU_DIM = 128
+
+
+@dataclass(frozen=True)
+class KernelEstimate:
+    name: str
+    vmem_bytes_per_step: int
+    hbm_bytes_per_step: int
+    flops_per_step: int
+    mxu_utilization: float  # 0..1, lane-fill of the dominant contraction
+
+    @property
+    def fits_vmem(self) -> bool:
+        return self.vmem_bytes_per_step <= VMEM_BYTES
+
+    @property
+    def arithmetic_intensity(self) -> float:
+        return self.flops_per_step / max(self.hbm_bytes_per_step, 1)
+
+
+def _lane_fill(dim: int) -> float:
+    """Fraction of MXU lanes a dimension of size `dim` keeps busy."""
+    if dim >= MXU_DIM:
+        return 1.0
+    return dim / MXU_DIM
+
+
+def paged_decode_estimate(
+    *, kvh: int, g: int, hd: int, block_size: int, blocks_per_seq: int, f32: bool = True
+) -> KernelEstimate:
+    """One grid step of the paged GQA decode kernel = one sequence.
+
+    Per KV block staged HBM→VMEM once and consumed by all G heads of each
+    group: the paper's sharing means HBM traffic is `kv_bytes / G` of the
+    MHA equivalent (which would stage per query head).
+    """
+    el = 4 if f32 else 2
+    kv_block = block_size * kvh * hd * el  # one K (or V) block
+    q_bytes = kvh * g * hd * el
+    acc_bytes = kvh * g * hd * el + 2 * kvh * g * el  # acc + m + l
+    vmem = 2 * kv_block + q_bytes + acc_bytes  # K-block + V-block resident
+    hbm = blocks_per_seq * 2 * kv_block + q_bytes + kvh * g * hd * el
+    # scores: (G, hd)·(hd, BS) per kv head, twice (QK^T and PV).
+    flops = blocks_per_seq * kvh * (2 * g * hd * block_size) * 2
+    # Dominant contraction dims: G rows × hd contraction × BS cols.
+    mxu = _lane_fill(g * hd) * _lane_fill(block_size)
+    return KernelEstimate("paged_decode", vmem, hbm, flops, mxu)
+
+
+def mha_decode_estimate(*, h: int, hd: int, block_size: int, blocks_per_seq: int) -> KernelEstimate:
+    """The MHA baseline: every query head stages its own K/V head."""
+    return paged_decode_estimate(kvh=h, g=1, hd=hd, block_size=block_size, blocks_per_seq=blocks_per_seq)
+
+
+def gqa_prefill_estimate(*, kvh: int, g: int, s: int, hd: int) -> KernelEstimate:
+    el = 4
+    q_bytes = g * s * hd * el
+    kv_bytes = 2 * s * hd * el  # this kv head's K and V
+    scores = g * s * s * el
+    vmem = q_bytes + kv_bytes + scores + g * s * hd * el
+    hbm = q_bytes + kv_bytes + g * s * hd * el
+    flops = 2 * g * s * s * hd * 2
+    mxu = _lane_fill(g * s) * _lane_fill(hd)
+    return KernelEstimate("gqa_prefill", vmem, hbm, flops, mxu)
+
+
+def gptq_matmul_estimate(*, n: int, rows: int, cols: int, pack_bits: int, tile: int) -> KernelEstimate:
+    words_per_row = -(-cols // (32 // pack_bits))
+    w_tile = tile * words_per_row * 4
+    x_bytes = n * cols * 4
+    out_tile = n * tile * 4
+    deq_tile = tile * cols * 4  # unpacked tile in registers/VMEM
+    vmem = w_tile + x_bytes + out_tile + deq_tile
+    # The point of the fused kernel: HBM moves PACKED weights (bits/8 per
+    # element), never the f32 dequantized matrix.
+    hbm = w_tile + x_bytes + out_tile
+    flops = 2 * n * tile * cols
+    mxu = _lane_fill(n) * _lane_fill(cols)
+    return KernelEstimate("gptq_matmul", vmem, hbm, flops, mxu)
+
+
+def report(preset: str = "mini") -> str:
+    """Human-readable estimate block for EXPERIMENTS.md."""
+    from ..model import PRESETS
+
+    cfg = PRESETS[preset]
+    g = cfg.n_heads // cfg.n_kv_heads
+    bs, mbs = 16, cfg.max_seq // 16
+    dec = paged_decode_estimate(kvh=cfg.n_kv_heads, g=g, hd=cfg.head_dim, block_size=bs, blocks_per_seq=mbs)
+    mha = mha_decode_estimate(h=cfg.n_heads, hd=cfg.head_dim, block_size=bs, blocks_per_seq=mbs)
+    lines = [
+        f"paged GQA decode ({preset}, full {cfg.max_seq}-token context):",
+        f"  VMEM/step {dec.vmem_bytes_per_step / 1024:.1f} KiB (fits 16 MiB: {dec.fits_vmem})",
+        f"  HBM/step  {dec.hbm_bytes_per_step / 1024:.1f} KiB vs MHA {mha.hbm_bytes_per_step / 1024:.1f} KiB"
+        f"  → {mha.hbm_bytes_per_step / dec.hbm_bytes_per_step:.2f}× less traffic (G = {g})",
+        f"  MXU lane-fill {dec.mxu_utilization:.2f}, arithmetic intensity {dec.arithmetic_intensity:.2f} flop/byte",
+    ]
+    return "\n".join(lines)

@@ -1,0 +1,151 @@
+"""L2: the Llama-GQA model in JAX, calling the L1 Pallas kernels.
+
+Build-time only — `aot.py` lowers `prefill_fn` / `decode_fn` to HLO text
+once; the Rust engine executes the result. The parameter list is FLAT and
+ordered exactly like `ModelWeights::flat_params()` on the Rust side:
+
+    embed,
+    per layer: wq, wk, wv, wo, w_gate, w_up, w_down, rms_attn, rms_mlp,
+    final_norm, lm_head
+
+Calling conventions (shared with rust/src/runtime/xla_backend.rs):
+
+* prefill(params…, tokens i32[S]) →
+    (logits f32[S, V], ks f32[L, S, KVD], vs f32[L, S, KVD])
+* decode(params…, tokens i32[B], ctx_lens i32[B],
+         block_tables i32[B, MBS],
+         k_cache f32[L, NB, BS, KVH, HD], v_cache …) →
+    (logits f32[B, V], k_new f32[L, B, KVD], v_new f32[L, B, KVD])
+"""
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+from .kernels.gqa_prefill import gqa_prefill_attention
+from .kernels.paged_attention import paged_decode_attention
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Mirror of rust model::config::ModelConfig (shape fields only)."""
+
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    max_seq: int
+    alibi: bool
+    rms_eps: float = 1e-5
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+
+PRESETS = {
+    "tiny": ModelConfig(384, 64, 2, 4, 2, 128, 256, True),
+    "tiny-mha": ModelConfig(384, 64, 2, 4, 4, 128, 256, False),
+    "small": ModelConfig(384, 256, 6, 8, 2, 768, 1024, True),
+    "mini": ModelConfig(384, 768, 12, 12, 4, 3072, 2048, True),
+}
+
+PARAMS_PER_LAYER = 9  # wq wk wv wo w_gate w_up w_down rms_attn rms_mlp
+
+
+def num_params(cfg: ModelConfig) -> int:
+    """Flat-parameter count (embed + layers + final_norm + lm_head)."""
+    return 1 + PARAMS_PER_LAYER * cfg.n_layers + 2
+
+
+def param_shapes(cfg: ModelConfig):
+    """Shapes in flat order — used by aot.py to build ShapeDtypeStructs."""
+    d, kv, ff, v = cfg.d_model, cfg.kv_dim, cfg.d_ff, cfg.vocab
+    shapes = [("embed", (v, d))]
+    for i in range(cfg.n_layers):
+        shapes += [
+            (f"layer{i}.wq", (d, d)),
+            (f"layer{i}.wk", (kv, d)),
+            (f"layer{i}.wv", (kv, d)),
+            (f"layer{i}.wo", (d, d)),
+            (f"layer{i}.w_gate", (ff, d)),
+            (f"layer{i}.w_up", (ff, d)),
+            (f"layer{i}.w_down", (d, ff)),
+            (f"layer{i}.rms_attn", (d,)),
+            (f"layer{i}.rms_mlp", (d,)),
+        ]
+    shapes += [("final_norm", (d,)), ("lm_head", (v, d))]
+    return shapes
+
+
+def _split_params(cfg: ModelConfig, params):
+    assert len(params) == num_params(cfg), (len(params), num_params(cfg))
+    embed = params[0]
+    layers = []
+    for i in range(cfg.n_layers):
+        base = 1 + i * PARAMS_PER_LAYER
+        layers.append(params[base : base + PARAMS_PER_LAYER])
+    final_norm = params[-2]
+    lm_head = params[-1]
+    return embed, layers, final_norm, lm_head
+
+
+def _rmsnorm(x, w, eps):
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jnp.reciprocal(jnp.sqrt(ms + eps)) * w
+
+
+def _mlp(x, w_gate, w_up, w_down):
+    g = x @ w_gate.T
+    u = x @ w_up.T
+    return (g * jnp.reciprocal(1.0 + jnp.exp(-g)) * u) @ w_down.T
+
+
+def prefill_fn(cfg: ModelConfig, params, tokens):
+    """Dense prefill over `tokens` (i32[S]); see module docstring."""
+    embed, layers, final_norm, lm_head = _split_params(cfg, params)
+    s = tokens.shape[0]
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    x = jnp.take(embed, tokens, axis=0)  # [S, d]
+    ks, vs = [], []
+    for wq, wk, wv, wo, w_gate, w_up, w_down, rms_attn, rms_mlp in layers:
+        xn = _rmsnorm(x, rms_attn, cfg.rms_eps)
+        q = (xn @ wq.T).reshape(s, h, hd)
+        k = (xn @ wk.T).reshape(s, kvh, hd)
+        v = (xn @ wv.T).reshape(s, kvh, hd)
+        ks.append(k.reshape(s, cfg.kv_dim))
+        vs.append(v.reshape(s, cfg.kv_dim))
+        attn = gqa_prefill_attention(q, k, v, alibi=cfg.alibi)  # L1 kernel
+        x = x + attn.reshape(s, cfg.d_model) @ wo.T
+        x = x + _mlp(_rmsnorm(x, rms_mlp, cfg.rms_eps), w_gate, w_up, w_down)
+    logits = _rmsnorm(x, final_norm, cfg.rms_eps) @ lm_head.T  # [S, V]
+    return logits, jnp.stack(ks), jnp.stack(vs)
+
+
+def decode_fn(cfg: ModelConfig, params, tokens, ctx_lens, block_tables, k_cache, v_cache):
+    """Batched paged decode step; see module docstring."""
+    embed, layers, final_norm, lm_head = _split_params(cfg, params)
+    b = tokens.shape[0]
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    x = jnp.take(embed, tokens, axis=0)  # [B, d]
+    k_new, v_new = [], []
+    for li, (wq, wk, wv, wo, w_gate, w_up, w_down, rms_attn, rms_mlp) in enumerate(layers):
+        xn = _rmsnorm(x, rms_attn, cfg.rms_eps)
+        q = (xn @ wq.T).reshape(b, h, hd)
+        k_cur = (xn @ wk.T).reshape(b, kvh, hd)
+        v_cur = (xn @ wv.T).reshape(b, kvh, hd)
+        k_new.append(k_cur.reshape(b, cfg.kv_dim))
+        v_new.append(v_cur.reshape(b, cfg.kv_dim))
+        attn = paged_decode_attention(  # L1 kernel
+            q, k_cache[li], v_cache[li], block_tables, ctx_lens, k_cur, v_cur, alibi=cfg.alibi
+        )
+        x = x + attn.reshape(b, cfg.d_model) @ wo.T
+        x = x + _mlp(_rmsnorm(x, rms_mlp, cfg.rms_eps), w_gate, w_up, w_down)
+    logits = _rmsnorm(x, final_norm, cfg.rms_eps) @ lm_head.T  # [B, V]
+    return logits, jnp.stack(k_new), jnp.stack(v_new)

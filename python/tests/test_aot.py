@@ -1,0 +1,62 @@
+"""AOT lowering sanity: artifacts exist, parse as HLO text, manifest valid."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def artifacts_present():
+    return os.path.exists(os.path.join(ART, "manifest.json"))
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    if not artifacts_present():
+        # Build them (same command as `make artifacts`).
+        subprocess.run(
+            [sys.executable, "-m", "compile.aot", "--out", ART],
+            cwd=os.path.join(os.path.dirname(__file__), ".."),
+            check=True,
+        )
+    with open(os.path.join(ART, "manifest.json")) as f:
+        return json.load(f)
+
+
+def test_manifest_structure(manifest):
+    assert manifest["model"] in ("tiny", "small", "mini", "tiny-mha")
+    cfg = manifest["config"]
+    for key in ("vocab", "d_model", "n_layers", "n_heads", "n_kv_heads", "d_ff", "max_seq"):
+        assert isinstance(cfg[key], int) and cfg[key] > 0, key
+    assert cfg["vocab"] % 128 == 0
+    assert manifest["block_size"] > 0
+    assert manifest["max_blocks_per_seq"] * manifest["block_size"] == cfg["max_seq"]
+    kinds = {e["kind"] for e in manifest["entries"]}
+    assert kinds == {"prefill", "decode"}
+
+
+def test_artifacts_are_hlo_text(manifest):
+    paths = [e["path"] for e in manifest["entries"]] + [manifest["aux"]["gptq_matmul"]["path"]]
+    for p in paths:
+        full = os.path.join(ART, p)
+        assert os.path.exists(full), p
+        with open(full) as f:
+            head = f.read(4096)
+        assert "HloModule" in head, f"{p} does not look like HLO text"
+        assert "ENTRY" in open(full).read(), p
+
+
+def test_decode_entries_have_batch_grid(manifest):
+    batches = sorted(e["batch"] for e in manifest["entries"] if e["kind"] == "decode")
+    assert batches[0] == 1
+    assert batches == sorted(set(batches))
+
+
+def test_prefill_entries_cover_short_prompts(manifest):
+    seqs = sorted(e["seq"] for e in manifest["entries"] if e["kind"] == "prefill")
+    assert seqs[0] >= 8
+    assert seqs[-1] <= manifest["config"]["max_seq"]

@@ -1,0 +1,221 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle (the CORE signal).
+
+hypothesis is unavailable offline, so shape/seed coverage comes from
+seeded parametrized sweeps over the axes that change kernel control flow:
+GQA group factor (MHA / grouped / MQA), block size vs context alignment,
+ragged final blocks, ALiBi on/off, batch composition.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile.kernels import ref
+from compile.kernels.gqa_prefill import gqa_prefill_attention
+from compile.kernels.gptq_matmul import gptq_matmul
+from compile.kernels.paged_attention import paged_decode_attention
+
+ATOL = 3e-5
+RTOL = 3e-5
+
+
+def rng_for(*key):
+    return np.random.default_rng(abs(hash(key)) % (2**32))
+
+
+# ---------------------------------------------------------------------------
+# Prefill kernel
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("h,kvh", [(4, 4), (4, 2), (4, 1), (8, 2), (6, 3)])
+@pytest.mark.parametrize("s", [1, 5, 16])
+@pytest.mark.parametrize("alibi", [True, False])
+def test_prefill_matches_ref(h, kvh, s, alibi):
+    hd = 8
+    r = rng_for("prefill", h, kvh, s, alibi)
+    q = r.standard_normal((s, h, hd), dtype=np.float32)
+    k = r.standard_normal((s, kvh, hd), dtype=np.float32)
+    v = r.standard_normal((s, kvh, hd), dtype=np.float32)
+    out = gqa_prefill_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), alibi=alibi)
+    expect = ref.gqa_prefill_ref(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), alibi=alibi)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=ATOL, rtol=RTOL)
+
+
+def test_prefill_chunked_offset():
+    """q_offset chunk must equal the same rows of a full prefill."""
+    h, kvh, hd, t = 4, 2, 8, 12
+    r = rng_for("chunk")
+    q = r.standard_normal((t, h, hd), dtype=np.float32)
+    k = r.standard_normal((t, kvh, hd), dtype=np.float32)
+    v = r.standard_normal((t, kvh, hd), dtype=np.float32)
+    full = gqa_prefill_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), alibi=True)
+    tail = gqa_prefill_attention(
+        jnp.asarray(q[8:]), jnp.asarray(k), jnp.asarray(v), alibi=True, q_offset=8
+    )
+    np.testing.assert_allclose(np.asarray(tail), np.asarray(full[8:]), atol=ATOL, rtol=RTOL)
+
+
+def test_prefill_is_causal():
+    """Future K/V rows must not affect earlier outputs."""
+    h, kvh, hd, s = 4, 2, 8, 6
+    r = rng_for("causal")
+    q = r.standard_normal((s, h, hd), dtype=np.float32)
+    k = r.standard_normal((s, kvh, hd), dtype=np.float32)
+    v = r.standard_normal((s, kvh, hd), dtype=np.float32)
+    out1 = np.asarray(gqa_prefill_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), alibi=True))
+    k2, v2 = k.copy(), v.copy()
+    k2[-1] += 100.0
+    v2[-1] -= 50.0
+    out2 = np.asarray(gqa_prefill_attention(jnp.asarray(q), jnp.asarray(k2), jnp.asarray(v2), alibi=True))
+    np.testing.assert_array_equal(out1[:-1], out2[:-1])
+    assert not np.allclose(out1[-1], out2[-1])
+
+
+# ---------------------------------------------------------------------------
+# Paged decode kernel
+# ---------------------------------------------------------------------------
+
+
+def make_paged_case(key, b, h, kvh, hd, nb, bs, mbs, ctx_choices):
+    r = rng_for(*key)
+    kc = r.standard_normal((nb, bs, kvh, hd), dtype=np.float32)
+    vc = r.standard_normal((nb, bs, kvh, hd), dtype=np.float32)
+    # Distinct random block tables per sequence.
+    bt = np.stack([r.permutation(nb)[:mbs] for _ in range(b)]).astype(np.int32)
+    ctx = np.asarray([ctx_choices[i % len(ctx_choices)] for i in range(b)], dtype=np.int32)
+    q = r.standard_normal((b, h, hd), dtype=np.float32)
+    k_cur = r.standard_normal((b, kvh, hd), dtype=np.float32)
+    v_cur = r.standard_normal((b, kvh, hd), dtype=np.float32)
+    return q, kc, vc, bt, ctx, k_cur, v_cur
+
+
+@pytest.mark.parametrize("h,kvh", [(4, 4), (4, 2), (4, 1), (8, 4)])
+@pytest.mark.parametrize("bs,mbs", [(4, 3), (8, 2), (16, 1)])
+@pytest.mark.parametrize("alibi", [True, False])
+def test_paged_decode_matches_ref(h, kvh, bs, mbs, alibi):
+    b, hd, nb = 3, 8, 8
+    max_ctx = bs * mbs
+    ctxs = [max_ctx, max_ctx // 2 + 1, 1]
+    q, kc, vc, bt, ctx, k_cur, v_cur = make_paged_case(
+        ("paged", h, kvh, bs, mbs, alibi), b, h, kvh, hd, nb, bs, mbs, ctxs
+    )
+    out = paged_decode_attention(
+        jnp.asarray(q), jnp.asarray(kc), jnp.asarray(vc), jnp.asarray(bt),
+        jnp.asarray(ctx), jnp.asarray(k_cur), jnp.asarray(v_cur), alibi=alibi,
+    )
+    expect = ref.paged_decode_ref(
+        jnp.asarray(q), jnp.asarray(kc), jnp.asarray(vc), bt, ctx,
+        jnp.asarray(k_cur), jnp.asarray(v_cur), alibi=alibi,
+    )
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=ATOL, rtol=RTOL)
+
+
+def test_paged_decode_zero_context():
+    """ctx=0: the token attends only to itself → output is v_cur."""
+    b, h, kvh, hd, nb, bs, mbs = 1, 2, 1, 4, 2, 4, 2
+    q, kc, vc, bt, _, k_cur, v_cur = make_paged_case(
+        ("zero",), b, h, kvh, hd, nb, bs, mbs, [1]
+    )
+    ctx = np.zeros((b,), dtype=np.int32)
+    out = paged_decode_attention(
+        jnp.asarray(q), jnp.asarray(kc), jnp.asarray(vc), jnp.asarray(bt),
+        jnp.asarray(ctx), jnp.asarray(k_cur), jnp.asarray(v_cur), alibi=True,
+    )
+    for head in range(h):
+        np.testing.assert_allclose(np.asarray(out[0, head]), v_cur[0, 0], atol=ATOL, rtol=RTOL)
+
+
+def test_paged_decode_ignores_stale_slots():
+    """Garbage in slots beyond ctx and in unreferenced blocks is invisible."""
+    b, h, kvh, hd, nb, bs, mbs = 1, 4, 2, 8, 6, 4, 2
+    q, kc, vc, bt, ctx, k_cur, v_cur = make_paged_case(
+        ("stale",), b, h, kvh, hd, nb, bs, mbs, [5]
+    )
+    out1 = np.asarray(paged_decode_attention(
+        jnp.asarray(q), jnp.asarray(kc), jnp.asarray(vc), jnp.asarray(bt),
+        jnp.asarray(ctx), jnp.asarray(k_cur), jnp.asarray(v_cur), alibi=True,
+    ))
+    kc2, vc2 = kc.copy(), vc.copy()
+    # Poison beyond-ctx slots of the last used block and all unused blocks.
+    used = set(int(x) for x in bt[0])
+    last_block = int(bt[0, 1])
+    kc2[last_block, 5 - bs :] = 999.0
+    vc2[last_block, 5 - bs :] = 999.0
+    for blk in range(nb):
+        if blk not in used:
+            kc2[blk] = -999.0
+            vc2[blk] = -999.0
+    out2 = np.asarray(paged_decode_attention(
+        jnp.asarray(q), jnp.asarray(kc2), jnp.asarray(vc2), jnp.asarray(bt),
+        jnp.asarray(ctx), jnp.asarray(k_cur), jnp.asarray(v_cur), alibi=True,
+    ))
+    np.testing.assert_allclose(out1, out2, atol=ATOL, rtol=RTOL)
+
+
+def test_paged_decode_extreme_scores_stable():
+    """Online softmax must stay finite under ±50 magnitude keys."""
+    b, h, kvh, hd, nb, bs, mbs = 1, 2, 1, 4, 2, 4, 2
+    q, kc, vc, bt, ctx, k_cur, v_cur = make_paged_case(
+        ("extreme",), b, h, kvh, hd, nb, bs, mbs, [8]
+    )
+    kc = np.where(np.arange(bs)[None, :, None, None] % 2 == 0, 50.0, -50.0) * np.ones_like(kc)
+    out = np.asarray(paged_decode_attention(
+        jnp.asarray(q), jnp.asarray(kc), jnp.asarray(vc), jnp.asarray(bt),
+        jnp.asarray(ctx), jnp.asarray(k_cur), jnp.asarray(v_cur), alibi=False,
+    ))
+    assert np.isfinite(out).all()
+
+
+# ---------------------------------------------------------------------------
+# GPTQ dequant-matmul kernel
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("pack_bits", [4, 8])
+@pytest.mark.parametrize("rows,cols,group_size", [(8, 20, 8), (16, 64, 32), (4, 7, 7)])
+def test_gptq_matmul_matches_ref(pack_bits, rows, cols, group_size):
+    r = rng_for("gptq", pack_bits, rows, cols, group_size)
+    max_q = (1 << pack_bits) - 1
+    q = r.integers(0, max_q + 1, size=(rows, cols)).astype(np.uint8)
+    words = ref.pack_rows_ref(q, pack_bits)
+    groups = -(-cols // group_size)
+    sc = (r.standard_normal((rows, groups)) * 0.1).astype(np.float32)
+    zp = r.integers(0, max_q + 1, size=(rows, groups)).astype(np.int32)
+    x = r.standard_normal((5, cols)).astype(np.float32)
+    out = gptq_matmul(
+        jnp.asarray(x), jnp.asarray(words), jnp.asarray(sc), jnp.asarray(zp),
+        cols=cols, pack_bits=pack_bits, group_size=group_size,
+    )
+    expect = ref.gptq_matmul_ref(x, words, sc, zp, cols=cols, pack_bits=pack_bits, group_size=group_size)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=1e-4, rtol=1e-4)
+
+
+def test_gptq_matmul_tiled_equals_untiled():
+    r = rng_for("tiled")
+    rows, cols, gs, pb = 32, 16, 8, 4
+    q = r.integers(0, 16, size=(rows, cols)).astype(np.uint8)
+    words = ref.pack_rows_ref(q, pb)
+    sc = (r.standard_normal((rows, 2)) * 0.1).astype(np.float32)
+    zp = r.integers(0, 16, size=(rows, 2)).astype(np.int32)
+    x = r.standard_normal((3, cols)).astype(np.float32)
+    a = gptq_matmul(jnp.asarray(x), jnp.asarray(words), jnp.asarray(sc), jnp.asarray(zp),
+                    cols=cols, pack_bits=pb, group_size=gs, tile=8)
+    b = gptq_matmul(jnp.asarray(x), jnp.asarray(words), jnp.asarray(sc), jnp.asarray(zp),
+                    cols=cols, pack_bits=pb, group_size=gs)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5, rtol=1e-5)
+
+
+def test_pack_unpack_roundtrip_sign_bit():
+    """Top-nibble 15 exercises the i32 sign bit (matches rust packing)."""
+    q = np.full((1, 8), 15, dtype=np.uint8)
+    words = ref.pack_rows_ref(q, 4)
+    assert words[0, 0] < 0  # sign bit set
+    np.testing.assert_array_equal(ref.unpack_rows_ref(words, 8, 4), q)
+
+
+def test_alibi_slopes_match_rust_values():
+    s = ref.alibi_slopes(8)
+    np.testing.assert_allclose(s, [2.0 ** -(i + 1) for i in range(8)], rtol=1e-6)
+    s12 = ref.alibi_slopes(12)
+    assert len(s12) == 12 and len(set(s12.tolist())) == 12

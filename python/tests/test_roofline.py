@@ -1,0 +1,69 @@
+"""Structural checks on the L1 analytic performance model."""
+
+from compile.kernels.roofline import (
+    VMEM_BYTES,
+    gptq_matmul_estimate,
+    gqa_prefill_estimate,
+    mha_decode_estimate,
+    paged_decode_estimate,
+    report,
+)
+
+
+def test_decode_fits_vmem_for_all_presets():
+    for kvh, g, hd in [(2, 2, 16), (4, 3, 64), (8, 1, 64)]:
+        e = paged_decode_estimate(kvh=kvh, g=g, hd=hd, block_size=16, blocks_per_seq=128)
+        assert e.fits_vmem, (kvh, g, hd, e.vmem_bytes_per_step)
+        assert e.vmem_bytes_per_step < VMEM_BYTES // 8  # lots of headroom
+
+
+def test_gqa_saves_exactly_g_times_kv_traffic():
+    # Same total query heads (h = kvh*g); KV traffic ratio must be ~G.
+    h, hd = 12, 64
+    for g in [2, 3, 4, 6]:
+        kvh = h // g
+        gqa = paged_decode_estimate(kvh=kvh, g=g, hd=hd, block_size=16, blocks_per_seq=64)
+        mha = mha_decode_estimate(h=h, hd=hd, block_size=16, blocks_per_seq=64)
+        ratio = mha.hbm_bytes_per_step / gqa.hbm_bytes_per_step
+        assert abs(ratio - g) < 0.1, (g, ratio)
+
+
+def test_flops_invariant_under_grouping():
+    # Grouping shares memory, not compute: FLOPs depend on h = kvh*g only.
+    a = paged_decode_estimate(kvh=2, g=6, hd=64, block_size=16, blocks_per_seq=64)
+    b = paged_decode_estimate(kvh=12, g=1, hd=64, block_size=16, blocks_per_seq=64)
+    assert a.flops_per_step == b.flops_per_step
+
+
+def test_grouping_raises_arithmetic_intensity():
+    gqa = paged_decode_estimate(kvh=4, g=3, hd=64, block_size=16, blocks_per_seq=64)
+    mha = mha_decode_estimate(h=12, hd=64, block_size=16, blocks_per_seq=64)
+    assert gqa.arithmetic_intensity > mha.arithmetic_intensity
+
+
+def test_gqa_groups_fill_mxu_better_than_mha():
+    # (G×hd) rows feed the MXU: grouped > per-head vectors.
+    gqa = paged_decode_estimate(kvh=4, g=3, hd=64, block_size=16, blocks_per_seq=64)
+    mha = mha_decode_estimate(h=12, hd=64, block_size=16, blocks_per_seq=64)
+    assert gqa.mxu_utilization > mha.mxu_utilization
+
+
+def test_gptq_kernel_moves_packed_bytes_only():
+    e4 = gptq_matmul_estimate(n=8, rows=256, cols=256, pack_bits=4, tile=64)
+    e8 = gptq_matmul_estimate(n=8, rows=256, cols=256, pack_bits=8, tile=64)
+    assert e4.hbm_bytes_per_step < e8.hbm_bytes_per_step
+    assert e4.fits_vmem
+
+
+def test_prefill_estimate_sane():
+    e = gqa_prefill_estimate(kvh=4, g=3, s=128, hd=64)
+    assert e.fits_vmem
+    assert e.flops_per_step > 0
+    assert 0 < e.mxu_utilization <= 1
+
+
+def test_report_renders():
+    r = report("mini")
+    assert "paged GQA decode" in r
+    assert "less traffic" in r
+    print("\n" + r)

@@ -1,0 +1,133 @@
+//! Abl. E — dynamic (activation-similarity) vs uniform head grouping
+//! (paper §II.B: "allocates similar query heads to the same group …
+//! maximizing intra-group similarity while minimizing inter-group
+//! differences").
+//!
+//! On planted head structure with rising noise: intra-group cosine
+//! similarity of the two assignments, and the attention-output MSE after
+//! MHA→GQA conversion (mean-pooling each group's KV heads).
+
+use opt_gptq::attention::gqa::{gqa_attention, AttnConfig, Bias};
+use opt_gptq::attention::grouping::{
+    group_heads_by_similarity, intra_group_similarity, merge_kv_heads, planted_signatures,
+    uniform_grouping,
+};
+use opt_gptq::quant::layer_mse;
+use opt_gptq::util::benchkit::{f, Table};
+use opt_gptq::util::cli::Args;
+use opt_gptq::util::rng::Rng;
+
+/// Build K/V projection rows whose heads follow `signatures` directions,
+/// convert MHA→GQA under `assignment`, and measure attention-output MSE
+/// vs the original MHA attention on random inputs.
+fn conversion_mse(
+    signatures: &[Vec<f32>],
+    assignment: &[usize],
+    num_groups: usize,
+    seed: u64,
+) -> f64 {
+    let h = signatures.len();
+    let d_model = signatures[0].len();
+    let hd = 8;
+    let s = 12;
+    let mut rng = Rng::new(seed);
+
+    // MHA K/V weights: head rows = signature direction + small noise, so
+    // heads in the same planted cluster have similar projections.
+    let mut wk = vec![0.0f32; h * hd * d_model];
+    for head in 0..h {
+        for r in 0..hd {
+            for c in 0..d_model {
+                wk[(head * hd + r) * d_model + c] =
+                    signatures[head][c] * (1.0 + 0.1 * r as f32) + 0.02 * rng.normal_f32(0.0, 1.0);
+            }
+        }
+    }
+    let wv = wk.clone();
+    let x = rng.normal_vec(s * d_model, 1.0);
+    let q = rng.normal_vec(s * h * hd, 1.0);
+
+    let project = |w: &[f32], heads: usize| -> Vec<f32> {
+        // x [s, d_model] · w^T [heads*hd, d_model] → [s, heads*hd]
+        let mut out = vec![0.0f32; s * heads * hd];
+        for i in 0..s {
+            for o in 0..heads * hd {
+                let mut acc = 0.0;
+                for c in 0..d_model {
+                    acc += x[i * d_model + c] * w[o * d_model + c];
+                }
+                out[i * heads * hd + o] = acc;
+            }
+        }
+        out
+    };
+
+    // Reference: full MHA.
+    let mha_cfg = AttnConfig { num_heads: h, num_kv_heads: h, head_dim: hd, bias: Bias::Alibi };
+    let k_full = project(&wk, h);
+    let v_full = project(&wv, h);
+    let ref_out = gqa_attention(&mha_cfg, &q, &k_full, &v_full, s, s, 0);
+
+    // Converted: merge KV heads group-wise, reorder query heads so each
+    // group's queries sit together (head h → group assignment[h]).
+    let merged_k = merge_kv_heads(&wk, h, hd, d_model, assignment, num_groups);
+    let merged_v = merge_kv_heads(&wv, h, hd, d_model, assignment, num_groups);
+    let kg = project(&merged_k, num_groups);
+    let vg = project(&merged_v, num_groups);
+    // Query reorder: group-major.
+    let gsz = h / num_groups;
+    let mut order: Vec<usize> = (0..h).collect();
+    order.sort_by_key(|&head| (assignment[head], head));
+    let mut qr = vec![0.0f32; q.len()];
+    for i in 0..s {
+        for (new_pos, &head) in order.iter().enumerate() {
+            qr[(i * h + new_pos) * hd..(i * h + new_pos + 1) * hd]
+                .copy_from_slice(&q[(i * h + head) * hd..(i * h + head + 1) * hd]);
+        }
+    }
+    let gqa_cfg =
+        AttnConfig { num_heads: h, num_kv_heads: num_groups, head_dim: hd, bias: Bias::Alibi };
+    let gqa_out = gqa_attention(&gqa_cfg, &qr, &kg, &vg, s, s, 0);
+    // Un-reorder the outputs for comparison.
+    let mut out = vec![0.0f32; gqa_out.len()];
+    for i in 0..s {
+        for (new_pos, &head) in order.iter().enumerate() {
+            out[(i * h + head) * hd..(i * h + head + 1) * hd]
+                .copy_from_slice(&gqa_out[(i * h + new_pos) * hd..(i * h + new_pos + 1) * hd]);
+        }
+    }
+    layer_mse(&ref_out, &out)
+}
+
+fn main() {
+    opt_gptq::util::logging::init();
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let h = args.get_usize("heads", 8);
+    let groups = args.get_usize("groups", 2);
+    let dim = 32;
+
+    let mut t = Table::new(
+        "Abl E: dynamic (similarity) vs uniform grouping",
+        &["noise", "sim(dynamic)", "sim(uniform)", "MSE(dynamic)", "MSE(uniform)", "dyn wins"],
+    );
+    for noise in [0.05f32, 0.2, 0.5, 1.0] {
+        let (sigs, _) = planted_signatures(h, groups, dim, noise, 42);
+        let dynamic = group_heads_by_similarity(&sigs, groups);
+        let uniform = uniform_grouping(h, groups);
+        let sd = intra_group_similarity(&sigs, &dynamic);
+        let su = intra_group_similarity(&sigs, &uniform);
+        let md = conversion_mse(&sigs, &dynamic, groups, 7);
+        let mu = conversion_mse(&sigs, &uniform, groups, 7);
+        t.row(&[
+            format!("{noise:.2}"),
+            f(sd as f64, 4),
+            f(su as f64, 4),
+            format!("{md:.5}"),
+            format!("{mu:.5}"),
+            if md <= mu { "yes".into() } else { "no".into() },
+        ]);
+    }
+    t.print();
+    println!("\n(planted interleaved head clusters: uniform/contiguous grouping merges unrelated");
+    println!(" heads; similarity grouping recovers the structure → lower conversion loss)");
+}

@@ -1,0 +1,88 @@
+//! Abl. A — group-count sweep: the paper's §II.C claim ("8 heads in 2
+//! groups → 50% of the KV storage/computation") generalized across the
+//! full MHA→MQA spectrum, with measured decode-attention time.
+
+mod common;
+
+use common::{engine_with_byte_budget, paper_workload, run_workload};
+use opt_gptq::attention::gqa::{kv_bytes_per_token, AttnConfig, Bias};
+use opt_gptq::attention::paged::paged_decode_attention;
+use opt_gptq::kvcache::{BlockAllocator, BlockTable, PagedKvCache};
+use opt_gptq::model::ModelConfig;
+use opt_gptq::util::benchkit::{black_box, f, Bencher, Table};
+use opt_gptq::util::cli::Args;
+use opt_gptq::util::rng::Rng;
+use std::time::Duration;
+
+fn main() {
+    opt_gptq::util::logging::init();
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let h = 8;
+    let hd = 32;
+    let kv_len = args.get_usize("kv-len", 512);
+    let block_size = 16;
+
+    // --- Kernel-level sweep: bytes + measured paged-attention time. ------
+    let bencher = Bencher::new(Duration::from_millis(50), Duration::from_millis(300), 100);
+    let mut t = Table::new(
+        "Abl A: KV-head grouping sweep (8 query heads, kv_len=512)",
+        &["kv_heads", "G", "KV bytes/tok", "vs MHA", "decode attn time", "speedup"],
+    );
+    let mut base_time = None;
+    for kvh in [8usize, 4, 2, 1] {
+        let cfg = AttnConfig { num_heads: h, num_kv_heads: kvh, head_dim: hd, bias: Bias::Alibi };
+        let num_blocks = kv_len / block_size + 1;
+        let mut cache = PagedKvCache::new(1, num_blocks, block_size, kvh, hd);
+        let mut alloc = BlockAllocator::new(num_blocks, block_size);
+        let mut table = BlockTable::new();
+        table.reserve(kv_len, &mut alloc);
+        let mut rng = Rng::new(1);
+        for _ in 0..kv_len {
+            let (b, s) = table.append_slot(block_size);
+            let k = rng.normal_vec(kvh * hd, 1.0);
+            let v = rng.normal_vec(kvh * hd, 1.0);
+            cache.write_token(0, b, s, &k, &v);
+        }
+        let q = rng.normal_vec(h * hd, 1.0);
+        let samples = bencher.bench(&format!("paged_attn kvh={kvh}"), || {
+            black_box(paged_decode_attention(&cfg, &cache, 0, &q, &table));
+        });
+        let time = samples.p50();
+        let base = *base_time.get_or_insert(time);
+        t.row(&[
+            kvh.to_string(),
+            (h / kvh).to_string(),
+            kv_bytes_per_token(&cfg).to_string(),
+            format!("{:.0}%", 100.0 * kvh as f64 / h as f64),
+            format!("{:.1}µs", time * 1e6),
+            format!("{:.2}×", base / time),
+        ]);
+    }
+    t.print();
+    println!("\n(paper: \"8 heads / 2 groups → 50%\" — the kv_heads=4 row; KV bytes scale exactly with kv_heads)");
+
+    // --- Engine-level sweep: throughput at a fixed byte budget. ----------
+    if !args.flag("skip-engine") {
+        let base = ModelConfig::small();
+        let kv_bytes = 4 * 128 * base.as_mha_baseline().kv_bytes_per_token();
+        let wl = paper_workload(8, 3);
+        let mut t2 = Table::new(
+            "Abl A (engine): requests/s at equal KV bytes",
+            &["kv_heads", "pool tokens", "req/s", "gen tok/s", "mean batch"],
+        );
+        for kvh in [8usize, 4, 2, 1] {
+            let cfg = ModelConfig { n_kv_heads: kvh, ..base };
+            let mut engine = engine_with_byte_budget(&cfg, kv_bytes, 16, 1);
+            let tokens = engine.capacity_tokens();
+            let r = run_workload(&mut engine, &wl);
+            t2.row(&[
+                kvh.to_string(),
+                tokens.to_string(),
+                f(r.req_per_s, 2),
+                f(r.gen_tok_per_s, 2),
+                f(r.mean_decode_batch, 2),
+            ]);
+        }
+        t2.print();
+    }
+}

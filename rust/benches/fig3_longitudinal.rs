@@ -1,0 +1,56 @@
+//! Fig. 3 — longitudinal comparison: repeated runs of the optimized
+//! (Opt-GQA) engine to establish run-to-run stability.
+//!
+//! Paper numbers over 5 runs: latency 57.40 → 56.40 s (spread ≈ 1 s),
+//! token throughput 239.14–240.62 tok/s. The shape to reproduce: spread
+//! within a few percent of the mean on every metric.
+
+mod common;
+
+use common::{engine_with_byte_budget, paper_workload, run_workload};
+use opt_gptq::model::ModelConfig;
+use opt_gptq::util::benchkit::{f, Table};
+use opt_gptq::util::cli::Args;
+use opt_gptq::util::{mean, stddev};
+
+fn main() {
+    opt_gptq::util::logging::init();
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let preset = args.get_str("model", "small");
+    let cfg = ModelConfig::preset(preset).expect("preset");
+    let runs = args.get_usize("runs", 5);
+    let n_req = args.get_usize("requests", 16);
+    let kv_bytes =
+        args.get_usize("kv-bytes", 4 * 128 * cfg.as_mha_baseline().kv_bytes_per_token());
+    let wl = paper_workload(n_req, 7); // identical workload every run
+
+    let mut t = Table::new(
+        "Fig 3: longitudinal comparison (5 runs of Opt-GQA)",
+        &["run", "latency(s)", "all tput (req/s)", "all tput (tok/s)", "gen tput (tok/s)"],
+    );
+    let mut lat = Vec::new();
+    let mut tok = Vec::new();
+    let mut gen = Vec::new();
+    for run in 1..=runs {
+        let mut engine = engine_with_byte_budget(&cfg, kv_bytes, 16, 1);
+        let r = run_workload(&mut engine, &wl);
+        assert_eq!(r.num_requests, n_req);
+        t.row(&[
+            run.to_string(),
+            f(r.latency_s, 2),
+            f(r.req_per_s, 2),
+            f(r.all_tok_per_s, 2),
+            f(r.gen_tok_per_s, 2),
+        ]);
+        lat.push(r.latency_s);
+        tok.push(r.all_tok_per_s);
+        gen.push(r.gen_tok_per_s);
+    }
+    t.print();
+
+    let cv = |xs: &[f64]| 100.0 * stddev(xs) / mean(xs).max(1e-12);
+    println!("\nstability (coefficient of variation):");
+    println!("  latency  : {:.2}% (paper spread ≈ 1.8%)", cv(&lat));
+    println!("  all tok/s: {:.2}% (paper spread ≈ 0.6%)", cv(&tok));
+    println!("  gen tok/s: {:.2}%", cv(&gen));
+}

@@ -1,0 +1,88 @@
+//! ALiBi: Attention with Linear Biases (Press et al.), as integrated by
+//! the paper (§III.A): a per-head linear penalty `-m_h · (i − j)` added to
+//! attention scores in place of an explicit causal-mask tensor.
+
+/// Per-head ALiBi slopes.
+///
+/// For `n` a power of two: `m_h = 2^(−8·(h+1)/n)`. For other `n`, the
+/// original recipe: take the slopes for the next-lower power of two, then
+/// interleave slopes from the `2n` sequence for the remainder.
+pub fn alibi_slopes(num_heads: usize) -> Vec<f32> {
+    fn pow2_slopes(n: usize) -> Vec<f32> {
+        let start = 2.0f64.powf(-8.0 / n as f64);
+        (0..n).map(|i| (start.powi(i as i32 + 1)) as f32).collect()
+    }
+    assert!(num_heads > 0);
+    if num_heads.is_power_of_two() {
+        pow2_slopes(num_heads)
+    } else {
+        let base = num_heads.next_power_of_two() / 2;
+        let mut slopes = pow2_slopes(base);
+        let extra = pow2_slopes(2 * base);
+        // Odd-indexed slopes of the doubled sequence fill the remainder.
+        slopes.extend(extra.iter().step_by(2).take(num_heads - base));
+        slopes
+    }
+}
+
+/// The ALiBi bias for a (query position, key position) pair under head
+/// slope `m`: `−m · (i − j)` for `j ≤ i` (0 at the diagonal, growing
+/// penalty with distance). Callers handle causality (`j > i` excluded by
+/// loop bounds, never by materializing a mask — that is the point).
+#[inline]
+pub fn alibi_bias(slope: f32, q_pos: usize, k_pos: usize) -> f32 {
+    debug_assert!(k_pos <= q_pos);
+    -slope * (q_pos - k_pos) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn power_of_two_slopes_match_paper() {
+        // For 8 heads: 2^-1, 2^-2, …, 2^-8.
+        let s = alibi_slopes(8);
+        for (i, &v) in s.iter().enumerate() {
+            assert!((v - 2.0f32.powi(-(i as i32 + 1))).abs() < 1e-7, "head {i}");
+        }
+    }
+
+    #[test]
+    fn slopes_positive_and_distinct() {
+        for n in [1, 2, 3, 5, 8, 12, 16, 20] {
+            let s = alibi_slopes(n);
+            assert_eq!(s.len(), n);
+            assert!(s.iter().all(|&v| v > 0.0 && v < 1.0), "n={n}");
+            // All slopes distinct (the non-power-of-two interleave is not
+            // monotonic — faithful to the original ALiBi recipe).
+            let mut sorted = s.clone();
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            sorted.dedup();
+            assert_eq!(sorted.len(), n, "n={n}: slopes must be distinct");
+        }
+        // Power-of-two sets are geometric, hence strictly decreasing.
+        for n in [2, 4, 8, 16] {
+            let s = alibi_slopes(n);
+            for w in s.windows(2) {
+                assert!(w[1] < w[0], "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn non_power_of_two_prefix_matches_lower_power() {
+        // First base slopes equal the power-of-two sequence.
+        let s12 = alibi_slopes(12);
+        let s8 = alibi_slopes(8);
+        assert_eq!(&s12[..8], &s8[..]);
+    }
+
+    #[test]
+    fn bias_zero_on_diagonal_and_monotonic() {
+        let m = 0.25;
+        assert_eq!(alibi_bias(m, 5, 5), 0.0);
+        assert!(alibi_bias(m, 5, 4) > alibi_bias(m, 5, 0));
+        assert_eq!(alibi_bias(m, 5, 3), -0.5);
+    }
+}

@@ -1,0 +1,279 @@
+//! Grouped-query attention over contiguous K/V (the prefill path).
+//!
+//! One routine covers the whole MHA→GQA→MQA spectrum: query head `h`
+//! attends with K/V head `h / (num_heads / num_kv_heads)`. Causality is
+//! enforced by loop bounds; position is injected either by ALiBi bias
+//! (paper configuration) or by nothing (baseline uses the implicit causal
+//! mask only — the paper's MHA baseline likewise materializes no mask in
+//! this implementation, isolating the grouping effect).
+
+use super::alibi::{alibi_bias, alibi_slopes};
+use crate::tensor::softmax_inplace;
+
+/// Positional bias mode.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Bias {
+    /// Causal only.
+    None,
+    /// Causal + ALiBi linear bias with standard slopes.
+    Alibi,
+}
+
+/// Attention shape parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct AttnConfig {
+    pub num_heads: usize,
+    pub num_kv_heads: usize,
+    pub head_dim: usize,
+    pub bias: Bias,
+}
+
+impl AttnConfig {
+    /// Query heads per KV group (`G` in the paper).
+    pub fn group_size(&self) -> usize {
+        assert!(self.num_heads % self.num_kv_heads == 0, "heads must divide evenly into groups");
+        self.num_heads / self.num_kv_heads
+    }
+
+    pub fn scale(&self) -> f32 {
+        1.0 / (self.head_dim as f32).sqrt()
+    }
+}
+
+/// Grouped-query causal attention.
+///
+/// * `q`: `[q_len, num_heads * head_dim]`
+/// * `k`, `v`: `[kv_len, num_kv_heads * head_dim]`
+/// * `q_offset`: absolute position of `q[0]` (so chunked prefill with a
+///   cache attends to all earlier keys; `kv_len` covers positions
+///   `0..kv_len`, queries cover `q_offset..q_offset+q_len`).
+///
+/// Returns `[q_len, num_heads * head_dim]`.
+pub fn gqa_attention(
+    cfg: &AttnConfig,
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    q_len: usize,
+    kv_len: usize,
+    q_offset: usize,
+) -> Vec<f32> {
+    let (h, kvh, d) = (cfg.num_heads, cfg.num_kv_heads, cfg.head_dim);
+    assert_eq!(q.len(), q_len * h * d);
+    assert_eq!(k.len(), kv_len * kvh * d);
+    assert_eq!(v.len(), kv_len * kvh * d);
+    let g = cfg.group_size();
+    let scale = cfg.scale();
+    let slopes = match cfg.bias {
+        Bias::Alibi => alibi_slopes(h),
+        Bias::None => vec![0.0; h],
+    };
+
+    let mut out = vec![0.0f32; q_len * h * d];
+    let mut scores = vec![0.0f32; kv_len];
+    for qi in 0..q_len {
+        let q_pos = q_offset + qi;
+        let visible = (q_pos + 1).min(kv_len);
+        for head in 0..h {
+            let kv_head = head / g;
+            let q_vec = &q[(qi * h + head) * d..(qi * h + head + 1) * d];
+            // Scores against every visible key of the shared KV head.
+            for kj in 0..visible {
+                let k_vec = &k[(kj * kvh + kv_head) * d..(kj * kvh + kv_head + 1) * d];
+                let mut s = crate::tensor::dot(q_vec, k_vec) * scale;
+                if cfg.bias == Bias::Alibi {
+                    s += alibi_bias(slopes[head], q_pos, kj);
+                }
+                scores[kj] = s;
+            }
+            softmax_inplace(&mut scores[..visible]);
+            // Weighted sum of values.
+            let o = &mut out[(qi * h + head) * d..(qi * h + head + 1) * d];
+            for kj in 0..visible {
+                let w = scores[kj];
+                let v_vec = &v[(kj * kvh + kv_head) * d..(kj * kvh + kv_head + 1) * d];
+                for (oo, &vv) in o.iter_mut().zip(v_vec) {
+                    *oo += w * vv;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// FLOPs of one grouped-query attention call (score + weighted-sum
+/// matmuls) — the ablation-A cost model.
+pub fn attention_flops(cfg: &AttnConfig, q_len: usize, kv_len: usize) -> usize {
+    // Per (query, head): 2·d mults for scores per key + 2·d for the sum.
+    2 * q_len * cfg.num_heads * kv_len * cfg.head_dim * 2
+}
+
+/// KV-cache bytes per token — the ablation-A memory model. Scales with
+/// `num_kv_heads`, which is the paper's §II.C "50%" claim generalized.
+pub fn kv_bytes_per_token(cfg: &AttnConfig) -> usize {
+    2 * cfg.num_kv_heads * cfg.head_dim * 4
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn cfg(h: usize, kvh: usize, bias: Bias) -> AttnConfig {
+        AttnConfig { num_heads: h, num_kv_heads: kvh, head_dim: 8, bias }
+    }
+
+    /// Naive single-head reference.
+    fn ref_single_head(
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        d: usize,
+        q_pos: usize,
+        kv_len: usize,
+        slope: f32,
+    ) -> Vec<f32> {
+        let visible = (q_pos + 1).min(kv_len);
+        let scale = 1.0 / (d as f32).sqrt();
+        let mut s: Vec<f32> = (0..visible)
+            .map(|j| {
+                let dot: f32 = (0..d).map(|t| q[t] * k[j * d + t]).sum();
+                dot * scale - slope * (q_pos - j) as f32
+            })
+            .collect();
+        softmax_inplace(&mut s);
+        let mut o = vec![0.0; d];
+        for (j, w) in s.iter().enumerate() {
+            for t in 0..d {
+                o[t] += w * v[j * d + t];
+            }
+        }
+        o
+    }
+
+    #[test]
+    fn mha_case_matches_reference() {
+        let mut rng = Rng::new(1);
+        let c = cfg(2, 2, Bias::None);
+        let (q_len, kv_len, d) = (4, 4, 8);
+        let q = rng.normal_vec(q_len * 2 * d, 1.0);
+        let k = rng.normal_vec(kv_len * 2 * d, 1.0);
+        let v = rng.normal_vec(kv_len * 2 * d, 1.0);
+        let out = gqa_attention(&c, &q, &k, &v, q_len, kv_len, 0);
+        for qi in 0..q_len {
+            for head in 0..2 {
+                let qv: Vec<f32> = q[(qi * 2 + head) * d..(qi * 2 + head + 1) * d].to_vec();
+                let kh: Vec<f32> =
+                    (0..kv_len).flat_map(|j| k[(j * 2 + head) * d..(j * 2 + head + 1) * d].to_vec()).collect();
+                let vh: Vec<f32> =
+                    (0..kv_len).flat_map(|j| v[(j * 2 + head) * d..(j * 2 + head + 1) * d].to_vec()).collect();
+                let expect = ref_single_head(&qv, &kh, &vh, d, qi, kv_len, 0.0);
+                let got = &out[(qi * 2 + head) * d..(qi * 2 + head + 1) * d];
+                for (a, b) in got.iter().zip(&expect) {
+                    assert!((a - b).abs() < 1e-5);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gqa_with_full_groups_equals_mha_on_shared_kv() {
+        // With kv_heads == heads and duplicated K/V rows, GQA(k=1 group)
+        // must equal MHA — the grouping is exactly KV sharing.
+        let mut rng = Rng::new(2);
+        let (h, d, q_len, kv_len) = (4, 8, 3, 5);
+        let q = rng.normal_vec(q_len * h * d, 1.0);
+        let k1 = rng.normal_vec(kv_len * d, 1.0); // single kv head
+        let v1 = rng.normal_vec(kv_len * d, 1.0);
+        // MQA form.
+        let mqa = gqa_attention(&cfg(h, 1, Bias::Alibi), &q, &k1, &v1, q_len, kv_len, 0);
+        // Expanded-to-MHA form: duplicate kv head h times.
+        let mut kh = vec![0.0; kv_len * h * d];
+        let mut vh = vec![0.0; kv_len * h * d];
+        for j in 0..kv_len {
+            for head in 0..h {
+                kh[(j * h + head) * d..(j * h + head + 1) * d]
+                    .copy_from_slice(&k1[j * d..(j + 1) * d]);
+                vh[(j * h + head) * d..(j * h + head + 1) * d]
+                    .copy_from_slice(&v1[j * d..(j + 1) * d]);
+            }
+        }
+        let mha = gqa_attention(&cfg(h, h, Bias::Alibi), &q, &kh, &vh, q_len, kv_len, 0);
+        for (a, b) in mqa.iter().zip(&mha) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn causality_no_future_leakage() {
+        // Changing a future key/value must not change earlier outputs.
+        let mut rng = Rng::new(3);
+        let c = cfg(2, 1, Bias::Alibi);
+        let (q_len, kv_len, d) = (4, 4, 8);
+        let q = rng.normal_vec(q_len * 2 * d, 1.0);
+        let mut k = rng.normal_vec(kv_len * d, 1.0);
+        let mut v = rng.normal_vec(kv_len * d, 1.0);
+        let out1 = gqa_attention(&c, &q, &k, &v, q_len, kv_len, 0);
+        // Perturb the last key/value (only visible to the last query).
+        for t in 0..d {
+            k[(kv_len - 1) * d + t] += 10.0;
+            v[(kv_len - 1) * d + t] -= 5.0;
+        }
+        let out2 = gqa_attention(&c, &q, &k, &v, q_len, kv_len, 0);
+        let row = 2 * d; // outputs per query row
+        assert_eq!(&out1[..3 * row], &out2[..3 * row], "rows 0..3 must be unchanged");
+        assert_ne!(&out1[3 * row..], &out2[3 * row..], "row 3 must see the change");
+    }
+
+    #[test]
+    fn q_offset_attends_to_cache() {
+        // Decode formulation: 1 query at position kv_len-1 equals the last
+        // row of full prefill.
+        let mut rng = Rng::new(4);
+        let c = cfg(4, 2, Bias::Alibi);
+        let (kv_len, d) = (6, 8);
+        let q = rng.normal_vec(kv_len * 4 * d, 1.0);
+        let k = rng.normal_vec(kv_len * 2 * d, 1.0);
+        let v = rng.normal_vec(kv_len * 2 * d, 1.0);
+        let full = gqa_attention(&c, &q, &k, &v, kv_len, kv_len, 0);
+        let last_q = &q[(kv_len - 1) * 4 * d..];
+        let dec = gqa_attention(&c, last_q, &k, &v, 1, kv_len, kv_len - 1);
+        for (a, b) in dec.iter().zip(&full[(kv_len - 1) * 4 * d..]) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn alibi_biases_toward_recent_keys() {
+        // With identical K rows, ALiBi must weight the most recent V more.
+        let c = cfg(1, 1, Bias::Alibi);
+        let d = 8;
+        let kv_len = 8;
+        let q = vec![1.0; d];
+        let k = vec![1.0; kv_len * d];
+        let mut v = vec![0.0; kv_len * d];
+        for j in 0..kv_len {
+            v[j * d] = j as f32; // value encodes its position
+        }
+        let out = gqa_attention(&c, &q, &k, &v, 1, kv_len, kv_len - 1);
+        // Unbiased average of 0..7 is 3.5; ALiBi must pull it above that.
+        assert!(out[0] > 3.5, "out={}", out[0]);
+    }
+
+    #[test]
+    fn flops_and_bytes_models() {
+        let full = cfg(8, 8, Bias::None);
+        let grouped = cfg(8, 2, Bias::None);
+        // FLOPs are query-head-bound: identical.
+        assert_eq!(attention_flops(&full, 4, 128), attention_flops(&grouped, 4, 128));
+        // KV bytes scale with kv_heads: the paper's "50%" at 2× grouping.
+        assert_eq!(kv_bytes_per_token(&grouped) * 4, kv_bytes_per_token(&full));
+    }
+
+    #[test]
+    #[should_panic(expected = "divide evenly")]
+    fn uneven_groups_panic() {
+        let c = cfg(6, 4, Bias::None);
+        let _ = c.group_size();
+    }
+}

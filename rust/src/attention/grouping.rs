@@ -1,0 +1,253 @@
+//! Dynamic head grouping by activation similarity (paper §II.B).
+//!
+//! The paper's "Dynamic Grouping Optimization": measure cosine similarity
+//! between query heads' activations and allocate similar heads to the same
+//! KV group, "maximizing intra-group similarity while minimizing
+//! inter-group differences". This module implements that as a greedy
+//! balanced clustering over per-head activation statistics, plus the
+//! MHA→GQA weight conversion (mean-pooling K/V heads within each group)
+//! the grouping feeds.
+
+use crate::util::rng::Rng;
+
+/// Cosine similarity of two vectors (0 when either is zero).
+pub fn cosine(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    let (mut dot, mut na, mut nb) = (0.0f64, 0.0f64, 0.0f64);
+    for (x, y) in a.iter().zip(b) {
+        dot += (*x as f64) * (*y as f64);
+        na += (*x as f64) * (*x as f64);
+        nb += (*y as f64) * (*y as f64);
+    }
+    if na == 0.0 || nb == 0.0 {
+        return 0.0;
+    }
+    (dot / (na.sqrt() * nb.sqrt())) as f32
+}
+
+/// Assign `num_heads` heads to `num_groups` equal-size groups, maximizing
+/// intra-group cosine similarity of their activation signatures.
+///
+/// `signatures[h]` is head `h`'s activation statistic (e.g. its mean query
+/// vector over a calibration batch). Greedy seeding + best-fit assignment:
+/// k-means-style but with exact group-size balance, as GQA requires equal
+/// groups. Returns `assignment[h] = group`.
+pub fn group_heads_by_similarity(signatures: &[Vec<f32>], num_groups: usize) -> Vec<usize> {
+    let h = signatures.len();
+    assert!(num_groups > 0 && h % num_groups == 0, "heads must split evenly");
+    let per_group = h / num_groups;
+
+    // Seed: pick the most mutually-dissimilar heads as group anchors
+    // (farthest-point heuristic, deterministic).
+    let mut anchors = vec![0usize];
+    while anchors.len() < num_groups {
+        let next = (0..h)
+            .filter(|i| !anchors.contains(i))
+            .max_by(|&a, &b| {
+                let da: f32 = anchors.iter().map(|&s| 1.0 - cosine(&signatures[a], &signatures[s])).sum();
+                let db: f32 = anchors.iter().map(|&s| 1.0 - cosine(&signatures[b], &signatures[s])).sum();
+                da.partial_cmp(&db).unwrap_or(std::cmp::Ordering::Equal)
+            })
+            .expect("heads remain");
+        anchors.push(next);
+    }
+
+    // Best-fit: every head (most-confident first) goes to its most similar
+    // anchor that still has room.
+    let mut assignment = vec![usize::MAX; h];
+    let mut capacity = vec![per_group; num_groups];
+    // Order heads by their max anchor similarity, descending, so
+    // clear-cut heads claim their group before capacity runs out.
+    let mut order: Vec<usize> = (0..h).collect();
+    let best_sim = |i: usize| -> f32 {
+        anchors
+            .iter()
+            .map(|&a| cosine(&signatures[i], &signatures[a]))
+            .fold(f32::NEG_INFINITY, f32::max)
+    };
+    order.sort_by(|&a, &b| best_sim(b).partial_cmp(&best_sim(a)).unwrap_or(std::cmp::Ordering::Equal));
+    for i in order {
+        let mut ranked: Vec<usize> = (0..num_groups).collect();
+        ranked.sort_by(|&ga, &gb| {
+            let sa = cosine(&signatures[i], &signatures[anchors[ga]]);
+            let sb = cosine(&signatures[i], &signatures[anchors[gb]]);
+            sb.partial_cmp(&sa).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        for gr in ranked {
+            if capacity[gr] > 0 {
+                capacity[gr] -= 1;
+                assignment[i] = gr;
+                break;
+            }
+        }
+    }
+    debug_assert!(assignment.iter().all(|&g| g != usize::MAX));
+    assignment
+}
+
+/// Mean intra-group cosine similarity under an assignment (the ablation-E
+/// quality metric; higher is better).
+pub fn intra_group_similarity(signatures: &[Vec<f32>], assignment: &[usize]) -> f32 {
+    let mut total = 0.0f32;
+    let mut pairs = 0usize;
+    for i in 0..signatures.len() {
+        for j in i + 1..signatures.len() {
+            if assignment[i] == assignment[j] {
+                total += cosine(&signatures[i], &signatures[j]);
+                pairs += 1;
+            }
+        }
+    }
+    if pairs == 0 {
+        0.0
+    } else {
+        total / pairs as f32
+    }
+}
+
+/// Uniform (contiguous) grouping baseline: heads `[g·G, (g+1)·G)` → group g.
+pub fn uniform_grouping(num_heads: usize, num_groups: usize) -> Vec<usize> {
+    assert!(num_heads % num_groups == 0);
+    let per = num_heads / num_groups;
+    (0..num_heads).map(|h| h / per).collect()
+}
+
+/// Convert MHA K/V projection weights to GQA by mean-pooling each group's
+/// heads (the standard MHA→GQA "uptraining-free" conversion, applied with
+/// the dynamic assignment).
+///
+/// * `wk`: `[num_heads * head_dim, d_model]` (rows = output features)
+/// * returns `[num_groups * head_dim, d_model]`
+pub fn merge_kv_heads(
+    wk: &[f32],
+    num_heads: usize,
+    head_dim: usize,
+    d_model: usize,
+    assignment: &[usize],
+    num_groups: usize,
+) -> Vec<f32> {
+    assert_eq!(wk.len(), num_heads * head_dim * d_model);
+    assert_eq!(assignment.len(), num_heads);
+    let mut out = vec![0.0f32; num_groups * head_dim * d_model];
+    let mut counts = vec![0usize; num_groups];
+    for h in 0..num_heads {
+        let g = assignment[h];
+        counts[g] += 1;
+        for r in 0..head_dim {
+            let src = &wk[(h * head_dim + r) * d_model..(h * head_dim + r + 1) * d_model];
+            let dst = &mut out[(g * head_dim + r) * d_model..(g * head_dim + r + 1) * d_model];
+            for (d, s) in dst.iter_mut().zip(src) {
+                *d += s;
+            }
+        }
+    }
+    for g in 0..num_groups {
+        let inv = 1.0 / counts[g] as f32;
+        for r in 0..head_dim {
+            for v in &mut out[(g * head_dim + r) * d_model..(g * head_dim + r + 1) * d_model] {
+                *v *= inv;
+            }
+        }
+    }
+    out
+}
+
+/// Synthetic per-head activation signatures with planted group structure
+/// (test/bench helper): heads in the same planted cluster share a base
+/// direction plus noise.
+pub fn planted_signatures(
+    num_heads: usize,
+    num_groups: usize,
+    dim: usize,
+    noise: f32,
+    seed: u64,
+) -> (Vec<Vec<f32>>, Vec<usize>) {
+    let mut rng = Rng::new(seed);
+    let bases: Vec<Vec<f32>> = (0..num_groups).map(|_| rng.normal_vec(dim, 1.0)).collect();
+    let per = num_heads / num_groups;
+    let mut sigs = Vec::with_capacity(num_heads);
+    let mut truth = Vec::with_capacity(num_heads);
+    for h in 0..num_heads {
+        let g = h % num_groups; // interleaved so uniform grouping is WRONG
+        truth.push(g);
+        let mut s = bases[g].clone();
+        for v in &mut s {
+            *v += noise * rng.normal_f32(0.0, 1.0);
+        }
+        sigs.push(s);
+        let _ = per;
+    }
+    (sigs, truth)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cosine_basics() {
+        assert!((cosine(&[1.0, 0.0], &[1.0, 0.0]) - 1.0).abs() < 1e-6);
+        assert!(cosine(&[1.0, 0.0], &[0.0, 1.0]).abs() < 1e-6);
+        assert!((cosine(&[1.0, 0.0], &[-1.0, 0.0]) + 1.0).abs() < 1e-6);
+        assert_eq!(cosine(&[0.0, 0.0], &[1.0, 1.0]), 0.0);
+    }
+
+    #[test]
+    fn recovers_planted_clusters() {
+        let (sigs, truth) = planted_signatures(8, 2, 16, 0.05, 7);
+        let got = group_heads_by_similarity(&sigs, 2);
+        // Same-cluster heads must share a label (labels may be permuted).
+        for i in 0..8 {
+            for j in 0..8 {
+                assert_eq!(
+                    truth[i] == truth[j],
+                    got[i] == got[j],
+                    "heads {i},{j}: truth {truth:?} got {got:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn groups_are_balanced() {
+        let (sigs, _) = planted_signatures(12, 3, 8, 0.5, 9);
+        let got = group_heads_by_similarity(&sigs, 3);
+        let mut counts = [0usize; 3];
+        for &g in &got {
+            counts[g] += 1;
+        }
+        assert_eq!(counts, [4, 4, 4]);
+    }
+
+    #[test]
+    fn similarity_beats_uniform_on_interleaved_structure() {
+        let (sigs, _) = planted_signatures(8, 2, 16, 0.1, 11);
+        let dynamic = group_heads_by_similarity(&sigs, 2);
+        let uniform = uniform_grouping(8, 2);
+        let sd = intra_group_similarity(&sigs, &dynamic);
+        let su = intra_group_similarity(&sigs, &uniform);
+        assert!(sd > su, "dynamic {sd} !> uniform {su}");
+    }
+
+    #[test]
+    fn merge_kv_heads_means_groups() {
+        // 2 heads, head_dim 1, d_model 2, one group: output = mean of rows.
+        let wk = vec![1.0, 2.0, 3.0, 4.0];
+        let merged = merge_kv_heads(&wk, 2, 1, 2, &[0, 0], 1);
+        assert_eq!(merged, vec![2.0, 3.0]);
+    }
+
+    #[test]
+    fn merge_respects_assignment() {
+        // 4 heads → 2 groups with interleaved assignment.
+        let wk: Vec<f32> = (0..4).flat_map(|h| vec![h as f32; 3]).collect(); // head_dim 1, d_model 3
+        let merged = merge_kv_heads(&wk, 4, 1, 3, &[0, 1, 0, 1], 2);
+        assert_eq!(&merged[..3], &[1.0; 3]); // mean of heads 0,2
+        assert_eq!(&merged[3..], &[2.0; 3]); // mean of heads 1,3
+    }
+
+    #[test]
+    fn uniform_grouping_layout() {
+        assert_eq!(uniform_grouping(8, 2), vec![0, 0, 0, 0, 1, 1, 1, 1]);
+    }
+}

@@ -1,0 +1,23 @@
+//! Attention mechanisms: the paper's Opt-GQA and its baselines.
+//!
+//! * [`gqa`] — grouped-query attention: `num_heads` query heads share
+//!   `num_kv_heads` K/V heads in groups of `G = num_heads/num_kv_heads`.
+//!   MHA is the `num_kv_heads == num_heads` special case (the paper's
+//!   baseline), MQA the `num_kv_heads == 1` extreme.
+//! * [`alibi`] — Attention-with-Linear-Biases slopes and fused bias
+//!   (replaces materialized causal masks, paper §III.A).
+//! * [`grouping`] — dynamic activation-similarity head grouping
+//!   (paper §II.B "Dynamic Grouping Optimization").
+//! * [`paged`] — decode attention directly over the paged KV cache with
+//!   a streaming (online-softmax) inner loop — the native mirror of the
+//!   Pallas kernel in `python/compile/kernels/paged_attention.py`.
+
+pub mod alibi;
+pub mod gqa;
+pub mod grouping;
+pub mod paged;
+
+pub use alibi::alibi_slopes;
+pub use gqa::{gqa_attention, AttnConfig, Bias};
+pub use grouping::{group_heads_by_similarity, merge_kv_heads};
+pub use paged::paged_decode_attention;

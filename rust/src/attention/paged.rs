@@ -1,0 +1,213 @@
+//! Paged decode attention — the native mirror of the Pallas kernel.
+//!
+//! One query token attends over a sequence whose K/V live in
+//! non-contiguous pool blocks (via its block table). The inner loop is
+//! block-wise with an *online softmax* (running max + rescaled
+//! accumulator), the same schedule the Pallas kernel uses on TPU: each
+//! KV block is touched exactly once per *group*, not once per query head
+//! — the G× traffic saving the paper's DCU kernel exploits.
+
+use super::alibi::alibi_slopes;
+use super::gqa::{AttnConfig, Bias};
+use crate::kvcache::{BlockTable, PagedKvCache};
+
+/// Decode attention for one sequence.
+///
+/// * `q`: `[num_heads * head_dim]` — the current token's query.
+/// * `table`: the sequence's block table; `table.len()` keys are visible
+///   (the current token's K/V must already be written).
+///
+/// Returns `[num_heads * head_dim]`.
+pub fn paged_decode_attention(
+    cfg: &AttnConfig,
+    cache: &PagedKvCache,
+    layer: usize,
+    q: &[f32],
+    table: &BlockTable,
+) -> Vec<f32> {
+    let (h, kvh, d) = (cfg.num_heads, cfg.num_kv_heads, cfg.head_dim);
+    assert_eq!(q.len(), h * d);
+    assert_eq!(kvh, cache.kv_heads());
+    assert_eq!(d, cache.head_dim());
+    let g = cfg.group_size();
+    let scale = cfg.scale();
+    let kv_len = table.len();
+    assert!(kv_len > 0, "decode over empty cache");
+    let q_pos = kv_len - 1;
+    let slopes = match cfg.bias {
+        Bias::Alibi => alibi_slopes(h),
+        Bias::None => vec![0.0; h],
+    };
+    let block_size = cache.block_size();
+
+    // Online-softmax state per query head.
+    let mut m = vec![f32::NEG_INFINITY; h]; // running max
+    let mut l = vec![0.0f32; h]; // running normalizer
+    let mut acc = vec![0.0f32; h * d]; // running weighted sum
+
+    // Per-block score buffer (one query head at a time).
+    let mut scores = vec![0.0f32; block_size];
+    let mut pos = 0usize;
+    for &block in table.blocks() {
+        if pos >= kv_len {
+            break;
+        }
+        let in_block = block_size.min(kv_len - pos);
+        let kb = cache.key_block(layer, block);
+        let vb = cache.value_block(layer, block);
+        // Process per KV head so each block row is read once per GROUP,
+        // with a two-pass block-level online softmax: score the whole
+        // block first, then rescale the accumulator ONCE per block
+        // (instead of once per slot) before the weighted-value pass.
+        for kv_head in 0..kvh {
+            for gq in 0..g {
+                let head = kv_head * g + gq;
+                let q_vec = &q[head * d..(head + 1) * d];
+                // Pass 1: scores + block max.
+                let mut m_blk = f32::NEG_INFINITY;
+                for (slot, s_out) in scores[..in_block].iter_mut().enumerate() {
+                    let k_vec = &kb[(slot * kvh + kv_head) * d..(slot * kvh + kv_head + 1) * d];
+                    let mut s = crate::tensor::dot(q_vec, k_vec) * scale;
+                    if cfg.bias == Bias::Alibi {
+                        s -= slopes[head] * (q_pos - (pos + slot)) as f32;
+                    }
+                    m_blk = m_blk.max(s);
+                    *s_out = s;
+                }
+                // Single rescale to the new running max.
+                let m_new = m[head].max(m_blk);
+                let corr = (m[head] - m_new).exp();
+                m[head] = m_new;
+                l[head] *= corr;
+                let a = &mut acc[head * d..(head + 1) * d];
+                if corr != 1.0 {
+                    for av in a.iter_mut() {
+                        *av *= corr;
+                    }
+                }
+                // Pass 2: weighted-value accumulation.
+                for (slot, &s) in scores[..in_block].iter().enumerate() {
+                    let w = (s - m_new).exp();
+                    l[head] += w;
+                    let v_vec = &vb[(slot * kvh + kv_head) * d..(slot * kvh + kv_head + 1) * d];
+                    for (av, &vv) in a.iter_mut().zip(v_vec) {
+                        *av += w * vv;
+                    }
+                }
+            }
+        }
+        pos += in_block;
+    }
+
+    // Normalize.
+    let mut out = vec![0.0f32; h * d];
+    for head in 0..h {
+        let inv = 1.0 / l[head];
+        for t in 0..d {
+            out[head * d + t] = acc[head * d + t] * inv;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::gqa::gqa_attention;
+    use crate::kvcache::BlockAllocator;
+    use crate::util::rng::Rng;
+
+    /// Build a cache holding `kv_len` random tokens; return (cache, table, k, v).
+    fn setup(
+        kv_len: usize,
+        kvh: usize,
+        d: usize,
+        block_size: usize,
+        seed: u64,
+    ) -> (PagedKvCache, BlockTable, Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let num_blocks = kv_len.div_ceil(block_size) + 2;
+        let mut cache = PagedKvCache::new(1, num_blocks, block_size, kvh, d);
+        let mut alloc = BlockAllocator::new(num_blocks, block_size);
+        let mut table = BlockTable::new();
+        table.reserve(kv_len, &mut alloc);
+        let k = rng.normal_vec(kv_len * kvh * d, 1.0);
+        let v = rng.normal_vec(kv_len * kvh * d, 1.0);
+        for t in 0..kv_len {
+            let (b, s) = table.append_slot(block_size);
+            cache.write_token(0, b, s, &k[t * kvh * d..(t + 1) * kvh * d], &v[t * kvh * d..(t + 1) * kvh * d]);
+        }
+        (cache, table, k, v)
+    }
+
+    #[test]
+    fn matches_contiguous_gqa_reference() {
+        for (bias, block_size, kv_len) in
+            [(Bias::Alibi, 4, 11), (Bias::None, 8, 16), (Bias::Alibi, 16, 3)]
+        {
+            let cfg = AttnConfig { num_heads: 4, num_kv_heads: 2, head_dim: 8, bias };
+            let (cache, table, k, v) = setup(kv_len, 2, 8, block_size, 42);
+            let mut rng = Rng::new(7);
+            let q = rng.normal_vec(4 * 8, 1.0);
+            let paged = paged_decode_attention(&cfg, &cache, 0, &q, &table);
+            let reference = gqa_attention(&cfg, &q, &k, &v, 1, kv_len, kv_len - 1);
+            for (a, b) in paged.iter().zip(&reference) {
+                assert!((a - b).abs() < 1e-4, "bias={bias:?} bs={block_size} kv={kv_len}");
+            }
+        }
+    }
+
+    #[test]
+    fn single_token_cache() {
+        let cfg = AttnConfig { num_heads: 2, num_kv_heads: 1, head_dim: 4, bias: Bias::Alibi };
+        let (cache, table, _, v) = setup(1, 1, 4, 4, 3);
+        let q = vec![0.5; 8];
+        let out = paged_decode_attention(&cfg, &cache, 0, &q, &table);
+        // Softmax over one key = weight 1 → output equals that V row.
+        for head in 0..2 {
+            for t in 0..4 {
+                assert!((out[head * 4 + t] - v[t]).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn online_softmax_is_stable_with_huge_scores() {
+        let cfg = AttnConfig { num_heads: 1, num_kv_heads: 1, head_dim: 4, bias: Bias::None };
+        let mut cache = PagedKvCache::new(1, 2, 4, 1, 4);
+        let mut alloc = BlockAllocator::new(2, 4);
+        let mut table = BlockTable::new();
+        table.reserve(6, &mut alloc);
+        for t in 0..6 {
+            let (b, s) = table.append_slot(4);
+            // Keys with extreme magnitudes to stress the running max.
+            let k = vec![if t % 2 == 0 { 50.0 } else { -50.0 }; 4];
+            cache.write_token(0, b, s, &k, &[t as f32; 4]);
+        }
+        let q = vec![1.0; 4];
+        let out = paged_decode_attention(&cfg, &cache, 0, &q, &table);
+        assert!(out.iter().all(|v| v.is_finite()));
+        // Dominated by even-index (k=+50) values {0,2,4} → mean 2.
+        assert!((out[0] - 2.0).abs() < 1e-3, "out={out:?}");
+    }
+
+    #[test]
+    fn partial_final_block() {
+        // kv_len not a multiple of block_size: stale slots in the final
+        // block must not contribute.
+        let cfg = AttnConfig { num_heads: 2, num_kv_heads: 2, head_dim: 4, bias: Bias::None };
+        let (mut cache, table, k, v) = setup(5, 2, 4, 4, 9);
+        // Poison the unused slots of the last block.
+        let last_block = *table.blocks().last().unwrap();
+        for slot in 1..4 {
+            cache.write_token(0, last_block, slot, &[999.0; 8], &[999.0; 8]);
+        }
+        let mut rng = Rng::new(10);
+        let q = rng.normal_vec(8, 1.0);
+        let out = paged_decode_attention(&cfg, &cache, 0, &q, &table);
+        let reference = gqa_attention(&cfg, &q, &k, &v, 1, 5, 4);
+        for (a, b) in out.iter().zip(&reference) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+}

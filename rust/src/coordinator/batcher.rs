@@ -1,0 +1,93 @@
+//! Decode/prefill batch planning against backend shape buckets.
+//!
+//! PJRT executables are fixed-shape, so the XLA backend exposes a bucket
+//! grid (from the artifact manifest) and batches are padded up to the
+//! chosen bucket. The native backend has no shape constraint and uses
+//! [`BucketPolicy::exact`]. Padding waste is tracked by the engine
+//! metrics (`padding_waste`).
+
+/// Available batch sizes (sorted ascending).
+#[derive(Debug, Clone)]
+pub struct BucketPolicy {
+    buckets: Vec<usize>,
+}
+
+impl BucketPolicy {
+    /// Explicit bucket grid (e.g. from the artifact manifest).
+    pub fn new(mut buckets: Vec<usize>) -> BucketPolicy {
+        assert!(!buckets.is_empty(), "no buckets");
+        buckets.sort_unstable();
+        buckets.dedup();
+        assert!(buckets[0] > 0);
+        BucketPolicy { buckets }
+    }
+
+    /// Shape-unconstrained policy: every size up to `max` is its own
+    /// bucket (zero padding). Native backend.
+    pub fn exact(max: usize) -> BucketPolicy {
+        BucketPolicy { buckets: (1..=max.max(1)).collect() }
+    }
+
+    /// Largest batch the policy supports.
+    pub fn max_batch(&self) -> usize {
+        *self.buckets.last().unwrap()
+    }
+
+    /// Smallest bucket ≥ `n`; `None` if `n` exceeds the largest bucket
+    /// (caller must split the batch).
+    pub fn pick(&self, n: usize) -> Option<usize> {
+        self.buckets.iter().copied().find(|&b| b >= n)
+    }
+
+    /// Split `n` items into bucket-sized chunks, largest-first, to cover
+    /// oversized batches with minimal total padding.
+    pub fn split(&self, mut n: usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        let max = self.max_batch();
+        while n > max {
+            out.push(max);
+            n -= max;
+        }
+        if n > 0 {
+            out.push(self.pick(n).unwrap());
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pick_smallest_fitting() {
+        let p = BucketPolicy::new(vec![1, 4, 8]);
+        assert_eq!(p.pick(1), Some(1));
+        assert_eq!(p.pick(2), Some(4));
+        assert_eq!(p.pick(8), Some(8));
+        assert_eq!(p.pick(9), None);
+    }
+
+    #[test]
+    fn split_oversized() {
+        let p = BucketPolicy::new(vec![1, 4, 8]);
+        assert_eq!(p.split(20), vec![8, 8, 4]);
+        assert_eq!(p.split(3), vec![4]);
+        assert_eq!(p.split(0), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn exact_has_no_padding() {
+        let p = BucketPolicy::exact(16);
+        for n in 1..=16 {
+            assert_eq!(p.pick(n), Some(n));
+        }
+    }
+
+    #[test]
+    fn dedup_and_sort() {
+        let p = BucketPolicy::new(vec![8, 1, 4, 4]);
+        assert_eq!(p.pick(2), Some(4));
+        assert_eq!(p.max_batch(), 8);
+    }
+}

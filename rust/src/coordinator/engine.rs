@@ -1,0 +1,480 @@
+//! The engine: scheduler decisions → backend execution → sampling.
+
+use super::batcher::BucketPolicy;
+use super::metrics::{EngineMetrics, RequestRecord, RunReport};
+use super::scheduler::{Scheduler, SchedulerConfig, StepPlan};
+use super::sequence::{SeqPhase, Sequence};
+use crate::kvcache::{BlockAllocator, CacheStats, PagedKvCache};
+use crate::model::SamplingParams;
+use crate::runtime::{Backend, DecodeItem};
+use anyhow::{bail, Result};
+use std::time::Instant;
+
+/// Engine construction parameters.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// KV pool size in blocks (the fixed pre-allocated budget).
+    pub num_blocks: usize,
+    /// Tokens per block.
+    pub block_size: usize,
+    pub sched: SchedulerConfig,
+    /// Decode batch buckets (exact for native, manifest grid for XLA).
+    pub decode_buckets: BucketPolicy,
+    /// Max tokens per prefill call (XLA: largest prefill bucket; native:
+    /// effectively unlimited). Longer prompts prefill in chunks.
+    pub prefill_chunk: usize,
+    /// Prefix-cache capacity in blocks (0 = disabled). Paper §III.C
+    /// "cache sharing and reuse": finished sequences' full KV blocks are
+    /// indexed by token-chain hash; later requests with a matching
+    /// prefix adopt them (COW) instead of recomputing. Native backend
+    /// only (the XLA artifacts assume fresh sequences).
+    pub prefix_cache_blocks: usize,
+}
+
+impl EngineConfig {
+    /// Native-backend defaults for a given KV token budget.
+    pub fn native(kv_budget_tokens: usize, block_size: usize) -> EngineConfig {
+        let num_blocks = kv_budget_tokens.div_ceil(block_size);
+        EngineConfig {
+            num_blocks,
+            block_size,
+            sched: SchedulerConfig::default(),
+            decode_buckets: BucketPolicy::exact(SchedulerConfig::default().max_decode_batch),
+            prefill_chunk: usize::MAX,
+            prefix_cache_blocks: 0,
+        }
+    }
+}
+
+/// A completed request.
+#[derive(Debug, Clone)]
+pub struct RequestOutput {
+    pub id: u64,
+    pub prompt_len: usize,
+    pub tokens: Vec<u32>,
+    pub latency_s: f64,
+    pub ttft_s: f64,
+}
+
+/// Single-worker serving engine.
+pub struct Engine {
+    backend: Box<dyn Backend>,
+    cfg: EngineConfig,
+    cache: PagedKvCache,
+    alloc: BlockAllocator,
+    scheduler: Scheduler,
+    pub metrics: EngineMetrics,
+    prefix_cache: Option<crate::kvcache::PrefixCache>,
+    outputs: Vec<RequestOutput>,
+    next_id: u64,
+    t0: Instant,
+}
+
+impl Engine {
+    pub fn new(backend: Box<dyn Backend>, cfg: EngineConfig) -> Engine {
+        let mc = backend.config();
+        let cache = PagedKvCache::new(
+            mc.n_layers,
+            cfg.num_blocks,
+            cfg.block_size,
+            mc.n_kv_heads,
+            mc.head_dim(),
+        );
+        let alloc = BlockAllocator::new(cfg.num_blocks, cfg.block_size);
+        let scheduler = Scheduler::new(cfg.sched);
+        let prefix_cache = if cfg.prefix_cache_blocks > 0 && backend.supports_offset_prefill() {
+            Some(crate::kvcache::PrefixCache::new(cfg.block_size, cfg.prefix_cache_blocks))
+        } else {
+            None
+        };
+        Engine {
+            backend,
+            cfg,
+            cache,
+            alloc,
+            scheduler,
+            metrics: EngineMetrics::default(),
+            prefix_cache,
+            outputs: Vec::new(),
+            next_id: 1,
+            t0: Instant::now(),
+        }
+    }
+
+    /// Engine-clock seconds.
+    pub fn now(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64()
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// KV-pool capacity in tokens.
+    pub fn capacity_tokens(&self) -> usize {
+        self.cfg.num_blocks * self.cfg.block_size
+    }
+
+    /// Enqueue a request; returns its id.
+    pub fn add_request(&mut self, prompt: Vec<u32>, params: SamplingParams) -> Result<u64> {
+        if prompt.is_empty() {
+            bail!("empty prompt");
+        }
+        let total = prompt.len() + params.max_tokens;
+        if total > self.capacity_tokens() {
+            bail!(
+                "request needs {total} KV tokens but the pool holds {}",
+                self.capacity_tokens()
+            );
+        }
+        if prompt.len() + params.max_tokens > self.backend.config().max_seq {
+            bail!(
+                "request length {total} exceeds model max_seq {}",
+                self.backend.config().max_seq
+            );
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        let seq = Sequence::new(id, prompt, params, self.now());
+        self.scheduler.add(seq);
+        Ok(id)
+    }
+
+    /// Unfinished sequences remain?
+    pub fn has_work(&self) -> bool {
+        !self.scheduler.is_idle()
+    }
+
+    pub fn num_waiting(&self) -> usize {
+        self.scheduler.num_waiting()
+    }
+
+    pub fn num_running(&self) -> usize {
+        self.scheduler.num_running()
+    }
+
+    /// Point-in-time cache statistics.
+    pub fn cache_stats(&self) -> CacheStats {
+        CacheStats::collect(&self.alloc, self.scheduler.live_tables())
+    }
+
+    /// Prefix-cache counters (hits, misses, pinned blocks) if enabled.
+    pub fn prefix_cache_stats(&self) -> Option<(u64, u64, usize)> {
+        self.prefix_cache.as_ref().map(|c| (c.hits, c.misses, c.len()))
+    }
+
+    /// Execute one scheduler step. Returns `false` when idle.
+    pub fn step(&mut self) -> bool {
+        let mut plan = self.scheduler.plan(&mut self.alloc);
+        // Memory-pressure release valve: if the pool is too pinned by the
+        // prefix cache to admit anything while work is queued, flush it.
+        if plan == StepPlan::Idle && self.has_work() {
+            if let Some(pc) = &mut self.prefix_cache {
+                if !pc.is_empty() {
+                    log::debug!("flushing prefix cache under memory pressure");
+                    pc.clear(&mut self.alloc);
+                    plan = self.scheduler.plan(&mut self.alloc);
+                }
+            }
+        }
+        self.metrics.preemptions = self.scheduler.preemptions;
+        let worked = match plan {
+            StepPlan::Prefill { seq_id } => {
+                self.run_prefill(seq_id);
+                true
+            }
+            StepPlan::Decode { seq_ids } => {
+                self.run_decode(&seq_ids);
+                true
+            }
+            StepPlan::Idle => false,
+        };
+        self.metrics.peak_blocks = self.metrics.peak_blocks.max(self.alloc.num_used());
+        worked
+    }
+
+    /// Drive until every queued request completes; returns the run report.
+    pub fn run_to_completion(&mut self) -> RunReport {
+        while self.step() {}
+        self.metrics.report()
+    }
+
+    /// Drain finished outputs.
+    pub fn take_outputs(&mut self) -> Vec<RequestOutput> {
+        std::mem::take(&mut self.outputs)
+    }
+
+    fn run_prefill(&mut self, seq_id: u64) {
+        let tokens = self.scheduler.get(seq_id).unwrap().replay_tokens();
+        // Detach the table to run chunked prefill without aliasing the
+        // scheduler borrow.
+        let mut table = std::mem::take(&mut self.scheduler.get_mut(seq_id).unwrap().table);
+        // Prefix reuse (§III.C): adopt cached leading blocks, skipping
+        // their recomputation entirely.
+        if let Some(pc) = &mut self.prefix_cache {
+            let shared = pc.lookup_shared(&tokens, &mut self.alloc);
+            if !shared.is_empty() {
+                table.substitute_prefix(&shared, self.cfg.block_size, &mut self.alloc);
+                self.metrics.prefix_hit_tokens += shared.len() * self.cfg.block_size;
+            }
+        }
+        let start = table.len();
+        let mut logits = Vec::new();
+        for chunk in tokens[start..].chunks(self.cfg.prefill_chunk.max(1)) {
+            logits = self.backend.prefill(chunk, &mut self.cache, &mut table);
+        }
+        self.metrics.prefill_steps += 1;
+        let now = self.now();
+        let seq = self.scheduler.get_mut(seq_id).unwrap();
+        seq.table = table;
+        seq.phase = SeqPhase::Decoding;
+        let tok = seq.sampler.sample(&logits, &seq.params.clone());
+        seq.generated.push(tok);
+        seq.t_first_token.get_or_insert(now);
+        if seq.is_done() {
+            self.finish_seq(seq_id);
+        }
+    }
+
+    fn run_decode(&mut self, seq_ids: &[u64]) {
+        // Detach tables so multiple mutable borrows can coexist.
+        let mut tokens = Vec::with_capacity(seq_ids.len());
+        let mut tables = Vec::with_capacity(seq_ids.len());
+        for &id in seq_ids {
+            let seq = self.scheduler.get_mut(id).unwrap();
+            tokens.push(seq.last_token());
+            tables.push(std::mem::take(&mut seq.table));
+        }
+        let mut items: Vec<DecodeItem<'_>> = tokens
+            .iter()
+            .zip(tables.iter_mut())
+            .map(|(&token, table)| DecodeItem { token, table })
+            .collect();
+        let bucket = self
+            .cfg
+            .decode_buckets
+            .pick(items.len())
+            .unwrap_or_else(|| self.cfg.decode_buckets.max_batch());
+        let logits = self.backend.decode(&mut items, &mut self.cache);
+        drop(items);
+        self.metrics.decode_steps += 1;
+        self.metrics.decode_batch_tokens += seq_ids.len();
+        self.metrics.decode_bucket_tokens += bucket;
+
+        let now = self.now();
+        let mut done = Vec::new();
+        for ((&id, table), logit) in seq_ids.iter().zip(tables).zip(logits) {
+            let seq = self.scheduler.get_mut(id).unwrap();
+            seq.table = table;
+            let tok = seq.sampler.sample(&logit, &seq.params.clone());
+            seq.generated.push(tok);
+            seq.t_first_token.get_or_insert(now);
+            if seq.is_done() {
+                done.push(id);
+            }
+        }
+        for id in done {
+            self.finish_seq(id);
+        }
+    }
+
+    fn finish_seq(&mut self, id: u64) {
+        let now = self.now();
+        self.scheduler.get_mut(id).unwrap().t_finish = Some(now);
+        // Index the finished sequence's full KV blocks for prefix reuse
+        // before its references are released.
+        if let Some(pc) = &mut self.prefix_cache {
+            let seq = self.scheduler.get(id).unwrap();
+            let in_cache = seq.table.len();
+            let toks = seq.replay_tokens();
+            let blocks = seq.table.blocks().to_vec();
+            pc.insert(&toks[..in_cache.min(toks.len())], &blocks, &mut self.alloc);
+        }
+        self.scheduler.finish(id, &mut self.alloc);
+        let seq = self.scheduler.collect(id).expect("finished sequence must collect");
+        self.metrics.record_finish(RequestRecord {
+            id,
+            prompt_tokens: seq.prompt.len(),
+            generated_tokens: seq.generated.len(),
+            t_enqueue: seq.t_enqueue,
+            t_first_token: seq.t_first_token.unwrap_or(now),
+            t_finish: now,
+        });
+        self.outputs.push(RequestOutput {
+            id,
+            prompt_len: seq.prompt.len(),
+            tokens: seq.generated,
+            latency_s: now - seq.t_enqueue,
+            ttft_s: seq.t_first_token.unwrap_or(now) - seq.t_enqueue,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{ModelConfig, ModelWeights, NativeModel};
+    use crate::runtime::NativeBackend;
+
+    fn engine(num_blocks: usize) -> Engine {
+        let cfg = ModelConfig::tiny();
+        let backend = NativeBackend::new(NativeModel::new(ModelWeights::init(&cfg, 1)));
+        let econf = EngineConfig {
+            num_blocks,
+            block_size: 8,
+            sched: SchedulerConfig { max_running: 8, max_decode_batch: 4, watermark_blocks: 1 },
+            decode_buckets: BucketPolicy::exact(4),
+            prefill_chunk: usize::MAX,
+            prefix_cache_blocks: 0,
+        };
+        Engine::new(Box::new(backend), econf)
+    }
+
+    fn params(n: usize) -> SamplingParams {
+        SamplingParams { max_tokens: n, ..Default::default() }
+    }
+
+    #[test]
+    fn single_request_completes() {
+        let mut e = engine(32);
+        let id = e.add_request(vec![256, 1, 2, 3], params(5)).unwrap();
+        let report = e.run_to_completion();
+        assert_eq!(report.num_requests, 1);
+        let outs = e.take_outputs();
+        assert_eq!(outs.len(), 1);
+        assert_eq!(outs[0].id, id);
+        assert_eq!(outs[0].tokens.len(), 5);
+        assert!(outs[0].ttft_s <= outs[0].latency_s);
+        // All blocks returned.
+        assert_eq!(e.alloc.num_used(), 0);
+    }
+
+    #[test]
+    fn batch_of_requests_all_complete() {
+        let mut e = engine(64);
+        let mut ids = Vec::new();
+        for i in 0..6 {
+            ids.push(e.add_request(vec![256, i as u32, 2], params(4)).unwrap());
+        }
+        let report = e.run_to_completion();
+        assert_eq!(report.num_requests, 6);
+        let outs = e.take_outputs();
+        assert_eq!(outs.len(), 6);
+        for o in &outs {
+            assert_eq!(o.tokens.len(), 4);
+        }
+        // Continuous batching actually batched decodes.
+        assert!(e.metrics.mean_decode_batch() > 1.0, "batch occupancy {}", e.metrics.mean_decode_batch());
+    }
+
+    #[test]
+    fn deterministic_outputs_across_runs() {
+        let run = || {
+            let mut e = engine(64);
+            for i in 0..3 {
+                e.add_request(vec![256, 40 + i, 41], params(6)).unwrap();
+            }
+            e.run_to_completion();
+            let mut outs = e.take_outputs();
+            outs.sort_by_key(|o| o.id);
+            outs.iter().map(|o| o.tokens.clone()).collect::<Vec<_>>()
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn memory_pressure_preempts_but_completes() {
+        // Pool of 8 blocks × 8 slots = 64 KV tokens; 4 requests needing
+        // ~14 tokens each admit ~3-wide, with pressure as they grow.
+        let mut e = engine(8);
+        for i in 0..4 {
+            e.add_request(vec![256; 6 + i], params(8)).unwrap();
+        }
+        let report = e.run_to_completion();
+        assert_eq!(report.num_requests, 4);
+        assert_eq!(e.take_outputs().len(), 4);
+        assert_eq!(e.alloc.num_used(), 0, "all blocks must be released");
+    }
+
+    #[test]
+    fn rejects_oversized_request() {
+        let mut e = engine(4); // 32-token pool
+        assert!(e.add_request(vec![256; 30], params(10)).is_err());
+        assert!(e.add_request(vec![], params(1)).is_err());
+    }
+
+    fn engine_with_prefix_cache(num_blocks: usize, cache_blocks: usize) -> Engine {
+        let cfg = ModelConfig::tiny();
+        let backend = NativeBackend::new(NativeModel::new(ModelWeights::init(&cfg, 1)));
+        let econf = EngineConfig {
+            num_blocks,
+            block_size: 8,
+            sched: SchedulerConfig { max_running: 8, max_decode_batch: 4, watermark_blocks: 1 },
+            decode_buckets: BucketPolicy::exact(4),
+            prefill_chunk: usize::MAX,
+            prefix_cache_blocks: cache_blocks,
+        };
+        Engine::new(Box::new(backend), econf)
+    }
+
+    #[test]
+    fn prefix_cache_reuses_blocks_with_identical_outputs() {
+        // Same prompt served twice: the second request must hit the
+        // prefix cache AND produce the same greedy tokens as a
+        // cache-disabled engine.
+        let prompt: Vec<u32> = (0..20).map(|i| 256 - 0 * i + (i % 100)).collect();
+        let run = |cache_blocks: usize| {
+            let mut e = engine_with_prefix_cache(48, cache_blocks);
+            let p = params(5);
+            e.add_request(prompt.clone(), p).unwrap();
+            e.run_to_completion();
+            let first = e.take_outputs().pop().unwrap().tokens;
+            e.add_request(prompt.clone(), p).unwrap();
+            e.run_to_completion();
+            let second = e.take_outputs().pop().unwrap().tokens;
+            (first, second, e.metrics.prefix_hit_tokens, e.prefix_cache_stats())
+        };
+        let (f_off, s_off, hits_off, stats_off) = run(0);
+        let (f_on, s_on, hits_on, stats_on) = run(16);
+        assert!(stats_off.is_none());
+        assert_eq!(hits_off, 0);
+        // 20-token prompt → 2 full 8-slot blocks reusable.
+        assert_eq!(hits_on, 16, "second request must adopt 2 blocks");
+        let (h, _m, pinned) = stats_on.unwrap();
+        assert!(h >= 2 && pinned > 0);
+        // Numerics unaffected by reuse.
+        assert_eq!(f_on, f_off);
+        assert_eq!(s_on, s_off);
+        assert_eq!(f_on, s_on, "same prompt, greedy → same generation");
+    }
+
+    #[test]
+    fn prefix_cache_flushes_under_memory_pressure() {
+        // A cache allowed to pin most of a small pool must not deadlock
+        // admission: the engine flushes it and completes the work.
+        let mut e = engine_with_prefix_cache(8, 6);
+        let p = params(4);
+        e.add_request(vec![256; 24], p).unwrap();
+        e.run_to_completion();
+        assert_eq!(e.take_outputs().len(), 1);
+        // Pool now heavily pinned by the cache; a big request must still go.
+        e.add_request(vec![300; 40], p).unwrap();
+        let r = e.run_to_completion();
+        assert_eq!(r.num_requests, 2);
+        assert_eq!(e.take_outputs().len(), 1);
+    }
+
+    #[test]
+    fn metrics_report_is_populated() {
+        let mut e = engine(32);
+        e.add_request(vec![256, 5, 6, 7], params(3)).unwrap();
+        e.add_request(vec![256, 8], params(3)).unwrap();
+        let r = e.run_to_completion();
+        assert!(r.latency_s > 0.0);
+        assert!(r.all_tok_per_s > 0.0);
+        assert!(r.gen_tok_per_s > 0.0);
+        assert!(r.gen_tok_per_s < r.all_tok_per_s);
+        assert!(e.metrics.prefill_steps >= 2);
+        assert!(e.metrics.decode_steps >= 2);
+    }
+}

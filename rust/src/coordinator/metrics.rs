@@ -1,0 +1,187 @@
+//! Serving metrics — the paper's §IV measurement surface.
+//!
+//! Fig. 2/3 report three numbers per run:
+//! * **latency** — wall time from first request to last completion;
+//! * **all throughput** — requests/s and (prompt+generated) tokens/s over
+//!   that window;
+//! * **generate throughput** — generated tokens/s over the same window.
+
+use crate::util::{mean, percentile};
+
+/// Per-request completion record.
+#[derive(Debug, Clone)]
+pub struct RequestRecord {
+    pub id: u64,
+    pub prompt_tokens: usize,
+    pub generated_tokens: usize,
+    pub t_enqueue: f64,
+    pub t_first_token: f64,
+    pub t_finish: f64,
+}
+
+impl RequestRecord {
+    pub fn latency(&self) -> f64 {
+        self.t_finish - self.t_enqueue
+    }
+    pub fn ttft(&self) -> f64 {
+        self.t_first_token - self.t_enqueue
+    }
+}
+
+/// Live engine counters.
+#[derive(Debug, Default, Clone)]
+pub struct EngineMetrics {
+    pub records: Vec<RequestRecord>,
+    pub prefill_steps: usize,
+    pub decode_steps: usize,
+    /// Sum over decode steps of sequences in the batch.
+    pub decode_batch_tokens: usize,
+    /// Sum over decode steps of the *bucket* size used (padding waste =
+    /// bucket − batch).
+    pub decode_bucket_tokens: usize,
+    pub preemptions: usize,
+    /// Peak KV blocks in use.
+    pub peak_blocks: usize,
+    /// Prompt tokens skipped via prefix-cache block adoption (§III.C).
+    pub prefix_hit_tokens: usize,
+}
+
+impl EngineMetrics {
+    pub fn record_finish(&mut self, rec: RequestRecord) {
+        self.records.push(rec);
+    }
+
+    /// Mean decode batch occupancy (sequences per step).
+    pub fn mean_decode_batch(&self) -> f64 {
+        if self.decode_steps == 0 {
+            return 0.0;
+        }
+        self.decode_batch_tokens as f64 / self.decode_steps as f64
+    }
+
+    /// Fraction of decode-bucket slots wasted on padding.
+    pub fn padding_waste(&self) -> f64 {
+        if self.decode_bucket_tokens == 0 {
+            return 0.0;
+        }
+        1.0 - self.decode_batch_tokens as f64 / self.decode_bucket_tokens as f64
+    }
+
+    /// Aggregate into the paper's report over the run window.
+    pub fn report(&self) -> RunReport {
+        let n = self.records.len();
+        if n == 0 {
+            return RunReport::default();
+        }
+        let t0 = self.records.iter().map(|r| r.t_enqueue).fold(f64::INFINITY, f64::min);
+        let t1 = self.records.iter().map(|r| r.t_finish).fold(0.0f64, f64::max);
+        let window = (t1 - t0).max(1e-9);
+        let all_tokens: usize =
+            self.records.iter().map(|r| r.prompt_tokens + r.generated_tokens).sum();
+        let gen_tokens: usize = self.records.iter().map(|r| r.generated_tokens).sum();
+        let latencies: Vec<f64> = self.records.iter().map(|r| r.latency()).collect();
+        let ttfts: Vec<f64> = self.records.iter().map(|r| r.ttft()).collect();
+        RunReport {
+            num_requests: n,
+            latency_s: window,
+            req_per_s: n as f64 / window,
+            all_tok_per_s: all_tokens as f64 / window,
+            gen_tok_per_s: gen_tokens as f64 / window,
+            mean_request_latency_s: mean(&latencies),
+            p95_request_latency_s: percentile(&latencies, 95.0),
+            mean_ttft_s: mean(&ttfts),
+            mean_decode_batch: self.mean_decode_batch(),
+            padding_waste: self.padding_waste(),
+            preemptions: self.preemptions,
+            peak_blocks: self.peak_blocks,
+        }
+    }
+}
+
+/// The paper-format run summary.
+#[derive(Debug, Default, Clone, PartialEq)]
+pub struct RunReport {
+    pub num_requests: usize,
+    /// End-to-end wall time ("Latency" in Fig. 2).
+    pub latency_s: f64,
+    /// "All Throughput" requests/s.
+    pub req_per_s: f64,
+    /// "All Throughput" tokens/s (prompt + generated).
+    pub all_tok_per_s: f64,
+    /// "Generate Throughput" tokens/s.
+    pub gen_tok_per_s: f64,
+    pub mean_request_latency_s: f64,
+    pub p95_request_latency_s: f64,
+    pub mean_ttft_s: f64,
+    pub mean_decode_batch: f64,
+    pub padding_waste: f64,
+    pub preemptions: usize,
+    pub peak_blocks: usize,
+}
+
+impl RunReport {
+    /// The paper's three headline numbers as a formatted block.
+    pub fn paper_block(&self, label: &str) -> String {
+        format!(
+            "{label}\n  Latency: {:.2} seconds\n  All Throughput: {:.2} requests/s, {:.2} tokens/s\n  Generate Throughput: {:.2} tokens/s\n",
+            self.latency_s, self.req_per_s, self.all_tok_per_s, self.gen_tok_per_s
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(id: u64, t0: f64, tf: f64, p: usize, g: usize) -> RequestRecord {
+        RequestRecord {
+            id,
+            prompt_tokens: p,
+            generated_tokens: g,
+            t_enqueue: t0,
+            t_first_token: t0 + 0.1,
+            t_finish: tf,
+        }
+    }
+
+    #[test]
+    fn report_math() {
+        let mut m = EngineMetrics::default();
+        m.record_finish(rec(1, 0.0, 2.0, 10, 20));
+        m.record_finish(rec(2, 0.0, 4.0, 30, 40));
+        let r = m.report();
+        assert_eq!(r.num_requests, 2);
+        assert!((r.latency_s - 4.0).abs() < 1e-9);
+        assert!((r.req_per_s - 0.5).abs() < 1e-9);
+        assert!((r.all_tok_per_s - 100.0 / 4.0).abs() < 1e-9);
+        assert!((r.gen_tok_per_s - 60.0 / 4.0).abs() < 1e-9);
+        assert!((r.mean_request_latency_s - 3.0).abs() < 1e-9);
+        assert!((r.mean_ttft_s - 0.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_report_is_zeroes() {
+        let m = EngineMetrics::default();
+        assert_eq!(m.report(), RunReport::default());
+    }
+
+    #[test]
+    fn batch_occupancy_and_padding() {
+        let mut m = EngineMetrics::default();
+        m.decode_steps = 2;
+        m.decode_batch_tokens = 6; // e.g. batches of 3 and 3
+        m.decode_bucket_tokens = 8; // bucket 4 twice
+        assert!((m.mean_decode_batch() - 3.0).abs() < 1e-9);
+        assert!((m.padding_waste() - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn paper_block_formatting() {
+        let mut m = EngineMetrics::default();
+        m.record_finish(rec(1, 0.0, 2.0, 10, 20));
+        let block = m.report().paper_block("test");
+        assert!(block.contains("Latency: 2.00 seconds"));
+        assert!(block.contains("All Throughput: 0.50 requests/s, 15.00 tokens/s"));
+        assert!(block.contains("Generate Throughput: 10.00 tokens/s"));
+    }
+}

@@ -1,0 +1,29 @@
+//! The serving coordinator — the paper's vLLM-integration layer.
+//!
+//! * [`sequence`] — per-request state machine (waiting → prefill →
+//!   decoding → finished, with preemption).
+//! * [`scheduler`] — continuous batching with KV-memory admission
+//!   control and recompute-preemption under pressure (§III.C "load
+//!   balancing and resource scheduling").
+//! * [`batcher`] — decode-batch planning against the backend's shape
+//!   buckets.
+//! * [`engine`] — the step loop: scheduler decision → backend execution
+//!   → sampling → cache bookkeeping → metrics.
+//! * [`router`] — front door: validation, request ids, fan-out to
+//!   engine workers.
+//! * [`metrics`] — the paper's measurement surface: latency, "all"
+//!   throughput (req/s and tok/s), generation throughput.
+
+pub mod batcher;
+pub mod engine;
+pub mod metrics;
+pub mod router;
+pub mod scheduler;
+pub mod sequence;
+
+pub use batcher::BucketPolicy;
+pub use engine::{Engine, EngineConfig, RequestOutput};
+pub use metrics::{EngineMetrics, RunReport};
+pub use router::{Router, RouterConfig};
+pub use scheduler::{Scheduler, SchedulerConfig, StepPlan};
+pub use sequence::{SeqPhase, Sequence};

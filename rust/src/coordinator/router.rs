@@ -1,0 +1,229 @@
+//! Request router: the front door over one or more engine workers.
+//!
+//! Each worker owns an [`Engine`] on its own thread; the router validates
+//! requests, assigns global ids, and dispatches to the least-loaded
+//! worker (paper §III.C "dynamic load balancing"). Responses flow back
+//! over a channel. With `workers == 1` this degenerates to a serialized
+//! engine with an async submission API — the configuration every bench
+//! uses (determinism), while multi-worker exercises the balancing path.
+
+use super::engine::{Engine, EngineConfig, RequestOutput};
+use crate::model::SamplingParams;
+use crate::runtime::Backend;
+use anyhow::Result;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+/// Router construction parameters.
+pub struct RouterConfig {
+    pub engine: EngineConfig,
+    pub workers: usize,
+}
+
+enum WorkerMsg {
+    Request { prompt: Vec<u32>, params: SamplingParams, reply: Sender<RequestOutput> },
+    Shutdown,
+}
+
+struct Worker {
+    tx: Sender<WorkerMsg>,
+    handle: Option<JoinHandle<()>>,
+    /// Requests submitted and not yet completed (load signal).
+    inflight: Arc<AtomicUsize>,
+}
+
+/// Multi-worker request router.
+pub struct Router {
+    workers: Vec<Worker>,
+    next: AtomicUsize,
+}
+
+impl Router {
+    /// Spawn `cfg.workers` engines; `make_backend` is called once per
+    /// worker (each worker owns its backend + cache).
+    pub fn new<F>(cfg: RouterConfig, make_backend: F) -> Router
+    where
+        F: Fn(usize) -> Box<dyn Backend>,
+    {
+        assert!(cfg.workers > 0);
+        let mut workers = Vec::with_capacity(cfg.workers);
+        for w in 0..cfg.workers {
+            let backend = make_backend(w);
+            let econf = cfg.engine.clone();
+            let (tx, rx) = channel::<WorkerMsg>();
+            let inflight = Arc::new(AtomicUsize::new(0));
+            let inflight_thread = inflight.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("engine-worker-{w}"))
+                .spawn(move || worker_loop(backend, econf, rx, inflight_thread))
+                .expect("spawn engine worker");
+            workers.push(Worker { tx, handle: Some(handle), inflight });
+        }
+        Router { workers, next: AtomicUsize::new(0) }
+    }
+
+    /// Submit a request; the returned receiver yields the output when
+    /// generation completes.
+    pub fn submit(
+        &self,
+        prompt: Vec<u32>,
+        params: SamplingParams,
+    ) -> Result<Receiver<RequestOutput>> {
+        let (reply, rx) = channel();
+        let w = self.pick_worker();
+        self.workers[w].inflight.fetch_add(1, Ordering::SeqCst);
+        self.workers[w]
+            .tx
+            .send(WorkerMsg::Request { prompt, params, reply })
+            .map_err(|_| anyhow::anyhow!("worker {w} is gone"))?;
+        Ok(rx)
+    }
+
+    /// Least-loaded worker, round-robin tie-break.
+    fn pick_worker(&self) -> usize {
+        let start = self.next.fetch_add(1, Ordering::Relaxed) % self.workers.len();
+        let mut best = start;
+        let mut best_load = usize::MAX;
+        for i in 0..self.workers.len() {
+            let w = (start + i) % self.workers.len();
+            let load = self.workers[w].inflight.load(Ordering::SeqCst);
+            if load < best_load {
+                best_load = load;
+                best = w;
+            }
+        }
+        best
+    }
+
+    /// Current total in-flight count.
+    pub fn inflight(&self) -> usize {
+        self.workers.iter().map(|w| w.inflight.load(Ordering::SeqCst)).sum()
+    }
+
+    pub fn num_workers(&self) -> usize {
+        self.workers.len()
+    }
+}
+
+impl Drop for Router {
+    fn drop(&mut self) {
+        for w in &self.workers {
+            let _ = w.tx.send(WorkerMsg::Shutdown);
+        }
+        for w in &mut self.workers {
+            if let Some(h) = w.handle.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+fn worker_loop(
+    backend: Box<dyn Backend>,
+    econf: EngineConfig,
+    rx: Receiver<WorkerMsg>,
+    inflight: Arc<AtomicUsize>,
+) {
+    let mut engine = Engine::new(backend, econf);
+    let mut pending: Vec<(u64, Sender<RequestOutput>)> = Vec::new();
+    loop {
+        // Drain the mailbox (non-blocking while there is engine work;
+        // blocking when idle to avoid spinning).
+        loop {
+            let msg = if engine.has_work() {
+                match rx.try_recv() {
+                    Ok(m) => m,
+                    Err(std::sync::mpsc::TryRecvError::Empty) => break,
+                    Err(std::sync::mpsc::TryRecvError::Disconnected) => return,
+                }
+            } else {
+                match rx.recv() {
+                    Ok(m) => m,
+                    Err(_) => return,
+                }
+            };
+            match msg {
+                WorkerMsg::Request { prompt, params, reply } => {
+                    match engine.add_request(prompt, params) {
+                        Ok(id) => pending.push((id, reply)),
+                        Err(e) => {
+                            log::warn!("router: rejecting request: {e}");
+                            inflight.fetch_sub(1, Ordering::SeqCst);
+                            // Dropping `reply` signals the error to the caller.
+                        }
+                    }
+                }
+                WorkerMsg::Shutdown => return,
+            }
+        }
+        engine.step();
+        for out in engine.take_outputs() {
+            if let Some(pos) = pending.iter().position(|(id, _)| *id == out.id) {
+                let (_, reply) = pending.swap_remove(pos);
+                inflight.fetch_sub(1, Ordering::SeqCst);
+                let _ = reply.send(out);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::batcher::BucketPolicy;
+    use crate::coordinator::scheduler::SchedulerConfig;
+    use crate::model::{ModelConfig, ModelWeights, NativeModel};
+    use crate::runtime::NativeBackend;
+
+    fn router(workers: usize) -> Router {
+        let cfg = RouterConfig {
+            engine: EngineConfig {
+                num_blocks: 32,
+                block_size: 8,
+                sched: SchedulerConfig::default(),
+                decode_buckets: BucketPolicy::exact(8),
+                prefill_chunk: usize::MAX,
+            prefix_cache_blocks: 0,
+            },
+            workers,
+        };
+        Router::new(cfg, |_| {
+            let mc = ModelConfig::tiny();
+            Box::new(NativeBackend::new(NativeModel::new(ModelWeights::init(&mc, 7))))
+        })
+    }
+
+    #[test]
+    fn single_worker_roundtrip() {
+        let r = router(1);
+        let params = SamplingParams { max_tokens: 4, ..Default::default() };
+        let rx = r.submit(vec![256, 1, 2], params).unwrap();
+        let out = rx.recv_timeout(std::time::Duration::from_secs(30)).unwrap();
+        assert_eq!(out.tokens.len(), 4);
+        assert_eq!(r.inflight(), 0);
+    }
+
+    #[test]
+    fn multi_worker_distributes_and_completes() {
+        let r = router(2);
+        let params = SamplingParams { max_tokens: 3, ..Default::default() };
+        let rxs: Vec<_> =
+            (0..6).map(|i| r.submit(vec![256, i as u32], params).unwrap()).collect();
+        for rx in rxs {
+            let out = rx.recv_timeout(std::time::Duration::from_secs(30)).unwrap();
+            assert_eq!(out.tokens.len(), 3);
+        }
+        assert_eq!(r.inflight(), 0);
+    }
+
+    #[test]
+    fn oversized_request_drops_reply_channel() {
+        let r = router(1);
+        let params = SamplingParams { max_tokens: 100_000, ..Default::default() };
+        let rx = r.submit(vec![256; 10], params).unwrap();
+        // Worker rejects → reply sender dropped → recv errors.
+        assert!(rx.recv_timeout(std::time::Duration::from_secs(10)).is_err());
+    }
+}

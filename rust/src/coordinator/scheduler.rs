@@ -1,0 +1,353 @@
+//! Continuous-batching scheduler with KV-memory admission control.
+//!
+//! Policy (vLLM-style, per the paper's §III.C scheduling description):
+//! 1. **Prefill priority**: if a waiting sequence fits in the block pool
+//!    (its whole prompt + watermark), admit it and run its prefill this
+//!    step — keeps the decode batch full.
+//! 2. Otherwise **decode** every running sequence (round-robin capped at
+//!    `max_decode_batch`), growing each sequence's block table by one
+//!    slot; on allocation failure, **preempt** the youngest running
+//!    sequence (recompute-style: free its blocks, re-queue it) until the
+//!    step fits.
+
+use super::sequence::{SeqPhase, Sequence};
+use crate::kvcache::BlockAllocator;
+use std::collections::{BTreeMap, VecDeque};
+
+/// Scheduler tunables.
+#[derive(Debug, Clone, Copy)]
+pub struct SchedulerConfig {
+    /// Max sequences decoding concurrently.
+    pub max_running: usize,
+    /// Max sequences per decode step (backend bucket cap).
+    pub max_decode_batch: usize,
+    /// Blocks kept free as headroom when admitting prompts.
+    pub watermark_blocks: usize,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig { max_running: 64, max_decode_batch: 8, watermark_blocks: 2 }
+    }
+}
+
+/// One engine step's work.
+#[derive(Debug, Clone, PartialEq)]
+pub enum StepPlan {
+    /// Run this sequence's prompt (or recompute replay) through prefill.
+    Prefill { seq_id: u64 },
+    /// Decode one token for each of these sequences (slots reserved).
+    Decode { seq_ids: Vec<u64> },
+    /// Nothing runnable (all queues empty).
+    Idle,
+}
+
+/// Sequence store + scheduling policy.
+pub struct Scheduler {
+    cfg: SchedulerConfig,
+    seqs: BTreeMap<u64, Sequence>,
+    waiting: VecDeque<u64>,
+    running: Vec<u64>,
+    rr_cursor: usize,
+    /// Total preemptions (engine copies into metrics).
+    pub preemptions: usize,
+}
+
+impl Scheduler {
+    pub fn new(cfg: SchedulerConfig) -> Scheduler {
+        Scheduler {
+            cfg,
+            seqs: BTreeMap::new(),
+            waiting: VecDeque::new(),
+            running: Vec::new(),
+            rr_cursor: 0,
+            preemptions: 0,
+        }
+    }
+
+    pub fn config(&self) -> &SchedulerConfig {
+        &self.cfg
+    }
+
+    /// Enqueue a new sequence.
+    pub fn add(&mut self, seq: Sequence) {
+        assert_eq!(seq.phase, SeqPhase::Waiting);
+        let id = seq.id;
+        self.seqs.insert(id, seq);
+        self.waiting.push_back(id);
+    }
+
+    pub fn get(&self, id: u64) -> Option<&Sequence> {
+        self.seqs.get(&id)
+    }
+
+    pub fn get_mut(&mut self, id: u64) -> Option<&mut Sequence> {
+        self.seqs.get_mut(&id)
+    }
+
+    pub fn num_waiting(&self) -> usize {
+        self.waiting.len()
+    }
+
+    pub fn num_running(&self) -> usize {
+        self.running.len()
+    }
+
+    /// All unfinished work drained?
+    pub fn is_idle(&self) -> bool {
+        self.waiting.is_empty() && self.running.is_empty()
+    }
+
+    /// Iterate live block tables (cache stats).
+    pub fn live_tables(&self) -> impl Iterator<Item = &crate::kvcache::BlockTable> {
+        self.seqs.values().filter(|s| !s.table.is_empty()).map(|s| &s.table)
+    }
+
+    /// Decide this step's work. Reserves blocks for whatever it returns:
+    /// a `Prefill` sequence has its full replay reserved; every `Decode`
+    /// sequence has one more slot reserved.
+    pub fn plan(&mut self, alloc: &mut BlockAllocator) -> StepPlan {
+        // 1. Try to admit the head of the waiting queue.
+        if self.running.len() < self.cfg.max_running {
+            if let Some(&cand) = self.waiting.front() {
+                let replay_len = self.seqs[&cand].replay_tokens().len();
+                let need = crate::kvcache::BlockTable::blocks_needed(replay_len, alloc.block_size());
+                // Watermark headroom is waived when nothing is running —
+                // otherwise a request sized near the whole pool could
+                // never be admitted.
+                let headroom = if self.running.is_empty() { 0 } else { self.cfg.watermark_blocks };
+                if alloc.can_alloc(need + headroom) {
+                    self.waiting.pop_front();
+                    let seq = self.seqs.get_mut(&cand).unwrap();
+                    let ok = seq.table.reserve(replay_len, alloc);
+                    debug_assert!(ok, "can_alloc lied at admission");
+                    seq.phase = SeqPhase::Prefilling;
+                    self.running.push(cand);
+                    return StepPlan::Prefill { seq_id: cand };
+                }
+            }
+        }
+
+        // 2. Decode a round-robin slice of the running set.
+        let decoding: Vec<u64> = self
+            .running
+            .iter()
+            .copied()
+            .filter(|id| self.seqs[id].phase == SeqPhase::Decoding)
+            .collect();
+        if decoding.is_empty() {
+            return StepPlan::Idle;
+        }
+        let batch_n = decoding.len().min(self.cfg.max_decode_batch);
+        let start = self.rr_cursor % decoding.len();
+        let mut batch: Vec<u64> =
+            (0..batch_n).map(|i| decoding[(start + i) % decoding.len()]).collect();
+        self.rr_cursor = self.rr_cursor.wrapping_add(batch_n);
+
+        // Reserve one slot per batched sequence, preempting under pressure.
+        let mut planned = Vec::with_capacity(batch.len());
+        while let Some(id) = batch.first().copied() {
+            batch.remove(0);
+            loop {
+                let block_size = alloc.block_size();
+                let seq = self.seqs.get_mut(&id).unwrap();
+                if seq.table.reserve(1, alloc) {
+                    planned.push(id);
+                    break;
+                }
+                // Memory pressure: preempt the youngest running sequence.
+                let victim = match self.youngest_running() {
+                    Some(v) => v,
+                    None => panic!("block pool too small for a single sequence"),
+                };
+                self.preempt(victim, alloc);
+                let _ = block_size;
+                if victim == id {
+                    break; // the sequence we were reserving for is gone
+                }
+                // Victims later in this batch must not decode this step.
+                batch.retain(|&b| b != victim);
+            }
+        }
+        if planned.is_empty() {
+            // Everything got preempted; next plan() will re-admit.
+            return StepPlan::Idle;
+        }
+        StepPlan::Decode { seq_ids: planned }
+    }
+
+    fn youngest_running(&self) -> Option<u64> {
+        self.running
+            .iter()
+            .copied()
+            .max_by_key(|id| self.seqs[id].arrival)
+    }
+
+    /// Recompute-preemption: free blocks, reset, re-queue at the front
+    /// (it has priority — its work is sunk cost).
+    fn preempt(&mut self, id: u64, alloc: &mut BlockAllocator) {
+        let seq = self.seqs.get_mut(&id).unwrap();
+        seq.table.free_all(alloc);
+        seq.reset_for_recompute();
+        self.running.retain(|&r| r != id);
+        self.waiting.push_front(id);
+        // Preempted sequences replay via prefill; phase flips to Waiting
+        // at re-admission (plan() treats Preempted == Waiting).
+        self.seqs.get_mut(&id).unwrap().phase = SeqPhase::Waiting;
+        self.preemptions += 1;
+    }
+
+    /// Mark a sequence finished: free its blocks and remove it from the
+    /// running set. The sequence stays in the store until collected.
+    pub fn finish(&mut self, id: u64, alloc: &mut BlockAllocator) {
+        let seq = self.seqs.get_mut(&id).expect("finish of unknown sequence");
+        seq.table.free_all(alloc);
+        seq.phase = SeqPhase::Finished;
+        self.running.retain(|&r| r != id);
+    }
+
+    /// Remove and return a finished sequence.
+    pub fn collect(&mut self, id: u64) -> Option<Sequence> {
+        match self.seqs.get(&id) {
+            Some(s) if s.phase == SeqPhase::Finished => self.seqs.remove(&id),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::SamplingParams;
+
+    fn seq(id: u64, prompt_len: usize, max_tokens: usize) -> Sequence {
+        let params = SamplingParams { max_tokens, ..Default::default() };
+        Sequence::new(id, vec![256; prompt_len.max(1)], params, 0.0)
+    }
+
+    fn sched(max_batch: usize) -> Scheduler {
+        Scheduler::new(SchedulerConfig {
+            max_running: 8,
+            max_decode_batch: max_batch,
+            watermark_blocks: 1,
+        })
+    }
+
+    #[test]
+    fn admits_prefill_first() {
+        let mut s = sched(4);
+        let mut alloc = BlockAllocator::new(16, 4);
+        s.add(seq(1, 6, 4));
+        match s.plan(&mut alloc) {
+            StepPlan::Prefill { seq_id } => assert_eq!(seq_id, 1),
+            other => panic!("expected prefill, got {other:?}"),
+        }
+        // Blocks for the 6-token prompt were reserved: ceil(6/4) = 2.
+        assert_eq!(alloc.num_used(), 2);
+        assert_eq!(s.get(1).unwrap().phase, SeqPhase::Prefilling);
+    }
+
+    #[test]
+    fn decodes_after_prefill() {
+        let mut s = sched(4);
+        let mut alloc = BlockAllocator::new(16, 4);
+        s.add(seq(1, 3, 4));
+        let _ = s.plan(&mut alloc); // prefill
+        s.get_mut(1).unwrap().phase = SeqPhase::Decoding;
+        s.get_mut(1).unwrap().generated.push(42);
+        match s.plan(&mut alloc) {
+            StepPlan::Decode { seq_ids } => assert_eq!(seq_ids, vec![1]),
+            other => panic!("expected decode, got {other:?}"),
+        }
+        // One decode slot reserved: prompt 3 tokens in 1 block (cap 4) +
+        // slot 4 fits the same block → still 1 block.
+        assert_eq!(alloc.num_used(), 1);
+    }
+
+    #[test]
+    fn memory_pressure_defers_admission() {
+        let mut s = sched(4);
+        let mut alloc = BlockAllocator::new(3, 4); // tiny pool
+        s.add(seq(1, 8, 4)); // needs 2 blocks + 1 watermark = ok
+        s.add(seq(2, 8, 4)); // would need 2 + 1 > remaining 1
+        let p1 = s.plan(&mut alloc);
+        assert!(matches!(p1, StepPlan::Prefill { seq_id: 1 }));
+        s.get_mut(1).unwrap().phase = SeqPhase::Decoding;
+        s.get_mut(1).unwrap().generated.push(1);
+        // Seq 2 cannot be admitted; falls through to decoding seq 1.
+        let p2 = s.plan(&mut alloc);
+        assert!(matches!(p2, StepPlan::Decode { .. }), "{p2:?}");
+        assert_eq!(s.num_waiting(), 1);
+    }
+
+    #[test]
+    fn preempts_youngest_under_pressure() {
+        let mut s = sched(4);
+        let mut alloc = BlockAllocator::new(5, 2);
+        // Two sequences, 4 tokens each → 2 blocks each; 1 block spare.
+        for id in [1, 2] {
+            s.add(seq(id, 4, 8));
+            let p = s.plan(&mut alloc);
+            assert!(matches!(p, StepPlan::Prefill { .. }), "{p:?}");
+            s.get_mut(id).unwrap().phase = SeqPhase::Decoding;
+            s.get_mut(id).unwrap().generated.push(9);
+            // Simulate the prefill having filled the reserved slots.
+            for _ in 0..4 {
+                s.get_mut(id).unwrap().table.append_slot(2);
+            }
+        }
+        assert_eq!(alloc.num_free(), 1);
+        // Decode step must grow both tables; no free blocks → preempt 2.
+        let p = s.plan(&mut alloc);
+        match p {
+            StepPlan::Decode { seq_ids } => assert_eq!(seq_ids, vec![1]),
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(s.preemptions, 1);
+        assert_eq!(s.num_waiting(), 1);
+        assert_eq!(s.get(2).unwrap().phase, SeqPhase::Waiting);
+        assert!(s.get(2).unwrap().table.is_empty());
+    }
+
+    #[test]
+    fn round_robin_rotates_decode_batches() {
+        let mut s = sched(2); // batch cap 2, 3 sequences
+        let mut alloc = BlockAllocator::new(64, 4);
+        for id in [1, 2, 3] {
+            s.add(seq(id, 2, 8));
+            let _ = s.plan(&mut alloc);
+            s.get_mut(id).unwrap().phase = SeqPhase::Decoding;
+            s.get_mut(id).unwrap().generated.push(0);
+        }
+        let mut seen = std::collections::BTreeSet::new();
+        for _ in 0..3 {
+            if let StepPlan::Decode { seq_ids } = s.plan(&mut alloc) {
+                assert_eq!(seq_ids.len(), 2);
+                seen.extend(seq_ids);
+            }
+        }
+        assert_eq!(seen.len(), 3, "all sequences must get turns: {seen:?}");
+    }
+
+    #[test]
+    fn finish_releases_blocks_and_collects() {
+        let mut s = sched(4);
+        let mut alloc = BlockAllocator::new(8, 4);
+        s.add(seq(7, 4, 2));
+        let _ = s.plan(&mut alloc);
+        assert!(alloc.num_used() > 0);
+        s.finish(7, &mut alloc);
+        assert_eq!(alloc.num_used(), 0);
+        assert!(s.is_idle());
+        let collected = s.collect(7).unwrap();
+        assert_eq!(collected.phase, SeqPhase::Finished);
+        assert!(s.collect(7).is_none());
+    }
+
+    #[test]
+    fn idle_when_empty() {
+        let mut s = sched(4);
+        let mut alloc = BlockAllocator::new(8, 4);
+        assert_eq!(s.plan(&mut alloc), StepPlan::Idle);
+    }
+}

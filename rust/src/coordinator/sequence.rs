@@ -1,0 +1,149 @@
+//! Per-request sequence state.
+
+use crate::kvcache::BlockTable;
+use crate::model::{Sampler, SamplingParams};
+
+/// Lifecycle phase of a sequence.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SeqPhase {
+    /// Queued; no KV blocks held.
+    Waiting,
+    /// Admitted; prompt tokens are being prefilled.
+    Prefilling,
+    /// Generating tokens.
+    Decoding,
+    /// Evicted under memory pressure; blocks freed, waiting to recompute.
+    Preempted,
+    /// Done (EOS or max_tokens); blocks freed.
+    Finished,
+}
+
+/// One in-flight request.
+#[derive(Debug)]
+pub struct Sequence {
+    pub id: u64,
+    pub prompt: Vec<u32>,
+    pub generated: Vec<u32>,
+    pub params: SamplingParams,
+    pub table: BlockTable,
+    pub phase: SeqPhase,
+    pub sampler: Sampler,
+    /// Monotonic admission counter (eviction priority).
+    pub arrival: u64,
+    // Timestamps (engine-clock seconds) for metrics.
+    pub t_enqueue: f64,
+    pub t_first_token: Option<f64>,
+    pub t_finish: Option<f64>,
+}
+
+impl Sequence {
+    pub fn new(id: u64, prompt: Vec<u32>, params: SamplingParams, t_enqueue: f64) -> Sequence {
+        assert!(!prompt.is_empty(), "empty prompt");
+        Sequence {
+            id,
+            prompt,
+            generated: Vec::new(),
+            params,
+            table: BlockTable::new(),
+            phase: SeqPhase::Waiting,
+            sampler: Sampler::new(id.wrapping_mul(0x9E37_79B9)),
+            arrival: id,
+            t_enqueue,
+            t_first_token: None,
+            t_finish: None,
+        }
+    }
+
+    /// Total tokens this sequence will occupy in the cache when complete.
+    pub fn max_cache_tokens(&self) -> usize {
+        self.prompt.len() + self.params.max_tokens
+    }
+
+    /// Tokens currently in the cache.
+    pub fn cache_tokens(&self) -> usize {
+        self.table.len()
+    }
+
+    /// Input token for the next decode step: last generated, or — right
+    /// after prefill — the token sampled from the prefill logits is
+    /// already in `generated`, so this is always `generated.last()`.
+    pub fn last_token(&self) -> u32 {
+        *self.generated.last().expect("no generated token yet")
+    }
+
+    /// Generation-complete check.
+    pub fn is_done(&self) -> bool {
+        if self.generated.len() >= self.params.max_tokens {
+            return true;
+        }
+        if !self.params.ignore_eos {
+            if let Some(&t) = self.generated.last() {
+                return t == crate::tokenizer::EOS;
+            }
+        }
+        false
+    }
+
+    /// Reset to `Waiting` after preemption (blocks must already be freed;
+    /// generated tokens are kept and will be replayed via prefill —
+    /// recompute-style preemption).
+    pub fn reset_for_recompute(&mut self) {
+        assert!(self.table.is_empty(), "free blocks before recompute reset");
+        self.phase = SeqPhase::Preempted;
+    }
+
+    /// The token stream to replay on re-admission (prompt + generated).
+    pub fn replay_tokens(&self) -> Vec<u32> {
+        let mut t = self.prompt.clone();
+        t.extend_from_slice(&self.generated);
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seq(max_tokens: usize) -> Sequence {
+        let params = SamplingParams { max_tokens, ..Default::default() };
+        Sequence::new(1, vec![256, 1, 2], params, 0.0)
+    }
+
+    #[test]
+    fn lifecycle_defaults() {
+        let s = seq(8);
+        assert_eq!(s.phase, SeqPhase::Waiting);
+        assert_eq!(s.max_cache_tokens(), 11);
+        assert!(!s.is_done());
+    }
+
+    #[test]
+    fn done_at_max_tokens() {
+        let mut s = seq(2);
+        s.generated = vec![5, 6];
+        assert!(s.is_done());
+    }
+
+    #[test]
+    fn eos_respected_when_not_ignored() {
+        let mut s = seq(10);
+        s.params.ignore_eos = false;
+        s.generated = vec![crate::tokenizer::EOS];
+        assert!(s.is_done());
+        s.params.ignore_eos = true;
+        assert!(!s.is_done());
+    }
+
+    #[test]
+    fn replay_covers_prompt_and_generated() {
+        let mut s = seq(4);
+        s.generated = vec![7, 8];
+        assert_eq!(s.replay_tokens(), vec![256, 1, 2, 7, 8]);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty prompt")]
+    fn empty_prompt_rejected() {
+        let _ = Sequence::new(1, vec![], SamplingParams::default(), 0.0);
+    }
+}

@@ -1,0 +1,171 @@
+//! Reference-counted fixed-size block allocator.
+//!
+//! The pool is pre-allocated once (paper §III.C: "pre-allocating a fixed
+//! amount of DCU memory … centralized scheduling mechanism"); allocation
+//! and free are O(1) free-list operations. Reference counts support
+//! copy-on-write block sharing across sequences.
+
+/// Physical block index into the pool.
+pub type BlockId = u32;
+
+/// Fixed-pool block allocator with refcounts.
+#[derive(Debug)]
+pub struct BlockAllocator {
+    num_blocks: usize,
+    block_size: usize,
+    free: Vec<BlockId>,
+    ref_counts: Vec<u32>,
+    /// High-water mark of simultaneously allocated blocks.
+    peak_used: usize,
+}
+
+impl BlockAllocator {
+    /// Create a pool of `num_blocks` blocks of `block_size` token slots.
+    pub fn new(num_blocks: usize, block_size: usize) -> Self {
+        assert!(block_size > 0, "block_size must be positive");
+        BlockAllocator {
+            num_blocks,
+            block_size,
+            // LIFO free list; reversed so block 0 allocates first (handy in tests).
+            free: (0..num_blocks as BlockId).rev().collect(),
+            ref_counts: vec![0; num_blocks],
+            peak_used: 0,
+        }
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    pub fn num_blocks(&self) -> usize {
+        self.num_blocks
+    }
+
+    pub fn num_free(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn num_used(&self) -> usize {
+        self.num_blocks - self.free.len()
+    }
+
+    pub fn peak_used(&self) -> usize {
+        self.peak_used
+    }
+
+    /// Allocate one block (refcount 1). `None` when the pool is exhausted.
+    pub fn alloc(&mut self) -> Option<BlockId> {
+        let id = self.free.pop()?;
+        debug_assert_eq!(self.ref_counts[id as usize], 0);
+        self.ref_counts[id as usize] = 1;
+        self.peak_used = self.peak_used.max(self.num_used());
+        Some(id)
+    }
+
+    /// Can `n` more blocks be allocated right now?
+    pub fn can_alloc(&self, n: usize) -> bool {
+        self.free.len() >= n
+    }
+
+    /// Increment a block's refcount (prefix sharing / COW fork).
+    pub fn share(&mut self, id: BlockId) {
+        let rc = &mut self.ref_counts[id as usize];
+        assert!(*rc > 0, "share of unallocated block {id}");
+        *rc += 1;
+    }
+
+    /// Refcount of a block (0 = free).
+    pub fn ref_count(&self, id: BlockId) -> u32 {
+        self.ref_counts[id as usize]
+    }
+
+    /// Drop one reference; the block returns to the free list when the
+    /// count reaches zero. Returns `true` if the block was actually freed.
+    pub fn release(&mut self, id: BlockId) -> bool {
+        let rc = &mut self.ref_counts[id as usize];
+        assert!(*rc > 0, "release of unallocated block {id}");
+        *rc -= 1;
+        if *rc == 0 {
+            self.free.push(id);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Fraction of the pool currently allocated.
+    pub fn utilization(&self) -> f64 {
+        if self.num_blocks == 0 {
+            return 0.0;
+        }
+        self.num_used() as f64 / self.num_blocks as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_free_cycle() {
+        let mut a = BlockAllocator::new(4, 16);
+        assert_eq!(a.num_free(), 4);
+        let b0 = a.alloc().unwrap();
+        let b1 = a.alloc().unwrap();
+        assert_ne!(b0, b1);
+        assert_eq!(a.num_used(), 2);
+        assert!(a.release(b0));
+        assert_eq!(a.num_free(), 3);
+        assert!(a.release(b1));
+        assert_eq!(a.num_free(), 4);
+    }
+
+    #[test]
+    fn exhaustion_returns_none() {
+        let mut a = BlockAllocator::new(2, 8);
+        assert!(a.alloc().is_some());
+        assert!(a.alloc().is_some());
+        assert!(a.alloc().is_none());
+        assert!(!a.can_alloc(1));
+    }
+
+    #[test]
+    fn refcounted_sharing() {
+        let mut a = BlockAllocator::new(2, 8);
+        let b = a.alloc().unwrap();
+        a.share(b);
+        assert_eq!(a.ref_count(b), 2);
+        assert!(!a.release(b)); // still referenced
+        assert_eq!(a.num_used(), 1);
+        assert!(a.release(b)); // now freed
+        assert_eq!(a.num_free(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "release of unallocated")]
+    fn double_free_panics() {
+        let mut a = BlockAllocator::new(1, 8);
+        let b = a.alloc().unwrap();
+        a.release(b);
+        a.release(b);
+    }
+
+    #[test]
+    fn peak_tracking() {
+        let mut a = BlockAllocator::new(4, 8);
+        let b0 = a.alloc().unwrap();
+        let b1 = a.alloc().unwrap();
+        a.release(b0);
+        a.release(b1);
+        assert_eq!(a.peak_used(), 2);
+        assert_eq!(a.num_used(), 0);
+    }
+
+    #[test]
+    fn utilization_fraction() {
+        let mut a = BlockAllocator::new(4, 8);
+        assert_eq!(a.utilization(), 0.0);
+        let _ = a.alloc().unwrap();
+        assert!((a.utilization() - 0.25).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,230 @@
+//! Per-sequence block table: logical token position → (physical block, slot).
+
+use super::block_allocator::{BlockAllocator, BlockId};
+
+/// Maps a sequence's logical KV positions onto physical pool blocks.
+#[derive(Debug, Clone, Default)]
+pub struct BlockTable {
+    blocks: Vec<BlockId>,
+    /// Number of token slots currently occupied.
+    len: usize,
+}
+
+impl BlockTable {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Physical blocks in logical order.
+    pub fn blocks(&self) -> &[BlockId] {
+        &self.blocks
+    }
+
+    /// Occupied token count.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Blocks needed to hold `tokens` with the given block size.
+    pub fn blocks_needed(tokens: usize, block_size: usize) -> usize {
+        tokens.div_ceil(block_size)
+    }
+
+    /// Additional blocks required to extend this table by `extra` tokens.
+    pub fn blocks_to_grow(&self, extra: usize, block_size: usize) -> usize {
+        Self::blocks_needed(self.len + extra, block_size).saturating_sub(self.blocks.len())
+    }
+
+    /// Reserve capacity for `extra` more tokens, allocating blocks as
+    /// needed. Returns `false` (with the table unchanged) if the pool
+    /// cannot satisfy the request.
+    pub fn reserve(&mut self, extra: usize, alloc: &mut BlockAllocator) -> bool {
+        let need = self.blocks_to_grow(extra, alloc.block_size());
+        if !alloc.can_alloc(need) {
+            return false;
+        }
+        for _ in 0..need {
+            self.blocks.push(alloc.alloc().expect("can_alloc lied"));
+        }
+        true
+    }
+
+    /// Append one token slot (capacity must have been reserved); returns
+    /// the physical `(block, slot)` it landed in.
+    pub fn append_slot(&mut self, block_size: usize) -> (BlockId, usize) {
+        let pos = self.len;
+        let bidx = pos / block_size;
+        assert!(
+            bidx < self.blocks.len(),
+            "append beyond reserved capacity (len={}, blocks={})",
+            self.len,
+            self.blocks.len()
+        );
+        self.len += 1;
+        (self.blocks[bidx], pos % block_size)
+    }
+
+    /// Physical location of an existing logical position.
+    pub fn locate(&self, pos: usize, block_size: usize) -> (BlockId, usize) {
+        assert!(pos < self.len, "position {pos} out of range (len {})", self.len);
+        (self.blocks[pos / block_size], pos % block_size)
+    }
+
+    /// Release every block back to the allocator and clear the table.
+    pub fn free_all(&mut self, alloc: &mut BlockAllocator) {
+        for &b in &self.blocks {
+            alloc.release(b);
+        }
+        self.blocks.clear();
+        self.len = 0;
+    }
+
+    /// Fork: share all blocks with a child table (copy-on-write prefix
+    /// sharing). The child starts with the same logical length.
+    pub fn fork(&self, alloc: &mut BlockAllocator) -> BlockTable {
+        for &b in &self.blocks {
+            alloc.share(b);
+        }
+        self.clone()
+    }
+
+    /// Ensure the *last* block is uniquely owned before an in-place append
+    /// (copy-on-write). Returns `Some((old, new))` when a copy happened so
+    /// the cache storage can copy the block contents; `None` otherwise.
+    pub fn cow_last_block(&mut self, alloc: &mut BlockAllocator) -> Option<(BlockId, BlockId)> {
+        let last = *self.blocks.last()?;
+        if alloc.ref_count(last) <= 1 {
+            return None;
+        }
+        let fresh = alloc.alloc()?;
+        alloc.release(last);
+        *self.blocks.last_mut().unwrap() = fresh;
+        Some((last, fresh))
+    }
+
+    /// Replace the leading reserved blocks of an un-filled table with
+    /// already-shared cache blocks (prefix reuse): the fresh reservations
+    /// are returned to the pool and the table's logical length jumps to
+    /// the end of the adopted prefix. The caller must already hold a
+    /// reference on each shared block (see `PrefixCache::lookup_shared`).
+    pub fn substitute_prefix(
+        &mut self,
+        shared: &[BlockId],
+        block_size: usize,
+        alloc: &mut BlockAllocator,
+    ) {
+        assert_eq!(self.len, 0, "substitute_prefix on a filled table");
+        assert!(shared.len() <= self.blocks.len(), "more shared blocks than reserved");
+        for (i, &b) in shared.iter().enumerate() {
+            alloc.release(self.blocks[i]);
+            self.blocks[i] = b;
+        }
+        self.len = shared.len() * block_size;
+    }
+
+    /// Slots allocated but unused in the final block (internal fragmentation).
+    pub fn wasted_slots(&self, block_size: usize) -> usize {
+        self.blocks.len() * block_size - self.len
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grow_and_append() {
+        let mut alloc = BlockAllocator::new(8, 4);
+        let mut t = BlockTable::new();
+        assert!(t.reserve(6, &mut alloc)); // 2 blocks
+        assert_eq!(t.blocks().len(), 2);
+        let mut slots = Vec::new();
+        for _ in 0..6 {
+            slots.push(t.append_slot(4));
+        }
+        assert_eq!(t.len(), 6);
+        // First 4 tokens in block 0, next 2 in block 1.
+        assert_eq!(slots[0], (t.blocks()[0], 0));
+        assert_eq!(slots[3], (t.blocks()[0], 3));
+        assert_eq!(slots[4], (t.blocks()[1], 0));
+        assert_eq!(t.wasted_slots(4), 2);
+    }
+
+    #[test]
+    fn reserve_fails_atomically() {
+        let mut alloc = BlockAllocator::new(1, 4);
+        let mut t = BlockTable::new();
+        assert!(!t.reserve(8, &mut alloc)); // needs 2 blocks, pool has 1
+        assert_eq!(t.blocks().len(), 0);
+        assert_eq!(alloc.num_free(), 1);
+    }
+
+    #[test]
+    fn locate_matches_append() {
+        let mut alloc = BlockAllocator::new(4, 3);
+        let mut t = BlockTable::new();
+        t.reserve(7, &mut alloc);
+        let appended: Vec<_> = (0..7).map(|_| t.append_slot(3)).collect();
+        for (pos, &loc) in appended.iter().enumerate() {
+            assert_eq!(t.locate(pos, 3), loc);
+        }
+    }
+
+    #[test]
+    fn free_all_returns_blocks() {
+        let mut alloc = BlockAllocator::new(4, 4);
+        let mut t = BlockTable::new();
+        t.reserve(16, &mut alloc);
+        assert_eq!(alloc.num_free(), 0);
+        t.free_all(&mut alloc);
+        assert_eq!(alloc.num_free(), 4);
+        assert!(t.is_empty());
+    }
+
+    #[test]
+    fn fork_shares_and_cow_splits() {
+        let mut alloc = BlockAllocator::new(4, 4);
+        let mut parent = BlockTable::new();
+        parent.reserve(4, &mut alloc);
+        for _ in 0..4 {
+            parent.append_slot(4);
+        }
+        let mut child = parent.fork(&mut alloc);
+        assert_eq!(alloc.ref_count(parent.blocks()[0]), 2);
+
+        // Child appends → must COW the shared last block first.
+        let cow = child.cow_last_block(&mut alloc);
+        assert!(cow.is_some());
+        let (old, new) = cow.unwrap();
+        assert_eq!(old, parent.blocks()[0]);
+        assert_ne!(new, old);
+        assert_eq!(alloc.ref_count(old), 1);
+        assert_eq!(alloc.ref_count(new), 1);
+
+        // Parent unaffected.
+        assert_eq!(parent.len(), 4);
+        parent.free_all(&mut alloc);
+        child.free_all(&mut alloc);
+        assert_eq!(alloc.num_free(), 4);
+    }
+
+    #[test]
+    fn cow_noop_when_unique() {
+        let mut alloc = BlockAllocator::new(2, 4);
+        let mut t = BlockTable::new();
+        t.reserve(2, &mut alloc);
+        assert!(t.cow_last_block(&mut alloc).is_none());
+    }
+
+    #[test]
+    fn blocks_needed_math() {
+        assert_eq!(BlockTable::blocks_needed(0, 16), 0);
+        assert_eq!(BlockTable::blocks_needed(1, 16), 1);
+        assert_eq!(BlockTable::blocks_needed(16, 16), 1);
+        assert_eq!(BlockTable::blocks_needed(17, 16), 2);
+    }
+}

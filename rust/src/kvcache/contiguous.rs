@@ -1,0 +1,189 @@
+//! Contiguous-reservation baseline allocator (the "before paging" world).
+//!
+//! Traditional serving engines reserve `max_seq_len` contiguous KV slots
+//! per request up front. This arena implements that policy with first-fit
+//! placement over a flat slot space, so the paging ablation (Abl. B) can
+//! measure both internal fragmentation (reserved-but-unused slots) and
+//! external fragmentation (free space too scattered to admit a request).
+
+/// A contiguous reservation: `[start, start+len)` slots.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Reservation {
+    pub id: u64,
+    pub start: usize,
+    pub len: usize,
+}
+
+/// First-fit contiguous arena over `total_slots` token slots.
+#[derive(Debug)]
+pub struct ContiguousArena {
+    total_slots: usize,
+    /// Active reservations sorted by start.
+    reservations: Vec<Reservation>,
+    next_id: u64,
+    /// Occupied token counts per reservation id (for internal-frag stats).
+    used: std::collections::BTreeMap<u64, usize>,
+}
+
+impl ContiguousArena {
+    pub fn new(total_slots: usize) -> Self {
+        ContiguousArena {
+            total_slots,
+            reservations: Vec::new(),
+            next_id: 0,
+            used: Default::default(),
+        }
+    }
+
+    pub fn total_slots(&self) -> usize {
+        self.total_slots
+    }
+
+    /// Sum of reserved slots.
+    pub fn reserved_slots(&self) -> usize {
+        self.reservations.iter().map(|r| r.len).sum()
+    }
+
+    /// Sum of actually-occupied slots.
+    pub fn used_slots(&self) -> usize {
+        self.used.values().sum()
+    }
+
+    /// First-fit reserve of `len` contiguous slots. Returns `None` when no
+    /// gap is large enough (even if total free ≥ len — that is external
+    /// fragmentation, which this baseline exists to exhibit).
+    pub fn reserve(&mut self, len: usize) -> Option<Reservation> {
+        assert!(len > 0);
+        let mut cursor = 0usize;
+        let mut insert_at = self.reservations.len();
+        for (i, r) in self.reservations.iter().enumerate() {
+            if r.start - cursor >= len {
+                insert_at = i;
+                break;
+            }
+            cursor = r.start + r.len;
+        }
+        if insert_at == self.reservations.len() && self.total_slots - cursor < len {
+            return None;
+        }
+        let res = Reservation { id: self.next_id, start: cursor, len };
+        self.next_id += 1;
+        self.reservations.insert(insert_at, res);
+        self.used.insert(res.id, 0);
+        Some(res)
+    }
+
+    /// Record `n` occupied slots for a reservation (monotonic).
+    pub fn occupy(&mut self, id: u64, n: usize) {
+        let r = self.reservations.iter().find(|r| r.id == id).expect("unknown reservation");
+        assert!(n <= r.len, "occupying beyond reservation");
+        let u = self.used.get_mut(&id).expect("unknown reservation");
+        *u = (*u).max(n);
+    }
+
+    /// Release a reservation.
+    pub fn release(&mut self, id: u64) {
+        let idx = self
+            .reservations
+            .iter()
+            .position(|r| r.id == id)
+            .expect("release of unknown reservation");
+        self.reservations.remove(idx);
+        self.used.remove(&id);
+    }
+
+    /// Largest free contiguous run.
+    pub fn largest_free_run(&self) -> usize {
+        let mut best = 0usize;
+        let mut cursor = 0usize;
+        for r in &self.reservations {
+            best = best.max(r.start - cursor);
+            cursor = r.start + r.len;
+        }
+        best.max(self.total_slots - cursor)
+    }
+
+    /// Total free slots (may be scattered).
+    pub fn free_slots(&self) -> usize {
+        self.total_slots - self.reserved_slots()
+    }
+
+    /// External fragmentation in [0,1]: 1 − largest_run/free. 0 when free
+    /// space is one run (or there is no free space).
+    pub fn external_fragmentation(&self) -> f64 {
+        let free = self.free_slots();
+        if free == 0 {
+            return 0.0;
+        }
+        1.0 - self.largest_free_run() as f64 / free as f64
+    }
+
+    /// Internal fragmentation in [0,1]: reserved-but-unused / reserved.
+    pub fn internal_fragmentation(&self) -> f64 {
+        let reserved = self.reserved_slots();
+        if reserved == 0 {
+            return 0.0;
+        }
+        (reserved - self.used_slots()) as f64 / reserved as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_fit_placement() {
+        let mut a = ContiguousArena::new(100);
+        let r0 = a.reserve(30).unwrap();
+        let r1 = a.reserve(30).unwrap();
+        let _r2 = a.reserve(30).unwrap();
+        assert_eq!(r0.start, 0);
+        assert_eq!(r1.start, 30);
+        assert!(a.reserve(20).is_none()); // only 10 left
+        a.release(r1.id);
+        let r3 = a.reserve(20).unwrap(); // reuses the hole
+        assert_eq!(r3.start, 30);
+    }
+
+    #[test]
+    fn external_fragmentation_blocks_admission() {
+        let mut a = ContiguousArena::new(100);
+        let ids: Vec<_> = (0..10).map(|_| a.reserve(10).unwrap().id).collect();
+        // Free every other reservation: 50 free slots, max run 10.
+        for (i, id) in ids.iter().enumerate() {
+            if i % 2 == 0 {
+                a.release(*id);
+            }
+        }
+        assert_eq!(a.free_slots(), 50);
+        assert_eq!(a.largest_free_run(), 10);
+        assert!(a.reserve(20).is_none(), "externally fragmented");
+        assert!(a.external_fragmentation() > 0.7);
+    }
+
+    #[test]
+    fn internal_fragmentation_from_overreservation() {
+        let mut a = ContiguousArena::new(100);
+        let r = a.reserve(80).unwrap(); // reserve max_seq_len…
+        a.occupy(r.id, 20); // …but only use 20 tokens
+        assert!((a.internal_fragmentation() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn occupy_is_monotonic_and_bounded() {
+        let mut a = ContiguousArena::new(10);
+        let r = a.reserve(5).unwrap();
+        a.occupy(r.id, 3);
+        a.occupy(r.id, 2); // no shrink
+        assert_eq!(a.used_slots(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "occupying beyond reservation")]
+    fn occupy_overflow_panics() {
+        let mut a = ContiguousArena::new(10);
+        let r = a.reserve(5).unwrap();
+        a.occupy(r.id, 6);
+    }
+}

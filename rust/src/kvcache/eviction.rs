@@ -1,0 +1,90 @@
+//! Preemption/eviction policy for memory-pressure recovery.
+//!
+//! When the block pool cannot serve a decode step, the scheduler evicts
+//! (preempts) running sequences and re-queues them for recomputation —
+//! vLLM's recompute-preemption, which the paper's "dynamic load balancing
+//! and resource scheduling" (§III.C) builds on.
+
+/// A candidate the policy can preempt.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EvictionCandidate {
+    pub seq_id: u64,
+    /// Blocks the sequence currently holds (freed on eviction).
+    pub blocks_held: usize,
+    /// Scheduler arrival order (smaller = older).
+    pub arrival: u64,
+}
+
+/// Chooses which sequences to preempt to free at least `blocks_needed`.
+pub trait EvictionPolicy {
+    /// Return seq ids to evict, or an empty vec if the target cannot be
+    /// met (caller then stalls instead of evicting uselessly).
+    fn select(&self, candidates: &[EvictionCandidate], blocks_needed: usize) -> Vec<u64>;
+}
+
+/// Evict the *youngest* sequences first (vLLM's default): older requests
+/// have more sunk prefill cost and finish sooner, so preempting the
+/// newest minimizes wasted work. "LRU" here refers to least-recently
+/// *admitted*.
+#[derive(Debug, Default, Clone)]
+pub struct LruEviction;
+
+impl EvictionPolicy for LruEviction {
+    fn select(&self, candidates: &[EvictionCandidate], blocks_needed: usize) -> Vec<u64> {
+        let mut sorted: Vec<_> = candidates.to_vec();
+        // Youngest (largest arrival) first.
+        sorted.sort_by_key(|c| std::cmp::Reverse(c.arrival));
+        let mut freed = 0usize;
+        let mut out = Vec::new();
+        for c in sorted {
+            if freed >= blocks_needed {
+                break;
+            }
+            freed += c.blocks_held;
+            out.push(c.seq_id);
+        }
+        if freed >= blocks_needed {
+            out
+        } else {
+            Vec::new()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cand(seq_id: u64, blocks: usize, arrival: u64) -> EvictionCandidate {
+        EvictionCandidate { seq_id, blocks_held: blocks, arrival }
+    }
+
+    #[test]
+    fn evicts_youngest_first() {
+        let p = LruEviction;
+        let cands = vec![cand(1, 4, 10), cand(2, 4, 30), cand(3, 4, 20)];
+        let out = p.select(&cands, 4);
+        assert_eq!(out, vec![2]); // arrival 30 = youngest
+    }
+
+    #[test]
+    fn evicts_multiple_until_target() {
+        let p = LruEviction;
+        let cands = vec![cand(1, 2, 1), cand(2, 2, 2), cand(3, 2, 3)];
+        let out = p.select(&cands, 3);
+        assert_eq!(out, vec![3, 2]);
+    }
+
+    #[test]
+    fn returns_empty_when_unsatisfiable() {
+        let p = LruEviction;
+        let cands = vec![cand(1, 1, 1)];
+        assert!(p.select(&cands, 5).is_empty());
+    }
+
+    #[test]
+    fn zero_needed_evicts_nothing() {
+        let p = LruEviction;
+        assert!(p.select(&[cand(1, 1, 1)], 0).is_empty());
+    }
+}

@@ -1,0 +1,24 @@
+//! Paged KV-cache memory management (the paper's §III.A/§III.C substrate).
+//!
+//! Key/value vectors are split into fixed-size blocks that live
+//! non-contiguously in a pre-allocated pool; per-sequence *block tables*
+//! map logical token positions to physical blocks. Blocks are
+//! reference-counted so concurrent requests can share prefixes
+//! (copy-on-write), and a contiguous-arena baseline exists for the
+//! paging-vs-reservation ablation (Abl. B).
+
+pub mod block_allocator;
+pub mod block_table;
+pub mod contiguous;
+pub mod eviction;
+pub mod paged;
+pub mod prefix_cache;
+pub mod stats;
+
+pub use block_allocator::{BlockAllocator, BlockId};
+pub use block_table::BlockTable;
+pub use contiguous::ContiguousArena;
+pub use eviction::{EvictionPolicy, LruEviction};
+pub use paged::PagedKvCache;
+pub use prefix_cache::PrefixCache;
+pub use stats::CacheStats;

@@ -1,0 +1,216 @@
+//! Paged KV storage: the physical pool the block tables index into.
+//!
+//! Layout per layer (both K and V): `[num_blocks, block_size, kv_heads,
+//! head_dim]`, row-major — exactly the layout the Pallas paged-attention
+//! kernel (python/compile/kernels/paged_attention.py) consumes, so the
+//! same block tables drive both the native and the XLA backends.
+
+use super::block_allocator::BlockId;
+use super::block_table::BlockTable;
+
+/// Paged K/V storage for every layer of one model.
+#[derive(Debug)]
+pub struct PagedKvCache {
+    num_layers: usize,
+    num_blocks: usize,
+    block_size: usize,
+    kv_heads: usize,
+    head_dim: usize,
+    /// `keys[layer]` is the flat `[num_blocks, block_size, kv_heads, head_dim]` pool.
+    keys: Vec<Vec<f32>>,
+    values: Vec<Vec<f32>>,
+}
+
+impl PagedKvCache {
+    pub fn new(
+        num_layers: usize,
+        num_blocks: usize,
+        block_size: usize,
+        kv_heads: usize,
+        head_dim: usize,
+    ) -> Self {
+        let pool = num_blocks * block_size * kv_heads * head_dim;
+        PagedKvCache {
+            num_layers,
+            num_blocks,
+            block_size,
+            kv_heads,
+            head_dim,
+            keys: (0..num_layers).map(|_| vec![0.0; pool]).collect(),
+            values: (0..num_layers).map(|_| vec![0.0; pool]).collect(),
+        }
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+    pub fn kv_heads(&self) -> usize {
+        self.kv_heads
+    }
+    pub fn head_dim(&self) -> usize {
+        self.head_dim
+    }
+    pub fn num_blocks(&self) -> usize {
+        self.num_blocks
+    }
+    pub fn num_layers(&self) -> usize {
+        self.num_layers
+    }
+
+    /// Bytes held by the pools (both K and V, all layers).
+    pub fn pool_bytes(&self) -> usize {
+        2 * self.num_layers * self.num_blocks * self.block_size * self.kv_heads * self.head_dim * 4
+    }
+
+    #[inline]
+    fn offset(&self, block: BlockId, slot: usize) -> usize {
+        debug_assert!((block as usize) < self.num_blocks);
+        debug_assert!(slot < self.block_size);
+        (block as usize * self.block_size + slot) * self.kv_heads * self.head_dim
+    }
+
+    /// Write one token's K and V vectors (all kv heads, `kv_heads*head_dim`
+    /// values each) into a physical slot.
+    pub fn write_token(&mut self, layer: usize, block: BlockId, slot: usize, k: &[f32], v: &[f32]) {
+        let d = self.kv_heads * self.head_dim;
+        assert_eq!(k.len(), d, "key vector length");
+        assert_eq!(v.len(), d, "value vector length");
+        let off = self.offset(block, slot);
+        self.keys[layer][off..off + d].copy_from_slice(k);
+        self.values[layer][off..off + d].copy_from_slice(v);
+    }
+
+    /// Read one token's K vector (all kv heads).
+    pub fn key_token(&self, layer: usize, block: BlockId, slot: usize) -> &[f32] {
+        let d = self.kv_heads * self.head_dim;
+        let off = self.offset(block, slot);
+        &self.keys[layer][off..off + d]
+    }
+
+    /// Read one token's V vector (all kv heads).
+    pub fn value_token(&self, layer: usize, block: BlockId, slot: usize) -> &[f32] {
+        let d = self.kv_heads * self.head_dim;
+        let off = self.offset(block, slot);
+        &self.values[layer][off..off + d]
+    }
+
+    /// One whole block of keys: `[block_size, kv_heads, head_dim]` flat.
+    pub fn key_block(&self, layer: usize, block: BlockId) -> &[f32] {
+        let d = self.block_size * self.kv_heads * self.head_dim;
+        let off = block as usize * d;
+        &self.keys[layer][off..off + d]
+    }
+
+    /// One whole block of values.
+    pub fn value_block(&self, layer: usize, block: BlockId) -> &[f32] {
+        let d = self.block_size * self.kv_heads * self.head_dim;
+        let off = block as usize * d;
+        &self.values[layer][off..off + d]
+    }
+
+    /// Copy a block's contents (all layers) — used after a COW split.
+    pub fn copy_block(&mut self, src: BlockId, dst: BlockId) {
+        let d = self.block_size * self.kv_heads * self.head_dim;
+        let (s, t) = (src as usize * d, dst as usize * d);
+        for layer in 0..self.num_layers {
+            let (keys, values) = (&mut self.keys[layer], &mut self.values[layer]);
+            keys.copy_within(s..s + d, t);
+            values.copy_within(s..s + d, t);
+        }
+    }
+
+    /// Gather a sequence's K and V into contiguous `[len, kv_heads*head_dim]`
+    /// buffers (native prefill attention and cross-checking use this).
+    pub fn gather(&self, layer: usize, table: &BlockTable) -> (Vec<f32>, Vec<f32>) {
+        let d = self.kv_heads * self.head_dim;
+        let mut ks = Vec::with_capacity(table.len() * d);
+        let mut vs = Vec::with_capacity(table.len() * d);
+        for pos in 0..table.len() {
+            let (b, s) = table.locate(pos, self.block_size);
+            ks.extend_from_slice(self.key_token(layer, b, s));
+            vs.extend_from_slice(self.value_token(layer, b, s));
+        }
+        (ks, vs)
+    }
+
+    /// Raw per-layer pools (the XLA backend feeds these to the HLO as
+    /// runtime arguments).
+    pub fn raw_keys(&self, layer: usize) -> &[f32] {
+        &self.keys[layer]
+    }
+    pub fn raw_values(&self, layer: usize) -> &[f32] {
+        &self.values[layer]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::BlockAllocator;
+
+    fn mk() -> (PagedKvCache, BlockAllocator) {
+        (PagedKvCache::new(2, 4, 4, 2, 3), BlockAllocator::new(4, 4))
+    }
+
+    #[test]
+    fn write_read_roundtrip() {
+        let (mut cache, mut alloc) = mk();
+        let mut t = BlockTable::new();
+        t.reserve(5, &mut alloc);
+        for i in 0..5u32 {
+            let (b, s) = t.append_slot(4);
+            let k: Vec<f32> = (0..6).map(|j| (i * 10 + j) as f32).collect();
+            let v: Vec<f32> = (0..6).map(|j| (i * 100 + j) as f32).collect();
+            cache.write_token(0, b, s, &k, &v);
+        }
+        let (b, s) = t.locate(4, 4);
+        assert_eq!(cache.key_token(0, b, s)[0], 40.0);
+        assert_eq!(cache.value_token(0, b, s)[5], 405.0);
+    }
+
+    #[test]
+    fn gather_is_logical_order() {
+        let (mut cache, mut alloc) = mk();
+        let mut t = BlockTable::new();
+        t.reserve(6, &mut alloc);
+        for i in 0..6u32 {
+            let (b, s) = t.append_slot(4);
+            cache.write_token(1, b, s, &[i as f32; 6], &[-(i as f32); 6]);
+        }
+        let (ks, vs) = cache.gather(1, &t);
+        assert_eq!(ks.len(), 6 * 6);
+        for i in 0..6 {
+            assert_eq!(ks[i * 6], i as f32);
+            assert_eq!(vs[i * 6], -(i as f32));
+        }
+    }
+
+    #[test]
+    fn layers_are_independent() {
+        let (mut cache, mut alloc) = mk();
+        let mut t = BlockTable::new();
+        t.reserve(1, &mut alloc);
+        let (b, s) = t.append_slot(4);
+        cache.write_token(0, b, s, &[1.0; 6], &[1.0; 6]);
+        assert_eq!(cache.key_token(1, b, s), &[0.0; 6]);
+    }
+
+    #[test]
+    fn copy_block_copies_all_layers() {
+        let (mut cache, mut alloc) = mk();
+        let b0 = alloc.alloc().unwrap();
+        let b1 = alloc.alloc().unwrap();
+        cache.write_token(0, b0, 2, &[7.0; 6], &[8.0; 6]);
+        cache.write_token(1, b0, 3, &[9.0; 6], &[10.0; 6]);
+        cache.copy_block(b0, b1);
+        assert_eq!(cache.key_token(0, b1, 2), &[7.0; 6]);
+        assert_eq!(cache.value_token(1, b1, 3), &[10.0; 6]);
+    }
+
+    #[test]
+    fn pool_bytes_math() {
+        let cache = PagedKvCache::new(2, 4, 4, 2, 3);
+        // 2 (K+V) * 2 layers * 4 blocks * 4 slots * 2 heads * 3 dim * 4 bytes
+        assert_eq!(cache.pool_bytes(), 2 * 2 * 4 * 4 * 2 * 3 * 4);
+    }
+}

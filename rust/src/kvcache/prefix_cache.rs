@@ -1,0 +1,245 @@
+//! Prefix-sharing cache reuse (paper §III.C "Cache Sharing and Reuse"):
+//! "multiple requests may share the same key-value cache … we reuse
+//! existing key-value vectors, avoiding redundant computation and
+//! storage".
+//!
+//! Full KV blocks are indexed by a *chain hash* of the token ids they
+//! cover (hash of this block's tokens mixed with the previous block's
+//! hash, so a hit guarantees the entire prefix matches). The cache holds
+//! its own reference on every indexed block; sequences that hit share
+//! the block (refcount++) instead of recomputing its K/V. Eviction
+//! releases the cache's reference FIFO — live sequences are unaffected
+//! because blocks are refcounted.
+
+use super::block_allocator::{BlockAllocator, BlockId};
+use std::collections::{HashMap, VecDeque};
+
+/// FNV-1a over token ids, chained with the parent hash.
+fn chain_hash(parent: u64, tokens: &[u32]) -> u64 {
+    let mut h = parent ^ 0xcbf2_9ce4_8422_2325;
+    for &t in tokens {
+        h ^= t as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+/// Hash-indexed cache of full KV blocks.
+#[derive(Debug)]
+pub struct PrefixCache {
+    block_size: usize,
+    /// Max blocks the cache may pin (its refcounts) at once.
+    capacity: usize,
+    map: HashMap<u64, BlockId>,
+    /// Insertion order for FIFO eviction; entries may be stale (hash
+    /// removed) — validated on pop.
+    order: VecDeque<u64>,
+    pub hits: u64,
+    pub misses: u64,
+    pub insertions: u64,
+}
+
+impl PrefixCache {
+    pub fn new(block_size: usize, capacity: usize) -> Self {
+        PrefixCache {
+            block_size,
+            capacity,
+            map: HashMap::new(),
+            order: VecDeque::new(),
+            hits: 0,
+            misses: 0,
+            insertions: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Chain hashes for every *full* block of `tokens`.
+    pub fn block_hashes(&self, tokens: &[u32]) -> Vec<u64> {
+        let mut out = Vec::new();
+        let mut parent = 0u64;
+        for chunk in tokens.chunks_exact(self.block_size) {
+            parent = chain_hash(parent, chunk);
+            out.push(parent);
+        }
+        out
+    }
+
+    /// Longest run of leading full blocks of `tokens` present in the
+    /// cache, **sharing** each hit block (caller adopts them). At least
+    /// one token is always left uncached so prefill has something to
+    /// compute logits from.
+    pub fn lookup_shared(&mut self, tokens: &[u32], alloc: &mut BlockAllocator) -> Vec<BlockId> {
+        let max_blocks = tokens.len().saturating_sub(1) / self.block_size;
+        let mut shared = Vec::new();
+        for h in self.block_hashes(tokens).into_iter().take(max_blocks) {
+            match self.map.get(&h) {
+                Some(&b) => {
+                    alloc.share(b);
+                    shared.push(b);
+                    self.hits += 1;
+                }
+                None => {
+                    self.misses += 1;
+                    break;
+                }
+            }
+        }
+        shared
+    }
+
+    /// Index a finished/filled sequence's full blocks. The cache takes
+    /// its own reference on each newly indexed block; already-indexed
+    /// hashes keep their existing block.
+    pub fn insert(&mut self, tokens: &[u32], blocks: &[BlockId], alloc: &mut BlockAllocator) {
+        let hashes = self.block_hashes(tokens);
+        for (i, h) in hashes.into_iter().enumerate() {
+            if i >= blocks.len() {
+                break;
+            }
+            if self.map.contains_key(&h) {
+                continue;
+            }
+            self.evict_to(self.capacity.saturating_sub(1), alloc);
+            alloc.share(blocks[i]);
+            self.map.insert(h, blocks[i]);
+            self.order.push_back(h);
+            self.insertions += 1;
+        }
+    }
+
+    /// Release cache references until at most `target` blocks are pinned.
+    pub fn evict_to(&mut self, target: usize, alloc: &mut BlockAllocator) {
+        while self.map.len() > target {
+            let Some(h) = self.order.pop_front() else { break };
+            if let Some(b) = self.map.remove(&h) {
+                alloc.release(b);
+            }
+        }
+    }
+
+    /// Drop everything (memory-pressure flush).
+    pub fn clear(&mut self, alloc: &mut BlockAllocator) {
+        self.evict_to(0, alloc);
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> (PrefixCache, BlockAllocator) {
+        (PrefixCache::new(4, 8), BlockAllocator::new(16, 4))
+    }
+
+    fn tokens(n: usize) -> Vec<u32> {
+        (0..n as u32).map(|i| 256 + i % 50).collect()
+    }
+
+    #[test]
+    fn chain_hashes_depend_on_prefix() {
+        let (c, _) = setup();
+        let a = c.block_hashes(&[1, 2, 3, 4, 5, 6, 7, 8]);
+        let b = c.block_hashes(&[9, 2, 3, 4, 5, 6, 7, 8]);
+        assert_eq!(a.len(), 2);
+        assert_ne!(a[0], b[0], "first block differs");
+        assert_ne!(a[1], b[1], "chained: second block must differ too");
+    }
+
+    #[test]
+    fn insert_then_lookup_shares_blocks() {
+        let (mut c, mut alloc) = setup();
+        let toks = tokens(9); // 2 full blocks + 1
+        let b0 = alloc.alloc().unwrap();
+        let b1 = alloc.alloc().unwrap();
+        c.insert(&toks, &[b0, b1], &mut alloc);
+        assert_eq!(c.len(), 2);
+        assert_eq!(alloc.ref_count(b0), 2); // owner + cache
+
+        let shared = c.lookup_shared(&toks, &mut alloc);
+        assert_eq!(shared, vec![b0, b1]);
+        assert_eq!(alloc.ref_count(b0), 3);
+        assert_eq!(c.hits, 2);
+    }
+
+    #[test]
+    fn lookup_leaves_at_least_one_token_uncached() {
+        let (mut c, mut alloc) = setup();
+        let toks = tokens(8); // exactly 2 full blocks
+        let b0 = alloc.alloc().unwrap();
+        let b1 = alloc.alloc().unwrap();
+        c.insert(&toks, &[b0, b1], &mut alloc);
+        // Whole prompt covered by cached blocks → only block 0 may be
+        // adopted (the last token must be computed for logits).
+        let shared = c.lookup_shared(&toks, &mut alloc);
+        assert_eq!(shared, vec![b0]);
+    }
+
+    #[test]
+    fn miss_on_divergent_prefix() {
+        let (mut c, mut alloc) = setup();
+        let toks = tokens(9);
+        let b0 = alloc.alloc().unwrap();
+        let b1 = alloc.alloc().unwrap();
+        c.insert(&toks, &[b0, b1], &mut alloc);
+        let mut other = toks.clone();
+        other[0] = 999; // diverge in block 0
+        assert!(c.lookup_shared(&other, &mut alloc).is_empty());
+        assert!(c.misses >= 1);
+    }
+
+    #[test]
+    fn eviction_releases_cache_reference_only() {
+        let (mut c, mut alloc) = setup();
+        let toks = tokens(5);
+        let b0 = alloc.alloc().unwrap();
+        c.insert(&toks, &[b0], &mut alloc);
+        assert_eq!(alloc.ref_count(b0), 2);
+        c.clear(&mut alloc);
+        assert_eq!(alloc.ref_count(b0), 1, "owner's reference survives");
+        assert!(c.is_empty());
+        alloc.release(b0);
+        assert_eq!(alloc.num_free(), 16);
+    }
+
+    #[test]
+    fn capacity_bound_is_enforced() {
+        let mut c = PrefixCache::new(4, 2);
+        let mut alloc = BlockAllocator::new(16, 4);
+        for seed in 0..4u32 {
+            let toks: Vec<u32> = (0..5).map(|i| seed * 100 + i).collect();
+            let b = alloc.alloc().unwrap();
+            c.insert(&toks, &[b], &mut alloc);
+            alloc.release(b); // owner departs; cache ref may persist
+        }
+        assert!(c.len() <= 2, "cache pinned {} blocks", c.len());
+        // Evicted blocks were fully released.
+        assert_eq!(alloc.num_used(), c.len());
+    }
+
+    #[test]
+    fn duplicate_insert_is_idempotent() {
+        let (mut c, mut alloc) = setup();
+        let toks = tokens(5);
+        let b0 = alloc.alloc().unwrap();
+        c.insert(&toks, &[b0], &mut alloc);
+        c.insert(&toks, &[b0], &mut alloc);
+        assert_eq!(c.len(), 1);
+        assert_eq!(alloc.ref_count(b0), 2);
+    }
+}

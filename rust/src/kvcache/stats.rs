@@ -1,0 +1,85 @@
+//! Cache utilization / fragmentation accounting for the paging ablation.
+
+use super::block_allocator::BlockAllocator;
+use super::block_table::BlockTable;
+
+/// Point-in-time cache statistics.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct CacheStats {
+    pub total_blocks: usize,
+    pub used_blocks: usize,
+    pub peak_used_blocks: usize,
+    /// Token slots occupied across all live tables.
+    pub used_slots: usize,
+    /// Token slots allocated (used_blocks × block_size).
+    pub allocated_slots: usize,
+    /// Internal fragmentation: allocated-but-unused slots / allocated.
+    pub internal_frag: f64,
+    /// Pool utilization: used blocks / total blocks.
+    pub utilization: f64,
+}
+
+impl CacheStats {
+    /// Gather stats from the allocator and the live block tables.
+    pub fn collect<'a>(
+        alloc: &BlockAllocator,
+        tables: impl Iterator<Item = &'a BlockTable>,
+    ) -> CacheStats {
+        let mut used_slots = 0usize;
+        let mut table_blocks = 0usize;
+        for t in tables {
+            used_slots += t.len();
+            table_blocks += t.blocks().len();
+        }
+        let allocated_slots = table_blocks * alloc.block_size();
+        let internal_frag = if allocated_slots == 0 {
+            0.0
+        } else {
+            (allocated_slots - used_slots) as f64 / allocated_slots as f64
+        };
+        CacheStats {
+            total_blocks: alloc.num_blocks(),
+            used_blocks: alloc.num_used(),
+            peak_used_blocks: alloc.peak_used(),
+            used_slots,
+            allocated_slots,
+            internal_frag,
+            utilization: alloc.utilization(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collect_over_tables() {
+        let mut alloc = BlockAllocator::new(8, 4);
+        let mut t1 = BlockTable::new();
+        let mut t2 = BlockTable::new();
+        t1.reserve(5, &mut alloc); // 2 blocks
+        for _ in 0..5 {
+            t1.append_slot(4);
+        }
+        t2.reserve(3, &mut alloc); // 1 block
+        for _ in 0..3 {
+            t2.append_slot(4);
+        }
+        let stats = CacheStats::collect(&alloc, [&t1, &t2].into_iter());
+        assert_eq!(stats.total_blocks, 8);
+        assert_eq!(stats.used_blocks, 3);
+        assert_eq!(stats.used_slots, 8);
+        assert_eq!(stats.allocated_slots, 12);
+        assert!((stats.internal_frag - 4.0 / 12.0).abs() < 1e-12);
+        assert!((stats.utilization - 3.0 / 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_stats() {
+        let alloc = BlockAllocator::new(4, 4);
+        let stats = CacheStats::collect(&alloc, std::iter::empty());
+        assert_eq!(stats.internal_frag, 0.0);
+        assert_eq!(stats.used_slots, 0);
+    }
+}

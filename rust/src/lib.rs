@@ -1,0 +1,48 @@
+//! # Opt-GPTQ
+//!
+//! A reproduction of *"Opt-GPTQ: An Optimized GPTQ Combining Sparse
+//! Attention and Quantization Techniques"* (CS.DC 2025) as a three-layer
+//! Rust + JAX + Pallas serving stack:
+//!
+//! * **Layer 3 (this crate)** — a vLLM-style coordinator: request router,
+//!   continuous-batching scheduler, paged KV-cache manager, GPTQ weight
+//!   quantizer, and a PJRT runtime that executes AOT-compiled HLO.
+//! * **Layer 2 (`python/compile/model.py`)** — the Llama-style GQA model
+//!   authored in JAX and lowered once to HLO text (`make artifacts`).
+//! * **Layer 1 (`python/compile/kernels/`)** — Pallas kernels for paged
+//!   grouped-query attention with fused ALiBi and for GPTQ int4
+//!   dequant-matmul.
+//!
+//! Python never runs on the request path: the engine is a self-contained
+//! Rust binary once `artifacts/` is built.
+//!
+//! ## Module map
+//!
+//! | module | role |
+//! |---|---|
+//! | [`util`] | offline-environment substrates: JSON, CLI, RNG, bench + property-test harnesses |
+//! | [`tensor`] | minimal row-major f32 ndarray with the ops the native backend needs |
+//! | [`tokenizer`] | byte-level tokenizer (vocab 256 + specials) |
+//! | [`kvcache`] | paged block allocator, block tables, contiguous baseline, fragmentation stats |
+//! | [`quant`] | GPTQ (Hessian/Cholesky, error propagation), RTN baseline, int4/int8 packing |
+//! | [`attention`] | MHA / GQA / ALiBi / paged decode attention (native reference) |
+//! | [`model`] | Llama-architecture config, weights, native forward, sampler |
+//! | [`runtime`] | PJRT client, artifact manifest, `Backend` trait (Native / Xla) |
+//! | [`coordinator`] | sequence state machine, scheduler, batcher, router, engine, metrics |
+//! | [`server`] | threaded TCP/HTTP front-end speaking the JSON API |
+//! | [`workload`] | synthetic request-trace generator (Poisson arrivals) |
+
+pub mod attention;
+pub mod coordinator;
+pub mod kvcache;
+pub mod model;
+pub mod quant;
+pub mod runtime;
+pub mod server;
+pub mod tensor;
+pub mod tokenizer;
+pub mod util;
+pub mod workload;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

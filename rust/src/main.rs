@@ -1,0 +1,194 @@
+//! `opt-gptq` — CLI for the Opt-GPTQ serving stack.
+//!
+//! ```text
+//! opt-gptq serve    --model tiny --port 8765 --workers 1 [--xla --artifacts DIR]
+//! opt-gptq generate --model tiny --prompt "hello" --max-tokens 32
+//! opt-gptq quantize --model tiny --bits 4 --group-size 64 --out weights.bin
+//! opt-gptq info     --model tiny
+//! ```
+
+use opt_gptq::coordinator::{BucketPolicy, EngineConfig, Router, RouterConfig, SchedulerConfig};
+use opt_gptq::model::{
+    weights::{quantize_weights, QuantMethod},
+    ModelConfig, ModelWeights, NativeModel, SamplingParams,
+};
+use opt_gptq::runtime::{ArtifactManifest, Backend, NativeBackend, XlaBackend};
+use opt_gptq::server::Server;
+use opt_gptq::tokenizer::ByteTokenizer;
+use opt_gptq::util::cli::Args;
+use std::sync::Arc;
+
+fn main() {
+    opt_gptq::util::logging::init();
+    let args = Args::from_env();
+    let code = match args.command.as_deref() {
+        Some("serve") => cmd_serve(&args),
+        Some("generate") => cmd_generate(&args),
+        Some("quantize") => cmd_quantize(&args),
+        Some("info") => cmd_info(&args),
+        _ => {
+            eprintln!(
+                "usage: opt-gptq <serve|generate|quantize|info> [--model tiny|small|mini] …\n\
+                 see README.md for the full flag list"
+            );
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn model_config(args: &Args) -> ModelConfig {
+    let name = args.get_str("model", "tiny");
+    ModelConfig::preset(name).unwrap_or_else(|| {
+        eprintln!("unknown model preset '{name}' (tiny|small|mini)");
+        std::process::exit(2);
+    })
+}
+
+fn make_backend(args: &Args, cfg: &ModelConfig, seed: u64) -> Box<dyn Backend> {
+    let weights = ModelWeights::init(cfg, seed);
+    if args.flag("xla") {
+        let dir = std::path::PathBuf::from(args.get_str("artifacts", "artifacts"));
+        let manifest = ArtifactManifest::load(&dir).unwrap_or_else(|e| {
+            eprintln!("failed to load artifacts from {dir:?}: {e:#}\n(run `make artifacts` first)");
+            std::process::exit(1);
+        });
+        Box::new(XlaBackend::load(manifest, &weights).unwrap_or_else(|e| {
+            eprintln!("failed to initialize XLA backend: {e:#}");
+            std::process::exit(1);
+        }))
+    } else {
+        Box::new(NativeBackend::new(NativeModel::new(weights)))
+    }
+}
+
+fn engine_config(args: &Args, cfg: &ModelConfig) -> EngineConfig {
+    let kv_budget = args.get_usize("kv-tokens", 4096.min(cfg.max_seq * 8));
+    let block_size = args.get_usize("block-size", 16);
+    let max_batch = args.get_usize("max-batch", 8);
+    EngineConfig {
+        num_blocks: kv_budget.div_ceil(block_size),
+        block_size,
+        sched: SchedulerConfig {
+            max_running: args.get_usize("max-running", 64),
+            max_decode_batch: max_batch,
+            watermark_blocks: 2,
+        },
+        decode_buckets: BucketPolicy::exact(max_batch),
+        prefill_chunk: usize::MAX,
+            prefix_cache_blocks: 0,
+    }
+}
+
+fn cmd_serve(args: &Args) -> i32 {
+    let cfg = model_config(args);
+    let econf = engine_config(args, &cfg);
+    let workers = args.get_usize("workers", 1);
+    let seed = args.get_u64("seed", 0);
+    let router = Arc::new(Router::new(RouterConfig { engine: econf, workers }, |w| {
+        make_backend(args, &cfg, seed + w as u64)
+    }));
+    let port = args.get_usize("port", 8765);
+    let addr = format!("127.0.0.1:{port}");
+    let server = match Server::bind(router, &addr) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("bind failed: {e:#}");
+            return 1;
+        }
+    };
+    log::info!(
+        "serving model '{}' on http://{}",
+        args.get_str("model", "tiny"),
+        server.local_addr()
+    );
+    if let Err(e) = server.serve() {
+        eprintln!("server error: {e:#}");
+        return 1;
+    }
+    0
+}
+
+fn cmd_generate(args: &Args) -> i32 {
+    let cfg = model_config(args);
+    let backend = make_backend(args, &cfg, args.get_u64("seed", 0));
+    let mut engine = opt_gptq::coordinator::Engine::new(backend, engine_config(args, &cfg));
+    let tok = ByteTokenizer::new();
+    let prompt = args.get_str("prompt", "the quick brown fox");
+    let params = SamplingParams {
+        max_tokens: args.get_usize("max-tokens", 32),
+        temperature: args.get_f64("temperature", 0.0) as f32,
+        top_k: args.get_usize("top-k", 0),
+        ignore_eos: true,
+    };
+    if let Err(e) = engine.add_request(tok.encode(prompt), params) {
+        eprintln!("request rejected: {e:#}");
+        return 1;
+    }
+    let report = engine.run_to_completion();
+    for out in engine.take_outputs() {
+        println!("prompt : {prompt}");
+        println!("output : {}", tok.decode(&out.tokens));
+        println!("tokens : {:?}", out.tokens);
+    }
+    print!("{}", report.paper_block("run"));
+    0
+}
+
+fn cmd_quantize(args: &Args) -> i32 {
+    let cfg = model_config(args);
+    let bits = args.get_usize("bits", 4) as u32;
+    let group_size = args.get_usize("group-size", 64);
+    let method = match args.get_str("method", "gptq") {
+        "rtn" => QuantMethod::Rtn,
+        _ => QuantMethod::Gptq,
+    };
+    let mut weights = ModelWeights::init(&cfg, args.get_u64("seed", 0));
+    let model = NativeModel::new(weights.clone());
+    let calib_text = opt_gptq::workload::synth_prompt(256, 1);
+    let calib_tokens = ByteTokenizer::new().encode(&calib_text);
+    log::info!("calibrating over {} tokens…", calib_tokens.len());
+    let (a, m, f) = model.calibrate(&calib_tokens);
+    let report = quantize_weights(&mut weights, method, bits, group_size, &a, &m, &f);
+    println!(
+        "quantized {:?} to {} bits (group {}): mean relative error {:.5}, {:.2}× compression",
+        args.get_str("model", "tiny"),
+        bits,
+        group_size,
+        report.mean_error(),
+        report.compression_ratio()
+    );
+    if let Some(out) = args.get("out") {
+        if let Err(e) = weights.save(std::path::Path::new(out)) {
+            eprintln!("save failed: {e:#}");
+            return 1;
+        }
+        println!("wrote dequantized weights to {out}");
+    }
+    0
+}
+
+fn cmd_info(args: &Args) -> i32 {
+    let cfg = model_config(args);
+    println!("model preset : {}", args.get_str("model", "tiny"));
+    println!("parameters   : {}", cfg.param_count());
+    println!("d_model      : {}", cfg.d_model);
+    println!("layers       : {}", cfg.n_layers);
+    println!(
+        "heads        : {} query / {} kv (G = {})",
+        cfg.n_heads,
+        cfg.n_kv_heads,
+        cfg.group_size()
+    );
+    println!("d_ff         : {}", cfg.d_ff);
+    println!("max_seq      : {}", cfg.max_seq);
+    println!("alibi        : {}", cfg.alibi);
+    println!("KV bytes/tok : {} (f32, all layers)", cfg.kv_bytes_per_token());
+    let mha = cfg.as_mha_baseline();
+    println!(
+        "MHA baseline : {} KV bytes/tok ({}× more)",
+        mha.kv_bytes_per_token(),
+        cfg.group_size()
+    );
+    0
+}

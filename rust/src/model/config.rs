@@ -1,0 +1,180 @@
+//! Model shape configuration and presets.
+
+use crate::attention::gqa::{AttnConfig, Bias};
+
+/// Llama-style decoder configuration.
+///
+/// Positional information comes from ALiBi (when `alibi` is true) — the
+/// paper's configuration — so there is no rotary/positional embedding
+/// table anywhere.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ModelConfig {
+    /// Embedding-table rows (padded to a multiple of 128; see tokenizer).
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    /// KV heads (== `n_heads` for the MHA baseline).
+    pub n_kv_heads: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    /// ALiBi position bias (paper config) vs pure causal.
+    pub alibi: bool,
+    pub rms_eps: f32,
+}
+
+impl ModelConfig {
+    pub fn head_dim(&self) -> usize {
+        assert!(self.d_model % self.n_heads == 0);
+        self.d_model / self.n_heads
+    }
+
+    /// KV projection width (`n_kv_heads * head_dim`).
+    pub fn kv_dim(&self) -> usize {
+        self.n_kv_heads * self.head_dim()
+    }
+
+    /// Query heads per KV group (`G`).
+    pub fn group_size(&self) -> usize {
+        assert!(self.n_heads % self.n_kv_heads == 0);
+        self.n_heads / self.n_kv_heads
+    }
+
+    pub fn attn_config(&self) -> AttnConfig {
+        AttnConfig {
+            num_heads: self.n_heads,
+            num_kv_heads: self.n_kv_heads,
+            head_dim: self.head_dim(),
+            bias: if self.alibi { Bias::Alibi } else { Bias::None },
+        }
+    }
+
+    /// Total parameter count.
+    pub fn param_count(&self) -> usize {
+        let d = self.d_model;
+        let kv = self.kv_dim();
+        let per_layer = d * d            // wq
+            + 2 * d * kv                 // wk, wv
+            + d * d                      // wo
+            + 3 * d * self.d_ff          // gate, up, down
+            + 2 * d; // two RMSNorm scales
+        self.vocab * d                   // embedding
+            + self.n_layers * per_layer
+            + d                          // final norm
+            + self.vocab * d // lm head
+    }
+
+    /// KV-cache bytes per token (f32), all layers.
+    pub fn kv_bytes_per_token(&self) -> usize {
+        2 * self.n_layers * self.kv_dim() * 4
+    }
+
+    /// MHA baseline twin: same model but `n_kv_heads == n_heads` and no
+    /// ALiBi — what the paper's "before Opt-GQA" engine runs.
+    pub fn as_mha_baseline(&self) -> ModelConfig {
+        ModelConfig { n_kv_heads: self.n_heads, alibi: false, ..*self }
+    }
+
+    /// Test-size model (≈1M params): fast enough for unit tests.
+    pub fn tiny() -> ModelConfig {
+        ModelConfig {
+            vocab: 384,
+            d_model: 64,
+            n_layers: 2,
+            n_heads: 4,
+            n_kv_heads: 2,
+            d_ff: 128,
+            max_seq: 256,
+            alibi: true,
+            rms_eps: 1e-5,
+        }
+    }
+
+    /// Small demo model (≈13M params): examples that must run in seconds.
+    pub fn small() -> ModelConfig {
+        ModelConfig {
+            vocab: 384,
+            d_model: 256,
+            n_layers: 6,
+            n_heads: 8,
+            n_kv_heads: 2,
+            d_ff: 768,
+            max_seq: 1024,
+            alibi: true,
+            rms_eps: 1e-5,
+        }
+    }
+
+    /// The E2E driver model (≈100M params), Llama-3-8B shrunk with its
+    /// proportions kept (GQA 3:1..4:1, wide FFN).
+    pub fn mini() -> ModelConfig {
+        ModelConfig {
+            vocab: 384,
+            d_model: 768,
+            n_layers: 12,
+            n_heads: 12,
+            n_kv_heads: 4,
+            d_ff: 3072,
+            max_seq: 2048,
+            alibi: true,
+            rms_eps: 1e-5,
+        }
+    }
+
+    /// Look up a preset by name (CLI surface).
+    pub fn preset(name: &str) -> Option<ModelConfig> {
+        match name {
+            "tiny" => Some(Self::tiny()),
+            "small" => Some(Self::small()),
+            "mini" => Some(Self::mini()),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_are_consistent() {
+        for name in ["tiny", "small", "mini"] {
+            let c = ModelConfig::preset(name).unwrap();
+            assert_eq!(c.d_model % c.n_heads, 0, "{name}");
+            assert_eq!(c.n_heads % c.n_kv_heads, 0, "{name}");
+            assert_eq!(c.vocab % 128, 0, "{name}");
+            assert!(c.param_count() > 0);
+        }
+        assert!(ModelConfig::preset("bogus").is_none());
+    }
+
+    #[test]
+    fn mini_is_about_100m_params() {
+        let c = ModelConfig::mini();
+        let p = c.param_count();
+        assert!(
+            (80_000_000..140_000_000).contains(&p),
+            "mini params = {p}"
+        );
+    }
+
+    #[test]
+    fn gqa_shrinks_kv_bytes_by_group_factor() {
+        let c = ModelConfig::mini();
+        let mha = c.as_mha_baseline();
+        assert_eq!(
+            mha.kv_bytes_per_token(),
+            c.kv_bytes_per_token() * c.group_size()
+        );
+    }
+
+    #[test]
+    fn baseline_twin_differs_only_in_kv_and_alibi() {
+        let c = ModelConfig::tiny();
+        let b = c.as_mha_baseline();
+        assert_eq!(b.n_kv_heads, b.n_heads);
+        assert!(!b.alibi);
+        assert_eq!(b.d_model, c.d_model);
+        assert_eq!(b.n_layers, c.n_layers);
+    }
+}

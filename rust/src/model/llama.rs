@@ -1,0 +1,338 @@
+//! Native f32 Llama-GQA forward pass over the paged KV cache.
+//!
+//! This is the reference/fast-CPU implementation of the same computation
+//! the AOT-lowered HLO performs (`python/compile/model.py`): RMSNorm →
+//! GQA attention (ALiBi) → RMSNorm → SwiGLU, residuals throughout, no
+//! positional embeddings (ALiBi carries position). Prefill attends
+//! contiguously over gathered K/V; decode uses blockwise paged attention
+//! with online softmax — mirroring the Pallas kernel's schedule.
+
+use super::config::ModelConfig;
+use super::weights::ModelWeights;
+use crate::attention::gqa::gqa_attention;
+use crate::attention::paged::paged_decode_attention;
+use crate::kvcache::{BlockTable, PagedKvCache};
+use crate::tensor::{rmsnorm, Tensor};
+
+/// A model executable on the native backend.
+#[derive(Debug, Clone)]
+pub struct NativeModel {
+    pub weights: ModelWeights,
+}
+
+impl NativeModel {
+    pub fn new(weights: ModelWeights) -> Self {
+        NativeModel { weights }
+    }
+
+    pub fn config(&self) -> &ModelConfig {
+        &self.weights.config
+    }
+
+    fn embed_tokens(&self, tokens: &[u32]) -> Tensor {
+        let d = self.config().d_model;
+        let mut x = Vec::with_capacity(tokens.len() * d);
+        for &t in tokens {
+            assert!((t as usize) < self.config().vocab, "token {t} out of vocab");
+            x.extend_from_slice(self.weights.embed.row(t as usize));
+        }
+        Tensor::from_vec(&[tokens.len(), d], x)
+    }
+
+    /// One transformer block's MLP (SwiGLU) applied to `[n, d]`.
+    fn mlp(&self, layer: usize, x: &Tensor) -> Tensor {
+        let l = &self.weights.layers[layer];
+        let mut gate = x.matmul_nt(&l.w_gate);
+        let up = x.matmul_nt(&l.w_up);
+        gate.silu_inplace();
+        gate.mul(&up).matmul_nt(&l.w_down)
+    }
+
+    /// Process `tokens` (prompt chunk), appending their K/V to the cache.
+    ///
+    /// `table` must have capacity reserved for `tokens.len()` more slots
+    /// (see [`BlockTable::reserve`]). Supports chunked prefill: tokens are
+    /// placed at positions `table.len()..table.len()+n` and attend to all
+    /// earlier cache content. Returns the **last** position's logits
+    /// (`[vocab]`).
+    pub fn prefill(
+        &self,
+        tokens: &[u32],
+        cache: &mut PagedKvCache,
+        table: &mut BlockTable,
+    ) -> Vec<f32> {
+        assert!(!tokens.is_empty());
+        let cfg = self.config();
+        let n = tokens.len();
+        let base = table.len();
+        // Claim physical slots for the new tokens once; every layer writes
+        // its K/V through the same mapping.
+        let slots: Vec<_> = (0..n).map(|_| table.append_slot(cache.block_size())).collect();
+
+        let mut x = self.embed_tokens(tokens);
+        for li in 0..cfg.n_layers {
+            let l = &self.weights.layers[li];
+            // Attention sub-block.
+            let xn = rmsnorm(&x, &l.rms_attn, cfg.rms_eps);
+            let q = xn.matmul_nt(&l.wq);
+            let k = xn.matmul_nt(&l.wk);
+            let v = xn.matmul_nt(&l.wv);
+            let kvd = cfg.kv_dim();
+            for (i, &(b, s)) in slots.iter().enumerate() {
+                cache.write_token(li, b, s, &k.data()[i * kvd..(i + 1) * kvd], &v.data()[i * kvd..(i + 1) * kvd]);
+            }
+            // Gather the full visible context (base + new) contiguously.
+            let (k_all, v_all) = cache.gather(li, table);
+            let attn =
+                gqa_attention(&cfg.attn_config(), q.data(), &k_all, &v_all, n, base + n, base);
+            let attn = Tensor::from_vec(&[n, cfg.d_model], attn).matmul_nt(&l.wo);
+            x.add_assign(&attn);
+            // MLP sub-block.
+            let xn2 = rmsnorm(&x, &l.rms_mlp, cfg.rms_eps);
+            let h = self.mlp(li, &xn2);
+            x.add_assign(&h);
+        }
+        self.last_row_logits(&x)
+    }
+
+    /// Decode one token: append its K/V, return its logits (`[vocab]`).
+    ///
+    /// `table` must have one slot of reserved capacity.
+    pub fn decode_step(
+        &self,
+        token: u32,
+        cache: &mut PagedKvCache,
+        table: &mut BlockTable,
+    ) -> Vec<f32> {
+        let mut tables = [table];
+        self.decode_batch(&[token], cache, &mut tables).pop().unwrap()
+    }
+
+    /// Batched decode: one token per sequence, all sequences advanced in
+    /// a single pass so every weight matrix is streamed from memory
+    /// **once per step** instead of once per sequence — the native
+    /// backend's continuous-batching payoff (decode is memory-bound on
+    /// weights at batch 1).
+    ///
+    /// Each table must have one slot of reserved capacity. Returns one
+    /// logits vector per sequence, in order.
+    pub fn decode_batch(
+        &self,
+        tokens: &[u32],
+        cache: &mut PagedKvCache,
+        tables: &mut [&mut BlockTable],
+    ) -> Vec<Vec<f32>> {
+        let cfg = self.config();
+        let n = tokens.len();
+        assert_eq!(n, tables.len());
+        assert!(n > 0);
+        let kvd = cfg.kv_dim();
+        let slots: Vec<_> =
+            tables.iter_mut().map(|t| t.append_slot(cache.block_size())).collect();
+
+        let mut x = self.embed_tokens(tokens); // [n, d]
+        for li in 0..cfg.n_layers {
+            let l = &self.weights.layers[li];
+            let xn = rmsnorm(&x, &l.rms_attn, cfg.rms_eps);
+            let q = xn.matmul_nt(&l.wq); // [n, d]
+            let k = xn.matmul_nt(&l.wk); // [n, kvd]
+            let v = xn.matmul_nt(&l.wv);
+            for (i, &(blk, slot)) in slots.iter().enumerate() {
+                cache.write_token(
+                    li,
+                    blk,
+                    slot,
+                    &k.data()[i * kvd..(i + 1) * kvd],
+                    &v.data()[i * kvd..(i + 1) * kvd],
+                );
+            }
+            // Attention is per-sequence (distinct block tables).
+            let mut attn = Tensor::zeros(&[n, cfg.d_model]);
+            for (i, table) in tables.iter().enumerate() {
+                let out = paged_decode_attention(
+                    &cfg.attn_config(),
+                    cache,
+                    li,
+                    &q.data()[i * cfg.d_model..(i + 1) * cfg.d_model],
+                    table,
+                );
+                attn.row_mut(i).copy_from_slice(&out);
+            }
+            let attn = attn.matmul_nt(&l.wo);
+            x.add_assign(&attn);
+            let xn2 = rmsnorm(&x, &l.rms_mlp, cfg.rms_eps);
+            let h = self.mlp(li, &xn2);
+            x.add_assign(&h);
+        }
+        // Final norm + LM head for every row at once.
+        let normed = rmsnorm(&x, &self.weights.final_norm, cfg.rms_eps);
+        let logits = normed.matmul_nt(&self.weights.lm_head); // [n, vocab]
+        (0..n).map(|i| logits.row(i).to_vec()).collect()
+    }
+
+    /// Final norm + LM head on the last row only (decode never needs the
+    /// other rows' logits).
+    fn last_row_logits(&self, x: &Tensor) -> Vec<f32> {
+        let cfg = self.config();
+        let n = x.shape()[0];
+        let last = Tensor::from_vec(&[1, cfg.d_model], x.row(n - 1).to_vec());
+        let normed = rmsnorm(&last, &self.final_norm(), cfg.rms_eps);
+        normed.matmul_nt(&self.weights.lm_head).into_vec()
+    }
+
+    fn final_norm(&self) -> Vec<f32> {
+        self.weights.final_norm.clone()
+    }
+
+    /// Run a calibration pass over `tokens` *without* a cache, capturing
+    /// the activations GPTQ needs: per layer, the attention input rows
+    /// (`[n, d_model]`), the MLP input rows (`[n, d_model]`) and the
+    /// hidden rows feeding `w_down` (`[n, d_ff]`).
+    pub fn calibrate(&self, tokens: &[u32]) -> (Vec<Vec<f32>>, Vec<Vec<f32>>, Vec<Vec<f32>>) {
+        let cfg = self.config();
+        let n = tokens.len();
+        let mut attn_in = Vec::with_capacity(cfg.n_layers);
+        let mut mlp_in = Vec::with_capacity(cfg.n_layers);
+        let mut ff_hidden = Vec::with_capacity(cfg.n_layers);
+
+        let mut x = self.embed_tokens(tokens);
+        for li in 0..cfg.n_layers {
+            let l = &self.weights.layers[li];
+            let xn = rmsnorm(&x, &l.rms_attn, cfg.rms_eps);
+            attn_in.push(xn.data().to_vec());
+            let q = xn.matmul_nt(&l.wq);
+            let k = xn.matmul_nt(&l.wk);
+            let v = xn.matmul_nt(&l.wv);
+            let attn = gqa_attention(&cfg.attn_config(), q.data(), k.data(), v.data(), n, n, 0);
+            let attn = Tensor::from_vec(&[n, cfg.d_model], attn).matmul_nt(&l.wo);
+            x.add_assign(&attn);
+            let xn2 = rmsnorm(&x, &l.rms_mlp, cfg.rms_eps);
+            mlp_in.push(xn2.data().to_vec());
+            let mut gate = xn2.matmul_nt(&l.w_gate);
+            let up = xn2.matmul_nt(&l.w_up);
+            gate.silu_inplace();
+            let h = gate.mul(&up);
+            ff_hidden.push(h.data().to_vec());
+            let down = h.matmul_nt(&l.w_down);
+            x.add_assign(&down);
+        }
+        (attn_in, mlp_in, ff_hidden)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::BlockAllocator;
+
+    fn mk(seed: u64) -> (NativeModel, PagedKvCache, BlockAllocator) {
+        let cfg = ModelConfig::tiny();
+        let model = NativeModel::new(ModelWeights::init(&cfg, seed));
+        let cache = PagedKvCache::new(cfg.n_layers, 32, 8, cfg.n_kv_heads, cfg.head_dim());
+        let alloc = BlockAllocator::new(32, 8);
+        (model, cache, alloc)
+    }
+
+    #[test]
+    fn prefill_then_decode_matches_full_prefill() {
+        // logits(prefill(t0..t4)) == logits(prefill(t0..t3) then decode(t4)).
+        let (model, mut cache_a, mut alloc_a) = mk(1);
+        let tokens = [256u32, 10, 20, 30, 40]; // BOS + bytes
+        let mut table_a = BlockTable::new();
+        table_a.reserve(tokens.len(), &mut alloc_a);
+        let full = model.prefill(&tokens, &mut cache_a, &mut table_a);
+
+        let (_, mut cache_b, mut alloc_b) = mk(1);
+        let mut table_b = BlockTable::new();
+        table_b.reserve(tokens.len(), &mut alloc_b);
+        let _ = model.prefill(&tokens[..4], &mut cache_b, &mut table_b);
+        let inc = model.decode_step(tokens[4], &mut cache_b, &mut table_b);
+
+        assert_eq!(full.len(), inc.len());
+        for (a, b) in full.iter().zip(&inc) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn chunked_prefill_matches_full_prefill() {
+        let (model, mut cache_a, mut alloc_a) = mk(2);
+        let tokens = [256u32, 1, 2, 3, 4, 5, 6];
+        let mut table_a = BlockTable::new();
+        table_a.reserve(tokens.len(), &mut alloc_a);
+        let full = model.prefill(&tokens, &mut cache_a, &mut table_a);
+
+        let (_, mut cache_b, mut alloc_b) = mk(2);
+        let mut table_b = BlockTable::new();
+        table_b.reserve(tokens.len(), &mut alloc_b);
+        let _ = model.prefill(&tokens[..3], &mut cache_b, &mut table_b);
+        let chunk2 = model.prefill(&tokens[3..], &mut cache_b, &mut table_b);
+
+        for (a, b) in full.iter().zip(&chunk2) {
+            assert!((a - b).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn logits_shape_and_finiteness() {
+        let (model, mut cache, mut alloc) = mk(3);
+        let mut table = BlockTable::new();
+        table.reserve(4, &mut alloc);
+        let logits = model.prefill(&[256, 65, 66, 67], &mut cache, &mut table);
+        assert_eq!(logits.len(), model.config().vocab);
+        assert!(logits.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let (model, mut cache_a, mut alloc_a) = mk(4);
+        let mut t_a = BlockTable::new();
+        t_a.reserve(3, &mut alloc_a);
+        let a = model.prefill(&[256, 9, 9], &mut cache_a, &mut t_a);
+        let (model2, mut cache_b, mut alloc_b) = mk(4);
+        let mut t_b = BlockTable::new();
+        t_b.reserve(3, &mut alloc_b);
+        let b = model2.prefill(&[256, 9, 9], &mut cache_b, &mut t_b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn mha_baseline_runs() {
+        let cfg = ModelConfig::tiny().as_mha_baseline();
+        let model = NativeModel::new(ModelWeights::init(&cfg, 5));
+        let mut cache = PagedKvCache::new(cfg.n_layers, 16, 8, cfg.n_kv_heads, cfg.head_dim());
+        let mut alloc = BlockAllocator::new(16, 8);
+        let mut table = BlockTable::new();
+        table.reserve(5, &mut alloc);
+        let _ = model.prefill(&[256, 1, 2, 3], &mut cache, &mut table);
+        let logits = model.decode_step(4, &mut cache, &mut table);
+        assert!(logits.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn calibrate_shapes() {
+        let (model, _, _) = mk(6);
+        let cfg = *model.config();
+        let (attn, mlp, ffh) = model.calibrate(&[256, 1, 2, 3, 4]);
+        assert_eq!(attn.len(), cfg.n_layers);
+        assert_eq!(attn[0].len(), 5 * cfg.d_model);
+        assert_eq!(mlp[1].len(), 5 * cfg.d_model);
+        assert_eq!(ffh[0].len(), 5 * cfg.d_ff);
+    }
+
+    #[test]
+    fn gptq_calibrated_model_still_generates() {
+        use crate::model::weights::{quantize_weights, QuantMethod};
+        let (model, mut cache, mut alloc) = mk(7);
+        let calib_tokens: Vec<u32> = (0..32).map(|i| 256 + 0 * i + (i % 250)).collect();
+        let (a, m, f) = model.calibrate(&calib_tokens);
+        let mut w = model.weights.clone();
+        let report = quantize_weights(&mut w, QuantMethod::Gptq, 4, 32, &a, &m, &f);
+        assert!(report.mean_error() < 0.25, "mean err {}", report.mean_error());
+        let qmodel = NativeModel::new(w);
+        let mut table = BlockTable::new();
+        table.reserve(4, &mut alloc);
+        let logits = qmodel.prefill(&[256, 1, 2, 3], &mut cache, &mut table);
+        assert!(logits.iter().all(|v| v.is_finite()));
+    }
+}

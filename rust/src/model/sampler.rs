@@ -1,0 +1,135 @@
+//! Token sampling: greedy and top-k/temperature.
+
+use crate::tokenizer::VOCAB_SIZE;
+use crate::util::rng::Rng;
+
+/// Per-request sampling configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct SamplingParams {
+    /// 0.0 → greedy.
+    pub temperature: f32,
+    /// 0 → full vocabulary.
+    pub top_k: usize,
+    /// Keep generating even if EOS is sampled (benches use fixed
+    /// generation lengths, like the paper's workload).
+    pub ignore_eos: bool,
+    pub max_tokens: usize,
+}
+
+impl Default for SamplingParams {
+    fn default() -> Self {
+        SamplingParams { temperature: 0.0, top_k: 0, ignore_eos: true, max_tokens: 32 }
+    }
+}
+
+/// Stateful sampler (owns its RNG for reproducibility per sequence).
+#[derive(Debug, Clone)]
+pub struct Sampler {
+    rng: Rng,
+}
+
+impl Sampler {
+    pub fn new(seed: u64) -> Self {
+        Sampler { rng: Rng::new(seed) }
+    }
+
+    /// Sample a token id from `logits`. Only real token ids
+    /// (`0..VOCAB_SIZE`) are candidates — the embedding rows padding the
+    /// vocab to an MXU-friendly size are masked out.
+    pub fn sample(&mut self, logits: &[f32], params: &SamplingParams) -> u32 {
+        let n = logits.len().min(VOCAB_SIZE);
+        let live = &logits[..n];
+        if params.temperature <= 0.0 {
+            return argmax(live) as u32;
+        }
+        // Top-k selection.
+        let k = if params.top_k == 0 { n } else { params.top_k.min(n) };
+        let mut idx: Vec<usize> = (0..n).collect();
+        idx.sort_by(|&a, &b| live[b].partial_cmp(&live[a]).unwrap_or(std::cmp::Ordering::Equal));
+        idx.truncate(k);
+        // Softmax over the survivors at the given temperature.
+        let inv_t = 1.0 / params.temperature;
+        let max = live[idx[0]];
+        let weights: Vec<f32> = idx.iter().map(|&i| ((live[i] - max) * inv_t).exp()).collect();
+        let total: f32 = weights.iter().sum();
+        let mut u = self.rng.f32() * total;
+        for (j, &w) in weights.iter().enumerate() {
+            if u < w {
+                return idx[j] as u32;
+            }
+            u -= w;
+        }
+        idx[k - 1] as u32
+    }
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_picks_argmax() {
+        let mut s = Sampler::new(1);
+        let mut logits = vec![0.0f32; VOCAB_SIZE];
+        logits[42] = 5.0;
+        let p = SamplingParams::default();
+        assert_eq!(s.sample(&logits, &p), 42);
+    }
+
+    #[test]
+    fn padded_vocab_rows_never_sampled() {
+        let mut s = Sampler::new(2);
+        let mut logits = vec![0.0f32; 384]; // padded vocab
+        logits[VOCAB_SIZE + 5] = 100.0; // huge logit in the padding region
+        logits[7] = 1.0;
+        let p = SamplingParams::default();
+        assert_eq!(s.sample(&logits, &p), 7);
+        let p_hot = SamplingParams { temperature: 1.0, top_k: 10, ..p };
+        for _ in 0..100 {
+            assert!((s.sample(&logits, &p_hot) as usize) < VOCAB_SIZE);
+        }
+    }
+
+    #[test]
+    fn top_k_restricts_support() {
+        let mut s = Sampler::new(3);
+        let mut logits = vec![0.0f32; VOCAB_SIZE];
+        logits[1] = 10.0;
+        logits[2] = 9.0;
+        logits[3] = 1.0;
+        let p = SamplingParams { temperature: 1.0, top_k: 2, ..Default::default() };
+        for _ in 0..200 {
+            let t = s.sample(&logits, &p);
+            assert!(t == 1 || t == 2, "sampled {t} outside top-2");
+        }
+    }
+
+    #[test]
+    fn temperature_zero_is_deterministic() {
+        let mut s1 = Sampler::new(4);
+        let mut s2 = Sampler::new(999);
+        let logits: Vec<f32> = (0..VOCAB_SIZE).map(|i| (i % 37) as f32).collect();
+        let p = SamplingParams::default();
+        assert_eq!(s1.sample(&logits, &p), s2.sample(&logits, &p));
+    }
+
+    #[test]
+    fn hot_temperature_explores() {
+        let mut s = Sampler::new(5);
+        let logits = vec![0.0f32; VOCAB_SIZE]; // uniform
+        let p = SamplingParams { temperature: 1.0, top_k: 0, ..Default::default() };
+        let samples: std::collections::BTreeSet<u32> =
+            (0..100).map(|_| s.sample(&logits, &p)).collect();
+        assert!(samples.len() > 10, "only {} distinct samples", samples.len());
+    }
+}

@@ -1,0 +1,399 @@
+//! Model parameters: initialization, (de)serialization, GPTQ integration.
+//!
+//! Weight matrices use `[out_features, in_features]` row-major layout —
+//! the layout `Tensor::matmul_nt` consumes and the layout the packing
+//! format shares with the Pallas dequant-matmul kernel.
+
+use super::config::ModelConfig;
+use crate::quant::{gptq_quantize, rtn_quantize, GptqConfig, HessianAccumulator, QuantizedMatrix};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+/// One decoder layer's parameters.
+#[derive(Debug, Clone)]
+pub struct LayerWeights {
+    pub wq: Tensor,     // [d_model, d_model]
+    pub wk: Tensor,     // [kv_dim, d_model]
+    pub wv: Tensor,     // [kv_dim, d_model]
+    pub wo: Tensor,     // [d_model, d_model]
+    pub w_gate: Tensor, // [d_ff, d_model]
+    pub w_up: Tensor,   // [d_ff, d_model]
+    pub w_down: Tensor, // [d_model, d_ff]
+    pub rms_attn: Vec<f32>,
+    pub rms_mlp: Vec<f32>,
+}
+
+/// Full model parameters.
+#[derive(Debug, Clone)]
+pub struct ModelWeights {
+    pub config: ModelConfig,
+    pub embed: Tensor, // [vocab, d_model]
+    pub layers: Vec<LayerWeights>,
+    pub final_norm: Vec<f32>,
+    pub lm_head: Tensor, // [vocab, d_model]
+}
+
+impl ModelWeights {
+    /// Deterministic scaled-normal initialization (std ∝ 1/√d_in, the
+    /// usual fan-in scaling, so activations stay O(1) at any size).
+    pub fn init(config: &ModelConfig, seed: u64) -> ModelWeights {
+        let mut rng = Rng::new(seed);
+        let d = config.d_model;
+        let kv = config.kv_dim();
+        let ff = config.d_ff;
+        let mut mat = |rows: usize, cols: usize| -> Tensor {
+            let std = 1.0 / (cols as f32).sqrt();
+            Tensor::from_vec(&[rows, cols], rng.normal_vec(rows * cols, std))
+        };
+        let embed = mat(config.vocab, d);
+        let layers = (0..config.n_layers)
+            .map(|_| LayerWeights {
+                wq: mat(d, d),
+                wk: mat(kv, d),
+                wv: mat(kv, d),
+                wo: mat(d, d),
+                w_gate: mat(ff, d),
+                w_up: mat(ff, d),
+                w_down: mat(d, ff),
+                rms_attn: vec![1.0; d],
+                rms_mlp: vec![1.0; d],
+            })
+            .collect();
+        let final_norm = vec![1.0; d];
+        let lm_head = mat(config.vocab, d);
+        ModelWeights { config: *config, embed, layers, final_norm, lm_head }
+    }
+
+    /// Iterate every weight matrix as (name, tensor) — serialization and
+    /// the XLA-backend argument order both use this canonical sequence.
+    pub fn matrices(&self) -> Vec<(String, &Tensor)> {
+        let mut out = vec![("embed".to_string(), &self.embed)];
+        for (i, l) in self.layers.iter().enumerate() {
+            for (n, t) in [
+                ("wq", &l.wq),
+                ("wk", &l.wk),
+                ("wv", &l.wv),
+                ("wo", &l.wo),
+                ("w_gate", &l.w_gate),
+                ("w_up", &l.w_up),
+                ("w_down", &l.w_down),
+            ] {
+                out.push((format!("layer{i}.{n}"), t));
+            }
+        }
+        out.push(("lm_head".to_string(), &self.lm_head));
+        out
+    }
+
+    /// Flat parameter list in the **AOT argument order** shared with
+    /// `python/compile/model.py`: `embed`, then per layer `[wq, wk, wv,
+    /// wo, w_gate, w_up, w_down, rms_attn, rms_mlp]`, then `final_norm`,
+    /// then `lm_head`. The XLA backend uploads buffers in exactly this
+    /// order; changing it is an artifact-format break.
+    pub fn flat_params(&self) -> Vec<(String, Vec<usize>, &[f32])> {
+        let d = self.config.d_model;
+        let mut out: Vec<(String, Vec<usize>, &[f32])> =
+            vec![("embed".into(), self.embed.shape().to_vec(), self.embed.data())];
+        for (i, l) in self.layers.iter().enumerate() {
+            for (n, t) in [
+                ("wq", &l.wq),
+                ("wk", &l.wk),
+                ("wv", &l.wv),
+                ("wo", &l.wo),
+                ("w_gate", &l.w_gate),
+                ("w_up", &l.w_up),
+                ("w_down", &l.w_down),
+            ] {
+                out.push((format!("layer{i}.{n}"), t.shape().to_vec(), t.data()));
+            }
+            out.push((format!("layer{i}.rms_attn"), vec![d], l.rms_attn.as_slice()));
+            out.push((format!("layer{i}.rms_mlp"), vec![d], l.rms_mlp.as_slice()));
+        }
+        out.push(("final_norm".into(), vec![d], self.final_norm.as_slice()));
+        out.push(("lm_head".into(), self.lm_head.shape().to_vec(), self.lm_head.data()));
+        out
+    }
+
+    /// Total storage bytes at f32.
+    pub fn f32_bytes(&self) -> usize {
+        self.matrices().iter().map(|(_, t)| t.len() * 4).sum::<usize>()
+            + (self.layers.len() * 2 + 1) * self.config.d_model * 4
+    }
+
+    // ------------------------------------------------------------------
+    // Binary serialization: "OGPTQW01" magic, config block, then tensors
+    // in `matrices()` order, then the norm vectors — all f32 LE.
+    // ------------------------------------------------------------------
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut f = std::io::BufWriter::new(
+            std::fs::File::create(path).with_context(|| format!("create {path:?}"))?,
+        );
+        f.write_all(b"OGPTQW01")?;
+        let c = &self.config;
+        for v in [
+            c.vocab, c.d_model, c.n_layers, c.n_heads, c.n_kv_heads, c.d_ff, c.max_seq,
+            c.alibi as usize,
+        ] {
+            f.write_all(&(v as u32).to_le_bytes())?;
+        }
+        f.write_all(&c.rms_eps.to_le_bytes())?;
+        let write_f32s = |f: &mut dyn Write, xs: &[f32]| -> Result<()> {
+            for v in xs {
+                f.write_all(&v.to_le_bytes())?;
+            }
+            Ok(())
+        };
+        for (_, t) in self.matrices() {
+            write_f32s(&mut f, t.data())?;
+        }
+        for l in &self.layers {
+            write_f32s(&mut f, &l.rms_attn)?;
+            write_f32s(&mut f, &l.rms_mlp)?;
+        }
+        write_f32s(&mut f, &self.final_norm)?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<ModelWeights> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("open {path:?}"))?,
+        );
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != b"OGPTQW01" {
+            bail!("bad weights magic: {magic:?}");
+        }
+        let read_u32 = |f: &mut dyn Read| -> Result<usize> {
+            let mut b = [0u8; 4];
+            f.read_exact(&mut b)?;
+            Ok(u32::from_le_bytes(b) as usize)
+        };
+        let vocab = read_u32(&mut f)?;
+        let d_model = read_u32(&mut f)?;
+        let n_layers = read_u32(&mut f)?;
+        let n_heads = read_u32(&mut f)?;
+        let n_kv_heads = read_u32(&mut f)?;
+        let d_ff = read_u32(&mut f)?;
+        let max_seq = read_u32(&mut f)?;
+        let alibi = read_u32(&mut f)? != 0;
+        let mut eps_b = [0u8; 4];
+        f.read_exact(&mut eps_b)?;
+        let config = ModelConfig {
+            vocab,
+            d_model,
+            n_layers,
+            n_heads,
+            n_kv_heads,
+            d_ff,
+            max_seq,
+            alibi,
+            rms_eps: f32::from_le_bytes(eps_b),
+        };
+        let read_f32s = |f: &mut dyn Read, n: usize| -> Result<Vec<f32>> {
+            let mut bytes = vec![0u8; n * 4];
+            f.read_exact(&mut bytes)?;
+            Ok(bytes.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+        };
+        let kv = config.kv_dim();
+        let read_mat = |f: &mut dyn Read, rows: usize, cols: usize| -> Result<Tensor> {
+            Ok(Tensor::from_vec(&[rows, cols], read_f32s(f, rows * cols)?))
+        };
+        let embed = read_mat(&mut f, vocab, d_model)?;
+        let mut layers = Vec::with_capacity(n_layers);
+        for _ in 0..n_layers {
+            layers.push(LayerWeights {
+                wq: read_mat(&mut f, d_model, d_model)?,
+                wk: read_mat(&mut f, kv, d_model)?,
+                wv: read_mat(&mut f, kv, d_model)?,
+                wo: read_mat(&mut f, d_model, d_model)?,
+                w_gate: read_mat(&mut f, d_ff, d_model)?,
+                w_up: read_mat(&mut f, d_ff, d_model)?,
+                w_down: read_mat(&mut f, d_model, d_ff)?,
+                rms_attn: vec![1.0; d_model], // filled below
+                rms_mlp: vec![1.0; d_model],
+            });
+        }
+        let lm_head = read_mat(&mut f, vocab, d_model)?;
+        for l in &mut layers {
+            l.rms_attn = read_f32s(&mut f, d_model)?;
+            l.rms_mlp = read_f32s(&mut f, d_model)?;
+        }
+        let final_norm = read_f32s(&mut f, d_model)?;
+        Ok(ModelWeights { config, embed, layers, final_norm, lm_head })
+    }
+}
+
+/// Which matrices were quantized and how (report surface).
+#[derive(Debug, Clone)]
+pub struct QuantReport {
+    pub bits: u32,
+    pub group_size: usize,
+    /// (name, relative layer-weight error) per quantized matrix.
+    pub per_matrix_error: Vec<(String, f64)>,
+    pub f32_bytes: usize,
+    pub quant_bytes: usize,
+}
+
+impl QuantReport {
+    pub fn compression_ratio(&self) -> f64 {
+        self.f32_bytes as f64 / self.quant_bytes as f64
+    }
+
+    pub fn mean_error(&self) -> f64 {
+        if self.per_matrix_error.is_empty() {
+            return 0.0;
+        }
+        self.per_matrix_error.iter().map(|(_, e)| e).sum::<f64>()
+            / self.per_matrix_error.len() as f64
+    }
+}
+
+/// Quantization method selector for [`quantize_weights`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum QuantMethod {
+    /// Full GPTQ with per-layer Hessians from calibration activations.
+    Gptq,
+    /// Round-to-nearest baseline (no calibration needed).
+    Rtn,
+}
+
+/// Quantize every projection matrix of `weights` in place (weights are
+/// replaced by their dequantized reconstruction — weight-only quantization
+/// with f32 compute, the W4A16 pattern) and report the damage.
+///
+/// `calib[layer]` are calibration activation rows (`[n, d_model]` for
+/// attention/gate/up; the MLP-down Hessian uses hidden activations the
+/// caller captured, `calib_ff[layer]`: `[n, d_ff]`). For `Rtn` the
+/// calibration slices are ignored.
+pub fn quantize_weights(
+    weights: &mut ModelWeights,
+    method: QuantMethod,
+    bits: u32,
+    group_size: usize,
+    calib_attn: &[Vec<f32>],
+    calib_mlp: &[Vec<f32>],
+    calib_ff: &[Vec<f32>],
+) -> QuantReport {
+    let d = weights.config.d_model;
+    let ff = weights.config.d_ff;
+    let f32_bytes = weights.f32_bytes();
+    let mut per_matrix_error = Vec::new();
+    let mut quant_bytes = 0usize;
+
+    let mut do_matrix = |name: String, t: &mut Tensor, acts: Option<&[f32]>, in_dim: usize| {
+        let rows = t.shape()[0];
+        let cols = t.shape()[1];
+        debug_assert_eq!(cols, in_dim);
+        let qm: QuantizedMatrix = match (method, acts) {
+            (QuantMethod::Gptq, Some(x)) if !x.is_empty() => {
+                let n = x.len() / in_dim;
+                let mut acc = HessianAccumulator::new(in_dim);
+                acc.add_batch(x, n);
+                let h = acc.finalize();
+                let cfg = GptqConfig { bits, group_size, damp: 0.01, act_order: false };
+                gptq_quantize(t.data(), rows, cols, &h, &cfg)
+            }
+            _ => rtn_quantize(t.data(), rows, cols, bits, group_size),
+        };
+        quant_bytes += qm.storage_bytes();
+        let deq = qm.dequantize();
+        per_matrix_error.push((name, crate::quant::relative_error(t.data(), &deq)));
+        *t = Tensor::from_vec(&[rows, cols], deq);
+    };
+
+    for (i, l) in weights.layers.iter_mut().enumerate() {
+        let attn_x = calib_attn.get(i).map(|v| v.as_slice());
+        let mlp_x = calib_mlp.get(i).map(|v| v.as_slice());
+        let ff_x = calib_ff.get(i).map(|v| v.as_slice());
+        do_matrix(format!("layer{i}.wq"), &mut l.wq, attn_x, d);
+        do_matrix(format!("layer{i}.wk"), &mut l.wk, attn_x, d);
+        do_matrix(format!("layer{i}.wv"), &mut l.wv, attn_x, d);
+        do_matrix(format!("layer{i}.wo"), &mut l.wo, None, d);
+        do_matrix(format!("layer{i}.w_gate"), &mut l.w_gate, mlp_x, d);
+        do_matrix(format!("layer{i}.w_up"), &mut l.w_up, mlp_x, d);
+        do_matrix(format!("layer{i}.w_down"), &mut l.w_down, ff_x, ff);
+    }
+    // Embedding / lm_head stay f32 (standard GPTQ practice).
+    quant_bytes += weights.embed.len() * 4 + weights.lm_head.len() * 4;
+
+    QuantReport { bits, group_size, per_matrix_error, f32_bytes, quant_bytes }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_is_deterministic() {
+        let c = ModelConfig::tiny();
+        let a = ModelWeights::init(&c, 1);
+        let b = ModelWeights::init(&c, 1);
+        assert_eq!(a.embed.data(), b.embed.data());
+        assert_eq!(a.layers[0].wq.data(), b.layers[0].wq.data());
+        let c2 = ModelWeights::init(&c, 2);
+        assert_ne!(a.embed.data(), c2.embed.data());
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let c = ModelConfig::tiny();
+        let w = ModelWeights::init(&c, 3);
+        let dir = std::env::temp_dir().join("opt_gptq_test_weights");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("tiny.bin");
+        w.save(&path).unwrap();
+        let r = ModelWeights::load(&path).unwrap();
+        assert_eq!(r.config, c);
+        assert_eq!(r.embed.data(), w.embed.data());
+        assert_eq!(r.layers[1].w_down.data(), w.layers[1].w_down.data());
+        assert_eq!(r.final_norm, w.final_norm);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn load_rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("opt_gptq_test_weights");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.bin");
+        std::fs::write(&path, b"NOTMAGIC").unwrap();
+        assert!(ModelWeights::load(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rtn_quantize_weights_reports_compression() {
+        let c = ModelConfig::tiny();
+        let mut w = ModelWeights::init(&c, 4);
+        let orig = w.layers[0].wq.data().to_vec();
+        let report = quantize_weights(&mut w, QuantMethod::Rtn, 4, 32, &[], &[], &[]);
+        // tiny's f32 embed+lm_head dominate, so the whole-model ratio is
+        // modest; the quantized projection payload itself must shrink ~6×.
+        assert!(report.compression_ratio() > 1.5, "ratio={}", report.compression_ratio());
+        let untouched = (w.embed.len() + w.lm_head.len()) * 4;
+        let proj_f32 = report.f32_bytes - untouched - (w.layers.len() * 2 + 1) * w.config.d_model * 4;
+        let proj_quant = report.quant_bytes - untouched;
+        assert!(
+            (proj_f32 as f64) / (proj_quant as f64) > 5.0,
+            "projection payload ratio {}",
+            proj_f32 as f64 / proj_quant as f64
+        );
+        assert!(report.mean_error() > 0.0 && report.mean_error() < 0.2);
+        assert_ne!(w.layers[0].wq.data(), orig.as_slice(), "weights replaced by dequant");
+    }
+
+    #[test]
+    fn canonical_matrix_order() {
+        let c = ModelConfig::tiny();
+        let w = ModelWeights::init(&c, 5);
+        let names: Vec<String> = w.matrices().iter().map(|(n, _)| n.clone()).collect();
+        assert_eq!(names[0], "embed");
+        assert_eq!(names[1], "layer0.wq");
+        assert_eq!(names[7], "layer0.w_down");
+        assert_eq!(names.last().unwrap(), "lm_head");
+        assert_eq!(names.len(), 2 + 7 * c.n_layers);
+    }
+}

@@ -1,0 +1,63 @@
+//! Quantization error metrics used by tests and the bits ablation.
+
+/// Mean squared error between two equally-shaped buffers.
+pub fn layer_mse(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    if a.is_empty() {
+        return 0.0;
+    }
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| {
+            let d = (*x - *y) as f64;
+            d * d
+        })
+        .sum::<f64>()
+        / a.len() as f64
+}
+
+/// Relative Frobenius error `‖a−b‖ / ‖a‖` (0 when `a` is all-zero and b==a).
+pub fn relative_error(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for (x, y) in a.iter().zip(b) {
+        let d = (*x - *y) as f64;
+        num += d * d;
+        den += (*x as f64) * (*x as f64);
+    }
+    if den == 0.0 {
+        return if num == 0.0 { 0.0 } else { f64::INFINITY };
+    }
+    (num / den).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mse_zero_for_identical() {
+        assert_eq!(layer_mse(&[1.0, 2.0], &[1.0, 2.0]), 0.0);
+    }
+
+    #[test]
+    fn mse_known_value() {
+        assert!((layer_mse(&[0.0, 0.0], &[1.0, 1.0]) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn relative_error_scale_invariant() {
+        let a = [2.0, 4.0];
+        let b = [2.2, 4.4];
+        let a10: Vec<f32> = a.iter().map(|x| x * 10.0).collect();
+        let b10: Vec<f32> = b.iter().map(|x| x * 10.0).collect();
+        assert!((relative_error(&a, &b) - relative_error(&a10, &b10)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn relative_error_degenerate() {
+        assert_eq!(relative_error(&[0.0], &[0.0]), 0.0);
+        assert_eq!(relative_error(&[0.0], &[1.0]), f64::INFINITY);
+    }
+}

@@ -1,0 +1,178 @@
+//! Post-training weight quantization — the "GPTQ" in Opt-GPTQ.
+//!
+//! The serving engine holds weight-only quantized matrices (int3/int4/int8,
+//! group-wise scales) produced by either:
+//!
+//! * [`gptq`] — the full GPTQ algorithm: accumulate a Hessian from
+//!   calibration activations, invert it with a damped Cholesky, then
+//!   quantize column-by-column while propagating the quantization error
+//!   into the not-yet-quantized columns;
+//! * [`rtn`] — round-to-nearest, the standard baseline GPTQ is measured
+//!   against.
+//!
+//! [`packing`] defines the nibble-packed storage format shared with the
+//! Pallas dequant-matmul kernel (`python/compile/kernels/gptq_matmul.py`).
+
+pub mod error;
+pub mod gptq;
+pub mod packing;
+pub mod rtn;
+
+pub use error::{layer_mse, relative_error};
+pub use gptq::{gptq_quantize, GptqConfig, HessianAccumulator};
+pub use packing::{pack_rows, unpack_rows, PackedMatrix};
+pub use rtn::rtn_quantize;
+
+/// Quantization grid parameters for one group of weights.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QuantParams {
+    /// Grid step.
+    pub scale: f32,
+    /// Integer zero-point (asymmetric grids; 2^(bits-1) for symmetric).
+    pub zero: i32,
+    /// Bit width (2..=8).
+    pub bits: u32,
+}
+
+impl QuantParams {
+    /// Max representable integer level.
+    #[inline]
+    pub fn max_q(&self) -> i32 {
+        (1 << self.bits) - 1
+    }
+
+    /// Quantize one value to an integer level on the grid.
+    #[inline]
+    pub fn quantize(&self, x: f32) -> i32 {
+        let q = (x / self.scale).round() as i32 + self.zero;
+        q.clamp(0, self.max_q())
+    }
+
+    /// Dequantize an integer level.
+    #[inline]
+    pub fn dequantize(&self, q: i32) -> f32 {
+        (q - self.zero) as f32 * self.scale
+    }
+
+    /// Round-trip a value through the grid.
+    #[inline]
+    pub fn roundtrip(&self, x: f32) -> f32 {
+        self.dequantize(self.quantize(x))
+    }
+
+    /// Fit an asymmetric min/max grid to a slice of weights.
+    pub fn fit(xs: &[f32], bits: u32) -> QuantParams {
+        assert!((2..=8).contains(&bits));
+        let mut lo = f32::INFINITY;
+        let mut hi = f32::NEG_INFINITY;
+        for &x in xs {
+            lo = lo.min(x);
+            hi = hi.max(x);
+        }
+        // Grid must contain zero so zero weights stay exact.
+        lo = lo.min(0.0);
+        hi = hi.max(0.0);
+        let max_q = ((1u32 << bits) - 1) as f32;
+        let mut scale = (hi - lo) / max_q;
+        if scale <= 0.0 || !scale.is_finite() {
+            scale = 1.0;
+        }
+        let zero = (-lo / scale).round() as i32;
+        QuantParams { scale, zero: zero.clamp(0, max_q as i32), bits }
+    }
+}
+
+/// A group-wise quantized matrix in `[out_features, in_features]` layout
+/// (row-major), with one `QuantParams` per (row, group) pair.
+#[derive(Debug, Clone)]
+pub struct QuantizedMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    /// Columns covered by one scale/zero pair; `cols` if ungrouped.
+    pub group_size: usize,
+    pub bits: u32,
+    /// Integer levels, row-major `[rows, cols]`.
+    pub q: Vec<u8>,
+    /// `[rows, ceil(cols/group_size)]` quantization grids.
+    pub params: Vec<QuantParams>,
+}
+
+impl QuantizedMatrix {
+    pub fn groups_per_row(&self) -> usize {
+        self.cols.div_ceil(self.group_size)
+    }
+
+    #[inline]
+    pub fn param(&self, row: usize, col: usize) -> &QuantParams {
+        &self.params[row * self.groups_per_row() + col / self.group_size]
+    }
+
+    /// Dequantize the whole matrix to f32 (row-major `[rows, cols]`).
+    pub fn dequantize(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.rows * self.cols];
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out[r * self.cols + c] =
+                    self.param(r, c).dequantize(self.q[r * self.cols + c] as i32);
+            }
+        }
+        out
+    }
+
+    /// Storage bytes: packed integer payload + scales/zeros.
+    pub fn storage_bytes(&self) -> usize {
+        let payload = (self.rows * self.cols * self.bits as usize).div_ceil(8);
+        let params = self.rows * self.groups_per_row() * (4 + 4); // f32 scale + i32 zero
+        payload + params
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fit_contains_zero_and_extremes() {
+        let p = QuantParams::fit(&[-1.0, 0.5, 2.0], 4);
+        assert_eq!(p.roundtrip(0.0), 0.0);
+        assert!((p.roundtrip(2.0) - 2.0).abs() <= p.scale / 2.0 + 1e-6);
+        assert!((p.roundtrip(-1.0) + 1.0).abs() <= p.scale / 2.0 + 1e-6);
+    }
+
+    #[test]
+    fn quantize_clamps_outliers() {
+        let p = QuantParams::fit(&[-1.0, 1.0], 4);
+        assert_eq!(p.quantize(100.0), p.max_q());
+        assert_eq!(p.quantize(-100.0), 0);
+    }
+
+    #[test]
+    fn fit_degenerate_all_zero() {
+        let p = QuantParams::fit(&[0.0, 0.0], 4);
+        assert!(p.scale.is_finite() && p.scale > 0.0);
+        assert_eq!(p.roundtrip(0.0), 0.0);
+    }
+
+    #[test]
+    fn roundtrip_error_bounded_by_half_step() {
+        let p = QuantParams::fit(&[-2.0, 3.0], 8);
+        for i in 0..100 {
+            let x = -2.0 + 5.0 * i as f32 / 99.0;
+            assert!((p.roundtrip(x) - x).abs() <= p.scale / 2.0 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn storage_bytes_scaling() {
+        let q4 = QuantizedMatrix {
+            rows: 4,
+            cols: 64,
+            group_size: 32,
+            bits: 4,
+            q: vec![0; 256],
+            params: vec![QuantParams { scale: 1.0, zero: 0, bits: 4 }; 8],
+        };
+        // 4 rows × 64 cols × 4 bits / 8 = 128 payload bytes + 8 × 8 param bytes.
+        assert_eq!(q4.storage_bytes(), 128 + 64);
+    }
+}

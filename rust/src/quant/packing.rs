@@ -1,0 +1,171 @@
+//! Packed storage format shared with the Pallas dequant-matmul kernel.
+//!
+//! Integer levels are packed little-endian into `i32` words: for 4-bit,
+//! 8 levels per word with level `k` in bits `[4k, 4k+4)`; for 8-bit,
+//! 4 levels per word. The Python kernel
+//! (`python/compile/kernels/gptq_matmul.py`) unpacks with the same shifts,
+//! so a matrix packed here can be fed directly to the AOT-compiled HLO as
+//! a runtime argument. 3-bit levels are stored in 4-bit fields (simple,
+//! and still demonstrates the bits ablation; the *storage_bytes* metric
+//! reports true 3-bit size).
+
+use super::QuantizedMatrix;
+
+/// A nibble/byte-packed quantized matrix plus its grids, ready for upload.
+#[derive(Debug, Clone)]
+pub struct PackedMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    /// Field width in bits actually used for packing (4 or 8).
+    pub pack_bits: u32,
+    /// Words per row.
+    pub words_per_row: usize,
+    /// `[rows, words_per_row]` packed payload.
+    pub words: Vec<i32>,
+    /// `[rows, groups_per_row]` scales.
+    pub scales: Vec<f32>,
+    /// `[rows, groups_per_row]` zero points.
+    pub zeros: Vec<i32>,
+    pub group_size: usize,
+}
+
+/// Levels packed per i32 word for a field width.
+pub fn levels_per_word(pack_bits: u32) -> usize {
+    (32 / pack_bits) as usize
+}
+
+fn field_bits(bits: u32) -> u32 {
+    if bits <= 4 {
+        4
+    } else {
+        8
+    }
+}
+
+/// Pack a quantized matrix row-wise.
+pub fn pack_rows(m: &QuantizedMatrix) -> PackedMatrix {
+    let pack_bits = field_bits(m.bits);
+    let lpw = levels_per_word(pack_bits);
+    let words_per_row = m.cols.div_ceil(lpw);
+    let mut words = vec![0i32; m.rows * words_per_row];
+    for r in 0..m.rows {
+        for c in 0..m.cols {
+            let q = m.q[r * m.cols + c] as u32;
+            debug_assert!(q < (1 << pack_bits));
+            let w = &mut words[r * words_per_row + c / lpw];
+            *w |= ((q as i64) << ((c % lpw) as u32 * pack_bits)) as i32;
+        }
+    }
+    let groups = m.groups_per_row();
+    let mut scales = Vec::with_capacity(m.rows * groups);
+    let mut zeros = Vec::with_capacity(m.rows * groups);
+    for p in &m.params {
+        scales.push(p.scale);
+        zeros.push(p.zero);
+    }
+    PackedMatrix {
+        rows: m.rows,
+        cols: m.cols,
+        pack_bits,
+        words_per_row,
+        words,
+        scales,
+        zeros,
+        group_size: m.group_size,
+    }
+}
+
+/// Unpack back to integer levels (`[rows, cols]`) — test/oracle path.
+pub fn unpack_rows(p: &PackedMatrix) -> Vec<u8> {
+    let lpw = levels_per_word(p.pack_bits);
+    let mask = (1u32 << p.pack_bits) - 1;
+    let mut q = vec![0u8; p.rows * p.cols];
+    for r in 0..p.rows {
+        for c in 0..p.cols {
+            let w = p.words[r * p.words_per_row + c / lpw] as u32;
+            q[r * p.cols + c] = ((w >> ((c % lpw) as u32 * p.pack_bits)) & mask) as u8;
+        }
+    }
+    q
+}
+
+impl PackedMatrix {
+    /// Dequantize the packed payload (must equal the source matrix's
+    /// `dequantize()` output).
+    pub fn dequantize(&self) -> Vec<f32> {
+        let q = unpack_rows(self);
+        let groups = self.cols.div_ceil(self.group_size);
+        let mut out = vec![0.0f32; self.rows * self.cols];
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                let g = r * groups + c / self.group_size;
+                out[r * self.cols + c] =
+                    (q[r * self.cols + c] as i32 - self.zeros[g]) as f32 * self.scales[g];
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::rtn_quantize;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn pack_unpack_roundtrip_4bit() {
+        let mut rng = Rng::new(1);
+        let w = rng.normal_vec(8 * 20, 1.0);
+        let qm = rtn_quantize(&w, 8, 20, 4, 8);
+        let packed = pack_rows(&qm);
+        assert_eq!(packed.pack_bits, 4);
+        assert_eq!(packed.words_per_row, 3); // ceil(20/8)
+        assert_eq!(unpack_rows(&packed), qm.q);
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip_8bit() {
+        let mut rng = Rng::new(2);
+        let w = rng.normal_vec(4 * 9, 1.0);
+        let qm = rtn_quantize(&w, 4, 9, 8, 4);
+        let packed = pack_rows(&qm);
+        assert_eq!(packed.pack_bits, 8);
+        assert_eq!(packed.words_per_row, 3); // ceil(9/4)
+        assert_eq!(unpack_rows(&packed), qm.q);
+    }
+
+    #[test]
+    fn three_bit_packs_in_nibbles() {
+        let mut rng = Rng::new(3);
+        let w = rng.normal_vec(2 * 16, 1.0);
+        let qm = rtn_quantize(&w, 2, 16, 3, 16);
+        let packed = pack_rows(&qm);
+        assert_eq!(packed.pack_bits, 4);
+        assert_eq!(unpack_rows(&packed), qm.q);
+    }
+
+    #[test]
+    fn packed_dequantize_matches_matrix() {
+        let mut rng = Rng::new(4);
+        let w = rng.normal_vec(6 * 33, 1.0);
+        let qm = rtn_quantize(&w, 6, 33, 4, 16);
+        let packed = pack_rows(&qm);
+        let a = qm.dequantize();
+        let b = packed.dequantize();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x, y);
+        }
+    }
+
+    #[test]
+    fn high_nibble_values_survive_sign_bit() {
+        // Level 15 in the top nibble of a word exercises the i32 sign bit.
+        let mut qm = rtn_quantize(&vec![1.0; 8], 1, 8, 4, 8);
+        qm.q = vec![15; 8];
+        let packed = pack_rows(&qm);
+        assert_eq!(unpack_rows(&packed), vec![15; 8]);
+        assert!(packed.words[0] < 0, "top nibble set → negative i32");
+    }
+}

@@ -1,0 +1,82 @@
+//! Round-to-nearest (RTN) quantization — the baseline GPTQ is compared to.
+
+use super::{QuantParams, QuantizedMatrix};
+
+/// Quantize `w` (`[rows, cols]`, row-major, `[out_features, in_features]`)
+/// by independent round-to-nearest within each (row, group).
+pub fn rtn_quantize(w: &[f32], rows: usize, cols: usize, bits: u32, group_size: usize) -> QuantizedMatrix {
+    assert_eq!(w.len(), rows * cols);
+    assert!(group_size > 0);
+    let groups = cols.div_ceil(group_size);
+    let mut q = vec![0u8; rows * cols];
+    let mut params = Vec::with_capacity(rows * groups);
+    for r in 0..rows {
+        let row = &w[r * cols..(r + 1) * cols];
+        for g in 0..groups {
+            let lo = g * group_size;
+            let hi = (lo + group_size).min(cols);
+            let p = QuantParams::fit(&row[lo..hi], bits);
+            for c in lo..hi {
+                q[r * cols + c] = p.quantize(row[c]) as u8;
+            }
+            params.push(p);
+        }
+    }
+    QuantizedMatrix { rows, cols, group_size, bits, q, params }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn int8_roundtrip_is_tight() {
+        let mut rng = Rng::new(1);
+        let w = rng.normal_vec(16 * 32, 1.0);
+        let qm = rtn_quantize(&w, 16, 32, 8, 32);
+        let back = qm.dequantize();
+        for (a, b) in w.iter().zip(&back) {
+            assert!((a - b).abs() < 0.05, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn lower_bits_higher_error() {
+        let mut rng = Rng::new(2);
+        let w = rng.normal_vec(8 * 64, 1.0);
+        let err = |bits| {
+            let qm = rtn_quantize(&w, 8, 64, bits, 64);
+            super::super::layer_mse(&w, &qm.dequantize())
+        };
+        let (e8, e4, e3) = (err(8), err(4), err(3));
+        assert!(e8 < e4 && e4 < e3, "e8={e8} e4={e4} e3={e3}");
+    }
+
+    #[test]
+    fn grouping_reduces_error_on_heterogeneous_rows() {
+        // First half of each row is tiny, second half is large: per-group
+        // scales should beat one whole-row scale.
+        let cols = 64;
+        let mut rng = Rng::new(3);
+        let mut w = Vec::new();
+        for _ in 0..8 {
+            w.extend(rng.normal_vec(cols / 2, 0.01));
+            w.extend(rng.normal_vec(cols / 2, 1.0));
+        }
+        let grouped = rtn_quantize(&w, 8, cols, 4, 32);
+        let whole = rtn_quantize(&w, 8, cols, 4, cols);
+        let eg = super::super::layer_mse(&w, &grouped.dequantize());
+        let ew = super::super::layer_mse(&w, &whole.dequantize());
+        assert!(eg < ew, "grouped {eg} vs whole-row {ew}");
+    }
+
+    #[test]
+    fn ragged_final_group() {
+        let mut rng = Rng::new(4);
+        let w = rng.normal_vec(4 * 10, 1.0);
+        let qm = rtn_quantize(&w, 4, 10, 4, 4); // 3 groups: 4+4+2
+        assert_eq!(qm.groups_per_row(), 3);
+        assert_eq!(qm.dequantize().len(), 40);
+    }
+}

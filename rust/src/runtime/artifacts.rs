@@ -1,0 +1,164 @@
+//! AOT artifact manifest.
+//!
+//! `python/compile/aot.py` lowers the JAX model for a grid of shape
+//! buckets and writes `artifacts/manifest.json` describing them; this
+//! module parses the manifest and maps runtime shapes onto buckets.
+
+use crate::model::ModelConfig;
+use crate::util::json;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One lowered executable.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BucketSpec {
+    /// "prefill" or "decode".
+    pub kind: String,
+    /// Batch bucket (decode) — 1 for prefill entries.
+    pub batch: usize,
+    /// Sequence bucket (prefill) — 0 for decode entries.
+    pub seq: usize,
+    /// HLO text path relative to the manifest.
+    pub path: PathBuf,
+}
+
+/// Parsed `manifest.json`.
+#[derive(Debug, Clone)]
+pub struct ArtifactManifest {
+    pub model: String,
+    pub config: ModelConfig,
+    /// Paged-cache geometry baked into the decode HLO.
+    pub num_blocks: usize,
+    pub block_size: usize,
+    /// Max block-table length per sequence baked into the decode HLO.
+    pub max_blocks_per_seq: usize,
+    pub entries: Vec<BucketSpec>,
+    /// Directory containing the artifacts.
+    pub dir: PathBuf,
+}
+
+impl ArtifactManifest {
+    /// Load and validate `dir/manifest.json`.
+    pub fn load(dir: &Path) -> Result<ArtifactManifest> {
+        let path = dir.join("manifest.json");
+        let text =
+            std::fs::read_to_string(&path).with_context(|| format!("read {path:?}"))?;
+        let v = json::parse(&text).with_context(|| format!("parse {path:?}"))?;
+        let cfg = v.get("config").context("manifest missing 'config'")?;
+        let req = |k: &str| -> Result<usize> {
+            cfg.get_usize(k).with_context(|| format!("config missing '{k}'"))
+        };
+        let config = ModelConfig {
+            vocab: req("vocab")?,
+            d_model: req("d_model")?,
+            n_layers: req("n_layers")?,
+            n_heads: req("n_heads")?,
+            n_kv_heads: req("n_kv_heads")?,
+            d_ff: req("d_ff")?,
+            max_seq: req("max_seq")?,
+            alibi: cfg.get("alibi").and_then(|b| b.as_bool()).context("config missing 'alibi'")?,
+            rms_eps: cfg.get_f64("rms_eps").context("config missing 'rms_eps'")? as f32,
+        };
+        let mut entries = Vec::new();
+        for e in v.get("entries").and_then(|e| e.as_arr()).context("manifest missing 'entries'")? {
+            entries.push(BucketSpec {
+                kind: e.get_str("kind").context("entry missing 'kind'")?.to_string(),
+                batch: e.get_usize("batch").unwrap_or(1),
+                seq: e.get_usize("seq").unwrap_or(0),
+                path: dir.join(e.get_str("path").context("entry missing 'path'")?),
+            });
+        }
+        if entries.is_empty() {
+            bail!("manifest has no entries");
+        }
+        Ok(ArtifactManifest {
+            model: v.get_str("model").unwrap_or("unknown").to_string(),
+            config,
+            num_blocks: v.get_usize("num_blocks").context("manifest missing 'num_blocks'")?,
+            block_size: v.get_usize("block_size").context("manifest missing 'block_size'")?,
+            max_blocks_per_seq: v
+                .get_usize("max_blocks_per_seq")
+                .context("manifest missing 'max_blocks_per_seq'")?,
+            entries,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    /// Smallest prefill bucket with `seq >= n`.
+    pub fn prefill_bucket(&self, n: usize) -> Option<&BucketSpec> {
+        self.entries
+            .iter()
+            .filter(|e| e.kind == "prefill" && e.seq >= n)
+            .min_by_key(|e| e.seq)
+    }
+
+    /// Smallest decode bucket with `batch >= n`.
+    pub fn decode_bucket(&self, n: usize) -> Option<&BucketSpec> {
+        self.entries
+            .iter()
+            .filter(|e| e.kind == "decode" && e.batch >= n)
+            .min_by_key(|e| e.batch)
+    }
+
+    /// Largest decode batch available (the scheduler's cap under XLA).
+    pub fn max_decode_batch(&self) -> usize {
+        self.entries.iter().filter(|e| e.kind == "decode").map(|e| e.batch).max().unwrap_or(0)
+    }
+
+    /// Largest prefill bucket (prompt-length cap under XLA).
+    pub fn max_prefill_seq(&self) -> usize {
+        self.entries.iter().filter(|e| e.kind == "prefill").map(|e| e.seq).max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, extra_entry: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        let text = format!(
+            r#"{{
+          "model": "tiny",
+          "config": {{"vocab":384,"d_model":64,"n_layers":2,"n_heads":4,
+                      "n_kv_heads":2,"d_ff":128,"max_seq":256,"alibi":true,
+                      "rms_eps":1e-5}},
+          "num_blocks": 64, "block_size": 16, "max_blocks_per_seq": 16,
+          "entries": [
+            {{"kind":"prefill","batch":1,"seq":16,"path":"prefill_s16.hlo.txt"}},
+            {{"kind":"prefill","batch":1,"seq":64,"path":"prefill_s64.hlo.txt"}},
+            {{"kind":"decode","batch":1,"path":"decode_b1.hlo.txt"}},
+            {{"kind":"decode","batch":4,"path":"decode_b4.hlo.txt"}}{extra_entry}
+          ]
+        }}"#
+        );
+        std::fs::write(dir.join("manifest.json"), text).unwrap();
+    }
+
+    #[test]
+    fn load_and_bucket_selection() {
+        let dir = std::env::temp_dir().join("opt_gptq_manifest_test");
+        write_manifest(&dir, "");
+        let m = ArtifactManifest::load(&dir).unwrap();
+        assert_eq!(m.model, "tiny");
+        assert_eq!(m.config.d_model, 64);
+        assert!(m.config.alibi);
+        assert_eq!(m.prefill_bucket(10).unwrap().seq, 16);
+        assert_eq!(m.prefill_bucket(17).unwrap().seq, 64);
+        assert!(m.prefill_bucket(65).is_none());
+        assert_eq!(m.decode_bucket(1).unwrap().batch, 1);
+        assert_eq!(m.decode_bucket(2).unwrap().batch, 4);
+        assert_eq!(m.max_decode_batch(), 4);
+        assert_eq!(m.max_prefill_seq(), 64);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_fields_error() {
+        let dir = std::env::temp_dir().join("opt_gptq_manifest_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), r#"{"model":"x"}"#).unwrap();
+        assert!(ArtifactManifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

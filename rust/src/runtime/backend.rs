@@ -1,0 +1,130 @@
+//! The `Backend` trait and its native implementation.
+
+use crate::kvcache::{BlockTable, PagedKvCache};
+use crate::model::{ModelConfig, NativeModel};
+
+/// One sequence's slot in a decode batch.
+pub struct DecodeItem<'a> {
+    /// Token produced by the previous step (input to this one).
+    pub token: u32,
+    /// The sequence's block table (one slot of reserved capacity).
+    pub table: &'a mut BlockTable,
+}
+
+/// A model-execution backend the engine can drive.
+///
+/// Contract shared by all implementations:
+/// * `prefill` appends `tokens.len()` slots to `table` (capacity must be
+///   reserved) and returns the last position's logits.
+/// * `decode` appends one slot per item and returns one logits vector per
+///   item, in order.
+pub trait Backend: Send {
+    fn config(&self) -> &ModelConfig;
+
+    fn prefill(&self, tokens: &[u32], cache: &mut PagedKvCache, table: &mut BlockTable)
+        -> Vec<f32>;
+
+    fn decode(&self, items: &mut [DecodeItem<'_>], cache: &mut PagedKvCache) -> Vec<Vec<f32>>;
+
+    /// Human-readable backend name (metrics/logs).
+    fn name(&self) -> &'static str;
+
+    /// Whether `prefill` supports a non-empty table (chunked prefill /
+    /// prefix-cache adoption). The XLA artifacts are lowered for fresh
+    /// sequences (positions start at 0), so only the native backend
+    /// opts in.
+    fn supports_offset_prefill(&self) -> bool {
+        false
+    }
+}
+
+/// Pure-Rust backend executing [`NativeModel`].
+pub struct NativeBackend {
+    model: NativeModel,
+}
+
+impl NativeBackend {
+    pub fn new(model: NativeModel) -> Self {
+        NativeBackend { model }
+    }
+
+    pub fn model(&self) -> &NativeModel {
+        &self.model
+    }
+}
+
+impl Backend for NativeBackend {
+    fn config(&self) -> &ModelConfig {
+        self.model.config()
+    }
+
+    fn prefill(
+        &self,
+        tokens: &[u32],
+        cache: &mut PagedKvCache,
+        table: &mut BlockTable,
+    ) -> Vec<f32> {
+        self.model.prefill(tokens, cache, table)
+    }
+
+    fn decode(&self, items: &mut [DecodeItem<'_>], cache: &mut PagedKvCache) -> Vec<Vec<f32>> {
+        // One joint pass: weights are streamed once per STEP, not once per
+        // sequence (see NativeModel::decode_batch).
+        let tokens: Vec<u32> = items.iter().map(|i| i.token).collect();
+        let mut tables: Vec<&mut BlockTable> =
+            items.iter_mut().map(|i| &mut *i.table).collect();
+        self.model.decode_batch(&tokens, cache, &mut tables)
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn supports_offset_prefill(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::BlockAllocator;
+    use crate::model::{ModelConfig, ModelWeights};
+
+    #[test]
+    fn native_backend_decode_matches_model() {
+        let cfg = ModelConfig::tiny();
+        let model = NativeModel::new(ModelWeights::init(&cfg, 1));
+        let backend = NativeBackend::new(model.clone());
+        let mut cache = PagedKvCache::new(cfg.n_layers, 16, 8, cfg.n_kv_heads, cfg.head_dim());
+        let mut alloc = BlockAllocator::new(16, 8);
+
+        // Two sequences decoding in one batch must match individual calls.
+        let mut t1 = BlockTable::new();
+        let mut t2 = BlockTable::new();
+        t1.reserve(4, &mut alloc);
+        t2.reserve(4, &mut alloc);
+        backend.prefill(&[256, 1, 2], &mut cache, &mut t1);
+        backend.prefill(&[256, 9], &mut cache, &mut t2);
+
+        // Reference: clone state, decode separately.
+        let mut cache_ref = PagedKvCache::new(cfg.n_layers, 16, 8, cfg.n_kv_heads, cfg.head_dim());
+        let mut alloc_ref = BlockAllocator::new(16, 8);
+        let mut r1 = BlockTable::new();
+        let mut r2 = BlockTable::new();
+        r1.reserve(4, &mut alloc_ref);
+        r2.reserve(4, &mut alloc_ref);
+        model.prefill(&[256, 1, 2], &mut cache_ref, &mut r1);
+        model.prefill(&[256, 9], &mut cache_ref, &mut r2);
+        let ref1 = model.decode_step(3, &mut cache_ref, &mut r1);
+        let ref2 = model.decode_step(10, &mut cache_ref, &mut r2);
+
+        let mut items = [
+            DecodeItem { token: 3, table: &mut t1 },
+            DecodeItem { token: 10, table: &mut t2 },
+        ];
+        let out = backend.decode(&mut items, &mut cache);
+        assert_eq!(out[0], ref1);
+        assert_eq!(out[1], ref2);
+    }
+}

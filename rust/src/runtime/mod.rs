@@ -1,0 +1,18 @@
+//! Execution backends.
+//!
+//! The coordinator is generic over a [`Backend`]: the same scheduler,
+//! paged cache and router drive either
+//!
+//! * [`NativeBackend`] — the in-crate f32 forward pass (fast on CPU,
+//!   dependency-free, deterministic; benches and tests default to it), or
+//! * [`XlaBackend`] — AOT-compiled HLO (from `python/compile/aot.py`)
+//!   executed through the PJRT C API, proving the three-layer
+//!   JAX/Pallas → HLO → Rust path end-to-end.
+
+pub mod artifacts;
+pub mod backend;
+pub mod xla_backend;
+
+pub use artifacts::{ArtifactManifest, BucketSpec};
+pub use backend::{Backend, DecodeItem, NativeBackend};
+pub use xla_backend::XlaBackend;

@@ -1,0 +1,265 @@
+//! PJRT-backed execution of AOT-lowered HLO artifacts.
+//!
+//! The three-layer path: Pallas kernels (L1) lower inside the JAX model
+//! (L2) to HLO text via `python/compile/aot.py`; this backend loads that
+//! text, compiles it on the PJRT CPU client, uploads the weights **once**
+//! as device buffers, and executes prefill/decode from the Rust request
+//! loop. Python never runs here.
+//!
+//! ## HLO calling conventions (shared with `python/compile/model.py`)
+//!
+//! Prefill (`prefill_s{S}.hlo.txt`), batch 1:
+//! * inputs: `flat_params…`, `tokens: i32[S]`
+//! * outputs (tuple): `logits: f32[S, vocab]`, `ks: f32[L, S, kv_dim]`,
+//!   `vs: f32[L, S, kv_dim]`
+//!
+//! Decode (`decode_b{B}.hlo.txt`):
+//! * inputs: `flat_params…`, `tokens: i32[B]`, `ctx_lens: i32[B]`,
+//!   `block_tables: i32[B, max_blocks_per_seq]`,
+//!   `k_cache: f32[L, num_blocks, block_size, kv_heads, head_dim]`,
+//!   `v_cache: …`
+//! * outputs (tuple): `logits: f32[B, vocab]`, `k_new: f32[L, B, kv_dim]`,
+//!   `v_new: f32[L, B, kv_dim]`
+//!
+//! The decode HLO computes paged GQA attention (the Pallas kernel) over
+//! the cache contents (`ctx_lens` tokens per sequence) *plus* the current
+//! token's in-graph K/V; Rust writes `k_new`/`v_new` into the paged pool
+//! afterwards, keeping cache ownership on the Rust side.
+
+use super::artifacts::ArtifactManifest;
+use super::backend::{Backend, DecodeItem};
+use crate::kvcache::{BlockTable, PagedKvCache};
+use crate::model::{ModelConfig, ModelWeights};
+use crate::tokenizer::PAD;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// A compiled bucket executable.
+struct CompiledBucket {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// PJRT CPU backend over AOT artifacts.
+pub struct XlaBackend {
+    client: xla::PjRtClient,
+    manifest: ArtifactManifest,
+    config: ModelConfig,
+    /// Weights as device buffers, in `flat_params` order.
+    weight_bufs: Vec<xla::PjRtBuffer>,
+    prefill: BTreeMap<usize, CompiledBucket>, // seq bucket → exe
+    decode: BTreeMap<usize, CompiledBucket>,  // batch bucket → exe
+}
+
+// The PJRT client/buffers are only touched from the engine thread; the
+// xla crate wrappers are raw pointers without auto-Send, so we assert it.
+unsafe impl Send for XlaBackend {}
+
+impl XlaBackend {
+    /// Load every artifact in `manifest`, compile, and upload `weights`.
+    pub fn load(manifest: ArtifactManifest, weights: &ModelWeights) -> Result<XlaBackend> {
+        if weights.config != manifest.config {
+            bail!(
+                "weights config {:?} != artifact config {:?}",
+                weights.config,
+                manifest.config
+            );
+        }
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        let mut prefill = BTreeMap::new();
+        let mut decode = BTreeMap::new();
+        for e in &manifest.entries {
+            let proto = xla::HloModuleProto::from_text_file(&e.path)
+                .with_context(|| format!("load HLO {:?}", e.path))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp).with_context(|| format!("compile {:?}", e.path))?;
+            let bucket = CompiledBucket { exe };
+            match e.kind.as_str() {
+                "prefill" => {
+                    prefill.insert(e.seq, bucket);
+                }
+                "decode" => {
+                    decode.insert(e.batch, bucket);
+                }
+                other => bail!("unknown artifact kind {other:?}"),
+            }
+        }
+        let mut weight_bufs = Vec::new();
+        for (name, shape, data) in weights.flat_params() {
+            let buf = client
+                .buffer_from_host_buffer::<f32>(data, &shape, None)
+                .with_context(|| format!("upload weight {name}"))?;
+            weight_bufs.push(buf);
+        }
+        let config = manifest.config;
+        Ok(XlaBackend { client, manifest, config, weight_bufs, prefill, decode })
+    }
+
+    pub fn manifest(&self) -> &ArtifactManifest {
+        &self.manifest
+    }
+
+    fn i32_buffer(&self, data: &[i32], shape: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer::<i32>(data, shape, None)?)
+    }
+
+    fn f32_buffer(&self, data: &[f32], shape: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer::<f32>(data, shape, None)?)
+    }
+
+    /// Execute with the pre-uploaded weights plus call-specific buffers;
+    /// returns the flattened output tuple as literals.
+    fn run(&self, exe: &xla::PjRtLoadedExecutable, extra: Vec<xla::PjRtBuffer>) -> Result<Vec<xla::Literal>> {
+        let mut args: Vec<&xla::PjRtBuffer> = self.weight_bufs.iter().collect();
+        for b in &extra {
+            args.push(b);
+        }
+        let outs = exe.execute_b(&args)?;
+        let lit = outs[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+
+    fn prefill_impl(
+        &self,
+        tokens: &[u32],
+        cache: &mut PagedKvCache,
+        table: &mut BlockTable,
+    ) -> Result<Vec<f32>> {
+        if !table.is_empty() {
+            bail!(
+                "XLA prefill artifacts assume a fresh sequence (positions \
+                 start at 0); chunked prefill / prefix adoption is native-only"
+            );
+        }
+        let n = tokens.len();
+        let bucket = self
+            .manifest
+            .prefill_bucket(n)
+            .with_context(|| format!("no prefill bucket ≥ {n} tokens"))?;
+        let s = bucket.seq;
+        let exe = &self.prefill[&s].exe;
+        let mut padded: Vec<i32> = tokens.iter().map(|&t| t as i32).collect();
+        padded.resize(s, PAD as i32);
+        let outs = self.run(exe, vec![self.i32_buffer(&padded, &[s])?])?;
+        let (logits, ks, vs) = match &outs[..] {
+            [a, b, c] => (a, b, c),
+            other => bail!("prefill returned {} outputs, expected 3", other.len()),
+        };
+        let kvd = self.config.kv_dim();
+        let l_count = self.config.n_layers;
+        let ks: Vec<f32> = ks.to_vec::<f32>()?;
+        let vs: Vec<f32> = vs.to_vec::<f32>()?;
+        // Append slots and write the valid K/V rows.
+        let slots: Vec<_> = (0..n).map(|_| table.append_slot(cache.block_size())).collect();
+        for (i, &(b, slot)) in slots.iter().enumerate() {
+            for layer in 0..l_count {
+                let off = (layer * s + i) * kvd;
+                // write_token writes one layer at a time — direct pool write.
+                cache.write_token(layer, b, slot, &ks[off..off + kvd], &vs[off..off + kvd]);
+            }
+        }
+        // Last valid row's logits.
+        let logits: Vec<f32> = logits.to_vec::<f32>()?;
+        let vocab = self.config.vocab;
+        Ok(logits[(n - 1) * vocab..n * vocab].to_vec())
+    }
+
+    fn decode_impl(
+        &self,
+        items: &mut [DecodeItem<'_>],
+        cache: &mut PagedKvCache,
+    ) -> Result<Vec<Vec<f32>>> {
+        let n = items.len();
+        assert!(n > 0);
+        let bucket = self
+            .manifest
+            .decode_bucket(n)
+            .with_context(|| format!("no decode bucket ≥ batch {n}"))?;
+        let b = bucket.batch;
+        let exe = &self.decode[&b].exe;
+        let mbs = self.manifest.max_blocks_per_seq;
+
+        let mut tokens = vec![PAD as i32; b];
+        let mut ctx_lens = vec![0i32; b];
+        let mut tables = vec![0i32; b * mbs];
+        for (i, item) in items.iter().enumerate() {
+            tokens[i] = item.token as i32;
+            ctx_lens[i] = item.table.len() as i32;
+            for (j, &blk) in item.table.blocks().iter().enumerate() {
+                assert!(j < mbs, "sequence exceeds max_blocks_per_seq");
+                tables[i * mbs + j] = blk as i32;
+            }
+        }
+        // Concatenate per-layer pools into [L, nb, bs, kvh, hd].
+        let l_count = self.config.n_layers;
+        let pool = cache.num_blocks() * cache.block_size() * cache.kv_heads() * cache.head_dim();
+        let mut k_cat = Vec::with_capacity(l_count * pool);
+        let mut v_cat = Vec::with_capacity(l_count * pool);
+        for layer in 0..l_count {
+            k_cat.extend_from_slice(cache.raw_keys(layer));
+            v_cat.extend_from_slice(cache.raw_values(layer));
+        }
+        let cache_shape = [
+            l_count,
+            cache.num_blocks(),
+            cache.block_size(),
+            cache.kv_heads(),
+            cache.head_dim(),
+        ];
+        let extra = vec![
+            self.i32_buffer(&tokens, &[b])?,
+            self.i32_buffer(&ctx_lens, &[b])?,
+            self.i32_buffer(&tables, &[b, mbs])?,
+            self.f32_buffer(&k_cat, &cache_shape)?,
+            self.f32_buffer(&v_cat, &cache_shape)?,
+        ];
+        let outs = self.run(exe, extra)?;
+        let (logits, k_new, v_new) = match &outs[..] {
+            [a, x, y] => (a, x, y),
+            other => bail!("decode returned {} outputs, expected 3", other.len()),
+        };
+        let logits: Vec<f32> = logits.to_vec::<f32>()?;
+        let k_new: Vec<f32> = k_new.to_vec::<f32>()?;
+        let v_new: Vec<f32> = v_new.to_vec::<f32>()?;
+        let kvd = self.config.kv_dim();
+        let vocab = self.config.vocab;
+        let mut result = Vec::with_capacity(n);
+        for (i, item) in items.iter_mut().enumerate() {
+            let (blk, slot) = item.table.append_slot(cache.block_size());
+            for layer in 0..l_count {
+                let off = (layer * b + i) * kvd;
+                cache.write_token(
+                    layer,
+                    blk,
+                    slot,
+                    &k_new[off..off + kvd],
+                    &v_new[off..off + kvd],
+                );
+            }
+            result.push(logits[i * vocab..(i + 1) * vocab].to_vec());
+        }
+        Ok(result)
+    }
+}
+
+impl Backend for XlaBackend {
+    fn config(&self) -> &ModelConfig {
+        &self.config
+    }
+
+    fn prefill(
+        &self,
+        tokens: &[u32],
+        cache: &mut PagedKvCache,
+        table: &mut BlockTable,
+    ) -> Vec<f32> {
+        self.prefill_impl(tokens, cache, table).expect("XLA prefill failed")
+    }
+
+    fn decode(&self, items: &mut [DecodeItem<'_>], cache: &mut PagedKvCache) -> Vec<Vec<f32>> {
+        self.decode_impl(items, cache).expect("XLA decode failed")
+    }
+
+    fn name(&self) -> &'static str {
+        "xla-pjrt"
+    }
+}

@@ -1,0 +1,231 @@
+//! Threaded TCP/HTTP front-end.
+//!
+//! A minimal HTTP/1.1 server (no async runtime is available offline)
+//! speaking a JSON API over the [`Router`]:
+//!
+//! * `POST /generate` — `{"prompt": "...", "max_tokens": N,
+//!   "temperature": T?, "top_k": K?}` → `{"id", "text", "tokens",
+//!   "latency_s", "ttft_s"}`
+//! * `GET /health` — `{"status":"ok","workers":N,"inflight":M}`
+//!
+//! Each connection is handled on its own thread; generation itself runs
+//! on the router's engine workers, so slow clients never stall decoding.
+
+use crate::coordinator::Router;
+use crate::model::SamplingParams;
+use crate::tokenizer::ByteTokenizer;
+use crate::util::json::{self, Value};
+use anyhow::{Context, Result};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+
+/// HTTP server over a router.
+pub struct Server {
+    router: Arc<Router>,
+    listener: TcpListener,
+}
+
+impl Server {
+    /// Bind to `addr` (e.g. "127.0.0.1:8765"; port 0 picks a free port).
+    pub fn bind(router: Arc<Router>, addr: &str) -> Result<Server> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+        Ok(Server { router, listener })
+    }
+
+    pub fn local_addr(&self) -> std::net::SocketAddr {
+        self.listener.local_addr().expect("listener has an address")
+    }
+
+    /// Accept loop; one thread per connection. Blocks forever (callers
+    /// run it on a dedicated thread; tests connect then drop).
+    pub fn serve(&self) -> Result<()> {
+        for stream in self.listener.incoming() {
+            let stream = match stream {
+                Ok(s) => s,
+                Err(e) => {
+                    log::warn!("accept error: {e}");
+                    continue;
+                }
+            };
+            let router = self.router.clone();
+            std::thread::spawn(move || {
+                if let Err(e) = handle_connection(stream, &router) {
+                    log::debug!("connection error: {e}");
+                }
+            });
+        }
+        Ok(())
+    }
+}
+
+/// Parse one HTTP request; returns (method, path, body).
+fn read_request(stream: &mut TcpStream) -> Result<(String, String, String)> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut request_line = String::new();
+    reader.read_line(&mut request_line)?;
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let path = parts.next().unwrap_or("").to_string();
+    let mut content_length = 0usize;
+    loop {
+        let mut line = String::new();
+        reader.read_line(&mut line)?;
+        let line = line.trim_end();
+        if line.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = line.split_once(':') {
+            if k.eq_ignore_ascii_case("content-length") {
+                content_length = v.trim().parse().unwrap_or(0);
+            }
+        }
+    }
+    let mut body = vec![0u8; content_length.min(16 << 20)];
+    reader.read_exact(&mut body)?;
+    Ok((method, path, String::from_utf8_lossy(&body).into_owned()))
+}
+
+fn respond(stream: &mut TcpStream, status: &str, body: &str) -> Result<()> {
+    let resp = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(resp.as_bytes())?;
+    Ok(())
+}
+
+fn handle_connection(mut stream: TcpStream, router: &Router) -> Result<()> {
+    let (method, path, body) = read_request(&mut stream)?;
+    match (method.as_str(), path.as_str()) {
+        ("GET", "/health") => {
+            let v = json::obj(vec![
+                ("status", "ok".into()),
+                ("workers", router.num_workers().into()),
+                ("inflight", router.inflight().into()),
+            ]);
+            respond(&mut stream, "200 OK", &v.to_string_compact())
+        }
+        ("POST", "/generate") => match handle_generate(router, &body) {
+            Ok(v) => respond(&mut stream, "200 OK", &v.to_string_compact()),
+            Err(e) => {
+                let v = json::obj(vec![("error", format!("{e}").into())]);
+                respond(&mut stream, "400 Bad Request", &v.to_string_compact())
+            }
+        },
+        _ => {
+            let v = json::obj(vec![("error", "not found".into())]);
+            respond(&mut stream, "404 Not Found", &v.to_string_compact())
+        }
+    }
+}
+
+fn handle_generate(router: &Router, body: &str) -> Result<Value> {
+    let req = json::parse(body).context("invalid JSON body")?;
+    let prompt_text = req.get_str("prompt").context("missing 'prompt'")?;
+    let tok = ByteTokenizer::new();
+    let prompt = tok.encode(prompt_text);
+    let params = SamplingParams {
+        max_tokens: req.get_usize("max_tokens").unwrap_or(32),
+        temperature: req.get_f64("temperature").unwrap_or(0.0) as f32,
+        top_k: req.get_usize("top_k").unwrap_or(0),
+        ignore_eos: req.get("ignore_eos").and_then(|b| b.as_bool()).unwrap_or(false),
+    };
+    let rx = router.submit(prompt, params)?;
+    let out = rx
+        .recv()
+        .map_err(|_| anyhow::anyhow!("request rejected (too long for the KV pool?)"))?;
+    Ok(json::obj(vec![
+        ("id", out.id.into()),
+        ("text", tok.decode(&out.tokens).into()),
+        ("tokens", out.tokens.iter().map(|&t| t as usize).collect::<Vec<usize>>().into()),
+        ("prompt_len", out.prompt_len.into()),
+        ("latency_s", out.latency_s.into()),
+        ("ttft_s", out.ttft_s.into()),
+    ]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{BucketPolicy, EngineConfig, RouterConfig, SchedulerConfig};
+    use crate::model::{ModelConfig, ModelWeights, NativeModel};
+    use crate::runtime::NativeBackend;
+
+    fn start_server() -> (std::net::SocketAddr, std::thread::JoinHandle<()>) {
+        let router = Arc::new(Router::new(
+            RouterConfig {
+                engine: EngineConfig {
+                    num_blocks: 32,
+                    block_size: 8,
+                    sched: SchedulerConfig::default(),
+                    decode_buckets: BucketPolicy::exact(8),
+                    prefill_chunk: usize::MAX,
+            prefix_cache_blocks: 0,
+                },
+                workers: 1,
+            },
+            |_| {
+                let mc = ModelConfig::tiny();
+                Box::new(NativeBackend::new(NativeModel::new(ModelWeights::init(&mc, 3))))
+            },
+        ));
+        let server = Server::bind(router, "127.0.0.1:0").unwrap();
+        let addr = server.local_addr();
+        let h = std::thread::spawn(move || {
+            let _ = server.serve();
+        });
+        (addr, h)
+    }
+
+    fn http(addr: std::net::SocketAddr, req: &str) -> String {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(req.as_bytes()).unwrap();
+        let mut buf = String::new();
+        s.read_to_string(&mut buf).unwrap();
+        buf
+    }
+
+    #[test]
+    fn health_endpoint() {
+        let (addr, _h) = start_server();
+        let resp = http(addr, "GET /health HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert!(resp.contains("200 OK"), "{resp}");
+        assert!(resp.contains("\"status\":\"ok\""), "{resp}");
+    }
+
+    #[test]
+    fn generate_endpoint_roundtrip() {
+        let (addr, _h) = start_server();
+        let body = r#"{"prompt":"hello","max_tokens":4}"#;
+        let req = format!(
+            "POST /generate HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        );
+        let resp = http(addr, &req);
+        assert!(resp.contains("200 OK"), "{resp}");
+        let json_body = resp.split("\r\n\r\n").nth(1).unwrap();
+        let v = json::parse(json_body).unwrap();
+        assert_eq!(v.get("tokens").unwrap().as_arr().unwrap().len(), 4);
+        assert!(v.get_f64("latency_s").unwrap() >= 0.0);
+    }
+
+    #[test]
+    fn bad_request_is_400() {
+        let (addr, _h) = start_server();
+        let body = r#"{"max_tokens":4}"#; // missing prompt
+        let req = format!(
+            "POST /generate HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        );
+        let resp = http(addr, &req);
+        assert!(resp.contains("400"), "{resp}");
+    }
+
+    #[test]
+    fn unknown_path_is_404() {
+        let (addr, _h) = start_server();
+        let resp = http(addr, "GET /nope HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert!(resp.contains("404"), "{resp}");
+    }
+}

@@ -1,0 +1,377 @@
+//! Minimal row-major f32 tensor for the native backend.
+//!
+//! This is deliberately small: contiguous storage, shape checking, and the
+//! handful of ops a Llama-style forward pass needs (matmul with an
+//! optionally transposed RHS, softmax, RMSNorm, SiLU, elementwise ops).
+//! The XLA backend does not use this module on its hot path; the native
+//! backend and the benches do.
+
+use std::fmt;
+
+/// A dense row-major f32 tensor.
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}(", self.shape)?;
+        let n = self.data.len().min(8);
+        for (i, v) in self.data[..n].iter().enumerate() {
+            if i > 0 {
+                write!(f, ", ")?;
+            }
+            write!(f, "{v:.4}")?;
+        }
+        if self.data.len() > n {
+            write!(f, ", …")?;
+        }
+        write!(f, ")")
+    }
+}
+
+impl Tensor {
+    /// Zero-filled tensor.
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    /// Wrap an existing buffer (length must equal the shape product).
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {shape:?} does not match data length {}",
+            data.len()
+        );
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Reinterpret with a new shape of equal element count.
+    pub fn reshape(mut self, shape: &[usize]) -> Tensor {
+        assert_eq!(self.data.len(), shape.iter().product::<usize>(), "reshape size mismatch");
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// Row `i` of a 2-D tensor.
+    pub fn row(&self, i: usize) -> &[f32] {
+        assert_eq!(self.ndim(), 2);
+        let cols = self.shape[1];
+        &self.data[i * cols..(i + 1) * cols]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        assert_eq!(self.ndim(), 2);
+        let cols = self.shape[1];
+        &mut self.data[i * cols..(i + 1) * cols]
+    }
+
+    /// `C = A · B` for `A: [m,k]`, `B: [k,n]`.
+    pub fn matmul(&self, b: &Tensor) -> Tensor {
+        assert_eq!(self.ndim(), 2);
+        assert_eq!(b.ndim(), 2);
+        let (m, k) = (self.shape[0], self.shape[1]);
+        let (k2, n) = (b.shape[0], b.shape[1]);
+        assert_eq!(k, k2, "matmul inner-dim mismatch: {k} vs {k2}");
+        let mut out = vec![0.0f32; m * n];
+        // ikj loop order: streams over B rows, accumulates into C rows.
+        for i in 0..m {
+            let a_row = &self.data[i * k..(i + 1) * k];
+            let c_row = &mut out[i * n..(i + 1) * n];
+            for (kk, &a_v) in a_row.iter().enumerate() {
+                if a_v == 0.0 {
+                    continue;
+                }
+                let b_row = &b.data[kk * n..(kk + 1) * n];
+                for (c, &b_v) in c_row.iter_mut().zip(b_row) {
+                    *c += a_v * b_v;
+                }
+            }
+        }
+        Tensor::from_vec(&[m, n], out)
+    }
+
+    /// `C = A · Bᵀ` for `A: [m,k]`, `B: [n,k]` — the natural layout for
+    /// weight matrices stored `[out_features, in_features]`.
+    ///
+    /// The inner kernel processes 4 B-rows at a time so each A element is
+    /// loaded once per 4 outputs and the 4 accumulator chains keep the
+    /// FMA pipeline full (decode is a `[1,k]·[n,k]ᵀ` GEMV — this blocking
+    /// is its whole hot path).
+    pub fn matmul_nt(&self, b: &Tensor) -> Tensor {
+        assert_eq!(self.ndim(), 2);
+        assert_eq!(b.ndim(), 2);
+        let (m, k) = (self.shape[0], self.shape[1]);
+        let (n, k2) = (b.shape[0], b.shape[1]);
+        assert_eq!(k, k2, "matmul_nt inner-dim mismatch: {k} vs {k2}");
+        let mut out = vec![0.0f32; m * n];
+        let n8 = n / 8 * 8;
+        for i in 0..m {
+            let a_row = &self.data[i * k..(i + 1) * k];
+            let c_row = &mut out[i * n..(i + 1) * n];
+            let mut j = 0;
+            while j < n8 {
+                let rows: [&[f32]; 8] = std::array::from_fn(|r| {
+                    &b.data[(j + r) * k..(j + r + 1) * k]
+                });
+                let mut s = [0.0f32; 8];
+                for (t, &a_v) in a_row.iter().enumerate() {
+                    for r in 0..8 {
+                        s[r] += a_v * rows[r][t];
+                    }
+                }
+                c_row[j..j + 8].copy_from_slice(&s);
+                j += 8;
+            }
+            for j in n8..n {
+                c_row[j] = dot(a_row, &b.data[j * k..(j + 1) * k]);
+            }
+        }
+        Tensor::from_vec(&[m, n], out)
+    }
+
+    /// In-place softmax over the last dimension.
+    pub fn softmax_last(&mut self) {
+        let cols = *self.shape.last().expect("softmax on 0-d tensor");
+        for chunk in self.data.chunks_mut(cols) {
+            softmax_inplace(chunk);
+        }
+    }
+
+    /// Elementwise add (broadcast-free; shapes must match).
+    pub fn add(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.shape, other.shape);
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a + b).collect();
+        Tensor { shape: self.shape.clone(), data }
+    }
+
+    pub fn add_assign(&mut self, other: &Tensor) {
+        assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    /// Elementwise multiply.
+    pub fn mul(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.shape, other.shape);
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a * b).collect();
+        Tensor { shape: self.shape.clone(), data }
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for v in &mut self.data {
+            *v *= s;
+        }
+    }
+
+    /// SiLU (x·σ(x)) applied elementwise, in place.
+    pub fn silu_inplace(&mut self) {
+        for v in &mut self.data {
+            *v = *v / (1.0 + (-*v).exp()); // x * sigmoid(x)
+        }
+    }
+
+    /// Index of the maximum element in each row of a 2-D tensor.
+    pub fn argmax_rows(&self) -> Vec<usize> {
+        assert_eq!(self.ndim(), 2);
+        (0..self.shape[0])
+            .map(|i| {
+                let row = self.row(i);
+                let mut best = 0;
+                for (j, &v) in row.iter().enumerate() {
+                    if v > row[best] {
+                        best = j;
+                    }
+                }
+                best
+            })
+            .collect()
+    }
+}
+
+/// Dot product with 4-way manual unrolling (hot path of `matmul_nt`).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for c in 0..chunks {
+        let i = c * 4;
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for i in chunks * 4..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// Numerically-stable in-place softmax of one row.
+#[inline]
+pub fn softmax_inplace(row: &mut [f32]) {
+    let max = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0f32;
+    for v in row.iter_mut() {
+        *v = (*v - max).exp();
+        sum += *v;
+    }
+    let inv = 1.0 / sum;
+    for v in row.iter_mut() {
+        *v *= inv;
+    }
+}
+
+/// RMSNorm: `x / rms(x) * weight`, rowwise over the last dim.
+pub fn rmsnorm(x: &Tensor, weight: &[f32], eps: f32) -> Tensor {
+    let cols = *x.shape().last().unwrap();
+    assert_eq!(cols, weight.len());
+    let mut out = x.clone();
+    for row in out.data.chunks_mut(cols) {
+        let ms: f32 = row.iter().map(|v| v * v).sum::<f32>() / cols as f32;
+        let inv = 1.0 / (ms + eps).sqrt();
+        for (v, w) in row.iter_mut().zip(weight) {
+            *v = *v * inv * w;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_known() {
+        let a = Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Tensor::from_vec(&[2, 2], vec![1.0, 1.0, 1.0, 1.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data(), &[3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_nt_matches_matmul() {
+        let mut rng = crate::util::rng::Rng::new(3);
+        let a = Tensor::from_vec(&[3, 5], rng.normal_vec(15, 1.0));
+        let b = Tensor::from_vec(&[5, 4], rng.normal_vec(20, 1.0));
+        // bt: [4,5] such that bt^T == b
+        let mut bt = vec![0.0; 20];
+        for i in 0..5 {
+            for j in 0..4 {
+                bt[j * 5 + i] = b.data()[i * 4 + j];
+            }
+        }
+        let bt = Tensor::from_vec(&[4, 5], bt);
+        let c1 = a.matmul(&b);
+        let c2 = a.matmul_nt(&bt);
+        for (x, y) in c1.data().iter().zip(c2.data()) {
+            assert!((x - y).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "inner-dim mismatch")]
+    fn matmul_shape_check() {
+        let a = Tensor::zeros(&[2, 3]);
+        let b = Tensor::zeros(&[4, 2]);
+        let _ = a.matmul(&b);
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let mut t = Tensor::from_vec(&[2, 3], vec![1.0, 2.0, 3.0, -1.0, 0.0, 1.0]);
+        t.softmax_last();
+        for i in 0..2 {
+            let s: f32 = t.row(i).iter().sum();
+            assert!((s - 1.0).abs() < 1e-6);
+            assert!(t.row(i).iter().all(|&v| v > 0.0));
+        }
+        // Monotonic: larger logit → larger prob.
+        assert!(t.row(0)[2] > t.row(0)[1]);
+    }
+
+    #[test]
+    fn softmax_handles_large_values() {
+        let mut row = vec![1000.0, 1001.0, 999.0];
+        softmax_inplace(&mut row);
+        assert!((row.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(row.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn rmsnorm_unit_rows() {
+        let x = Tensor::from_vec(&[1, 4], vec![2.0, 2.0, 2.0, 2.0]);
+        let w = vec![1.0; 4];
+        let y = rmsnorm(&x, &w, 1e-6);
+        for &v in y.data() {
+            assert!((v - 1.0).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn silu_known_values() {
+        let mut t = Tensor::from_vec(&[1, 2], vec![0.0, 10.0]);
+        t.silu_inplace();
+        assert!((t.data()[0] - 0.0).abs() < 1e-6);
+        assert!((t.data()[1] - 10.0).abs() < 1e-3); // sigmoid(10) ≈ 1
+    }
+
+    #[test]
+    fn argmax_rows_basic() {
+        let t = Tensor::from_vec(&[2, 3], vec![0.0, 5.0, 1.0, 9.0, 2.0, 3.0]);
+        assert_eq!(t.argmax_rows(), vec![1, 0]);
+    }
+
+    #[test]
+    fn reshape_roundtrip() {
+        let t = Tensor::zeros(&[2, 6]).reshape(&[3, 4]);
+        assert_eq!(t.shape(), &[3, 4]);
+    }
+
+    #[test]
+    fn dot_unrolled_matches_naive() {
+        let mut rng = crate::util::rng::Rng::new(5);
+        for n in [0, 1, 3, 4, 7, 64, 65] {
+            let a = rng.normal_vec(n, 1.0);
+            let b = rng.normal_vec(n, 1.0);
+            let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert!((dot(&a, &b) - naive).abs() < 1e-3, "n={n}");
+        }
+    }
+}

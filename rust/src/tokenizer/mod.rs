@@ -1,0 +1,102 @@
+//! Byte-level tokenizer.
+//!
+//! Serving metrics do not depend on a trained vocabulary, so the engine
+//! uses a byte-level scheme: token ids 0–255 are raw bytes, followed by
+//! the special tokens. The model's embedding table is padded to an
+//! MXU-friendly multiple of 128 (see [`ByteTokenizer::padded_vocab`]).
+
+/// Beginning-of-sequence token id.
+pub const BOS: u32 = 256;
+/// End-of-sequence token id.
+pub const EOS: u32 = 257;
+/// Padding token id (scheduler bucket padding).
+pub const PAD: u32 = 258;
+
+/// Number of real token ids (bytes + specials).
+pub const VOCAB_SIZE: usize = 259;
+
+/// Stateless byte-level tokenizer.
+#[derive(Debug, Clone, Default)]
+pub struct ByteTokenizer;
+
+impl ByteTokenizer {
+    pub fn new() -> Self {
+        ByteTokenizer
+    }
+
+    /// Real vocabulary size (bytes + specials).
+    pub fn vocab_size(&self) -> usize {
+        VOCAB_SIZE
+    }
+
+    /// Vocabulary padded up to a multiple of 128 for MXU-shaped matmuls.
+    pub fn padded_vocab(&self) -> usize {
+        crate::util::round_up(VOCAB_SIZE, 128)
+    }
+
+    /// Encode text as `[BOS, bytes...]`.
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        let mut out = Vec::with_capacity(text.len() + 1);
+        out.push(BOS);
+        out.extend(text.bytes().map(|b| b as u32));
+        out
+    }
+
+    /// Decode token ids back to text; specials are dropped, invalid UTF-8
+    /// is replaced (lossy) so generation never panics mid-stream.
+    pub fn decode(&self, tokens: &[u32]) -> String {
+        let bytes: Vec<u8> = tokens
+            .iter()
+            .filter(|&&t| t < 256)
+            .map(|&t| t as u8)
+            .collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    /// True when a generated token terminates the sequence.
+    pub fn is_eos(&self, token: u32) -> bool {
+        token == EOS
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let tok = ByteTokenizer::new();
+        let ids = tok.encode("hello, world");
+        assert_eq!(ids[0], BOS);
+        assert_eq!(tok.decode(&ids), "hello, world");
+    }
+
+    #[test]
+    fn roundtrip_utf8() {
+        let tok = ByteTokenizer::new();
+        let s = "héllo 😀";
+        assert_eq!(tok.decode(&tok.encode(s)), s);
+    }
+
+    #[test]
+    fn specials_are_dropped_on_decode() {
+        let tok = ByteTokenizer::new();
+        assert_eq!(tok.decode(&[BOS, b'a' as u32, EOS, PAD]), "a");
+    }
+
+    #[test]
+    fn padded_vocab_is_mxu_friendly() {
+        let tok = ByteTokenizer::new();
+        assert_eq!(tok.padded_vocab() % 128, 0);
+        assert!(tok.padded_vocab() >= tok.vocab_size());
+        assert_eq!(tok.padded_vocab(), 384);
+    }
+
+    #[test]
+    fn empty_text() {
+        let tok = ByteTokenizer::new();
+        let ids = tok.encode("");
+        assert_eq!(ids, vec![BOS]);
+        assert_eq!(tok.decode(&ids), "");
+    }
+}

@@ -1,0 +1,209 @@
+//! Bench harness (criterion is unavailable offline).
+//!
+//! `cargo bench` targets use `harness = false` and drive this module. It
+//! provides (a) a sample-based microbench runner with warmup and summary
+//! statistics, and (b) a paper-style table printer the figure benches use
+//! to emit the same rows the paper reports.
+
+use std::hint::black_box as std_black_box;
+use std::time::{Duration, Instant};
+
+/// Re-exported black box so benches avoid dead-code elimination.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std_black_box(x)
+}
+
+/// One benchmark's collected samples (seconds per iteration).
+#[derive(Debug, Clone)]
+pub struct Samples {
+    pub name: String,
+    pub secs: Vec<f64>,
+}
+
+impl Samples {
+    pub fn mean(&self) -> f64 {
+        crate::util::mean(&self.secs)
+    }
+    pub fn stddev(&self) -> f64 {
+        crate::util::stddev(&self.secs)
+    }
+    pub fn p50(&self) -> f64 {
+        crate::util::percentile(&self.secs, 50.0)
+    }
+    pub fn p95(&self) -> f64 {
+        crate::util::percentile(&self.secs, 95.0)
+    }
+    pub fn min(&self) -> f64 {
+        self.secs.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+}
+
+/// Microbench runner.
+pub struct Bencher {
+    warmup: Duration,
+    measure: Duration,
+    max_samples: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { warmup: Duration::from_millis(200), measure: Duration::from_secs(1), max_samples: 200 }
+    }
+}
+
+impl Bencher {
+    pub fn new(warmup: Duration, measure: Duration, max_samples: usize) -> Self {
+        Bencher { warmup, measure, max_samples }
+    }
+
+    /// Quick preset for heavier end-to-end benches.
+    pub fn quick() -> Self {
+        Bencher { warmup: Duration::from_millis(50), measure: Duration::from_millis(300), max_samples: 20 }
+    }
+
+    /// Run `f` repeatedly; each call is one sample.
+    pub fn bench<F: FnMut()>(&self, name: &str, mut f: F) -> Samples {
+        // Warmup.
+        let start = Instant::now();
+        while start.elapsed() < self.warmup {
+            f();
+        }
+        // Measure.
+        let mut secs = Vec::new();
+        let start = Instant::now();
+        while start.elapsed() < self.measure && secs.len() < self.max_samples {
+            let t0 = Instant::now();
+            f();
+            secs.push(t0.elapsed().as_secs_f64());
+        }
+        if secs.is_empty() {
+            // One mandatory sample for very slow bodies.
+            let t0 = Instant::now();
+            f();
+            secs.push(t0.elapsed().as_secs_f64());
+        }
+        let s = Samples { name: name.to_string(), secs };
+        println!(
+            "{:<44} mean {:>10} ± {:>9}  p50 {:>10}  p95 {:>10}  (n={})",
+            s.name,
+            fmt_duration(s.mean()),
+            fmt_duration(s.stddev()),
+            fmt_duration(s.p50()),
+            fmt_duration(s.p95()),
+            s.secs.len()
+        );
+        s
+    }
+}
+
+/// Human-readable seconds.
+pub fn fmt_duration(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1}ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2}µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2}ms", secs * 1e3)
+    } else {
+        format!("{:.2}s", secs)
+    }
+}
+
+/// Paper-style results table.
+///
+/// ```text
+/// === Fig 2: horizontal comparison ===============================
+/// config       latency(s)  all tput (req/s)  all tput (tok/s)  gen tput (tok/s)
+/// MHA          52.30       0.42              230.74            119.38
+/// Opt-GQA      57.40       0.70              239.14            122.55
+/// ```
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Render and print to stdout; returns the rendered string.
+    pub fn print(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("\n=== {} {}\n", self.title, "=".repeat(60usize.saturating_sub(self.title.len()))));
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:<w$}"))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        print!("{out}");
+        out
+    }
+}
+
+/// Format a float with fixed decimals (bench rows).
+pub fn f(v: f64, decimals: usize) -> String {
+    format!("{v:.decimals$}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples() {
+        let b = Bencher::new(Duration::from_millis(1), Duration::from_millis(10), 50);
+        let s = b.bench("noop", || {
+            black_box(1 + 1);
+        });
+        assert!(!s.secs.is_empty());
+        assert!(s.mean() >= 0.0);
+        assert!(s.min() <= s.p95());
+    }
+
+    #[test]
+    fn table_renders_all_rows() {
+        let mut t = Table::new("test", &["a", "bb"]);
+        t.row(&["1".into(), "2".into()]);
+        t.row(&["333".into(), "4".into()]);
+        let s = t.print();
+        assert!(s.contains("333"));
+        assert!(s.contains("bb"));
+    }
+
+    #[test]
+    fn fmt_duration_ranges() {
+        assert!(fmt_duration(5e-9).ends_with("ns"));
+        assert!(fmt_duration(5e-6).ends_with("µs"));
+        assert!(fmt_duration(5e-3).ends_with("ms"));
+        assert!(fmt_duration(5.0).ends_with('s'));
+    }
+}

@@ -1,0 +1,136 @@
+//! Tiny command-line parser (clap is unavailable offline).
+//!
+//! Grammar: `binary <subcommand> [--flag] [--key value] [--key=value] [pos...]`.
+//!
+//! A bare `--name` followed by a non-`--` token is read as `--key value`;
+//! use `--` to terminate option parsing when positionals must follow a
+//! boolean flag (`serve --verbose -- input.json`).
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// First non-flag token (if any): the subcommand.
+    pub command: Option<String>,
+    /// Positional arguments after the subcommand.
+    pub positional: Vec<String>,
+    /// `--key value` / `--key=value` options (last occurrence wins).
+    pub options: BTreeMap<String, String>,
+    /// Bare `--flag` switches.
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Args {
+        let tokens: Vec<String> = tokens.into_iter().collect();
+        let mut args = Args::default();
+        let mut i = 0;
+        let mut only_positional = false;
+        while i < tokens.len() {
+            let t = &tokens[i];
+            if only_positional {
+                if args.command.is_none() {
+                    args.command = Some(t.clone());
+                } else {
+                    args.positional.push(t.clone());
+                }
+            } else if t == "--" {
+                only_positional = true;
+            } else if let Some(stripped) = t.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if i + 1 < tokens.len() && !tokens[i + 1].starts_with("--") {
+                    args.options.insert(stripped.to_string(), tokens[i + 1].clone());
+                    i += 1;
+                } else {
+                    args.flags.push(stripped.to_string());
+                }
+            } else if args.command.is_none() {
+                args.command = Some(t.clone());
+            } else {
+                args.positional.push(t.clone());
+            }
+            i += 1;
+        }
+        args
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_str<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_and_options() {
+        let a = Args::parse(toks("serve --port 8080 --model=mini --verbose -- input.json"));
+        assert_eq!(a.command.as_deref(), Some("serve"));
+        assert_eq!(a.get("port"), Some("8080"));
+        assert_eq!(a.get("model"), Some("mini"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["input.json"]);
+    }
+
+    #[test]
+    fn typed_getters_and_defaults() {
+        let a = Args::parse(toks("bench --steps 12 --rate 2.5"));
+        assert_eq!(a.get_usize("steps", 1), 12);
+        assert_eq!(a.get_f64("rate", 0.0), 2.5);
+        assert_eq!(a.get_usize("missing", 7), 7);
+        assert_eq!(a.get_str("name", "dflt"), "dflt");
+    }
+
+    #[test]
+    fn trailing_flag_is_flag() {
+        let a = Args::parse(toks("run --fast"));
+        assert!(a.flag("fast"));
+        assert_eq!(a.get("fast"), None);
+    }
+
+    #[test]
+    fn last_option_wins() {
+        let a = Args::parse(toks("x --k 1 --k 2"));
+        assert_eq!(a.get("k"), Some("2"));
+    }
+
+    #[test]
+    fn adjacent_flags() {
+        let a = Args::parse(toks("x --a --b val"));
+        assert!(a.flag("a"));
+        assert_eq!(a.get("b"), Some("val"));
+    }
+}

@@ -1,0 +1,122 @@
+//! Property-testing harness (the proptest crate is unavailable offline).
+//!
+//! `forall` runs a property over `cases` deterministic random inputs. On
+//! failure it retries the failing case with progressively simpler inputs
+//! drawn from the same generator family (a bounded greedy "re-draw smaller"
+//! shrink), then panics with the seed so the case is reproducible.
+
+use super::rng::Rng;
+
+/// A generator draws a value of size ≤ `size` from `rng`.
+pub struct Gen<'a> {
+    pub rng: &'a mut Rng,
+    /// Soft size bound; generators should scale collection lengths and
+    /// magnitudes with it. Shrinking reduces this.
+    pub size: usize,
+}
+
+impl<'a> Gen<'a> {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        let hi = hi.min(lo + self.size.max(1));
+        self.rng.range(lo, hi.max(lo))
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.rng.f32()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    pub fn vec_usize(&mut self, len: usize, lo: usize, hi: usize) -> Vec<usize> {
+        (0..len).map(|_| self.rng.range(lo, hi)).collect()
+    }
+}
+
+/// Outcome of a property check on one input.
+pub type PropResult = Result<(), String>;
+
+/// Run `prop` on `cases` generated inputs. Each case gets a fresh `Gen`
+/// seeded from `seed + case index`, so failures print a standalone repro
+/// seed. On failure the property is retried with smaller sizes to find a
+/// simpler failing instance before panicking.
+pub fn forall<F>(name: &str, seed: u64, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> PropResult,
+{
+    for case in 0..cases {
+        let case_seed = seed.wrapping_add(case as u64);
+        let size = 4 + (case * 97) % 60; // sweep sizes deterministically
+        let mut rng = Rng::new(case_seed);
+        let mut g = Gen { rng: &mut rng, size };
+        if let Err(msg) = prop(&mut g) {
+            // Shrink: re-draw with smaller sizes from nearby seeds.
+            let mut simplest: Option<(u64, usize, String)> = None;
+            for shrink_size in (1..size).rev() {
+                let mut r2 = Rng::new(case_seed);
+                let mut g2 = Gen { rng: &mut r2, size: shrink_size };
+                if let Err(m2) = prop(&mut g2) {
+                    simplest = Some((case_seed, shrink_size, m2));
+                }
+            }
+            let (s, sz, m) = simplest.unwrap_or((case_seed, size, msg));
+            panic!(
+                "property '{name}' failed (case {case}, seed {s}, size {sz}): {m}\n\
+                 reproduce with: forall(\"{name}\", {s}, 1, ..) at size {sz}"
+            );
+        }
+    }
+}
+
+/// Assert two f32 slices are elementwise close.
+pub fn assert_close(a: &[f32], b: &[f32], atol: f32, rtol: f32) -> PropResult {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch: {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        let tol = atol + rtol * y.abs().max(x.abs());
+        if (x - y).abs() > tol || x.is_nan() != y.is_nan() {
+            return Err(format!("element {i}: {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        forall("sum-commutes", 1, 50, |g| {
+            count += 1;
+            let a = g.f32_in(-10.0, 10.0);
+            let b = g.f32_in(-10.0, 10.0);
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err("addition not commutative".into())
+            }
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_panics_with_seed() {
+        forall("always-fails", 2, 10, |_g| Err("nope".into()));
+    }
+
+    #[test]
+    fn assert_close_catches_mismatch() {
+        assert!(assert_close(&[1.0], &[1.0 + 1e-6], 1e-5, 0.0).is_ok());
+        assert!(assert_close(&[1.0], &[1.1], 1e-5, 0.0).is_err());
+        assert!(assert_close(&[1.0], &[1.0, 2.0], 1e-5, 0.0).is_err());
+    }
+}

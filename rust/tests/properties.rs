@@ -1,0 +1,235 @@
+//! Property-based tests over coordinator/cache/quant invariants
+//! (in-repo proptest harness — the proptest crate is unavailable offline).
+
+use opt_gptq::attention::gqa::{gqa_attention, AttnConfig, Bias};
+use opt_gptq::attention::paged::paged_decode_attention;
+use opt_gptq::coordinator::{BucketPolicy, Engine, EngineConfig, SchedulerConfig};
+use opt_gptq::kvcache::{BlockAllocator, BlockTable, PagedKvCache};
+use opt_gptq::model::{ModelConfig, ModelWeights, NativeModel, SamplingParams};
+use opt_gptq::runtime::NativeBackend;
+use opt_gptq::util::json;
+use opt_gptq::util::proptest::{assert_close, forall};
+
+#[test]
+fn prop_allocator_conservation() {
+    // Any interleaving of alloc/share/release keeps used+free == total and
+    // refcounts consistent.
+    forall("allocator-conservation", 0xA110C, 60, |g| {
+        let num_blocks = g.usize_in(1, 24);
+        let mut alloc = BlockAllocator::new(num_blocks, 4);
+        let mut live: Vec<u32> = Vec::new();
+        for _ in 0..g.usize_in(1, 80) {
+            match g.usize_in(0, 2) {
+                0 => {
+                    if let Some(b) = alloc.alloc() {
+                        live.push(b);
+                    }
+                }
+                1 => {
+                    if !live.is_empty() {
+                        let i = g.usize_in(0, live.len() - 1);
+                        alloc.share(live[i]);
+                        let b = live[i];
+                        live.push(b);
+                    }
+                }
+                _ => {
+                    if !live.is_empty() {
+                        let i = g.usize_in(0, live.len() - 1);
+                        let b = live.swap_remove(i);
+                        alloc.release(b);
+                    }
+                }
+            }
+            if alloc.num_used() + alloc.num_free() != alloc.num_blocks() {
+                return Err("used + free != total".into());
+            }
+        }
+        // Release everything; pool must be whole again.
+        for b in live.drain(..) {
+            alloc.release(b);
+        }
+        if alloc.num_free() != num_blocks {
+            return Err(format!("leaked blocks: free={} of {num_blocks}", alloc.num_free()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_block_table_locate_consistent() {
+    forall("table-locate", 0x7AB1E, 60, |g| {
+        let block_size = g.usize_in(1, 8);
+        let tokens = g.usize_in(1, 60);
+        let mut alloc = BlockAllocator::new(tokens.div_ceil(block_size) + 2, block_size);
+        let mut t = BlockTable::new();
+        if !t.reserve(tokens, &mut alloc) {
+            return Err("reserve failed with sufficient pool".into());
+        }
+        let appended: Vec<_> = (0..tokens).map(|_| t.append_slot(block_size)).collect();
+        for (pos, &loc) in appended.iter().enumerate() {
+            if t.locate(pos, block_size) != loc {
+                return Err(format!("locate({pos}) mismatch"));
+            }
+        }
+        if t.wasted_slots(block_size) >= block_size {
+            return Err("more than one block's worth of waste".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_paged_equals_contiguous_attention() {
+    // For random geometry, paged decode attention == contiguous reference.
+    forall("paged-vs-contiguous", 0xA77E17, 25, |g| {
+        let kvh = [1, 2, 4][g.usize_in(0, 2)];
+        let gsz = [1, 2, 3][g.usize_in(0, 2)];
+        let h = kvh * gsz;
+        let d = [4, 8][g.usize_in(0, 1)];
+        let block_size = g.usize_in(1, 8);
+        let kv_len = g.usize_in(1, 30);
+        let bias = if g.bool() { Bias::Alibi } else { Bias::None };
+        let cfg = AttnConfig { num_heads: h, num_kv_heads: kvh, head_dim: d, bias };
+
+        let num_blocks = kv_len.div_ceil(block_size) + 1;
+        let mut cache = PagedKvCache::new(1, num_blocks, block_size, kvh, d);
+        let mut alloc = BlockAllocator::new(num_blocks, block_size);
+        let mut table = BlockTable::new();
+        table.reserve(kv_len, &mut alloc);
+        let k = g.vec_f32(kv_len * kvh * d, -2.0, 2.0);
+        let v = g.vec_f32(kv_len * kvh * d, -2.0, 2.0);
+        for t in 0..kv_len {
+            let (b, s) = table.append_slot(block_size);
+            cache.write_token(0, b, s, &k[t * kvh * d..(t + 1) * kvh * d], &v[t * kvh * d..(t + 1) * kvh * d]);
+        }
+        let q = g.vec_f32(h * d, -2.0, 2.0);
+        let paged = paged_decode_attention(&cfg, &cache, 0, &q, &table);
+        let reference = gqa_attention(&cfg, &q, &k, &v, 1, kv_len, kv_len - 1);
+        assert_close(&paged, &reference, 1e-4, 1e-4)
+    });
+}
+
+#[test]
+fn prop_engine_completes_any_workload() {
+    // Random request mixes (lengths, counts, pool sizes) always drain, all
+    // blocks return, and every request yields exactly max_tokens tokens.
+    let cfg = ModelConfig::tiny();
+    let model = NativeModel::new(ModelWeights::init(&cfg, 3));
+    forall("engine-drains", 0xE41E, 12, |g| {
+        let num_blocks = g.usize_in(6, 24);
+        let block_size = 8;
+        let backend = NativeBackend::new(model.clone());
+        let mut engine = Engine::new(
+            Box::new(backend),
+            EngineConfig {
+                num_blocks,
+                block_size,
+                sched: SchedulerConfig {
+                    max_running: g.usize_in(1, 8),
+                    max_decode_batch: g.usize_in(1, 4),
+                    watermark_blocks: 1,
+                },
+                decode_buckets: BucketPolicy::exact(8),
+                prefill_chunk: usize::MAX,
+            prefix_cache_blocks: 0,
+            },
+        );
+        let n_req = g.usize_in(1, 6);
+        let mut accepted = 0;
+        for _ in 0..n_req {
+            let prompt_len = g.usize_in(1, 12);
+            let gen_len = g.usize_in(1, 8);
+            let prompt = vec![256u32; prompt_len];
+            let params = SamplingParams { max_tokens: gen_len, ..Default::default() };
+            // Requests too big for the pool are rejected (also a valid path).
+            if engine.add_request(prompt, params).is_ok() {
+                accepted += 1;
+            }
+        }
+        let report = engine.run_to_completion();
+        if report.num_requests != accepted {
+            return Err(format!("{} finished of {accepted} accepted", report.num_requests));
+        }
+        let outs = engine.take_outputs();
+        if outs.len() != accepted {
+            return Err("outputs != accepted".into());
+        }
+        let stats = engine.cache_stats();
+        if stats.used_blocks != 0 {
+            return Err(format!("{} blocks leaked", stats.used_blocks));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_bucket_pick_covers() {
+    forall("bucket-pick", 0xB0C4E7, 80, |g| {
+        let n_buckets = g.usize_in(1, 6);
+        let buckets: Vec<usize> = (0..n_buckets).map(|_| g.usize_in(1, 32)).collect();
+        let p = BucketPolicy::new(buckets);
+        let n = g.usize_in(1, 40);
+        match p.pick(n) {
+            Some(b) if b < n => Err(format!("bucket {b} < batch {n}")),
+            Some(_) => Ok(()),
+            None if n > p.max_batch() => Ok(()),
+            None => Err("pick failed within range".into()),
+        }
+    });
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    forall("json-roundtrip", 0x1503, 80, |g| {
+        // Build a random JSON value tree.
+        fn build(g: &mut opt_gptq::util::proptest::Gen, depth: usize) -> json::Value {
+            match if depth == 0 { g.usize_in(0, 3) } else { g.usize_in(0, 5) } {
+                0 => json::Value::Null,
+                1 => json::Value::Bool(g.bool()),
+                2 => json::Value::Num((g.f32_in(-1e6, 1e6) as f64 * 100.0).round() / 100.0),
+                3 => {
+                    let n = g.usize_in(0, 8);
+                    json::Value::Str((0..n).map(|i| (b'a' + (i as u8 % 26)) as char).collect())
+                }
+                4 => {
+                    let n = g.usize_in(0, 4);
+                    json::Value::Arr((0..n).map(|_| build(g, depth - 1)).collect())
+                }
+                _ => {
+                    let n = g.usize_in(0, 4);
+                    json::Value::Obj(
+                        (0..n).map(|i| (format!("k{i}"), build(g, depth - 1))).collect(),
+                    )
+                }
+            }
+        }
+        let v = build(g, 3);
+        let compact = json::parse(&v.to_string_compact()).map_err(|e| e.to_string())?;
+        let pretty = json::parse(&v.to_string_pretty()).map_err(|e| e.to_string())?;
+        if compact != v || pretty != v {
+            return Err(format!("roundtrip mismatch for {v}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_gqa_grouping_reduces_kv_memory_linearly() {
+    // KV bytes scale exactly with kv_heads — the paper's §II.C claim as a
+    // property over random configs.
+    forall("kv-scaling", 0x6B4, 40, |g| {
+        let kvh = 1 << g.usize_in(0, 3); // 1..8
+        let gsz = 1 << g.usize_in(0, 2); // 1..4
+        let h = kvh * gsz;
+        let d = 8 * g.usize_in(1, 8);
+        let grouped = AttnConfig { num_heads: h, num_kv_heads: kvh, head_dim: d, bias: Bias::None };
+        let full = AttnConfig { num_heads: h, num_kv_heads: h, head_dim: d, bias: Bias::None };
+        let a = opt_gptq::attention::gqa::kv_bytes_per_token(&grouped) * gsz;
+        let b = opt_gptq::attention::gqa::kv_bytes_per_token(&full);
+        if a != b {
+            return Err(format!("expected exact {gsz}× KV scaling: {a} vs {b}"));
+        }
+        Ok(())
+    });
+}

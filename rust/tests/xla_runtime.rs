@@ -1,0 +1,258 @@
+//! Three-layer integration: AOT HLO artifacts executed from Rust via PJRT,
+//! cross-checked against the native backend's numerics.
+//!
+//! Requires `make artifacts` (tests skip gracefully when absent so plain
+//! `cargo test` works before the Python step).
+
+use opt_gptq::coordinator::{BucketPolicy, Engine, EngineConfig, SchedulerConfig};
+use opt_gptq::kvcache::{BlockAllocator, BlockTable, PagedKvCache};
+use opt_gptq::model::{ModelWeights, NativeModel, SamplingParams};
+use opt_gptq::quant::{pack_rows, rtn_quantize};
+use opt_gptq::runtime::{ArtifactManifest, Backend, DecodeItem, NativeBackend, XlaBackend};
+use std::path::Path;
+
+fn manifest() -> Option<ArtifactManifest> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    match ArtifactManifest::load(&dir) {
+        Ok(m) => Some(m),
+        Err(_) => {
+            eprintln!("SKIP: no artifacts at {dir:?} — run `make artifacts`");
+            None
+        }
+    }
+}
+
+fn backends() -> Option<(XlaBackend, NativeBackend, ArtifactManifest)> {
+    let m = manifest()?;
+    let weights = ModelWeights::init(&m.config, 42);
+    let xla = XlaBackend::load(m.clone(), &weights).expect("load XLA backend");
+    let native = NativeBackend::new(NativeModel::new(weights));
+    Some((xla, native, m))
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+#[test]
+fn prefill_matches_native_numerics() {
+    let Some((xla, native, m)) = backends() else { return };
+    let cfg = m.config;
+    let tokens: Vec<u32> = vec![256, 104, 101, 108, 108, 111];
+
+    let mut cache_x =
+        PagedKvCache::new(cfg.n_layers, m.num_blocks, m.block_size, cfg.n_kv_heads, cfg.head_dim());
+    let mut alloc_x = BlockAllocator::new(m.num_blocks, m.block_size);
+    let mut table_x = BlockTable::new();
+    table_x.reserve(tokens.len(), &mut alloc_x);
+    let lx = xla.prefill(&tokens, &mut cache_x, &mut table_x);
+
+    let mut cache_n =
+        PagedKvCache::new(cfg.n_layers, m.num_blocks, m.block_size, cfg.n_kv_heads, cfg.head_dim());
+    let mut alloc_n = BlockAllocator::new(m.num_blocks, m.block_size);
+    let mut table_n = BlockTable::new();
+    table_n.reserve(tokens.len(), &mut alloc_n);
+    let ln = native.prefill(&tokens, &mut cache_n, &mut table_n);
+
+    assert_eq!(lx.len(), ln.len());
+    let d = max_abs_diff(&lx, &ln);
+    assert!(d < 2e-3, "prefill logits diverge: max abs diff {d}");
+
+    // The K/V written into the cache must match too (layer 0 spot check).
+    let (kx, vx) = cache_x.gather(0, &table_x);
+    let (kn, vn) = cache_n.gather(0, &table_n);
+    assert!(max_abs_diff(&kx, &kn) < 2e-3, "prefill K diverges");
+    assert!(max_abs_diff(&vx, &vn) < 2e-3, "prefill V diverges");
+}
+
+#[test]
+fn decode_matches_native_numerics() {
+    let Some((xla, native, m)) = backends() else { return };
+    let cfg = m.config;
+    let prompt: Vec<u32> = vec![256, 10, 20, 30, 40];
+
+    let run = |backend: &dyn Backend| -> Vec<Vec<f32>> {
+        let mut cache = PagedKvCache::new(
+            cfg.n_layers,
+            m.num_blocks,
+            m.block_size,
+            cfg.n_kv_heads,
+            cfg.head_dim(),
+        );
+        let mut alloc = BlockAllocator::new(m.num_blocks, m.block_size);
+        let mut table = BlockTable::new();
+        table.reserve(prompt.len() + 3, &mut alloc);
+        let mut outs = vec![backend.prefill(&prompt, &mut cache, &mut table)];
+        for tok in [50u32, 60, 70] {
+            let mut items = [DecodeItem { token: tok, table: &mut table }];
+            let logits = backend.decode(&mut items, &mut cache);
+            outs.push(logits.into_iter().next().unwrap());
+        }
+        outs
+    };
+
+    let lx = run(&xla);
+    let ln = run(&native);
+    for (step, (a, b)) in lx.iter().zip(&ln).enumerate() {
+        let d = max_abs_diff(a, b);
+        assert!(d < 5e-3, "step {step}: logits diverge by {d}");
+    }
+}
+
+#[test]
+fn batched_decode_matches_single() {
+    // Two sequences decoded as one XLA batch == each decoded alone.
+    let Some((xla, _, m)) = backends() else { return };
+    let cfg = m.config;
+    let mk_cache = || {
+        (
+            PagedKvCache::new(
+                cfg.n_layers,
+                m.num_blocks,
+                m.block_size,
+                cfg.n_kv_heads,
+                cfg.head_dim(),
+            ),
+            BlockAllocator::new(m.num_blocks, m.block_size),
+        )
+    };
+
+    // Batched run.
+    let (mut cache, mut alloc) = mk_cache();
+    let mut t1 = BlockTable::new();
+    let mut t2 = BlockTable::new();
+    t1.reserve(5, &mut alloc);
+    t2.reserve(5, &mut alloc);
+    xla.prefill(&[256, 1, 2], &mut cache, &mut t1);
+    xla.prefill(&[256, 7, 8, 9], &mut cache, &mut t2);
+    let mut items = [
+        DecodeItem { token: 3, table: &mut t1 },
+        DecodeItem { token: 10, table: &mut t2 },
+    ];
+    let batched = xla.decode(&mut items, &mut cache);
+
+    // Single runs (fresh caches).
+    let single = |prompt: &[u32], tok: u32| {
+        let (mut cache, mut alloc) = mk_cache();
+        let mut t = BlockTable::new();
+        t.reserve(prompt.len() + 1, &mut alloc);
+        xla.prefill(prompt, &mut cache, &mut t);
+        let mut items = [DecodeItem { token: tok, table: &mut t }];
+        xla.decode(&mut items, &mut cache).into_iter().next().unwrap()
+    };
+    let s1 = single(&[256, 1, 2], 3);
+    let s2 = single(&[256, 7, 8, 9], 10);
+    assert!(max_abs_diff(&batched[0], &s1) < 1e-4, "seq1 batched != single");
+    assert!(max_abs_diff(&batched[1], &s2) < 1e-4, "seq2 batched != single");
+}
+
+#[test]
+fn engine_end_to_end_on_xla_backend() {
+    let Some(m) = manifest() else { return };
+    let weights = ModelWeights::init(&m.config, 7);
+    let xla = XlaBackend::load(m.clone(), &weights).expect("load");
+    let econf = EngineConfig {
+        num_blocks: m.num_blocks,
+        block_size: m.block_size,
+        sched: SchedulerConfig {
+            max_running: 8,
+            max_decode_batch: m.max_decode_batch(),
+            watermark_blocks: 2,
+        },
+        decode_buckets: BucketPolicy::new(
+            m.entries.iter().filter(|e| e.kind == "decode").map(|e| e.batch).collect(),
+        ),
+        prefill_chunk: m.max_prefill_seq(),
+            prefix_cache_blocks: 0,
+    };
+    let mut engine = Engine::new(Box::new(xla), econf);
+    let params = SamplingParams { max_tokens: 4, ..Default::default() };
+    for i in 0..3 {
+        engine.add_request(vec![256, 65 + i, 66], params).unwrap();
+    }
+    let report = engine.run_to_completion();
+    assert_eq!(report.num_requests, 3);
+    let outs = engine.take_outputs();
+    assert_eq!(outs.len(), 3);
+    for o in &outs {
+        assert_eq!(o.tokens.len(), 4);
+    }
+
+    // Determinism cross-backend: the same requests on the native backend
+    // must sample the same tokens (greedy, same weights).
+    let native = NativeBackend::new(NativeModel::new(ModelWeights::init(&m.config, 7)));
+    let econf2 = EngineConfig {
+        num_blocks: m.num_blocks,
+        block_size: m.block_size,
+        sched: SchedulerConfig { max_running: 8, max_decode_batch: 4, watermark_blocks: 2 },
+        decode_buckets: BucketPolicy::exact(4),
+        prefill_chunk: usize::MAX,
+            prefix_cache_blocks: 0,
+    };
+    let mut engine_n = Engine::new(Box::new(native), econf2);
+    for i in 0..3 {
+        engine_n.add_request(vec![256, 65 + i, 66], params).unwrap();
+    }
+    engine_n.run_to_completion();
+    let mut outs_n = engine_n.take_outputs();
+    outs_n.sort_by_key(|o| o.id);
+    let mut outs_x = outs;
+    outs_x.sort_by_key(|o| o.id);
+    for (a, b) in outs_x.iter().zip(&outs_n) {
+        assert_eq!(a.tokens, b.tokens, "greedy tokens must match across backends");
+    }
+}
+
+#[test]
+fn gptq_matmul_artifact_consumes_rust_packing() {
+    // The aux artifact proves the packed format crosses the language
+    // boundary: rust packs → HLO (Pallas kernel) dequantizes+matmuls →
+    // must equal rust's own dequantize + matmul.
+    let Some(m) = manifest() else { return };
+    let path = m.dir.join("gptq_matmul.hlo.txt");
+    if !path.exists() {
+        eprintln!("SKIP: no gptq_matmul artifact");
+        return;
+    }
+    // Shape constants mirrored from aot.py GPTQ_SHAPE.
+    let (rows, cols, group_size, n) = (64usize, 64usize, 32usize, 4usize);
+    let mut rng = opt_gptq::util::rng::Rng::new(11);
+    let w = rng.normal_vec(rows * cols, 1.0);
+    let qm = rtn_quantize(&w, rows, cols, 4, group_size);
+    let packed = pack_rows(&qm);
+    let x = rng.normal_vec(n * cols, 1.0);
+
+    let client = xla::PjRtClient::cpu().unwrap();
+    let proto = xla::HloModuleProto::from_text_file(&path).unwrap();
+    let exe = client.compile(&xla::XlaComputation::from_proto(&proto)).unwrap();
+    let args = [
+        client.buffer_from_host_buffer::<f32>(&x, &[n, cols], None).unwrap(),
+        client
+            .buffer_from_host_buffer::<i32>(&packed.words, &[rows, packed.words_per_row], None)
+            .unwrap(),
+        client
+            .buffer_from_host_buffer::<f32>(&packed.scales, &[rows, qm.groups_per_row()], None)
+            .unwrap(),
+        client
+            .buffer_from_host_buffer::<i32>(&packed.zeros, &[rows, qm.groups_per_row()], None)
+            .unwrap(),
+    ];
+    let out = exe.execute_b(&args).unwrap()[0][0].to_literal_sync().unwrap();
+    let out = out.to_tuple1().unwrap();
+    let got = out.to_vec::<f32>().unwrap();
+
+    // Rust-side expectation.
+    let deq = qm.dequantize();
+    let mut expect = vec![0.0f32; n * rows];
+    for i in 0..n {
+        for r in 0..rows {
+            let mut s = 0.0;
+            for c in 0..cols {
+                s += x[i * cols + c] * deq[r * cols + c];
+            }
+            expect[i * rows + r] = s;
+        }
+    }
+    let d = max_abs_diff(&got, &expect);
+    assert!(d < 1e-3, "gptq matmul artifact diverges from rust packing: {d}");
+}
