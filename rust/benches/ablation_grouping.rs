@@ -102,15 +102,19 @@ fn conversion_mse(
 fn main() {
     opt_gptq::util::logging::init();
     let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    // `--smoke`: one representative noise level, so CI (scripts/verify.sh)
+    // exercises the bench path quickly on every PR.
+    let smoke = args.flag("smoke");
     let h = args.get_usize("heads", 8);
     let groups = args.get_usize("groups", 2);
     let dim = 32;
 
+    let noise_levels: &[f32] = if smoke { &[0.2] } else { &[0.05, 0.2, 0.5, 1.0] };
     let mut t = Table::new(
         "Abl E: dynamic (similarity) vs uniform grouping",
         &["noise", "sim(dynamic)", "sim(uniform)", "MSE(dynamic)", "MSE(uniform)", "dyn wins"],
     );
-    for noise in [0.05f32, 0.2, 0.5, 1.0] {
+    for &noise in noise_levels {
         let (sigs, _) = planted_signatures(h, groups, dim, noise, 42);
         let dynamic = group_heads_by_similarity(&sigs, groups);
         let uniform = uniform_grouping(h, groups);

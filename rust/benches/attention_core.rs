@@ -1,0 +1,293 @@
+//! Attention-core benchmark: the two paths the kernel refactor targets.
+//!
+//! 1. **Single-thread prefill at 2k context** — the block-tiled,
+//!    group-major kernel vs the pre-refactor per-head scalar loop
+//!    (kept verbatim below as the baseline).
+//! 2. **Batched paged decode** — the pre-refactor per-sequence loop vs
+//!    the kernel serially vs the kernel fanned across all cores
+//!    (`paged_decode_batch`).
+//!
+//! Emits `BENCH_attention.json` (repo root) with tokens/s per variant so
+//! the perf trajectory is machine-trackable PR-over-PR. `--smoke` runs a
+//! fast-but-representative configuration for CI.
+
+mod common;
+
+use opt_gptq::attention::alibi::{alibi_bias, alibi_slopes};
+use opt_gptq::attention::gqa::{gqa_attention_into, AttnConfig, Bias};
+use opt_gptq::attention::kernel::Workspace;
+use opt_gptq::attention::paged::paged_decode_batch;
+use opt_gptq::kvcache::{BlockAllocator, BlockTable, PagedKvCache};
+use opt_gptq::tensor::softmax_inplace;
+use opt_gptq::util::benchkit::{black_box, f, Bencher, Table};
+use opt_gptq::util::cli::Args;
+use opt_gptq::util::rng::Rng;
+use std::time::Duration;
+
+/// The seed's prefill inner loop, verbatim: per-query-head scalar
+/// scoring (each K/V row re-read G times), full-width softmax, fresh
+/// buffers every call, per-element `alibi_bias` calls.
+fn naive_gqa_attention(
+    cfg: &AttnConfig,
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    q_len: usize,
+    kv_len: usize,
+    q_offset: usize,
+) -> Vec<f32> {
+    let (h, kvh, d) = (cfg.num_heads, cfg.num_kv_heads, cfg.head_dim);
+    let g = cfg.group_size();
+    let scale = cfg.scale();
+    let slopes = match cfg.bias {
+        Bias::Alibi => alibi_slopes(h),
+        Bias::None => vec![0.0; h],
+    };
+    let mut out = vec![0.0f32; q_len * h * d];
+    let mut scores = vec![0.0f32; kv_len];
+    for qi in 0..q_len {
+        let q_pos = q_offset + qi;
+        let visible = (q_pos + 1).min(kv_len);
+        for head in 0..h {
+            let kv_head = head / g;
+            let q_vec = &q[(qi * h + head) * d..(qi * h + head + 1) * d];
+            for kj in 0..visible {
+                let k_vec = &k[(kj * kvh + kv_head) * d..(kj * kvh + kv_head + 1) * d];
+                let mut s = opt_gptq::tensor::dot(q_vec, k_vec) * scale;
+                if cfg.bias == Bias::Alibi {
+                    s += alibi_bias(slopes[head], q_pos, kj);
+                }
+                scores[kj] = s;
+            }
+            softmax_inplace(&mut scores[..visible]);
+            let o = &mut out[(qi * h + head) * d..(qi * h + head + 1) * d];
+            for kj in 0..visible {
+                let w = scores[kj];
+                let v_vec = &v[(kj * kvh + kv_head) * d..(kj * kvh + kv_head + 1) * d];
+                for (oo, &vv) in o.iter_mut().zip(v_vec) {
+                    *oo += w * vv;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// The seed's paged decode loop, verbatim: per-(kv_head, group-member)
+/// block passes (each K/V row re-read per query head of the group) with
+/// fresh state buffers every call.
+fn naive_paged_decode(
+    cfg: &AttnConfig,
+    cache: &PagedKvCache,
+    layer: usize,
+    q: &[f32],
+    table: &BlockTable,
+) -> Vec<f32> {
+    let (h, kvh, d) = (cfg.num_heads, cfg.num_kv_heads, cfg.head_dim);
+    let g = cfg.group_size();
+    let scale = cfg.scale();
+    let kv_len = table.len();
+    let q_pos = kv_len - 1;
+    let slopes = match cfg.bias {
+        Bias::Alibi => alibi_slopes(h),
+        Bias::None => vec![0.0; h],
+    };
+    let block_size = cache.block_size();
+    let mut m = vec![f32::NEG_INFINITY; h];
+    let mut l = vec![0.0f32; h];
+    let mut acc = vec![0.0f32; h * d];
+    let mut scores = vec![0.0f32; block_size];
+    let mut pos = 0usize;
+    for &block in table.blocks() {
+        if pos >= kv_len {
+            break;
+        }
+        let in_block = block_size.min(kv_len - pos);
+        let kb = cache.key_block(layer, block);
+        let vb = cache.value_block(layer, block);
+        for kv_head in 0..kvh {
+            for gq in 0..g {
+                let head = kv_head * g + gq;
+                let q_vec = &q[head * d..(head + 1) * d];
+                let mut m_blk = f32::NEG_INFINITY;
+                for (slot, s_out) in scores[..in_block].iter_mut().enumerate() {
+                    let k_vec = &kb[(slot * kvh + kv_head) * d..(slot * kvh + kv_head + 1) * d];
+                    let mut s = opt_gptq::tensor::dot(q_vec, k_vec) * scale;
+                    if cfg.bias == Bias::Alibi {
+                        s -= slopes[head] * (q_pos - (pos + slot)) as f32;
+                    }
+                    m_blk = m_blk.max(s);
+                    *s_out = s;
+                }
+                let m_new = m[head].max(m_blk);
+                let corr = (m[head] - m_new).exp();
+                m[head] = m_new;
+                l[head] *= corr;
+                let a = &mut acc[head * d..(head + 1) * d];
+                if corr != 1.0 {
+                    for av in a.iter_mut() {
+                        *av *= corr;
+                    }
+                }
+                for (slot, &s) in scores[..in_block].iter().enumerate() {
+                    let w = (s - m_new).exp();
+                    l[head] += w;
+                    let v_vec = &vb[(slot * kvh + kv_head) * d..(slot * kvh + kv_head + 1) * d];
+                    for (av, &vv) in a.iter_mut().zip(v_vec) {
+                        *av += w * vv;
+                    }
+                }
+            }
+        }
+        pos += in_block;
+    }
+    let mut out = vec![0.0f32; h * d];
+    for head in 0..h {
+        let inv = 1.0 / l[head];
+        for t in 0..d {
+            out[head * d + t] = acc[head * d + t] * inv;
+        }
+    }
+    out
+}
+
+fn main() {
+    opt_gptq::util::logging::init();
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let smoke = args.flag("smoke");
+
+    let h = args.get_usize("heads", 8);
+    let kvh = args.get_usize("kv-heads", 2);
+    let d = args.get_usize("head-dim", 64);
+    let cfg = AttnConfig { num_heads: h, num_kv_heads: kvh, head_dim: d, bias: Bias::Alibi };
+
+    let bench = if smoke {
+        Bencher::new(Duration::from_millis(30), Duration::from_millis(250), 10)
+    } else {
+        Bencher::new(Duration::from_millis(200), Duration::from_secs(1), 50)
+    };
+
+    // ---- 1. single-thread prefill at 2k context ------------------------
+    let ctx = args.get_usize("ctx", 2048);
+    let rows = args.get_usize("rows", if smoke { 96 } else { 256 }).min(ctx);
+    let q_offset = ctx - rows;
+    let mut rng = Rng::new(42);
+    let q = rng.normal_vec(rows * h * d, 1.0);
+    let k = rng.normal_vec(ctx * kvh * d, 1.0);
+    let v = rng.normal_vec(ctx * kvh * d, 1.0);
+
+    let s_naive = bench.bench("prefill@2k naive (pre-refactor loop)", || {
+        black_box(naive_gqa_attention(&cfg, &q, &k, &v, rows, ctx, q_offset));
+    });
+    let mut ws = Workspace::new();
+    let mut pre_out = vec![0.0f32; rows * h * d];
+    let s_kernel = bench.bench("prefill@2k block-tiled kernel", || {
+        gqa_attention_into(&cfg, &q, &k, &v, rows, ctx, q_offset, &mut ws, &mut pre_out);
+        black_box(pre_out[0]);
+    });
+    let prefill_naive_tok_s = rows as f64 / s_naive.mean();
+    let prefill_kernel_tok_s = rows as f64 / s_kernel.mean();
+
+    // ---- 2. batched paged decode: naive / serial / parallel ------------
+    let batch = args.get_usize("batch", 8);
+    let kv_len = args.get_usize("kv", if smoke { 512 } else { 1024 });
+    let block_size = common::BLOCK_SIZE;
+    let blocks_per_seq = kv_len.div_ceil(block_size);
+    let num_blocks = batch * blocks_per_seq + 1;
+    let mut cache = PagedKvCache::new(1, num_blocks, block_size, kvh, d);
+    let mut alloc = BlockAllocator::new(num_blocks, block_size);
+    let mut tables: Vec<BlockTable> = Vec::with_capacity(batch);
+    for _ in 0..batch {
+        let mut t = BlockTable::new();
+        assert!(t.reserve(kv_len, &mut alloc));
+        for _ in 0..kv_len {
+            let (b, s) = t.append_slot(block_size);
+            let kr = rng.normal_vec(kvh * d, 1.0);
+            let vr = rng.normal_vec(kvh * d, 1.0);
+            cache.write_token(0, b, s, &kr, &vr);
+        }
+        tables.push(t);
+    }
+    let table_refs: Vec<&BlockTable> = tables.iter().collect();
+    let qs = rng.normal_vec(batch * h * d, 1.0);
+    let threads =
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1).min(batch);
+
+    let s_dec_naive = bench.bench("decode batch naive (pre-refactor loop)", || {
+        for (i, t) in table_refs.iter().enumerate() {
+            black_box(naive_paged_decode(&cfg, &cache, 0, &qs[i * h * d..(i + 1) * h * d], t));
+        }
+    });
+    let mut dec_out = vec![0.0f32; batch * h * d];
+    let s_dec_serial = bench.bench("decode batch kernel serial (1 thread)", || {
+        paged_decode_batch(&cfg, &cache, 0, &qs, &table_refs, 1, &mut dec_out);
+        black_box(dec_out[0]);
+    });
+    let s_dec_par = bench.bench(&format!("decode batch kernel parallel ({threads} threads)"), || {
+        paged_decode_batch(&cfg, &cache, 0, &qs, &table_refs, threads, &mut dec_out);
+        black_box(dec_out[0]);
+    });
+    let decode_naive_tok_s = batch as f64 / s_dec_naive.mean();
+    let decode_serial_tok_s = batch as f64 / s_dec_serial.mean();
+    let decode_parallel_tok_s = batch as f64 / s_dec_par.mean();
+
+    // ---- report ---------------------------------------------------------
+    let mut t = Table::new(
+        "Attention core: block-tiled kernel vs pre-refactor baseline",
+        &["path", "config", "tok/s", "speedup vs naive"],
+    );
+    t.row(&[
+        "prefill naive".into(),
+        format!("ctx={ctx} rows={rows}"),
+        f(prefill_naive_tok_s, 1),
+        f(1.0, 2),
+    ]);
+    t.row(&[
+        "prefill kernel".into(),
+        format!("ctx={ctx} rows={rows}"),
+        f(prefill_kernel_tok_s, 1),
+        f(prefill_kernel_tok_s / prefill_naive_tok_s, 2),
+    ]);
+    t.row(&[
+        "decode naive".into(),
+        format!("batch={batch} kv={kv_len}"),
+        f(decode_naive_tok_s, 1),
+        f(1.0, 2),
+    ]);
+    t.row(&[
+        "decode serial".into(),
+        format!("batch={batch} kv={kv_len}"),
+        f(decode_serial_tok_s, 1),
+        f(decode_serial_tok_s / decode_naive_tok_s, 2),
+    ]);
+    t.row(&[
+        "decode parallel".into(),
+        format!("batch={batch} kv={kv_len} threads={threads}"),
+        f(decode_parallel_tok_s, 1),
+        f(decode_parallel_tok_s / decode_naive_tok_s, 2),
+    ]);
+    t.print();
+
+    common::write_bench_json(
+        "attention",
+        &[
+            ("smoke", if smoke { 1.0 } else { 0.0 }),
+            ("num_heads", h as f64),
+            ("num_kv_heads", kvh as f64),
+            ("head_dim", d as f64),
+            ("prefill_ctx", ctx as f64),
+            ("prefill_rows", rows as f64),
+            ("prefill_naive_tok_s", prefill_naive_tok_s),
+            ("prefill_kernel_tok_s", prefill_kernel_tok_s),
+            ("prefill_speedup", prefill_kernel_tok_s / prefill_naive_tok_s),
+            ("decode_batch", batch as f64),
+            ("decode_kv_len", kv_len as f64),
+            ("decode_threads", threads as f64),
+            ("decode_naive_tok_s", decode_naive_tok_s),
+            ("decode_serial_tok_s", decode_serial_tok_s),
+            ("decode_parallel_tok_s", decode_parallel_tok_s),
+            ("decode_speedup", decode_parallel_tok_s / decode_naive_tok_s),
+            ("decode_speedup_parallel_vs_serial", decode_parallel_tok_s / decode_serial_tok_s),
+        ],
+    );
+}

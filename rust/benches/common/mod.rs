@@ -5,9 +5,25 @@ use opt_gptq::coordinator::{BucketPolicy, Engine, EngineConfig, RunReport, Sched
 use opt_gptq::model::{ModelConfig, ModelWeights, NativeModel, SamplingParams};
 use opt_gptq::runtime::NativeBackend;
 use opt_gptq::tokenizer::ByteTokenizer;
+use opt_gptq::util::json::Value;
 use opt_gptq::workload::{generate, synth_prompt, LenDist, WorkloadConfig};
 
 pub const BLOCK_SIZE: usize = 16;
+
+/// Write a machine-readable bench artifact `BENCH_<name>.json` at the
+/// repo root (next to ROADMAP.md) so the perf trajectory is tracked
+/// PR-over-PR. Fields are flat `name → number` pairs; key order is
+/// preserved by the in-tree JSON writer.
+#[allow(dead_code)]
+pub fn write_bench_json(name: &str, fields: &[(&str, f64)]) -> std::path::PathBuf {
+    let obj =
+        Value::Obj(fields.iter().map(|(k, v)| (k.to_string(), Value::Num(*v))).collect());
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("..");
+    let path = root.join(format!("BENCH_{name}.json"));
+    std::fs::write(&path, obj.to_string_pretty() + "\n").expect("write bench json");
+    println!("\nwrote {}", path.display());
+    path
+}
 
 /// Engine whose KV pool is sized in BYTES — the paper's comparison puts
 /// MHA and Opt-GQA engines on identical memory budgets, so their *token*

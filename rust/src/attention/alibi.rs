@@ -29,6 +29,11 @@ pub fn alibi_slopes(num_heads: usize) -> Vec<f32> {
 /// slope `m`: `−m · (i − j)` for `j ≤ i` (0 at the diagonal, growing
 /// penalty with distance). Callers handle causality (`j > i` excluded by
 /// loop bounds, never by materializing a mask — that is the point).
+///
+/// This is the scalar *reference* form. The hot paths no longer call it
+/// per element: along a KV tile the bias is an arithmetic progression,
+/// so [`super::kernel`] folds it into the score pass as one add per
+/// slot (`bias += slope`).
 #[inline]
 pub fn alibi_bias(slope: f32, q_pos: usize, k_pos: usize) -> f32 {
     debug_assert!(k_pos <= q_pos);

@@ -6,9 +6,15 @@
 //! (paper configuration) or by nothing (baseline uses the implicit causal
 //! mask only — the paper's MHA baseline likewise materializes no mask in
 //! this implementation, isolating the grouping effect).
+//!
+//! Since the kernel-core refactor this module is a thin driver over
+//! [`super::kernel`]: keys/values stream through the block-tiled,
+//! group-major online-softmax core in [`kernel::KV_TILE`]-row tiles, the
+//! same schedule `paged_decode_attention` uses over cache blocks — so
+//! prefill now enjoys the once-per-group K/V traffic the paper's §II.C
+//! model promises, instead of the seed's per-head scalar loop.
 
-use super::alibi::{alibi_bias, alibi_slopes};
-use crate::tensor::softmax_inplace;
+use super::kernel::{self, with_workspace, Workspace};
 
 /// Positional bias mode.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -48,7 +54,9 @@ impl AttnConfig {
 ///   cache attends to all earlier keys; `kv_len` covers positions
 ///   `0..kv_len`, queries cover `q_offset..q_offset+q_len`).
 ///
-/// Returns `[q_len, num_heads * head_dim]`.
+/// Returns `[q_len, num_heads * head_dim]`. Allocates only the output;
+/// scratch comes from the calling thread's reusable workspace. Callers
+/// that also own the output buffer should use [`gqa_attention_into`].
 pub fn gqa_attention(
     cfg: &AttnConfig,
     q: &[f32],
@@ -58,47 +66,50 @@ pub fn gqa_attention(
     kv_len: usize,
     q_offset: usize,
 ) -> Vec<f32> {
+    let mut out = vec![0.0f32; q_len * cfg.num_heads * cfg.head_dim];
+    with_workspace(|ws| gqa_attention_into(cfg, q, k, v, q_len, kv_len, q_offset, ws, &mut out));
+    out
+}
+
+/// Zero-allocation grouped-query attention: writes into `out`
+/// (`[q_len, num_heads * head_dim]`) using caller-provided scratch.
+///
+/// The workspace may be reused across calls of any shape (see the
+/// [`super::kernel`] contract). Rows with no visible keys come back as
+/// zeros rather than NaN.
+#[allow(clippy::too_many_arguments)]
+pub fn gqa_attention_into(
+    cfg: &AttnConfig,
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    q_len: usize,
+    kv_len: usize,
+    q_offset: usize,
+    ws: &mut Workspace,
+    out: &mut [f32],
+) {
     let (h, kvh, d) = (cfg.num_heads, cfg.num_kv_heads, cfg.head_dim);
     assert_eq!(q.len(), q_len * h * d);
     assert_eq!(k.len(), kv_len * kvh * d);
     assert_eq!(v.len(), kv_len * kvh * d);
-    let g = cfg.group_size();
-    let scale = cfg.scale();
-    let slopes = match cfg.bias {
-        Bias::Alibi => alibi_slopes(h),
-        Bias::None => vec![0.0; h],
-    };
-
-    let mut out = vec![0.0f32; q_len * h * d];
-    let mut scores = vec![0.0f32; kv_len];
+    assert_eq!(out.len(), q_len * h * d);
+    let tile = kernel::KV_TILE.min(kv_len.max(1));
+    ws.configure(cfg, tile);
+    let rs = kvh * d;
     for qi in 0..q_len {
         let q_pos = q_offset + qi;
         let visible = (q_pos + 1).min(kv_len);
-        for head in 0..h {
-            let kv_head = head / g;
-            let q_vec = &q[(qi * h + head) * d..(qi * h + head + 1) * d];
-            // Scores against every visible key of the shared KV head.
-            for kj in 0..visible {
-                let k_vec = &k[(kj * kvh + kv_head) * d..(kj * kvh + kv_head + 1) * d];
-                let mut s = crate::tensor::dot(q_vec, k_vec) * scale;
-                if cfg.bias == Bias::Alibi {
-                    s += alibi_bias(slopes[head], q_pos, kj);
-                }
-                scores[kj] = s;
-            }
-            softmax_inplace(&mut scores[..visible]);
-            // Weighted sum of values.
-            let o = &mut out[(qi * h + head) * d..(qi * h + head + 1) * d];
-            for kj in 0..visible {
-                let w = scores[kj];
-                let v_vec = &v[(kj * kvh + kv_head) * d..(kj * kvh + kv_head + 1) * d];
-                for (oo, &vv) in o.iter_mut().zip(v_vec) {
-                    *oo += w * vv;
-                }
-            }
+        let q_row = &q[qi * h * d..(qi + 1) * h * d];
+        ws.begin_row();
+        let mut pos = 0;
+        while pos < visible {
+            let vis = tile.min(visible - pos);
+            ws.process_tile(q_row, &k[pos * rs..(pos + vis) * rs], &v[pos * rs..(pos + vis) * rs], pos, vis, q_pos);
+            pos += vis;
         }
+        ws.finish_row(&mut out[qi * h * d..(qi + 1) * h * d]);
     }
-    out
 }
 
 /// FLOPs of one grouped-query attention call (score + weighted-sum
@@ -117,6 +128,7 @@ pub fn kv_bytes_per_token(cfg: &AttnConfig) -> usize {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::tensor::softmax_inplace;
     use crate::util::rng::Rng;
 
     fn cfg(h: usize, kvh: usize, bias: Bias) -> AttnConfig {
@@ -258,6 +270,27 @@ mod tests {
         let out = gqa_attention(&c, &q, &k, &v, 1, kv_len, kv_len - 1);
         // Unbiased average of 0..7 is 3.5; ALiBi must pull it above that.
         assert!(out[0] > 3.5, "out={}", out[0]);
+    }
+
+    #[test]
+    fn into_variant_matches_allocating_wrapper() {
+        // Same kernel, caller-owned buffers: must be bit-identical, and a
+        // reused workspace must not perturb results across shapes.
+        let mut rng = Rng::new(12);
+        let mut ws = Workspace::new();
+        for &(h, kvh, q_len, kv_len) in
+            &[(4usize, 2usize, 3usize, 9usize), (2, 1, 1, 70), (8, 8, 5, 5)]
+        {
+            let d = 8;
+            let c = AttnConfig { num_heads: h, num_kv_heads: kvh, head_dim: d, bias: Bias::Alibi };
+            let q = rng.normal_vec(q_len * h * d, 1.0);
+            let k = rng.normal_vec(kv_len * kvh * d, 1.0);
+            let v = rng.normal_vec(kv_len * kvh * d, 1.0);
+            let expect = gqa_attention(&c, &q, &k, &v, q_len, kv_len, kv_len.saturating_sub(q_len));
+            let mut out = vec![0.0f32; q_len * h * d];
+            gqa_attention_into(&c, &q, &k, &v, q_len, kv_len, kv_len.saturating_sub(q_len), &mut ws, &mut out);
+            assert_eq!(out, expect, "h={h} kvh={kvh}");
+        }
     }
 
     #[test]

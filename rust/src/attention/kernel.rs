@@ -1,0 +1,408 @@
+//! The block-tiled, group-major attention kernel core.
+//!
+//! Both native attention paths — contiguous prefill ([`super::gqa`]) and
+//! paged decode ([`super::paged`]) — are thin drivers over this module.
+//! The schedule is the one the paper's DCU kernel exploits (§II.C) and
+//! the Pallas kernels mirror on TPU:
+//!
+//! * **Block tiling** — keys/values are consumed in fixed-size tiles
+//!   (cache blocks on the paged path, [`KV_TILE`]-row chunks on the
+//!   contiguous path) with a flash-style *online softmax*: running max,
+//!   running normalizer, and a rescaled accumulator, so no score matrix
+//!   is ever materialized at full context width.
+//! * **Group-major loops** — within a tile, each K row and each V row is
+//!   loaded once per *group* (i.e. once per KV head) and dotted against
+//!   all `G = num_heads / num_kv_heads` query heads of that group, not
+//!   once per query head. This is the paper's G× traffic saving, now
+//!   shared by prefill and decode.
+//! * **Incremental ALiBi** — the linear bias `-m_h·(q_pos − k_pos)` is
+//!   an arithmetic progression along a tile, so it is folded into the
+//!   score pass as one add per slot instead of a per-element call.
+//!
+//! # Workspace contract
+//!
+//! [`Workspace`] owns every scratch buffer the kernel needs. Callers
+//! *may and should* reuse one workspace across calls (any shapes): the
+//! buffers are grown once and reused, so steady-state attention performs
+//! **zero heap allocations**. The convenience wrappers in `gqa`/`paged`
+//! use a thread-local workspace via [`with_workspace`]; multi-threaded
+//! drivers (see [`super::paged::paged_decode_batch`]) give each worker
+//! its own workspace. A workspace is plain state — no interior mutability
+//! — so `&mut Workspace` is the only synchronization needed.
+
+use super::alibi::alibi_slopes;
+use super::gqa::{AttnConfig, Bias};
+use crate::tensor::dot;
+use std::cell::RefCell;
+
+/// KV rows per tile on the contiguous (prefill) path. Sized so one tile
+/// of K plus one of V for a group stays L1-resident at typical head
+/// dims; the paged path tiles by the cache's block size instead.
+pub const KV_TILE: usize = 64;
+
+/// Reusable scratch state for one query row's attention.
+///
+/// See the module docs for the reuse contract. All buffers are sized by
+/// [`Workspace::configure`] and survive across calls.
+#[derive(Debug, Default)]
+pub struct Workspace {
+    num_heads: usize,
+    kv_heads: usize,
+    head_dim: usize,
+    group: usize,
+    scale: f32,
+    use_alibi: bool,
+    tile_cap: usize,
+    /// Per-head ALiBi slopes (all zeros for `Bias::None`).
+    slopes: Vec<f32>,
+    /// Online-softmax running max, per query head.
+    m: Vec<f32>,
+    /// Online-softmax running normalizer, per query head.
+    l: Vec<f32>,
+    /// Running weighted-value accumulator, `[num_heads, head_dim]`.
+    acc: Vec<f32>,
+    /// Per-tile score→weight scratch, group-major `[group, tile_cap]`.
+    w: Vec<f32>,
+}
+
+impl Workspace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// (Re)configure for an attention shape and tile capacity.
+    ///
+    /// Cheap when the shape repeats: buffers only reallocate when they
+    /// grow, and the slope table is rebuilt only when the head count or
+    /// bias mode changes.
+    pub fn configure(&mut self, cfg: &AttnConfig, tile_cap: usize) {
+        let (h, kvh, d) = (cfg.num_heads, cfg.num_kv_heads, cfg.head_dim);
+        let g = cfg.group_size();
+        let use_alibi = cfg.bias == Bias::Alibi;
+        if self.num_heads != h || self.use_alibi != use_alibi || self.slopes.len() != h {
+            self.slopes = if use_alibi { alibi_slopes(h) } else { vec![0.0; h] };
+        }
+        self.num_heads = h;
+        self.kv_heads = kvh;
+        self.head_dim = d;
+        self.group = g;
+        self.scale = cfg.scale();
+        self.use_alibi = use_alibi;
+        self.tile_cap = tile_cap.max(1);
+        self.m.resize(h, 0.0);
+        self.l.resize(h, 0.0);
+        self.acc.resize(h * d, 0.0);
+        self.w.resize(g * self.tile_cap, 0.0);
+    }
+
+    /// Reset the online-softmax state for a fresh query row.
+    pub fn begin_row(&mut self) {
+        self.m.fill(f32::NEG_INFINITY);
+        self.l.fill(0.0);
+        self.acc.fill(0.0);
+    }
+
+    /// Fold one KV tile into the running state of query row `q_row`
+    /// (`[num_heads * head_dim]`, absolute position `q_pos`).
+    ///
+    /// `k_tile`/`v_tile` hold `visible` rows laid out `[row, kv_heads,
+    /// head_dim]` (row stride `kv_heads * head_dim`) covering absolute
+    /// key positions `tile_pos .. tile_pos + visible`. Causality is the
+    /// caller's loop bound: rows a query must not see are simply not
+    /// passed. `visible` must be in `1..=tile_cap`.
+    pub fn process_tile(
+        &mut self,
+        q_row: &[f32],
+        k_tile: &[f32],
+        v_tile: &[f32],
+        tile_pos: usize,
+        visible: usize,
+        q_pos: usize,
+    ) {
+        let (kvh, d, g) = (self.kv_heads, self.head_dim, self.group);
+        let tile_cap = self.tile_cap;
+        let scale = self.scale;
+        let rs = kvh * d; // tile row stride
+        debug_assert!(visible > 0 && visible <= tile_cap, "visible={visible} cap={tile_cap}");
+        debug_assert!(tile_pos + visible <= q_pos + 1, "tile reaches past the query position");
+        debug_assert_eq!(q_row.len(), self.num_heads * d);
+        debug_assert!(k_tile.len() >= visible * rs);
+        debug_assert!(v_tile.len() >= visible * rs);
+
+        for kv_head in 0..kvh {
+            let head0 = kv_head * g;
+            // Pass 1 — raw scores. Each K row is loaded ONCE and dotted
+            // against every query head of the group (group-major order).
+            for slot in 0..visible {
+                let base = slot * rs + kv_head * d;
+                let k_vec = &k_tile[base..base + d];
+                for gq in 0..g {
+                    let q_vec = &q_row[(head0 + gq) * d..(head0 + gq + 1) * d];
+                    self.w[gq * tile_cap + slot] = dot(q_vec, k_vec);
+                }
+            }
+            // Per head: scale + incremental ALiBi, tile max, one online
+            // rescale of (m, l, acc), then score→weight transform.
+            for gq in 0..g {
+                let head = head0 + gq;
+                let slope = self.slopes[head];
+                let row = &mut self.w[gq * tile_cap..gq * tile_cap + visible];
+                let mut m_blk = f32::NEG_INFINITY;
+                if self.use_alibi {
+                    // bias(slot) = −slope·(q_pos − (tile_pos+slot)) is an
+                    // arithmetic progression: one add per slot.
+                    let mut bias = -slope * (q_pos - tile_pos) as f32;
+                    for s in row.iter_mut() {
+                        *s = *s * scale + bias;
+                        bias += slope;
+                        m_blk = m_blk.max(*s);
+                    }
+                } else {
+                    for s in row.iter_mut() {
+                        *s *= scale;
+                        m_blk = m_blk.max(*s);
+                    }
+                }
+                if m_blk == f32::NEG_INFINITY {
+                    // Every score in the tile is −∞ (e.g. ±∞ inputs): the
+                    // tile contributes zero weight. Zero the scratch so
+                    // pass 2 is a no-op and leave (m, l, acc) untouched —
+                    // this is what keeps the final normalization safe.
+                    // `max` ignores NaN, so an all-NaN tile also lands
+                    // here: poison the normalizer instead of masking the
+                    // upstream numerical bug behind zero output (mixed
+                    // finite/NaN tiles already propagate via exp()).
+                    if row.iter().any(|s| s.is_nan()) {
+                        self.l[head] = f32::NAN;
+                    }
+                    row.fill(0.0);
+                    continue;
+                }
+                let m_prev = self.m[head];
+                let m_new = m_prev.max(m_blk);
+                self.m[head] = m_new;
+                let corr =
+                    if m_prev == f32::NEG_INFINITY { 0.0 } else { (m_prev - m_new).exp() };
+                self.l[head] *= corr;
+                if corr != 1.0 {
+                    for a in &mut self.acc[head * d..(head + 1) * d] {
+                        *a *= corr;
+                    }
+                }
+                let mut lsum = 0.0f32;
+                for s in row.iter_mut() {
+                    *s = (*s - m_new).exp();
+                    lsum += *s;
+                }
+                self.l[head] += lsum;
+            }
+            // Pass 2 — weighted values. Each V row is loaded ONCE per
+            // group and accumulated into all G query heads.
+            for slot in 0..visible {
+                let base = slot * rs + kv_head * d;
+                let v_vec = &v_tile[base..base + d];
+                for gq in 0..g {
+                    let wgt = self.w[gq * tile_cap + slot];
+                    if wgt == 0.0 {
+                        continue;
+                    }
+                    let a = &mut self.acc[(head0 + gq) * d..(head0 + gq + 1) * d];
+                    for (av, &vv) in a.iter_mut().zip(v_vec) {
+                        *av += wgt * vv;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Normalize the accumulator into `out_row` (`[num_heads*head_dim]`).
+    ///
+    /// A head whose normalizer is exactly zero — no visible keys, or
+    /// every score was −∞ — yields zeros instead of dividing by zero
+    /// (the seed's `1.0 / l` NaN hazard). A NaN normalizer (NaN Q/K/V
+    /// upstream) trips a debug assertion with context and is otherwise
+    /// allowed to *propagate* as NaN output: silently zeroing it would
+    /// mask a real numerical bug behind plausible logits.
+    pub fn finish_row(&self, out_row: &mut [f32]) {
+        let (h, d) = (self.num_heads, self.head_dim);
+        debug_assert_eq!(out_row.len(), h * d);
+        for head in 0..h {
+            let l = self.l[head];
+            debug_assert!(
+                !l.is_nan(),
+                "attention normalizer is NaN for head {head} (non-finite inputs?)"
+            );
+            let out = &mut out_row[head * d..(head + 1) * d];
+            if l == 0.0 {
+                out.fill(0.0);
+            } else {
+                let inv = 1.0 / l;
+                for (o, &a) in out.iter_mut().zip(&self.acc[head * d..(head + 1) * d]) {
+                    *o = a * inv;
+                }
+            }
+        }
+    }
+}
+
+thread_local! {
+    static WORKSPACE: RefCell<Workspace> = RefCell::new(Workspace::new());
+}
+
+/// Run `f` with this thread's reusable attention workspace.
+///
+/// The allocating convenience wrappers (`gqa_attention`,
+/// `paged_decode_attention`) route through this so repeated calls on one
+/// thread reuse scratch buffers. `f` must not re-enter `with_workspace`.
+pub fn with_workspace<R>(f: impl FnOnce(&mut Workspace) -> R) -> R {
+    WORKSPACE.with(|w| f(&mut w.borrow_mut()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::softmax_inplace;
+    use crate::util::rng::Rng;
+
+    /// Naive single-row reference: full softmax per head.
+    fn reference_row(
+        cfg: &AttnConfig,
+        q_row: &[f32],
+        k: &[f32],
+        v: &[f32],
+        kv_len: usize,
+        q_pos: usize,
+    ) -> Vec<f32> {
+        let (h, kvh, d) = (cfg.num_heads, cfg.num_kv_heads, cfg.head_dim);
+        let g = cfg.group_size();
+        let scale = cfg.scale();
+        let slopes = match cfg.bias {
+            Bias::Alibi => alibi_slopes(h),
+            Bias::None => vec![0.0; h],
+        };
+        let visible = (q_pos + 1).min(kv_len);
+        let mut out = vec![0.0f32; h * d];
+        for head in 0..h {
+            let kv_head = head / g;
+            let q_vec = &q_row[head * d..(head + 1) * d];
+            let mut s: Vec<f32> = (0..visible)
+                .map(|j| {
+                    let k_vec = &k[(j * kvh + kv_head) * d..(j * kvh + kv_head + 1) * d];
+                    dot(q_vec, k_vec) * scale - slopes[head] * (q_pos - j) as f32
+                })
+                .collect();
+            softmax_inplace(&mut s);
+            for (j, &wj) in s.iter().enumerate() {
+                let v_vec = &v[(j * kvh + kv_head) * d..(j * kvh + kv_head + 1) * d];
+                for t in 0..d {
+                    out[head * d + t] += wj * v_vec[t];
+                }
+            }
+        }
+        out
+    }
+
+    fn run_tiled(
+        cfg: &AttnConfig,
+        ws: &mut Workspace,
+        q_row: &[f32],
+        k: &[f32],
+        v: &[f32],
+        kv_len: usize,
+        q_pos: usize,
+        tile: usize,
+    ) -> Vec<f32> {
+        let rs = cfg.num_kv_heads * cfg.head_dim;
+        ws.configure(cfg, tile);
+        ws.begin_row();
+        let visible = (q_pos + 1).min(kv_len);
+        let mut pos = 0;
+        while pos < visible {
+            let vis = tile.min(visible - pos);
+            ws.process_tile(q_row, &k[pos * rs..(pos + vis) * rs], &v[pos * rs..(pos + vis) * rs], pos, vis, q_pos);
+            pos += vis;
+        }
+        let mut out = vec![0.0f32; cfg.num_heads * cfg.head_dim];
+        ws.finish_row(&mut out);
+        out
+    }
+
+    #[test]
+    fn tile_size_invariance_matches_reference() {
+        let mut ws = Workspace::new();
+        for &bias in &[Bias::Alibi, Bias::None] {
+            for &(h, kvh) in &[(4usize, 1usize), (4, 2), (8, 8)] {
+                for &(kv_len, q_pos) in &[(1usize, 0usize), (5, 4), (16, 9), (33, 40)] {
+                    let d = 8;
+                    let cfg = AttnConfig { num_heads: h, num_kv_heads: kvh, head_dim: d, bias };
+                    let mut rng = Rng::new((h * 100 + kvh * 10 + kv_len) as u64);
+                    let q = rng.normal_vec(h * d, 1.0);
+                    let k = rng.normal_vec(kv_len * kvh * d, 1.0);
+                    let v = rng.normal_vec(kv_len * kvh * d, 1.0);
+                    let expect = reference_row(&cfg, &q, &k, &v, kv_len, q_pos);
+                    for tile in [1usize, 3, 7, 16, 64] {
+                        let got = run_tiled(&cfg, &mut ws, &q, &k, &v, kv_len, q_pos, tile);
+                        for (i, (a, b)) in got.iter().zip(&expect).enumerate() {
+                            assert!(
+                                (a - b).abs() < 1e-5,
+                                "bias={bias:?} h={h} kvh={kvh} kv={kv_len} qp={q_pos} tile={tile} i={i}: {a} vs {b}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn no_visible_keys_yields_zeros() {
+        let cfg = AttnConfig { num_heads: 2, num_kv_heads: 1, head_dim: 4, bias: Bias::None };
+        let mut ws = Workspace::new();
+        ws.configure(&cfg, 8);
+        ws.begin_row();
+        let mut out = vec![1.0f32; 8];
+        ws.finish_row(&mut out);
+        assert_eq!(out, vec![0.0; 8]);
+    }
+
+    #[test]
+    fn neg_inf_scores_do_not_poison_state() {
+        // A tile whose scores are all −∞ must contribute nothing and
+        // leave later (finite) tiles intact.
+        let cfg = AttnConfig { num_heads: 1, num_kv_heads: 1, head_dim: 4, bias: Bias::None };
+        let mut ws = Workspace::new();
+        ws.configure(&cfg, 4);
+        ws.begin_row();
+        let q = vec![1.0f32; 4];
+        let k_bad = vec![f32::NEG_INFINITY; 4];
+        let v_bad = vec![9.0f32; 4];
+        ws.process_tile(&q, &k_bad, &v_bad, 0, 1, 5);
+        let k_ok = vec![0.5f32; 4];
+        let v_ok = vec![2.0f32; 4];
+        ws.process_tile(&q, &k_ok, &v_ok, 1, 1, 5);
+        let mut out = vec![0.0f32; 4];
+        ws.finish_row(&mut out);
+        // Only the finite key is weighted → output is exactly its V row.
+        for &o in &out {
+            assert!((o - 2.0).abs() < 1e-6, "out={out:?}");
+        }
+    }
+
+    #[test]
+    fn workspace_reuse_across_shrinking_shapes() {
+        // Reconfiguring to a smaller shape must not leak stale state.
+        let mut ws = Workspace::new();
+        let big = AttnConfig { num_heads: 8, num_kv_heads: 4, head_dim: 8, bias: Bias::Alibi };
+        let mut rng = Rng::new(3);
+        let (kq, kk, kv) =
+            (rng.normal_vec(8 * 8, 1.0), rng.normal_vec(20 * 4 * 8, 1.0), rng.normal_vec(20 * 4 * 8, 1.0));
+        let _ = run_tiled(&big, &mut ws, &kq, &kk, &kv, 20, 19, 16);
+        let small = AttnConfig { num_heads: 2, num_kv_heads: 1, head_dim: 4, bias: Bias::None };
+        let sq = rng.normal_vec(2 * 4, 1.0);
+        let sk = rng.normal_vec(3 * 4, 1.0);
+        let sv = rng.normal_vec(3 * 4, 1.0);
+        let reused = run_tiled(&small, &mut ws, &sq, &sk, &sv, 3, 2, 4);
+        let fresh = run_tiled(&small, &mut Workspace::new(), &sq, &sk, &sv, 3, 2, 4);
+        assert_eq!(reused, fresh);
+    }
+}

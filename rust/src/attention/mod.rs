@@ -1,23 +1,35 @@
 //! Attention mechanisms: the paper's Opt-GQA and its baselines.
 //!
+//! * [`kernel`] — the block-tiled, group-major attention core: flash
+//!   style online softmax over KV tiles with a reusable [`Workspace`]
+//!   (zero-alloc in steady state). Both paths below are thin drivers
+//!   over it.
 //! * [`gqa`] — grouped-query attention: `num_heads` query heads share
 //!   `num_kv_heads` K/V heads in groups of `G = num_heads/num_kv_heads`.
 //!   MHA is the `num_kv_heads == num_heads` special case (the paper's
-//!   baseline), MQA the `num_kv_heads == 1` extreme.
+//!   baseline), MQA the `num_kv_heads == 1` extreme. Prefill streams
+//!   contiguous K/V through the kernel in [`kernel::KV_TILE`]-row tiles.
 //! * [`alibi`] — Attention-with-Linear-Biases slopes and fused bias
-//!   (replaces materialized causal masks, paper §III.A).
+//!   (replaces materialized causal masks, paper §III.A). The kernel
+//!   folds the bias into the score pass incrementally, one add per tile
+//!   slot.
 //! * [`grouping`] — dynamic activation-similarity head grouping
 //!   (paper §II.B "Dynamic Grouping Optimization").
-//! * [`paged`] — decode attention directly over the paged KV cache with
-//!   a streaming (online-softmax) inner loop — the native mirror of the
-//!   Pallas kernel in `python/compile/kernels/paged_attention.py`.
+//! * [`paged`] — decode attention directly over the paged KV cache;
+//!   cache blocks are the kernel's tiles. [`paged_decode_batch`] fans a
+//!   decode step across a scoped thread pool with per-worker
+//!   workspaces, bit-identical to the serial loop.
 
 pub mod alibi;
 pub mod gqa;
 pub mod grouping;
+pub mod kernel;
 pub mod paged;
 
 pub use alibi::alibi_slopes;
-pub use gqa::{gqa_attention, AttnConfig, Bias};
+pub use gqa::{gqa_attention, gqa_attention_into, AttnConfig, Bias};
 pub use grouping::{group_heads_by_similarity, merge_kv_heads};
-pub use paged::paged_decode_attention;
+pub use kernel::{with_workspace, Workspace};
+pub use paged::{
+    auto_decode_threads, paged_decode_attention, paged_decode_attention_into, paged_decode_batch,
+};

@@ -1,14 +1,21 @@
 //! Paged decode attention — the native mirror of the Pallas kernel.
 //!
 //! One query token attends over a sequence whose K/V live in
-//! non-contiguous pool blocks (via its block table). The inner loop is
-//! block-wise with an *online softmax* (running max + rescaled
-//! accumulator), the same schedule the Pallas kernel uses on TPU: each
-//! KV block is touched exactly once per *group*, not once per query head
-//! — the G× traffic saving the paper's DCU kernel exploits.
+//! non-contiguous pool blocks (via its block table). Since the
+//! kernel-core refactor the per-block inner loop lives in
+//! [`super::kernel`]: cache blocks are exactly the kernel's KV tiles, so
+//! decode and prefill share one block-tiled, group-major online-softmax
+//! schedule — each KV block row touched once per *group*, not once per
+//! query head, the G× traffic saving the paper's DCU kernel exploits.
+//!
+//! [`paged_decode_batch`] fans a whole decode step's sequences across a
+//! scoped thread pool (`std::thread::scope`, no extra dependencies) with
+//! one private [`Workspace`] per worker; its outputs are bit-identical
+//! to the serial loop because sequences are independent and the
+//! per-sequence schedule is unchanged.
 
-use super::alibi::alibi_slopes;
-use super::gqa::{AttnConfig, Bias};
+use super::gqa::AttnConfig;
+use super::kernel::{with_workspace, Workspace};
 use crate::kvcache::{BlockTable, PagedKvCache};
 
 /// Decode attention for one sequence.
@@ -17,7 +24,8 @@ use crate::kvcache::{BlockTable, PagedKvCache};
 /// * `table`: the sequence's block table; `table.len()` keys are visible
 ///   (the current token's K/V must already be written).
 ///
-/// Returns `[num_heads * head_dim]`.
+/// Returns `[num_heads * head_dim]`. Allocates only the output; scratch
+/// comes from the calling thread's reusable workspace.
 pub fn paged_decode_attention(
     cfg: &AttnConfig,
     cache: &PagedKvCache,
@@ -25,95 +33,169 @@ pub fn paged_decode_attention(
     q: &[f32],
     table: &BlockTable,
 ) -> Vec<f32> {
+    let mut out = vec![0.0f32; cfg.num_heads * cfg.head_dim];
+    with_workspace(|ws| paged_decode_attention_into(cfg, cache, layer, q, table, ws, &mut out));
+    out
+}
+
+/// Zero-allocation paged decode attention into a caller-owned buffer.
+///
+/// The workspace may be reused across calls of any shape (see the
+/// [`super::kernel`] contract). A head whose every score is −∞ yields
+/// zeros instead of the seed's `1.0 / 0.0` NaN.
+pub fn paged_decode_attention_into(
+    cfg: &AttnConfig,
+    cache: &PagedKvCache,
+    layer: usize,
+    q: &[f32],
+    table: &BlockTable,
+    ws: &mut Workspace,
+    out: &mut [f32],
+) {
     let (h, kvh, d) = (cfg.num_heads, cfg.num_kv_heads, cfg.head_dim);
     assert_eq!(q.len(), h * d);
+    assert_eq!(out.len(), h * d);
     assert_eq!(kvh, cache.kv_heads());
     assert_eq!(d, cache.head_dim());
-    let g = cfg.group_size();
-    let scale = cfg.scale();
     let kv_len = table.len();
     assert!(kv_len > 0, "decode over empty cache");
     let q_pos = kv_len - 1;
-    let slopes = match cfg.bias {
-        Bias::Alibi => alibi_slopes(h),
-        Bias::None => vec![0.0; h],
-    };
     let block_size = cache.block_size();
+    let rs = kvh * d;
 
-    // Online-softmax state per query head.
-    let mut m = vec![f32::NEG_INFINITY; h]; // running max
-    let mut l = vec![0.0f32; h]; // running normalizer
-    let mut acc = vec![0.0f32; h * d]; // running weighted sum
-
-    // Per-block score buffer (one query head at a time).
-    let mut scores = vec![0.0f32; block_size];
+    ws.configure(cfg, block_size);
+    ws.begin_row();
     let mut pos = 0usize;
     for &block in table.blocks() {
         if pos >= kv_len {
             break;
         }
         let in_block = block_size.min(kv_len - pos);
-        let kb = cache.key_block(layer, block);
-        let vb = cache.value_block(layer, block);
-        // Process per KV head so each block row is read once per GROUP,
-        // with a two-pass block-level online softmax: score the whole
-        // block first, then rescale the accumulator ONCE per block
-        // (instead of once per slot) before the weighted-value pass.
-        for kv_head in 0..kvh {
-            for gq in 0..g {
-                let head = kv_head * g + gq;
-                let q_vec = &q[head * d..(head + 1) * d];
-                // Pass 1: scores + block max.
-                let mut m_blk = f32::NEG_INFINITY;
-                for (slot, s_out) in scores[..in_block].iter_mut().enumerate() {
-                    let k_vec = &kb[(slot * kvh + kv_head) * d..(slot * kvh + kv_head + 1) * d];
-                    let mut s = crate::tensor::dot(q_vec, k_vec) * scale;
-                    if cfg.bias == Bias::Alibi {
-                        s -= slopes[head] * (q_pos - (pos + slot)) as f32;
-                    }
-                    m_blk = m_blk.max(s);
-                    *s_out = s;
-                }
-                // Single rescale to the new running max.
-                let m_new = m[head].max(m_blk);
-                let corr = (m[head] - m_new).exp();
-                m[head] = m_new;
-                l[head] *= corr;
-                let a = &mut acc[head * d..(head + 1) * d];
-                if corr != 1.0 {
-                    for av in a.iter_mut() {
-                        *av *= corr;
-                    }
-                }
-                // Pass 2: weighted-value accumulation.
-                for (slot, &s) in scores[..in_block].iter().enumerate() {
-                    let w = (s - m_new).exp();
-                    l[head] += w;
-                    let v_vec = &vb[(slot * kvh + kv_head) * d..(slot * kvh + kv_head + 1) * d];
-                    for (av, &vv) in a.iter_mut().zip(v_vec) {
-                        *av += w * vv;
-                    }
-                }
-            }
-        }
+        ws.process_tile(
+            q,
+            &cache.key_block(layer, block)[..in_block * rs],
+            &cache.value_block(layer, block)[..in_block * rs],
+            pos,
+            in_block,
+            q_pos,
+        );
         pos += in_block;
     }
+    ws.finish_row(out);
+}
 
-    // Normalize.
-    let mut out = vec![0.0f32; h * d];
-    for head in 0..h {
-        let inv = 1.0 / l[head];
-        for t in 0..d {
-            out[head * d + t] = acc[head * d + t] * inv;
-        }
+/// Decode attention for a whole batch in one step, fanned across
+/// `threads` scoped workers with per-worker workspaces.
+///
+/// * `qs`: `[batch, num_heads * head_dim]` query rows, one per sequence.
+/// * `tables`: one block table per sequence (same order).
+/// * `out`: `[batch, num_heads * head_dim]`, fully overwritten.
+///
+/// Sequences are split into contiguous chunks balanced by **KV length**
+/// (attention cost is ∝ `table.len()`, so count-based chunking would
+/// let one long-context chunk serialize the step), one worker per
+/// chunk, at most `threads` chunks. Outputs are **bit-identical** to
+/// the serial loop (`threads == 1`): each sequence's computation is
+/// independent and its instruction order is unchanged — threading only
+/// changes *who* runs it.
+pub fn paged_decode_batch(
+    cfg: &AttnConfig,
+    cache: &PagedKvCache,
+    layer: usize,
+    qs: &[f32],
+    tables: &[&BlockTable],
+    threads: usize,
+    out: &mut [f32],
+) {
+    let row = cfg.num_heads * cfg.head_dim;
+    let n = tables.len();
+    assert_eq!(qs.len(), n * row);
+    assert_eq!(out.len(), n * row);
+    if n == 0 {
+        return;
     }
-    out
+    let threads = threads.clamp(1, n);
+    if threads == 1 {
+        with_workspace(|ws| {
+            for i in 0..n {
+                paged_decode_attention_into(
+                    cfg,
+                    cache,
+                    layer,
+                    &qs[i * row..(i + 1) * row],
+                    tables[i],
+                    ws,
+                    &mut out[i * row..(i + 1) * row],
+                );
+            }
+        });
+        return;
+    }
+    // Cost-balanced contiguous partition (greedy target cut): a chunk
+    // closes as soon as its own cost reaches ⌈total/threads⌉, so every
+    // chunk but the last carries ≥ target cost — at most `threads`
+    // chunks — and a single dominant sequence gets a chunk to itself
+    // instead of dragging the rest of the batch onto its worker.
+    let costs: Vec<usize> = tables.iter().map(|t| t.len().max(1)).collect();
+    let total_cost: usize = costs.iter().sum();
+    let target = total_cost.div_ceil(threads);
+    std::thread::scope(|s| {
+        let mut rest = out;
+        let mut start = 0usize;
+        while start < n {
+            let mut take = 1usize;
+            let mut cost = costs[start];
+            while cost < target && start + take < n {
+                cost += costs[start + take];
+                take += 1;
+            }
+            // `mem::take` moves the slice out so the split-off chunk keeps
+            // the full borrow lifetime the spawned worker needs.
+            let (chunk_out, tail) = std::mem::take(&mut rest).split_at_mut(take * row);
+            rest = tail;
+            let q_chunk = &qs[start * row..(start + take) * row];
+            let t_chunk = &tables[start..start + take];
+            s.spawn(move || {
+                let mut ws = Workspace::new();
+                for (j, table) in t_chunk.iter().enumerate() {
+                    paged_decode_attention_into(
+                        cfg,
+                        cache,
+                        layer,
+                        &q_chunk[j * row..(j + 1) * row],
+                        table,
+                        &mut ws,
+                        &mut chunk_out[j * row..(j + 1) * row],
+                    );
+                }
+            });
+            start += take;
+        }
+    });
+}
+
+/// Heuristic fan-out width for one decode step: all cores once the
+/// batch's total KV footprint is large enough to amortize the scoped
+/// thread spawn, serial otherwise (tiny steps lose more to spawn
+/// latency than they gain).
+///
+/// The model drivers spawn one scope per *layer*, but the ratio is
+/// layer-invariant: each layer pays one spawn and does one layer's
+/// attention over the same `total_kv_tokens`, so a threshold tuned for
+/// one layer holds for any depth. (A persistent pool that amortizes
+/// spawns across layers is a ROADMAP follow-up.)
+pub fn auto_decode_threads(batch: usize, total_kv_tokens: usize) -> usize {
+    const MIN_PARALLEL_KV: usize = 2048;
+    if batch < 2 || total_kv_tokens < MIN_PARALLEL_KV {
+        return 1;
+    }
+    std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1).min(batch)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::attention::gqa::gqa_attention;
+    use crate::attention::gqa::{gqa_attention, Bias};
     use crate::kvcache::BlockAllocator;
     use crate::util::rng::Rng;
 
@@ -209,5 +291,66 @@ mod tests {
         for (a, b) in out.iter().zip(&reference) {
             assert!((a - b).abs() < 1e-4);
         }
+    }
+
+    #[test]
+    fn all_neg_inf_scores_yield_zeros_not_nan() {
+        // Regression for the seed's final-normalization divide-by-zero:
+        // a head that saw only −∞ scores must produce finite zeros.
+        let cfg = AttnConfig { num_heads: 2, num_kv_heads: 1, head_dim: 4, bias: Bias::None };
+        let mut cache = PagedKvCache::new(1, 2, 4, 1, 4);
+        let mut alloc = BlockAllocator::new(2, 4);
+        let mut table = BlockTable::new();
+        table.reserve(3, &mut alloc);
+        for _ in 0..3 {
+            let (b, s) = table.append_slot(4);
+            cache.write_token(0, b, s, &[f32::NEG_INFINITY; 4], &[1.0; 4]);
+        }
+        let q = vec![1.0; 8];
+        let out = paged_decode_attention(&cfg, &cache, 0, &q, &table);
+        assert!(out.iter().all(|v| v.is_finite()), "out={out:?}");
+        assert!(out.iter().all(|&v| v == 0.0), "out={out:?}");
+    }
+
+    #[test]
+    fn batch_matches_serial_per_sequence() {
+        let cfg = AttnConfig { num_heads: 4, num_kv_heads: 2, head_dim: 8, bias: Bias::Alibi };
+        let (kvh, d, block_size) = (2usize, 8usize, 4usize);
+        let lens = [3usize, 9, 17, 1];
+        let total_blocks: usize = lens.iter().map(|l| l.div_ceil(block_size)).sum::<usize>() + 1;
+        let mut cache = PagedKvCache::new(1, total_blocks, block_size, kvh, d);
+        let mut alloc = BlockAllocator::new(total_blocks, block_size);
+        let mut rng = Rng::new(5);
+        let mut tables = Vec::new();
+        for &len in &lens {
+            let mut t = BlockTable::new();
+            assert!(t.reserve(len, &mut alloc));
+            for _ in 0..len {
+                let (b, s) = t.append_slot(block_size);
+                let k = rng.normal_vec(kvh * d, 1.0);
+                let v = rng.normal_vec(kvh * d, 1.0);
+                cache.write_token(0, b, s, &k, &v);
+            }
+            tables.push(t);
+        }
+        let refs: Vec<&BlockTable> = tables.iter().collect();
+        let n = lens.len();
+        let row = 4 * 8;
+        let qs = rng.normal_vec(n * row, 1.0);
+        for threads in [1usize, 2, 4] {
+            let mut out = vec![0.0f32; n * row];
+            paged_decode_batch(&cfg, &cache, 0, &qs, &refs, threads, &mut out);
+            for i in 0..n {
+                let one = paged_decode_attention(&cfg, &cache, 0, &qs[i * row..(i + 1) * row], refs[i]);
+                assert_eq!(&out[i * row..(i + 1) * row], &one[..], "threads={threads} seq={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn auto_threads_heuristic() {
+        assert_eq!(auto_decode_threads(1, 1 << 20), 1, "no fan-out for batch 1");
+        assert_eq!(auto_decode_threads(8, 16), 1, "no fan-out for tiny KV");
+        assert!(auto_decode_threads(8, 1 << 20) >= 1);
     }
 }

@@ -237,6 +237,12 @@ impl Engine {
     }
 
     fn run_decode(&mut self, seq_ids: &[u64]) {
+        // The whole step goes to the backend as ONE batch: the native
+        // backend streams every weight matrix once per step and fans the
+        // per-sequence paged attention across cores with per-worker
+        // workspaces (see `NativeBackend::decode`). Fan-out outputs are
+        // bit-identical to serial execution, so scheduling, sampling and
+        // the determinism tests are unaffected by the thread count.
         // Detach tables so multiple mutable borrows can coexist.
         let mut tokens = Vec::with_capacity(seq_ids.len());
         let mut tables = Vec::with_capacity(seq_ids.len());

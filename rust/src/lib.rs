@@ -25,12 +25,30 @@
 //! | [`tokenizer`] | byte-level tokenizer (vocab 256 + specials) |
 //! | [`kvcache`] | paged block allocator, block tables, contiguous baseline, fragmentation stats |
 //! | [`quant`] | GPTQ (Hessian/Cholesky, error propagation), RTN baseline, int4/int8 packing |
-//! | [`attention`] | MHA / GQA / ALiBi / paged decode attention (native reference) |
+//! | [`attention`] | block-tiled group-major kernel core ([`attention::kernel`]) + MHA / GQA / ALiBi / paged drivers |
 //! | [`model`] | Llama-architecture config, weights, native forward, sampler |
 //! | [`runtime`] | PJRT client, artifact manifest, `Backend` trait (Native / Xla) |
 //! | [`coordinator`] | sequence state machine, scheduler, batcher, router, engine, metrics |
 //! | [`server`] | threaded TCP/HTTP front-end speaking the JSON API |
 //! | [`workload`] | synthetic request-trace generator (Poisson arrivals) |
+//!
+//! ## Attention kernel core and threading model
+//!
+//! Both native attention paths — contiguous prefill and paged decode —
+//! are thin drivers over one block-tiled, group-major, online-softmax
+//! kernel ([`attention::kernel`]). Scratch lives in a reusable
+//! [`attention::Workspace`]; the contract is that callers may (and
+//! should) reuse one workspace across calls of any shape, making
+//! steady-state attention allocation-free. The allocating wrappers
+//! route through a thread-local workspace.
+//!
+//! `NativeBackend::decode` executes a continuous-batching decode step as
+//! one pass: weights stream from memory once per step, and the
+//! per-sequence paged attention fans out across a scoped thread pool
+//! (`std::thread::scope`) with one private workspace per worker —
+//! auto-sized from the batch's KV footprint, pinnable via
+//! `NativeBackend::with_decode_threads`, and bit-identical to serial
+//! execution at every width.
 
 pub mod attention;
 pub mod coordinator;

@@ -10,7 +10,7 @@
 use super::config::ModelConfig;
 use super::weights::ModelWeights;
 use crate::attention::gqa::gqa_attention;
-use crate::attention::paged::paged_decode_attention;
+use crate::attention::paged::{auto_decode_threads, paged_decode_batch};
 use crate::kvcache::{BlockTable, PagedKvCache};
 use crate::tensor::{rmsnorm, Tensor};
 
@@ -115,12 +115,30 @@ impl NativeModel {
     /// weights at batch 1).
     ///
     /// Each table must have one slot of reserved capacity. Returns one
-    /// logits vector per sequence, in order.
+    /// logits vector per sequence, in order. The attention fan-out width
+    /// is chosen by [`auto_decode_threads`]; see [`Self::decode_batch_with`]
+    /// to pin it.
     pub fn decode_batch(
         &self,
         tokens: &[u32],
         cache: &mut PagedKvCache,
         tables: &mut [&mut BlockTable],
+    ) -> Vec<Vec<f32>> {
+        self.decode_batch_with(tokens, cache, tables, None)
+    }
+
+    /// [`Self::decode_batch`] with an explicit attention fan-out width.
+    ///
+    /// `threads == Some(1)` forces the serial loop; `None` auto-sizes
+    /// from the batch's KV footprint and the available cores. Outputs
+    /// are bit-identical across all widths (see
+    /// [`paged_decode_batch`]), so threading never perturbs sampling.
+    pub fn decode_batch_with(
+        &self,
+        tokens: &[u32],
+        cache: &mut PagedKvCache,
+        tables: &mut [&mut BlockTable],
+        threads: Option<usize>,
     ) -> Vec<Vec<f32>> {
         let cfg = self.config();
         let n = tokens.len();
@@ -129,8 +147,17 @@ impl NativeModel {
         let kvd = cfg.kv_dim();
         let slots: Vec<_> =
             tables.iter_mut().map(|t| t.append_slot(cache.block_size())).collect();
+        // Immutable views for the attention fan-out (tables are not
+        // resized again this step).
+        let table_refs: Vec<&BlockTable> = tables.iter().map(|t| &**t).collect();
+        let total_kv: usize = table_refs.iter().map(|t| t.len()).sum();
+        let threads = threads.unwrap_or_else(|| auto_decode_threads(n, total_kv));
+        let acfg = cfg.attn_config();
 
         let mut x = self.embed_tokens(tokens); // [n, d]
+        // One attention output buffer reused across layers (fully
+        // overwritten by every paged_decode_batch call).
+        let mut attn = Tensor::zeros(&[n, cfg.d_model]);
         for li in 0..cfg.n_layers {
             let l = &self.weights.layers[li];
             let xn = rmsnorm(&x, &l.rms_attn, cfg.rms_eps);
@@ -146,20 +173,11 @@ impl NativeModel {
                     &v.data()[i * kvd..(i + 1) * kvd],
                 );
             }
-            // Attention is per-sequence (distinct block tables).
-            let mut attn = Tensor::zeros(&[n, cfg.d_model]);
-            for (i, table) in tables.iter().enumerate() {
-                let out = paged_decode_attention(
-                    &cfg.attn_config(),
-                    cache,
-                    li,
-                    &q.data()[i * cfg.d_model..(i + 1) * cfg.d_model],
-                    table,
-                );
-                attn.row_mut(i).copy_from_slice(&out);
-            }
-            let attn = attn.matmul_nt(&l.wo);
-            x.add_assign(&attn);
+            // Attention is per-sequence (distinct block tables): fan the
+            // batch across scoped workers, one workspace each.
+            paged_decode_batch(&acfg, cache, li, q.data(), &table_refs, threads, attn.data_mut());
+            let attn_out = attn.matmul_nt(&l.wo);
+            x.add_assign(&attn_out);
             let xn2 = rmsnorm(&x, &l.rms_mlp, cfg.rms_eps);
             let h = self.mlp(li, &xn2);
             x.add_assign(&h);
@@ -294,6 +312,28 @@ mod tests {
         t_b.reserve(3, &mut alloc_b);
         let b = model2.prefill(&[256, 9, 9], &mut cache_b, &mut t_b);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn decode_batch_threading_is_bit_identical() {
+        // The attention fan-out must never change sampled numerics.
+        let run = |threads: Option<usize>| {
+            let (model, mut cache, mut alloc) = mk(8);
+            let mut t1 = BlockTable::new();
+            let mut t2 = BlockTable::new();
+            let mut t3 = BlockTable::new();
+            t1.reserve(6, &mut alloc);
+            t2.reserve(6, &mut alloc);
+            t3.reserve(6, &mut alloc);
+            model.prefill(&[256, 1, 2, 3], &mut cache, &mut t1);
+            model.prefill(&[256, 9], &mut cache, &mut t2);
+            model.prefill(&[256, 40, 41, 42, 43], &mut cache, &mut t3);
+            let mut tables = [&mut t1, &mut t2, &mut t3];
+            model.decode_batch_with(&[5, 6, 7], &mut cache, &mut tables, threads)
+        };
+        let serial = run(Some(1));
+        assert_eq!(serial, run(Some(4)));
+        assert_eq!(serial, run(None));
     }
 
     #[test]

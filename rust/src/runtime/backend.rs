@@ -41,11 +41,23 @@ pub trait Backend: Send {
 /// Pure-Rust backend executing [`NativeModel`].
 pub struct NativeBackend {
     model: NativeModel,
+    /// Attention fan-out width for decode steps: `0` auto-sizes from the
+    /// batch's KV footprint and available cores (see
+    /// `attention::paged::auto_decode_threads`); any other value pins it.
+    decode_threads: usize,
 }
 
 impl NativeBackend {
     pub fn new(model: NativeModel) -> Self {
-        NativeBackend { model }
+        NativeBackend { model, decode_threads: 0 }
+    }
+
+    /// Pin the decode attention fan-out (`0` restores auto-sizing).
+    /// Outputs are bit-identical across widths, so this is purely a
+    /// performance knob.
+    pub fn with_decode_threads(mut self, threads: usize) -> Self {
+        self.decode_threads = threads;
+        self
     }
 
     pub fn model(&self) -> &NativeModel {
@@ -69,11 +81,16 @@ impl Backend for NativeBackend {
 
     fn decode(&self, items: &mut [DecodeItem<'_>], cache: &mut PagedKvCache) -> Vec<Vec<f32>> {
         // One joint pass: weights are streamed once per STEP, not once per
-        // sequence (see NativeModel::decode_batch).
+        // sequence (see NativeModel::decode_batch), and the per-sequence
+        // attention fans out across cores with per-worker workspaces.
         let tokens: Vec<u32> = items.iter().map(|i| i.token).collect();
         let mut tables: Vec<&mut BlockTable> =
             items.iter_mut().map(|i| &mut *i.table).collect();
-        self.model.decode_batch(&tokens, cache, &mut tables)
+        let threads = match self.decode_threads {
+            0 => None,
+            t => Some(t),
+        };
+        self.model.decode_batch_with(&tokens, cache, &mut tables, threads)
     }
 
     fn name(&self) -> &'static str {

@@ -222,25 +222,31 @@ impl Tensor {
     }
 }
 
-/// Dot product with 4-way manual unrolling (hot path of `matmul_nt`).
+/// Dot product with 8-way manual unrolling, matching `matmul_nt`'s
+/// 8-row blocking (hot path of the GEMV tail and the attention kernel's
+/// score pass). Eight independent accumulator chains keep the FMA
+/// pipeline full; the 8-element subslices let the compiler drop bounds
+/// checks and vectorize the inner block.
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
     let n = a.len();
-    let chunks = n / 4;
-    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
-    for c in 0..chunks {
-        let i = c * 4;
-        s0 += a[i] * b[i];
-        s1 += a[i + 1] * b[i + 1];
-        s2 += a[i + 2] * b[i + 2];
-        s3 += a[i + 3] * b[i + 3];
+    let n8 = n / 8 * 8;
+    let mut s = [0.0f32; 8];
+    let mut i = 0;
+    while i < n8 {
+        let aa = &a[i..i + 8];
+        let bb = &b[i..i + 8];
+        for r in 0..8 {
+            s[r] += aa[r] * bb[r];
+        }
+        i += 8;
     }
-    let mut s = s0 + s1 + s2 + s3;
-    for i in chunks * 4..n {
-        s += a[i] * b[i];
+    let mut total = ((s[0] + s[4]) + (s[1] + s[5])) + ((s[2] + s[6]) + (s[3] + s[7]));
+    for j in n8..n {
+        total += a[j] * b[j];
     }
-    s
+    total
 }
 
 /// Numerically-stable in-place softmax of one row.

@@ -1,0 +1,16 @@
+#!/usr/bin/env bash
+# Tier-1 verify plus a fast perf smoke, so kernel/bench code is exercised
+# on every PR (not just the unit tests).
+#
+#   scripts/verify.sh            # build + tests + bench smokes
+#
+# The bench smokes also refresh BENCH_attention.json at the repo root —
+# the machine-readable perf trajectory (tokens/s for prefill and batched
+# decode, serial vs parallel).
+set -euo pipefail
+cd "$(dirname "$0")/../rust"
+
+cargo build --release
+cargo test -q
+cargo bench --bench ablation_grouping -- --smoke
+cargo bench --bench attention_core -- --smoke
