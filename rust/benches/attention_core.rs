@@ -5,7 +5,8 @@
 //!    (kept verbatim below as the baseline).
 //! 2. **Batched paged decode** — the pre-refactor per-sequence loop vs
 //!    the kernel serially vs the kernel fanned across all cores
-//!    (`paged_decode_batch`).
+//!    (`paged_decode_batch`), plus the same decode over the packed 8-bit
+//!    KV cache (in-tile dequant) with f32-vs-q8 pool bytes.
 //!
 //! Emits `BENCH_attention.json` (repo root) with tokens/s per variant so
 //! the perf trajectory is machine-trackable PR-over-PR. `--smoke` runs a
@@ -17,7 +18,7 @@ use opt_gptq::attention::alibi::{alibi_bias, alibi_slopes};
 use opt_gptq::attention::gqa::{gqa_attention_into, AttnConfig, Bias};
 use opt_gptq::attention::kernel::Workspace;
 use opt_gptq::attention::paged::paged_decode_batch;
-use opt_gptq::kvcache::{BlockAllocator, BlockTable, PagedKvCache};
+use opt_gptq::kvcache::{BlockAllocator, BlockTable, KvStore, PagedKvCache, QuantizedPagedKvCache};
 use opt_gptq::tensor::softmax_inplace;
 use opt_gptq::util::benchkit::{black_box, f, Bencher, Table};
 use opt_gptq::util::cli::Args;
@@ -195,6 +196,9 @@ fn main() {
     let blocks_per_seq = kv_len.div_ceil(block_size);
     let num_blocks = batch * blocks_per_seq + 1;
     let mut cache = PagedKvCache::new(1, num_blocks, block_size, kvh, d);
+    // Same tokens mirrored into the packed 8-bit pool (quantize-on-append)
+    // for the quantized-decode series.
+    let mut qcache = QuantizedPagedKvCache::new(1, num_blocks, block_size, kvh, d);
     let mut alloc = BlockAllocator::new(num_blocks, block_size);
     let mut tables: Vec<BlockTable> = Vec::with_capacity(batch);
     for _ in 0..batch {
@@ -205,6 +209,7 @@ fn main() {
             let kr = rng.normal_vec(kvh * d, 1.0);
             let vr = rng.normal_vec(kvh * d, 1.0);
             cache.write_token(0, b, s, &kr, &vr);
+            qcache.write_token(0, b, s, &kr, &vr);
         }
         tables.push(t);
     }
@@ -227,9 +232,24 @@ fn main() {
         paged_decode_batch(&cfg, &cache, 0, &qs, &table_refs, threads, &mut dec_out);
         black_box(dec_out[0]);
     });
+    // Quantized-cache decode: same schedule, in-tile dequant from the
+    // packed pool (tok/s dips a little; pool bytes drop ~4×).
+    let s_dec_q8_serial = bench.bench("decode batch q8 cache serial (1 thread)", || {
+        paged_decode_batch(&cfg, &qcache, 0, &qs, &table_refs, 1, &mut dec_out);
+        black_box(dec_out[0]);
+    });
+    let s_dec_q8_par =
+        bench.bench(&format!("decode batch q8 cache parallel ({threads} threads)"), || {
+            paged_decode_batch(&cfg, &qcache, 0, &qs, &table_refs, threads, &mut dec_out);
+            black_box(dec_out[0]);
+        });
     let decode_naive_tok_s = batch as f64 / s_dec_naive.mean();
     let decode_serial_tok_s = batch as f64 / s_dec_serial.mean();
     let decode_parallel_tok_s = batch as f64 / s_dec_par.mean();
+    let decode_q8_serial_tok_s = batch as f64 / s_dec_q8_serial.mean();
+    let decode_q8_parallel_tok_s = batch as f64 / s_dec_q8_par.mean();
+    let pool_bytes_f32 = KvStore::pool_bytes(&cache);
+    let pool_bytes_q8 = KvStore::pool_bytes(&qcache);
 
     // ---- report ---------------------------------------------------------
     let mut t = Table::new(
@@ -266,7 +286,23 @@ fn main() {
         f(decode_parallel_tok_s, 1),
         f(decode_parallel_tok_s / decode_naive_tok_s, 2),
     ]);
+    t.row(&[
+        "decode q8 serial".into(),
+        format!("batch={batch} kv={kv_len} (packed pool)"),
+        f(decode_q8_serial_tok_s, 1),
+        f(decode_q8_serial_tok_s / decode_naive_tok_s, 2),
+    ]);
+    t.row(&[
+        "decode q8 parallel".into(),
+        format!("batch={batch} kv={kv_len} threads={threads}"),
+        f(decode_q8_parallel_tok_s, 1),
+        f(decode_q8_parallel_tok_s / decode_naive_tok_s, 2),
+    ]);
     t.print();
+    println!(
+        "KV pool bytes: f32 = {pool_bytes_f32}, q8 = {pool_bytes_q8} ({:.3}×)",
+        pool_bytes_q8 as f64 / pool_bytes_f32 as f64
+    );
 
     common::write_bench_json(
         "attention",
@@ -288,6 +324,12 @@ fn main() {
             ("decode_parallel_tok_s", decode_parallel_tok_s),
             ("decode_speedup", decode_parallel_tok_s / decode_naive_tok_s),
             ("decode_speedup_parallel_vs_serial", decode_parallel_tok_s / decode_serial_tok_s),
+            ("decode_q8_serial_tok_s", decode_q8_serial_tok_s),
+            ("decode_q8_parallel_tok_s", decode_q8_parallel_tok_s),
+            ("decode_q8_relative_tok_s", decode_q8_parallel_tok_s / decode_parallel_tok_s),
+            ("kv_pool_bytes_f32", pool_bytes_f32 as f64),
+            ("kv_pool_bytes_q8", pool_bytes_q8 as f64),
+            ("kv_pool_ratio_q8_over_f32", pool_bytes_q8 as f64 / pool_bytes_f32 as f64),
         ],
     );
 }

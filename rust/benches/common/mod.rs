@@ -50,6 +50,7 @@ pub fn engine_with_byte_budget(
             decode_buckets: BucketPolicy::exact(max_batch),
             prefill_chunk: usize::MAX,
             prefix_cache_blocks: 0,
+            kv_dtype: opt_gptq::coordinator::KvCacheDtype::F32,
         },
     )
 }

@@ -49,6 +49,7 @@ fn main() -> anyhow::Result<()> {
             decode_buckets: BucketPolicy::exact(4),
             prefill_chunk: usize::MAX,
             prefix_cache_blocks: 0,
+            kv_dtype: opt_gptq::coordinator::KvCacheDtype::F32,
         },
     );
     let tok = ByteTokenizer::new();

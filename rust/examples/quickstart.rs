@@ -6,7 +6,7 @@
 //! cargo run --release --example quickstart -- --xla   # AOT/PJRT backend
 //! ```
 
-use opt_gptq::coordinator::{BucketPolicy, Engine, EngineConfig, SchedulerConfig};
+use opt_gptq::coordinator::{BucketPolicy, Engine, EngineConfig, KvCacheDtype, SchedulerConfig};
 use opt_gptq::model::{ModelConfig, ModelWeights, NativeModel, SamplingParams};
 use opt_gptq::runtime::{ArtifactManifest, Backend, NativeBackend, XlaBackend};
 use opt_gptq::tokenizer::ByteTokenizer;
@@ -21,7 +21,11 @@ fn main() -> anyhow::Result<()> {
     let weights = ModelWeights::init(&cfg, 0);
 
     // 2. A backend: native Rust, or AOT-compiled HLO on PJRT (`--xla`,
-    //    needs `make artifacts`).
+    //    needs `make artifacts`). `--kv-dtype q8` packs the KV pool to
+    //    8-bit (~0.26× bytes); Engine::new rejects q8 on the XLA backend
+    //    (it consumes raw f32 pools).
+    let kv_dtype =
+        KvCacheDtype::parse(args.get_str("kv-dtype", "f32")).expect("--kv-dtype f32|q8");
     let (backend, econf): (Box<dyn Backend>, EngineConfig) = if args.flag("xla") {
         let manifest = ArtifactManifest::load(std::path::Path::new("artifacts"))?;
         let econf = EngineConfig {
@@ -36,6 +40,7 @@ fn main() -> anyhow::Result<()> {
             ),
             prefill_chunk: manifest.max_prefill_seq(),
             prefix_cache_blocks: 0,
+            kv_dtype,
         };
         (Box::new(XlaBackend::load(manifest, &weights)?), econf)
     } else {
@@ -46,6 +51,7 @@ fn main() -> anyhow::Result<()> {
             decode_buckets: BucketPolicy::exact(8),
             prefill_chunk: usize::MAX,
             prefix_cache_blocks: 0,
+            kv_dtype,
         };
         (Box::new(NativeBackend::new(NativeModel::new(weights))), econf)
     };

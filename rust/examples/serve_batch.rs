@@ -61,6 +61,12 @@ fn main() -> anyhow::Result<()> {
             decode_buckets: BucketPolicy::exact(max_batch),
             prefill_chunk: usize::MAX,
             prefix_cache_blocks: 0,
+            // `--kv-dtype q8` serves the same workload from a packed
+            // 8-bit KV pool (~0.26× the bytes).
+            kv_dtype: opt_gptq::coordinator::KvCacheDtype::parse(
+                args.get_str("kv-dtype", "f32"),
+            )
+            .expect("--kv-dtype f32|q8"),
         },
     );
     println!(

@@ -32,6 +32,7 @@
 
 use super::alibi::alibi_slopes;
 use super::gqa::{AttnConfig, Bias};
+use crate::kvcache::QuantKvTile;
 use crate::tensor::dot;
 use std::cell::RefCell;
 
@@ -44,6 +45,28 @@ pub const KV_TILE: usize = 64;
 ///
 /// See the module docs for the reuse contract. All buffers are sized by
 /// [`Workspace::configure`] and survive across calls.
+///
+/// # Example
+///
+/// One query row over a single three-key tile (uniform weights, so the
+/// output equals the constant V rows):
+///
+/// ```
+/// use opt_gptq::attention::gqa::{AttnConfig, Bias};
+/// use opt_gptq::attention::kernel::Workspace;
+///
+/// let cfg = AttnConfig { num_heads: 2, num_kv_heads: 1, head_dim: 4, bias: Bias::None };
+/// let mut ws = Workspace::new();
+/// ws.configure(&cfg, 8); // tile capacity 8; reuse across calls of any shape
+/// ws.begin_row();
+/// let q = vec![1.0f32; 2 * 4];  // [num_heads * head_dim]
+/// let k = vec![0.5f32; 3 * 4];  // 3 rows of [kv_heads * head_dim]
+/// let v = vec![2.0f32; 3 * 4];
+/// ws.process_tile(&q, &k, &v, 0, 3, 2); // keys 0..3, query at position 2
+/// let mut out = vec![0.0f32; 2 * 4];
+/// ws.finish_row(&mut out);
+/// assert!(out.iter().all(|o| (o - 2.0).abs() < 1e-6));
+/// ```
 #[derive(Debug, Default)]
 pub struct Workspace {
     num_heads: usize,
@@ -63,6 +86,12 @@ pub struct Workspace {
     acc: Vec<f32>,
     /// Per-tile score→weight scratch, group-major `[group, tile_cap]`.
     w: Vec<f32>,
+    /// Per-tile dequantized K scratch for the quantized-cache path,
+    /// `[tile_cap, kv_heads, head_dim]` (grown on first quantized tile,
+    /// then reused — the f32 path never touches it).
+    k_dq: Vec<f32>,
+    /// Per-tile dequantized V scratch (same shape as `k_dq`).
+    v_dq: Vec<f32>,
 }
 
 impl Workspace {
@@ -213,6 +242,47 @@ impl Workspace {
                 }
             }
         }
+    }
+
+    /// Fold one **quantized** KV tile into the running state — the
+    /// TurboAttention-style in-tile dequant step.
+    ///
+    /// The packed tile is dequantized into workspace scratch (`k_dq` /
+    /// `v_dq`, grown once to `tile_cap × kv_heads × head_dim` and reused
+    /// forever — the zero-alloc contract holds in steady state) and then
+    /// folded by [`Workspace::process_tile`], so the quantized cache
+    /// inherits the exact group-major online-softmax schedule of the f32
+    /// path. Arguments mirror `process_tile`; `k_tile`/`v_tile` must hold
+    /// at least `visible` packed rows.
+    pub fn process_quant_tile(
+        &mut self,
+        q_row: &[f32],
+        k_tile: &QuantKvTile<'_>,
+        v_tile: &QuantKvTile<'_>,
+        tile_pos: usize,
+        visible: usize,
+        q_pos: usize,
+    ) {
+        let (kvh, d) = (self.kv_heads, self.head_dim);
+        debug_assert!(visible > 0 && visible <= self.tile_cap);
+        let cap = self.tile_cap * kvh * d;
+        let used = visible * kvh * d;
+        // Temporarily move the scratch out so `process_tile` can borrow
+        // `self` mutably; `mem::take` swaps in empty Vecs (no allocation)
+        // and the buffers go straight back afterwards.
+        let mut kd = std::mem::take(&mut self.k_dq);
+        let mut vd = std::mem::take(&mut self.v_dq);
+        if kd.len() < cap {
+            kd.resize(cap, 0.0);
+        }
+        if vd.len() < cap {
+            vd.resize(cap, 0.0);
+        }
+        k_tile.dequantize_into(visible, kvh, d, &mut kd[..used]);
+        v_tile.dequantize_into(visible, kvh, d, &mut vd[..used]);
+        self.process_tile(q_row, &kd, &vd, tile_pos, visible, q_pos);
+        self.k_dq = kd;
+        self.v_dq = vd;
     }
 
     /// Normalize the accumulator into `out_row` (`[num_heads*head_dim]`).
@@ -386,6 +456,70 @@ mod tests {
         for &o in &out {
             assert!((o - 2.0).abs() < 1e-6, "out={out:?}");
         }
+    }
+
+    #[test]
+    fn quant_tile_matches_dense_tile_on_same_values() {
+        // process_quant_tile must be bit-identical to process_tile fed
+        // the dequantized copy of the same packed tile.
+        use crate::kvcache::QuantKvTile;
+        use crate::quant::{packing, QuantParams};
+        let (h, kvh, d, slots) = (4usize, 2usize, 8usize, 5usize);
+        let cfg = AttnConfig { num_heads: h, num_kv_heads: kvh, head_dim: d, bias: Bias::Alibi };
+        let mut rng = Rng::new(11);
+        let q = rng.normal_vec(h * d, 1.0);
+        let k = rng.normal_vec(slots * kvh * d, 1.0);
+        let v = rng.normal_vec(slots * kvh * d, 1.0);
+        let wph = d.div_ceil(4);
+        let pack = |x: &[f32]| {
+            let mut words = vec![0i32; slots * kvh * wph];
+            let mut scales = vec![0.0f32; kvh];
+            let mut zeros = vec![0i32; kvh];
+            for head in 0..kvh {
+                let vals: Vec<f32> = (0..slots)
+                    .flat_map(|s| x[(s * kvh + head) * d..(s * kvh + head + 1) * d].to_vec())
+                    .collect();
+                let p = QuantParams::fit(&vals, 8);
+                scales[head] = p.scale;
+                zeros[head] = p.zero;
+                for s in 0..slots {
+                    packing::quant_pack_row(
+                        &x[(s * kvh + head) * d..(s * kvh + head + 1) * d],
+                        &p,
+                        &mut words[(s * kvh + head) * wph..(s * kvh + head + 1) * wph],
+                    );
+                }
+            }
+            (words, scales, zeros)
+        };
+        let (kw, ks, kz) = pack(&k);
+        let (vw, vs, vz) = pack(&v);
+        let k_tile = QuantKvTile { words: &kw, scales: &ks, zeros: &kz, words_per_head: wph };
+        let v_tile = QuantKvTile { words: &vw, scales: &vs, zeros: &vz, words_per_head: wph };
+
+        let mut kd = vec![0.0f32; slots * kvh * d];
+        let mut vd = vec![0.0f32; slots * kvh * d];
+        k_tile.dequantize_into(slots, kvh, d, &mut kd);
+        v_tile.dequantize_into(slots, kvh, d, &mut vd);
+        // Dequantized values stay near the originals (8-bit grid).
+        for (a, b) in kd.iter().zip(&k) {
+            assert!((a - b).abs() < 0.05, "{a} vs {b}");
+        }
+
+        let run = |quant: bool| {
+            let mut ws = Workspace::new();
+            ws.configure(&cfg, 8);
+            ws.begin_row();
+            if quant {
+                ws.process_quant_tile(&q, &k_tile, &v_tile, 0, slots, slots - 1);
+            } else {
+                ws.process_tile(&q, &kd, &vd, 0, slots, slots - 1);
+            }
+            let mut out = vec![0.0f32; h * d];
+            ws.finish_row(&mut out);
+            out
+        };
+        assert_eq!(run(true), run(false), "quantized path must share the exact schedule");
     }
 
     #[test]

@@ -15,10 +15,12 @@
 //!   slot.
 //! * [`grouping`] — dynamic activation-similarity head grouping
 //!   (paper §II.B "Dynamic Grouping Optimization").
-//! * [`paged`] — decode attention directly over the paged KV cache;
-//!   cache blocks are the kernel's tiles. [`paged_decode_batch`] fans a
-//!   decode step across a scoped thread pool with per-worker
-//!   workspaces, bit-identical to the serial loop.
+//! * [`paged`] — decode attention directly over the paged KV cache
+//!   (any [`crate::kvcache::KvStore`] dtype: quantized blocks are
+//!   dequantized per tile inside the kernel); cache blocks are the
+//!   kernel's tiles. [`paged_decode_batch`] fans a decode step across a
+//!   scoped thread pool with per-worker workspaces, bit-identical to
+//!   the serial loop.
 
 pub mod alibi;
 pub mod gqa;

@@ -13,10 +13,16 @@
 //! one private [`Workspace`] per worker; its outputs are bit-identical
 //! to the serial loop because sequences are independent and the
 //! per-sequence schedule is unchanged.
+//!
+//! Storage-dtype agnostic: drivers take `&dyn KvStore` and dispatch per
+//! block on [`KvBlockView`] — dense f32 blocks go straight to
+//! `process_tile`, packed 8-bit blocks through `process_quant_tile`
+//! (in-tile dequant into workspace scratch), so both cache dtypes share
+//! one schedule.
 
 use super::gqa::AttnConfig;
 use super::kernel::{with_workspace, Workspace};
-use crate::kvcache::{BlockTable, PagedKvCache};
+use crate::kvcache::{BlockTable, KvBlockView, KvStore};
 
 /// Decode attention for one sequence.
 ///
@@ -28,7 +34,7 @@ use crate::kvcache::{BlockTable, PagedKvCache};
 /// comes from the calling thread's reusable workspace.
 pub fn paged_decode_attention(
     cfg: &AttnConfig,
-    cache: &PagedKvCache,
+    cache: &dyn KvStore,
     layer: usize,
     q: &[f32],
     table: &BlockTable,
@@ -41,11 +47,13 @@ pub fn paged_decode_attention(
 /// Zero-allocation paged decode attention into a caller-owned buffer.
 ///
 /// The workspace may be reused across calls of any shape (see the
-/// [`super::kernel`] contract). A head whose every score is −∞ yields
-/// zeros instead of the seed's `1.0 / 0.0` NaN.
+/// [`super::kernel`] contract); on a quantized cache the per-tile dequant
+/// scratch lives in the same workspace, so steady-state decode stays
+/// allocation-free for both dtypes. A head whose every score is −∞
+/// yields zeros instead of the seed's `1.0 / 0.0` NaN.
 pub fn paged_decode_attention_into(
     cfg: &AttnConfig,
-    cache: &PagedKvCache,
+    cache: &dyn KvStore,
     layer: usize,
     q: &[f32],
     table: &BlockTable,
@@ -71,14 +79,14 @@ pub fn paged_decode_attention_into(
             break;
         }
         let in_block = block_size.min(kv_len - pos);
-        ws.process_tile(
-            q,
-            &cache.key_block(layer, block)[..in_block * rs],
-            &cache.value_block(layer, block)[..in_block * rs],
-            pos,
-            in_block,
-            q_pos,
-        );
+        match cache.block_view(layer, block) {
+            KvBlockView::F32 { k, v } => {
+                ws.process_tile(q, &k[..in_block * rs], &v[..in_block * rs], pos, in_block, q_pos);
+            }
+            KvBlockView::Q8 { k, v } => {
+                ws.process_quant_tile(q, &k, &v, pos, in_block, q_pos);
+            }
+        }
         pos += in_block;
     }
     ws.finish_row(out);
@@ -100,7 +108,7 @@ pub fn paged_decode_attention_into(
 /// changes *who* runs it.
 pub fn paged_decode_batch(
     cfg: &AttnConfig,
-    cache: &PagedKvCache,
+    cache: &dyn KvStore,
     layer: usize,
     qs: &[f32],
     tables: &[&BlockTable],
@@ -196,7 +204,7 @@ pub fn auto_decode_threads(batch: usize, total_kv_tokens: usize) -> usize {
 mod tests {
     use super::*;
     use crate::attention::gqa::{gqa_attention, Bias};
-    use crate::kvcache::BlockAllocator;
+    use crate::kvcache::{BlockAllocator, PagedKvCache, QuantizedPagedKvCache};
     use crate::util::rng::Rng;
 
     /// Build a cache holding `kv_len` random tokens; return (cache, table, k, v).
@@ -345,6 +353,67 @@ mod tests {
                 assert_eq!(&out[i * row..(i + 1) * row], &one[..], "threads={threads} seq={i}");
             }
         }
+    }
+
+    #[test]
+    fn quantized_cache_decode_tracks_f32_decode() {
+        // Same tokens in an f32 and a q8 cache: outputs agree to within
+        // the quantization error (tight bounds live in
+        // tests/attention_parity.rs — this is the module smoke check).
+        let cfg = AttnConfig { num_heads: 4, num_kv_heads: 2, head_dim: 8, bias: Bias::Alibi };
+        let (kvh, d, block_size, kv_len) = (2usize, 8usize, 4usize, 13usize);
+        let num_blocks = kv_len.div_ceil(block_size) + 1;
+        let mut fcache = PagedKvCache::new(1, num_blocks, block_size, kvh, d);
+        let mut qcache = QuantizedPagedKvCache::new(1, num_blocks, block_size, kvh, d);
+        let mut alloc = BlockAllocator::new(num_blocks, block_size);
+        let mut table = BlockTable::new();
+        assert!(table.reserve(kv_len, &mut alloc));
+        let mut rng = Rng::new(21);
+        for _ in 0..kv_len {
+            let (b, s) = table.append_slot(block_size);
+            let k = rng.normal_vec(kvh * d, 1.0);
+            let v = rng.normal_vec(kvh * d, 1.0);
+            fcache.write_token(0, b, s, &k, &v);
+            qcache.write_token(0, b, s, &k, &v);
+        }
+        let q = rng.normal_vec(4 * d, 1.0);
+        let f = paged_decode_attention(&cfg, &fcache, 0, &q, &table);
+        let qz = paged_decode_attention(&cfg, &qcache, 0, &q, &table);
+        for (a, b) in f.iter().zip(&qz) {
+            assert!((a - b).abs() < 0.05, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn quantized_batch_bit_identical_across_threads() {
+        let cfg = AttnConfig { num_heads: 4, num_kv_heads: 2, head_dim: 8, bias: Bias::None };
+        let (kvh, d, block_size) = (2usize, 8usize, 4usize);
+        let lens = [3usize, 11, 6];
+        let total_blocks: usize = lens.iter().map(|l| l.div_ceil(block_size)).sum::<usize>() + 1;
+        let mut cache = QuantizedPagedKvCache::new(1, total_blocks, block_size, kvh, d);
+        let mut alloc = BlockAllocator::new(total_blocks, block_size);
+        let mut rng = Rng::new(31);
+        let mut tables = Vec::new();
+        for &len in &lens {
+            let mut t = BlockTable::new();
+            assert!(t.reserve(len, &mut alloc));
+            for _ in 0..len {
+                let (b, s) = t.append_slot(block_size);
+                cache.write_token(0, b, s, &rng.normal_vec(kvh * d, 1.0), &rng.normal_vec(kvh * d, 1.0));
+            }
+            tables.push(t);
+        }
+        let refs: Vec<&BlockTable> = tables.iter().collect();
+        let row = 4 * d;
+        let qs = rng.normal_vec(lens.len() * row, 1.0);
+        let run = |threads: usize| {
+            let mut out = vec![0.0f32; lens.len() * row];
+            paged_decode_batch(&cfg, &cache, 0, &qs, &refs, threads, &mut out);
+            out
+        };
+        let serial = run(1);
+        assert_eq!(serial, run(2));
+        assert_eq!(serial, run(3));
     }
 
     #[test]

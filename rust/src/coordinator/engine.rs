@@ -4,7 +4,9 @@ use super::batcher::BucketPolicy;
 use super::metrics::{EngineMetrics, RequestRecord, RunReport};
 use super::scheduler::{Scheduler, SchedulerConfig, StepPlan};
 use super::sequence::{SeqPhase, Sequence};
-use crate::kvcache::{BlockAllocator, CacheStats, PagedKvCache};
+use crate::kvcache::{
+    BlockAllocator, CacheStats, KvCacheDtype, KvStore, PagedKvCache, QuantizedPagedKvCache,
+};
 use crate::model::SamplingParams;
 use crate::runtime::{Backend, DecodeItem};
 use anyhow::{bail, Result};
@@ -29,6 +31,10 @@ pub struct EngineConfig {
     /// prefix adopt them (COW) instead of recomputing. Native backend
     /// only (the XLA artifacts assume fresh sequences).
     pub prefix_cache_blocks: usize,
+    /// KV-pool storage dtype: dense f32 or packed 8-bit
+    /// ([`KvCacheDtype::Q8`], ~0.26× the pool bytes; native backend
+    /// only — see `Backend::supports_quantized_kv`).
+    pub kv_dtype: KvCacheDtype,
 }
 
 impl EngineConfig {
@@ -42,6 +48,7 @@ impl EngineConfig {
             decode_buckets: BucketPolicy::exact(SchedulerConfig::default().max_decode_batch),
             prefill_chunk: usize::MAX,
             prefix_cache_blocks: 0,
+            kv_dtype: KvCacheDtype::F32,
         }
     }
 }
@@ -60,7 +67,7 @@ pub struct RequestOutput {
 pub struct Engine {
     backend: Box<dyn Backend>,
     cfg: EngineConfig,
-    cache: PagedKvCache,
+    cache: Box<dyn KvStore>,
     alloc: BlockAllocator,
     scheduler: Scheduler,
     pub metrics: EngineMetrics,
@@ -73,13 +80,28 @@ pub struct Engine {
 impl Engine {
     pub fn new(backend: Box<dyn Backend>, cfg: EngineConfig) -> Engine {
         let mc = backend.config();
-        let cache = PagedKvCache::new(
-            mc.n_layers,
-            cfg.num_blocks,
-            cfg.block_size,
-            mc.n_kv_heads,
-            mc.head_dim(),
+        assert!(
+            cfg.kv_dtype == KvCacheDtype::F32 || backend.supports_quantized_kv(),
+            "backend '{}' cannot read a {:?} KV cache",
+            backend.name(),
+            cfg.kv_dtype
         );
+        let cache: Box<dyn KvStore> = match cfg.kv_dtype {
+            KvCacheDtype::F32 => Box::new(PagedKvCache::new(
+                mc.n_layers,
+                cfg.num_blocks,
+                cfg.block_size,
+                mc.n_kv_heads,
+                mc.head_dim(),
+            )),
+            KvCacheDtype::Q8 => Box::new(QuantizedPagedKvCache::new(
+                mc.n_layers,
+                cfg.num_blocks,
+                cfg.block_size,
+                mc.n_kv_heads,
+                mc.head_dim(),
+            )),
+        };
         let alloc = BlockAllocator::new(cfg.num_blocks, cfg.block_size);
         let scheduler = Scheduler::new(cfg.sched);
         let prefix_cache = if cfg.prefix_cache_blocks > 0 && backend.supports_offset_prefill() {
@@ -153,9 +175,11 @@ impl Engine {
         self.scheduler.num_running()
     }
 
-    /// Point-in-time cache statistics.
+    /// Point-in-time cache statistics, including the pool's true byte
+    /// footprint (packed bytes for a Q8 cache).
     pub fn cache_stats(&self) -> CacheStats {
         CacheStats::collect(&self.alloc, self.scheduler.live_tables())
+            .with_pool_bytes(self.cache.pool_bytes())
     }
 
     /// Prefix-cache counters (hits, misses, pinned blocks) if enabled.
@@ -323,6 +347,10 @@ mod tests {
     use crate::runtime::NativeBackend;
 
     fn engine(num_blocks: usize) -> Engine {
+        engine_with_dtype(num_blocks, KvCacheDtype::F32)
+    }
+
+    fn engine_with_dtype(num_blocks: usize, kv_dtype: KvCacheDtype) -> Engine {
         let cfg = ModelConfig::tiny();
         let backend = NativeBackend::new(NativeModel::new(ModelWeights::init(&cfg, 1)));
         let econf = EngineConfig {
@@ -332,6 +360,7 @@ mod tests {
             decode_buckets: BucketPolicy::exact(4),
             prefill_chunk: usize::MAX,
             prefix_cache_blocks: 0,
+            kv_dtype,
         };
         Engine::new(Box::new(backend), econf)
     }
@@ -403,6 +432,29 @@ mod tests {
     }
 
     #[test]
+    fn quantized_kv_engine_completes_with_smaller_pool() {
+        let mut q = engine_with_dtype(32, KvCacheDtype::Q8);
+        let mut f = engine_with_dtype(32, KvCacheDtype::F32);
+        for e in [&mut q, &mut f] {
+            for i in 0..3 {
+                e.add_request(vec![256, 10 + i, 11], params(5)).unwrap();
+            }
+            let report = e.run_to_completion();
+            assert_eq!(report.num_requests, 3);
+            let outs = e.take_outputs();
+            assert_eq!(outs.len(), 3);
+            for o in &outs {
+                assert_eq!(o.tokens.len(), 5);
+            }
+        }
+        // CacheStats reports true packed bytes: the q8 pool must be ≤
+        // 0.3× the f32 pool at identical capacity.
+        let (qb, fb) = (q.cache_stats().pool_bytes, f.cache_stats().pool_bytes);
+        assert!(qb > 0 && fb > 0);
+        assert!(10 * qb <= 3 * fb, "q8 pool {qb} vs f32 pool {fb}");
+    }
+
+    #[test]
     fn rejects_oversized_request() {
         let mut e = engine(4); // 32-token pool
         assert!(e.add_request(vec![256; 30], params(10)).is_err());
@@ -419,6 +471,7 @@ mod tests {
             decode_buckets: BucketPolicy::exact(4),
             prefill_chunk: usize::MAX,
             prefix_cache_blocks: cache_blocks,
+            kv_dtype: KvCacheDtype::F32,
         };
         Engine::new(Box::new(backend), econf)
     }

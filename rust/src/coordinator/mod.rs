@@ -23,6 +23,9 @@ pub mod sequence;
 
 pub use batcher::BucketPolicy;
 pub use engine::{Engine, EngineConfig, RequestOutput};
+// Re-exported so engine-config construction sites don't need a separate
+// kvcache import for the dtype knob.
+pub use crate::kvcache::KvCacheDtype;
 pub use metrics::{EngineMetrics, RunReport};
 pub use router::{Router, RouterConfig};
 pub use scheduler::{Scheduler, SchedulerConfig, StepPlan};

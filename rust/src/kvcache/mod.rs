@@ -6,6 +6,13 @@
 //! reference-counted so concurrent requests can share prefixes
 //! (copy-on-write), and a contiguous-arena baseline exists for the
 //! paging-vs-reservation ablation (Abl. B).
+//!
+//! Physical storage is abstracted behind [`KvStore`] with two
+//! implementations selected by [`KvCacheDtype`]: the dense f32 pool
+//! ([`PagedKvCache`]) and the packed 8-bit pool
+//! ([`QuantizedPagedKvCache`], quantize-on-append, per-(block, kv_head)
+//! grids, in-tile dequant in the attention kernel). See ARCHITECTURE.md
+//! for how the request path flows through this module.
 
 pub mod block_allocator;
 pub mod block_table;
@@ -13,7 +20,9 @@ pub mod contiguous;
 pub mod eviction;
 pub mod paged;
 pub mod prefix_cache;
+pub mod quantized;
 pub mod stats;
+pub mod store;
 
 pub use block_allocator::{BlockAllocator, BlockId};
 pub use block_table::BlockTable;
@@ -21,4 +30,6 @@ pub use contiguous::ContiguousArena;
 pub use eviction::{EvictionPolicy, LruEviction};
 pub use paged::PagedKvCache;
 pub use prefix_cache::PrefixCache;
+pub use quantized::{QuantKvTile, QuantizedPagedKvCache};
 pub use stats::CacheStats;
+pub use store::{KvBlockView, KvCacheDtype, KvStore};

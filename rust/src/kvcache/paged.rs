@@ -9,6 +9,27 @@ use super::block_allocator::BlockId;
 use super::block_table::BlockTable;
 
 /// Paged K/V storage for every layer of one model.
+///
+/// # Example
+///
+/// Writing a short sequence through a block table and reading it back:
+///
+/// ```
+/// use opt_gptq::kvcache::{BlockAllocator, BlockTable, PagedKvCache};
+///
+/// // 1 layer; 4 blocks × 4 slots; 2 KV heads of head_dim 3.
+/// let mut cache = PagedKvCache::new(1, 4, 4, 2, 3);
+/// let mut alloc = BlockAllocator::new(4, 4);
+/// let mut table = BlockTable::new();
+/// assert!(table.reserve(5, &mut alloc)); // claims 2 blocks
+/// for t in 0..5u32 {
+///     let (block, slot) = table.append_slot(4);
+///     cache.write_token(0, block, slot, &[t as f32; 6], &[0.5; 6]);
+/// }
+/// let (block, slot) = table.locate(4, 4); // logical position 4
+/// assert_eq!(cache.key_token(0, block, slot)[0], 4.0);
+/// assert_eq!(cache.value_token(0, block, slot)[5], 0.5);
+/// ```
 #[derive(Debug)]
 pub struct PagedKvCache {
     num_layers: usize,

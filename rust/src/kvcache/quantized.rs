@@ -1,0 +1,604 @@
+//! Quantized paged KV storage: the f32 pool's 8-bit twin.
+//!
+//! Same geometry as [`super::paged::PagedKvCache`] — per layer, `[num_blocks,
+//! block_size, kv_heads, head_dim]` for both K and V — but each value is
+//! stored as an 8-bit level packed four-per-`i32` word (the
+//! [`crate::quant::packing`] format), with one asymmetric
+//! `(scale, zero)` grid per **(block, kv_head)** per side (K and V fitted
+//! independently). Tokens are quantized on [`QuantizedPagedKvCache::write_token`]
+//! (append time) and a dense f32 pool is never materialized; the attention
+//! kernel dequantizes one tile at a time into workspace scratch
+//! (TurboAttention-style in-tile dequant — see
+//! `attention::kernel::Workspace::process_quant_tile`).
+//!
+//! ## Streaming grid maintenance
+//!
+//! A block's contents arrive one token at a time, but its grid covers the
+//! whole `(block, kv_head)` group. The cache keeps a running min/max per
+//! group; when a new token expands the observed range, the group is
+//! **refit and requantized in place** (dequantize the stored levels under
+//! the old grid, re-quantize under the new one — bounded work:
+//! `block_size × head_dim` values). Within one tenancy ranges only ever
+//! widen, so freshly written tokens always land on the final grid and
+//! requantization drift is confined to a block's earliest tokens (each
+//! refit adds at most half a step, and step sizes grow with the range,
+//! so the total is on the order of one final step). A write to slot 0
+//! resets the group — blocks fill front-to-back, so slot 0 marks a
+//! freshly (re)claimed block — which keeps a reused block from
+//! inheriting the previous sequence's stale, wider grid. Unwritten slots
+//! hold exact zeros under every grid (grids always contain zero), so
+//! stale slots cannot leak.
+//!
+//! Non-finite values are unsupported on this path (a NaN/∞ range has no
+//! meaningful grid); debug builds assert.
+
+use super::block_allocator::BlockId;
+use super::block_table::BlockTable;
+use crate::quant::packing::{self, levels_per_word};
+use crate::quant::QuantParams;
+
+/// Field width the KV cache packs with (full bytes).
+pub const KV_PACK_BITS: u32 = 8;
+
+/// Borrowed view of one quantized KV block (one side, K or V): packed
+/// levels plus the per-kv-head grids that decode them.
+///
+/// This is what [`super::KvStore::block_view`] hands the attention kernel;
+/// `Workspace::process_quant_tile` dequantizes it into scratch and runs
+/// the ordinary tile schedule.
+#[derive(Debug, Clone, Copy)]
+pub struct QuantKvTile<'a> {
+    /// Packed levels, `[slots, kv_heads, words_per_head]` row-major.
+    pub words: &'a [i32],
+    /// Grid step per kv head (`[kv_heads]`).
+    pub scales: &'a [f32],
+    /// Grid zero point per kv head (`[kv_heads]`).
+    pub zeros: &'a [i32],
+    /// `i32` words per `(slot, kv_head)` vector.
+    pub words_per_head: usize,
+}
+
+impl QuantKvTile<'_> {
+    /// Dequantize the first `slots` rows into `out`
+    /// (`[slots, kv_heads, head_dim]`, dense — the same layout
+    /// `Workspace::process_tile` consumes).
+    pub fn dequantize_into(&self, slots: usize, kv_heads: usize, head_dim: usize, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), slots * kv_heads * head_dim);
+        debug_assert_eq!(self.scales.len(), kv_heads);
+        debug_assert_eq!(self.zeros.len(), kv_heads);
+        let wph = self.words_per_head;
+        debug_assert!(self.words.len() >= slots * kv_heads * wph);
+        for slot in 0..slots {
+            for head in 0..kv_heads {
+                let w0 = (slot * kv_heads + head) * wph;
+                let o0 = (slot * kv_heads + head) * head_dim;
+                packing::unpack_dequant_row(
+                    &self.words[w0..w0 + wph],
+                    KV_PACK_BITS,
+                    self.scales[head],
+                    self.zeros[head],
+                    &mut out[o0..o0 + head_dim],
+                );
+            }
+        }
+    }
+}
+
+/// One side (K or V) of one layer: packed pool + per-(block, kv_head)
+/// grids and running ranges.
+#[derive(Debug, Clone)]
+struct QuantPlane {
+    /// `[num_blocks, block_size, kv_heads, words_per_head]` packed levels.
+    words: Vec<i32>,
+    /// `[num_blocks, kv_heads]` grid steps.
+    scales: Vec<f32>,
+    /// `[num_blocks, kv_heads]` grid zero points.
+    zeros: Vec<i32>,
+    /// `[num_blocks, kv_heads]` running minima (only ever decreases).
+    lo: Vec<f32>,
+    /// `[num_blocks, kv_heads]` running maxima (only ever increases).
+    hi: Vec<f32>,
+}
+
+impl QuantPlane {
+    fn new(num_blocks: usize, block_size: usize, kv_heads: usize, words_per_head: usize) -> Self {
+        QuantPlane {
+            words: vec![0; num_blocks * block_size * kv_heads * words_per_head],
+            // scale 1 / zero 0 decodes the all-zero initial pool to exact
+            // zeros, and equals `fit_range(0, 0)` so the first real write
+            // always triggers a refit.
+            scales: vec![1.0; num_blocks * kv_heads],
+            zeros: vec![0; num_blocks * kv_heads],
+            lo: vec![0.0; num_blocks * kv_heads],
+            hi: vec![0.0; num_blocks * kv_heads],
+        }
+    }
+
+    /// Bytes held by this plane (packed payload + grids + range state).
+    fn bytes(&self) -> usize {
+        self.words.len() * 4
+            + self.scales.len() * 4
+            + self.zeros.len() * 4
+            + self.lo.len() * 4
+            + self.hi.len() * 4
+    }
+}
+
+/// Paged K/V storage with 8-bit packed blocks — the [`super::KvStore`]
+/// implementation behind `KvCacheDtype::Q8`.
+///
+/// Geometry and the write/read protocol match [`super::paged::PagedKvCache`];
+/// only the storage differs (≈0.26× the f32 pool bytes at typical shapes:
+/// 1 payload byte per value plus 16 grid bytes per `(block, kv_head,
+/// side)`). Reads go through [`QuantKvTile`] views so attention dequantizes
+/// per tile; [`QuantizedPagedKvCache::gather`] materializes a dense copy
+/// only for the prefill path, exactly like the f32 cache's gather.
+#[derive(Debug)]
+pub struct QuantizedPagedKvCache {
+    num_layers: usize,
+    num_blocks: usize,
+    block_size: usize,
+    kv_heads: usize,
+    head_dim: usize,
+    words_per_head: usize,
+    /// `keys[layer]` / `values[layer]` are the per-layer packed pools.
+    keys: Vec<QuantPlane>,
+    values: Vec<QuantPlane>,
+    /// Requantization scratch (`head_dim` f32s) so range refits never
+    /// allocate — decode steps stay allocation-free end to end.
+    scratch: Vec<f32>,
+}
+
+impl QuantizedPagedKvCache {
+    pub fn new(
+        num_layers: usize,
+        num_blocks: usize,
+        block_size: usize,
+        kv_heads: usize,
+        head_dim: usize,
+    ) -> Self {
+        let words_per_head = head_dim.div_ceil(levels_per_word(KV_PACK_BITS));
+        QuantizedPagedKvCache {
+            num_layers,
+            num_blocks,
+            block_size,
+            kv_heads,
+            head_dim,
+            words_per_head,
+            keys: (0..num_layers)
+                .map(|_| QuantPlane::new(num_blocks, block_size, kv_heads, words_per_head))
+                .collect(),
+            values: (0..num_layers)
+                .map(|_| QuantPlane::new(num_blocks, block_size, kv_heads, words_per_head))
+                .collect(),
+            scratch: vec![0.0; head_dim],
+        }
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+    pub fn kv_heads(&self) -> usize {
+        self.kv_heads
+    }
+    pub fn head_dim(&self) -> usize {
+        self.head_dim
+    }
+    pub fn num_blocks(&self) -> usize {
+        self.num_blocks
+    }
+    pub fn num_layers(&self) -> usize {
+        self.num_layers
+    }
+
+    /// True bytes held by the packed pools: payload words plus the
+    /// per-(block, kv_head) grids and range state, both sides, all layers.
+    pub fn pool_bytes(&self) -> usize {
+        self.keys.iter().map(QuantPlane::bytes).sum::<usize>()
+            + self.values.iter().map(QuantPlane::bytes).sum::<usize>()
+    }
+
+    /// Word offset of a `(block, slot, head)` vector — THE owner of the
+    /// packed-pool layout. The associated form exists because
+    /// [`QuantizedPagedKvCache::write_head`] splits `&mut self` into
+    /// plane + scratch borrows and cannot take `&self`.
+    #[inline]
+    fn word_off_for(
+        block_size: usize,
+        kv_heads: usize,
+        words_per_head: usize,
+        block: BlockId,
+        slot: usize,
+        head: usize,
+    ) -> usize {
+        ((block as usize * block_size + slot) * kv_heads + head) * words_per_head
+    }
+
+    /// Grid index of a `(block, head)` group (associated form: see
+    /// [`QuantizedPagedKvCache::word_off_for`]).
+    #[inline]
+    fn grid_idx_for(kv_heads: usize, block: BlockId, head: usize) -> usize {
+        block as usize * kv_heads + head
+    }
+
+    /// Word offset of a `(block, slot, head)` vector.
+    #[inline]
+    fn word_off(&self, block: BlockId, slot: usize, head: usize) -> usize {
+        Self::word_off_for(self.block_size, self.kv_heads, self.words_per_head, block, slot, head)
+    }
+
+    /// Grid index of a `(block, head)` group.
+    #[inline]
+    fn grid_idx(&self, block: BlockId, head: usize) -> usize {
+        Self::grid_idx_for(self.kv_heads, block, head)
+    }
+
+    /// Quantize-and-store one head vector, refitting + requantizing the
+    /// whole `(block, head)` group first if `vals` widens its range.
+    ///
+    /// A write to **slot 0** resets the group first (grids, ranges, and
+    /// packed words back to the pristine all-zero state): block tables
+    /// fill blocks front-to-back, so slot 0 marks a freshly (re)claimed
+    /// block, and without the reset a reused block would keep the
+    /// previous sequence's — possibly far wider — range and quantize the
+    /// new tokens on a stale coarse grid. (Mid-block continuations —
+    /// chunked prefill, decode appends, post-COW writes — never start at
+    /// slot 0 of a block they didn't already write or copy.)
+    fn write_head(
+        plane: &mut QuantPlane,
+        scratch: &mut [f32],
+        block_size: usize,
+        kv_heads: usize,
+        words_per_head: usize,
+        block: BlockId,
+        slot: usize,
+        head: usize,
+        vals: &[f32],
+    ) {
+        let widx =
+            |s: usize| Self::word_off_for(block_size, kv_heads, words_per_head, block, s, head);
+        let gi = Self::grid_idx_for(kv_heads, block, head);
+        if slot == 0 {
+            // Per-slot: this head's words interleave with other heads'.
+            for s in 0..block_size {
+                plane.words[widx(s)..widx(s) + words_per_head].fill(0);
+            }
+            plane.scales[gi] = 1.0;
+            plane.zeros[gi] = 0;
+            plane.lo[gi] = 0.0;
+            plane.hi[gi] = 0.0;
+        }
+        let mut lo = plane.lo[gi];
+        let mut hi = plane.hi[gi];
+        for &x in vals {
+            debug_assert!(x.is_finite(), "quantized KV cache requires finite values, got {x}");
+            lo = lo.min(x);
+            hi = hi.max(x);
+        }
+        if lo < plane.lo[gi] || hi > plane.hi[gi] {
+            let p = QuantParams::fit_range(lo, hi, KV_PACK_BITS);
+            if p.scale != plane.scales[gi] || p.zero != plane.zeros[gi] {
+                let old = QuantParams {
+                    scale: plane.scales[gi],
+                    zero: plane.zeros[gi],
+                    bits: KV_PACK_BITS,
+                };
+                let d = scratch.len();
+                for s in 0..block_size {
+                    let words = &mut plane.words[widx(s)..widx(s) + words_per_head];
+                    packing::unpack_dequant_row(words, KV_PACK_BITS, old.scale, old.zero, &mut scratch[..d]);
+                    packing::quant_pack_row(&scratch[..d], &p, words);
+                }
+                plane.scales[gi] = p.scale;
+                plane.zeros[gi] = p.zero;
+            }
+            plane.lo[gi] = lo;
+            plane.hi[gi] = hi;
+        }
+        let p = QuantParams { scale: plane.scales[gi], zero: plane.zeros[gi], bits: KV_PACK_BITS };
+        packing::quant_pack_row(vals, &p, &mut plane.words[widx(slot)..widx(slot) + words_per_head]);
+    }
+
+    /// Quantize and store one token's K and V vectors (all kv heads,
+    /// `kv_heads * head_dim` values each) into a physical slot — the
+    /// quantizing twin of `PagedKvCache::write_token`.
+    pub fn write_token(&mut self, layer: usize, block: BlockId, slot: usize, k: &[f32], v: &[f32]) {
+        let d = self.head_dim;
+        assert_eq!(k.len(), self.kv_heads * d, "key vector length");
+        assert_eq!(v.len(), self.kv_heads * d, "value vector length");
+        debug_assert!((block as usize) < self.num_blocks);
+        debug_assert!(slot < self.block_size);
+        for head in 0..self.kv_heads {
+            Self::write_head(
+                &mut self.keys[layer],
+                &mut self.scratch,
+                self.block_size,
+                self.kv_heads,
+                self.words_per_head,
+                block,
+                slot,
+                head,
+                &k[head * d..(head + 1) * d],
+            );
+            Self::write_head(
+                &mut self.values[layer],
+                &mut self.scratch,
+                self.block_size,
+                self.kv_heads,
+                self.words_per_head,
+                block,
+                slot,
+                head,
+                &v[head * d..(head + 1) * d],
+            );
+        }
+    }
+
+    /// Borrowed packed views of one block (K and V).
+    pub fn block_tiles(&self, layer: usize, block: BlockId) -> (QuantKvTile<'_>, QuantKvTile<'_>) {
+        let wpb = self.block_size * self.kv_heads * self.words_per_head;
+        let w0 = block as usize * wpb;
+        let g0 = block as usize * self.kv_heads;
+        let kp = &self.keys[layer];
+        let vp = &self.values[layer];
+        let k = QuantKvTile {
+            words: &kp.words[w0..w0 + wpb],
+            scales: &kp.scales[g0..g0 + self.kv_heads],
+            zeros: &kp.zeros[g0..g0 + self.kv_heads],
+            words_per_head: self.words_per_head,
+        };
+        let v = QuantKvTile {
+            words: &vp.words[w0..w0 + wpb],
+            scales: &vp.scales[g0..g0 + self.kv_heads],
+            zeros: &vp.zeros[g0..g0 + self.kv_heads],
+            words_per_head: self.words_per_head,
+        };
+        (k, v)
+    }
+
+    /// Dequantize one token's K and V (all kv heads) into the tails of
+    /// `k_out` / `v_out` — the gather building block.
+    fn dequant_token(&self, layer: usize, block: BlockId, slot: usize, k_out: &mut [f32], v_out: &mut [f32]) {
+        let d = self.head_dim;
+        for head in 0..self.kv_heads {
+            let w0 = self.word_off(block, slot, head);
+            let gi = self.grid_idx(block, head);
+            let kp = &self.keys[layer];
+            packing::unpack_dequant_row(
+                &kp.words[w0..w0 + self.words_per_head],
+                KV_PACK_BITS,
+                kp.scales[gi],
+                kp.zeros[gi],
+                &mut k_out[head * d..(head + 1) * d],
+            );
+            let vp = &self.values[layer];
+            packing::unpack_dequant_row(
+                &vp.words[w0..w0 + self.words_per_head],
+                KV_PACK_BITS,
+                vp.scales[gi],
+                vp.zeros[gi],
+                &mut v_out[head * d..(head + 1) * d],
+            );
+        }
+    }
+
+    /// Gather a sequence's K and V into contiguous dense
+    /// `[len, kv_heads*head_dim]` buffers (dequantized) — the prefill
+    /// path, mirroring `PagedKvCache::gather`.
+    pub fn gather(&self, layer: usize, table: &BlockTable) -> (Vec<f32>, Vec<f32>) {
+        let d = self.kv_heads * self.head_dim;
+        let mut ks = vec![0.0f32; table.len() * d];
+        let mut vs = vec![0.0f32; table.len() * d];
+        for pos in 0..table.len() {
+            let (b, s) = table.locate(pos, self.block_size);
+            self.dequant_token(layer, b, s, &mut ks[pos * d..(pos + 1) * d], &mut vs[pos * d..(pos + 1) * d]);
+        }
+        (ks, vs)
+    }
+
+    /// Copy a block's contents — packed words, grids and ranges, all
+    /// layers, both sides (used after a COW split).
+    pub fn copy_block(&mut self, src: BlockId, dst: BlockId) {
+        let wpb = self.block_size * self.kv_heads * self.words_per_head;
+        let (ws, wd) = (src as usize * wpb, dst as usize * wpb);
+        let (gs, gd) = (src as usize * self.kv_heads, dst as usize * self.kv_heads);
+        let kvh = self.kv_heads;
+        for layer in 0..self.num_layers {
+            for plane in [&mut self.keys[layer], &mut self.values[layer]] {
+                plane.words.copy_within(ws..ws + wpb, wd);
+                plane.scales.copy_within(gs..gs + kvh, gd);
+                plane.zeros.copy_within(gs..gs + kvh, gd);
+                plane.lo.copy_within(gs..gs + kvh, gd);
+                plane.hi.copy_within(gs..gs + kvh, gd);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::{BlockAllocator, PagedKvCache};
+    use crate::util::rng::Rng;
+
+    fn fill(
+        cache: &mut QuantizedPagedKvCache,
+        table: &mut BlockTable,
+        rows: &[Vec<f32>],
+        vrows: &[Vec<f32>],
+        block_size: usize,
+    ) {
+        for (k, v) in rows.iter().zip(vrows) {
+            let (b, s) = table.append_slot(block_size);
+            cache.write_token(0, b, s, k, v);
+        }
+    }
+
+    #[test]
+    fn roundtrip_error_bounded_by_final_grid() {
+        let (kvh, d, bs) = (2usize, 8usize, 4usize);
+        let mut rng = Rng::new(1);
+        let n = 11;
+        let rows: Vec<Vec<f32>> = (0..n).map(|_| rng.normal_vec(kvh * d, 1.0)).collect();
+        let vrows: Vec<Vec<f32>> = (0..n).map(|_| rng.normal_vec(kvh * d, 1.0)).collect();
+        let mut cache = QuantizedPagedKvCache::new(1, 4, bs, kvh, d);
+        let mut alloc = BlockAllocator::new(4, bs);
+        let mut table = BlockTable::new();
+        assert!(table.reserve(n, &mut alloc));
+        fill(&mut cache, &mut table, &rows, &vrows, bs);
+        let (ks, vs) = cache.gather(0, &table);
+        for t in 0..n {
+            let (b, _) = table.locate(t, bs);
+            for head in 0..kvh {
+                let gi = cache.grid_idx(b, head);
+                // Drift bound: early tokens may have been requantized as
+                // the range grew; total drift stays within ~2 final steps.
+                let kstep = cache.keys[0].scales[gi];
+                let vstep = cache.values[0].scales[gi];
+                for j in 0..d {
+                    let i = head * d + j;
+                    let ke = (ks[t * kvh * d + i] - rows[t][i]).abs();
+                    let ve = (vs[t * kvh * d + i] - vrows[t][i]).abs();
+                    assert!(ke <= 2.0 * kstep + 1e-5, "t={t} i={i}: ke={ke} step={kstep}");
+                    assert!(ve <= 2.0 * vstep + 1e-5, "t={t} i={i}: ve={ve} step={vstep}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fresh_tokens_land_on_final_grid_exactly() {
+        // The LAST token written to a block must round-trip within half a
+        // step (it is never requantized afterwards).
+        let (kvh, d, bs) = (1usize, 4usize, 4usize);
+        let mut cache = QuantizedPagedKvCache::new(1, 1, bs, kvh, d);
+        let mut alloc = BlockAllocator::new(1, bs);
+        let mut table = BlockTable::new();
+        assert!(table.reserve(4, &mut alloc));
+        let mut rng = Rng::new(2);
+        let rows: Vec<Vec<f32>> = (0..4).map(|_| rng.normal_vec(d, 1.0)).collect();
+        fill(&mut cache, &mut table, &rows, &rows, bs);
+        let (ks, _) = cache.gather(0, &table);
+        let step = cache.keys[0].scales[0];
+        for j in 0..d {
+            let e = (ks[3 * d + j] - rows[3][j]).abs();
+            assert!(e <= 0.5 * step + 1e-6, "j={j}: {e} vs half-step {}", 0.5 * step);
+        }
+    }
+
+    #[test]
+    fn unwritten_slots_decode_to_exact_zero() {
+        let mut cache = QuantizedPagedKvCache::new(1, 2, 4, 2, 4);
+        // Write one token with large values; the other 3 slots must stay 0.
+        cache.write_token(0, 0, 1, &[5.0; 8], &[-3.0; 8]);
+        let (k, v) = cache.block_tiles(0, 0);
+        let mut kd = vec![9.0f32; 4 * 2 * 4];
+        let mut vd = vec![9.0f32; 4 * 2 * 4];
+        k.dequantize_into(4, 2, 4, &mut kd);
+        v.dequantize_into(4, 2, 4, &mut vd);
+        for slot in [0usize, 2, 3] {
+            for i in 0..8 {
+                assert_eq!(kd[slot * 8 + i], 0.0, "slot {slot}");
+                assert_eq!(vd[slot * 8 + i], 0.0, "slot {slot}");
+            }
+        }
+        // And the written slot is close.
+        for i in 0..8 {
+            assert!((kd[8 + i] - 5.0).abs() < 0.05);
+            assert!((vd[8 + i] + 3.0).abs() < 0.05);
+        }
+    }
+
+    #[test]
+    fn layers_are_independent() {
+        let mut cache = QuantizedPagedKvCache::new(2, 2, 4, 1, 4);
+        cache.write_token(0, 0, 0, &[1.0; 4], &[2.0; 4]);
+        let mut out_k = vec![0.0f32; 4];
+        let mut out_v = vec![0.0f32; 4];
+        cache.dequant_token(1, 0, 0, &mut out_k, &mut out_v);
+        assert_eq!(out_k, vec![0.0; 4]);
+        assert_eq!(out_v, vec![0.0; 4]);
+    }
+
+    #[test]
+    fn copy_block_preserves_decoded_values() {
+        let mut cache = QuantizedPagedKvCache::new(2, 3, 4, 2, 4);
+        let mut rng = Rng::new(3);
+        for layer in 0..2 {
+            for slot in 0..4 {
+                let k = rng.normal_vec(8, 1.0);
+                let v = rng.normal_vec(8, 1.0);
+                cache.write_token(layer, 0, slot, &k, &v);
+            }
+        }
+        let mut before_k = vec![0.0f32; 8];
+        let mut before_v = vec![0.0f32; 8];
+        cache.dequant_token(1, 0, 2, &mut before_k, &mut before_v);
+        cache.copy_block(0, 2);
+        let mut after_k = vec![0.0f32; 8];
+        let mut after_v = vec![0.0f32; 8];
+        cache.dequant_token(1, 2, 2, &mut after_k, &mut after_v);
+        assert_eq!(before_k, after_k);
+        assert_eq!(before_v, after_v);
+    }
+
+    #[test]
+    fn range_only_widens_and_outlier_triggers_requant() {
+        let mut cache = QuantizedPagedKvCache::new(1, 1, 4, 1, 4);
+        cache.write_token(0, 0, 0, &[0.1, -0.1, 0.05, 0.0], &[0.0; 4]);
+        let s_before = cache.keys[0].scales[0];
+        cache.write_token(0, 0, 1, &[10.0, 0.0, 0.0, 0.0], &[0.0; 4]);
+        let s_after = cache.keys[0].scales[0];
+        assert!(s_after > s_before, "outlier must widen the grid");
+        // The earlier token survives the requant within the new step.
+        let mut k = vec![0.0f32; 4];
+        let mut v = vec![0.0f32; 4];
+        cache.dequant_token(0, 0, 0, &mut k, &mut v);
+        assert!((k[0] - 0.1).abs() <= s_after, "requant drift bound");
+    }
+
+    #[test]
+    fn block_reuse_resets_stale_grids() {
+        // A freed block reused by another sequence must not inherit the
+        // previous tenant's (much wider) quantization range: the slot-0
+        // write resets the group, so small values get a fine grid again.
+        let (kvh, d, bs) = (1usize, 4usize, 4usize);
+        let mut cache = QuantizedPagedKvCache::new(1, 1, bs, kvh, d);
+        // Tenant A: huge range → coarse grid.
+        for slot in 0..bs {
+            cache.write_token(0, 0, slot, &[10.0, -10.0, 5.0, -5.0], &[8.0; 4]);
+        }
+        let coarse = cache.keys[0].scales[0];
+        assert!(coarse > 0.05, "tenant A grid must be coarse ({coarse})");
+        // Tenant B reuses the block (fresh fill from slot 0, tiny values).
+        let vals = [0.11f32, -0.07, 0.05, 0.02];
+        for slot in 0..bs {
+            cache.write_token(0, 0, slot, &vals, &[0.01; 4]);
+        }
+        let fine = cache.keys[0].scales[0];
+        assert!(fine < coarse / 10.0, "grid must refit to the new tenant ({fine} vs {coarse})");
+        let mut k = vec![0.0f32; 4];
+        let mut v = vec![0.0f32; 4];
+        cache.dequant_token(0, 0, 2, &mut k, &mut v);
+        for (a, b) in k.iter().zip(&vals) {
+            assert!((a - b).abs() <= fine, "reused block must be accurate: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn pool_bytes_math_and_ratio() {
+        // Realistic-ish shape: packed pool must be ≤ 0.3× the f32 pool.
+        let (layers, blocks, bs, kvh, d) = (2usize, 16usize, 16usize, 2usize, 64usize);
+        let q = QuantizedPagedKvCache::new(layers, blocks, bs, kvh, d);
+        let f = PagedKvCache::new(layers, blocks, bs, kvh, d);
+        let wph = d.div_ceil(4);
+        let per_plane = blocks * bs * kvh * wph * 4 + blocks * kvh * 16;
+        assert_eq!(q.pool_bytes(), 2 * layers * per_plane);
+        assert!(
+            10 * q.pool_bytes() <= 3 * f.pool_bytes(),
+            "packed {} vs f32 {}",
+            q.pool_bytes(),
+            f.pool_bytes()
+        );
+    }
+}

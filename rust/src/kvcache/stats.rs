@@ -17,6 +17,11 @@ pub struct CacheStats {
     pub internal_frag: f64,
     /// Pool utilization: used blocks / total blocks.
     pub utilization: f64,
+    /// True bytes held by the physical pool (`KvStore::pool_bytes`) —
+    /// packed payload + quantization grids for a Q8 cache, dense f32
+    /// bytes otherwise. Zero when collected without a pool (allocator +
+    /// tables only).
+    pub pool_bytes: usize,
 }
 
 impl CacheStats {
@@ -45,7 +50,15 @@ impl CacheStats {
             allocated_slots,
             internal_frag,
             utilization: alloc.utilization(),
+            pool_bytes: 0,
         }
+    }
+
+    /// Attach the physical pool's byte count (builder-style; the engine
+    /// calls this with its [`super::KvStore`]'s `pool_bytes()`).
+    pub fn with_pool_bytes(mut self, bytes: usize) -> CacheStats {
+        self.pool_bytes = bytes;
+        self
     }
 }
 
@@ -81,5 +94,29 @@ mod tests {
         let stats = CacheStats::collect(&alloc, std::iter::empty());
         assert_eq!(stats.internal_frag, 0.0);
         assert_eq!(stats.used_slots, 0);
+        assert_eq!(stats.pool_bytes, 0, "no pool attached");
+    }
+
+    #[test]
+    fn pool_bytes_reports_true_packed_bytes() {
+        use crate::kvcache::{KvStore, PagedKvCache, QuantizedPagedKvCache};
+        let (layers, blocks, bs, kvh, d) = (2usize, 8usize, 16usize, 2usize, 64usize);
+        let alloc = BlockAllocator::new(blocks, bs);
+        let f32_cache = PagedKvCache::new(layers, blocks, bs, kvh, d);
+        let q8_cache = QuantizedPagedKvCache::new(layers, blocks, bs, kvh, d);
+
+        let sf = CacheStats::collect(&alloc, std::iter::empty())
+            .with_pool_bytes(KvStore::pool_bytes(&f32_cache));
+        let sq = CacheStats::collect(&alloc, std::iter::empty())
+            .with_pool_bytes(KvStore::pool_bytes(&q8_cache));
+        // f32: 2 sides × layers × blocks × slots × kvh × d × 4 bytes.
+        assert_eq!(sf.pool_bytes, 2 * layers * blocks * bs * kvh * d * 4);
+        // q8: 1 payload byte per value + 16 grid/range bytes per
+        // (block, kv_head, side) per layer.
+        let payload = 2 * layers * blocks * bs * kvh * d;
+        let grids = 2 * layers * blocks * kvh * 16;
+        assert_eq!(sq.pool_bytes, payload + grids);
+        // The packed pool must be ≤ 0.3× the dense pool at this shape.
+        assert!(10 * sq.pool_bytes <= 3 * sf.pool_bytes, "{} vs {}", sq.pool_bytes, sf.pool_bytes);
     }
 }

@@ -1,0 +1,238 @@
+//! The [`KvStore`] abstraction: one protocol, two storage dtypes.
+//!
+//! Everything above the cache — the attention drivers, the native model,
+//! the backends, the engine — talks to KV storage through this trait, so
+//! the dense f32 pool ([`PagedKvCache`]) and the packed 8-bit pool
+//! ([`QuantizedPagedKvCache`]) are interchangeable at runtime. Engines
+//! pick the implementation with [`KvCacheDtype`]
+//! (`EngineConfig::kv_dtype`); the attention kernel dispatches per block
+//! on [`KvBlockView`], dequantizing quantized tiles into workspace
+//! scratch so both dtypes share the exact group-major online-softmax
+//! schedule.
+//!
+//! The trait is object-safe on purpose: [`crate::runtime::Backend`] is a
+//! trait object, so its methods must take `&mut dyn KvStore` rather than
+//! a generic parameter. `Send + Sync` supertraits let
+//! `paged_decode_batch` fan a `&dyn KvStore` across scoped worker
+//! threads.
+
+use super::block_allocator::BlockId;
+use super::block_table::BlockTable;
+use super::paged::PagedKvCache;
+use super::quantized::{QuantKvTile, QuantizedPagedKvCache};
+
+/// Storage dtype of the paged KV pool (the engine-config knob).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum KvCacheDtype {
+    /// Dense f32 pools — 4 bytes per value.
+    #[default]
+    F32,
+    /// Packed 8-bit pools with per-(block, kv_head) grids — ~0.26× the
+    /// f32 bytes; requires a backend that reads quantized tiles
+    /// (`Backend::supports_quantized_kv`).
+    Q8,
+}
+
+impl KvCacheDtype {
+    /// Parse a CLI/config name (`"f32"` | `"q8"`).
+    pub fn parse(name: &str) -> Option<KvCacheDtype> {
+        match name {
+            "f32" => Some(KvCacheDtype::F32),
+            "q8" => Some(KvCacheDtype::Q8),
+            _ => None,
+        }
+    }
+}
+
+/// Borrowed view of one physical block, in whichever representation the
+/// store holds it. Cache blocks are exactly the attention kernel's KV
+/// tiles, so this is the unit the decode path consumes.
+pub enum KvBlockView<'a> {
+    /// Dense rows, `[block_size, kv_heads, head_dim]` flat (K and V).
+    F32 { k: &'a [f32], v: &'a [f32] },
+    /// Packed 8-bit rows plus per-kv-head grids (K and V).
+    Q8 { k: QuantKvTile<'a>, v: QuantKvTile<'a> },
+}
+
+/// Paged KV storage behind block tables — the physical pool interface.
+///
+/// Implementations share the f32 pool's write/read protocol: callers map
+/// logical token positions to `(block, slot)` through a [`BlockTable`]
+/// and never see the storage representation except through
+/// [`KvBlockView`].
+pub trait KvStore: Send + Sync + std::fmt::Debug {
+    fn num_layers(&self) -> usize;
+    fn num_blocks(&self) -> usize;
+    fn block_size(&self) -> usize;
+    fn kv_heads(&self) -> usize;
+    fn head_dim(&self) -> usize;
+
+    /// Storage dtype (mirrors the engine's [`KvCacheDtype`] choice).
+    fn dtype(&self) -> KvCacheDtype;
+
+    /// True bytes held by the pools (packed payload + quantization grids
+    /// for Q8) — the number `CacheStats::pool_bytes` reports.
+    fn pool_bytes(&self) -> usize;
+
+    /// Write one token's K and V vectors (all kv heads,
+    /// `kv_heads * head_dim` values each) into a physical slot,
+    /// quantizing on append if the store is packed.
+    ///
+    /// **Protocol:** blocks are filled front-to-back (the
+    /// [`BlockTable`] append order). A write to **slot 0** may
+    /// reinitialize the whole block — the packed store resets its
+    /// quantization grids there, treating slot 0 as the start of a new
+    /// tenancy — so callers must not overwrite slot 0 of a block whose
+    /// later slots still hold live data.
+    fn write_token(&mut self, layer: usize, block: BlockId, slot: usize, k: &[f32], v: &[f32]);
+
+    /// Copy a block's contents across all layers (COW split support).
+    fn copy_block(&mut self, src: BlockId, dst: BlockId);
+
+    /// One block's K and V in the store's native representation.
+    fn block_view(&self, layer: usize, block: BlockId) -> KvBlockView<'_>;
+
+    /// Gather a sequence's K and V into contiguous dense
+    /// `[len, kv_heads*head_dim]` buffers (dequantized if packed) — the
+    /// prefill path.
+    fn gather(&self, layer: usize, table: &BlockTable) -> (Vec<f32>, Vec<f32>);
+
+    /// Downcast to the dense f32 pool, if that is what this store is.
+    /// The XLA backend needs raw f32 pools to upload as device buffers.
+    fn dense_f32(&self) -> Option<&PagedKvCache> {
+        None
+    }
+
+    /// Mutable form of [`KvStore::dense_f32`].
+    fn dense_f32_mut(&mut self) -> Option<&mut PagedKvCache> {
+        None
+    }
+}
+
+impl KvStore for PagedKvCache {
+    fn num_layers(&self) -> usize {
+        PagedKvCache::num_layers(self)
+    }
+    fn num_blocks(&self) -> usize {
+        PagedKvCache::num_blocks(self)
+    }
+    fn block_size(&self) -> usize {
+        PagedKvCache::block_size(self)
+    }
+    fn kv_heads(&self) -> usize {
+        PagedKvCache::kv_heads(self)
+    }
+    fn head_dim(&self) -> usize {
+        PagedKvCache::head_dim(self)
+    }
+    fn dtype(&self) -> KvCacheDtype {
+        KvCacheDtype::F32
+    }
+    fn pool_bytes(&self) -> usize {
+        PagedKvCache::pool_bytes(self)
+    }
+    fn write_token(&mut self, layer: usize, block: BlockId, slot: usize, k: &[f32], v: &[f32]) {
+        PagedKvCache::write_token(self, layer, block, slot, k, v)
+    }
+    fn copy_block(&mut self, src: BlockId, dst: BlockId) {
+        PagedKvCache::copy_block(self, src, dst)
+    }
+    fn block_view(&self, layer: usize, block: BlockId) -> KvBlockView<'_> {
+        KvBlockView::F32 { k: self.key_block(layer, block), v: self.value_block(layer, block) }
+    }
+    fn gather(&self, layer: usize, table: &BlockTable) -> (Vec<f32>, Vec<f32>) {
+        PagedKvCache::gather(self, layer, table)
+    }
+    fn dense_f32(&self) -> Option<&PagedKvCache> {
+        Some(self)
+    }
+    fn dense_f32_mut(&mut self) -> Option<&mut PagedKvCache> {
+        Some(self)
+    }
+}
+
+impl KvStore for QuantizedPagedKvCache {
+    fn num_layers(&self) -> usize {
+        QuantizedPagedKvCache::num_layers(self)
+    }
+    fn num_blocks(&self) -> usize {
+        QuantizedPagedKvCache::num_blocks(self)
+    }
+    fn block_size(&self) -> usize {
+        QuantizedPagedKvCache::block_size(self)
+    }
+    fn kv_heads(&self) -> usize {
+        QuantizedPagedKvCache::kv_heads(self)
+    }
+    fn head_dim(&self) -> usize {
+        QuantizedPagedKvCache::head_dim(self)
+    }
+    fn dtype(&self) -> KvCacheDtype {
+        KvCacheDtype::Q8
+    }
+    fn pool_bytes(&self) -> usize {
+        QuantizedPagedKvCache::pool_bytes(self)
+    }
+    fn write_token(&mut self, layer: usize, block: BlockId, slot: usize, k: &[f32], v: &[f32]) {
+        QuantizedPagedKvCache::write_token(self, layer, block, slot, k, v)
+    }
+    fn copy_block(&mut self, src: BlockId, dst: BlockId) {
+        QuantizedPagedKvCache::copy_block(self, src, dst)
+    }
+    fn block_view(&self, layer: usize, block: BlockId) -> KvBlockView<'_> {
+        let (k, v) = self.block_tiles(layer, block);
+        KvBlockView::Q8 { k, v }
+    }
+    fn gather(&self, layer: usize, table: &BlockTable) -> (Vec<f32>, Vec<f32>) {
+        QuantizedPagedKvCache::gather(self, layer, table)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_parse_and_downcast() {
+        assert_eq!(KvCacheDtype::parse("f32"), Some(KvCacheDtype::F32));
+        assert_eq!(KvCacheDtype::parse("q8"), Some(KvCacheDtype::Q8));
+        assert_eq!(KvCacheDtype::parse("int3"), None);
+
+        let mut f: Box<dyn KvStore> = Box::new(PagedKvCache::new(1, 2, 4, 1, 4));
+        assert_eq!(f.dtype(), KvCacheDtype::F32);
+        assert!(f.dense_f32().is_some());
+        assert!(f.dense_f32_mut().is_some());
+
+        let mut q: Box<dyn KvStore> = Box::new(QuantizedPagedKvCache::new(1, 2, 4, 1, 4));
+        assert_eq!(q.dtype(), KvCacheDtype::Q8);
+        assert!(q.dense_f32().is_none());
+        assert!(q.dense_f32_mut().is_none());
+        assert!(q.pool_bytes() < f.pool_bytes());
+    }
+
+    #[test]
+    fn both_stores_roundtrip_through_the_trait() {
+        use crate::kvcache::BlockAllocator;
+        for dtype in [KvCacheDtype::F32, KvCacheDtype::Q8] {
+            let mut cache: Box<dyn KvStore> = match dtype {
+                KvCacheDtype::F32 => Box::new(PagedKvCache::new(1, 4, 4, 2, 4)),
+                KvCacheDtype::Q8 => Box::new(QuantizedPagedKvCache::new(1, 4, 4, 2, 4)),
+            };
+            let mut alloc = BlockAllocator::new(4, 4);
+            let mut table = BlockTable::new();
+            assert!(table.reserve(6, &mut alloc));
+            for t in 0..6 {
+                let (b, s) = table.append_slot(4);
+                let x = t as f32 / 8.0;
+                cache.write_token(0, b, s, &[x; 8], &[-x; 8]);
+            }
+            let (ks, vs) = cache.gather(0, &table);
+            assert_eq!(ks.len(), 6 * 8);
+            for t in 0..6 {
+                let x = t as f32 / 8.0;
+                assert!((ks[t * 8] - x).abs() < 0.01, "{dtype:?} k t={t}");
+                assert!((vs[t * 8] + x).abs() < 0.01, "{dtype:?} v t={t}");
+            }
+        }
+    }
+}

@@ -23,14 +23,19 @@
 //! | [`util`] | offline-environment substrates: JSON, CLI, RNG, bench + property-test harnesses |
 //! | [`tensor`] | minimal row-major f32 ndarray with the ops the native backend needs |
 //! | [`tokenizer`] | byte-level tokenizer (vocab 256 + specials) |
-//! | [`kvcache`] | paged block allocator, block tables, contiguous baseline, fragmentation stats |
+//! | [`kvcache`] | paged block allocator, block tables, [`kvcache::KvStore`] pools (f32 + packed 8-bit), contiguous baseline, stats |
 //! | [`quant`] | GPTQ (Hessian/Cholesky, error propagation), RTN baseline, int4/int8 packing |
 //! | [`attention`] | block-tiled group-major kernel core ([`attention::kernel`]) + MHA / GQA / ALiBi / paged drivers |
 //! | [`model`] | Llama-architecture config, weights, native forward, sampler |
-//! | [`runtime`] | PJRT client, artifact manifest, `Backend` trait (Native / Xla) |
+//! | [`runtime`] | PJRT client (stubbed offline), artifact manifest, `Backend` trait (Native / Xla) |
 //! | [`coordinator`] | sequence state machine, scheduler, batcher, router, engine, metrics |
 //! | [`server`] | threaded TCP/HTTP front-end speaking the JSON API |
 //! | [`workload`] | synthetic request-trace generator (Poisson arrivals) |
+//!
+//! The request path (coordinator → model → attention kernel → kvcache),
+//! the Workspace/threading/bench contracts, and the storage-dtype design
+//! are documented end to end in `ARCHITECTURE.md` at the repo root; the
+//! sections below are the contract summaries.
 //!
 //! ## Attention kernel core and threading model
 //!
@@ -49,6 +54,20 @@
 //! auto-sized from the batch's KV footprint, pinnable via
 //! `NativeBackend::with_decode_threads`, and bit-identical to serial
 //! execution at every width.
+//!
+//! ## KV storage dtypes
+//!
+//! The engine reads and writes KV through the [`kvcache::KvStore`]
+//! trait; `EngineConfig::kv_dtype` picks dense f32
+//! ([`kvcache::PagedKvCache`]) or packed 8-bit
+//! ([`kvcache::QuantizedPagedKvCache`]: quantize-on-append,
+//! per-(block, kv_head) grids, ~0.26× the pool bytes). Quantized blocks
+//! are dequantized **per tile inside the kernel** into workspace scratch
+//! (`Workspace::process_quant_tile`), so both dtypes share one attention
+//! schedule and the zero-alloc contract; `tests/attention_parity.rs`
+//! bounds the quantized path's output error and
+//! `tests/alloc_steadystate.rs` audits the allocation contract with a
+//! counting allocator.
 
 pub mod attention;
 pub mod coordinator;

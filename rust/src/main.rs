@@ -1,13 +1,15 @@
 //! `opt-gptq` — CLI for the Opt-GPTQ serving stack.
 //!
 //! ```text
-//! opt-gptq serve    --model tiny --port 8765 --workers 1 [--xla --artifacts DIR]
+//! opt-gptq serve    --model tiny --port 8765 --workers 1 [--kv-dtype q8] [--xla --artifacts DIR]
 //! opt-gptq generate --model tiny --prompt "hello" --max-tokens 32
 //! opt-gptq quantize --model tiny --bits 4 --group-size 64 --out weights.bin
 //! opt-gptq info     --model tiny
 //! ```
 
-use opt_gptq::coordinator::{BucketPolicy, EngineConfig, Router, RouterConfig, SchedulerConfig};
+use opt_gptq::coordinator::{
+    BucketPolicy, EngineConfig, KvCacheDtype, Router, RouterConfig, SchedulerConfig,
+};
 use opt_gptq::model::{
     weights::{quantize_weights, QuantMethod},
     ModelConfig, ModelWeights, NativeModel, SamplingParams,
@@ -66,6 +68,15 @@ fn engine_config(args: &Args, cfg: &ModelConfig) -> EngineConfig {
     let kv_budget = args.get_usize("kv-tokens", 4096.min(cfg.max_seq * 8));
     let block_size = args.get_usize("block-size", 16);
     let max_batch = args.get_usize("max-batch", 8);
+    let kv_dtype_name = args.get_str("kv-dtype", "f32");
+    let kv_dtype = KvCacheDtype::parse(kv_dtype_name).unwrap_or_else(|| {
+        eprintln!("unknown --kv-dtype '{kv_dtype_name}' (f32|q8)");
+        std::process::exit(2);
+    });
+    if kv_dtype != KvCacheDtype::F32 && args.flag("xla") {
+        eprintln!("--kv-dtype {kv_dtype_name} requires the native backend (the XLA artifacts consume raw f32 KV pools)");
+        std::process::exit(2);
+    }
     EngineConfig {
         num_blocks: kv_budget.div_ceil(block_size),
         block_size,
@@ -76,7 +87,8 @@ fn engine_config(args: &Args, cfg: &ModelConfig) -> EngineConfig {
         },
         decode_buckets: BucketPolicy::exact(max_batch),
         prefill_chunk: usize::MAX,
-            prefix_cache_blocks: 0,
+        prefix_cache_blocks: 0,
+        kv_dtype,
     }
 }
 

@@ -11,7 +11,7 @@ use super::config::ModelConfig;
 use super::weights::ModelWeights;
 use crate::attention::gqa::gqa_attention;
 use crate::attention::paged::{auto_decode_threads, paged_decode_batch};
-use crate::kvcache::{BlockTable, PagedKvCache};
+use crate::kvcache::{BlockTable, KvStore};
 use crate::tensor::{rmsnorm, Tensor};
 
 /// A model executable on the native backend.
@@ -55,10 +55,14 @@ impl NativeModel {
     /// placed at positions `table.len()..table.len()+n` and attend to all
     /// earlier cache content. Returns the **last** position's logits
     /// (`[vocab]`).
+    ///
+    /// Works over any [`KvStore`]: on a quantized cache, K/V are
+    /// quantized on append and `gather` dequantizes the visible context
+    /// for the contiguous attention pass.
     pub fn prefill(
         &self,
         tokens: &[u32],
-        cache: &mut PagedKvCache,
+        cache: &mut dyn KvStore,
         table: &mut BlockTable,
     ) -> Vec<f32> {
         assert!(!tokens.is_empty());
@@ -101,7 +105,7 @@ impl NativeModel {
     pub fn decode_step(
         &self,
         token: u32,
-        cache: &mut PagedKvCache,
+        cache: &mut dyn KvStore,
         table: &mut BlockTable,
     ) -> Vec<f32> {
         let mut tables = [table];
@@ -121,7 +125,7 @@ impl NativeModel {
     pub fn decode_batch(
         &self,
         tokens: &[u32],
-        cache: &mut PagedKvCache,
+        cache: &mut dyn KvStore,
         tables: &mut [&mut BlockTable],
     ) -> Vec<Vec<f32>> {
         self.decode_batch_with(tokens, cache, tables, None)
@@ -136,7 +140,7 @@ impl NativeModel {
     pub fn decode_batch_with(
         &self,
         tokens: &[u32],
-        cache: &mut PagedKvCache,
+        cache: &mut dyn KvStore,
         tables: &mut [&mut BlockTable],
         threads: Option<usize>,
     ) -> Vec<Vec<f32>> {
@@ -241,7 +245,7 @@ impl NativeModel {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::kvcache::BlockAllocator;
+    use crate::kvcache::{BlockAllocator, PagedKvCache};
 
     fn mk(seed: u64) -> (NativeModel, PagedKvCache, BlockAllocator) {
         let cfg = ModelConfig::tiny();
@@ -334,6 +338,33 @@ mod tests {
         let serial = run(Some(1));
         assert_eq!(serial, run(Some(4)));
         assert_eq!(serial, run(None));
+    }
+
+    #[test]
+    fn quantized_kv_cache_generates_close_to_f32() {
+        // Same model, same prompt, f32 vs q8 KV pools: logits stay finite
+        // and close (the KV pool is the only difference).
+        use crate::kvcache::QuantizedPagedKvCache;
+        let cfg = ModelConfig::tiny();
+        let model = NativeModel::new(ModelWeights::init(&cfg, 9));
+        let run = |quant: bool| {
+            let mut fcache = PagedKvCache::new(cfg.n_layers, 32, 8, cfg.n_kv_heads, cfg.head_dim());
+            let mut qcache =
+                QuantizedPagedKvCache::new(cfg.n_layers, 32, 8, cfg.n_kv_heads, cfg.head_dim());
+            let cache: &mut dyn crate::kvcache::KvStore =
+                if quant { &mut qcache } else { &mut fcache };
+            let mut alloc = BlockAllocator::new(32, 8);
+            let mut table = BlockTable::new();
+            table.reserve(6, &mut alloc);
+            let _ = model.prefill(&[256, 7, 8, 9], cache, &mut table);
+            model.decode_step(10, cache, &mut table)
+        };
+        let f = run(false);
+        let q = run(true);
+        assert!(q.iter().all(|v| v.is_finite()));
+        let max_diff =
+            f.iter().zip(&q).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+        assert!(max_diff < 0.5, "q8 KV must not derail logits (max diff {max_diff})");
     }
 
     #[test]

@@ -62,16 +62,26 @@ impl QuantParams {
 
     /// Fit an asymmetric min/max grid to a slice of weights.
     pub fn fit(xs: &[f32], bits: u32) -> QuantParams {
-        assert!((2..=8).contains(&bits));
         let mut lo = f32::INFINITY;
         let mut hi = f32::NEG_INFINITY;
         for &x in xs {
             lo = lo.min(x);
             hi = hi.max(x);
         }
+        Self::fit_range(lo, hi, bits)
+    }
+
+    /// Fit an asymmetric grid to a known `[lo, hi]` range (the streaming
+    /// form of [`QuantParams::fit`] — the quantized KV cache tracks a
+    /// running min/max per block and refits from it without rescanning).
+    ///
+    /// The grid is widened to contain zero so zero values round-trip
+    /// exactly; a degenerate or empty range falls back to `scale = 1`.
+    pub fn fit_range(lo: f32, hi: f32, bits: u32) -> QuantParams {
+        assert!((2..=8).contains(&bits));
         // Grid must contain zero so zero weights stay exact.
-        lo = lo.min(0.0);
-        hi = hi.max(0.0);
+        let lo = lo.min(0.0);
+        let hi = hi.max(0.0);
         let max_q = ((1u32 << bits) - 1) as f32;
         let mut scale = (hi - lo) / max_q;
         if scale <= 0.0 || !scale.is_finite() {
@@ -144,6 +154,18 @@ mod tests {
         let p = QuantParams::fit(&[-1.0, 1.0], 4);
         assert_eq!(p.quantize(100.0), p.max_q());
         assert_eq!(p.quantize(-100.0), 0);
+    }
+
+    #[test]
+    fn fit_range_matches_fit() {
+        let xs = [-1.5f32, 0.25, 2.0, 0.75];
+        let a = QuantParams::fit(&xs, 8);
+        let b = QuantParams::fit_range(-1.5, 2.0, 8);
+        assert_eq!(a, b);
+        // Positive-only data still gets a grid anchored at zero.
+        let p = QuantParams::fit_range(0.5, 3.0, 8);
+        assert_eq!(p.zero, 0);
+        assert_eq!(p.roundtrip(0.0), 0.0);
     }
 
     #[test]

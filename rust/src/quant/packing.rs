@@ -9,7 +9,7 @@
 //! and still demonstrates the bits ablation; the *storage_bytes* metric
 //! reports true 3-bit size).
 
-use super::QuantizedMatrix;
+use super::{QuantParams, QuantizedMatrix};
 
 /// A nibble/byte-packed quantized matrix plus its grids, ready for upload.
 #[derive(Debug, Clone)]
@@ -89,6 +89,38 @@ pub fn unpack_rows(p: &PackedMatrix) -> Vec<u8> {
     q
 }
 
+/// Quantize `vals` onto `p`'s grid and pack the levels little-endian into
+/// `words` (the slice is fully rewritten). `p.bits` is the packed field
+/// width and must divide 32 (the KV cache packs full bytes; nibble
+/// packing works the same way). This is the streaming single-row form of
+/// [`pack_rows`]: the quantized paged KV cache packs one `(token,
+/// kv_head)` vector per call instead of a whole matrix.
+pub fn quant_pack_row(vals: &[f32], p: &QuantParams, words: &mut [i32]) {
+    debug_assert!(32 % p.bits == 0, "field width must divide 32");
+    let lpw = levels_per_word(p.bits);
+    debug_assert!(words.len() >= vals.len().div_ceil(lpw));
+    words.fill(0);
+    for (c, &x) in vals.iter().enumerate() {
+        let q = p.quantize(x) as u32;
+        words[c / lpw] |= ((q as i64) << ((c % lpw) as u32 * p.bits)) as i32;
+    }
+}
+
+/// Unpack `out.len()` levels from `words` and dequantize them with one
+/// `(scale, zero)` grid — the attention kernel's per-tile dequant
+/// primitive (one call per `(tile row, kv_head)`).
+#[inline]
+pub fn unpack_dequant_row(words: &[i32], pack_bits: u32, scale: f32, zero: i32, out: &mut [f32]) {
+    let lpw = levels_per_word(pack_bits);
+    let mask = (1u32 << pack_bits) - 1;
+    debug_assert!(words.len() * lpw >= out.len());
+    for (c, o) in out.iter_mut().enumerate() {
+        let w = words[c / lpw] as u32;
+        let q = ((w >> ((c % lpw) as u32 * pack_bits)) & mask) as i32;
+        *o = (q - zero) as f32 * scale;
+    }
+}
+
 impl PackedMatrix {
     /// Dequantize the packed payload (must equal the source matrix's
     /// `dequantize()` output).
@@ -157,6 +189,40 @@ mod tests {
         for (x, y) in a.iter().zip(&b) {
             assert_eq!(x, y);
         }
+    }
+
+    #[test]
+    fn quant_pack_row_roundtrips_through_grid() {
+        use crate::quant::QuantParams;
+        let mut rng = Rng::new(5);
+        for &(bits, n) in &[(8u32, 13usize), (8, 4), (4, 9), (8, 1)] {
+            let vals = rng.normal_vec(n, 1.0);
+            let p = QuantParams::fit(&vals, bits);
+            let lpw = levels_per_word(bits);
+            let mut words = vec![-1i32; n.div_ceil(lpw)];
+            quant_pack_row(&vals, &p, &mut words);
+            let mut out = vec![0.0f32; n];
+            unpack_dequant_row(&words, bits, p.scale, p.zero, &mut out);
+            for (x, y) in vals.iter().zip(&out) {
+                assert_eq!(p.roundtrip(*x), *y, "bits={bits} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn quant_pack_row_matches_matrix_packing() {
+        // One row packed via the streaming helper must be word-identical
+        // to the whole-matrix pack_rows path on the same levels.
+        use crate::quant::QuantParams;
+        let mut rng = Rng::new(6);
+        let cols = 11;
+        let w = rng.normal_vec(cols, 1.0);
+        let qm = rtn_quantize(&w, 1, cols, 8, cols);
+        let packed = pack_rows(&qm);
+        let p = QuantParams { scale: qm.params[0].scale, zero: qm.params[0].zero, bits: 8 };
+        let mut words = vec![0i32; packed.words_per_row];
+        quant_pack_row(&w, &p, &mut words);
+        assert_eq!(words, packed.words);
     }
 
     #[test]

@@ -1,6 +1,6 @@
 //! The `Backend` trait and its native implementation.
 
-use crate::kvcache::{BlockTable, PagedKvCache};
+use crate::kvcache::{BlockTable, KvStore};
 use crate::model::{ModelConfig, NativeModel};
 
 /// One sequence's slot in a decode batch.
@@ -21,10 +21,10 @@ pub struct DecodeItem<'a> {
 pub trait Backend: Send {
     fn config(&self) -> &ModelConfig;
 
-    fn prefill(&self, tokens: &[u32], cache: &mut PagedKvCache, table: &mut BlockTable)
+    fn prefill(&self, tokens: &[u32], cache: &mut dyn KvStore, table: &mut BlockTable)
         -> Vec<f32>;
 
-    fn decode(&self, items: &mut [DecodeItem<'_>], cache: &mut PagedKvCache) -> Vec<Vec<f32>>;
+    fn decode(&self, items: &mut [DecodeItem<'_>], cache: &mut dyn KvStore) -> Vec<Vec<f32>>;
 
     /// Human-readable backend name (metrics/logs).
     fn name(&self) -> &'static str;
@@ -34,6 +34,14 @@ pub trait Backend: Send {
     /// sequences (positions start at 0), so only the native backend
     /// opts in.
     fn supports_offset_prefill(&self) -> bool {
+        false
+    }
+
+    /// Whether this backend can read a non-f32 [`KvStore`]
+    /// (`KvCacheDtype::Q8`). The native kernel dequantizes per tile; the
+    /// XLA artifacts expect raw f32 pools, so only the native backend
+    /// opts in. The engine checks this at construction.
+    fn supports_quantized_kv(&self) -> bool {
         false
     }
 }
@@ -73,13 +81,13 @@ impl Backend for NativeBackend {
     fn prefill(
         &self,
         tokens: &[u32],
-        cache: &mut PagedKvCache,
+        cache: &mut dyn KvStore,
         table: &mut BlockTable,
     ) -> Vec<f32> {
         self.model.prefill(tokens, cache, table)
     }
 
-    fn decode(&self, items: &mut [DecodeItem<'_>], cache: &mut PagedKvCache) -> Vec<Vec<f32>> {
+    fn decode(&self, items: &mut [DecodeItem<'_>], cache: &mut dyn KvStore) -> Vec<Vec<f32>> {
         // One joint pass: weights are streamed once per STEP, not once per
         // sequence (see NativeModel::decode_batch), and the per-sequence
         // attention fans out across cores with per-worker workspaces.
@@ -100,12 +108,16 @@ impl Backend for NativeBackend {
     fn supports_offset_prefill(&self) -> bool {
         true
     }
+
+    fn supports_quantized_kv(&self) -> bool {
+        true
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::kvcache::BlockAllocator;
+    use crate::kvcache::{BlockAllocator, PagedKvCache};
     use crate::model::{ModelConfig, ModelWeights};
 
     #[test]

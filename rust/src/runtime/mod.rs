@@ -7,10 +7,13 @@
 //!   dependency-free, deterministic; benches and tests default to it), or
 //! * [`XlaBackend`] — AOT-compiled HLO (from `python/compile/aot.py`)
 //!   executed through the PJRT C API, proving the three-layer
-//!   JAX/Pallas → HLO → Rust path end-to-end.
+//!   JAX/Pallas → HLO → Rust path end-to-end. The offline build links
+//!   the in-tree [`pjrt_stub`] (compiles everywhere, fails fast at
+//!   runtime); swap it for a real PJRT binding to execute artifacts.
 
 pub mod artifacts;
 pub mod backend;
+pub mod pjrt_stub;
 pub mod xla_backend;
 
 pub use artifacts::{ArtifactManifest, BucketSpec};

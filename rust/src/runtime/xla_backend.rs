@@ -28,7 +28,10 @@
 
 use super::artifacts::ArtifactManifest;
 use super::backend::{Backend, DecodeItem};
-use crate::kvcache::{BlockTable, PagedKvCache};
+// The offline build has no PJRT binding crate; the in-tree stub exposes
+// the same API and fails fast at runtime (see `runtime::pjrt_stub`).
+use super::pjrt_stub as xla;
+use crate::kvcache::{BlockTable, KvStore, PagedKvCache};
 use crate::model::{ModelConfig, ModelWeights};
 use crate::tokenizer::PAD;
 use anyhow::{bail, Context, Result};
@@ -249,13 +252,19 @@ impl Backend for XlaBackend {
     fn prefill(
         &self,
         tokens: &[u32],
-        cache: &mut PagedKvCache,
+        cache: &mut dyn KvStore,
         table: &mut BlockTable,
     ) -> Vec<f32> {
+        let cache = cache
+            .dense_f32_mut()
+            .expect("XLA backend requires the dense f32 KV cache (kv_dtype = F32)");
         self.prefill_impl(tokens, cache, table).expect("XLA prefill failed")
     }
 
-    fn decode(&self, items: &mut [DecodeItem<'_>], cache: &mut PagedKvCache) -> Vec<Vec<f32>> {
+    fn decode(&self, items: &mut [DecodeItem<'_>], cache: &mut dyn KvStore) -> Vec<Vec<f32>> {
+        let cache = cache
+            .dense_f32_mut()
+            .expect("XLA backend requires the dense f32 KV cache (kv_dtype = F32)");
         self.decode_impl(items, cache).expect("XLA decode failed")
     }
 

@@ -161,7 +161,8 @@ mod tests {
                     sched: SchedulerConfig::default(),
                     decode_buckets: BucketPolicy::exact(8),
                     prefill_chunk: usize::MAX,
-            prefix_cache_blocks: 0,
+                    prefix_cache_blocks: 0,
+                    kv_dtype: crate::kvcache::KvCacheDtype::F32,
                 },
                 workers: 1,
             },

@@ -1,0 +1,122 @@
+//! Steady-state allocation audit for the decode attention path.
+//!
+//! The Workspace contract (see `attention::kernel`) promises that once
+//! scratch buffers have grown to a shape, repeated attention calls
+//! perform **zero heap allocations** — including the quantized-cache
+//! path, whose per-tile dequant scratch lives in the same workspace, and
+//! the quantized cache's own write path, whose requant scratch is
+//! preallocated. This binary installs a counting global allocator and
+//! proves it.
+//!
+//! This file must hold exactly ONE `#[test]` (the harness runs tests in
+//! parallel threads inside one process; a second test would count its
+//! allocations into ours). Counters are thread-local so harness threads
+//! cannot interfere either.
+
+use opt_gptq::attention::gqa::{AttnConfig, Bias};
+use opt_gptq::attention::kernel::Workspace;
+use opt_gptq::attention::paged::paged_decode_attention_into;
+use opt_gptq::kvcache::{
+    BlockAllocator, BlockTable, KvStore, PagedKvCache, QuantizedPagedKvCache,
+};
+use opt_gptq::util::rng::Rng;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+thread_local! {
+    static COUNTING: Cell<bool> = const { Cell::new(false) };
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+struct CountingAlloc;
+
+impl CountingAlloc {
+    fn record() {
+        // `try_with` so allocator calls during thread teardown are safe.
+        let _ = COUNTING.try_with(|c| {
+            if c.get() {
+                let _ = ALLOCS.try_with(|a| a.set(a.get() + 1));
+            }
+        });
+    }
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        Self::record();
+        System.alloc(layout)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        Self::record();
+        System.alloc_zeroed(layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        Self::record();
+        System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+/// Run `f` with allocation counting enabled on this thread; return the
+/// number of heap allocations it performed.
+fn count_allocs(f: impl FnOnce()) -> u64 {
+    ALLOCS.with(|a| a.set(0));
+    COUNTING.with(|c| c.set(true));
+    f();
+    COUNTING.with(|c| c.set(false));
+    ALLOCS.with(|a| a.get())
+}
+
+#[test]
+fn steady_state_decode_attention_allocates_nothing() {
+    let (h, kvh, d, block_size, kv_len) = (8usize, 2usize, 16usize, 8usize, 40usize);
+    let cfg = AttnConfig { num_heads: h, num_kv_heads: kvh, head_dim: d, bias: Bias::Alibi };
+    let num_blocks = kv_len.div_ceil(block_size) + 1;
+    let mut fcache = PagedKvCache::new(1, num_blocks, block_size, kvh, d);
+    let mut qcache = QuantizedPagedKvCache::new(1, num_blocks, block_size, kvh, d);
+    let mut alloc = BlockAllocator::new(num_blocks, block_size);
+    let mut table = BlockTable::new();
+    assert!(table.reserve(kv_len, &mut alloc));
+    let mut rng = Rng::new(123);
+    let mut rows = Vec::new();
+    for _ in 0..kv_len {
+        let (b, s) = table.append_slot(block_size);
+        let k = rng.normal_vec(kvh * d, 1.0);
+        let v = rng.normal_vec(kvh * d, 1.0);
+        fcache.write_token(0, b, s, &k, &v);
+        qcache.write_token(0, b, s, &k, &v);
+        rows.push((b, s, k, v));
+    }
+    let q = rng.normal_vec(h * d, 1.0);
+    let mut ws = Workspace::new();
+    let mut out = vec![0.0f32; h * d];
+
+    for (name, cache) in
+        [("f32", &fcache as &dyn KvStore), ("q8", &qcache as &dyn KvStore)]
+    {
+        // Warm-up: grows workspace scratch (incl. the q8 dequant tiles).
+        paged_decode_attention_into(&cfg, cache, 0, &q, &table, &mut ws, &mut out);
+        let n = count_allocs(|| {
+            for _ in 0..10 {
+                paged_decode_attention_into(&cfg, cache, 0, &q, &table, &mut ws, &mut out);
+            }
+        });
+        assert_eq!(n, 0, "{name}: steady-state decode attention must not allocate");
+    }
+    assert!(out.iter().all(|v| v.is_finite()));
+
+    // The quantized write path is also allocation-free: rewriting tokens
+    // (worst case: every write refits + requantizes its group) uses only
+    // the cache's preallocated requant scratch.
+    let n = count_allocs(|| {
+        for (b, s, k, v) in &rows {
+            qcache.write_token(0, *b, *s, k, v);
+        }
+    });
+    assert_eq!(n, 0, "q8 write_token must not allocate in steady state");
+}

@@ -10,7 +10,7 @@
 use opt_gptq::attention::gqa::{gqa_attention, gqa_attention_into, AttnConfig, Bias};
 use opt_gptq::attention::kernel::Workspace;
 use opt_gptq::attention::paged::{paged_decode_attention, paged_decode_batch};
-use opt_gptq::kvcache::{BlockAllocator, BlockTable, PagedKvCache};
+use opt_gptq::kvcache::{BlockAllocator, BlockTable, PagedKvCache, QuantizedPagedKvCache};
 use opt_gptq::util::proptest::forall;
 use opt_gptq::util::rng::Rng;
 
@@ -131,6 +131,104 @@ fn batch_decode_bit_identical_across_thread_counts() {
     for i in 0..n {
         let one = paged_decode_attention(&cfg, &cache, 0, &qs[i * row..(i + 1) * row], refs[i]);
         assert_eq!(&serial[i * row..(i + 1) * row], &one[..], "seq {i}");
+    }
+}
+
+/// Fill an f32 cache and a q8 cache with the same token stream and
+/// return the max-abs difference between their decode outputs.
+fn quantized_vs_f32_decode_err(
+    bias: Bias,
+    block_size: usize,
+    h: usize,
+    kvh: usize,
+    d: usize,
+    kv_len: usize,
+    sigma: f32,
+    seed: u64,
+) -> f32 {
+    let cfg = AttnConfig { num_heads: h, num_kv_heads: kvh, head_dim: d, bias };
+    let num_blocks = kv_len.div_ceil(block_size) + 1;
+    let mut fcache = PagedKvCache::new(1, num_blocks, block_size, kvh, d);
+    let mut qcache = QuantizedPagedKvCache::new(1, num_blocks, block_size, kvh, d);
+    let mut alloc = BlockAllocator::new(num_blocks, block_size);
+    let mut table = BlockTable::new();
+    assert!(table.reserve(kv_len, &mut alloc));
+    let mut rng = Rng::new(seed);
+    for _ in 0..kv_len {
+        let (b, s) = table.append_slot(block_size);
+        let k = rng.normal_vec(kvh * d, sigma);
+        let v = rng.normal_vec(kvh * d, sigma);
+        fcache.write_token(0, b, s, &k, &v);
+        qcache.write_token(0, b, s, &k, &v);
+    }
+    let q = rng.normal_vec(h * d, sigma);
+    let dense = paged_decode_attention(&cfg, &fcache, 0, &q, &table);
+    let packed = paged_decode_attention(&cfg, &qcache, 0, &q, &table);
+    dense.iter().zip(&packed).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max)
+}
+
+#[test]
+fn quantized_decode_within_1e2_of_f32_across_grid() {
+    // The tentpole acceptance grid: (block_size, group shape, context
+    // length), both bias modes, activation-scale data (σ = 0.2 — the
+    // 8-bit per-(block, kv_head) grid has an intrinsic half-step of
+    // ~1.3% of the data range, so the absolute 1e-2 bound is meaningful
+    // at this scale and holds with ~3× margin).
+    for &bias in &[Bias::Alibi, Bias::None] {
+        for &block_size in &[4usize, 16] {
+            for &(h, kvh, d) in &[(4usize, 1usize, 8usize), (4, 2, 8), (8, 8, 8), (8, 2, 64)] {
+                for &kv_len in &[1usize, 7, 33, 128] {
+                    let seed = (block_size * 10000 + h * 1000 + kvh * 100 + d + kv_len) as u64;
+                    let err =
+                        quantized_vs_f32_decode_err(bias, block_size, h, kvh, d, kv_len, 0.2, seed);
+                    assert!(
+                        err < 1e-2,
+                        "bias={bias:?} bs={block_size} h={h} kvh={kvh} d={d} kv={kv_len}: {err}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn quantized_decode_error_scales_with_data_magnitude() {
+    // Scale-invariance sanity: at unit-scale data the absolute error
+    // grows proportionally (the grid step is range-proportional) but
+    // stays bounded.
+    for &(block_size, h, kvh, d, kv_len) in
+        &[(4usize, 4usize, 2usize, 8usize, 33usize), (16, 8, 8, 8, 128), (16, 8, 2, 64, 64)]
+    {
+        let err = quantized_vs_f32_decode_err(
+            Bias::Alibi,
+            block_size,
+            h,
+            kvh,
+            d,
+            kv_len,
+            1.0,
+            (h * kvh * kv_len) as u64,
+        );
+        assert!(err < 6e-2, "bs={block_size} h={h} kvh={kvh} d={d} kv={kv_len}: {err}");
+    }
+}
+
+#[test]
+fn quantized_pool_bytes_at_most_03x_of_f32_across_shapes() {
+    use opt_gptq::kvcache::KvStore;
+    for &(layers, blocks, bs, kvh, d) in &[
+        (1usize, 8usize, 16usize, 1usize, 64usize),
+        (2, 16, 16, 2, 64),
+        (4, 32, 32, 4, 128),
+        (2, 8, 8, 2, 16), // the `tiny` preset's decode shape
+    ] {
+        let f = PagedKvCache::new(layers, blocks, bs, kvh, d);
+        let q = QuantizedPagedKvCache::new(layers, blocks, bs, kvh, d);
+        let (fb, qb) = (KvStore::pool_bytes(&f), KvStore::pool_bytes(&q));
+        assert!(
+            10 * qb <= 3 * fb,
+            "layers={layers} blocks={blocks} bs={bs} kvh={kvh} d={d}: {qb} vs {fb}"
+        );
     }
 }
 

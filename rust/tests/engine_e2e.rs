@@ -32,6 +32,7 @@ fn engine_with_byte_budget(cfg: &ModelConfig, kv_bytes: usize, max_batch: usize)
             decode_buckets: BucketPolicy::exact(max_batch),
             prefill_chunk: usize::MAX,
             prefix_cache_blocks: 0,
+            kv_dtype: opt_gptq::coordinator::KvCacheDtype::F32,
         },
     )
 }
@@ -127,7 +128,8 @@ fn http_server_serves_concurrent_clients() {
                 sched: SchedulerConfig::default(),
                 decode_buckets: BucketPolicy::exact(8),
                 prefill_chunk: usize::MAX,
-            prefix_cache_blocks: 0,
+                prefix_cache_blocks: 0,
+                kv_dtype: opt_gptq::coordinator::KvCacheDtype::F32,
             },
             workers: 1,
         },

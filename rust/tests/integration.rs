@@ -28,6 +28,7 @@ fn native_engine(seed: u64, num_blocks: usize, max_batch: usize) -> Engine {
             decode_buckets: BucketPolicy::exact(max_batch),
             prefill_chunk: usize::MAX,
             prefix_cache_blocks: 0,
+            kv_dtype: opt_gptq::coordinator::KvCacheDtype::F32,
         },
     )
 }
@@ -83,6 +84,7 @@ fn gptq_quantized_model_serves_requests() {
             decode_buckets: BucketPolicy::exact(8),
             prefill_chunk: usize::MAX,
             prefix_cache_blocks: 0,
+            kv_dtype: opt_gptq::coordinator::KvCacheDtype::F32,
         },
     );
     for i in 0..4 {
@@ -168,7 +170,8 @@ fn long_prompt_chunked_prefill_equals_single_shot() {
                 sched: SchedulerConfig::default(),
                 decode_buckets: BucketPolicy::exact(8),
                 prefill_chunk: chunk,
-            prefix_cache_blocks: 0,
+                prefix_cache_blocks: 0,
+                kv_dtype: opt_gptq::coordinator::KvCacheDtype::F32,
             },
         );
         let params = SamplingParams { max_tokens: 8, ..Default::default() };

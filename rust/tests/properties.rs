@@ -132,7 +132,8 @@ fn prop_engine_completes_any_workload() {
                 },
                 decode_buckets: BucketPolicy::exact(8),
                 prefill_chunk: usize::MAX,
-            prefix_cache_blocks: 0,
+                prefix_cache_blocks: 0,
+                kv_dtype: opt_gptq::coordinator::KvCacheDtype::F32,
             },
         );
         let n_req = g.usize_in(1, 6);

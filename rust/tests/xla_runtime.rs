@@ -4,10 +4,14 @@
 //! Requires `make artifacts` (tests skip gracefully when absent so plain
 //! `cargo test` works before the Python step).
 
-use opt_gptq::coordinator::{BucketPolicy, Engine, EngineConfig, SchedulerConfig};
+use opt_gptq::coordinator::{BucketPolicy, Engine, EngineConfig, KvCacheDtype, SchedulerConfig};
 use opt_gptq::kvcache::{BlockAllocator, BlockTable, PagedKvCache};
 use opt_gptq::model::{ModelWeights, NativeModel, SamplingParams};
 use opt_gptq::quant::{pack_rows, rtn_quantize};
+// PJRT binding: the offline build links the in-tree stub (these tests
+// skip without artifacts, so the stub is never exercised in CI); swap
+// the alias for a real binding crate to run artifacts.
+use opt_gptq::runtime::pjrt_stub as xla;
 use opt_gptq::runtime::{ArtifactManifest, Backend, DecodeItem, NativeBackend, XlaBackend};
 use std::path::Path;
 
@@ -163,7 +167,8 @@ fn engine_end_to_end_on_xla_backend() {
             m.entries.iter().filter(|e| e.kind == "decode").map(|e| e.batch).collect(),
         ),
         prefill_chunk: m.max_prefill_seq(),
-            prefix_cache_blocks: 0,
+        prefix_cache_blocks: 0,
+        kv_dtype: KvCacheDtype::F32,
     };
     let mut engine = Engine::new(Box::new(xla), econf);
     let params = SamplingParams { max_tokens: 4, ..Default::default() };
@@ -187,7 +192,8 @@ fn engine_end_to_end_on_xla_backend() {
         sched: SchedulerConfig { max_running: 8, max_decode_batch: 4, watermark_blocks: 2 },
         decode_buckets: BucketPolicy::exact(4),
         prefill_chunk: usize::MAX,
-            prefix_cache_blocks: 0,
+        prefix_cache_blocks: 0,
+        kv_dtype: KvCacheDtype::F32,
     };
     let mut engine_n = Engine::new(Box::new(native), econf2);
     for i in 0..3 {

@@ -12,5 +12,7 @@ cd "$(dirname "$0")/../rust"
 
 cargo build --release
 cargo test -q
+# Docs are tier-1: broken intra-doc links / malformed rustdoc fail the PR.
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 cargo bench --bench ablation_grouping -- --smoke
 cargo bench --bench attention_core -- --smoke
