@@ -46,6 +46,7 @@ pub fn engine_with_byte_budget(
                 max_running: 64,
                 max_decode_batch: max_batch,
                 watermark_blocks: 2,
+                ..Default::default()
             },
             decode_buckets: BucketPolicy::exact(max_batch),
             prefill_chunk: usize::MAX,

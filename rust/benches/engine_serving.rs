@@ -1,0 +1,141 @@
+//! Serving-spine benchmark: an **open-loop mixed workload** through the
+//! engine — Poisson arrivals, heavy-tailed prompt lengths, short
+//! interactive generations — the head-of-line shape that token-budget
+//! mixed steps (interleaved chunked prefill) exist to handle.
+//!
+//! Reports the latency-side serving metrics the figure benches don't:
+//! TTFT p50/p95, inter-token latency mean/p95 (wall-clock between
+//! consecutive tokens of a sequence, preemption stalls included), decode
+//! stall steps, and the usual throughput numbers. Emits
+//! `BENCH_engine.json` at the repo root; `scripts/verify.sh` runs the
+//! `--smoke` configuration on every PR, so the serving-latency
+//! trajectory is machine-trackable alongside `BENCH_attention.json`.
+//!
+//! Flags: `--smoke` (fast CI shape), `--model`, `--requests`, `--rate`
+//! (arrivals/s), `--step-budget`, `--max-batch`, `--kv-tokens`,
+//! `--no-chunked-prefill` (legacy exclusive planner, for A/B runs).
+
+mod common;
+
+use opt_gptq::coordinator::{BucketPolicy, Engine, EngineConfig, KvCacheDtype, SchedulerConfig};
+use opt_gptq::model::{ModelConfig, ModelWeights, NativeModel, SamplingParams};
+use opt_gptq::runtime::NativeBackend;
+use opt_gptq::tokenizer::ByteTokenizer;
+use opt_gptq::util::benchkit::{f, Table};
+use opt_gptq::util::cli::Args;
+use opt_gptq::workload::{generate, synth_prompt, LenDist, WorkloadConfig};
+
+fn main() {
+    opt_gptq::util::logging::init();
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let smoke = args.flag("smoke");
+    let preset = args.get_str("model", if smoke { "tiny" } else { "small" });
+    let cfg = ModelConfig::preset(preset).expect("preset");
+    let n_req = args.get_usize("requests", if smoke { 24 } else { 64 });
+    let rate = args.get_f64("rate", if smoke { 400.0 } else { 30.0 });
+    let step_budget = args.get_usize("step-budget", 64);
+    let max_batch = args.get_usize("max-batch", 8);
+    let kv_tokens = args.get_usize("kv-tokens", 4096);
+    let block_size = 16;
+    let chunked = !args.flag("no-chunked-prefill");
+
+    let backend = NativeBackend::new(NativeModel::new(ModelWeights::init(&cfg, 3)));
+    let mut engine = Engine::new(
+        Box::new(backend),
+        EngineConfig {
+            num_blocks: kv_tokens / block_size,
+            block_size,
+            sched: SchedulerConfig {
+                max_running: 64,
+                max_decode_batch: max_batch,
+                watermark_blocks: 2,
+                step_token_budget: step_budget,
+                chunked_prefill: chunked,
+            },
+            decode_buckets: BucketPolicy::exact(max_batch),
+            prefill_chunk: usize::MAX,
+            prefix_cache_blocks: 0,
+            kv_dtype: KvCacheDtype::F32,
+        },
+    );
+    println!(
+        "model={preset}  requests={n_req}  rate={rate}/s  step budget={step_budget}  \
+         chunked prefill={chunked}  KV pool={} tokens",
+        engine.capacity_tokens()
+    );
+
+    // Open-loop trace: a log-normal prompt mix (mostly short, with
+    // long-context stragglers) so decoders and chunked prefills overlap.
+    // The tail is capped under the preset's max_seq (BOS + generation
+    // included).
+    let hi = (cfg.max_seq - 32).min(384);
+    let wl = WorkloadConfig {
+        num_requests: n_req,
+        arrival_rate: rate,
+        prompt_len: LenDist::LogNormal { mu: 3.6, sigma: 0.8, lo: 8, hi },
+        gen_len: LenDist::Uniform(8, 24),
+        seed: 7,
+    };
+    let tok = ByteTokenizer::new();
+    let trace: Vec<(f64, Vec<u32>, usize)> = generate(&wl)
+        .iter()
+        .enumerate()
+        .map(|(i, r)| (r.arrival_s, tok.encode(&synth_prompt(r.prompt_len, i as u64)), r.gen_len))
+        .collect();
+
+    // Drive the engine against the arrival clock (requests are injected
+    // when the engine clock reaches their arrival time).
+    let mut next = 0usize;
+    while next < trace.len() || engine.has_work() {
+        while next < trace.len() && trace[next].0 <= engine.now() {
+            let params = SamplingParams { max_tokens: trace[next].2, ..Default::default() };
+            engine
+                .add_request(trace[next].1.clone(), params)
+                .expect("bench request must fit the pool");
+            next += 1;
+        }
+        if !engine.step() && next < trace.len() {
+            // Idle gap before the next arrival.
+            std::thread::sleep(std::time::Duration::from_micros(100));
+        }
+    }
+    let report = engine.metrics.report();
+    assert_eq!(report.num_requests, n_req, "every request must complete");
+
+    let mut t = Table::new(
+        "Engine serving: open-loop mixed workload (TTFT / inter-token under interleaving)",
+        &["metric", "value"],
+    );
+    t.row(&["ttft p50 (ms)".into(), f(report.ttft_p50_s * 1e3, 2)]);
+    t.row(&["ttft p95 (ms)".into(), f(report.ttft_p95_s * 1e3, 2)]);
+    t.row(&["inter-token mean (ms)".into(), f(report.mean_inter_token_s * 1e3, 3)]);
+    t.row(&["inter-token p95 (ms)".into(), f(report.p95_inter_token_s * 1e3, 3)]);
+    t.row(&["gen tok/s".into(), f(report.gen_tok_per_s, 1)]);
+    t.row(&["all tok/s".into(), f(report.all_tok_per_s, 1)]);
+    t.row(&["mean decode batch".into(), f(report.mean_decode_batch, 2)]);
+    t.row(&["decode stall steps".into(), report.decode_stall_steps.to_string()]);
+    t.row(&["preemptions".into(), report.preemptions.to_string()]);
+    t.row(&["mixed steps".into(), engine.metrics.mixed_steps.to_string()]);
+    t.print();
+
+    common::write_bench_json(
+        "engine",
+        &[
+            ("smoke", if smoke { 1.0 } else { 0.0 }),
+            ("chunked_prefill", if chunked { 1.0 } else { 0.0 }),
+            ("requests", n_req as f64),
+            ("step_token_budget", step_budget as f64),
+            ("ttft_p50_s", report.ttft_p50_s),
+            ("ttft_p95_s", report.ttft_p95_s),
+            ("mean_ttft_s", report.mean_ttft_s),
+            ("mean_inter_token_s", report.mean_inter_token_s),
+            ("p95_inter_token_s", report.p95_inter_token_s),
+            ("gen_tok_per_s", report.gen_tok_per_s),
+            ("all_tok_per_s", report.all_tok_per_s),
+            ("mean_decode_batch", report.mean_decode_batch),
+            ("decode_stall_steps", report.decode_stall_steps as f64),
+            ("preemptions", report.preemptions as f64),
+            ("mixed_steps", engine.metrics.mixed_steps as f64),
+        ],
+    );
+}

@@ -57,6 +57,7 @@ fn main() -> anyhow::Result<()> {
                 max_running: 32,
                 max_decode_batch: max_batch,
                 watermark_blocks: 2,
+                ..Default::default()
             },
             decode_buckets: BucketPolicy::exact(max_batch),
             prefill_chunk: usize::MAX,
@@ -102,6 +103,12 @@ fn main() -> anyhow::Result<()> {
     println!("mean request latency : {:.3}s", report.mean_request_latency_s);
     println!("p95 request latency  : {:.3}s", report.p95_request_latency_s);
     println!("mean TTFT            : {:.3}s", report.mean_ttft_s);
+    println!("TTFT p50 / p95       : {:.3}s / {:.3}s", report.ttft_p50_s, report.ttft_p95_s);
+    println!(
+        "inter-token mean/p95 : {:.4}s / {:.4}s",
+        report.mean_inter_token_s, report.p95_inter_token_s
+    );
+    println!("decode stall steps   : {}", report.decode_stall_steps);
     println!("mean decode batch    : {:.2} seqs", report.mean_decode_batch);
     println!("padding waste        : {:.1}%", report.padding_waste * 100.0);
     println!("preemptions          : {}", report.preemptions);

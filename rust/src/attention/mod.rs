@@ -29,7 +29,10 @@ pub mod kernel;
 pub mod paged;
 
 pub use alibi::alibi_slopes;
-pub use gqa::{gqa_attention, gqa_attention_into, AttnConfig, Bias};
+pub use gqa::{
+    auto_prefill_threads, gqa_attention, gqa_attention_into, gqa_attention_rows_parallel,
+    AttnConfig, Bias,
+};
 pub use grouping::{group_heads_by_similarity, merge_kv_heads};
 pub use kernel::{with_workspace, Workspace};
 pub use paged::{

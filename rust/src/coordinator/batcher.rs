@@ -39,6 +39,13 @@ impl BucketPolicy {
         self.buckets.iter().copied().find(|&b| b >= n)
     }
 
+    /// Bucket size a batch of `n` actually executes at: the smallest
+    /// bucket ≥ `n`, saturating at the largest bucket for oversized
+    /// batches (the engine's padding-waste accounting).
+    pub fn pad(&self, n: usize) -> usize {
+        self.pick(n).unwrap_or_else(|| self.max_batch())
+    }
+
     /// Split `n` items into bucket-sized chunks, largest-first, to cover
     /// oversized batches with minimal total padding.
     pub fn split(&self, mut n: usize) -> Vec<usize> {
@@ -81,7 +88,16 @@ mod tests {
         let p = BucketPolicy::exact(16);
         for n in 1..=16 {
             assert_eq!(p.pick(n), Some(n));
+            assert_eq!(p.pad(n), n);
         }
+    }
+
+    #[test]
+    fn pad_saturates_at_max_bucket() {
+        let p = BucketPolicy::new(vec![1, 4, 8]);
+        assert_eq!(p.pad(3), 4);
+        assert_eq!(p.pad(8), 8);
+        assert_eq!(p.pad(20), 8);
     }
 
     #[test]

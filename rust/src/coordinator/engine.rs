@@ -2,13 +2,14 @@
 
 use super::batcher::BucketPolicy;
 use super::metrics::{EngineMetrics, RequestRecord, RunReport};
-use super::scheduler::{Scheduler, SchedulerConfig, StepPlan};
+use super::scheduler::{PrefillChunk, Scheduler, SchedulerConfig, StepPlan};
 use super::sequence::{SeqPhase, Sequence};
 use crate::kvcache::{
-    BlockAllocator, CacheStats, KvCacheDtype, KvStore, PagedKvCache, QuantizedPagedKvCache,
+    BlockAllocator, BlockTable, CacheStats, KvCacheDtype, KvStore, PagedKvCache,
+    QuantizedPagedKvCache,
 };
 use crate::model::SamplingParams;
-use crate::runtime::{Backend, DecodeItem};
+use crate::runtime::{Backend, DecodeItem, MixedBatch, PrefillChunkItem};
 use anyhow::{bail, Result};
 use std::time::Instant;
 
@@ -78,7 +79,12 @@ pub struct Engine {
 }
 
 impl Engine {
-    pub fn new(backend: Box<dyn Backend>, cfg: EngineConfig) -> Engine {
+    pub fn new(backend: Box<dyn Backend>, mut cfg: EngineConfig) -> Engine {
+        // Mixed-step (interleaved chunked prefill) planning needs a
+        // backend whose prefill can resume at a nonzero cache position;
+        // otherwise fall back to exclusive whole-prompt planning (the
+        // XLA artifacts — see `Backend::supports_mixed_step`).
+        cfg.sched.chunked_prefill &= backend.supports_mixed_step();
         let mc = backend.config();
         assert!(
             cfg.kv_dtype == KvCacheDtype::F32 || backend.supports_quantized_kv(),
@@ -175,6 +181,14 @@ impl Engine {
         self.scheduler.num_running()
     }
 
+    /// Snapshot of a live sequence's progress:
+    /// `(phase, generated_tokens, prefill_pos)`. `None` once collected.
+    /// Lets tests and benches assert per-step liveness (e.g. "decoders
+    /// advance every step while a long prompt prefills").
+    pub fn seq_progress(&self, id: u64) -> Option<(SeqPhase, usize, usize)> {
+        self.scheduler.get(id).map(|s| (s.phase, s.generated.len(), s.prefill_pos))
+    }
+
     /// Point-in-time cache statistics, including the pool's true byte
     /// footprint (packed bytes for a Q8 cache).
     pub fn cache_stats(&self) -> CacheStats {
@@ -187,9 +201,10 @@ impl Engine {
         self.prefix_cache.as_ref().map(|c| (c.hits, c.misses, c.len()))
     }
 
-    /// Execute one scheduler step. Returns `false` when idle.
+    /// Execute one scheduler step (one mixed prefill+decode batch).
+    /// Returns `false` when idle.
     pub fn step(&mut self) -> bool {
-        let mut plan = self.scheduler.plan(&mut self.alloc);
+        let mut plan = self.scheduler.plan(&mut self.alloc, self.prefix_cache.as_mut());
         // Memory-pressure release valve: if the pool is too pinned by the
         // prefix cache to admit anything while work is queued, flush it.
         if plan == StepPlan::Idle && self.has_work() {
@@ -197,22 +212,20 @@ impl Engine {
                 if !pc.is_empty() {
                     log::debug!("flushing prefix cache under memory pressure");
                     pc.clear(&mut self.alloc);
-                    plan = self.scheduler.plan(&mut self.alloc);
+                    plan = self.scheduler.plan(&mut self.alloc, None);
                 }
             }
         }
-        self.metrics.preemptions = self.scheduler.preemptions;
         let worked = match plan {
-            StepPlan::Prefill { seq_id } => {
-                self.run_prefill(seq_id);
-                true
-            }
-            StepPlan::Decode { seq_ids } => {
-                self.run_decode(&seq_ids);
+            StepPlan::Mixed { prefill, decode } => {
+                self.run_mixed(&prefill, &decode);
                 true
             }
             StepPlan::Idle => false,
         };
+        self.metrics.preemptions = self.scheduler.preemptions;
+        self.metrics.prefix_hit_tokens = self.scheduler.prefix_hit_tokens;
+        self.metrics.decode_stall_steps = self.scheduler.decode_stall_steps;
         self.metrics.peak_blocks = self.metrics.peak_blocks.max(self.alloc.num_used());
         worked
     }
@@ -228,77 +241,102 @@ impl Engine {
         std::mem::take(&mut self.outputs)
     }
 
-    fn run_prefill(&mut self, seq_id: u64) {
-        let tokens = self.scheduler.get(seq_id).unwrap().replay_tokens();
-        // Detach the table to run chunked prefill without aliasing the
-        // scheduler borrow.
-        let mut table = std::mem::take(&mut self.scheduler.get_mut(seq_id).unwrap().table);
-        // Prefix reuse (§III.C): adopt cached leading blocks, skipping
-        // their recomputation entirely.
-        if let Some(pc) = &mut self.prefix_cache {
-            let shared = pc.lookup_shared(&tokens, &mut self.alloc);
-            if !shared.is_empty() {
-                table.substitute_prefix(&shared, self.cfg.block_size, &mut self.alloc);
-                self.metrics.prefix_hit_tokens += shared.len() * self.cfg.block_size;
-            }
-        }
-        let start = table.len();
-        let mut logits = Vec::new();
-        for chunk in tokens[start..].chunks(self.cfg.prefill_chunk.max(1)) {
-            logits = self.backend.prefill(chunk, &mut self.cache, &mut table);
-        }
-        self.metrics.prefill_steps += 1;
-        let now = self.now();
-        let seq = self.scheduler.get_mut(seq_id).unwrap();
-        seq.table = table;
-        seq.phase = SeqPhase::Decoding;
-        let tok = seq.sampler.sample(&logits, &seq.params.clone());
-        seq.generated.push(tok);
-        seq.t_first_token.get_or_insert(now);
-        if seq.is_done() {
-            self.finish_seq(seq_id);
-        }
-    }
-
-    fn run_decode(&mut self, seq_ids: &[u64]) {
-        // The whole step goes to the backend as ONE batch: the native
-        // backend streams every weight matrix once per step and fans the
-        // per-sequence paged attention across cores with per-worker
-        // workspaces (see `NativeBackend::decode`). Fan-out outputs are
-        // bit-identical to serial execution, so scheduling, sampling and
-        // the determinism tests are unaffected by the thread count.
-        // Detach tables so multiple mutable borrows can coexist.
-        let mut tokens = Vec::with_capacity(seq_ids.len());
-        let mut tables = Vec::with_capacity(seq_ids.len());
-        for &id in seq_ids {
-            let seq = self.scheduler.get_mut(id).unwrap();
-            tokens.push(seq.last_token());
-            tables.push(std::mem::take(&mut seq.table));
-        }
-        let mut items: Vec<DecodeItem<'_>> = tokens
+    /// Execute one mixed step: every planned prefill chunk and decode
+    /// token goes to the backend as ONE [`MixedBatch`]. The native
+    /// backend streams every weight matrix once per step across both
+    /// kinds of rows and fans the per-sequence attention across scoped
+    /// workers (`NativeBackend::forward_step`); fan-out outputs are
+    /// bit-identical to serial execution, so scheduling, sampling and
+    /// the determinism tests are unaffected by the thread count.
+    fn run_mixed(&mut self, prefill: &[PrefillChunk], decode: &[u64]) {
+        // (Head-of-line stalls — decoders that existed at plan time but
+        // did not advance — are counted by the scheduler, which sees the
+        // pre-preemption decoding set; `step` mirrors the counter.)
+        // Materialize chunk tokens and detach tables so the batch can
+        // hold `&mut` to several tables at once.
+        let chunk_tokens: Vec<Vec<u32>> = prefill
             .iter()
-            .zip(tables.iter_mut())
-            .map(|(&token, table)| DecodeItem { token, table })
+            .map(|c| self.scheduler.get(c.seq_id).unwrap().replay_range(c.start, c.len))
             .collect();
-        let bucket = self
-            .cfg
-            .decode_buckets
-            .pick(items.len())
-            .unwrap_or_else(|| self.cfg.decode_buckets.max_batch());
-        let logits = self.backend.decode(&mut items, &mut self.cache);
-        drop(items);
-        self.metrics.decode_steps += 1;
-        self.metrics.decode_batch_tokens += seq_ids.len();
-        self.metrics.decode_bucket_tokens += bucket;
+        let mut chunk_tables: Vec<BlockTable> = prefill
+            .iter()
+            .map(|c| std::mem::take(&mut self.scheduler.get_mut(c.seq_id).unwrap().table))
+            .collect();
+        let mut decode_tokens = Vec::with_capacity(decode.len());
+        let mut decode_tables = Vec::with_capacity(decode.len());
+        for &id in decode {
+            let seq = self.scheduler.get_mut(id).unwrap();
+            decode_tokens.push(seq.last_token());
+            decode_tables.push(std::mem::take(&mut seq.table));
+        }
+        let mut batch = MixedBatch {
+            prefill: chunk_tokens
+                .iter()
+                .zip(chunk_tables.iter_mut())
+                .zip(prefill)
+                .map(|((tokens, table), c)| PrefillChunkItem {
+                    tokens: tokens.as_slice(),
+                    table,
+                    want_logits: c.last,
+                })
+                .collect(),
+            decode: decode_tokens
+                .iter()
+                .zip(decode_tables.iter_mut())
+                .map(|(&token, table)| DecodeItem { token, table })
+                .collect(),
+            prefill_call_cap: self.cfg.prefill_chunk,
+        };
+        let outs = self.backend.forward_step(&mut batch, &mut self.cache);
+        drop(batch);
+
+        self.metrics.mixed_steps += 1;
+        self.metrics.prefill_steps += prefill.len(); // chunks executed
+        self.metrics.prefill_chunk_tokens += prefill.iter().map(|c| c.len).sum::<usize>();
+        if !decode.is_empty() {
+            self.metrics.decode_steps += 1;
+            self.metrics.decode_batch_tokens += decode.len();
+            self.metrics.decode_bucket_tokens += self.cfg.decode_buckets.pad(decode.len());
+        }
 
         let now = self.now();
         let mut done = Vec::new();
-        for ((&id, table), logit) in seq_ids.iter().zip(tables).zip(logits) {
+        // Prefill side: advance cursors; sample on completed prefills.
+        for ((c, table), logits) in prefill.iter().zip(chunk_tables).zip(outs.prefill_logits) {
+            let seq = self.scheduler.get_mut(c.seq_id).unwrap();
+            seq.table = table;
+            debug_assert_eq!(seq.prefill_pos, c.start, "chunk resumed off-cursor");
+            seq.prefill_pos += c.len;
+            debug_assert_eq!(seq.prefill_pos, seq.table.len());
+            if c.last {
+                debug_assert_eq!(seq.prefill_pos, seq.replay_len());
+                let logits = logits.expect("final chunk must return logits");
+                let tok = seq.sampler.sample(&logits, &seq.params);
+                seq.phase = SeqPhase::Decoding;
+                seq.generated.push(tok);
+                seq.t_first_token.get_or_insert(now);
+                if let Some(prev) = seq.t_last_token {
+                    // A replayed (preempted) sequence emitting again:
+                    // the stall is a real inter-token gap.
+                    self.metrics.record_gap(now - prev);
+                }
+                seq.t_last_token = Some(now);
+                if seq.is_done() {
+                    done.push(c.seq_id);
+                }
+            }
+        }
+        // Decode side.
+        for ((&id, table), logit) in decode.iter().zip(decode_tables).zip(outs.decode_logits) {
             let seq = self.scheduler.get_mut(id).unwrap();
             seq.table = table;
-            let tok = seq.sampler.sample(&logit, &seq.params.clone());
+            let tok = seq.sampler.sample(&logit, &seq.params);
             seq.generated.push(tok);
             seq.t_first_token.get_or_insert(now);
+            if let Some(prev) = seq.t_last_token {
+                self.metrics.record_gap(now - prev);
+            }
+            seq.t_last_token = Some(now);
             if seq.is_done() {
                 done.push(id);
             }
@@ -356,7 +394,12 @@ mod tests {
         let econf = EngineConfig {
             num_blocks,
             block_size: 8,
-            sched: SchedulerConfig { max_running: 8, max_decode_batch: 4, watermark_blocks: 1 },
+            sched: SchedulerConfig {
+                max_running: 8,
+                max_decode_batch: 4,
+                watermark_blocks: 1,
+                ..Default::default()
+            },
             decode_buckets: BucketPolicy::exact(4),
             prefill_chunk: usize::MAX,
             prefix_cache_blocks: 0,
@@ -467,7 +510,12 @@ mod tests {
         let econf = EngineConfig {
             num_blocks,
             block_size: 8,
-            sched: SchedulerConfig { max_running: 8, max_decode_batch: 4, watermark_blocks: 1 },
+            sched: SchedulerConfig {
+                max_running: 8,
+                max_decode_batch: 4,
+                watermark_blocks: 1,
+                ..Default::default()
+            },
             decode_buckets: BucketPolicy::exact(4),
             prefill_chunk: usize::MAX,
             prefix_cache_blocks: cache_blocks,
@@ -533,7 +581,144 @@ mod tests {
         assert!(r.all_tok_per_s > 0.0);
         assert!(r.gen_tok_per_s > 0.0);
         assert!(r.gen_tok_per_s < r.all_tok_per_s);
-        assert!(e.metrics.prefill_steps >= 2);
+        assert!(e.metrics.prefill_steps >= 2, "one chunk per prompt at least");
         assert!(e.metrics.decode_steps >= 2);
+        assert!(e.metrics.mixed_steps >= 2);
+        assert_eq!(e.metrics.prefill_chunk_tokens, 4 + 2);
+        assert!(r.ttft_p95_s >= r.ttft_p50_s);
+        // 2 requests × 3 tokens → 4 recorded inter-token gaps.
+        assert_eq!(e.metrics.inter_token_gaps.len(), 4);
+        assert!(r.mean_inter_token_s >= 0.0);
+    }
+
+    /// The bit-exactness anchor for the whole refactor: interleaved
+    /// token-budget mixed steps must produce the same tokens as the
+    /// step-serial exclusive planner (whole prefill XOR decode per
+    /// step), for every request, at any budget.
+    #[test]
+    fn mixed_interleaving_matches_exclusive_reference() {
+        let run = |chunked: bool, budget: usize| {
+            let cfg = ModelConfig::tiny();
+            let backend = NativeBackend::new(NativeModel::new(ModelWeights::init(&cfg, 1)));
+            let econf = EngineConfig {
+                num_blocks: 48,
+                block_size: 8,
+                sched: SchedulerConfig {
+                    max_running: 8,
+                    max_decode_batch: 4,
+                    watermark_blocks: 1,
+                    step_token_budget: budget,
+                    chunked_prefill: chunked,
+                },
+                decode_buckets: BucketPolicy::exact(4),
+                prefill_chunk: usize::MAX,
+                prefix_cache_blocks: 0,
+                kv_dtype: KvCacheDtype::F32,
+            };
+            let mut e = Engine::new(Box::new(backend), econf);
+            // A long prompt among short ones so chunking really happens.
+            e.add_request(vec![256; 40], params(6)).unwrap();
+            for i in 0..3 {
+                e.add_request(vec![256, 30 + i, 31], params(6)).unwrap();
+            }
+            e.run_to_completion();
+            let mut outs = e.take_outputs();
+            outs.sort_by_key(|o| o.id);
+            outs.iter().map(|o| o.tokens.clone()).collect::<Vec<_>>()
+        };
+        let reference = run(false, 256);
+        // Budgets small enough to force multi-step prefill + interleave.
+        assert_eq!(run(true, 8), reference, "budget 8 diverged");
+        assert_eq!(run(true, 16), reference, "budget 16 diverged");
+        assert_eq!(run(true, 256), reference, "budget 256 diverged");
+    }
+
+    /// The head-of-line claim: a long prompt injected mid-decode must
+    /// not stall decoding sequences — they advance every engine step
+    /// while the prompt prefills chunk by chunk.
+    #[test]
+    fn long_prefill_never_stalls_decode() {
+        let cfg = ModelConfig::tiny();
+        let backend = NativeBackend::new(NativeModel::new(ModelWeights::init(&cfg, 2)));
+        let econf = EngineConfig {
+            num_blocks: 64,
+            block_size: 8,
+            sched: SchedulerConfig {
+                max_running: 8,
+                max_decode_batch: 4,
+                watermark_blocks: 1,
+                step_token_budget: 12,
+                chunked_prefill: true,
+            },
+            decode_buckets: BucketPolicy::exact(4),
+            prefill_chunk: usize::MAX,
+            prefix_cache_blocks: 0,
+            kv_dtype: KvCacheDtype::F32,
+        };
+        let mut e = Engine::new(Box::new(backend), econf);
+        let d1 = e.add_request(vec![256, 1, 2], params(40)).unwrap();
+        let d2 = e.add_request(vec![256, 3], params(40)).unwrap();
+        // Get both decoding.
+        while e.seq_progress(d1).unwrap().0 != SeqPhase::Decoding
+            || e.seq_progress(d2).unwrap().0 != SeqPhase::Decoding
+        {
+            assert!(e.step());
+        }
+        // Inject a 50-token prompt: needs ⌈50/11⌉ = 5+ chunked steps at
+        // budget 12 with 2 decode tokens reserved per step.
+        let long = e.add_request(vec![256; 50], params(4)).unwrap();
+        let mut prefill_steps_seen = 0;
+        while e.seq_progress(long).unwrap().0 != SeqPhase::Decoding {
+            let g1 = e.seq_progress(d1).unwrap().1;
+            let g2 = e.seq_progress(d2).unwrap().1;
+            let pf = e.seq_progress(long).unwrap().2;
+            assert!(e.step());
+            assert_eq!(e.seq_progress(d1).unwrap().1, g1 + 1, "d1 stalled behind prefill");
+            assert_eq!(e.seq_progress(d2).unwrap().1, g2 + 1, "d2 stalled behind prefill");
+            assert!(e.seq_progress(long).unwrap().2 > pf, "prefill made no progress");
+            prefill_steps_seen += 1;
+        }
+        assert!(prefill_steps_seen >= 5, "budget must split the prompt ({prefill_steps_seen})");
+        assert_eq!(e.metrics.decode_stall_steps, 0);
+        let r = e.run_to_completion();
+        assert_eq!(r.num_requests, 3);
+        assert_eq!(r.decode_stall_steps, 0);
+    }
+
+    /// Preemption + re-admission under the mixed planner: the tight run
+    /// must actually preempt, replay deterministically (identical
+    /// outputs across reruns — recompute replays don't depend on
+    /// wall-clock), complete every request at full length, and leak
+    /// nothing. (Replays go through the prefill tile schedule, so
+    /// token-exactness vs a pressure-free run is NOT a contract — only
+    /// determinism is.)
+    #[test]
+    fn preemption_under_mixed_planner_is_deterministic_and_complete() {
+        let run = |num_blocks: usize| {
+            let mut e = engine(num_blocks);
+            for i in 0..4 {
+                e.add_request(vec![256; 6 + i], params(8)).unwrap();
+            }
+            e.run_to_completion();
+            let mut outs = e.take_outputs();
+            outs.sort_by_key(|o| o.id);
+            (
+                outs.iter().map(|o| o.tokens.clone()).collect::<Vec<_>>(),
+                e.metrics.preemptions,
+                e.alloc.num_used(),
+            )
+        };
+        let (roomy_tokens, roomy_preempt, _) = run(64);
+        assert_eq!(roomy_preempt, 0, "roomy pool must not preempt");
+        let (tight_tokens, tight_preempt, used) = run(8);
+        assert!(tight_preempt > 0, "tight pool must exercise preemption");
+        assert_eq!(used, 0, "all blocks released");
+        for toks in &tight_tokens {
+            assert_eq!(toks.len(), 8, "every request runs to max_tokens");
+        }
+        assert_eq!(tight_tokens.len(), roomy_tokens.len());
+        let (tight_again, preempt_again, _) = run(8);
+        assert_eq!(tight_again, tight_tokens, "preempted schedule must be deterministic");
+        assert_eq!(preempt_again, tight_preempt);
     }
 }

@@ -29,16 +29,46 @@ impl RequestRecord {
 }
 
 /// Live engine counters.
+///
+/// Under mixed-step scheduling one engine step can carry both prefill
+/// chunks and decode tokens, so the step counters are disentangled:
+/// `mixed_steps` counts engine iterations that did any work,
+/// `prefill_steps` counts prefill *chunks* executed (a prompt spanning
+/// three steps contributes three), and `decode_steps` counts steps in
+/// which at least one decode token advanced. TTFT stays per-request
+/// honest (first sampled token, not first chunk); inter-token gaps are
+/// wall-clock between consecutive emitted tokens of a sequence,
+/// *including* recompute-preemption stalls.
 #[derive(Debug, Default, Clone)]
 pub struct EngineMetrics {
     pub records: Vec<RequestRecord>,
+    /// Engine steps that executed any work (prefill and/or decode).
+    pub mixed_steps: usize,
+    /// Prefill chunks executed (≥ number of prompts under chunking).
     pub prefill_steps: usize,
+    /// Prompt/replay tokens pushed through prefill chunks.
+    pub prefill_chunk_tokens: usize,
+    /// Steps in which at least one decode token advanced.
     pub decode_steps: usize,
     /// Sum over decode steps of sequences in the batch.
     pub decode_batch_tokens: usize,
     /// Sum over decode steps of the *bucket* size used (padding waste =
     /// bucket − batch).
     pub decode_bucket_tokens: usize,
+    /// Steps where decoding sequences existed but none advanced — under
+    /// the mixed planner this only happens in a preemption storm, so it
+    /// should sit at ~0 (the head-of-line metric). Under the exclusive
+    /// planner every whole-prompt prefill with live decoders counts.
+    pub decode_stall_steps: usize,
+    /// Retained inter-token gap samples (percentile reporting), bounded
+    /// to [`ITL_WINDOW`] entries — overwritten ring-style so a
+    /// long-lived server engine never grows without limit. Record via
+    /// [`EngineMetrics::record_gap`]; the mean stays exact over ALL
+    /// gaps through the running sum/count.
+    pub inter_token_gaps: Vec<f64>,
+    itl_cursor: usize,
+    inter_token_sum: f64,
+    inter_token_count: u64,
     pub preemptions: usize,
     /// Peak KV blocks in use.
     pub peak_blocks: usize,
@@ -46,9 +76,25 @@ pub struct EngineMetrics {
     pub prefix_hit_tokens: usize,
 }
 
+/// Max inter-token gap samples retained for percentiles (~512 KiB).
+pub const ITL_WINDOW: usize = 65_536;
+
 impl EngineMetrics {
     pub fn record_finish(&mut self, rec: RequestRecord) {
         self.records.push(rec);
+    }
+
+    /// Record one inter-token gap: exact running mean over every gap,
+    /// bounded ring of samples for the percentile fields.
+    pub fn record_gap(&mut self, gap: f64) {
+        self.inter_token_sum += gap;
+        self.inter_token_count += 1;
+        if self.inter_token_gaps.len() < ITL_WINDOW {
+            self.inter_token_gaps.push(gap);
+        } else {
+            self.inter_token_gaps[self.itl_cursor] = gap;
+            self.itl_cursor = (self.itl_cursor + 1) % ITL_WINDOW;
+        }
     }
 
     /// Mean decode batch occupancy (sequences per step).
@@ -90,8 +136,17 @@ impl EngineMetrics {
             mean_request_latency_s: mean(&latencies),
             p95_request_latency_s: percentile(&latencies, 95.0),
             mean_ttft_s: mean(&ttfts),
+            ttft_p50_s: percentile(&ttfts, 50.0),
+            ttft_p95_s: percentile(&ttfts, 95.0),
+            mean_inter_token_s: if self.inter_token_count > 0 {
+                self.inter_token_sum / self.inter_token_count as f64
+            } else {
+                0.0
+            },
+            p95_inter_token_s: percentile(&self.inter_token_gaps, 95.0),
             mean_decode_batch: self.mean_decode_batch(),
             padding_waste: self.padding_waste(),
+            decode_stall_steps: self.decode_stall_steps,
             preemptions: self.preemptions,
             peak_blocks: self.peak_blocks,
         }
@@ -113,8 +168,17 @@ pub struct RunReport {
     pub mean_request_latency_s: f64,
     pub p95_request_latency_s: f64,
     pub mean_ttft_s: f64,
+    pub ttft_p50_s: f64,
+    pub ttft_p95_s: f64,
+    /// Mean wall-clock gap between consecutive tokens of a sequence
+    /// (includes recompute-preemption stalls — honest ITL).
+    pub mean_inter_token_s: f64,
+    pub p95_inter_token_s: f64,
     pub mean_decode_batch: f64,
     pub padding_waste: f64,
+    /// Steps where decoders existed but none advanced (head-of-line
+    /// indicator; ~0 under the mixed planner).
+    pub decode_stall_steps: usize,
     pub preemptions: usize,
     pub peak_blocks: usize,
 }
@@ -149,6 +213,9 @@ mod tests {
         let mut m = EngineMetrics::default();
         m.record_finish(rec(1, 0.0, 2.0, 10, 20));
         m.record_finish(rec(2, 0.0, 4.0, 30, 40));
+        for g in [0.1, 0.2, 0.3] {
+            m.record_gap(g);
+        }
         let r = m.report();
         assert_eq!(r.num_requests, 2);
         assert!((r.latency_s - 4.0).abs() < 1e-9);
@@ -157,12 +224,32 @@ mod tests {
         assert!((r.gen_tok_per_s - 60.0 / 4.0).abs() < 1e-9);
         assert!((r.mean_request_latency_s - 3.0).abs() < 1e-9);
         assert!((r.mean_ttft_s - 0.1).abs() < 1e-9);
+        assert!((r.ttft_p50_s - 0.1).abs() < 1e-9);
+        assert!((r.ttft_p95_s - 0.1).abs() < 1e-9);
+        assert!((r.mean_inter_token_s - 0.2).abs() < 1e-9);
+        assert!((r.p95_inter_token_s - 0.3).abs() < 1e-9);
     }
 
     #[test]
     fn empty_report_is_zeroes() {
         let m = EngineMetrics::default();
         assert_eq!(m.report(), RunReport::default());
+    }
+
+    #[test]
+    fn itl_window_is_bounded_but_mean_stays_exact() {
+        let mut m = EngineMetrics::default();
+        let n = ITL_WINDOW + 100;
+        for i in 0..n {
+            m.record_gap(i as f64);
+        }
+        assert_eq!(m.inter_token_gaps.len(), ITL_WINDOW, "window must not grow unbounded");
+        // Mean is exact over ALL n gaps, not just the retained window
+        // (report() needs at least one finished record to emit anything).
+        let expect = (0..n).sum::<usize>() as f64 / n as f64;
+        m.record_finish(rec(1, 0.0, 1.0, 1, 1));
+        let r = m.report();
+        assert!((r.mean_inter_token_s - expect).abs() < 1e-6, "{}", r.mean_inter_token_s);
     }
 
     #[test]

@@ -1,14 +1,18 @@
 //! The serving coordinator — the paper's vLLM-integration layer.
 //!
 //! * [`sequence`] — per-request state machine (waiting → prefill →
-//!   decoding → finished, with preemption).
-//! * [`scheduler`] — continuous batching with KV-memory admission
-//!   control and recompute-preemption under pressure (§III.C "load
-//!   balancing and resource scheduling").
+//!   decoding → finished, with preemption and a chunked-prefill
+//!   cursor).
+//! * [`scheduler`] — continuous batching as token-budget **mixed
+//!   steps**: decode every running sequence each step and fill the
+//!   leftover budget with interleaved prefill chunks, with KV-memory
+//!   admission control and recompute-preemption under pressure (§III.C
+//!   "load balancing and resource scheduling").
 //! * [`batcher`] — decode-batch planning against the backend's shape
 //!   buckets.
-//! * [`engine`] — the step loop: scheduler decision → backend execution
-//!   → sampling → cache bookkeeping → metrics.
+//! * [`engine`] — the step loop: scheduler plan → one
+//!   `Backend::forward_step` mixed batch → sampling → cache bookkeeping
+//!   → metrics.
 //! * [`router`] — front door: validation, request ids, fan-out to
 //!   engine workers.
 //! * [`metrics`] — the paper's measurement surface: latency, "all"
@@ -28,5 +32,5 @@ pub use engine::{Engine, EngineConfig, RequestOutput};
 pub use crate::kvcache::KvCacheDtype;
 pub use metrics::{EngineMetrics, RunReport};
 pub use router::{Router, RouterConfig};
-pub use scheduler::{Scheduler, SchedulerConfig, StepPlan};
+pub use scheduler::{PrefillChunk, Scheduler, SchedulerConfig, StepPlan};
 pub use sequence::{SeqPhase, Sequence};

@@ -1,17 +1,38 @@
-//! Continuous-batching scheduler with KV-memory admission control.
+//! Continuous-batching scheduler: token-budget **mixed steps** with
+//! interleaved chunked prefill (vLLM-style, per the paper's §III.C
+//! scheduling description).
 //!
-//! Policy (vLLM-style, per the paper's §III.C scheduling description):
-//! 1. **Prefill priority**: if a waiting sequence fits in the block pool
-//!    (its whole prompt + watermark), admit it and run its prefill this
-//!    step — keeps the decode batch full.
-//! 2. Otherwise **decode** every running sequence (round-robin capped at
-//!    `max_decode_batch`), growing each sequence's block table by one
-//!    slot; on allocation failure, **preempt** the youngest running
-//!    sequence (recompute-style: free its blocks, re-queue it) until the
-//!    step fits.
+//! Every step is one [`StepPlan::Mixed`] sharing a token budget
+//! (`step_token_budget`):
+//! 1. **Decode first**: every `Decoding` sequence joins the step
+//!    (round-robin, capped at `max_decode_batch`), one token each; on
+//!    allocation failure the youngest running sequence is preempted
+//!    (recompute-style: free its blocks, re-queue it) until the step
+//!    fits. Decode is planned *first* so a long prompt can never stall
+//!    the decoders — the head-of-line latency continuous batching
+//!    exists to kill.
+//! 2. **Prefill fills the rest**: the remaining budget goes to prefill
+//!    chunks — first to sequences already mid-prefill (their blocks are
+//!    sunk cost), then to new admissions from the waiting queue (FCFS,
+//!    the head is never skipped). A prompt longer than one step's
+//!    leftover budget spans multiple steps via the sequence's
+//!    `prefill_pos` cursor. When prefill work is queued, decode is
+//!    capped at `budget − 1` so at least one prefill token advances per
+//!    step (bounded TTFT) — and prefill only ever takes the *leftover*
+//!    budget, so decoders advance every step too.
+//!
+//! Block reservation is budget-aware: admission reserves only the first
+//! chunk's blocks (plus the watermark headroom), later chunks reserve as
+//! they are planned, and the preemption valve reclaims memory if the
+//! pool overcommits.
+//!
+//! Backends whose prefill cannot resume at a nonzero position (the XLA
+//! artifacts — see `Backend::supports_mixed_step`) run with
+//! `chunked_prefill = false`: each step is then *either* one whole-prompt
+//! prefill *or* one decode batch, the legacy exclusive policy.
 
 use super::sequence::{SeqPhase, Sequence};
-use crate::kvcache::BlockAllocator;
+use crate::kvcache::{BlockAllocator, BlockTable, PrefixCache};
 use std::collections::{BTreeMap, VecDeque};
 
 /// Scheduler tunables.
@@ -23,22 +44,55 @@ pub struct SchedulerConfig {
     pub max_decode_batch: usize,
     /// Blocks kept free as headroom when admitting prompts.
     pub watermark_blocks: usize,
+    /// Token budget per mixed step: decode tokens (one per decoding
+    /// sequence) plus prefill-chunk tokens. Should comfortably exceed
+    /// `max_decode_batch` so prefill makes progress under full decode
+    /// load. The planner enforces an effective minimum of 2 — one
+    /// decode token AND one prefill token must be able to coexist in a
+    /// step, or one side would starve the other.
+    pub step_token_budget: usize,
+    /// Interleave chunked prefill with decode in one step. Forced off by
+    /// the engine when the backend cannot resume prefill at a nonzero
+    /// position (`Backend::supports_mixed_step`).
+    pub chunked_prefill: bool,
 }
 
 impl Default for SchedulerConfig {
     fn default() -> Self {
-        SchedulerConfig { max_running: 64, max_decode_batch: 8, watermark_blocks: 2 }
+        SchedulerConfig {
+            max_running: 64,
+            max_decode_batch: 8,
+            watermark_blocks: 2,
+            step_token_budget: 256,
+            chunked_prefill: true,
+        }
     }
 }
 
-/// One engine step's work.
+/// One prefill chunk inside a mixed step: `len` replay tokens starting
+/// at position `start` of the sequence's prompt+generated stream.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PrefillChunk {
+    pub seq_id: u64,
+    /// First replay position this chunk covers (== the sequence's
+    /// `prefill_pos` when the plan was made).
+    pub start: usize,
+    /// Tokens in the chunk (blocks already reserved).
+    pub len: usize,
+    /// True when this chunk completes the sequence's prefill — the
+    /// engine samples the first token from its logits.
+    pub last: bool,
+}
+
+/// One engine step's work. Block capacity for everything planned is
+/// already reserved: each prefill chunk has `len` more slots, every
+/// decode sequence one more slot.
 #[derive(Debug, Clone, PartialEq)]
 pub enum StepPlan {
-    /// Run this sequence's prompt (or recompute replay) through prefill.
-    Prefill { seq_id: u64 },
-    /// Decode one token for each of these sequences (slots reserved).
-    Decode { seq_ids: Vec<u64> },
-    /// Nothing runnable (all queues empty).
+    /// One token-budget step: prefill chunks and decode sequences
+    /// executed together (either side may be empty, not both).
+    Mixed { prefill: Vec<PrefillChunk>, decode: Vec<u64> },
+    /// Nothing runnable (all queues empty, or the pool is pinned).
     Idle,
 }
 
@@ -48,9 +102,21 @@ pub struct Scheduler {
     seqs: BTreeMap<u64, Sequence>,
     waiting: VecDeque<u64>,
     running: Vec<u64>,
-    rr_cursor: usize,
+    /// Last sequence id served by the decode round-robin; the next step
+    /// resumes strictly after it (in id order), so no decoding sequence
+    /// is ever skipped twice in a row even as the set churns.
+    rr_last: u64,
     /// Total preemptions (engine copies into metrics).
     pub preemptions: usize,
+    /// Prompt tokens skipped via prefix-cache block adoption at
+    /// admission (engine copies into metrics).
+    pub prefix_hit_tokens: usize,
+    /// Steps where decoding sequences existed at plan time but none was
+    /// planned (every one was preempted, or the cap was zero) — counted
+    /// HERE because by the time the engine runs the plan, preempted
+    /// decoders are no longer in the `Decoding` phase. Engine copies
+    /// into metrics.
+    pub decode_stall_steps: usize,
 }
 
 impl Scheduler {
@@ -60,8 +126,10 @@ impl Scheduler {
             seqs: BTreeMap::new(),
             waiting: VecDeque::new(),
             running: Vec::new(),
-            rr_cursor: 0,
+            rr_last: 0,
             preemptions: 0,
+            prefix_hit_tokens: 0,
+            decode_stall_steps: 0,
         }
     }
 
@@ -93,6 +161,11 @@ impl Scheduler {
         self.running.len()
     }
 
+    /// Running sequences currently in the `Decoding` phase.
+    pub fn num_decoding(&self) -> usize {
+        self.running.iter().filter(|id| self.seqs[id].phase == SeqPhase::Decoding).count()
+    }
+
     /// All unfinished work drained?
     pub fn is_idle(&self) -> bool {
         self.waiting.is_empty() && self.running.is_empty()
@@ -103,97 +176,322 @@ impl Scheduler {
         self.seqs.values().filter(|s| !s.table.is_empty()).map(|s| &s.table)
     }
 
-    /// Decide this step's work. Reserves blocks for whatever it returns:
-    /// a `Prefill` sequence has its full replay reserved; every `Decode`
-    /// sequence has one more slot reserved.
-    pub fn plan(&mut self, alloc: &mut BlockAllocator) -> StepPlan {
-        // 1. Try to admit the head of the waiting queue.
-        if self.running.len() < self.cfg.max_running {
-            if let Some(&cand) = self.waiting.front() {
-                let replay_len = self.seqs[&cand].replay_tokens().len();
-                let need = crate::kvcache::BlockTable::blocks_needed(replay_len, alloc.block_size());
-                // Watermark headroom is waived when nothing is running —
-                // otherwise a request sized near the whole pool could
-                // never be admitted.
-                let headroom = if self.running.is_empty() { 0 } else { self.cfg.watermark_blocks };
-                if alloc.can_alloc(need + headroom) {
-                    self.waiting.pop_front();
-                    let seq = self.seqs.get_mut(&cand).unwrap();
-                    let ok = seq.table.reserve(replay_len, alloc);
-                    debug_assert!(ok, "can_alloc lied at admission");
-                    seq.phase = SeqPhase::Prefilling;
-                    self.running.push(cand);
-                    return StepPlan::Prefill { seq_id: cand };
-                }
+    /// Decide this step's work, reserving blocks for whatever it
+    /// returns. `prefix` enables prefix-cache block adoption at
+    /// admission (chunk `start` positions then begin after the adopted
+    /// tokens).
+    pub fn plan(
+        &mut self,
+        alloc: &mut BlockAllocator,
+        mut prefix: Option<&mut PrefixCache>,
+    ) -> StepPlan {
+        if self.cfg.chunked_prefill {
+            self.plan_mixed(alloc, prefix.as_deref_mut())
+        } else {
+            self.plan_exclusive(alloc, prefix.as_deref_mut())
+        }
+    }
+
+    fn plan_mixed(
+        &mut self,
+        alloc: &mut BlockAllocator,
+        prefix: Option<&mut PrefixCache>,
+    ) -> StepPlan {
+        // Effective floor of 2: at budget 1 either decode would starve
+        // admission (unbounded TTFT) or prefill would starve decode —
+        // both violate the liveness contract, so the degenerate config
+        // rounds up.
+        let budget = self.cfg.step_token_budget.max(2);
+        let prefill_pending = !self.waiting.is_empty()
+            || self.running.iter().any(|id| self.seqs[id].phase == SeqPhase::Prefilling);
+        // Decode never takes the whole budget while prefill work is
+        // queued: at least one token per step flows to prefill.
+        let decode_cap = if prefill_pending { budget - 1 } else { budget };
+        let decode = self.plan_decode(alloc, decode_cap);
+        let left = budget - decode.len();
+        let mut prefill = self.plan_prefill(alloc, left, prefix);
+        if prefill.is_empty() && decode.is_empty() {
+            if self.is_idle() {
+                return StepPlan::Idle;
+            }
+            prefill = self.force_prefill_progress(alloc, budget);
+            if prefill.is_empty() {
+                return StepPlan::Idle;
             }
         }
+        StepPlan::Mixed { prefill, decode }
+    }
 
+    /// Legacy exclusive policy for backends without mixed-step support:
+    /// one whole-prompt prefill *or* one decode batch per step.
+    fn plan_exclusive(
+        &mut self,
+        alloc: &mut BlockAllocator,
+        mut prefix: Option<&mut PrefixCache>,
+    ) -> StepPlan {
+        // 1. Prefill priority: admit the waiting head if its whole
+        //    replay fits under the watermark.
+        if let Some(chunk) = self.try_admit_whole(alloc, prefix.as_deref_mut()) {
+            // Decoders idle behind a whole-prompt prefill (the admitted
+            // sequence itself is Prefilling, so it isn't counted): the
+            // head-of-line stall the mixed planner eliminates — and what
+            // makes the chunked-vs-exclusive stall comparison in
+            // BENCH_engine.json meaningful.
+            if self.num_decoding() > 0 {
+                self.decode_stall_steps += 1;
+            }
+            return StepPlan::Mixed { prefill: vec![chunk], decode: Vec::new() };
+        }
         // 2. Decode a round-robin slice of the running set.
-        let decoding: Vec<u64> = self
+        let decode = self.plan_decode(alloc, self.cfg.max_decode_batch);
+        if decode.is_empty() {
+            // A preemption storm may have pushed every decoder back to
+            // the waiting queue; its freed blocks can admit the head now
+            // instead of wasting a step.
+            if let Some(chunk) = self.try_admit_whole(alloc, prefix) {
+                return StepPlan::Mixed { prefill: vec![chunk], decode: Vec::new() };
+            }
+            return StepPlan::Idle;
+        }
+        StepPlan::Mixed { prefill: Vec::new(), decode }
+    }
+
+    /// Plan up to `cap` decode tokens (one per decoding sequence),
+    /// preempting under memory pressure.
+    fn plan_decode(&mut self, alloc: &mut BlockAllocator, cap: usize) -> Vec<u64> {
+        let mut decoding: Vec<u64> = self
             .running
             .iter()
             .copied()
             .filter(|id| self.seqs[id].phase == SeqPhase::Decoding)
             .collect();
         if decoding.is_empty() {
-            return StepPlan::Idle;
+            return Vec::new();
         }
-        let batch_n = decoding.len().min(self.cfg.max_decode_batch);
-        let start = self.rr_cursor % decoding.len();
-        let mut batch: Vec<u64> =
+        if cap == 0 {
+            self.decode_stall_steps += 1;
+            return Vec::new();
+        }
+        decoding.sort_unstable();
+        let batch_n = decoding.len().min(self.cfg.max_decode_batch).min(cap);
+        // Fairness: resume the rotation strictly after the last-served
+        // id, in id order. Because the rotation key is the id (stable)
+        // rather than a position in a churning vector, a sequence is
+        // served at least once every ⌈n / batch⌉ steps.
+        let start = decoding.iter().position(|&id| id > self.rr_last).unwrap_or(0);
+        let batch: Vec<u64> =
             (0..batch_n).map(|i| decoding[(start + i) % decoding.len()]).collect();
-        self.rr_cursor = self.rr_cursor.wrapping_add(batch_n);
+        self.rr_last = *batch.last().unwrap();
 
-        // Reserve one slot per batched sequence, preempting under pressure.
+        // Reserve one slot per batched sequence; preempt the youngest
+        // running sequence under pressure. Index-based single pass — no
+        // quadratic `remove(0)`/`retain` churn.
         let mut planned = Vec::with_capacity(batch.len());
-        while let Some(id) = batch.first().copied() {
-            batch.remove(0);
+        let mut evicted: Vec<u64> = Vec::new();
+        'batch: for &id in &batch {
+            if evicted.contains(&id) {
+                continue;
+            }
             loop {
-                let block_size = alloc.block_size();
-                let seq = self.seqs.get_mut(&id).unwrap();
-                if seq.table.reserve(1, alloc) {
+                if self.seqs.get_mut(&id).unwrap().table.reserve(1, alloc) {
                     planned.push(id);
-                    break;
+                    continue 'batch;
                 }
                 // Memory pressure: preempt the youngest running sequence.
-                let victim = match self.youngest_running() {
-                    Some(v) => v,
-                    None => panic!("block pool too small for a single sequence"),
-                };
+                let victim = self
+                    .youngest_running()
+                    .expect("block pool too small for a single sequence");
                 self.preempt(victim, alloc);
-                let _ = block_size;
+                evicted.push(victim);
+                // The victim may already hold a planned slot this step
+                // (freed along with its blocks) — drop it from the plan.
+                planned.retain(|&p| p != victim);
                 if victim == id {
-                    break; // the sequence we were reserving for is gone
+                    continue 'batch;
                 }
-                // Victims later in this batch must not decode this step.
-                batch.retain(|&b| b != victim);
             }
         }
         if planned.is_empty() {
-            // Everything got preempted; next plan() will re-admit.
-            return StepPlan::Idle;
+            // Decoders existed but a preemption storm evicted them all:
+            // the head-of-line stall the mixed planner exists to avoid.
+            self.decode_stall_steps += 1;
         }
-        StepPlan::Decode { seq_ids: planned }
+        planned
+    }
+
+    /// Plan prefill chunks into `left` budget tokens: continue mid-flight
+    /// prefills first, then admit from the waiting queue.
+    fn plan_prefill(
+        &mut self,
+        alloc: &mut BlockAllocator,
+        mut left: usize,
+        mut prefix: Option<&mut PrefixCache>,
+    ) -> Vec<PrefillChunk> {
+        let bs = alloc.block_size();
+        let mut out = Vec::new();
+        // 1. Continue sequences already mid-prefill, in admission order
+        //    (their blocks are sunk cost — finishing them frees capacity
+        //    soonest). Spare slots in already-reserved blocks are usable
+        //    even when the free pool is empty.
+        let mid: Vec<u64> = self
+            .running
+            .iter()
+            .copied()
+            .filter(|id| self.seqs[id].phase == SeqPhase::Prefilling)
+            .collect();
+        for id in mid {
+            if left == 0 {
+                break;
+            }
+            let spare = {
+                let t = &self.seqs[&id].table;
+                t.blocks().len() * bs - t.len()
+            };
+            let reservable = spare + alloc.num_free() * bs;
+            let seq = self.seqs.get_mut(&id).unwrap();
+            let remaining = seq.remaining_prefill();
+            let chunk = remaining.min(left).min(reservable);
+            if chunk == 0 {
+                continue; // pool pressure: skip this step, decode drains it
+            }
+            let ok = seq.table.reserve(chunk, alloc);
+            debug_assert!(ok, "reservable-token math lied at continuation");
+            out.push(PrefillChunk {
+                seq_id: id,
+                start: seq.prefill_pos,
+                len: chunk,
+                last: chunk == remaining,
+            });
+            left -= chunk;
+        }
+        // 2. Admit from the waiting queue head (FCFS — the head is never
+        //    skipped; if it cannot start, nothing behind it starts).
+        while left > 0 && self.running.len() < self.cfg.max_running {
+            let Some(&cand) = self.waiting.front() else { break };
+            // Watermark headroom is waived when nothing is running —
+            // otherwise a request sized near the whole pool could never
+            // be admitted.
+            let headroom = if self.running.is_empty() { 0 } else { self.cfg.watermark_blocks };
+            let free_tokens = alloc.num_free().saturating_sub(headroom) * bs;
+            if free_tokens == 0 {
+                break;
+            }
+            self.waiting.pop_front();
+            let chunk = self.admit(cand, alloc, free_tokens.min(left), prefix.as_deref_mut());
+            left -= chunk.len;
+            out.push(chunk);
+        }
+        out
+    }
+
+    /// Admit a popped waiting sequence: adopt any cached prefix blocks,
+    /// reserve its first chunk (≤ `cap` tokens, ≥ 1), move it to the
+    /// running set.
+    fn admit(
+        &mut self,
+        cand: u64,
+        alloc: &mut BlockAllocator,
+        cap: usize,
+        prefix: Option<&mut PrefixCache>,
+    ) -> PrefillChunk {
+        debug_assert!(cap > 0);
+        let seq = self.seqs.get_mut(&cand).unwrap();
+        debug_assert!(seq.table.is_empty() && seq.prefill_pos == 0, "admission of a live table");
+        // Prefix reuse (§III.C "cache sharing and reuse"): adopt cached
+        // leading blocks outright — they are shared (refcounted), so
+        // adoption consumes no free blocks, and `lookup_shared` always
+        // leaves at least one token to compute logits from.
+        if let Some(pc) = prefix {
+            let toks = seq.replay_tokens();
+            let shared = pc.lookup_shared(&toks, alloc);
+            if !shared.is_empty() {
+                seq.table.adopt_prefix(&shared, alloc.block_size());
+                seq.prefill_pos = seq.table.len();
+                self.prefix_hit_tokens += seq.prefill_pos;
+            }
+        }
+        let seq = self.seqs.get_mut(&cand).unwrap();
+        let remaining = seq.remaining_prefill();
+        let chunk = remaining.min(cap);
+        let ok = seq.table.reserve(chunk, alloc);
+        debug_assert!(ok, "admission free-token math lied");
+        seq.phase = SeqPhase::Prefilling;
+        let start = seq.prefill_pos;
+        self.running.push(cand);
+        PrefillChunk { seq_id: cand, start, len: chunk, last: chunk == remaining }
+    }
+
+    /// Whole-replay admission for the exclusive (non-chunked) policy.
+    fn try_admit_whole(
+        &mut self,
+        alloc: &mut BlockAllocator,
+        prefix: Option<&mut PrefixCache>,
+    ) -> Option<PrefillChunk> {
+        if self.running.len() >= self.cfg.max_running {
+            return None;
+        }
+        let &cand = self.waiting.front()?;
+        let replay = self.seqs[&cand].replay_len();
+        let need = BlockTable::blocks_needed(replay, alloc.block_size());
+        let headroom = if self.running.is_empty() { 0 } else { self.cfg.watermark_blocks };
+        if !alloc.can_alloc(need + headroom) {
+            return None;
+        }
+        self.waiting.pop_front();
+        Some(self.admit(cand, alloc, replay, prefix))
+    }
+
+    /// Memory-stuck escape hatch: no decode could be planned and no
+    /// prefill could move (e.g. several half-prefilled prompts exhausted
+    /// the pool between them). Preempt the youngest running sequence —
+    /// sparing the oldest in-flight prefill — until some prefill takes at
+    /// least one token, so the engine always makes forward progress.
+    /// Returns empty only when the pool is pinned by something the
+    /// scheduler doesn't own (the engine then flushes the prefix cache
+    /// and re-plans).
+    fn force_prefill_progress(
+        &mut self,
+        alloc: &mut BlockAllocator,
+        budget: usize,
+    ) -> Vec<PrefillChunk> {
+        loop {
+            let plan = self.plan_prefill(alloc, budget, None);
+            if !plan.is_empty() {
+                return plan;
+            }
+            let target = self
+                .running
+                .iter()
+                .copied()
+                .find(|id| self.seqs[id].phase == SeqPhase::Prefilling);
+            let victim = self
+                .running
+                .iter()
+                .copied()
+                .filter(|&v| Some(v) != target)
+                .max_by_key(|&v| self.seqs[&v].arrival);
+            match victim {
+                Some(v) => self.preempt(v, alloc),
+                None => return Vec::new(),
+            }
+        }
     }
 
     fn youngest_running(&self) -> Option<u64> {
-        self.running
-            .iter()
-            .copied()
-            .max_by_key(|id| self.seqs[id].arrival)
+        self.running.iter().copied().max_by_key(|id| self.seqs[id].arrival)
     }
 
-    /// Recompute-preemption: free blocks, reset, re-queue at the front
-    /// (it has priority — its work is sunk cost).
+    /// Recompute-preemption: free blocks, reset the prefill cursor,
+    /// re-queue at the front (it has priority — its work is sunk cost).
     fn preempt(&mut self, id: u64, alloc: &mut BlockAllocator) {
         let seq = self.seqs.get_mut(&id).unwrap();
         seq.table.free_all(alloc);
+        // Preempted sequences replay prompt+generated via prefill; phase
+        // flips to Waiting here (plan() treats Preempted == Waiting).
         seq.reset_for_recompute();
+        seq.phase = SeqPhase::Waiting;
         self.running.retain(|&r| r != id);
         self.waiting.push_front(id);
-        // Preempted sequences replay via prefill; phase flips to Waiting
-        // at re-admission (plan() treats Preempted == Waiting).
-        self.seqs.get_mut(&id).unwrap().phase = SeqPhase::Waiting;
         self.preemptions += 1;
     }
 
@@ -225,116 +523,258 @@ mod tests {
         Sequence::new(id, vec![256; prompt_len.max(1)], params, 0.0)
     }
 
-    fn sched(max_batch: usize) -> Scheduler {
+    fn sched(max_batch: usize, budget: usize) -> Scheduler {
         Scheduler::new(SchedulerConfig {
             max_running: 8,
             max_decode_batch: max_batch,
             watermark_blocks: 1,
+            step_token_budget: budget,
+            chunked_prefill: true,
         })
     }
 
+    /// Drive one planned prefill chunk to "executed" state: advance the
+    /// cursor and fill the reserved slots, flipping phase on the last
+    /// chunk (what the engine does after the backend call).
+    fn complete_chunk(s: &mut Scheduler, c: &PrefillChunk, block_size: usize) {
+        let seq = s.get_mut(c.seq_id).unwrap();
+        assert_eq!(seq.prefill_pos, c.start, "chunk must resume at the cursor");
+        for _ in 0..c.len {
+            seq.table.append_slot(block_size);
+        }
+        seq.prefill_pos += c.len;
+        if c.last {
+            seq.phase = SeqPhase::Decoding;
+            seq.generated.push(42);
+        }
+    }
+
+    fn unpack(plan: StepPlan) -> (Vec<PrefillChunk>, Vec<u64>) {
+        match plan {
+            StepPlan::Mixed { prefill, decode } => (prefill, decode),
+            StepPlan::Idle => panic!("expected work, got Idle"),
+        }
+    }
+
     #[test]
-    fn admits_prefill_first() {
-        let mut s = sched(4);
+    fn admits_prefill_first_step() {
+        let mut s = sched(4, 64);
         let mut alloc = BlockAllocator::new(16, 4);
         s.add(seq(1, 6, 4));
-        match s.plan(&mut alloc) {
-            StepPlan::Prefill { seq_id } => assert_eq!(seq_id, 1),
-            other => panic!("expected prefill, got {other:?}"),
-        }
-        // Blocks for the 6-token prompt were reserved: ceil(6/4) = 2.
+        let (prefill, decode) = unpack(s.plan(&mut alloc, None));
+        assert!(decode.is_empty());
+        assert_eq!(prefill.len(), 1);
+        assert_eq!(prefill[0], PrefillChunk { seq_id: 1, start: 0, len: 6, last: true });
+        // Blocks for the 6-token chunk were reserved: ceil(6/4) = 2.
         assert_eq!(alloc.num_used(), 2);
         assert_eq!(s.get(1).unwrap().phase, SeqPhase::Prefilling);
     }
 
     #[test]
-    fn decodes_after_prefill() {
-        let mut s = sched(4);
-        let mut alloc = BlockAllocator::new(16, 4);
-        s.add(seq(1, 3, 4));
-        let _ = s.plan(&mut alloc); // prefill
-        s.get_mut(1).unwrap().phase = SeqPhase::Decoding;
-        s.get_mut(1).unwrap().generated.push(42);
-        match s.plan(&mut alloc) {
-            StepPlan::Decode { seq_ids } => assert_eq!(seq_ids, vec![1]),
-            other => panic!("expected decode, got {other:?}"),
+    fn long_prompt_prefills_in_budget_chunks() {
+        let mut s = sched(4, 8);
+        let mut alloc = BlockAllocator::new(32, 4);
+        s.add(seq(1, 20, 4));
+        let (p1, _) = unpack(s.plan(&mut alloc, None));
+        assert_eq!(p1[0], PrefillChunk { seq_id: 1, start: 0, len: 8, last: false });
+        complete_chunk(&mut s, &p1[0], 4);
+        let (p2, _) = unpack(s.plan(&mut alloc, None));
+        assert_eq!(p2[0], PrefillChunk { seq_id: 1, start: 8, len: 8, last: false });
+        complete_chunk(&mut s, &p2[0], 4);
+        let (p3, _) = unpack(s.plan(&mut alloc, None));
+        assert_eq!(p3[0], PrefillChunk { seq_id: 1, start: 16, len: 4, last: true });
+    }
+
+    #[test]
+    fn decode_advances_alongside_prefill_chunks() {
+        // Sequence 1 decodes while sequence 2's long prompt prefills in
+        // chunks: every step carries BOTH kinds of work.
+        let mut s = sched(4, 6);
+        let mut alloc = BlockAllocator::new(32, 4);
+        s.add(seq(1, 3, 8));
+        let (p, _) = unpack(s.plan(&mut alloc, None));
+        complete_chunk(&mut s, &p[0], 4);
+        s.add(seq(2, 16, 4));
+        let mut decode_steps = 0;
+        for _ in 0..4 {
+            let (prefill, decode) = unpack(s.plan(&mut alloc, None));
+            if s.get(2).unwrap().phase == SeqPhase::Prefilling
+                || prefill.iter().any(|c| c.seq_id == 2)
+            {
+                assert_eq!(decode, vec![1], "decoder must advance every step");
+                decode_steps += 1;
+            }
+            for c in &prefill {
+                complete_chunk(&mut s, &c.clone(), 4);
+            }
+            if let Some(q) = s.get_mut(1) {
+                if q.phase == SeqPhase::Decoding && decode.contains(&1) {
+                    q.table.append_slot(4);
+                    q.generated.push(7);
+                }
+            }
         }
-        // One decode slot reserved: prompt 3 tokens in 1 block (cap 4) +
-        // slot 4 fits the same block → still 1 block.
-        assert_eq!(alloc.num_used(), 1);
+        assert!(decode_steps >= 3, "interleaving must keep decode live ({decode_steps})");
+        assert_eq!(s.get(2).unwrap().phase, SeqPhase::Decoding, "prefill must complete");
+    }
+
+    #[test]
+    fn prefill_budget_is_leftover_after_decode() {
+        // 3 decoders + budget 5 → 3 decode tokens, 2 prefill tokens.
+        let mut s = sched(8, 5);
+        let mut alloc = BlockAllocator::new(64, 4);
+        for id in [1, 2, 3] {
+            s.add(seq(id, 2, 8));
+            let (p, _) = unpack(s.plan(&mut alloc, None));
+            complete_chunk(&mut s, &p[0], 4);
+        }
+        s.add(seq(4, 10, 4));
+        let (prefill, decode) = unpack(s.plan(&mut alloc, None));
+        assert_eq!(decode.len(), 3);
+        assert_eq!(prefill.len(), 1);
+        assert_eq!(prefill[0].len, 2, "prefill takes exactly the leftover budget");
     }
 
     #[test]
     fn memory_pressure_defers_admission() {
-        let mut s = sched(4);
+        let mut s = sched(4, 64);
         let mut alloc = BlockAllocator::new(3, 4); // tiny pool
-        s.add(seq(1, 8, 4)); // needs 2 blocks + 1 watermark = ok
-        s.add(seq(2, 8, 4)); // would need 2 + 1 > remaining 1
-        let p1 = s.plan(&mut alloc);
-        assert!(matches!(p1, StepPlan::Prefill { seq_id: 1 }));
-        s.get_mut(1).unwrap().phase = SeqPhase::Decoding;
-        s.get_mut(1).unwrap().generated.push(1);
-        // Seq 2 cannot be admitted; falls through to decoding seq 1.
-        let p2 = s.plan(&mut alloc);
-        assert!(matches!(p2, StepPlan::Decode { .. }), "{p2:?}");
+        s.add(seq(1, 8, 4)); // needs 2 blocks; no watermark while alone
+        let (p1, _) = unpack(s.plan(&mut alloc, None));
+        assert_eq!(p1[0].seq_id, 1);
+        complete_chunk(&mut s, &p1[0], 4);
+        // Seq 2 can only get a sliver (1 free block − 1 watermark = 0).
+        s.add(seq(2, 8, 4));
+        let (p2, d2) = unpack(s.plan(&mut alloc, None));
+        assert_eq!(d2, vec![1]);
+        assert!(p2.is_empty(), "watermark must defer admission: {p2:?}");
         assert_eq!(s.num_waiting(), 1);
     }
 
     #[test]
     fn preempts_youngest_under_pressure() {
-        let mut s = sched(4);
+        let mut s = sched(4, 64);
         let mut alloc = BlockAllocator::new(5, 2);
-        // Two sequences, 4 tokens each → 2 blocks each; 1 block spare.
+        // Two sequences, 4 tokens each, admitted in ONE mixed step
+        // (10-token pool) → 2 full blocks each; 1 block spare.
         for id in [1, 2] {
             s.add(seq(id, 4, 8));
-            let p = s.plan(&mut alloc);
-            assert!(matches!(p, StepPlan::Prefill { .. }), "{p:?}");
-            s.get_mut(id).unwrap().phase = SeqPhase::Decoding;
-            s.get_mut(id).unwrap().generated.push(9);
-            // Simulate the prefill having filled the reserved slots.
-            for _ in 0..4 {
-                s.get_mut(id).unwrap().table.append_slot(2);
-            }
+        }
+        let (p, _) = unpack(s.plan(&mut alloc, None));
+        assert_eq!(p.len(), 2, "budget admits both prompts in one step: {p:?}");
+        for c in &p {
+            complete_chunk(&mut s, &c.clone(), 2);
         }
         assert_eq!(alloc.num_free(), 1);
-        // Decode step must grow both tables; no free blocks → preempt 2.
-        let p = s.plan(&mut alloc);
-        match p {
-            StepPlan::Decode { seq_ids } => assert_eq!(seq_ids, vec![1]),
-            other => panic!("{other:?}"),
-        }
+        // Decode step must grow both tables; one free block → preempt 2.
+        // Its freed blocks immediately re-admit it as a replay chunk in
+        // the SAME step (no wasted iteration), cursor reset to 0.
+        let (p2, decode) = unpack(s.plan(&mut alloc, None));
+        assert_eq!(decode, vec![1]);
         assert_eq!(s.preemptions, 1);
-        assert_eq!(s.num_waiting(), 1);
-        assert_eq!(s.get(2).unwrap().phase, SeqPhase::Waiting);
-        assert!(s.get(2).unwrap().table.is_empty());
+        assert_eq!(p2.len(), 1);
+        assert_eq!(p2[0].seq_id, 2);
+        assert_eq!(p2[0].start, 0);
+        assert_eq!(s.get(2).unwrap().phase, SeqPhase::Prefilling);
+        assert_eq!(s.get(2).unwrap().prefill_pos, 0);
     }
 
     #[test]
-    fn round_robin_rotates_decode_batches() {
-        let mut s = sched(2); // batch cap 2, 3 sequences
+    fn round_robin_never_skips_a_sequence_twice() {
+        let mut s = sched(2, 64); // batch cap 2, 3 decoders
         let mut alloc = BlockAllocator::new(64, 4);
         for id in [1, 2, 3] {
-            s.add(seq(id, 2, 8));
-            let _ = s.plan(&mut alloc);
-            s.get_mut(id).unwrap().phase = SeqPhase::Decoding;
-            s.get_mut(id).unwrap().generated.push(0);
+            s.add(seq(id, 2, 16));
+            let (p, _) = unpack(s.plan(&mut alloc, None));
+            complete_chunk(&mut s, &p[0], 4);
         }
-        let mut seen = std::collections::BTreeSet::new();
-        for _ in 0..3 {
-            if let StepPlan::Decode { seq_ids } = s.plan(&mut alloc) {
-                assert_eq!(seq_ids.len(), 2);
-                seen.extend(seq_ids);
+        let mut served = std::collections::BTreeMap::new();
+        let mut skipped: std::collections::BTreeMap<u64, usize> = BTreeMap::new();
+        for _ in 0..6 {
+            let (_, decode) = unpack(s.plan(&mut alloc, None));
+            assert_eq!(decode.len(), 2);
+            for id in [1u64, 2, 3] {
+                if decode.contains(&id) {
+                    *served.entry(id).or_insert(0) += 1;
+                    skipped.insert(id, 0);
+                } else {
+                    let k = skipped.entry(id).or_insert(0);
+                    *k += 1;
+                    assert!(*k < 2, "sequence {id} skipped twice in a row");
+                }
             }
         }
-        assert_eq!(seen.len(), 3, "all sequences must get turns: {seen:?}");
+        // 6 steps × 2 slots over 3 sequences → exactly 4 turns each.
+        assert!(served.values().all(|&n| n == 4), "{served:?}");
+    }
+
+    #[test]
+    fn preempted_decoder_replays_with_cursor_reset() {
+        // A preempted decoder replays prompt+generated via chunked
+        // prefill from position 0 while the survivor keeps decoding.
+        let mut s = sched(4, 64);
+        let mut alloc = BlockAllocator::new(5, 2);
+        for id in [1, 2] {
+            s.add(seq(id, 4, 8));
+        }
+        let (p, _) = unpack(s.plan(&mut alloc, None));
+        for c in &p {
+            complete_chunk(&mut s, &c.clone(), 2);
+        }
+        // Pressure step: seq 2 preempted, then re-admitted as a partial
+        // replay chunk of its 5 replay tokens (4 prompt + 1 generated).
+        let (p2, d2) = unpack(s.plan(&mut alloc, None));
+        assert_eq!(d2, vec![1]);
+        assert_eq!(s.preemptions, 1);
+        assert_eq!(p2, vec![PrefillChunk { seq_id: 2, start: 0, len: 2, last: false }]);
+        assert_eq!(s.get(2).unwrap().replay_len(), 5);
+        {
+            // Fill seq 1's reserved decode slot (what the engine does).
+            let q = s.get_mut(1).unwrap();
+            q.table.append_slot(2);
+            q.generated.push(9);
+        }
+        complete_chunk(&mut s, &p2[0].clone(), 2);
+        // The replay resumes from the cursor next step, decode still live.
+        let (p3, d3) = unpack(s.plan(&mut alloc, None));
+        assert_eq!(d3, vec![1]);
+        assert_eq!(p3.len(), 1);
+        assert_eq!(p3[0].seq_id, 2);
+        assert_eq!(p3[0].start, 2);
+    }
+
+    #[test]
+    fn exclusive_mode_plans_whole_prefill_xor_decode() {
+        let mut s = Scheduler::new(SchedulerConfig {
+            max_running: 8,
+            max_decode_batch: 4,
+            watermark_blocks: 1,
+            step_token_budget: 4, // ignored by the exclusive policy
+            chunked_prefill: false,
+        });
+        let mut alloc = BlockAllocator::new(16, 4);
+        s.add(seq(1, 10, 4));
+        let (p, d) = unpack(s.plan(&mut alloc, None));
+        assert!(d.is_empty());
+        assert_eq!(p[0], PrefillChunk { seq_id: 1, start: 0, len: 10, last: true });
+        complete_chunk(&mut s, &p[0], 4);
+        s.add(seq(2, 3, 4));
+        // Prefill priority: seq 2 admitted whole before seq 1 decodes.
+        let (p2, d2) = unpack(s.plan(&mut alloc, None));
+        assert!(d2.is_empty());
+        assert_eq!(p2[0].len, 3);
+        complete_chunk(&mut s, &p2[0], 4);
+        let (p3, d3) = unpack(s.plan(&mut alloc, None));
+        assert!(p3.is_empty());
+        assert_eq!(d3.len(), 2);
     }
 
     #[test]
     fn finish_releases_blocks_and_collects() {
-        let mut s = sched(4);
+        let mut s = sched(4, 64);
         let mut alloc = BlockAllocator::new(8, 4);
         s.add(seq(7, 4, 2));
-        let _ = s.plan(&mut alloc);
+        let _ = s.plan(&mut alloc, None);
         assert!(alloc.num_used() > 0);
         s.finish(7, &mut alloc);
         assert_eq!(alloc.num_used(), 0);
@@ -346,8 +786,8 @@ mod tests {
 
     #[test]
     fn idle_when_empty() {
-        let mut s = sched(4);
+        let mut s = sched(4, 64);
         let mut alloc = BlockAllocator::new(8, 4);
-        assert_eq!(s.plan(&mut alloc), StepPlan::Idle);
+        assert_eq!(s.plan(&mut alloc, None), StepPlan::Idle);
     }
 }

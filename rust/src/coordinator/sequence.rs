@@ -30,9 +30,16 @@ pub struct Sequence {
     pub sampler: Sampler,
     /// Monotonic admission counter (eviction priority).
     pub arrival: u64,
+    /// Replay tokens already written to the KV cache. Prefill spans
+    /// multiple engine steps (chunked, budget-sized); this cursor marks
+    /// where the next chunk starts. Equals `table.len()` whenever the
+    /// sequence holds blocks; reset to 0 on recompute-preemption.
+    pub prefill_pos: usize,
     // Timestamps (engine-clock seconds) for metrics.
     pub t_enqueue: f64,
     pub t_first_token: Option<f64>,
+    /// When the most recent token was emitted (inter-token latency).
+    pub t_last_token: Option<f64>,
     pub t_finish: Option<f64>,
 }
 
@@ -48,8 +55,10 @@ impl Sequence {
             phase: SeqPhase::Waiting,
             sampler: Sampler::new(id.wrapping_mul(0x9E37_79B9)),
             arrival: id,
+            prefill_pos: 0,
             t_enqueue,
             t_first_token: None,
+            t_last_token: None,
             t_finish: None,
         }
     }
@@ -90,6 +99,7 @@ impl Sequence {
     pub fn reset_for_recompute(&mut self) {
         assert!(self.table.is_empty(), "free blocks before recompute reset");
         self.phase = SeqPhase::Preempted;
+        self.prefill_pos = 0;
     }
 
     /// The token stream to replay on re-admission (prompt + generated).
@@ -97,6 +107,34 @@ impl Sequence {
         let mut t = self.prompt.clone();
         t.extend_from_slice(&self.generated);
         t
+    }
+
+    /// Length of the replay stream (prompt + generated) without
+    /// materializing it.
+    pub fn replay_len(&self) -> usize {
+        self.prompt.len() + self.generated.len()
+    }
+
+    /// Replay tokens still to be prefilled (`replay_len - prefill_pos`).
+    pub fn remaining_prefill(&self) -> usize {
+        self.replay_len() - self.prefill_pos
+    }
+
+    /// One chunk of the replay stream, `[start, start + len)`, without
+    /// cloning the whole stream. Chunks may straddle the prompt/generated
+    /// boundary after a recompute-preemption replay.
+    pub fn replay_range(&self, start: usize, len: usize) -> Vec<u32> {
+        let p = self.prompt.len();
+        let end = start + len;
+        assert!(end <= self.replay_len(), "replay range {start}..{end} out of bounds");
+        let mut out = Vec::with_capacity(len);
+        if start < p {
+            out.extend_from_slice(&self.prompt[start..end.min(p)]);
+        }
+        if end > p {
+            out.extend_from_slice(&self.generated[start.max(p) - p..end - p]);
+        }
+        out
     }
 }
 
@@ -139,6 +177,31 @@ mod tests {
         let mut s = seq(4);
         s.generated = vec![7, 8];
         assert_eq!(s.replay_tokens(), vec![256, 1, 2, 7, 8]);
+        assert_eq!(s.replay_len(), 5);
+        assert_eq!(s.remaining_prefill(), 5);
+        s.prefill_pos = 2;
+        assert_eq!(s.remaining_prefill(), 3);
+    }
+
+    #[test]
+    fn replay_range_straddles_prompt_boundary() {
+        let mut s = seq(4); // prompt [256, 1, 2]
+        s.generated = vec![7, 8];
+        assert_eq!(s.replay_range(0, 5), vec![256, 1, 2, 7, 8]);
+        assert_eq!(s.replay_range(0, 2), vec![256, 1]);
+        assert_eq!(s.replay_range(2, 2), vec![2, 7]);
+        assert_eq!(s.replay_range(3, 2), vec![7, 8]);
+        assert_eq!(s.replay_range(4, 1), vec![8]);
+        assert!(s.replay_range(5, 0).is_empty());
+    }
+
+    #[test]
+    fn recompute_resets_prefill_cursor() {
+        let mut s = seq(4);
+        s.prefill_pos = 3;
+        s.reset_for_recompute();
+        assert_eq!(s.phase, SeqPhase::Preempted);
+        assert_eq!(s.prefill_pos, 0);
     }
 
     #[test]

@@ -106,23 +106,16 @@ impl BlockTable {
         Some((last, fresh))
     }
 
-    /// Replace the leading reserved blocks of an un-filled table with
-    /// already-shared cache blocks (prefix reuse): the fresh reservations
-    /// are returned to the pool and the table's logical length jumps to
-    /// the end of the adopted prefix. The caller must already hold a
-    /// reference on each shared block (see `PrefixCache::lookup_shared`).
-    pub fn substitute_prefix(
-        &mut self,
-        shared: &[BlockId],
-        block_size: usize,
-        alloc: &mut BlockAllocator,
-    ) {
-        assert_eq!(self.len, 0, "substitute_prefix on a filled table");
-        assert!(shared.len() <= self.blocks.len(), "more shared blocks than reserved");
-        for (i, &b) in shared.iter().enumerate() {
-            alloc.release(self.blocks[i]);
-            self.blocks[i] = b;
-        }
+    /// Adopt already-shared cache blocks as the leading prefix of an
+    /// empty, unreserved table (prefix reuse at admission): the caller
+    /// must already hold a reference on each block (see
+    /// `PrefixCache::lookup_shared`). The table's logical length jumps
+    /// to the end of the adopted prefix; adoption consumes no free
+    /// blocks.
+    pub fn adopt_prefix(&mut self, shared: &[BlockId], block_size: usize) {
+        assert_eq!(self.len, 0, "adopt_prefix on a filled table");
+        assert!(self.blocks.is_empty(), "adopt_prefix on a reserved table");
+        self.blocks.extend_from_slice(shared);
         self.len = shared.len() * block_size;
     }
 
@@ -209,6 +202,32 @@ mod tests {
         assert_eq!(parent.len(), 4);
         parent.free_all(&mut alloc);
         child.free_all(&mut alloc);
+        assert_eq!(alloc.num_free(), 4);
+    }
+
+    #[test]
+    fn adopt_prefix_extends_length_without_allocating() {
+        let mut alloc = BlockAllocator::new(4, 4);
+        let mut donor = BlockTable::new();
+        donor.reserve(8, &mut alloc);
+        for _ in 0..8 {
+            donor.append_slot(4);
+        }
+        let shared: Vec<_> = donor.blocks().to_vec();
+        for &b in &shared {
+            alloc.share(b);
+        }
+        let free_before = alloc.num_free();
+        let mut t = BlockTable::new();
+        t.adopt_prefix(&shared, 4);
+        assert_eq!(t.len(), 8);
+        assert_eq!(t.blocks(), donor.blocks());
+        assert_eq!(alloc.num_free(), free_before, "adoption must not allocate");
+        // Growing past the adopted prefix allocates fresh blocks.
+        assert!(t.reserve(2, &mut alloc));
+        assert_eq!(t.blocks().len(), 3);
+        t.free_all(&mut alloc);
+        donor.free_all(&mut alloc);
         assert_eq!(alloc.num_free(), 4);
     }
 

@@ -18,7 +18,10 @@
 //! group; when a new token expands the observed range, the group is
 //! **refit and requantized in place** (dequantize the stored levels under
 //! the old grid, re-quantize under the new one — bounded work:
-//! `block_size × head_dim` values). Within one tenancy ranges only ever
+//! `filled_slots × head_dim` values, where a per-(block, head) fill
+//! frontier confines the round-trip to slots actually written this
+//! tenancy; the known-zero unwritten tail is bulk-filled with the new
+//! grid's zero level instead). Within one tenancy ranges only ever
 //! widen, so freshly written tokens always land on the final grid and
 //! requantization drift is confined to a block's earliest tokens (each
 //! refit adds at most half a step, and step sizes grow with the range,
@@ -98,6 +101,12 @@ struct QuantPlane {
     lo: Vec<f32>,
     /// `[num_blocks, kv_heads]` running maxima (only ever increases).
     hi: Vec<f32>,
+    /// `[num_blocks, kv_heads]` fill frontier: one past the highest slot
+    /// written this tenancy. Slots at or beyond the frontier hold the
+    /// grid's zero level (exact 0.0), so range-widening requants skip
+    /// them — a bulk zero-level fill instead of
+    /// unpack→dequant→quant→pack per known-zero slot.
+    filled: Vec<u32>,
 }
 
 impl QuantPlane {
@@ -111,6 +120,7 @@ impl QuantPlane {
             zeros: vec![0; num_blocks * kv_heads],
             lo: vec![0.0; num_blocks * kv_heads],
             hi: vec![0.0; num_blocks * kv_heads],
+            filled: vec![0; num_blocks * kv_heads],
         }
     }
 
@@ -121,6 +131,7 @@ impl QuantPlane {
             + self.zeros.len() * 4
             + self.lo.len() * 4
             + self.hi.len() * 4
+            + self.filled.len() * 4
     }
 }
 
@@ -129,8 +140,8 @@ impl QuantPlane {
 ///
 /// Geometry and the write/read protocol match [`super::paged::PagedKvCache`];
 /// only the storage differs (≈0.26× the f32 pool bytes at typical shapes:
-/// 1 payload byte per value plus 16 grid bytes per `(block, kv_head,
-/// side)`). Reads go through [`QuantKvTile`] views so attention dequantizes
+/// 1 payload byte per value plus 20 grid/state bytes per `(block,
+/// kv_head, side)` — scale, zero, running range, fill frontier). Reads go through [`QuantKvTile`] views so attention dequantizes
 /// per tile; [`QuantizedPagedKvCache::gather`] materializes a dense copy
 /// only for the prefill path, exactly like the f32 cache's gather.
 #[derive(Debug)]
@@ -267,6 +278,7 @@ impl QuantizedPagedKvCache {
             plane.zeros[gi] = 0;
             plane.lo[gi] = 0.0;
             plane.hi[gi] = 0.0;
+            plane.filled[gi] = 0;
         }
         let mut lo = plane.lo[gi];
         let mut hi = plane.hi[gi];
@@ -284,10 +296,19 @@ impl QuantizedPagedKvCache {
                     bits: KV_PACK_BITS,
                 };
                 let d = scratch.len();
-                for s in 0..block_size {
+                // Only slots below the fill frontier carry live levels:
+                // round-trip those through the old grid, and bulk-fill
+                // the known-zero tail with the new grid's zero level
+                // (decodes to exactly 0.0) instead of requantizing it.
+                let frontier = plane.filled[gi] as usize;
+                for s in 0..frontier {
                     let words = &mut plane.words[widx(s)..widx(s) + words_per_head];
                     packing::unpack_dequant_row(words, KV_PACK_BITS, old.scale, old.zero, &mut scratch[..d]);
                     packing::quant_pack_row(&scratch[..d], &p, words);
+                }
+                let zword = packing::broadcast_level_word(p.zero, KV_PACK_BITS);
+                for s in frontier..block_size {
+                    plane.words[widx(s)..widx(s) + words_per_head].fill(zword);
                 }
                 plane.scales[gi] = p.scale;
                 plane.zeros[gi] = p.zero;
@@ -297,6 +318,7 @@ impl QuantizedPagedKvCache {
         }
         let p = QuantParams { scale: plane.scales[gi], zero: plane.zeros[gi], bits: KV_PACK_BITS };
         packing::quant_pack_row(vals, &p, &mut plane.words[widx(slot)..widx(slot) + words_per_head]);
+        plane.filled[gi] = plane.filled[gi].max(slot as u32 + 1);
     }
 
     /// Quantize and store one token's K and V vectors (all kv heads,
@@ -410,6 +432,7 @@ impl QuantizedPagedKvCache {
                 plane.zeros.copy_within(gs..gs + kvh, gd);
                 plane.lo.copy_within(gs..gs + kvh, gd);
                 plane.hi.copy_within(gs..gs + kvh, gd);
+                plane.filled.copy_within(gs..gs + kvh, gd);
             }
         }
     }
@@ -586,13 +609,49 @@ mod tests {
     }
 
     #[test]
+    fn fill_frontier_tracks_writes_and_requant_keeps_tail_zero() {
+        // The frontier must follow the highest written slot, reset with
+        // the tenancy, and a range-widening requant must leave the
+        // unwritten tail decoding to EXACT zeros under the new grid
+        // (the tail is zero-level-filled, not round-tripped).
+        let (kvh, d, bs) = (1usize, 4usize, 8usize);
+        let mut cache = QuantizedPagedKvCache::new(1, 1, bs, kvh, d);
+        cache.write_token(0, 0, 0, &[0.1, -0.1, 0.05, 0.0], &[0.2; 4]);
+        cache.write_token(0, 0, 1, &[0.08, 0.0, -0.02, 0.01], &[0.1; 4]);
+        assert_eq!(cache.keys[0].filled[0], 2);
+        // Outlier at slot 2 widens the range → refit + requant of slots
+        // 0..2 only; slots 3..8 must still decode to exact 0.0.
+        cache.write_token(0, 0, 2, &[9.0, 0.0, 0.0, 0.0], &[5.0; 4]);
+        assert_eq!(cache.keys[0].filled[0], 3);
+        assert!(cache.keys[0].zeros[0] != 0, "asymmetric grid has a nonzero zero point");
+        let (kt, vt) = cache.block_tiles(0, 0);
+        let mut kd = vec![9.9f32; bs * kvh * d];
+        let mut vd = vec![9.9f32; bs * kvh * d];
+        kt.dequantize_into(bs, kvh, d, &mut kd);
+        vt.dequantize_into(bs, kvh, d, &mut vd);
+        for slot in 3..bs {
+            for i in 0..d {
+                assert_eq!(kd[slot * d + i], 0.0, "k slot {slot}");
+                assert_eq!(vd[slot * d + i], 0.0, "v slot {slot}");
+            }
+        }
+        // Early tokens survived the requant within the (coarse) new step.
+        let step = cache.keys[0].scales[0];
+        assert!((kd[0] - 0.1).abs() <= step + 1e-5);
+        // Tenancy reset: a slot-0 write pulls the frontier back.
+        cache.write_token(0, 0, 0, &[0.3; 4], &[0.0; 4]);
+        assert_eq!(cache.keys[0].filled[0], 1);
+    }
+
+    #[test]
     fn pool_bytes_math_and_ratio() {
         // Realistic-ish shape: packed pool must be ≤ 0.3× the f32 pool.
         let (layers, blocks, bs, kvh, d) = (2usize, 16usize, 16usize, 2usize, 64usize);
         let q = QuantizedPagedKvCache::new(layers, blocks, bs, kvh, d);
         let f = PagedKvCache::new(layers, blocks, bs, kvh, d);
         let wph = d.div_ceil(4);
-        let per_plane = blocks * bs * kvh * wph * 4 + blocks * kvh * 16;
+        // 20 state bytes per (block, head): scale, zero, lo, hi, frontier.
+        let per_plane = blocks * bs * kvh * wph * 4 + blocks * kvh * 20;
         assert_eq!(q.pool_bytes(), 2 * layers * per_plane);
         assert!(
             10 * q.pool_bytes() <= 3 * f.pool_bytes(),

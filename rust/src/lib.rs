@@ -27,8 +27,8 @@
 //! | [`quant`] | GPTQ (Hessian/Cholesky, error propagation), RTN baseline, int4/int8 packing |
 //! | [`attention`] | block-tiled group-major kernel core ([`attention::kernel`]) + MHA / GQA / ALiBi / paged drivers |
 //! | [`model`] | Llama-architecture config, weights, native forward, sampler |
-//! | [`runtime`] | PJRT client (stubbed offline), artifact manifest, `Backend` trait (Native / Xla) |
-//! | [`coordinator`] | sequence state machine, scheduler, batcher, router, engine, metrics |
+//! | [`runtime`] | PJRT client (stubbed offline), artifact manifest, `Backend` trait with the `forward_step` mixed-batch entry point (Native / Xla) |
+//! | [`coordinator`] | sequence state machine, token-budget mixed-step scheduler (interleaved chunked prefill), batcher, router, engine, metrics |
 //! | [`server`] | threaded TCP/HTTP front-end speaking the JSON API |
 //! | [`workload`] | synthetic request-trace generator (Poisson arrivals) |
 //!
@@ -36,6 +36,23 @@
 //! the Workspace/threading/bench contracts, and the storage-dtype design
 //! are documented end to end in `ARCHITECTURE.md` at the repo root; the
 //! sections below are the contract summaries.
+//!
+//! ## Mixed-step scheduling (continuous batching)
+//!
+//! Every engine step is one token-budget **mixed batch**
+//! (`SchedulerConfig::step_token_budget`): the scheduler plans decode
+//! tokens for every running sequence *first*, then fills the leftover
+//! budget with interleaved prefill chunks (a prompt spans multiple
+//! steps via the sequence's `prefill_pos` cursor), so a long prompt can
+//! never stall the decoders — and one prefill token per step is
+//! guaranteed, so decode load can't starve admission. The engine
+//! executes the whole plan through one `Backend::forward_step` call;
+//! backends that can't resume prefill mid-sequence (the XLA artifacts,
+//! `Backend::supports_mixed_step`) fall back to the exclusive
+//! whole-prompt planner. Interleaving is **invisible to sampling**:
+//! every sequence's computation is bit-identical to the step-serial
+//! schedule, so outputs never depend on the budget (enforced by
+//! `coordinator::engine` tests).
 //!
 //! ## Attention kernel core and threading model
 //!
@@ -47,13 +64,15 @@
 //! steady-state attention allocation-free. The allocating wrappers
 //! route through a thread-local workspace.
 //!
-//! `NativeBackend::decode` executes a continuous-batching decode step as
-//! one pass: weights stream from memory once per step, and the
-//! per-sequence paged attention fans out across a scoped thread pool
-//! (`std::thread::scope`) with one private workspace per worker —
-//! auto-sized from the batch's KV footprint, pinnable via
-//! `NativeBackend::with_decode_threads`, and bit-identical to serial
-//! execution at every width.
+//! `NativeBackend::forward_step` executes a continuous-batching mixed
+//! step as one pass: weights stream from memory once per **step**
+//! across prefill-chunk rows and decode rows alike
+//! (`NativeModel::forward_mixed`), per-sequence paged decode attention
+//! fans out across a scoped thread pool (`std::thread::scope`) with one
+//! private workspace per worker, and prefill query rows fan out over
+//! the same pattern (`attention::gqa::gqa_attention_rows_parallel`) —
+//! auto-sized, pinnable via `NativeBackend::with_decode_threads`, and
+//! bit-identical to serial execution at every width.
 //!
 //! ## KV storage dtypes
 //!

@@ -6,6 +6,11 @@
 //! opt-gptq quantize --model tiny --bits 4 --group-size 64 --out weights.bin
 //! opt-gptq info     --model tiny
 //! ```
+//!
+//! Scheduling knobs (serve/generate): `--step-budget N` caps the tokens
+//! per mixed engine step (decode + prefill chunks, default 256);
+//! `--no-chunked-prefill` restores the legacy one-prompt-per-step
+//! planner.
 
 use opt_gptq::coordinator::{
     BucketPolicy, EngineConfig, KvCacheDtype, Router, RouterConfig, SchedulerConfig,
@@ -84,6 +89,14 @@ fn engine_config(args: &Args, cfg: &ModelConfig) -> EngineConfig {
             max_running: args.get_usize("max-running", 64),
             max_decode_batch: max_batch,
             watermark_blocks: 2,
+            // Token budget per mixed step (decode tokens + prefill-chunk
+            // tokens); larger = bigger prefill chunks, smaller = tighter
+            // inter-token latency under prompt load.
+            step_token_budget: args.get_usize("step-budget", 256),
+            // Interleaved chunked prefill is on by default; the engine
+            // auto-disables it on backends without mixed-step support
+            // (`--xla`).
+            chunked_prefill: !args.flag("no-chunked-prefill"),
         },
         decode_buckets: BucketPolicy::exact(max_batch),
         prefill_chunk: usize::MAX,

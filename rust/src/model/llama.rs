@@ -9,7 +9,7 @@
 
 use super::config::ModelConfig;
 use super::weights::ModelWeights;
-use crate::attention::gqa::gqa_attention;
+use crate::attention::gqa::{auto_prefill_threads, gqa_attention, gqa_attention_rows_parallel};
 use crate::attention::paged::{auto_decode_threads, paged_decode_batch};
 use crate::kvcache::{BlockTable, KvStore};
 use crate::tensor::{rmsnorm, Tensor};
@@ -72,6 +72,9 @@ impl NativeModel {
         // Claim physical slots for the new tokens once; every layer writes
         // its K/V through the same mapping.
         let slots: Vec<_> = (0..n).map(|_| table.append_slot(cache.block_size())).collect();
+        // Layer-invariant attention fan-out width (sized once, not per
+        // layer).
+        let threads = auto_prefill_threads(n, base + n);
 
         let mut x = self.embed_tokens(tokens);
         for li in 0..cfg.n_layers {
@@ -85,10 +88,22 @@ impl NativeModel {
             for (i, &(b, s)) in slots.iter().enumerate() {
                 cache.write_token(li, b, s, &k.data()[i * kvd..(i + 1) * kvd], &v.data()[i * kvd..(i + 1) * kvd]);
             }
-            // Gather the full visible context (base + new) contiguously.
+            // Gather the full visible context (base + new) contiguously
+            // and fan the query rows across scoped workers (bit-identical
+            // to the serial loop at every width).
             let (k_all, v_all) = cache.gather(li, table);
-            let attn =
-                gqa_attention(&cfg.attn_config(), q.data(), &k_all, &v_all, n, base + n, base);
+            let mut attn = vec![0.0f32; n * cfg.d_model];
+            gqa_attention_rows_parallel(
+                &cfg.attn_config(),
+                q.data(),
+                &k_all,
+                &v_all,
+                n,
+                base + n,
+                base,
+                threads,
+                &mut attn,
+            );
             let attn = Tensor::from_vec(&[n, cfg.d_model], attn).matmul_nt(&l.wo);
             x.add_assign(&attn);
             // MLP sub-block.
@@ -190,6 +205,195 @@ impl NativeModel {
         let normed = rmsnorm(&x, &self.weights.final_norm, cfg.rms_eps);
         let logits = normed.matmul_nt(&self.weights.lm_head); // [n, vocab]
         (0..n).map(|i| logits.row(i).to_vec()).collect()
+    }
+
+    /// One fused **mixed step**: prefill chunk rows and decode rows run
+    /// through a single forward pass, so every weight matrix streams
+    /// from memory **once per step** across both kinds of work — the
+    /// continuous-batching payoff extended from decode-only
+    /// ([`Self::decode_batch`]) to the whole step.
+    ///
+    /// * `chunk_tokens[i]` prefills into `chunk_tables[i]` at positions
+    ///   `table.len()..` (capacity reserved, chunked prefill welcome);
+    ///   its last-position logits are computed only when
+    ///   `chunk_want[i]` is set (a sequence's final chunk — mid-flight
+    ///   chunks skip the LM head entirely);
+    /// * `decode_tokens[j]` appends one slot to `decode_tables[j]`.
+    ///
+    /// A sequence must appear at most once across both lists. Attention
+    /// stays per-sequence: each chunk's query rows fan out across scoped
+    /// workers ([`gqa_attention_rows_parallel`]) and decode rows go
+    /// through the paged fan-out ([`paged_decode_batch`]), so every row
+    /// is **bit-identical** to running the chunks and the decode batch
+    /// as separate calls at the same cache state — interleaving never
+    /// perturbs sampling.
+    ///
+    /// Returns (per-chunk last-position logits — `Some` iff wanted —
+    /// and per-decode logits).
+    pub fn forward_mixed(
+        &self,
+        chunk_tokens: &[&[u32]],
+        chunk_tables: &mut [&mut BlockTable],
+        chunk_want: &[bool],
+        decode_tokens: &[u32],
+        decode_tables: &mut [&mut BlockTable],
+        cache: &mut dyn KvStore,
+        decode_threads: Option<usize>,
+    ) -> (Vec<Option<Vec<f32>>>, Vec<Vec<f32>>) {
+        let cfg = self.config();
+        let n_c = chunk_tokens.len();
+        assert_eq!(n_c, chunk_tables.len());
+        assert_eq!(n_c, chunk_want.len());
+        let n_d = decode_tokens.len();
+        assert_eq!(n_d, decode_tables.len());
+        // Pure decode steps keep the dedicated batch path (identical
+        // numerics; also the path audited by the zero-alloc test).
+        if n_c == 0 {
+            if n_d == 0 {
+                return (Vec::new(), Vec::new());
+            }
+            return (
+                Vec::new(),
+                self.decode_batch_with(decode_tokens, cache, decode_tables, decode_threads),
+            );
+        }
+        let chunk_rows: Vec<usize> = chunk_tokens.iter().map(|t| t.len()).collect();
+        assert!(chunk_rows.iter().all(|&r| r > 0), "empty prefill chunk");
+        let n_p: usize = chunk_rows.iter().sum();
+        let n = n_p + n_d;
+
+        // Row layout: [chunk 0 rows | chunk 1 rows | … | decode rows].
+        let mut all_tokens: Vec<u32> = Vec::with_capacity(n);
+        for t in chunk_tokens {
+            all_tokens.extend_from_slice(t);
+        }
+        all_tokens.extend_from_slice(decode_tokens);
+
+        // Claim physical slots once; every layer writes K/V through the
+        // same mapping.
+        let bs = cache.block_size();
+        let mut chunk_base = Vec::with_capacity(n_c);
+        let mut slots = Vec::with_capacity(n);
+        for (ci, table) in chunk_tables.iter_mut().enumerate() {
+            chunk_base.push(table.len());
+            for _ in 0..chunk_rows[ci] {
+                slots.push(table.append_slot(bs));
+            }
+        }
+        for table in decode_tables.iter_mut() {
+            slots.push(table.append_slot(bs));
+        }
+
+        let kvd = cfg.kv_dim();
+        let c_tables: Vec<&BlockTable> = chunk_tables.iter().map(|t| &**t).collect();
+        let d_tables: Vec<&BlockTable> = decode_tables.iter().map(|t| &**t).collect();
+        let total_decode_kv: usize = d_tables.iter().map(|t| t.len()).sum();
+        let threads_d =
+            decode_threads.unwrap_or_else(|| auto_decode_threads(n_d, total_decode_kv));
+        // Fan-out widths are layer-invariant: size them once per chunk,
+        // not once per (layer, chunk).
+        let threads_c: Vec<usize> = chunk_rows
+            .iter()
+            .zip(&chunk_base)
+            .map(|(&rows, &base)| auto_prefill_threads(rows, base + rows))
+            .collect();
+        let acfg = cfg.attn_config();
+        let row = cfg.d_model;
+
+        let mut x = self.embed_tokens(&all_tokens); // [n, d]
+        let mut attn = Tensor::zeros(&[n, cfg.d_model]);
+        for li in 0..cfg.n_layers {
+            let l = &self.weights.layers[li];
+            let xn = rmsnorm(&x, &l.rms_attn, cfg.rms_eps);
+            let q = xn.matmul_nt(&l.wq); // [n, d] — one stream of wq for ALL rows
+            let k = xn.matmul_nt(&l.wk);
+            let v = xn.matmul_nt(&l.wv);
+            for (i, &(b, s)) in slots.iter().enumerate() {
+                cache.write_token(
+                    li,
+                    b,
+                    s,
+                    &k.data()[i * kvd..(i + 1) * kvd],
+                    &v.data()[i * kvd..(i + 1) * kvd],
+                );
+            }
+            // Prefill chunks: gather each chunk's visible context and
+            // fan its query rows across scoped workers.
+            let mut r0 = 0usize;
+            for ci in 0..n_c {
+                let rows = chunk_rows[ci];
+                let base = chunk_base[ci];
+                let kv_len = base + rows;
+                let (k_all, v_all) = cache.gather(li, c_tables[ci]);
+                gqa_attention_rows_parallel(
+                    &acfg,
+                    &q.data()[r0 * row..(r0 + rows) * row],
+                    &k_all,
+                    &v_all,
+                    rows,
+                    kv_len,
+                    base,
+                    threads_c[ci],
+                    &mut attn.data_mut()[r0 * row..(r0 + rows) * row],
+                );
+                r0 += rows;
+            }
+            // Decode rows: the per-sequence paged fan-out.
+            if n_d > 0 {
+                paged_decode_batch(
+                    &acfg,
+                    cache,
+                    li,
+                    &q.data()[n_p * row..],
+                    &d_tables,
+                    threads_d,
+                    &mut attn.data_mut()[n_p * row..],
+                );
+            }
+            let attn_out = attn.matmul_nt(&l.wo); // one stream of wo
+            x.add_assign(&attn_out);
+            let xn2 = rmsnorm(&x, &l.rms_mlp, cfg.rms_eps);
+            let h = self.mlp(li, &xn2); // one stream of the MLP weights
+            x.add_assign(&h);
+        }
+        // LM head only on the rows whose logits matter: each WANTED
+        // chunk's last row (mid-flight chunks skip the largest matvec in
+        // the model) plus every decode row.
+        let mut sel_rows = Vec::with_capacity(n_c + n_d);
+        let mut r0 = 0usize;
+        for (ci, &rows) in chunk_rows.iter().enumerate() {
+            if chunk_want[ci] {
+                sel_rows.push(r0 + rows - 1);
+            }
+            r0 += rows;
+        }
+        let n_want = sel_rows.len();
+        for i in 0..n_d {
+            sel_rows.push(n_p + i);
+        }
+        if sel_rows.is_empty() {
+            // Only mid-flight chunks this step: no logits needed at all.
+            return (vec![None; n_c], Vec::new());
+        }
+        let mut sel = Vec::with_capacity(sel_rows.len() * cfg.d_model);
+        for &r in &sel_rows {
+            sel.extend_from_slice(x.row(r));
+        }
+        let sel = Tensor::from_vec(&[sel_rows.len(), cfg.d_model], sel);
+        let normed = rmsnorm(&sel, &self.weights.final_norm, cfg.rms_eps);
+        let logits = normed.matmul_nt(&self.weights.lm_head);
+        let mut next_want = 0usize;
+        let chunk_logits = (0..n_c)
+            .map(|ci| {
+                chunk_want[ci].then(|| {
+                    let l = logits.row(next_want).to_vec();
+                    next_want += 1;
+                    l
+                })
+            })
+            .collect();
+        let decode_logits = (0..n_d).map(|i| logits.row(n_want + i).to_vec()).collect();
+        (chunk_logits, decode_logits)
     }
 
     /// Final norm + LM head on the last row only (decode never needs the
@@ -338,6 +542,106 @@ mod tests {
         let serial = run(Some(1));
         assert_eq!(serial, run(Some(4)));
         assert_eq!(serial, run(None));
+    }
+
+    #[test]
+    fn forward_mixed_is_bit_identical_to_separate_calls() {
+        // A mixed step (one mid-flight prefill chunk + a decode batch)
+        // must equal running the chunk and the decode as separate calls
+        // at the same cache state — for logits AND cache contents, on
+        // both cache dtypes. This is the contract that makes interleaved
+        // scheduling invisible to sampling.
+        use crate::kvcache::QuantizedPagedKvCache;
+        let cfg = ModelConfig::tiny();
+        let model = NativeModel::new(ModelWeights::init(&cfg, 12));
+        let b_tokens = [256u32, 5, 6, 7, 8, 9, 10];
+        for quant in [false, true] {
+            let mk_cache = || -> Box<dyn crate::kvcache::KvStore> {
+                if quant {
+                    Box::new(QuantizedPagedKvCache::new(cfg.n_layers, 32, 8, cfg.n_kv_heads, cfg.head_dim()))
+                } else {
+                    Box::new(PagedKvCache::new(cfg.n_layers, 32, 8, cfg.n_kv_heads, cfg.head_dim()))
+                }
+            };
+            // Shared prior state: seq A prefilled (about to decode), seq
+            // B's first 3 tokens prefilled (chunk of 4 pending).
+            let setup = |cache: &mut dyn crate::kvcache::KvStore| {
+                let mut alloc = BlockAllocator::new(32, 8);
+                let mut ta = BlockTable::new();
+                let mut tb = BlockTable::new();
+                ta.reserve(8, &mut alloc);
+                tb.reserve(8, &mut alloc);
+                model.prefill(&[256, 1, 2, 3], cache, &mut ta);
+                model.prefill(&b_tokens[..3], cache, &mut tb);
+                (ta, tb)
+            };
+
+            let mut cache_ref = mk_cache();
+            let (mut ta1, mut tb1) = setup(cache_ref.as_mut());
+            let chunk_ref = model.prefill(&b_tokens[3..], cache_ref.as_mut(), &mut tb1);
+            let dec_ref = model.decode_step(4, cache_ref.as_mut(), &mut ta1);
+
+            let mut cache_mix = mk_cache();
+            let (mut ta2, mut tb2) = setup(cache_mix.as_mut());
+            let (chunk_logits, dec_logits) = model.forward_mixed(
+                &[&b_tokens[3..]],
+                &mut [&mut tb2],
+                &[true],
+                &[4],
+                &mut [&mut ta2],
+                cache_mix.as_mut(),
+                Some(1),
+            );
+            assert_eq!(
+                chunk_logits[0].as_deref(),
+                Some(chunk_ref.as_slice()),
+                "quant={quant}: chunk logits diverged"
+            );
+            assert_eq!(dec_logits[0], dec_ref, "quant={quant}: decode logits diverged");
+            // Cache contents match too (gathers are dense dumps).
+            for li in 0..cfg.n_layers {
+                assert_eq!(cache_ref.gather(li, &tb1), cache_mix.gather(li, &tb2), "layer {li}");
+                assert_eq!(cache_ref.gather(li, &ta1), cache_mix.gather(li, &ta2), "layer {li}");
+            }
+        }
+    }
+
+    #[test]
+    fn forward_mixed_multi_chunk_and_threads_deterministic() {
+        // Several chunks + several decoders in one step, across thread
+        // widths: outputs must not depend on the fan-out.
+        let cfg = ModelConfig::tiny();
+        let model = NativeModel::new(ModelWeights::init(&cfg, 13));
+        let run = |threads: Option<usize>| {
+            let mut cache = PagedKvCache::new(cfg.n_layers, 64, 8, cfg.n_kv_heads, cfg.head_dim());
+            let mut alloc = BlockAllocator::new(64, 8);
+            let mut t_c1 = BlockTable::new();
+            let mut t_c2 = BlockTable::new();
+            let mut t_d1 = BlockTable::new();
+            let mut t_d2 = BlockTable::new();
+            for t in [&mut t_c1, &mut t_c2, &mut t_d1, &mut t_d2] {
+                t.reserve(16, &mut alloc);
+            }
+            model.prefill(&[256, 1], &mut cache, &mut t_d1);
+            model.prefill(&[256, 2, 3], &mut cache, &mut t_d2);
+            let c1: Vec<u32> = (0..11).map(|i| 30 + i).collect();
+            let c2: Vec<u32> = (0..5).map(|i| 60 + i).collect();
+            model.forward_mixed(
+                &[c1.as_slice(), c2.as_slice()],
+                &mut [&mut t_c1, &mut t_c2],
+                &[true, true],
+                &[7, 8],
+                &mut [&mut t_d1, &mut t_d2],
+                &mut cache,
+                threads,
+            )
+        };
+        let serial = run(Some(1));
+        assert_eq!(serial, run(Some(4)));
+        assert_eq!(serial, run(None));
+        assert_eq!(serial.0.len(), 2);
+        assert_eq!(serial.1.len(), 2);
+        assert!(serial.0[0].as_ref().unwrap().iter().all(|v| v.is_finite()));
     }
 
     #[test]

@@ -106,6 +106,20 @@ pub fn quant_pack_row(vals: &[f32], p: &QuantParams, words: &mut [i32]) {
     }
 }
 
+/// An `i32` word with every level lane set to `level` — bulk-fill for
+/// packed rows holding one constant level. Filling a row with the grid's
+/// zero point makes it decode to exactly 0.0, which is how the KV cache
+/// refit skips requantizing its known-zero unwritten tail.
+pub fn broadcast_level_word(level: i32, pack_bits: u32) -> i32 {
+    let lpw = levels_per_word(pack_bits);
+    let mask = (1i64 << pack_bits) - 1;
+    let mut w = 0i64;
+    for i in 0..lpw as u32 {
+        w |= (level as i64 & mask) << (i * pack_bits);
+    }
+    w as i32
+}
+
 /// Unpack `out.len()` levels from `words` and dequantize them with one
 /// `(scale, zero)` grid — the attention kernel's per-tile dequant
 /// primitive (one call per `(tile row, kv_head)`).
@@ -144,6 +158,21 @@ mod tests {
     use super::*;
     use crate::quant::rtn_quantize;
     use crate::util::rng::Rng;
+
+    #[test]
+    fn broadcast_level_word_decodes_to_exact_zero_at_the_zero_point() {
+        for bits in [4u32, 8] {
+            let lpw = levels_per_word(bits);
+            for level in [0i32, 1, 7, (1 << bits) - 1] {
+                let w = broadcast_level_word(level, bits);
+                let mut out = vec![9.0f32; lpw];
+                unpack_dequant_row(&[w], bits, 0.37, level, &mut out);
+                assert!(out.iter().all(|&v| v == 0.0), "bits={bits} level={level}: {out:?}");
+            }
+        }
+        assert_eq!(broadcast_level_word(0x7f, 8), 0x7f7f7f7f);
+        assert_eq!(broadcast_level_word(0xf, 4), -1i32); // 0xffffffff
+    }
 
     #[test]
     fn pack_unpack_roundtrip_4bit() {

@@ -11,6 +11,40 @@ pub struct DecodeItem<'a> {
     pub table: &'a mut BlockTable,
 }
 
+/// One prefill chunk's slice of a mixed step.
+pub struct PrefillChunkItem<'a> {
+    /// Replay tokens to prefill, placed at positions
+    /// `table.len()..table.len()+tokens.len()`.
+    pub tokens: &'a [u32],
+    /// The sequence's block table (chunk capacity reserved).
+    pub table: &'a mut BlockTable,
+    /// Whether the caller needs this chunk's last-position logits — set
+    /// on a sequence's *final* chunk, where the engine samples the first
+    /// generated token.
+    pub want_logits: bool,
+}
+
+/// One engine step's worth of work: prefill chunks and decode tokens
+/// sharing a token budget. Either side may be empty; a sequence appears
+/// at most once across both.
+pub struct MixedBatch<'a> {
+    pub prefill: Vec<PrefillChunkItem<'a>>,
+    pub decode: Vec<DecodeItem<'a>>,
+    /// Upper bound on tokens per `Backend::prefill` call for the serial
+    /// fallback (`EngineConfig::prefill_chunk`, the XLA artifact bucket
+    /// cap). The fused native path ignores it.
+    pub prefill_call_cap: usize,
+}
+
+/// Outputs of one [`Backend::forward_step`] call.
+pub struct StepOutputs {
+    /// Last-position logits per prefill chunk, in order; `Some` iff the
+    /// chunk's `want_logits` was set.
+    pub prefill_logits: Vec<Option<Vec<f32>>>,
+    /// One logits vector per decode item, in order.
+    pub decode_logits: Vec<Vec<f32>>,
+}
+
 /// A model-execution backend the engine can drive.
 ///
 /// Contract shared by all implementations:
@@ -18,6 +52,10 @@ pub struct DecodeItem<'a> {
 ///   reserved) and returns the last position's logits.
 /// * `decode` appends one slot per item and returns one logits vector per
 ///   item, in order.
+/// * `forward_step` executes a whole mixed step (prefill chunks +
+///   decode) against one cache; the default implementation decomposes it
+///   into `prefill`/`decode` calls, so only `supports_mixed_step`
+///   backends see genuinely interleaved work.
 pub trait Backend: Send {
     fn config(&self) -> &ModelConfig;
 
@@ -25,6 +63,42 @@ pub trait Backend: Send {
         -> Vec<f32>;
 
     fn decode(&self, items: &mut [DecodeItem<'_>], cache: &mut dyn KvStore) -> Vec<Vec<f32>>;
+
+    /// Execute one mixed step: every prefill chunk and every decode
+    /// token of the plan, against the same cache.
+    ///
+    /// The default implementation is the serial fallback — one
+    /// `prefill` call per chunk (split at `prefill_call_cap`), then one
+    /// `decode` batch — byte-for-byte the legacy execution order for
+    /// backends without mixed-step support. [`NativeBackend`] overrides
+    /// it with a fused pass that streams each weight matrix **once per
+    /// step** across prefill and decode rows.
+    fn forward_step(&self, batch: &mut MixedBatch<'_>, cache: &mut dyn KvStore) -> StepOutputs {
+        let mut prefill_logits = Vec::with_capacity(batch.prefill.len());
+        for item in batch.prefill.iter_mut() {
+            let mut logits = Vec::new();
+            for sub in item.tokens.chunks(batch.prefill_call_cap.max(1)) {
+                logits = self.prefill(sub, cache, item.table);
+            }
+            prefill_logits.push(item.want_logits.then_some(logits));
+        }
+        let decode_logits = if batch.decode.is_empty() {
+            Vec::new()
+        } else {
+            self.decode(&mut batch.decode, cache)
+        };
+        StepOutputs { prefill_logits, decode_logits }
+    }
+
+    /// Whether `forward_step` executes interleaved chunked prefill
+    /// natively (prefill resuming at nonzero cache positions, mixed
+    /// with decode in one pass). The engine plans token-budget mixed
+    /// steps only when true; otherwise it falls back to exclusive
+    /// whole-prompt planning (the XLA artifacts assume fresh
+    /// sequences — see [`Backend::supports_offset_prefill`]).
+    fn supports_mixed_step(&self) -> bool {
+        false
+    }
 
     /// Human-readable backend name (metrics/logs).
     fn name(&self) -> &'static str;
@@ -99,6 +173,38 @@ impl Backend for NativeBackend {
             t => Some(t),
         };
         self.model.decode_batch_with(&tokens, cache, &mut tables, threads)
+    }
+
+    fn forward_step(&self, batch: &mut MixedBatch<'_>, cache: &mut dyn KvStore) -> StepOutputs {
+        // One fused pass (see `NativeModel::forward_mixed`): prefill
+        // chunk rows and decode rows share every matmul, so weights
+        // stream from memory once per STEP across both kinds of work,
+        // and both attention paths fan out across scoped workers.
+        let want: Vec<bool> = batch.prefill.iter().map(|c| c.want_logits).collect();
+        let chunk_tokens: Vec<&[u32]> = batch.prefill.iter().map(|c| c.tokens).collect();
+        let mut chunk_tables: Vec<&mut BlockTable> =
+            batch.prefill.iter_mut().map(|c| &mut *c.table).collect();
+        let decode_tokens: Vec<u32> = batch.decode.iter().map(|i| i.token).collect();
+        let mut decode_tables: Vec<&mut BlockTable> =
+            batch.decode.iter_mut().map(|i| &mut *i.table).collect();
+        let threads = match self.decode_threads {
+            0 => None,
+            t => Some(t),
+        };
+        let (prefill_logits, decode_logits) = self.model.forward_mixed(
+            &chunk_tokens,
+            &mut chunk_tables,
+            &want,
+            &decode_tokens,
+            &mut decode_tables,
+            cache,
+            threads,
+        );
+        StepOutputs { prefill_logits, decode_logits }
+    }
+
+    fn supports_mixed_step(&self) -> bool {
+        true
     }
 
     fn name(&self) -> &'static str {

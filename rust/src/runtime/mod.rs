@@ -17,5 +17,5 @@ pub mod pjrt_stub;
 pub mod xla_backend;
 
 pub use artifacts::{ArtifactManifest, BucketSpec};
-pub use backend::{Backend, DecodeItem, NativeBackend};
+pub use backend::{Backend, DecodeItem, MixedBatch, NativeBackend, PrefillChunkItem, StepOutputs};
 pub use xla_backend::XlaBackend;

@@ -268,6 +268,14 @@ impl Backend for XlaBackend {
         self.decode_impl(items, cache).expect("XLA decode failed")
     }
 
+    /// The AOT artifacts are lowered for fixed shapes and fresh
+    /// sequences — prefill cannot resume at a nonzero cache position —
+    /// so the engine plans exclusive (whole-prompt XOR decode) steps and
+    /// `forward_step` runs the serial default implementation.
+    fn supports_mixed_step(&self) -> bool {
+        false
+    }
+
     fn name(&self) -> &'static str {
         "xla-pjrt"
     }

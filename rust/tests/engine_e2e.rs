@@ -28,6 +28,7 @@ fn engine_with_byte_budget(cfg: &ModelConfig, kv_bytes: usize, max_batch: usize)
                 max_running: 32,
                 max_decode_batch: max_batch,
                 watermark_blocks: 1,
+                ..Default::default()
             },
             decode_buckets: BucketPolicy::exact(max_batch),
             prefill_chunk: usize::MAX,
@@ -96,6 +97,54 @@ fn staggered_arrivals_honor_fcfs_admission() {
     let o1 = outs.iter().find(|o| o.id == id1).unwrap();
     let o2 = outs.iter().find(|o| o.id == id2).unwrap();
     assert!(o1.ttft_s <= o2.ttft_s + 1e-6);
+}
+
+#[test]
+fn long_prompt_mid_decode_keeps_ttft_and_decode_bounded() {
+    // The continuous-batching claim end to end: a long prompt arriving
+    // while short requests decode must neither stall the decoders
+    // (decode_stall_steps == 0) nor wait for an idle engine to get its
+    // first token — and everything completes.
+    let cfg = ModelConfig::tiny();
+    let backend = NativeBackend::new(NativeModel::new(ModelWeights::init(&cfg, 11)));
+    let mut engine = Engine::new(
+        Box::new(backend),
+        EngineConfig {
+            num_blocks: 64,
+            block_size: 8,
+            sched: SchedulerConfig {
+                max_running: 16,
+                max_decode_batch: 4,
+                watermark_blocks: 1,
+                step_token_budget: 24, // force the long prompt to chunk
+                chunked_prefill: true,
+            },
+            decode_buckets: BucketPolicy::exact(4),
+            prefill_chunk: usize::MAX,
+            prefix_cache_blocks: 0,
+            kv_dtype: opt_gptq::coordinator::KvCacheDtype::F32,
+        },
+    );
+    let tok = ByteTokenizer::new();
+    let params = SamplingParams { max_tokens: 30, ..Default::default() };
+    engine.add_request(tok.encode(&synth_prompt(16, 1)), params).unwrap();
+    engine.add_request(tok.encode(&synth_prompt(12, 2)), params).unwrap();
+    for _ in 0..3 {
+        engine.step();
+    }
+    // 160-token prompt lands mid-decode → ≥ ⌈160/22⌉ chunked steps.
+    let long_id = engine
+        .add_request(vec![256; 160], SamplingParams { max_tokens: 4, ..Default::default() })
+        .unwrap();
+    let r = engine.run_to_completion();
+    assert_eq!(r.num_requests, 3);
+    assert_eq!(r.decode_stall_steps, 0, "decode stalled behind the long prefill");
+    assert_eq!(r.preemptions, 0, "pool is roomy; no preemption expected");
+    let outs = engine.take_outputs();
+    let long_out = outs.iter().find(|o| o.id == long_id).unwrap();
+    assert_eq!(long_out.tokens.len(), 4);
+    assert!(r.ttft_p95_s >= r.ttft_p50_s);
+    assert!(r.mean_inter_token_s >= 0.0);
 }
 
 #[test]

@@ -24,6 +24,7 @@ fn native_engine(seed: u64, num_blocks: usize, max_batch: usize) -> Engine {
                 max_running: 16,
                 max_decode_batch: max_batch,
                 watermark_blocks: 1,
+                ..Default::default()
             },
             decode_buckets: BucketPolicy::exact(max_batch),
             prefill_chunk: usize::MAX,

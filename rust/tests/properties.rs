@@ -129,6 +129,7 @@ fn prop_engine_completes_any_workload() {
                     max_running: g.usize_in(1, 8),
                     max_decode_batch: g.usize_in(1, 4),
                     watermark_blocks: 1,
+                    ..Default::default()
                 },
                 decode_buckets: BucketPolicy::exact(8),
                 prefill_chunk: usize::MAX,

@@ -162,6 +162,7 @@ fn engine_end_to_end_on_xla_backend() {
             max_running: 8,
             max_decode_batch: m.max_decode_batch(),
             watermark_blocks: 2,
+            ..Default::default()
         },
         decode_buckets: BucketPolicy::new(
             m.entries.iter().filter(|e| e.kind == "decode").map(|e| e.batch).collect(),
@@ -189,7 +190,12 @@ fn engine_end_to_end_on_xla_backend() {
     let econf2 = EngineConfig {
         num_blocks: m.num_blocks,
         block_size: m.block_size,
-        sched: SchedulerConfig { max_running: 8, max_decode_batch: 4, watermark_blocks: 2 },
+        sched: SchedulerConfig {
+            max_running: 8,
+            max_decode_batch: 4,
+            watermark_blocks: 2,
+            ..Default::default()
+        },
         decode_buckets: BucketPolicy::exact(4),
         prefill_chunk: usize::MAX,
         prefix_cache_blocks: 0,

@@ -16,3 +16,6 @@ cargo test -q
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 cargo bench --bench ablation_grouping -- --smoke
 cargo bench --bench attention_core -- --smoke
+# Serving-spine smoke: open-loop mixed workload → BENCH_engine.json
+# (ttft p50/p95, inter-token latency, stall counters).
+cargo bench --bench engine_serving -- --smoke
