@@ -7,6 +7,12 @@
 //!    the kernel serially vs the kernel fanned across all cores
 //!    (`paged_decode_batch`), plus the same decode over the packed 8-bit
 //!    KV cache (in-tile dequant) with f32-vs-q8 pool bytes.
+//! 3. **Chunked prefill over the paged store** — the legacy
+//!    gather-then-contiguous path (kept verbatim as the baseline: dense
+//!    per-call `KvStore::gather`, dequantizing on q8) vs the
+//!    paged-native streamed walk (`paged_prefill_attention_into`:
+//!    blocks in place, q8 tiles dequantized once each into workspace
+//!    scratch) — the `prefill_q8_*` series.
 //!
 //! Emits `BENCH_attention.json` (repo root) with tokens/s per variant so
 //! the perf trajectory is machine-trackable PR-over-PR. `--smoke` runs a
@@ -17,7 +23,9 @@ mod common;
 use opt_gptq::attention::alibi::{alibi_bias, alibi_slopes};
 use opt_gptq::attention::gqa::{gqa_attention_into, AttnConfig, Bias};
 use opt_gptq::attention::kernel::Workspace;
-use opt_gptq::attention::paged::paged_decode_batch;
+use opt_gptq::attention::paged::{
+    paged_decode_batch, paged_prefill_attention_into, paged_prefill_rows_parallel,
+};
 use opt_gptq::kvcache::{BlockAllocator, BlockTable, KvStore, PagedKvCache, QuantizedPagedKvCache};
 use opt_gptq::tensor::softmax_inplace;
 use opt_gptq::util::benchkit::{black_box, f, Bencher, Table};
@@ -251,6 +259,58 @@ fn main() {
     let pool_bytes_f32 = KvStore::pool_bytes(&cache);
     let pool_bytes_q8 = KvStore::pool_bytes(&qcache);
 
+    // ---- 3. chunked prefill over the paged store: gather vs streamed ----
+    // A mid-prompt chunk: the last `p_rows` positions of a `kv_len`-token
+    // context (the shape every chunked-prefill step pays per layer). The
+    // legacy baseline is the exact pre-refactor path: materialize the
+    // visible context densely with `gather` (dequantizing the whole
+    // context on q8), then run the contiguous kernel. The streamed path
+    // walks the same tiles in place.
+    let p_rows = args.get_usize("prefill-rows", if smoke { 16 } else { 64 }).min(kv_len);
+    let p_off = kv_len - p_rows;
+    let t0 = &tables[0];
+    let pq = rng.normal_vec(p_rows * h * d, 1.0);
+    let mut p_out = vec![0.0f32; p_rows * h * d];
+    let s_pre_gather_f32 = bench.bench("prefill f32 legacy gather (pre-refactor path)", || {
+        let (k_all, v_all) = KvStore::gather(&cache, 0, t0);
+        gqa_attention_into(&cfg, &pq, &k_all, &v_all, p_rows, kv_len, p_off, &mut ws, &mut p_out);
+        black_box(p_out[0]);
+    });
+    let s_pre_stream_f32 = bench.bench("prefill f32 streamed paged-native", || {
+        paged_prefill_attention_into(&cfg, &cache, 0, &pq, p_rows, p_off, t0, &mut ws, &mut p_out);
+        black_box(p_out[0]);
+    });
+    let s_pre_gather_q8 = bench.bench("prefill q8 legacy gather (dense dequant)", || {
+        let (k_all, v_all) = KvStore::gather(&qcache, 0, t0);
+        gqa_attention_into(&cfg, &pq, &k_all, &v_all, p_rows, kv_len, p_off, &mut ws, &mut p_out);
+        black_box(p_out[0]);
+    });
+    let s_pre_stream_q8 = bench.bench("prefill q8 streamed (in-tile dequant)", || {
+        paged_prefill_attention_into(&cfg, &qcache, 0, &pq, p_rows, p_off, t0, &mut ws, &mut p_out);
+        black_box(p_out[0]);
+    });
+    // Engine-width parallel streamed series: the path the serving engine
+    // actually runs. On q8 each job re-dequantizes its own prefix walk
+    // (bounded by the MIN_Q8_ROWS_PER_JOB cap inside the driver), so
+    // this series is what keeps that width-scaled cost honest.
+    let p_threads = threads.min(p_rows);
+    let s_pre_stream_f32_par =
+        bench.bench(&format!("prefill f32 streamed parallel ({p_threads} jobs)"), || {
+            paged_prefill_rows_parallel(&cfg, &cache, 0, &pq, p_rows, p_off, t0, p_threads, &mut p_out);
+            black_box(p_out[0]);
+        });
+    let s_pre_stream_q8_par =
+        bench.bench(&format!("prefill q8 streamed parallel ({p_threads} jobs max)"), || {
+            paged_prefill_rows_parallel(&cfg, &qcache, 0, &pq, p_rows, p_off, t0, p_threads, &mut p_out);
+            black_box(p_out[0]);
+        });
+    let prefill_f32_gather_tok_s = p_rows as f64 / s_pre_gather_f32.mean();
+    let prefill_f32_streamed_tok_s = p_rows as f64 / s_pre_stream_f32.mean();
+    let prefill_q8_gather_tok_s = p_rows as f64 / s_pre_gather_q8.mean();
+    let prefill_q8_streamed_tok_s = p_rows as f64 / s_pre_stream_q8.mean();
+    let prefill_f32_streamed_par_tok_s = p_rows as f64 / s_pre_stream_f32_par.mean();
+    let prefill_q8_streamed_par_tok_s = p_rows as f64 / s_pre_stream_q8_par.mean();
+
     // ---- report ---------------------------------------------------------
     let mut t = Table::new(
         "Attention core: block-tiled kernel vs pre-refactor baseline",
@@ -298,6 +358,42 @@ fn main() {
         f(decode_q8_parallel_tok_s, 1),
         f(decode_q8_parallel_tok_s / decode_naive_tok_s, 2),
     ]);
+    t.row(&[
+        "prefill f32 gather".into(),
+        format!("rows={p_rows} kv={kv_len} (legacy dense copy)"),
+        f(prefill_f32_gather_tok_s, 1),
+        f(1.0, 2),
+    ]);
+    t.row(&[
+        "prefill f32 streamed".into(),
+        format!("rows={p_rows} kv={kv_len} (paged-native)"),
+        f(prefill_f32_streamed_tok_s, 1),
+        f(prefill_f32_streamed_tok_s / prefill_f32_gather_tok_s, 2),
+    ]);
+    t.row(&[
+        "prefill q8 gather".into(),
+        format!("rows={p_rows} kv={kv_len} (legacy dense dequant)"),
+        f(prefill_q8_gather_tok_s, 1),
+        f(1.0, 2),
+    ]);
+    t.row(&[
+        "prefill q8 streamed".into(),
+        format!("rows={p_rows} kv={kv_len} (in-tile dequant)"),
+        f(prefill_q8_streamed_tok_s, 1),
+        f(prefill_q8_streamed_tok_s / prefill_q8_gather_tok_s, 2),
+    ]);
+    t.row(&[
+        "prefill f32 streamed par".into(),
+        format!("rows={p_rows} kv={kv_len} jobs={p_threads}"),
+        f(prefill_f32_streamed_par_tok_s, 1),
+        f(prefill_f32_streamed_par_tok_s / prefill_f32_gather_tok_s, 2),
+    ]);
+    t.row(&[
+        "prefill q8 streamed par".into(),
+        format!("rows={p_rows} kv={kv_len} jobs≤{p_threads} (dequant-capped)"),
+        f(prefill_q8_streamed_par_tok_s, 1),
+        f(prefill_q8_streamed_par_tok_s / prefill_q8_gather_tok_s, 2),
+    ]);
     t.print();
     println!(
         "KV pool bytes: f32 = {pool_bytes_f32}, q8 = {pool_bytes_q8} ({:.3}×)",
@@ -330,6 +426,19 @@ fn main() {
             ("kv_pool_bytes_f32", pool_bytes_f32 as f64),
             ("kv_pool_bytes_q8", pool_bytes_q8 as f64),
             ("kv_pool_ratio_q8_over_f32", pool_bytes_q8 as f64 / pool_bytes_f32 as f64),
+            ("prefill_chunk_rows", p_rows as f64),
+            ("prefill_f32_gather_tok_s", prefill_f32_gather_tok_s),
+            ("prefill_f32_streamed_tok_s", prefill_f32_streamed_tok_s),
+            (
+                "prefill_f32_streamed_speedup",
+                prefill_f32_streamed_tok_s / prefill_f32_gather_tok_s,
+            ),
+            ("prefill_q8_gather_tok_s", prefill_q8_gather_tok_s),
+            ("prefill_q8_streamed_tok_s", prefill_q8_streamed_tok_s),
+            ("prefill_q8_streamed_speedup", prefill_q8_streamed_tok_s / prefill_q8_gather_tok_s),
+            ("prefill_parallel_jobs", p_threads as f64),
+            ("prefill_f32_streamed_par_tok_s", prefill_f32_streamed_par_tok_s),
+            ("prefill_q8_streamed_par_tok_s", prefill_q8_streamed_par_tok_s),
         ],
     );
 }

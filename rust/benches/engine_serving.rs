@@ -116,7 +116,10 @@ fn main() {
     t.row(&["decode stall steps".into(), report.decode_stall_steps.to_string()]);
     t.row(&["preemptions".into(), report.preemptions.to_string()]);
     t.row(&["mixed steps".into(), engine.metrics.mixed_steps.to_string()]);
+    t.row(&["prefill dequant tiles".into(), report.prefill_dequant_tiles.to_string()]);
+    t.row(&["dense gather bytes".into(), report.gather_bytes.to_string()]);
     t.print();
+    assert_eq!(report.gather_bytes, 0, "the serving path must never dense-gather KV");
 
     common::write_bench_json(
         "engine",
@@ -136,6 +139,8 @@ fn main() {
             ("decode_stall_steps", report.decode_stall_steps as f64),
             ("preemptions", report.preemptions as f64),
             ("mixed_steps", engine.metrics.mixed_steps as f64),
+            ("prefill_dequant_tiles", report.prefill_dequant_tiles as f64),
+            ("gather_bytes", report.gather_bytes as f64),
         ],
     );
 }

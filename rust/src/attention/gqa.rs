@@ -9,10 +9,16 @@
 //!
 //! Since the kernel-core refactor this module is a thin driver over
 //! [`super::kernel`]: keys/values stream through the block-tiled,
-//! group-major online-softmax core in [`kernel::KV_TILE`]-row tiles, the
-//! same schedule `paged_decode_attention` uses over cache blocks — so
-//! prefill now enjoys the once-per-group K/V traffic the paper's §II.C
-//! model promises, instead of the seed's per-head scalar loop.
+//! group-major online-softmax core in [`kernel::KV_TILE`]-row tiles —
+//! the same schedule the paged drivers use over cache blocks.
+//!
+//! Since the paged-native prefill refactor the **model's** prefill path
+//! no longer runs through this module at all: it streams KV tiles
+//! straight out of the paged store
+//! (`attention::paged::paged_prefill_attention_into`), never gathering
+//! a contiguous copy. The contiguous routines here remain the kernel's
+//! reference drivers for cache-free callers — GPTQ calibration
+//! (`NativeModel::calibrate`), parity tests, and the bench baselines.
 
 use super::kernel::{self, with_workspace, Workspace};
 
@@ -112,59 +118,12 @@ pub fn gqa_attention_into(
     }
 }
 
-/// Row-parallel grouped-query attention: splits the `q_len` query rows
-/// into up to `threads` contiguous ranges and fans them across scoped
-/// workers (`std::thread::scope`), one private [`Workspace`] each — the
-/// same pool pattern as `paged_decode_batch`. Query rows are independent
-/// given K/V and each row's tile schedule is unchanged (the tile width
-/// depends only on `kv_len`), so outputs are **bit-identical** to
-/// [`gqa_attention_into`] at every width.
-#[allow(clippy::too_many_arguments)]
-pub fn gqa_attention_rows_parallel(
-    cfg: &AttnConfig,
-    q: &[f32],
-    k: &[f32],
-    v: &[f32],
-    q_len: usize,
-    kv_len: usize,
-    q_offset: usize,
-    threads: usize,
-    out: &mut [f32],
-) {
-    let row = cfg.num_heads * cfg.head_dim;
-    assert_eq!(q.len(), q_len * row);
-    assert_eq!(out.len(), q_len * row);
-    if q_len == 0 {
-        return;
-    }
-    let threads = threads.clamp(1, q_len);
-    if threads == 1 {
-        with_workspace(|ws| gqa_attention_into(cfg, q, k, v, q_len, kv_len, q_offset, ws, out));
-        return;
-    }
-    let per = q_len.div_ceil(threads);
-    std::thread::scope(|s| {
-        let mut rest = out;
-        let mut start = 0usize;
-        while start < q_len {
-            let take = per.min(q_len - start);
-            let (chunk_out, tail) = std::mem::take(&mut rest).split_at_mut(take * row);
-            rest = tail;
-            let q_chunk = &q[start * row..(start + take) * row];
-            let off = q_offset + start;
-            s.spawn(move || {
-                let mut ws = Workspace::new();
-                gqa_attention_into(cfg, q_chunk, k, v, take, kv_len, off, &mut ws, chunk_out);
-            });
-            start += take;
-        }
-    });
-}
-
 /// Heuristic fan-out width for a prefill chunk's attention: all cores
 /// once the chunk's score work (`q_rows × kv_len`) is large enough to
-/// amortize the scoped spawns, serial otherwise — the prefill twin of
-/// `attention::paged::auto_decode_threads`.
+/// amortize the worker-pool dispatch, serial otherwise — the prefill
+/// twin of `attention::paged::auto_decode_threads`. Sizes the row
+/// partition of `attention::paged::paged_prefill_rows_parallel` (the
+/// paged-native streamed prefill driver).
 pub fn auto_prefill_threads(q_rows: usize, kv_len: usize) -> usize {
     const MIN_PARALLEL_WORK: usize = 4096;
     if q_rows < 2 || q_rows * kv_len < MIN_PARALLEL_WORK {
@@ -355,23 +314,9 @@ mod tests {
     }
 
     #[test]
-    fn row_parallel_is_bit_identical_at_every_width() {
-        // The prefill fan-out must never change numerics: each row's
-        // tile schedule is unchanged, only who runs it.
-        let mut rng = Rng::new(17);
-        for &(q_len, kv_len, base) in &[(7usize, 7usize, 0usize), (5, 12, 7), (70, 70, 0)] {
-            let c = AttnConfig { num_heads: 4, num_kv_heads: 2, head_dim: 8, bias: Bias::Alibi };
-            let row = 4 * 8;
-            let q = rng.normal_vec(q_len * row, 1.0);
-            let k = rng.normal_vec(kv_len * 2 * 8, 1.0);
-            let v = rng.normal_vec(kv_len * 2 * 8, 1.0);
-            let serial = gqa_attention(&c, &q, &k, &v, q_len, kv_len, base);
-            for threads in [1usize, 2, 3, 8] {
-                let mut out = vec![0.0f32; q_len * row];
-                gqa_attention_rows_parallel(&c, &q, &k, &v, q_len, kv_len, base, threads, &mut out);
-                assert_eq!(out, serial, "threads={threads} q_len={q_len}");
-            }
-        }
+    fn auto_prefill_threads_heuristic() {
+        // (The width consumer — the paged-native row-parallel prefill —
+        // proves bit-identity across widths in attention::paged tests.)
         assert_eq!(auto_prefill_threads(1, 1 << 20), 1, "single row stays serial");
         assert_eq!(auto_prefill_threads(8, 16), 1, "tiny work stays serial");
         assert!(auto_prefill_threads(64, 4096) >= 1);

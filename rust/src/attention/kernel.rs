@@ -26,9 +26,25 @@
 //! buffers are grown once and reused, so steady-state attention performs
 //! **zero heap allocations**. The convenience wrappers in `gqa`/`paged`
 //! use a thread-local workspace via [`with_workspace`]; multi-threaded
-//! drivers (see [`super::paged::paged_decode_batch`]) give each worker
-//! its own workspace. A workspace is plain state — no interior mutability
-//! — so `&mut Workspace` is the only synchronization needed.
+//! drivers (see [`super::paged::paged_decode_batch`]) run on the
+//! persistent worker pool (`crate::runtime::pool`), whose workers keep
+//! their thread-local workspaces alive across jobs, steps and layers. A
+//! workspace is plain state — no interior mutability — so
+//! `&mut Workspace` is the only synchronization needed.
+//!
+//! # Tile-major multi-row walks
+//!
+//! The online-softmax state normally covers ONE query row
+//! ([`Workspace::begin_row`] … [`Workspace::finish_row`]). Drivers that
+//! walk tiles in the *outer* loop and rows in the *inner* loop — the
+//! paged-native prefill path, which wants to dequantize a quantized
+//! tile **once** and fold it into every query row that sees it — check
+//! out one detached [`RowState`] per row ([`Workspace::take_row_states`])
+//! and swap each row's state in around its `process_tile` call
+//! ([`Workspace::swap_row_state`], six pointer swaps). A row's
+//! arithmetic sequence is identical to the row-major walk — same tiles,
+//! same order, same values — so results are bit-identical; only the
+//! interleaving across rows changes.
 
 use super::alibi::alibi_slopes;
 use super::gqa::{AttnConfig, Bias};
@@ -92,6 +108,22 @@ pub struct Workspace {
     k_dq: Vec<f32>,
     /// Per-tile dequantized V scratch (same shape as `k_dq`).
     v_dq: Vec<f32>,
+    /// Reusable pool of detached per-row softmax states for tile-major
+    /// multi-row walks (grown once by [`Workspace::take_row_states`]).
+    row_states: Vec<RowState>,
+}
+
+/// Detached online-softmax state for one query row — the unit a
+/// tile-major multi-row driver checks out per row so several rows can
+/// share one tile walk (and one in-tile dequant) without losing the
+/// single-row kernel schedule. See the module docs; obtained from
+/// [`Workspace::take_row_states`] and swapped in/out around
+/// [`Workspace::process_tile`] with [`Workspace::swap_row_state`].
+#[derive(Debug, Default)]
+pub struct RowState {
+    m: Vec<f32>,
+    l: Vec<f32>,
+    acc: Vec<f32>,
 }
 
 impl Workspace {
@@ -129,6 +161,74 @@ impl Workspace {
         self.m.fill(f32::NEG_INFINITY);
         self.l.fill(0.0);
         self.acc.fill(0.0);
+    }
+
+    /// Swap a detached row's online-softmax state into (or back out of)
+    /// the workspace — the pivot of a tile-major multi-row walk. Six
+    /// pointer swaps; no allocation, no copy.
+    pub fn swap_row_state(&mut self, st: &mut RowState) {
+        std::mem::swap(&mut self.m, &mut st.m);
+        std::mem::swap(&mut self.l, &mut st.l);
+        std::mem::swap(&mut self.acc, &mut st.acc);
+    }
+
+    /// Check out `rows` freshly initialized [`RowState`]s (each the
+    /// equivalent of [`Workspace::begin_row`]) from the workspace's
+    /// reusable pool. Must be called after [`Workspace::configure`]; the
+    /// pool grows once and is reused forever, so steady-state checkouts
+    /// allocate nothing. Return the vector with
+    /// [`Workspace::put_row_states`] when the walk finishes (the returned
+    /// vector may be longer than `rows`; only the first `rows` entries
+    /// are initialized).
+    pub fn take_row_states(&mut self, rows: usize) -> Vec<RowState> {
+        let mut pool = std::mem::take(&mut self.row_states);
+        if pool.len() < rows {
+            pool.resize_with(rows, RowState::default);
+        }
+        let (h, hd) = (self.num_heads, self.num_heads * self.head_dim);
+        for st in &mut pool[..rows] {
+            st.m.clear();
+            st.m.resize(h, f32::NEG_INFINITY);
+            st.l.clear();
+            st.l.resize(h, 0.0);
+            st.acc.clear();
+            st.acc.resize(hd, 0.0);
+        }
+        pool
+    }
+
+    /// Return a row-state pool checked out by
+    /// [`Workspace::take_row_states`] so the buffers are reused.
+    pub fn put_row_states(&mut self, pool: Vec<RowState>) {
+        self.row_states = pool;
+    }
+
+    /// Take the per-tile dequant scratch out of the workspace, grown to
+    /// hold `tile_cap` rows (`tile_cap × kv_heads × head_dim` each, per
+    /// configure). Lets a driver dequantize a quantized tile **once** and
+    /// then call [`Workspace::process_tile`] (which needs `&mut self`)
+    /// against it for many rows. Must be paired with
+    /// [`Workspace::put_quant_scratch`]; `mem::take` swaps in empty Vecs,
+    /// so the workspace stays usable and nothing is allocated in steady
+    /// state.
+    pub fn take_quant_scratch(&mut self) -> (Vec<f32>, Vec<f32>) {
+        let cap = self.tile_cap * self.kv_heads * self.head_dim;
+        let mut kd = std::mem::take(&mut self.k_dq);
+        let mut vd = std::mem::take(&mut self.v_dq);
+        if kd.len() < cap {
+            kd.resize(cap, 0.0);
+        }
+        if vd.len() < cap {
+            vd.resize(cap, 0.0);
+        }
+        (kd, vd)
+    }
+
+    /// Return the dequant scratch taken by
+    /// [`Workspace::take_quant_scratch`].
+    pub fn put_quant_scratch(&mut self, k_dq: Vec<f32>, v_dq: Vec<f32>) {
+        self.k_dq = k_dq;
+        self.v_dq = v_dq;
     }
 
     /// Fold one KV tile into the running state of query row `q_row`
@@ -265,24 +365,12 @@ impl Workspace {
     ) {
         let (kvh, d) = (self.kv_heads, self.head_dim);
         debug_assert!(visible > 0 && visible <= self.tile_cap);
-        let cap = self.tile_cap * kvh * d;
         let used = visible * kvh * d;
-        // Temporarily move the scratch out so `process_tile` can borrow
-        // `self` mutably; `mem::take` swaps in empty Vecs (no allocation)
-        // and the buffers go straight back afterwards.
-        let mut kd = std::mem::take(&mut self.k_dq);
-        let mut vd = std::mem::take(&mut self.v_dq);
-        if kd.len() < cap {
-            kd.resize(cap, 0.0);
-        }
-        if vd.len() < cap {
-            vd.resize(cap, 0.0);
-        }
+        let (mut kd, mut vd) = self.take_quant_scratch();
         k_tile.dequantize_into(visible, kvh, d, &mut kd[..used]);
         v_tile.dequantize_into(visible, kvh, d, &mut vd[..used]);
         self.process_tile(q_row, &kd, &vd, tile_pos, visible, q_pos);
-        self.k_dq = kd;
-        self.v_dq = vd;
+        self.put_quant_scratch(kd, vd);
     }
 
     /// Normalize the accumulator into `out_row` (`[num_heads*head_dim]`).
@@ -520,6 +608,74 @@ mod tests {
             out
         };
         assert_eq!(run(true), run(false), "quantized path must share the exact schedule");
+    }
+
+    #[test]
+    fn tile_major_row_states_bit_identical_to_row_major() {
+        // The multi-row contract: walking tiles in the outer loop with
+        // detached per-row states must be BIT-identical to the row-major
+        // walk — a row's arithmetic sequence is unchanged, only the
+        // interleaving across rows differs.
+        let (h, kvh, d) = (4usize, 2usize, 8usize);
+        let cfg = AttnConfig { num_heads: h, num_kv_heads: kvh, head_dim: d, bias: Bias::Alibi };
+        let (q_len, kv_len, tile) = (5usize, 19usize, 4usize);
+        let q_offset = kv_len - q_len;
+        let rs = kvh * d;
+        let mut rng = Rng::new(23);
+        let q = rng.normal_vec(q_len * h * d, 1.0);
+        let k = rng.normal_vec(kv_len * rs, 1.0);
+        let v = rng.normal_vec(kv_len * rs, 1.0);
+
+        // Row-major reference.
+        let mut ws = Workspace::new();
+        let mut expect = vec![0.0f32; q_len * h * d];
+        for r in 0..q_len {
+            let q_pos = q_offset + r;
+            expect[r * h * d..(r + 1) * h * d].copy_from_slice(&run_tiled(
+                &cfg,
+                &mut ws,
+                &q[r * h * d..(r + 1) * h * d],
+                &k,
+                &v,
+                kv_len,
+                q_pos,
+                tile,
+            ));
+        }
+
+        // Tile-major walk with checked-out row states.
+        ws.configure(&cfg, tile);
+        let mut states = ws.take_row_states(q_len);
+        let mut pos = 0usize;
+        while pos < kv_len {
+            let in_tile = tile.min(kv_len - pos);
+            for (r, st) in states[..q_len].iter_mut().enumerate() {
+                let q_pos = q_offset + r;
+                if q_pos < pos {
+                    continue;
+                }
+                let vis = in_tile.min(q_pos + 1 - pos);
+                ws.swap_row_state(st);
+                ws.process_tile(
+                    &q[r * h * d..(r + 1) * h * d],
+                    &k[pos * rs..(pos + in_tile) * rs],
+                    &v[pos * rs..(pos + in_tile) * rs],
+                    pos,
+                    vis,
+                    q_pos,
+                );
+                ws.swap_row_state(st);
+            }
+            pos += in_tile;
+        }
+        let mut got = vec![0.0f32; q_len * h * d];
+        for (r, st) in states[..q_len].iter_mut().enumerate() {
+            ws.swap_row_state(st);
+            ws.finish_row(&mut got[r * h * d..(r + 1) * h * d]);
+            ws.swap_row_state(st);
+        }
+        ws.put_row_states(states);
+        assert_eq!(got, expect, "tile-major must be bit-identical to row-major");
     }
 
     #[test]

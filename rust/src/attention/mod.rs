@@ -15,12 +15,15 @@
 //!   slot.
 //! * [`grouping`] — dynamic activation-similarity head grouping
 //!   (paper §II.B "Dynamic Grouping Optimization").
-//! * [`paged`] — decode attention directly over the paged KV cache
-//!   (any [`crate::kvcache::KvStore`] dtype: quantized blocks are
-//!   dequantized per tile inside the kernel); cache blocks are the
-//!   kernel's tiles. [`paged_decode_batch`] fans a decode step across a
-//!   scoped thread pool with per-worker workspaces, bit-identical to
-//!   the serial loop.
+//! * [`paged`] — decode **and prefill** attention directly over the
+//!   paged KV cache (any [`crate::kvcache::KvStore`] dtype: quantized
+//!   blocks are dequantized per tile inside the kernel); cache blocks
+//!   are the kernel's tiles. [`paged_prefill_attention_into`] streams a
+//!   chunk's visible context out of the block table with no dense
+//!   gather; [`paged_decode_batch`] / [`paged_prefill_rows_parallel`]
+//!   fan their work across the persistent worker pool
+//!   (`crate::runtime::pool`) with per-worker thread-local workspaces,
+//!   bit-identical to the serial loop.
 
 pub mod alibi;
 pub mod gqa;
@@ -29,12 +32,10 @@ pub mod kernel;
 pub mod paged;
 
 pub use alibi::alibi_slopes;
-pub use gqa::{
-    auto_prefill_threads, gqa_attention, gqa_attention_into, gqa_attention_rows_parallel,
-    AttnConfig, Bias,
-};
+pub use gqa::{auto_prefill_threads, gqa_attention, gqa_attention_into, AttnConfig, Bias};
 pub use grouping::{group_heads_by_similarity, merge_kv_heads};
-pub use kernel::{with_workspace, Workspace};
+pub use kernel::{with_workspace, RowState, Workspace};
 pub use paged::{
     auto_decode_threads, paged_decode_attention, paged_decode_attention_into, paged_decode_batch,
+    paged_prefill_attention_into, paged_prefill_rows_parallel,
 };

@@ -1,28 +1,41 @@
-//! Paged decode attention — the native mirror of the Pallas kernel.
+//! Paged attention — decode **and** prefill straight over the block
+//! table, the native mirror of the Pallas kernel.
 //!
-//! One query token attends over a sequence whose K/V live in
-//! non-contiguous pool blocks (via its block table). Since the
-//! kernel-core refactor the per-block inner loop lives in
-//! [`super::kernel`]: cache blocks are exactly the kernel's KV tiles, so
-//! decode and prefill share one block-tiled, group-major online-softmax
-//! schedule — each KV block row touched once per *group*, not once per
-//! query head, the G× traffic saving the paper's DCU kernel exploits.
+//! A query row attends over a sequence whose K/V live in non-contiguous
+//! pool blocks (via its block table). Since the kernel-core refactor the
+//! per-block inner loop lives in [`super::kernel`]: cache blocks are
+//! exactly the kernel's KV tiles, so decode and prefill share one
+//! block-tiled, group-major online-softmax schedule — each KV block row
+//! touched once per *group*, not once per query head, the G× traffic
+//! saving the paper's DCU kernel exploits.
 //!
-//! [`paged_decode_batch`] fans a whole decode step's sequences across a
-//! scoped thread pool (`std::thread::scope`, no extra dependencies) with
-//! one private [`Workspace`] per worker; its outputs are bit-identical
-//! to the serial loop because sequences are independent and the
-//! per-sequence schedule is unchanged.
+//! **Paged-native prefill** ([`paged_prefill_attention_into`]) walks a
+//! chunk's visible context tile by tile directly out of the store:
+//! dense f32 blocks are borrowed in place, packed 8-bit blocks are
+//! dequantized **once per tile** into workspace scratch and shared by
+//! every query row that sees the tile (a tile-major walk over detached
+//! per-row softmax states — see the kernel docs). The dense
+//! per-layer-per-chunk `KvStore::gather` copy the old prefill path paid
+//! is gone from the hot path entirely; `gather` survives only as a
+//! test/debug dump.
+//!
+//! [`paged_decode_batch`] and [`paged_prefill_rows_parallel`] fan their
+//! work across the **persistent worker pool**
+//! (`crate::runtime::pool`, std-only: parked threads, scoped job
+//! batches) — one thread-local [`Workspace`] per worker, alive across
+//! jobs, layers and steps. Outputs are bit-identical to the serial loop
+//! because the work partition depends only on the requested width,
+//! rows/sequences are independent, and each row's schedule is unchanged.
 //!
 //! Storage-dtype agnostic: drivers take `&dyn KvStore` and dispatch per
 //! block on [`KvBlockView`] — dense f32 blocks go straight to
-//! `process_tile`, packed 8-bit blocks through `process_quant_tile`
-//! (in-tile dequant into workspace scratch), so both cache dtypes share
-//! one schedule.
+//! `process_tile`, packed 8-bit blocks through the kernel's in-tile
+//! dequant scratch, so both cache dtypes share one schedule.
 
 use super::gqa::AttnConfig;
 use super::kernel::{with_workspace, Workspace};
-use crate::kvcache::{BlockTable, KvBlockView, KvStore};
+use crate::kvcache::{BlockTable, KvBlockView, KvCacheDtype, KvStore};
+use crate::runtime::pool;
 
 /// Decode attention for one sequence.
 ///
@@ -92,8 +105,194 @@ pub fn paged_decode_attention_into(
     ws.finish_row(out);
 }
 
+/// Minimum query rows per pool job when the store is packed (Q8): each
+/// job's walk re-dequantizes its own prefix tiles, so a job must cover
+/// enough rows to amortize that dequant against its score work (per
+/// (row, context-token, kv-head): one `head_dim` dequant shared by the
+/// job's rows vs `2·G·head_dim` score/value FLOPs per row — at 4 rows
+/// per job the duplicated dequant is a small fraction of the job).
+pub const MIN_Q8_ROWS_PER_JOB: usize = 4;
+
+/// Streamed **paged-native prefill attention** for one chunk of query
+/// rows: the visible context is walked tile by tile straight out of the
+/// store's block table — no dense gather, no per-layer copy.
+///
+/// * `q`: `[q_len, num_heads * head_dim]` — the chunk's query rows at
+///   absolute positions `q_offset .. q_offset + q_len`; row `r` attends
+///   causally to positions `0 ..= q_offset + r`.
+/// * `table` must already hold the chunk's K/V
+///   (`table.len() >= q_offset + q_len`) — the model writes a layer's
+///   K/V before its attention, exactly as the old gather path did.
+///
+/// The walk is **tile-major**: per physical block, an f32 tile is
+/// borrowed in place and a Q8 tile is dequantized **once** into
+/// workspace scratch ([`Workspace::take_quant_scratch`]), then folded
+/// into every visible query row through detached per-row softmax states
+/// ([`Workspace::take_row_states`]). Dequant volume therefore matches
+/// the old dense gather (each context token once per call) while the
+/// O(context) dense copy and its allocation disappear.
+///
+/// Bit-exactness: a row's tile partition is the *physical block*
+/// partition — independent of chunk boundaries, and the same partition
+/// [`paged_decode_attention_into`] uses at the same position — so
+/// chunked prefill, whole-prompt prefill, and the step-serial reference
+/// all produce identical rows.
+///
+/// Returns the number of quantized tiles dequantized (0 on an f32
+/// store) — the feed for `EngineMetrics::prefill_dequant_tiles`.
+#[allow(clippy::too_many_arguments)]
+pub fn paged_prefill_attention_into(
+    cfg: &AttnConfig,
+    cache: &dyn KvStore,
+    layer: usize,
+    q: &[f32],
+    q_len: usize,
+    q_offset: usize,
+    table: &BlockTable,
+    ws: &mut Workspace,
+    out: &mut [f32],
+) -> usize {
+    let (h, kvh, d) = (cfg.num_heads, cfg.num_kv_heads, cfg.head_dim);
+    let row = h * d;
+    assert!(q_len > 0, "empty prefill chunk");
+    assert_eq!(q.len(), q_len * row);
+    assert_eq!(out.len(), q_len * row);
+    assert_eq!(kvh, cache.kv_heads());
+    assert_eq!(d, cache.head_dim());
+    let kv_len = q_offset + q_len;
+    assert!(table.len() >= kv_len, "chunk K/V must be written before its attention");
+    let block_size = cache.block_size();
+    let rs = kvh * d;
+
+    ws.configure(cfg, block_size);
+    let mut states = ws.take_row_states(q_len);
+    let mut quant_tiles = 0usize;
+    let mut tile_pos = 0usize;
+    for &block in table.blocks() {
+        if tile_pos >= kv_len {
+            break;
+        }
+        let in_block = block_size.min(kv_len - tile_pos);
+        // First query row that sees this tile (causality: q_pos ≥ tile_pos).
+        let r0 = tile_pos.saturating_sub(q_offset);
+        match cache.block_view(layer, block) {
+            KvBlockView::F32 { k, v } => {
+                for (r, st) in states[r0..q_len].iter_mut().enumerate() {
+                    let q_pos = q_offset + r0 + r;
+                    let vis = in_block.min(q_pos + 1 - tile_pos);
+                    let q_row = &q[(r0 + r) * row..(r0 + r + 1) * row];
+                    ws.swap_row_state(st);
+                    ws.process_tile(q_row, &k[..in_block * rs], &v[..in_block * rs], tile_pos, vis, q_pos);
+                    ws.swap_row_state(st);
+                }
+            }
+            KvBlockView::Q8 { k, v } => {
+                quant_tiles += 1;
+                let used = in_block * rs;
+                let (mut kd, mut vd) = ws.take_quant_scratch();
+                k.dequantize_into(in_block, kvh, d, &mut kd[..used]);
+                v.dequantize_into(in_block, kvh, d, &mut vd[..used]);
+                for (r, st) in states[r0..q_len].iter_mut().enumerate() {
+                    let q_pos = q_offset + r0 + r;
+                    let vis = in_block.min(q_pos + 1 - tile_pos);
+                    let q_row = &q[(r0 + r) * row..(r0 + r + 1) * row];
+                    ws.swap_row_state(st);
+                    ws.process_tile(q_row, &kd[..used], &vd[..used], tile_pos, vis, q_pos);
+                    ws.swap_row_state(st);
+                }
+                ws.put_quant_scratch(kd, vd);
+            }
+        }
+        tile_pos += in_block;
+    }
+    for (r, st) in states[..q_len].iter_mut().enumerate() {
+        ws.swap_row_state(st);
+        ws.finish_row(&mut out[r * row..(r + 1) * row]);
+        ws.swap_row_state(st);
+    }
+    ws.put_row_states(states);
+    quant_tiles
+}
+
+/// Row-parallel streamed prefill: splits the chunk's `q_len` query rows
+/// into up to `threads` contiguous ranges and fans them across the
+/// persistent worker pool (`crate::runtime::pool`), each range running
+/// [`paged_prefill_attention_into`] with its worker's thread-local
+/// workspace. Query rows are independent given the cache, and a row's
+/// tile schedule depends only on its absolute position and the block
+/// table — so outputs are **bit-identical** at every width.
+///
+/// Returns the total quantized tiles dequantized across all workers
+/// (each range walks its own tiles, so wider fan-outs re-dequantize
+/// shared prefixes — the count is the honest measured number).
+///
+/// On a **packed (Q8) store** the effective width is additionally
+/// capped so every job covers at least [`MIN_Q8_ROWS_PER_JOB`] query
+/// rows: each job re-dequantizes its own prefix walk, so narrow row
+/// ranges would multiply the chunk's dequant work by the fan-out width.
+/// The cap bounds the duplicated dequant at a small fraction of each
+/// job's score work; outputs are bit-identical at every width, so the
+/// cap is purely a scheduling choice (a pinned
+/// `NativeBackend::with_prefill_threads` width acts as an upper bound).
+#[allow(clippy::too_many_arguments)]
+pub fn paged_prefill_rows_parallel(
+    cfg: &AttnConfig,
+    cache: &dyn KvStore,
+    layer: usize,
+    q: &[f32],
+    q_len: usize,
+    q_offset: usize,
+    table: &BlockTable,
+    threads: usize,
+    out: &mut [f32],
+) -> usize {
+    let row = cfg.num_heads * cfg.head_dim;
+    assert_eq!(q.len(), q_len * row);
+    assert_eq!(out.len(), q_len * row);
+    if q_len == 0 {
+        return 0;
+    }
+    let threads = match cache.dtype() {
+        KvCacheDtype::F32 => threads.clamp(1, q_len),
+        // Bound the per-width dequant duplication: ≥ MIN_Q8_ROWS_PER_JOB
+        // rows share each job's in-tile dequant of the prefix (floor
+        // division — ceiling would let small chunks split into jobs
+        // below the minimum).
+        KvCacheDtype::Q8 => threads.clamp(1, (q_len / MIN_Q8_ROWS_PER_JOB).max(1)),
+    };
+    if threads == 1 {
+        return with_workspace(|ws| {
+            paged_prefill_attention_into(cfg, cache, layer, q, q_len, q_offset, table, ws, out)
+        });
+    }
+    let per = q_len.div_ceil(threads);
+    let n_jobs = q_len.div_ceil(per);
+    let mut tile_counts = vec![0usize; n_jobs];
+    let mut jobs: Vec<pool::Job<'_>> = Vec::with_capacity(n_jobs);
+    let mut rest = out;
+    let mut counts_rest = tile_counts.as_mut_slice();
+    let mut start = 0usize;
+    while start < q_len {
+        let take = per.min(q_len - start);
+        let (chunk_out, tail) = std::mem::take(&mut rest).split_at_mut(take * row);
+        rest = tail;
+        let (count, ctail) = std::mem::take(&mut counts_rest).split_at_mut(1);
+        counts_rest = ctail;
+        let q_chunk = &q[start * row..(start + take) * row];
+        let off = q_offset + start;
+        jobs.push(Box::new(move || {
+            count[0] = with_workspace(|ws| {
+                paged_prefill_attention_into(cfg, cache, layer, q_chunk, take, off, table, ws, chunk_out)
+            });
+        }));
+        start += take;
+    }
+    pool::global().run(jobs);
+    tile_counts.iter().sum()
+}
+
 /// Decode attention for a whole batch in one step, fanned across
-/// `threads` scoped workers with per-worker workspaces.
+/// `threads` contiguous chunks on the persistent worker pool.
 ///
 /// * `qs`: `[batch, num_heads * head_dim]` query rows, one per sequence.
 /// * `tables`: one block table per sequence (same order).
@@ -101,10 +300,10 @@ pub fn paged_decode_attention_into(
 ///
 /// Sequences are split into contiguous chunks balanced by **KV length**
 /// (attention cost is ∝ `table.len()`, so count-based chunking would
-/// let one long-context chunk serialize the step), one worker per
+/// let one long-context chunk serialize the step), one pool job per
 /// chunk, at most `threads` chunks. Outputs are **bit-identical** to
 /// the serial loop (`threads == 1`): each sequence's computation is
-/// independent and its instruction order is unchanged — threading only
+/// independent and its instruction order is unchanged — the pool only
 /// changes *who* runs it.
 pub fn paged_decode_batch(
     cfg: &AttnConfig,
@@ -147,24 +346,26 @@ pub fn paged_decode_batch(
     let costs: Vec<usize> = tables.iter().map(|t| t.len().max(1)).collect();
     let total_cost: usize = costs.iter().sum();
     let target = total_cost.div_ceil(threads);
-    std::thread::scope(|s| {
-        let mut rest = out;
-        let mut start = 0usize;
-        while start < n {
-            let mut take = 1usize;
-            let mut cost = costs[start];
-            while cost < target && start + take < n {
-                cost += costs[start + take];
-                take += 1;
-            }
-            // `mem::take` moves the slice out so the split-off chunk keeps
-            // the full borrow lifetime the spawned worker needs.
-            let (chunk_out, tail) = std::mem::take(&mut rest).split_at_mut(take * row);
-            rest = tail;
-            let q_chunk = &qs[start * row..(start + take) * row];
-            let t_chunk = &tables[start..start + take];
-            s.spawn(move || {
-                let mut ws = Workspace::new();
+    let mut jobs: Vec<pool::Job<'_>> = Vec::with_capacity(threads);
+    let mut rest = out;
+    let mut start = 0usize;
+    while start < n {
+        let mut take = 1usize;
+        let mut cost = costs[start];
+        while cost < target && start + take < n {
+            cost += costs[start + take];
+            take += 1;
+        }
+        // `mem::take` moves the slice out so the split-off chunk keeps
+        // the full borrow lifetime the pool job needs.
+        let (chunk_out, tail) = std::mem::take(&mut rest).split_at_mut(take * row);
+        rest = tail;
+        let q_chunk = &qs[start * row..(start + take) * row];
+        let t_chunk = &tables[start..start + take];
+        jobs.push(Box::new(move || {
+            // The worker's thread-local workspace persists across jobs,
+            // layers and steps — scratch grows once per worker.
+            with_workspace(|ws| {
                 for (j, table) in t_chunk.iter().enumerate() {
                     paged_decode_attention_into(
                         cfg,
@@ -172,26 +373,30 @@ pub fn paged_decode_batch(
                         layer,
                         &q_chunk[j * row..(j + 1) * row],
                         table,
-                        &mut ws,
+                        ws,
                         &mut chunk_out[j * row..(j + 1) * row],
                     );
                 }
             });
-            start += take;
-        }
-    });
+        }));
+        start += take;
+    }
+    pool::global().run(jobs);
 }
 
 /// Heuristic fan-out width for one decode step: all cores once the
-/// batch's total KV footprint is large enough to amortize the scoped
-/// thread spawn, serial otherwise (tiny steps lose more to spawn
-/// latency than they gain).
+/// batch's total KV footprint is large enough to amortize the fan-out
+/// overhead, serial otherwise (tiny steps lose more to job dispatch
+/// than they gain).
 ///
-/// The model drivers spawn one scope per *layer*, but the ratio is
-/// layer-invariant: each layer pays one spawn and does one layer's
-/// attention over the same `total_kv_tokens`, so a threshold tuned for
-/// one layer holds for any depth. (A persistent pool that amortizes
-/// spawns across layers is a ROADMAP follow-up.)
+/// Since the persistent-pool refactor the per-layer cost is a batch of
+/// queue pushes plus a condvar wakeup on parked workers
+/// (`crate::runtime::pool`) — no thread spawn or teardown — but the
+/// ratio argument is unchanged and layer-invariant: each layer pays one
+/// dispatch and does one layer's attention over the same
+/// `total_kv_tokens`, so a threshold tuned for one layer holds for any
+/// depth. The serial path additionally skips the pool entirely (no
+/// boxing, caller's thread-local workspace).
 pub fn auto_decode_threads(batch: usize, total_kv_tokens: usize) -> usize {
     const MIN_PARALLEL_KV: usize = 2048;
     if batch < 2 || total_kv_tokens < MIN_PARALLEL_KV {
@@ -421,5 +626,145 @@ mod tests {
         assert_eq!(auto_decode_threads(1, 1 << 20), 1, "no fan-out for batch 1");
         assert_eq!(auto_decode_threads(8, 16), 1, "no fan-out for tiny KV");
         assert!(auto_decode_threads(8, 1 << 20) >= 1);
+    }
+
+    #[test]
+    fn streamed_prefill_matches_contiguous_reference() {
+        // The paged-native prefill walk must agree with the contiguous
+        // kernel over the gathered context (different tile partition →
+        // fp tolerance, not bit equality).
+        for (bias, block_size, base, q_len) in
+            [(Bias::Alibi, 4, 7, 5), (Bias::None, 8, 0, 9), (Bias::Alibi, 16, 20, 3)]
+        {
+            let (h, kvh, d) = (4usize, 2usize, 8usize);
+            let cfg = AttnConfig { num_heads: h, num_kv_heads: kvh, head_dim: d, bias };
+            let kv_len = base + q_len;
+            let (cache, table, k, v) = setup(kv_len, kvh, d, block_size, 91);
+            let mut rng = Rng::new(12);
+            let q = rng.normal_vec(q_len * h * d, 1.0);
+            let mut ws = Workspace::new();
+            let mut out = vec![0.0f32; q_len * h * d];
+            let tiles =
+                paged_prefill_attention_into(&cfg, &cache, 0, &q, q_len, base, &table, &mut ws, &mut out);
+            assert_eq!(tiles, 0, "f32 store dequantizes nothing");
+            let reference = gqa_attention(&cfg, &q, &k, &v, q_len, kv_len, base);
+            for (i, (a, b)) in out.iter().zip(&reference).enumerate() {
+                assert!(
+                    (a - b).abs() < 1e-4,
+                    "bias={bias:?} bs={block_size} base={base} i={i}: {a} vs {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn streamed_prefill_rows_bit_identical_to_paged_decode() {
+        // Stronger than the contiguous check: a streamed prefill row's
+        // tile partition IS the block partition, so each row must be
+        // BIT-identical to paged decode replay of the same position
+        // (f32 store: values never requantize).
+        let (h, kvh, d, block_size) = (4usize, 2usize, 8usize, 4usize);
+        let cfg = AttnConfig { num_heads: h, num_kv_heads: kvh, head_dim: d, bias: Bias::Alibi };
+        let (base, q_len) = (6usize, 7usize);
+        let kv_len = base + q_len;
+        let mut rng = Rng::new(55);
+        let num_blocks = kv_len.div_ceil(block_size) + 1;
+        let mut cache = PagedKvCache::new(1, num_blocks, block_size, kvh, d);
+        let mut alloc = BlockAllocator::new(num_blocks, block_size);
+        let mut table = BlockTable::new();
+        assert!(table.reserve(kv_len, &mut alloc));
+        let q = rng.normal_vec(q_len * h * d, 1.0);
+        // Write tokens one at a time; capture the decode reference for
+        // each prefill row at exactly its causal cache state.
+        let mut dec_rows = Vec::new();
+        for t in 0..kv_len {
+            let (b, s) = table.append_slot(block_size);
+            let k = rng.normal_vec(kvh * d, 1.0);
+            let v = rng.normal_vec(kvh * d, 1.0);
+            cache.write_token(0, b, s, &k, &v);
+            if t >= base {
+                let r = t - base;
+                dec_rows.push(paged_decode_attention(&cfg, &cache, 0, &q[r * h * d..(r + 1) * h * d], &table));
+            }
+        }
+        let mut ws = Workspace::new();
+        let mut out = vec![0.0f32; q_len * h * d];
+        paged_prefill_attention_into(&cfg, &cache, 0, &q, q_len, base, &table, &mut ws, &mut out);
+        for (r, dec) in dec_rows.iter().enumerate() {
+            assert_eq!(&out[r * h * d..(r + 1) * h * d], &dec[..], "row {r} diverged from decode");
+        }
+    }
+
+    #[test]
+    fn streamed_prefill_parallel_bit_identical_at_every_width() {
+        // The pool fan-out must never change numerics: row partition
+        // depends only on the width, each row's walk is unchanged.
+        let (h, kvh, d, block_size) = (4usize, 2usize, 8usize, 4usize);
+        let cfg = AttnConfig { num_heads: h, num_kv_heads: kvh, head_dim: d, bias: Bias::Alibi };
+        for (base, q_len) in [(0usize, 7usize), (9, 5), (0, 70)] {
+            let kv_len = base + q_len;
+            let (cache, table, _, _) = setup(kv_len, kvh, d, block_size, 71);
+            let mut rng = Rng::new(13);
+            let q = rng.normal_vec(q_len * h * d, 1.0);
+            let mut serial = vec![0.0f32; q_len * h * d];
+            paged_prefill_rows_parallel(&cfg, &cache, 0, &q, q_len, base, &table, 1, &mut serial);
+            for threads in [2usize, 3, 8] {
+                let mut out = vec![0.0f32; q_len * h * d];
+                paged_prefill_rows_parallel(&cfg, &cache, 0, &q, q_len, base, &table, threads, &mut out);
+                assert_eq!(out, serial, "threads={threads} base={base} q_len={q_len}");
+            }
+        }
+    }
+
+    #[test]
+    fn streamed_prefill_q8_counts_tiles_and_tracks_f32() {
+        // Same tokens in an f32 and a q8 store: the streamed prefill
+        // outputs agree within quantization error (tight grid bounds
+        // live in tests/attention_parity.rs), and the q8 walk reports
+        // its dequantized tile count.
+        let (h, kvh, d, block_size) = (4usize, 2usize, 8usize, 4usize);
+        let cfg = AttnConfig { num_heads: h, num_kv_heads: kvh, head_dim: d, bias: Bias::Alibi };
+        let (base, q_len) = (5usize, 6usize);
+        let kv_len = base + q_len;
+        let num_blocks = kv_len.div_ceil(block_size) + 1;
+        let mut fcache = PagedKvCache::new(1, num_blocks, block_size, kvh, d);
+        let mut qcache = QuantizedPagedKvCache::new(1, num_blocks, block_size, kvh, d);
+        let mut alloc = BlockAllocator::new(num_blocks, block_size);
+        let mut table = BlockTable::new();
+        assert!(table.reserve(kv_len, &mut alloc));
+        let mut rng = Rng::new(61);
+        for _ in 0..kv_len {
+            let (b, s) = table.append_slot(block_size);
+            let k = rng.normal_vec(kvh * d, 1.0);
+            let v = rng.normal_vec(kvh * d, 1.0);
+            fcache.write_token(0, b, s, &k, &v);
+            qcache.write_token(0, b, s, &k, &v);
+        }
+        let q = rng.normal_vec(q_len * h * d, 1.0);
+        let mut ws = Workspace::new();
+        let mut f_out = vec![0.0f32; q_len * h * d];
+        let mut q_out = vec![0.0f32; q_len * h * d];
+        let f_tiles =
+            paged_prefill_attention_into(&cfg, &fcache, 0, &q, q_len, base, &table, &mut ws, &mut f_out);
+        let q_tiles =
+            paged_prefill_attention_into(&cfg, &qcache, 0, &q, q_len, base, &table, &mut ws, &mut q_out);
+        assert_eq!(f_tiles, 0);
+        assert_eq!(q_tiles, kv_len.div_ceil(block_size), "one dequant per visible tile");
+        for (a, b) in f_out.iter().zip(&q_out) {
+            assert!((a - b).abs() < 0.05, "{a} vs {b}");
+        }
+
+        // The parallel driver caps the q8 fan-out at one job per
+        // MIN_Q8_ROWS_PER_JOB rows, so total dequant work stays bounded
+        // even at an absurd requested width — and numerics never change.
+        let mut par_out = vec![0.0f32; q_len * h * d];
+        let par_tiles =
+            paged_prefill_rows_parallel(&cfg, &qcache, 0, &q, q_len, base, &table, 64, &mut par_out);
+        assert_eq!(par_out, q_out, "width must not change numerics");
+        let max_jobs = (q_len / MIN_Q8_ROWS_PER_JOB).max(1);
+        assert!(
+            par_tiles <= max_jobs * kv_len.div_ceil(block_size),
+            "q8 dequant amplification must be capped: {par_tiles}"
+        );
     }
 }

@@ -190,10 +190,12 @@ impl Engine {
     }
 
     /// Point-in-time cache statistics, including the pool's true byte
-    /// footprint (packed bytes for a Q8 cache).
+    /// footprint (packed bytes for a Q8 cache) and the dense-gather
+    /// byte counter (≈ 0: gather is a test/debug dump, not a hot path).
     pub fn cache_stats(&self) -> CacheStats {
         CacheStats::collect(&self.alloc, self.scheduler.live_tables())
             .with_pool_bytes(self.cache.pool_bytes())
+            .with_gather_bytes(self.cache.gather_bytes())
     }
 
     /// Prefix-cache counters (hits, misses, pinned blocks) if enabled.
@@ -227,6 +229,7 @@ impl Engine {
         self.metrics.prefix_hit_tokens = self.scheduler.prefix_hit_tokens;
         self.metrics.decode_stall_steps = self.scheduler.decode_stall_steps;
         self.metrics.peak_blocks = self.metrics.peak_blocks.max(self.alloc.num_used());
+        self.metrics.gather_bytes = self.cache.gather_bytes();
         worked
     }
 
@@ -293,6 +296,7 @@ impl Engine {
         self.metrics.mixed_steps += 1;
         self.metrics.prefill_steps += prefill.len(); // chunks executed
         self.metrics.prefill_chunk_tokens += prefill.iter().map(|c| c.len).sum::<usize>();
+        self.metrics.prefill_dequant_tiles += outs.prefill_dequant_tiles;
         if !decode.is_empty() {
             self.metrics.decode_steps += 1;
             self.metrics.decode_batch_tokens += decode.len();
@@ -589,6 +593,29 @@ mod tests {
         // 2 requests × 3 tokens → 4 recorded inter-token gaps.
         assert_eq!(e.metrics.inter_token_gaps.len(), 4);
         assert!(r.mean_inter_token_s >= 0.0);
+        // The paged-native prefill contract, observable: nothing on the
+        // serving path materialized a dense KV copy, and the f32 cache
+        // dequantized no tiles.
+        assert_eq!(r.gather_bytes, 0, "dense gather crept onto the hot path");
+        assert_eq!(e.cache_stats().gather_bytes, 0);
+        assert_eq!(r.prefill_dequant_tiles, 0, "f32 cache has nothing to dequantize");
+    }
+
+    #[test]
+    fn q8_engine_counts_prefill_dequant_tiles_and_stays_gather_free() {
+        let mut e = engine_with_dtype(32, KvCacheDtype::Q8);
+        e.add_request(vec![256; 20], params(3)).unwrap();
+        let r = e.run_to_completion();
+        assert_eq!(r.num_requests, 1);
+        assert_eq!(r.gather_bytes, 0, "q8 prefill must stream, not gather");
+        // 20 prompt tokens over 8-slot blocks: the streamed prefill
+        // dequantized at least ⌈20/8⌉ tiles per layer.
+        let min_tiles = 20usize.div_ceil(8) * e.backend.config().n_layers;
+        assert!(
+            r.prefill_dequant_tiles >= min_tiles,
+            "tiles {} < {min_tiles}",
+            r.prefill_dequant_tiles
+        );
     }
 
     /// The bit-exactness anchor for the whole refactor: interleaved

@@ -74,6 +74,17 @@ pub struct EngineMetrics {
     pub peak_blocks: usize,
     /// Prompt tokens skipped via prefix-cache block adoption (§III.C).
     pub prefix_hit_tokens: usize,
+    /// Quantized KV tiles dequantized by streamed prefill attention
+    /// (from `StepOutputs::prefill_dequant_tiles`; 0 on an f32 cache).
+    /// The paged-native prefill's work meter: tiles are dequantized in
+    /// place instead of materializing the context densely.
+    pub prefill_dequant_tiles: usize,
+    /// Dense f32 bytes the KV pool materialized via `KvStore::gather`
+    /// (mirrored from the cache each step). ≈ 0 in a healthy engine —
+    /// `gather` is a test/debug dump since the paged-native prefill
+    /// refactor; growth here means a dense KV copy crept back onto the
+    /// hot path.
+    pub gather_bytes: usize,
 }
 
 /// Max inter-token gap samples retained for percentiles (~512 KiB).
@@ -149,6 +160,8 @@ impl EngineMetrics {
             decode_stall_steps: self.decode_stall_steps,
             preemptions: self.preemptions,
             peak_blocks: self.peak_blocks,
+            prefill_dequant_tiles: self.prefill_dequant_tiles,
+            gather_bytes: self.gather_bytes,
         }
     }
 }
@@ -181,6 +194,12 @@ pub struct RunReport {
     pub decode_stall_steps: usize,
     pub preemptions: usize,
     pub peak_blocks: usize,
+    /// Quantized KV tiles dequantized in place by streamed prefill
+    /// attention (0 on an f32 cache) — the paged-native prefill meter.
+    pub prefill_dequant_tiles: usize,
+    /// Dense f32 bytes materialized by `KvStore::gather` — ≈ 0 in a
+    /// healthy engine (gather is test/debug only on the serving path).
+    pub gather_bytes: usize,
 }
 
 impl RunReport {

@@ -7,6 +7,7 @@
 
 use super::block_allocator::BlockId;
 use super::block_table::BlockTable;
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 /// Paged K/V storage for every layer of one model.
 ///
@@ -40,6 +41,10 @@ pub struct PagedKvCache {
     /// `keys[layer]` is the flat `[num_blocks, block_size, kv_heads, head_dim]` pool.
     keys: Vec<Vec<f32>>,
     values: Vec<Vec<f32>>,
+    /// Bytes materialized by [`PagedKvCache::gather`] since construction
+    /// — the `CacheStats::gather_bytes` observability feed. Stays 0 on
+    /// the serving hot path now that attention streams blocks in place.
+    gathered: AtomicUsize,
 }
 
 impl PagedKvCache {
@@ -59,6 +64,7 @@ impl PagedKvCache {
             head_dim,
             keys: (0..num_layers).map(|_| vec![0.0; pool]).collect(),
             values: (0..num_layers).map(|_| vec![0.0; pool]).collect(),
+            gathered: AtomicUsize::new(0),
         }
     }
 
@@ -141,9 +147,13 @@ impl PagedKvCache {
     }
 
     /// Gather a sequence's K and V into contiguous `[len, kv_heads*head_dim]`
-    /// buffers (native prefill attention and cross-checking use this).
+    /// buffers — a **test/debug dump** since the paged-native prefill
+    /// refactor (attention streams blocks in place; nothing on the
+    /// serving path calls this). Counted by
+    /// [`PagedKvCache::gather_bytes`] so regressions are measurable.
     pub fn gather(&self, layer: usize, table: &BlockTable) -> (Vec<f32>, Vec<f32>) {
         let d = self.kv_heads * self.head_dim;
+        self.gathered.fetch_add(2 * table.len() * d * 4, Ordering::Relaxed);
         let mut ks = Vec::with_capacity(table.len() * d);
         let mut vs = Vec::with_capacity(table.len() * d);
         for pos in 0..table.len() {
@@ -152,6 +162,11 @@ impl PagedKvCache {
             vs.extend_from_slice(self.value_token(layer, b, s));
         }
         (ks, vs)
+    }
+
+    /// Total f32 bytes materialized through [`PagedKvCache::gather`].
+    pub fn gather_bytes(&self) -> usize {
+        self.gathered.load(Ordering::Relaxed)
     }
 
     /// Raw per-layer pools (the XLA backend feeds these to the HLO as

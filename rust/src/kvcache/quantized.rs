@@ -39,6 +39,7 @@ use super::block_allocator::BlockId;
 use super::block_table::BlockTable;
 use crate::quant::packing::{self, levels_per_word};
 use crate::quant::QuantParams;
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 /// Field width the KV cache packs with (full bytes).
 pub const KV_PACK_BITS: u32 = 8;
@@ -158,6 +159,11 @@ pub struct QuantizedPagedKvCache {
     /// Requantization scratch (`head_dim` f32s) so range refits never
     /// allocate — decode steps stay allocation-free end to end.
     scratch: Vec<f32>,
+    /// Bytes materialized (dequantized to dense f32) by
+    /// [`QuantizedPagedKvCache::gather`] since construction — the
+    /// `CacheStats::gather_bytes` observability feed; 0 on the serving
+    /// hot path since the paged-native prefill refactor.
+    gathered: AtomicUsize,
 }
 
 impl QuantizedPagedKvCache {
@@ -183,6 +189,7 @@ impl QuantizedPagedKvCache {
                 .map(|_| QuantPlane::new(num_blocks, block_size, kv_heads, words_per_head))
                 .collect(),
             scratch: vec![0.0; head_dim],
+            gathered: AtomicUsize::new(0),
         }
     }
 
@@ -405,10 +412,13 @@ impl QuantizedPagedKvCache {
     }
 
     /// Gather a sequence's K and V into contiguous dense
-    /// `[len, kv_heads*head_dim]` buffers (dequantized) — the prefill
-    /// path, mirroring `PagedKvCache::gather`.
+    /// `[len, kv_heads*head_dim]` buffers (dequantized) — a **test/debug
+    /// dump** since the paged-native prefill refactor (attention
+    /// dequantizes tiles in place; nothing on the serving path calls
+    /// this). Counted by [`QuantizedPagedKvCache::gather_bytes`].
     pub fn gather(&self, layer: usize, table: &BlockTable) -> (Vec<f32>, Vec<f32>) {
         let d = self.kv_heads * self.head_dim;
+        self.gathered.fetch_add(2 * table.len() * d * 4, Ordering::Relaxed);
         let mut ks = vec![0.0f32; table.len() * d];
         let mut vs = vec![0.0f32; table.len() * d];
         for pos in 0..table.len() {
@@ -416,6 +426,12 @@ impl QuantizedPagedKvCache {
             self.dequant_token(layer, b, s, &mut ks[pos * d..(pos + 1) * d], &mut vs[pos * d..(pos + 1) * d]);
         }
         (ks, vs)
+    }
+
+    /// Total dense f32 bytes materialized through
+    /// [`QuantizedPagedKvCache::gather`].
+    pub fn gather_bytes(&self) -> usize {
+        self.gathered.load(Ordering::Relaxed)
     }
 
     /// Copy a block's contents — packed words, grids and ranges, all

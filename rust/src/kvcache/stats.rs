@@ -22,6 +22,12 @@ pub struct CacheStats {
     /// bytes otherwise. Zero when collected without a pool (allocator +
     /// tables only).
     pub pool_bytes: usize,
+    /// Dense f32 bytes the pool has materialized through
+    /// `KvStore::gather` — ≈ 0 in a healthy engine, since the
+    /// paged-native prefill refactor left `gather` as a test/debug dump
+    /// only. A growing value here means something reintroduced a dense
+    /// KV copy on the hot path. Zero when collected without a pool.
+    pub gather_bytes: usize,
 }
 
 impl CacheStats {
@@ -51,6 +57,7 @@ impl CacheStats {
             internal_frag,
             utilization: alloc.utilization(),
             pool_bytes: 0,
+            gather_bytes: 0,
         }
     }
 
@@ -58,6 +65,13 @@ impl CacheStats {
     /// calls this with its [`super::KvStore`]'s `pool_bytes()`).
     pub fn with_pool_bytes(mut self, bytes: usize) -> CacheStats {
         self.pool_bytes = bytes;
+        self
+    }
+
+    /// Attach the pool's dense-gather byte counter (builder-style; the
+    /// engine calls this with its [`super::KvStore`]'s `gather_bytes()`).
+    pub fn with_gather_bytes(mut self, bytes: usize) -> CacheStats {
+        self.gather_bytes = bytes;
         self
     }
 }
@@ -111,12 +125,34 @@ mod tests {
             .with_pool_bytes(KvStore::pool_bytes(&q8_cache));
         // f32: 2 sides × layers × blocks × slots × kvh × d × 4 bytes.
         assert_eq!(sf.pool_bytes, 2 * layers * blocks * bs * kvh * d * 4);
-        // q8: 1 payload byte per value + 16 grid/range bytes per
-        // (block, kv_head, side) per layer.
+        // q8: 1 payload byte per value + 20 grid/range/frontier bytes
+        // per (block, kv_head, side) per layer (scale, zero, lo, hi,
+        // fill frontier).
         let payload = 2 * layers * blocks * bs * kvh * d;
-        let grids = 2 * layers * blocks * kvh * 16;
+        let grids = 2 * layers * blocks * kvh * 20;
         assert_eq!(sq.pool_bytes, payload + grids);
         // The packed pool must be ≤ 0.3× the dense pool at this shape.
         assert!(10 * sq.pool_bytes <= 3 * sf.pool_bytes, "{} vs {}", sq.pool_bytes, sf.pool_bytes);
+    }
+
+    #[test]
+    fn gather_bytes_attaches_and_defaults_to_zero() {
+        use crate::kvcache::{KvStore, PagedKvCache};
+        let alloc = BlockAllocator::new(4, 4);
+        let cache = PagedKvCache::new(1, 4, 4, 1, 4);
+        let s = CacheStats::collect(&alloc, std::iter::empty());
+        assert_eq!(s.gather_bytes, 0, "no pool attached");
+        let s = s.with_gather_bytes(KvStore::gather_bytes(&cache));
+        assert_eq!(s.gather_bytes, 0, "fresh pool has gathered nothing");
+        let mut t = BlockTable::new();
+        let mut a2 = BlockAllocator::new(4, 4);
+        t.reserve(3, &mut a2);
+        for _ in 0..3 {
+            t.append_slot(4);
+        }
+        let _ = KvStore::gather(&cache, 0, &t);
+        let s = CacheStats::collect(&a2, [&t].into_iter())
+            .with_gather_bytes(KvStore::gather_bytes(&cache));
+        assert_eq!(s.gather_bytes, 2 * 3 * 4 * 4, "metered dump");
     }
 }

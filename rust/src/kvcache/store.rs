@@ -93,9 +93,19 @@ pub trait KvStore: Send + Sync + std::fmt::Debug {
     fn block_view(&self, layer: usize, block: BlockId) -> KvBlockView<'_>;
 
     /// Gather a sequence's K and V into contiguous dense
-    /// `[len, kv_heads*head_dim]` buffers (dequantized if packed) — the
-    /// prefill path.
+    /// `[len, kv_heads*head_dim]` buffers (dequantized if packed).
+    ///
+    /// **Test/debug dump only.** Since the paged-native prefill
+    /// refactor nothing on the serving path materializes a dense copy:
+    /// prefill and decode both stream tiles through
+    /// [`KvStore::block_view`]. Every call is counted by
+    /// [`KvStore::gather_bytes`], so a hot-path regression shows up in
+    /// `CacheStats::gather_bytes` (asserted ≈ 0 by the engine tests).
     fn gather(&self, layer: usize, table: &BlockTable) -> (Vec<f32>, Vec<f32>);
+
+    /// Total dense f32 bytes materialized through [`KvStore::gather`]
+    /// since construction — the `CacheStats::gather_bytes` feed.
+    fn gather_bytes(&self) -> usize;
 
     /// Downcast to the dense f32 pool, if that is what this store is.
     /// The XLA backend needs raw f32 pools to upload as device buffers.
@@ -143,6 +153,9 @@ impl KvStore for PagedKvCache {
     fn gather(&self, layer: usize, table: &BlockTable) -> (Vec<f32>, Vec<f32>) {
         PagedKvCache::gather(self, layer, table)
     }
+    fn gather_bytes(&self) -> usize {
+        PagedKvCache::gather_bytes(self)
+    }
     fn dense_f32(&self) -> Option<&PagedKvCache> {
         Some(self)
     }
@@ -186,6 +199,9 @@ impl KvStore for QuantizedPagedKvCache {
     fn gather(&self, layer: usize, table: &BlockTable) -> (Vec<f32>, Vec<f32>) {
         QuantizedPagedKvCache::gather(self, layer, table)
     }
+    fn gather_bytes(&self) -> usize {
+        QuantizedPagedKvCache::gather_bytes(self)
+    }
 }
 
 #[cfg(test)]
@@ -226,6 +242,7 @@ mod tests {
                 let x = t as f32 / 8.0;
                 cache.write_token(0, b, s, &[x; 8], &[-x; 8]);
             }
+            assert_eq!(cache.gather_bytes(), 0, "{dtype:?}: no gather yet");
             let (ks, vs) = cache.gather(0, &table);
             assert_eq!(ks.len(), 6 * 8);
             for t in 0..6 {
@@ -233,6 +250,9 @@ mod tests {
                 assert!((ks[t * 8] - x).abs() < 0.01, "{dtype:?} k t={t}");
                 assert!((vs[t * 8] + x).abs() < 0.01, "{dtype:?} v t={t}");
             }
+            // The debug dump is metered: 6 tokens × 8 values × 4 bytes,
+            // both sides.
+            assert_eq!(cache.gather_bytes(), 2 * 6 * 8 * 4, "{dtype:?}: gather_bytes");
         }
     }
 }

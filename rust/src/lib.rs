@@ -27,7 +27,7 @@
 //! | [`quant`] | GPTQ (Hessian/Cholesky, error propagation), RTN baseline, int4/int8 packing |
 //! | [`attention`] | block-tiled group-major kernel core ([`attention::kernel`]) + MHA / GQA / ALiBi / paged drivers |
 //! | [`model`] | Llama-architecture config, weights, native forward, sampler |
-//! | [`runtime`] | PJRT client (stubbed offline), artifact manifest, `Backend` trait with the `forward_step` mixed-batch entry point (Native / Xla) |
+//! | [`runtime`] | PJRT client (stubbed offline), artifact manifest, the persistent worker pool (`runtime::pool`), `Backend` trait with the `forward_step` mixed-batch entry point (Native / Xla) |
 //! | [`coordinator`] | sequence state machine, token-budget mixed-step scheduler (interleaved chunked prefill), batcher, router, engine, metrics |
 //! | [`server`] | threaded TCP/HTTP front-end speaking the JSON API |
 //! | [`workload`] | synthetic request-trace generator (Poisson arrivals) |
@@ -54,39 +54,46 @@
 //! schedule, so outputs never depend on the budget (enforced by
 //! `coordinator::engine` tests).
 //!
-//! ## Attention kernel core and threading model
+//! ## Attention kernel core and the worker-pool threading model
 //!
-//! Both native attention paths — contiguous prefill and paged decode —
-//! are thin drivers over one block-tiled, group-major, online-softmax
-//! kernel ([`attention::kernel`]). Scratch lives in a reusable
-//! [`attention::Workspace`]; the contract is that callers may (and
-//! should) reuse one workspace across calls of any shape, making
-//! steady-state attention allocation-free. The allocating wrappers
-//! route through a thread-local workspace.
+//! Both native attention paths — paged-native prefill and paged decode
+//! — are thin drivers over one block-tiled, group-major, online-softmax
+//! kernel ([`attention::kernel`]); cache blocks are the kernel's tiles
+//! on both. Scratch lives in a reusable [`attention::Workspace`]; the
+//! contract is that callers may (and should) reuse one workspace across
+//! calls of any shape, making steady-state attention allocation-free.
+//! The allocating wrappers route through a thread-local workspace.
 //!
 //! `NativeBackend::forward_step` executes a continuous-batching mixed
 //! step as one pass: weights stream from memory once per **step**
 //! across prefill-chunk rows and decode rows alike
-//! (`NativeModel::forward_mixed`), per-sequence paged decode attention
-//! fans out across a scoped thread pool (`std::thread::scope`) with one
-//! private workspace per worker, and prefill query rows fan out over
-//! the same pattern (`attention::gqa::gqa_attention_rows_parallel`) —
-//! auto-sized, pinnable via `NativeBackend::with_decode_threads`, and
-//! bit-identical to serial execution at every width.
+//! (`NativeModel::forward_mixed`), and both attention fan-outs run on
+//! the **persistent worker pool** ([`runtime::pool`]) — workers spawned
+//! once and parked while idle, so the per-layer cost is a job dispatch,
+//! not a thread spawn; each worker's thread-local workspace lives
+//! across jobs, layers and steps. Fan-out *widths* partition the work:
+//! auto-sized (`auto_decode_threads` / `auto_prefill_threads`),
+//! pinnable via `NativeBackend::with_decode_threads` /
+//! `with_prefill_threads`, and bit-identical to serial execution at
+//! every width and every pool size.
 //!
-//! ## KV storage dtypes
+//! ## KV storage dtypes — no dense copies
 //!
 //! The engine reads and writes KV through the [`kvcache::KvStore`]
 //! trait; `EngineConfig::kv_dtype` picks dense f32
 //! ([`kvcache::PagedKvCache`]) or packed 8-bit
 //! ([`kvcache::QuantizedPagedKvCache`]: quantize-on-append,
-//! per-(block, kv_head) grids, ~0.26× the pool bytes). Quantized blocks
-//! are dequantized **per tile inside the kernel** into workspace scratch
-//! (`Workspace::process_quant_tile`), so both dtypes share one attention
-//! schedule and the zero-alloc contract; `tests/attention_parity.rs`
-//! bounds the quantized path's output error and
-//! `tests/alloc_steadystate.rs` audits the allocation contract with a
-//! counting allocator.
+//! per-(block, kv_head) grids, ~0.26× the pool bytes). Both prefill and
+//! decode walk KV tiles straight out of the block table
+//! (`KvBlockView`): quantized blocks are dequantized **per tile inside
+//! the kernel** into workspace scratch — on the prefill walk once per
+//! tile, shared by every query row that sees it — so both dtypes share
+//! one attention schedule, the zero-alloc contract, and a hot path
+//! that never materializes the context densely (`KvStore::gather` is a
+//! metered test/debug dump; `CacheStats::gather_bytes` ≈ 0).
+//! `tests/attention_parity.rs` bounds the quantized path's output error
+//! (decode and streamed prefill) and `tests/alloc_steadystate.rs`
+//! audits the allocation contract with a counting allocator.
 
 pub mod attention;
 pub mod coordinator;

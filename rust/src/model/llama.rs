@@ -3,14 +3,18 @@
 //! This is the reference/fast-CPU implementation of the same computation
 //! the AOT-lowered HLO performs (`python/compile/model.py`): RMSNorm →
 //! GQA attention (ALiBi) → RMSNorm → SwiGLU, residuals throughout, no
-//! positional embeddings (ALiBi carries position). Prefill attends
-//! contiguously over gathered K/V; decode uses blockwise paged attention
-//! with online softmax — mirroring the Pallas kernel's schedule.
+//! positional embeddings (ALiBi carries position). Both prefill and
+//! decode attend **paged-natively**: KV tiles stream straight out of the
+//! block table (blockwise online softmax, in-tile dequant on a Q8
+//! store) — mirroring the Pallas kernel's schedule. No dense KV copy is
+//! ever materialized on the forward path.
 
 use super::config::ModelConfig;
 use super::weights::ModelWeights;
-use crate::attention::gqa::{auto_prefill_threads, gqa_attention, gqa_attention_rows_parallel};
-use crate::attention::paged::{auto_decode_threads, paged_decode_batch};
+use crate::attention::gqa::{auto_prefill_threads, gqa_attention};
+use crate::attention::paged::{
+    auto_decode_threads, paged_decode_batch, paged_prefill_rows_parallel,
+};
 use crate::kvcache::{BlockTable, KvStore};
 use crate::tensor::{rmsnorm, Tensor};
 
@@ -56,14 +60,32 @@ impl NativeModel {
     /// earlier cache content. Returns the **last** position's logits
     /// (`[vocab]`).
     ///
-    /// Works over any [`KvStore`]: on a quantized cache, K/V are
-    /// quantized on append and `gather` dequantizes the visible context
-    /// for the contiguous attention pass.
+    /// Works over any [`KvStore`] and never materializes the context
+    /// densely: attention streams KV tiles straight out of the block
+    /// table (on a quantized cache, tiles are dequantized once each into
+    /// workspace scratch — `KvStore::gather` is off the forward path).
     pub fn prefill(
         &self,
         tokens: &[u32],
         cache: &mut dyn KvStore,
         table: &mut BlockTable,
+    ) -> Vec<f32> {
+        self.prefill_with(tokens, cache, table, None)
+    }
+
+    /// [`Self::prefill`] with an explicit attention fan-out width.
+    ///
+    /// `threads == Some(1)` forces the serial walk; `None` (or `Some(0)`)
+    /// auto-sizes from the chunk's score work and the available cores
+    /// ([`auto_prefill_threads`]). Outputs are bit-identical across all
+    /// widths, so this is purely a performance knob (see
+    /// `NativeBackend::with_prefill_threads`).
+    pub fn prefill_with(
+        &self,
+        tokens: &[u32],
+        cache: &mut dyn KvStore,
+        table: &mut BlockTable,
+        threads: Option<usize>,
     ) -> Vec<f32> {
         assert!(!tokens.is_empty());
         let cfg = self.config();
@@ -74,7 +96,8 @@ impl NativeModel {
         let slots: Vec<_> = (0..n).map(|_| table.append_slot(cache.block_size())).collect();
         // Layer-invariant attention fan-out width (sized once, not per
         // layer).
-        let threads = auto_prefill_threads(n, base + n);
+        let threads =
+            threads.filter(|&t| t > 0).unwrap_or_else(|| auto_prefill_threads(n, base + n));
 
         let mut x = self.embed_tokens(tokens);
         for li in 0..cfg.n_layers {
@@ -88,19 +111,18 @@ impl NativeModel {
             for (i, &(b, s)) in slots.iter().enumerate() {
                 cache.write_token(li, b, s, &k.data()[i * kvd..(i + 1) * kvd], &v.data()[i * kvd..(i + 1) * kvd]);
             }
-            // Gather the full visible context (base + new) contiguously
-            // and fan the query rows across scoped workers (bit-identical
-            // to the serial loop at every width).
-            let (k_all, v_all) = cache.gather(li, table);
+            // Stream the visible context (base + new) straight out of the
+            // paged store, fanning query rows across the persistent
+            // worker pool (bit-identical to serial at every width).
             let mut attn = vec![0.0f32; n * cfg.d_model];
-            gqa_attention_rows_parallel(
+            paged_prefill_rows_parallel(
                 &cfg.attn_config(),
+                &*cache,
+                li,
                 q.data(),
-                &k_all,
-                &v_all,
                 n,
-                base + n,
                 base,
+                table,
                 threads,
                 &mut attn,
             );
@@ -221,15 +243,19 @@ impl NativeModel {
     /// * `decode_tokens[j]` appends one slot to `decode_tables[j]`.
     ///
     /// A sequence must appear at most once across both lists. Attention
-    /// stays per-sequence: each chunk's query rows fan out across scoped
-    /// workers ([`gqa_attention_rows_parallel`]) and decode rows go
-    /// through the paged fan-out ([`paged_decode_batch`]), so every row
-    /// is **bit-identical** to running the chunks and the decode batch
-    /// as separate calls at the same cache state — interleaving never
-    /// perturbs sampling.
+    /// stays per-sequence and paged-native: each chunk's query rows fan
+    /// out across the persistent worker pool, streaming KV tiles out of
+    /// the block table ([`paged_prefill_rows_parallel`] — no dense
+    /// gather), and decode rows go through the paged fan-out
+    /// ([`paged_decode_batch`]), so every row is **bit-identical** to
+    /// running the chunks and the decode batch as separate calls at the
+    /// same cache state — interleaving never perturbs sampling.
     ///
     /// Returns (per-chunk last-position logits — `Some` iff wanted —
-    /// and per-decode logits).
+    /// per-decode logits, and the number of quantized KV tiles the
+    /// prefill side dequantized — 0 on an f32 cache; the
+    /// `EngineMetrics::prefill_dequant_tiles` feed).
+    #[allow(clippy::too_many_arguments)]
     pub fn forward_mixed(
         &self,
         chunk_tokens: &[&[u32]],
@@ -238,8 +264,9 @@ impl NativeModel {
         decode_tokens: &[u32],
         decode_tables: &mut [&mut BlockTable],
         cache: &mut dyn KvStore,
+        prefill_threads: Option<usize>,
         decode_threads: Option<usize>,
-    ) -> (Vec<Option<Vec<f32>>>, Vec<Vec<f32>>) {
+    ) -> (Vec<Option<Vec<f32>>>, Vec<Vec<f32>>, usize) {
         let cfg = self.config();
         let n_c = chunk_tokens.len();
         assert_eq!(n_c, chunk_tables.len());
@@ -250,11 +277,12 @@ impl NativeModel {
         // numerics; also the path audited by the zero-alloc test).
         if n_c == 0 {
             if n_d == 0 {
-                return (Vec::new(), Vec::new());
+                return (Vec::new(), Vec::new(), 0);
             }
             return (
                 Vec::new(),
                 self.decode_batch_with(decode_tokens, cache, decode_tables, decode_threads),
+                0,
             );
         }
         let chunk_rows: Vec<usize> = chunk_tokens.iter().map(|t| t.len()).collect();
@@ -291,14 +319,19 @@ impl NativeModel {
         let threads_d =
             decode_threads.unwrap_or_else(|| auto_decode_threads(n_d, total_decode_kv));
         // Fan-out widths are layer-invariant: size them once per chunk,
-        // not once per (layer, chunk).
-        let threads_c: Vec<usize> = chunk_rows
-            .iter()
-            .zip(&chunk_base)
-            .map(|(&rows, &base)| auto_prefill_threads(rows, base + rows))
-            .collect();
+        // not once per (layer, chunk). A pinned prefill width applies to
+        // every chunk.
+        let threads_c: Vec<usize> = match prefill_threads.filter(|&t| t > 0) {
+            Some(t) => vec![t; n_c],
+            None => chunk_rows
+                .iter()
+                .zip(&chunk_base)
+                .map(|(&rows, &base)| auto_prefill_threads(rows, base + rows))
+                .collect(),
+        };
         let acfg = cfg.attn_config();
         let row = cfg.d_model;
+        let mut dequant_tiles = 0usize;
 
         let mut x = self.embed_tokens(&all_tokens); // [n, d]
         let mut attn = Tensor::zeros(&[n, cfg.d_model]);
@@ -317,22 +350,21 @@ impl NativeModel {
                     &v.data()[i * kvd..(i + 1) * kvd],
                 );
             }
-            // Prefill chunks: gather each chunk's visible context and
-            // fan its query rows across scoped workers.
+            // Prefill chunks: stream each chunk's visible context tile
+            // by tile out of the paged store (no dense gather) and fan
+            // its query rows across the persistent worker pool.
             let mut r0 = 0usize;
             for ci in 0..n_c {
                 let rows = chunk_rows[ci];
                 let base = chunk_base[ci];
-                let kv_len = base + rows;
-                let (k_all, v_all) = cache.gather(li, c_tables[ci]);
-                gqa_attention_rows_parallel(
+                dequant_tiles += paged_prefill_rows_parallel(
                     &acfg,
+                    &*cache,
+                    li,
                     &q.data()[r0 * row..(r0 + rows) * row],
-                    &k_all,
-                    &v_all,
                     rows,
-                    kv_len,
                     base,
+                    c_tables[ci],
                     threads_c[ci],
                     &mut attn.data_mut()[r0 * row..(r0 + rows) * row],
                 );
@@ -373,7 +405,7 @@ impl NativeModel {
         }
         if sel_rows.is_empty() {
             // Only mid-flight chunks this step: no logits needed at all.
-            return (vec![None; n_c], Vec::new());
+            return (vec![None; n_c], Vec::new(), dequant_tiles);
         }
         let mut sel = Vec::with_capacity(sel_rows.len() * cfg.d_model);
         for &r in &sel_rows {
@@ -393,7 +425,7 @@ impl NativeModel {
             })
             .collect();
         let decode_logits = (0..n_d).map(|i| logits.row(n_want + i).to_vec()).collect();
-        (chunk_logits, decode_logits)
+        (chunk_logits, decode_logits, dequant_tiles)
     }
 
     /// Final norm + LM head on the last row only (decode never needs the
@@ -545,6 +577,30 @@ mod tests {
     }
 
     #[test]
+    fn prefill_threads_are_bit_identical_and_gather_free() {
+        // The prefill fan-out width must never change logits or cache
+        // contents, and the streamed path must leave the dense-gather
+        // counter untouched (gather is test/debug only now).
+        let run = |threads: Option<usize>| {
+            let (model, mut cache, mut alloc) = mk(19);
+            let mut table = BlockTable::new();
+            table.reserve(16, &mut alloc);
+            let tokens: Vec<u32> = (0..12).map(|i| 256 + (i % 200)).collect();
+            let logits = model.prefill_with(&tokens, &mut cache, &mut table, threads);
+            assert_eq!(
+                crate::kvcache::KvStore::gather_bytes(&cache),
+                0,
+                "prefill must not touch KvStore::gather"
+            );
+            let dump = cache.gather(0, &table);
+            (logits, dump)
+        };
+        let serial = run(Some(1));
+        assert_eq!(serial, run(Some(3)));
+        assert_eq!(serial, run(None));
+    }
+
+    #[test]
     fn forward_mixed_is_bit_identical_to_separate_calls() {
         // A mixed step (one mid-flight prefill chunk + a decode batch)
         // must equal running the chunk and the decode as separate calls
@@ -583,13 +639,14 @@ mod tests {
 
             let mut cache_mix = mk_cache();
             let (mut ta2, mut tb2) = setup(cache_mix.as_mut());
-            let (chunk_logits, dec_logits) = model.forward_mixed(
+            let (chunk_logits, dec_logits, dq_tiles) = model.forward_mixed(
                 &[&b_tokens[3..]],
                 &mut [&mut tb2],
                 &[true],
                 &[4],
                 &mut [&mut ta2],
                 cache_mix.as_mut(),
+                Some(1),
                 Some(1),
             );
             assert_eq!(
@@ -598,6 +655,11 @@ mod tests {
                 "quant={quant}: chunk logits diverged"
             );
             assert_eq!(dec_logits[0], dec_ref, "quant={quant}: decode logits diverged");
+            assert_eq!(
+                dq_tiles > 0,
+                quant,
+                "prefill dequant tiles counted iff the cache is packed"
+            );
             // Cache contents match too (gathers are dense dumps).
             for li in 0..cfg.n_layers {
                 assert_eq!(cache_ref.gather(li, &tb1), cache_mix.gather(li, &tb2), "layer {li}");
@@ -634,6 +696,7 @@ mod tests {
                 &mut [&mut t_d1, &mut t_d2],
                 &mut cache,
                 threads,
+                threads,
             )
         };
         let serial = run(Some(1));
@@ -641,6 +704,7 @@ mod tests {
         assert_eq!(serial, run(None));
         assert_eq!(serial.0.len(), 2);
         assert_eq!(serial.1.len(), 2);
+        assert_eq!(serial.2, 0, "f32 cache dequantizes no tiles");
         assert!(serial.0[0].as_ref().unwrap().iter().all(|v| v.is_finite()));
     }
 

@@ -43,6 +43,10 @@ pub struct StepOutputs {
     pub prefill_logits: Vec<Option<Vec<f32>>>,
     /// One logits vector per decode item, in order.
     pub decode_logits: Vec<Vec<f32>>,
+    /// Quantized KV tiles dequantized by the step's streamed prefill
+    /// attention (0 on an f32 cache or a backend without the counter) —
+    /// mirrored into `EngineMetrics::prefill_dequant_tiles`.
+    pub prefill_dequant_tiles: usize,
 }
 
 /// A model-execution backend the engine can drive.
@@ -87,7 +91,7 @@ pub trait Backend: Send {
         } else {
             self.decode(&mut batch.decode, cache)
         };
-        StepOutputs { prefill_logits, decode_logits }
+        StepOutputs { prefill_logits, decode_logits, prefill_dequant_tiles: 0 }
     }
 
     /// Whether `forward_step` executes interleaved chunked prefill
@@ -127,11 +131,17 @@ pub struct NativeBackend {
     /// batch's KV footprint and available cores (see
     /// `attention::paged::auto_decode_threads`); any other value pins it.
     decode_threads: usize,
+    /// Attention fan-out width for prefill chunk rows: `0` auto-sizes
+    /// per chunk from its score work (see
+    /// `attention::gqa::auto_prefill_threads`); any other value pins
+    /// every chunk's width. Widths partition work across the persistent
+    /// worker pool (`crate::runtime::pool`); they do not spawn threads.
+    prefill_threads: usize,
 }
 
 impl NativeBackend {
     pub fn new(model: NativeModel) -> Self {
-        NativeBackend { model, decode_threads: 0 }
+        NativeBackend { model, decode_threads: 0, prefill_threads: 0 }
     }
 
     /// Pin the decode attention fan-out (`0` restores auto-sizing).
@@ -140,6 +150,31 @@ impl NativeBackend {
     pub fn with_decode_threads(mut self, threads: usize) -> Self {
         self.decode_threads = threads;
         self
+    }
+
+    /// Pin the prefill attention fan-out (`0` restores auto-sizing) —
+    /// the prefill twin of [`NativeBackend::with_decode_threads`], and
+    /// bit-identical across widths for the same reason. On a Q8 cache
+    /// the pinned width acts as an upper bound: the driver additionally
+    /// caps jobs at `attention::paged::MIN_Q8_ROWS_PER_JOB` rows each so
+    /// per-job tile re-dequantization stays amortized.
+    pub fn with_prefill_threads(mut self, threads: usize) -> Self {
+        self.prefill_threads = threads;
+        self
+    }
+
+    fn prefill_width(&self) -> Option<usize> {
+        match self.prefill_threads {
+            0 => None,
+            t => Some(t),
+        }
+    }
+
+    fn decode_width(&self) -> Option<usize> {
+        match self.decode_threads {
+            0 => None,
+            t => Some(t),
+        }
     }
 
     pub fn model(&self) -> &NativeModel {
@@ -158,28 +193,27 @@ impl Backend for NativeBackend {
         cache: &mut dyn KvStore,
         table: &mut BlockTable,
     ) -> Vec<f32> {
-        self.model.prefill(tokens, cache, table)
+        self.model.prefill_with(tokens, cache, table, self.prefill_width())
     }
 
     fn decode(&self, items: &mut [DecodeItem<'_>], cache: &mut dyn KvStore) -> Vec<Vec<f32>> {
         // One joint pass: weights are streamed once per STEP, not once per
         // sequence (see NativeModel::decode_batch), and the per-sequence
-        // attention fans out across cores with per-worker workspaces.
+        // attention fans out across the persistent worker pool with
+        // per-worker workspaces.
         let tokens: Vec<u32> = items.iter().map(|i| i.token).collect();
         let mut tables: Vec<&mut BlockTable> =
             items.iter_mut().map(|i| &mut *i.table).collect();
-        let threads = match self.decode_threads {
-            0 => None,
-            t => Some(t),
-        };
-        self.model.decode_batch_with(&tokens, cache, &mut tables, threads)
+        self.model.decode_batch_with(&tokens, cache, &mut tables, self.decode_width())
     }
 
     fn forward_step(&self, batch: &mut MixedBatch<'_>, cache: &mut dyn KvStore) -> StepOutputs {
         // One fused pass (see `NativeModel::forward_mixed`): prefill
         // chunk rows and decode rows share every matmul, so weights
         // stream from memory once per STEP across both kinds of work,
-        // and both attention paths fan out across scoped workers.
+        // and both attention paths fan out across the persistent worker
+        // pool (prefill streaming KV tiles straight out of the paged
+        // store — no dense gather).
         let want: Vec<bool> = batch.prefill.iter().map(|c| c.want_logits).collect();
         let chunk_tokens: Vec<&[u32]> = batch.prefill.iter().map(|c| c.tokens).collect();
         let mut chunk_tables: Vec<&mut BlockTable> =
@@ -187,20 +221,17 @@ impl Backend for NativeBackend {
         let decode_tokens: Vec<u32> = batch.decode.iter().map(|i| i.token).collect();
         let mut decode_tables: Vec<&mut BlockTable> =
             batch.decode.iter_mut().map(|i| &mut *i.table).collect();
-        let threads = match self.decode_threads {
-            0 => None,
-            t => Some(t),
-        };
-        let (prefill_logits, decode_logits) = self.model.forward_mixed(
+        let (prefill_logits, decode_logits, prefill_dequant_tiles) = self.model.forward_mixed(
             &chunk_tokens,
             &mut chunk_tables,
             &want,
             &decode_tokens,
             &mut decode_tables,
             cache,
-            threads,
+            self.prefill_width(),
+            self.decode_width(),
         );
-        StepOutputs { prefill_logits, decode_logits }
+        StepOutputs { prefill_logits, decode_logits, prefill_dequant_tiles }
     }
 
     fn supports_mixed_step(&self) -> bool {

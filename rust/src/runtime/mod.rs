@@ -10,12 +10,18 @@
 //!   JAX/Pallas → HLO → Rust path end-to-end. The offline build links
 //!   the in-tree [`pjrt_stub`] (compiles everywhere, fails fast at
 //!   runtime); swap it for a real PJRT binding to execute artifacts.
+//!
+//! [`pool`] holds the persistent worker pool both native attention
+//! fan-outs (prefill rows, decode batches) run on — spawned once,
+//! parked while idle, per-worker thread-local workspaces.
 
 pub mod artifacts;
 pub mod backend;
 pub mod pjrt_stub;
+pub mod pool;
 pub mod xla_backend;
 
 pub use artifacts::{ArtifactManifest, BucketSpec};
 pub use backend::{Backend, DecodeItem, MixedBatch, NativeBackend, PrefillChunkItem, StepOutputs};
+pub use pool::WorkerPool;
 pub use xla_backend::XlaBackend;

@@ -1,0 +1,382 @@
+//! Persistent, std-only worker pool — the spawn amortizer behind every
+//! parallel attention fan-out.
+//!
+//! Before this module the model drivers paid one `std::thread::scope`
+//! spawn-and-join per **layer** per step (prefill chunks and decode
+//! batches alike): a 32-layer model spawned and tore down hundreds of
+//! OS threads per engine step. The pool replaces that with a fixed set
+//! of workers, spawned once and **parked** on a condvar while idle;
+//! submitting a batch of jobs is a queue push plus a wakeup.
+//!
+//! ## Contract
+//!
+//! * [`WorkerPool::run`] submits a batch of borrowed jobs and **blocks
+//!   until every job has finished** — that barrier is what makes the
+//!   lifetime-erasure sound (see the safety comment in `run`), and it is
+//!   the same semantics the old scoped spawn had, so callers did not
+//!   change shape.
+//! * **Determinism** — the pool never influences results: callers
+//!   partition work into jobs *before* submission (the partition depends
+//!   only on the requested width, exactly as with scoped spawns), jobs
+//!   write disjoint output slices, and a job's arithmetic does not
+//!   depend on which worker runs it. Outputs are bit-identical at every
+//!   pool size and every width.
+//! * **Per-worker workspaces** — workers are persistent threads, so the
+//!   attention kernel's thread-local [`crate::attention::Workspace`]
+//!   (reached via `with_workspace` inside a job) lives across jobs,
+//!   layers and steps: scratch grows once per worker and is never
+//!   reallocated, where the scoped spawns built a fresh workspace per
+//!   worker per layer.
+//! * **Panics propagate** — a panicking job does not poison the pool;
+//!   the first panic payload is re-raised from `run` after the batch
+//!   drains.
+//!
+//! ## Sizing and pinning
+//!
+//! [`global`] holds the process-wide pool, sized to
+//! `available_parallelism` and spawned lazily on first use. How many
+//! *jobs* a call fans out into is the caller's width knob — sized by
+//! `attention::paged::auto_decode_threads` /
+//! `attention::gqa::auto_prefill_threads`, pinnable via
+//! `NativeBackend::with_decode_threads` / `with_prefill_threads` — and
+//! may exceed the worker count (jobs queue and drain). Tests that need
+//! an isolated pool construct their own [`WorkerPool::new`].
+
+use std::cell::Cell;
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock, PoisonError};
+use std::thread;
+
+thread_local! {
+    /// True on pool worker threads — the re-entrancy guard behind
+    /// [`WorkerPool::run`]'s no-nesting contract (a worker blocking on a
+    /// nested batch could deadlock the pool once every worker does it).
+    static IN_POOL_WORKER: Cell<bool> = const { Cell::new(false) };
+}
+
+/// One borrowed unit of work. Jobs run exactly once on some pool worker;
+/// worker threads are persistent, so thread-local state (notably the
+/// attention workspace) survives across jobs.
+pub type Job<'a> = Box<dyn FnOnce() + Send + 'a>;
+
+type StaticJob = Box<dyn FnOnce() + Send + 'static>;
+type PanicPayload = Box<dyn std::any::Any + Send + 'static>;
+
+/// Completion tracking for one `run` batch (several batches may be in
+/// flight from different submitter threads; each tracks its own).
+struct Batch {
+    state: Mutex<BatchState>,
+    done: Condvar,
+}
+
+struct BatchState {
+    remaining: usize,
+    panic: Option<PanicPayload>,
+}
+
+struct Inner {
+    queue: VecDeque<(StaticJob, Arc<Batch>)>,
+    shutdown: bool,
+}
+
+struct Shared {
+    inner: Mutex<Inner>,
+    work: Condvar,
+}
+
+/// A fixed set of parked worker threads accepting scoped job batches.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    handles: Vec<thread::JoinHandle<()>>,
+}
+
+/// Lock a mutex, shrugging off poisoning: the pool holds its locks only
+/// around queue/counter updates (never around user code), so a poisoned
+/// lock's data is still consistent.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+impl WorkerPool {
+    /// Spawn a pool of `workers` parked threads (clamped to ≥ 1).
+    pub fn new(workers: usize) -> WorkerPool {
+        let workers = workers.max(1);
+        let shared = Arc::new(Shared {
+            inner: Mutex::new(Inner { queue: VecDeque::new(), shutdown: false }),
+            work: Condvar::new(),
+        });
+        let handles = (0..workers)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                thread::Builder::new()
+                    .name(format!("opt-gptq-pool-{i}"))
+                    .spawn(move || worker_loop(shared))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        WorkerPool { shared, handles }
+    }
+
+    /// Number of worker threads.
+    pub fn size(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Run a batch of borrowed jobs to completion.
+    ///
+    /// Blocks until every job has finished (the scoped-spawn barrier,
+    /// without the spawns). If any job panicked, the first panic payload
+    /// is re-raised here once the whole batch has drained; the pool
+    /// itself stays usable.
+    ///
+    /// **Must not be called from inside a pool job**: a worker blocking
+    /// on a nested batch occupies its slot, and once every worker does
+    /// so the queue can never drain. The contract is enforced — calling
+    /// `run` on a worker thread panics immediately (an explicit failure
+    /// instead of a silent process hang).
+    pub fn run(&self, jobs: Vec<Job<'_>>) {
+        assert!(
+            !IN_POOL_WORKER.with(Cell::get),
+            "WorkerPool::run called from inside a pool job — nested batches would deadlock \
+             the pool; restructure the caller to submit one flat batch"
+        );
+        if jobs.is_empty() {
+            return;
+        }
+        let batch = Arc::new(Batch {
+            state: Mutex::new(BatchState { remaining: jobs.len(), panic: None }),
+            done: Condvar::new(),
+        });
+        {
+            let mut inner = lock(&self.shared.inner);
+            for job in jobs {
+                // SAFETY: this function blocks below until `remaining`
+                // reaches zero, and a job's count is decremented only
+                // *after* the job has returned (or panicked), so every
+                // borrow captured by the job strictly outlives its
+                // execution. The transmute erases only the lifetime;
+                // the trait object's layout and vtable are unchanged.
+                let job: StaticJob = unsafe { std::mem::transmute::<Job<'_>, StaticJob>(job) };
+                inner.queue.push_back((job, Arc::clone(&batch)));
+            }
+            self.shared.work.notify_all();
+        }
+        let mut st = lock(&batch.state);
+        while st.remaining > 0 {
+            st = batch.done.wait(st).unwrap_or_else(PoisonError::into_inner);
+        }
+        if let Some(p) = st.panic.take() {
+            drop(st);
+            resume_unwind(p);
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut inner = lock(&self.shared.inner);
+            inner.shutdown = true;
+        }
+        self.shared.work.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl std::fmt::Debug for WorkerPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("WorkerPool").field("workers", &self.handles.len()).finish()
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    IN_POOL_WORKER.with(|c| c.set(true));
+    loop {
+        let (job, batch) = {
+            let mut inner = lock(&shared.inner);
+            loop {
+                if let Some(item) = inner.queue.pop_front() {
+                    break item;
+                }
+                if inner.shutdown {
+                    return;
+                }
+                inner = shared.work.wait(inner).unwrap_or_else(PoisonError::into_inner);
+            }
+        };
+        let result = catch_unwind(AssertUnwindSafe(job));
+        let mut st = lock(&batch.state);
+        st.remaining -= 1;
+        if let Err(p) = result {
+            st.panic.get_or_insert(p);
+        }
+        if st.remaining == 0 {
+            batch.done.notify_all();
+        }
+    }
+}
+
+/// The process-wide pool: sized to `available_parallelism`, spawned
+/// lazily on the first parallel attention call, parked while idle, and
+/// never torn down (workers exit with the process).
+pub fn global() -> &'static WorkerPool {
+    static POOL: OnceLock<WorkerPool> = OnceLock::new();
+    POOL.get_or_init(|| {
+        WorkerPool::new(thread::available_parallelism().map(|p| p.get()).unwrap_or(1))
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_all_jobs_over_borrowed_disjoint_slices() {
+        let pool = WorkerPool::new(3);
+        let mut data = vec![0u64; 64];
+        let mut jobs: Vec<Job<'_>> = Vec::new();
+        let mut rest = data.as_mut_slice();
+        let mut base = 0u64;
+        while !rest.is_empty() {
+            let take = rest.len().min(10);
+            let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(take);
+            rest = tail;
+            let b = base;
+            jobs.push(Box::new(move || {
+                for (i, x) in chunk.iter_mut().enumerate() {
+                    *x = b + i as u64;
+                }
+            }));
+            base += take as u64;
+        }
+        pool.run(jobs);
+        for (i, &x) in data.iter().enumerate() {
+            assert_eq!(x, i as u64);
+        }
+    }
+
+    #[test]
+    fn more_jobs_than_workers_all_complete() {
+        let pool = WorkerPool::new(2);
+        assert_eq!(pool.size(), 2);
+        let hits = AtomicUsize::new(0);
+        let jobs: Vec<Job<'_>> = (0..37)
+            .map(|_| {
+                Box::new(|| {
+                    hits.fetch_add(1, Ordering::Relaxed);
+                }) as Job<'_>
+            })
+            .collect();
+        pool.run(jobs);
+        assert_eq!(hits.load(Ordering::Relaxed), 37);
+    }
+
+    #[test]
+    fn workers_persist_across_batches() {
+        // The whole point of the pool: the second batch runs on the SAME
+        // threads as the first (thread-local workspaces survive).
+        let pool = WorkerPool::new(2);
+        let collect_ids = || {
+            let ids = Mutex::new(std::collections::HashSet::new());
+            let jobs: Vec<Job<'_>> = (0..8)
+                .map(|_| {
+                    Box::new(|| {
+                        ids.lock().unwrap().insert(thread::current().id());
+                        thread::yield_now();
+                    }) as Job<'_>
+                })
+                .collect();
+            pool.run(jobs);
+            ids.into_inner().unwrap()
+        };
+        let first = collect_ids();
+        let second = collect_ids();
+        assert!(!first.is_empty());
+        for id in &second {
+            assert!(first.contains(id), "second batch ran on a thread the first never used");
+        }
+    }
+
+    #[test]
+    fn empty_batch_is_a_noop() {
+        WorkerPool::new(1).run(Vec::new());
+    }
+
+    #[test]
+    fn panic_propagates_and_pool_survives() {
+        let pool = WorkerPool::new(2);
+        let survived = AtomicUsize::new(0);
+        let jobs: Vec<Job<'_>> = vec![
+            Box::new(|| panic!("job blew up")),
+            Box::new(|| {
+                survived.fetch_add(1, Ordering::Relaxed);
+            }),
+        ];
+        let err = catch_unwind(AssertUnwindSafe(|| pool.run(jobs)));
+        assert!(err.is_err(), "the job's panic must re-raise from run()");
+        // The non-panicking job still ran, and the pool still works.
+        assert_eq!(survived.load(Ordering::Relaxed), 1);
+        let again = AtomicUsize::new(0);
+        pool.run(vec![Box::new(|| {
+            again.fetch_add(1, Ordering::Relaxed);
+        }) as Job<'_>]);
+        assert_eq!(again.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn nested_run_from_a_job_panics_instead_of_deadlocking() {
+        // The re-entrancy guard: submitting a batch from inside a pool
+        // job must fail fast (assert), not silently wedge the pool.
+        let pool = WorkerPool::new(1);
+        let nested_panicked = AtomicUsize::new(0);
+        let jobs: Vec<Job<'_>> = vec![Box::new(|| {
+            let attempt = catch_unwind(AssertUnwindSafe(|| {
+                global().run(vec![Box::new(|| {}) as Job<'_>]);
+            }));
+            if attempt.is_err() {
+                nested_panicked.fetch_add(1, Ordering::Relaxed);
+            }
+        })];
+        pool.run(jobs);
+        assert_eq!(nested_panicked.load(Ordering::Relaxed), 1, "nested run must panic");
+        // And the pool is still healthy.
+        let ok = AtomicUsize::new(0);
+        pool.run(vec![Box::new(|| {
+            ok.fetch_add(1, Ordering::Relaxed);
+        }) as Job<'_>]);
+        assert_eq!(ok.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn concurrent_batches_from_two_threads() {
+        let pool = WorkerPool::new(4);
+        thread::scope(|s| {
+            for _ in 0..2 {
+                s.spawn(|| {
+                    let count = AtomicUsize::new(0);
+                    let jobs: Vec<Job<'_>> = (0..16)
+                        .map(|_| {
+                            Box::new(|| {
+                                count.fetch_add(1, Ordering::Relaxed);
+                            }) as Job<'_>
+                        })
+                        .collect();
+                    pool.run(jobs);
+                    assert_eq!(count.load(Ordering::Relaxed), 16);
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn global_pool_is_a_singleton() {
+        let a = global() as *const WorkerPool;
+        let b = global() as *const WorkerPool;
+        assert_eq!(a, b);
+        assert!(global().size() >= 1);
+    }
+}

@@ -1,12 +1,14 @@
-//! Steady-state allocation audit for the decode attention path.
+//! Steady-state allocation audit for the paged attention paths — decode
+//! AND chunked prefill.
 //!
 //! The Workspace contract (see `attention::kernel`) promises that once
 //! scratch buffers have grown to a shape, repeated attention calls
 //! perform **zero heap allocations** — including the quantized-cache
-//! path, whose per-tile dequant scratch lives in the same workspace, and
-//! the quantized cache's own write path, whose requant scratch is
-//! preallocated. This binary installs a counting global allocator and
-//! proves it.
+//! path, whose per-tile dequant scratch lives in the same workspace;
+//! the streamed prefill walk, whose per-row softmax states come from a
+//! reusable pool in the same workspace; and the quantized cache's own
+//! write path, whose requant scratch is preallocated. This binary
+//! installs a counting global allocator and proves all of it.
 //!
 //! This file must hold exactly ONE `#[test]` (the harness runs tests in
 //! parallel threads inside one process; a second test would count its
@@ -15,7 +17,7 @@
 
 use opt_gptq::attention::gqa::{AttnConfig, Bias};
 use opt_gptq::attention::kernel::Workspace;
-use opt_gptq::attention::paged::paged_decode_attention_into;
+use opt_gptq::attention::paged::{paged_decode_attention_into, paged_prefill_attention_into};
 use opt_gptq::kvcache::{
     BlockAllocator, BlockTable, KvStore, PagedKvCache, QuantizedPagedKvCache,
 };
@@ -119,4 +121,35 @@ fn steady_state_decode_attention_allocates_nothing() {
         }
     });
     assert_eq!(n, 0, "q8 write_token must not allocate in steady state");
+
+    // Chunked-prefill attention (the paged-native streamed path): once
+    // the workspace's row-state pool and dequant scratch are warm, a
+    // steady-state prefill chunk walks its tiles — f32 blocks borrowed
+    // in place, q8 tiles dequantized once each into reused scratch —
+    // with ZERO heap allocations, on both KV dtypes. This is the
+    // contract that lets the engine run chunked prefill every step
+    // without allocator churn.
+    let chunk_rows = 6usize;
+    let q_offset = kv_len - chunk_rows;
+    let chunk_q = rng.normal_vec(chunk_rows * h * d, 1.0);
+    let mut chunk_out = vec![0.0f32; chunk_rows * h * d];
+    for (name, cache) in
+        [("f32", &fcache as &dyn KvStore), ("q8", &qcache as &dyn KvStore)]
+    {
+        // Warm-up: grows the per-row state pool (and, for q8, the
+        // per-tile dequant scratch).
+        paged_prefill_attention_into(
+            &cfg, cache, 0, &chunk_q, chunk_rows, q_offset, &table, &mut ws, &mut chunk_out,
+        );
+        let n = count_allocs(|| {
+            for _ in 0..10 {
+                paged_prefill_attention_into(
+                    &cfg, cache, 0, &chunk_q, chunk_rows, q_offset, &table, &mut ws,
+                    &mut chunk_out,
+                );
+            }
+        });
+        assert_eq!(n, 0, "{name}: steady-state chunked prefill must not allocate");
+    }
+    assert!(chunk_out.iter().all(|v| v.is_finite()));
 }

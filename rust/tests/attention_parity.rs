@@ -9,7 +9,10 @@
 
 use opt_gptq::attention::gqa::{gqa_attention, gqa_attention_into, AttnConfig, Bias};
 use opt_gptq::attention::kernel::Workspace;
-use opt_gptq::attention::paged::{paged_decode_attention, paged_decode_batch};
+use opt_gptq::attention::paged::{
+    paged_decode_attention, paged_decode_batch, paged_prefill_attention_into,
+    paged_prefill_rows_parallel,
+};
 use opt_gptq::kvcache::{BlockAllocator, BlockTable, PagedKvCache, QuantizedPagedKvCache};
 use opt_gptq::util::proptest::forall;
 use opt_gptq::util::rng::Rng;
@@ -187,6 +190,112 @@ fn quantized_decode_within_1e2_of_f32_across_grid() {
                     );
                 }
             }
+        }
+    }
+}
+
+/// Fill an f32 cache and a q8 cache with the same token stream and
+/// return the max-abs difference between their **streamed prefill**
+/// outputs over the last `q_len` rows (the paged-native path: tiles
+/// walked straight out of the block table, q8 dequantized in-tile).
+#[allow(clippy::too_many_arguments)]
+fn quantized_vs_f32_streamed_prefill_err(
+    bias: Bias,
+    block_size: usize,
+    h: usize,
+    kvh: usize,
+    d: usize,
+    kv_len: usize,
+    q_len: usize,
+    sigma: f32,
+    seed: u64,
+) -> f32 {
+    let cfg = AttnConfig { num_heads: h, num_kv_heads: kvh, head_dim: d, bias };
+    let q_len = q_len.min(kv_len);
+    let q_offset = kv_len - q_len;
+    let num_blocks = kv_len.div_ceil(block_size) + 1;
+    let mut fcache = PagedKvCache::new(1, num_blocks, block_size, kvh, d);
+    let mut qcache = QuantizedPagedKvCache::new(1, num_blocks, block_size, kvh, d);
+    let mut alloc = BlockAllocator::new(num_blocks, block_size);
+    let mut table = BlockTable::new();
+    assert!(table.reserve(kv_len, &mut alloc));
+    let mut rng = Rng::new(seed);
+    for _ in 0..kv_len {
+        let (b, s) = table.append_slot(block_size);
+        let k = rng.normal_vec(kvh * d, sigma);
+        let v = rng.normal_vec(kvh * d, sigma);
+        fcache.write_token(0, b, s, &k, &v);
+        qcache.write_token(0, b, s, &k, &v);
+    }
+    let q = rng.normal_vec(q_len * h * d, sigma);
+    let mut ws = Workspace::new();
+    let mut dense = vec![0.0f32; q_len * h * d];
+    let mut packed = vec![0.0f32; q_len * h * d];
+    let f_tiles =
+        paged_prefill_attention_into(&cfg, &fcache, 0, &q, q_len, q_offset, &table, &mut ws, &mut dense);
+    let q_tiles =
+        paged_prefill_attention_into(&cfg, &qcache, 0, &q, q_len, q_offset, &table, &mut ws, &mut packed);
+    assert_eq!(f_tiles, 0, "f32 store must not dequantize");
+    assert_eq!(q_tiles, kv_len.div_ceil(block_size), "q8 walk dequantizes each tile once");
+    dense.iter().zip(&packed).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max)
+}
+
+#[test]
+fn quantized_streamed_prefill_within_1e2_of_f32_across_grid() {
+    // The tentpole acceptance bound, moved onto the streamed path: q8
+    // prefill now runs tile-by-tile out of the packed store (no dense
+    // gather), and must stay within the same 1e-2 absolute bound as
+    // decode on activation-scale data (σ = 0.2) across the grid.
+    for &bias in &[Bias::Alibi, Bias::None] {
+        for &block_size in &[4usize, 16] {
+            for &(h, kvh, d) in &[(4usize, 1usize, 8usize), (4, 2, 8), (8, 8, 8), (8, 2, 64)] {
+                for &(kv_len, q_len) in &[(1usize, 1usize), (7, 7), (33, 8), (128, 16)] {
+                    let seed = (block_size * 10000 + h * 1000 + kvh * 100 + d + kv_len) as u64;
+                    let err = quantized_vs_f32_streamed_prefill_err(
+                        bias, block_size, h, kvh, d, kv_len, q_len, 0.2, seed,
+                    );
+                    assert!(
+                        err < 1e-2,
+                        "bias={bias:?} bs={block_size} h={h} kvh={kvh} d={d} kv={kv_len} q={q_len}: {err}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn streamed_prefill_threads_bit_identical_both_dtypes() {
+    // The pool fan-out partitions rows; every width (and the serial
+    // walk) must produce byte-identical output on BOTH stores — the
+    // thread-width determinism contract extended to streamed prefill.
+    let (h, kvh, d, block_size) = (8usize, 2usize, 16usize, 8usize);
+    let cfg = AttnConfig { num_heads: h, num_kv_heads: kvh, head_dim: d, bias: Bias::Alibi };
+    let (kv_len, q_len) = (45usize, 21usize);
+    let q_offset = kv_len - q_len;
+    let num_blocks = kv_len.div_ceil(block_size) + 1;
+    let mut fcache = PagedKvCache::new(1, num_blocks, block_size, kvh, d);
+    let mut qcache = QuantizedPagedKvCache::new(1, num_blocks, block_size, kvh, d);
+    let mut alloc = BlockAllocator::new(num_blocks, block_size);
+    let mut table = BlockTable::new();
+    assert!(table.reserve(kv_len, &mut alloc));
+    let mut rng = Rng::new(313);
+    for _ in 0..kv_len {
+        let (b, s) = table.append_slot(block_size);
+        let k = rng.normal_vec(kvh * d, 1.0);
+        let v = rng.normal_vec(kvh * d, 1.0);
+        fcache.write_token(0, b, s, &k, &v);
+        qcache.write_token(0, b, s, &k, &v);
+    }
+    let q = rng.normal_vec(q_len * h * d, 1.0);
+    for (name, cache) in [("f32", &fcache as &dyn opt_gptq::kvcache::KvStore), ("q8", &qcache as _)]
+    {
+        let mut serial = vec![0.0f32; q_len * h * d];
+        paged_prefill_rows_parallel(&cfg, cache, 0, &q, q_len, q_offset, &table, 1, &mut serial);
+        for threads in [2usize, 3, 5, 8, 64] {
+            let mut out = vec![0.0f32; q_len * h * d];
+            paged_prefill_rows_parallel(&cfg, cache, 0, &q, q_len, q_offset, &table, threads, &mut out);
+            assert_eq!(out, serial, "{name} threads={threads} must be bit-identical");
         }
     }
 }

@@ -4,9 +4,14 @@
 #
 #   scripts/verify.sh            # build + tests + bench smokes
 #
-# The bench smokes also refresh BENCH_attention.json at the repo root —
-# the machine-readable perf trajectory (tokens/s for prefill and batched
-# decode, serial vs parallel).
+# The bench smokes refresh BENCH_attention.json and BENCH_engine.json at
+# the repo root — the machine-readable perf trajectory (tokens/s for
+# prefill and batched decode, serving latency percentiles). After the
+# run this script FAILS if either artifact is missing (a bench that
+# silently stopped writing its JSON must not pass CI) and prints a
+# per-metric delta against the committed previous values, so the
+# trajectory is reviewed on every PR. Only compare like with like: the
+# `smoke` field records the mode, and verify.sh always runs smoke.
 set -euo pipefail
 cd "$(dirname "$0")/../rust"
 
@@ -19,3 +24,36 @@ cargo bench --bench attention_core -- --smoke
 # Serving-spine smoke: open-loop mixed workload → BENCH_engine.json
 # (ttft p50/p95, inter-token latency, stall counters).
 cargo bench --bench engine_serving -- --smoke
+
+# ---- bench-artifact gate + trajectory delta -------------------------------
+for f in BENCH_attention.json BENCH_engine.json; do
+  if [[ ! -s "../$f" ]]; then
+    echo "verify: FAIL — $f missing after the bench smokes" >&2
+    exit 1
+  fi
+  if prev=$(git -C .. show "HEAD:$f" 2>/dev/null); then
+    echo "--- $f: delta vs committed (HEAD) ---"
+    awk '
+      FNR == NR {
+        if (match($0, /"[^"]+"[[:space:]]*:/)) {
+          k = $0; sub(/^[[:space:]]*"/, "", k); sub(/"[[:space:]]*:.*/, "", k)
+          v = $NF; gsub(/,/, "", v); old[k] = v + 0
+        }
+        next
+      }
+      {
+        if (match($0, /"[^"]+"[[:space:]]*:/)) {
+          k = $0; sub(/^[[:space:]]*"/, "", k); sub(/"[[:space:]]*:.*/, "", k)
+          v = $NF; gsub(/,/, "", v); n = v + 0
+          if (k in old) {
+            pct = (old[k] == 0) ? 0 : 100 * (n - old[k]) / old[k]
+            printf "  %-34s %14.6g -> %14.6g  (%+8.2f%%)\n", k, old[k], n, pct
+          } else {
+            printf "  %-34s %14s -> %14.6g  (new metric)\n", k, "-", n
+          }
+        }
+      }' <(printf '%s\n' "$prev") "../$f"
+  else
+    echo "--- $f: first recorded trajectory point (no committed baseline) ---"
+  fi
+done
