@@ -45,10 +45,10 @@ fn main() {
     for bits in [8u32, 4, 3] {
         let t0 = Instant::now();
         let mut wg = weights.clone();
-        let rg = quantize_weights(&mut wg, QuantMethod::Gptq, bits, group, &attn, &mlp, &ffh);
+        let rg = quantize_weights(&mut wg, QuantMethod::Gptq, bits, group, false, &attn, &mlp, &ffh);
         let gptq_time = t0.elapsed().as_secs_f64();
         let mut wr = weights.clone();
-        quantize_weights(&mut wr, QuantMethod::Rtn, bits, group, &[], &[], &[]);
+        quantize_weights(&mut wr, QuantMethod::Rtn, bits, group, false, &[], &[], &[]);
         let eg = relative_error(&ref_logits, &logits(&NativeModel::new(wg), &eval));
         let er = relative_error(&ref_logits, &logits(&NativeModel::new(wr), &eval));
         t.row(&[

@@ -52,6 +52,7 @@ pub fn engine_with_byte_budget(
             prefill_chunk: usize::MAX,
             prefix_cache_blocks: 0,
             kv_dtype: opt_gptq::coordinator::KvCacheDtype::F32,
+            weight_dtype: opt_gptq::coordinator::WeightDtype::F32,
         },
     )
 }

@@ -17,7 +17,7 @@
 
 mod common;
 
-use opt_gptq::coordinator::{BucketPolicy, Engine, EngineConfig, KvCacheDtype, SchedulerConfig};
+use opt_gptq::coordinator::{BucketPolicy, Engine, EngineConfig, KvCacheDtype, SchedulerConfig, WeightDtype};
 use opt_gptq::model::{ModelConfig, ModelWeights, NativeModel, SamplingParams};
 use opt_gptq::runtime::NativeBackend;
 use opt_gptq::tokenizer::ByteTokenizer;
@@ -56,6 +56,7 @@ fn main() {
             prefill_chunk: usize::MAX,
             prefix_cache_blocks: 0,
             kv_dtype: KvCacheDtype::F32,
+            weight_dtype: WeightDtype::F32,
         },
     );
     println!(

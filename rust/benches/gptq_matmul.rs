@@ -1,0 +1,175 @@
+//! Packed-weight matmul benchmark: dense f32 vs the fused group-wise
+//! dequant-matmul at every servable bit width.
+//!
+//! The shape is one projection of a prefill/mixed step: `m` activation
+//! rows against an `[n, k]` weight matrix (`[out_features,
+//! in_features]`). Serial series measure the raw kernels; `_par` series
+//! measure the engine path (row fan-out over the persistent worker
+//! pool). "tok/s" is activation rows per second — the per-projection
+//! throughput a mixed step pays `7 × n_layers` times.
+//!
+//! Emits `BENCH_gptq.json` (repo root) with tok/s per variant plus the
+//! weight-byte accounting (`weight_pool_bytes_{f32,q8,q4,q3}` + ratios —
+//! acceptance line: q4 ≤ 0.20× f32 at the default group size). The
+//! packed outputs are asserted **bit-identical** to the dense reference
+//! over the dequantized reconstruction before anything is timed, so the
+//! bench doubles as a release-mode parity check.
+
+mod common;
+
+use opt_gptq::quant::matmul::{
+    dense_matmul_rows_parallel, packed_matmul_nt_into, packed_matmul_rows_parallel,
+    MatmulWorkspace,
+};
+use opt_gptq::quant::{pack_rows, rtn_quantize, PackedMatrix};
+use opt_gptq::tensor::matmul_nt_into;
+use opt_gptq::util::benchkit::{black_box, f, Bencher, Table};
+use opt_gptq::util::cli::Args;
+use opt_gptq::util::rng::Rng;
+use std::time::Duration;
+
+fn main() {
+    opt_gptq::util::logging::init();
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let smoke = args.flag("smoke");
+
+    // Default shape ≈ a `small`-preset FFN projection; m ≈ one prefill
+    // chunk of a mixed step.
+    let m = args.get_usize("rows", if smoke { 48 } else { 192 });
+    let k = args.get_usize("in-features", if smoke { 256 } else { 512 });
+    let n = args.get_usize("out-features", if smoke { 384 } else { 768 });
+    let group = args.get_usize("group-size", 64);
+    let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+
+    let bench = if smoke {
+        Bencher::new(Duration::from_millis(30), Duration::from_millis(250), 10)
+    } else {
+        Bencher::new(Duration::from_millis(200), Duration::from_secs(1), 50)
+    };
+
+    let mut rng = Rng::new(77);
+    let wd = rng.normal_vec(n * k, 1.0);
+    let acts = rng.normal_vec(m * k, 1.0);
+    let packed: Vec<(u32, PackedMatrix)> =
+        [8u32, 4, 3].iter().map(|&b| (b, pack_rows(&rtn_quantize(&wd, n, k, b, group)))).collect();
+
+    // Parity gate before timing: fused == dense-over-reconstruction,
+    // bit for bit, serial and parallel.
+    let mut ws = MatmulWorkspace::new();
+    let mut out = vec![0.0f32; m * n];
+    let mut want = vec![0.0f32; m * n];
+    for (bits, p) in &packed {
+        let recon = p.dequantize();
+        matmul_nt_into(&acts, m, k, &recon, n, &mut want);
+        packed_matmul_nt_into(&acts, m, p, &mut ws, &mut out);
+        assert_eq!(out, want, "q{bits} serial parity");
+        packed_matmul_rows_parallel(&acts, m, p, threads, &mut out);
+        assert_eq!(out, want, "q{bits} parallel parity");
+    }
+
+    // ---- timing ---------------------------------------------------------
+    let s_dense = bench.bench("weight matmul f32 dense serial", || {
+        matmul_nt_into(&acts, m, k, &wd, n, &mut out);
+        black_box(out[0]);
+    });
+    let s_dense_par = bench.bench(&format!("weight matmul f32 dense parallel ({threads} jobs max)"), || {
+        dense_matmul_rows_parallel(&acts, m, k, &wd, n, threads, &mut out);
+        black_box(out[0]);
+    });
+    let dense_tok_s = m as f64 / s_dense.mean();
+    let dense_par_tok_s = m as f64 / s_dense_par.mean();
+
+    let mut series: Vec<(u32, f64, f64, usize)> = Vec::new();
+    for (bits, p) in &packed {
+        let s_serial = bench.bench(&format!("weight matmul q{bits} fused serial"), || {
+            packed_matmul_nt_into(&acts, m, p, &mut ws, &mut out);
+            black_box(out[0]);
+        });
+        let s_par =
+            bench.bench(&format!("weight matmul q{bits} fused parallel ({threads} jobs max)"), || {
+                packed_matmul_rows_parallel(&acts, m, p, threads, &mut out);
+                black_box(out[0]);
+            });
+        series.push((*bits, m as f64 / s_serial.mean(), m as f64 / s_par.mean(), p.packed_bytes()));
+    }
+
+    // ---- report ---------------------------------------------------------
+    let f32_bytes = n * k * 4;
+    let mut t = Table::new(
+        "Packed-weight matmul: fused dequant-matmul vs dense f32",
+        &["path", "config", "tok/s", "vs dense serial", "weight bytes", "ratio"],
+    );
+    t.row(&[
+        "dense f32 serial".into(),
+        format!("m={m} k={k} n={n}"),
+        f(dense_tok_s, 1),
+        f(1.0, 2),
+        f32_bytes.to_string(),
+        f(1.0, 3),
+    ]);
+    t.row(&[
+        "dense f32 parallel".into(),
+        format!("m={m} jobs≤{threads}"),
+        f(dense_par_tok_s, 1),
+        f(dense_par_tok_s / dense_tok_s, 2),
+        f32_bytes.to_string(),
+        f(1.0, 3),
+    ]);
+    for &(bits, tok_s, par_tok_s, bytes) in &series {
+        let ratio = bytes as f64 / f32_bytes as f64;
+        t.row(&[
+            format!("q{bits} fused serial"),
+            format!("group={group}"),
+            f(tok_s, 1),
+            f(tok_s / dense_tok_s, 2),
+            bytes.to_string(),
+            f(ratio, 3),
+        ]);
+        t.row(&[
+            format!("q{bits} fused parallel"),
+            format!("group={group} jobs≤{threads}"),
+            f(par_tok_s, 1),
+            f(par_tok_s / dense_tok_s, 2),
+            bytes.to_string(),
+            f(ratio, 3),
+        ]);
+    }
+    t.print();
+
+    let q8 = &series[0];
+    let q4 = &series[1];
+    let q3 = &series[2];
+    let q4_ratio = q4.3 as f64 / f32_bytes as f64;
+    println!(
+        "\nacceptance: weight_pool_ratio_q4_over_f32 = {q4_ratio:.3} (must be ≤ 0.20 at group {group})"
+    );
+    assert!(q4_ratio <= 0.20, "q4 weight bytes ratio {q4_ratio:.3} exceeds 0.20");
+
+    common::write_bench_json(
+        "gptq",
+        &[
+            ("smoke", if smoke { 1.0 } else { 0.0 }),
+            ("matmul_rows", m as f64),
+            ("in_features", k as f64),
+            ("out_features", n as f64),
+            ("group_size", group as f64),
+            ("matmul_jobs", threads as f64),
+            ("weight_matmul_f32_tok_s", dense_tok_s),
+            ("weight_matmul_f32_par_tok_s", dense_par_tok_s),
+            ("weight_matmul_q8_tok_s", q8.1),
+            ("weight_matmul_q8_par_tok_s", q8.2),
+            ("weight_matmul_q4_tok_s", q4.1),
+            ("weight_matmul_q4_par_tok_s", q4.2),
+            ("weight_matmul_q3_tok_s", q3.1),
+            ("weight_matmul_q3_par_tok_s", q3.2),
+            ("weight_matmul_q4_relative_tok_s", q4.1 / dense_tok_s),
+            ("weight_pool_bytes_f32", f32_bytes as f64),
+            ("weight_pool_bytes_q8", q8.3 as f64),
+            ("weight_pool_bytes_q4", q4.3 as f64),
+            ("weight_pool_bytes_q3", q3.3 as f64),
+            ("weight_pool_ratio_q8_over_f32", q8.3 as f64 / f32_bytes as f64),
+            ("weight_pool_ratio_q4_over_f32", q4_ratio),
+            ("weight_pool_ratio_q3_over_f32", q3.3 as f64 / f32_bytes as f64),
+        ],
+    );
+}

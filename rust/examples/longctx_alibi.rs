@@ -50,6 +50,7 @@ fn main() -> anyhow::Result<()> {
             prefill_chunk: usize::MAX,
             prefix_cache_blocks: 0,
             kv_dtype: opt_gptq::coordinator::KvCacheDtype::F32,
+            weight_dtype: opt_gptq::coordinator::WeightDtype::F32,
         },
     );
     let tok = ByteTokenizer::new();

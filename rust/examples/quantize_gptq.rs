@@ -3,23 +3,29 @@
 //! Calibrates a model on synthetic text, quantizes every projection
 //! matrix with both GPTQ (Hessian-aware) and RTN (round-to-nearest), and
 //! reports per-bit-width layer error + storage — the engine-side pipeline
-//! behind the Abl-D bench.
+//! behind the Abl-D bench. Finishes with the **packed-serving parity
+//! check**: the GPTQ int4 projections are packed (no f32 round-trip) and
+//! served through the fused dequant-matmul, and the logits must be
+//! bit-identical to the fake-quant (dequantized-reconstruction) model.
+//! `--act-order` turns on GPTQ's decreasing-diagonal column ordering.
 //!
 //! ```bash
 //! cargo run --release --example quantize_gptq -- --model small
 //! ```
 
-use opt_gptq::model::weights::{quantize_weights, QuantMethod};
+use opt_gptq::model::weights::{quantize_weights, quantize_weights_packed, QuantMethod};
 use opt_gptq::model::{ModelConfig, ModelWeights, NativeModel};
 use opt_gptq::tokenizer::ByteTokenizer;
 use opt_gptq::util::benchkit::Table;
 use opt_gptq::util::cli::Args;
 use opt_gptq::workload::synth_prompt;
+use std::sync::Arc;
 
 fn main() -> anyhow::Result<()> {
     opt_gptq::util::logging::init();
     let args = Args::from_env();
     let cfg = ModelConfig::preset(args.get_str("model", "tiny")).expect("preset");
+    let act_order = args.flag("act-order");
     let weights = ModelWeights::init(&cfg, 0);
     let model = NativeModel::new(weights.clone());
 
@@ -56,9 +62,10 @@ fn main() -> anyhow::Result<()> {
     for bits in [8u32, 4, 3] {
         let group = args.get_usize("group-size", 64);
         let mut wg = weights.clone();
-        let rg = quantize_weights(&mut wg, QuantMethod::Gptq, bits, group, &attn, &mlp, &ff);
+        let rg =
+            quantize_weights(&mut wg, QuantMethod::Gptq, bits, group, act_order, &attn, &mlp, &ff);
         let mut wr = weights.clone();
-        let _rr = quantize_weights(&mut wr, QuantMethod::Rtn, bits, group, &[], &[], &[]);
+        let _rr = quantize_weights(&mut wr, QuantMethod::Rtn, bits, group, false, &[], &[], &[]);
         let eg = opt_gptq::quant::relative_error(&ref_logits, &logits_of(&NativeModel::new(wg)));
         let er = opt_gptq::quant::relative_error(&ref_logits, &logits_of(&NativeModel::new(wr)));
         table.row(&[
@@ -72,5 +79,35 @@ fn main() -> anyhow::Result<()> {
     }
     table.print();
     println!("\n(logit err = relative error of final-position logits vs f32, held-out prompt)");
+
+    // Packed serving parity: the same GPTQ int4 quantization, kept
+    // packed end to end, must serve logits BIT-IDENTICAL to the
+    // fake-quant reconstruction — the contract that lets --weight-dtype
+    // shrink serving memory without touching sampling.
+    let group = args.get_usize("group-size", 64);
+    let mut recon = weights.clone();
+    quantize_weights(&mut recon, QuantMethod::Gptq, 4, group, act_order, &attn, &mlp, &ff);
+    let (packed, _) =
+        quantize_weights_packed(&weights, QuantMethod::Gptq, 4, group, act_order, &attn, &mlp, &ff);
+    let f32_proj_bytes: usize = weights
+        .layers
+        .iter()
+        .flat_map(|l| {
+            [&l.wq, &l.wk, &l.wv, &l.wo, &l.w_gate, &l.w_up, &l.w_down].map(|t| t.len() * 4)
+        })
+        .sum();
+    let packed_bytes = packed.projection_bytes();
+    let l_packed = logits_of(&NativeModel::from_store(Arc::new(packed)));
+    let l_recon = logits_of(&NativeModel::new(recon));
+    assert_eq!(
+        l_packed, l_recon,
+        "packed q4 serving must be bit-identical to the dequantized reconstruction"
+    );
+    println!(
+        "packed q4 serving: bit-identical to reconstruction ✓  (projection bytes {} → {}, {:.3}×)",
+        f32_proj_bytes,
+        packed_bytes,
+        packed_bytes as f64 / f32_proj_bytes as f64
+    );
     Ok(())
 }

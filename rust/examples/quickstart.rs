@@ -6,11 +6,15 @@
 //! cargo run --release --example quickstart -- --xla   # AOT/PJRT backend
 //! ```
 
-use opt_gptq::coordinator::{BucketPolicy, Engine, EngineConfig, KvCacheDtype, SchedulerConfig};
+use opt_gptq::coordinator::{
+    BucketPolicy, Engine, EngineConfig, KvCacheDtype, SchedulerConfig, WeightDtype,
+};
+use opt_gptq::model::weights::{quantize_weights_packed, QuantMethod};
 use opt_gptq::model::{ModelConfig, ModelWeights, NativeModel, SamplingParams};
 use opt_gptq::runtime::{ArtifactManifest, Backend, NativeBackend, XlaBackend};
 use opt_gptq::tokenizer::ByteTokenizer;
 use opt_gptq::util::cli::Args;
+use std::sync::Arc;
 
 fn main() -> anyhow::Result<()> {
     opt_gptq::util::logging::init();
@@ -22,11 +26,17 @@ fn main() -> anyhow::Result<()> {
 
     // 2. A backend: native Rust, or AOT-compiled HLO on PJRT (`--xla`,
     //    needs `make artifacts`). `--kv-dtype q8` packs the KV pool to
-    //    8-bit (~0.26× bytes); Engine::new rejects q8 on the XLA backend
-    //    (it consumes raw f32 pools).
+    //    8-bit (~0.26× bytes); `--weight-dtype q4` serves the projections
+    //    from packed GPTQ/RTN storage (~0.16× the projection bytes,
+    //    bit-identical to serving the dequantized reconstruction).
+    //    Engine::new rejects both on the XLA backend (it consumes raw
+    //    f32 buffers).
     let kv_dtype =
         KvCacheDtype::parse(args.get_str("kv-dtype", "f32")).expect("--kv-dtype f32|q8");
+    let weight_dtype = WeightDtype::parse(args.get_str("weight-dtype", "f32"))
+        .expect("--weight-dtype f32|q8|q4|q3");
     let (backend, econf): (Box<dyn Backend>, EngineConfig) = if args.flag("xla") {
+        assert_eq!(weight_dtype, WeightDtype::F32, "--xla serves f32 weights");
         let manifest = ArtifactManifest::load(std::path::Path::new("artifacts"))?;
         let econf = EngineConfig {
             num_blocks: manifest.num_blocks,
@@ -41,9 +51,25 @@ fn main() -> anyhow::Result<()> {
             prefill_chunk: manifest.max_prefill_seq(),
             prefix_cache_blocks: 0,
             kv_dtype,
+            weight_dtype,
         };
         (Box::new(XlaBackend::load(manifest, &weights)?), econf)
     } else {
+        let model = match weight_dtype.bits() {
+            None => NativeModel::new(weights),
+            Some(bits) => {
+                // Calibration-free RTN pack for the demo; `opt-gptq
+                // quantize --pack` produces the GPTQ-calibrated artifact.
+                let (packed, report) =
+                    quantize_weights_packed(&weights, QuantMethod::Rtn, bits, 64, false, &[], &[], &[]);
+                println!(
+                    "packed weights: {bits}-bit, mean rel err {:.5}, projections {} B",
+                    report.mean_error(),
+                    packed.projection_bytes()
+                );
+                NativeModel::from_store(Arc::new(packed))
+            }
+        };
         let econf = EngineConfig {
             num_blocks: 128,
             block_size: 16,
@@ -52,16 +78,18 @@ fn main() -> anyhow::Result<()> {
             prefill_chunk: usize::MAX,
             prefix_cache_blocks: 0,
             kv_dtype,
+            weight_dtype,
         };
-        (Box::new(NativeBackend::new(NativeModel::new(weights))), econf)
+        (Box::new(NativeBackend::new(model)), econf)
     };
 
     // 3. The engine: paged KV cache + continuous batching.
     let mut engine = Engine::new(backend, econf);
     println!(
-        "engine up: backend={}, KV pool = {} tokens",
+        "engine up: backend={}, KV pool = {} tokens, weight store = {} B",
         engine.backend_name(),
-        engine.capacity_tokens()
+        engine.capacity_tokens(),
+        engine.weight_bytes()
     );
 
     // 4. Requests.

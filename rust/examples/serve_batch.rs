@@ -34,7 +34,7 @@ fn main() -> anyhow::Result<()> {
         let tok = ByteTokenizer::new();
         let calib = tok.encode(&synth_prompt(128, 0));
         let (a, m, f) = model.calibrate(&calib);
-        let report = quantize_weights(&mut weights, QuantMethod::Gptq, 4, 128, &a, &m, &f);
+        let report = quantize_weights(&mut weights, QuantMethod::Gptq, 4, 128, false, &a, &m, &f);
         println!(
             "GPTQ int4: mean rel err {:.5}, {:.2}× weight compression ({:.1}s)",
             report.mean_error(),
@@ -68,6 +68,7 @@ fn main() -> anyhow::Result<()> {
                 args.get_str("kv-dtype", "f32"),
             )
             .expect("--kv-dtype f32|q8"),
+            weight_dtype: opt_gptq::coordinator::WeightDtype::F32,
         },
     );
     println!(

@@ -8,7 +8,7 @@ use crate::kvcache::{
     BlockAllocator, BlockTable, CacheStats, KvCacheDtype, KvStore, PagedKvCache,
     QuantizedPagedKvCache,
 };
-use crate::model::SamplingParams;
+use crate::model::{SamplingParams, WeightDtype};
 use crate::runtime::{Backend, DecodeItem, MixedBatch, PrefillChunkItem};
 use anyhow::{bail, Result};
 use std::time::Instant;
@@ -36,6 +36,15 @@ pub struct EngineConfig {
     /// ([`KvCacheDtype::Q8`], ~0.26× the pool bytes; native backend
     /// only — see `Backend::supports_quantized_kv`).
     pub kv_dtype: KvCacheDtype,
+    /// Weight storage dtype the deployment serves from: dense f32 or a
+    /// packed GPTQ/RTN store ([`WeightDtype::Q8`]/`Q4`/`Q3`, native
+    /// backend only). The backend owns the actual store; `Engine::new`
+    /// checks it against this declaration so config and wiring cannot
+    /// drift apart. Packed serving is bit-identical to f32 serving of
+    /// the dequantized reconstruction (see ARCHITECTURE.md
+    /// "Packed-weight serving"), so flipping this knob on a quantized
+    /// artifact never perturbs scheduling or sampling.
+    pub weight_dtype: WeightDtype,
 }
 
 impl EngineConfig {
@@ -50,6 +59,7 @@ impl EngineConfig {
             prefill_chunk: usize::MAX,
             prefix_cache_blocks: 0,
             kv_dtype: KvCacheDtype::F32,
+            weight_dtype: WeightDtype::F32,
         }
     }
 }
@@ -91,6 +101,14 @@ impl Engine {
             "backend '{}' cannot read a {:?} KV cache",
             backend.name(),
             cfg.kv_dtype
+        );
+        assert!(
+            cfg.weight_dtype == backend.weight_dtype(),
+            "EngineConfig::weight_dtype is {:?} but backend '{}' serves {:?} weights — \
+             build the backend from the matching WeightStore",
+            cfg.weight_dtype,
+            backend.name(),
+            backend.weight_dtype()
         );
         let cache: Box<dyn KvStore> = match cfg.kv_dtype {
             KvCacheDtype::F32 => Box::new(PagedKvCache::new(
@@ -201,6 +219,13 @@ impl Engine {
     /// Prefix-cache counters (hits, misses, pinned blocks) if enabled.
     pub fn prefix_cache_stats(&self) -> Option<(u64, u64, usize)> {
         self.prefix_cache.as_ref().map(|c| (c.hits, c.misses, c.len()))
+    }
+
+    /// True bytes held by the backend's weight store (packed payload +
+    /// grids on a quantized store) — the weight-side twin of
+    /// `CacheStats::pool_bytes`.
+    pub fn weight_bytes(&self) -> usize {
+        self.backend.weight_bytes()
     }
 
     /// Execute one scheduler step (one mixed prefill+decode batch).
@@ -408,6 +433,7 @@ mod tests {
             prefill_chunk: usize::MAX,
             prefix_cache_blocks: 0,
             kv_dtype,
+            weight_dtype: WeightDtype::F32,
         };
         Engine::new(Box::new(backend), econf)
     }
@@ -502,6 +528,54 @@ mod tests {
     }
 
     #[test]
+    #[should_panic(expected = "weight_dtype")]
+    fn engine_rejects_weight_dtype_mismatch() {
+        // A deployment declaring packed weights must not silently run a
+        // dense backend (and vice versa) — the constructor assert is the
+        // drift guard.
+        let cfg = ModelConfig::tiny();
+        let backend = NativeBackend::new(NativeModel::new(ModelWeights::init(&cfg, 1)));
+        let mut econf = EngineConfig::native(256, 8);
+        econf.weight_dtype = WeightDtype::Q4;
+        let _ = Engine::new(Box::new(backend), econf);
+    }
+
+    #[test]
+    fn packed_weight_engine_serves_and_reports_bytes() {
+        // EngineConfig::weight_dtype = Q4 over a matching packed backend:
+        // requests complete and the reported weight bytes shrink vs the
+        // dense twin. (Bit-identity vs the reconstruction is enforced in
+        // tests/weights_parity.rs.)
+        use crate::model::weights::{quantize_weights_packed, QuantMethod};
+        let cfg = ModelConfig::tiny();
+        let weights = ModelWeights::init(&cfg, 1);
+        let dense_bytes = {
+            let mut e = engine(32);
+            e.add_request(vec![256, 1, 2, 3], params(4)).unwrap();
+            e.run_to_completion();
+            e.weight_bytes()
+        };
+        let (packed, _) =
+            quantize_weights_packed(&weights, QuantMethod::Rtn, 4, 64, false, &[], &[], &[]);
+        let backend = NativeBackend::new(crate::model::NativeModel::from_store(
+            std::sync::Arc::new(packed),
+        ));
+        let mut econf = EngineConfig::native(256, 8);
+        econf.weight_dtype = WeightDtype::Q4;
+        let mut e = Engine::new(Box::new(backend), econf);
+        e.add_request(vec![256, 1, 2, 3], params(4)).unwrap();
+        let r = e.run_to_completion();
+        assert_eq!(r.num_requests, 1);
+        assert_eq!(e.take_outputs()[0].tokens.len(), 4);
+        assert!(
+            e.weight_bytes() < dense_bytes,
+            "packed {} !< dense {}",
+            e.weight_bytes(),
+            dense_bytes
+        );
+    }
+
+    #[test]
     fn rejects_oversized_request() {
         let mut e = engine(4); // 32-token pool
         assert!(e.add_request(vec![256; 30], params(10)).is_err());
@@ -524,6 +598,7 @@ mod tests {
             prefill_chunk: usize::MAX,
             prefix_cache_blocks: cache_blocks,
             kv_dtype: KvCacheDtype::F32,
+            weight_dtype: WeightDtype::F32,
         };
         Engine::new(Box::new(backend), econf)
     }
@@ -641,6 +716,7 @@ mod tests {
                 prefill_chunk: usize::MAX,
                 prefix_cache_blocks: 0,
                 kv_dtype: KvCacheDtype::F32,
+                weight_dtype: WeightDtype::F32,
             };
             let mut e = Engine::new(Box::new(backend), econf);
             // A long prompt among short ones so chunking really happens.
@@ -681,6 +757,7 @@ mod tests {
             prefill_chunk: usize::MAX,
             prefix_cache_blocks: 0,
             kv_dtype: KvCacheDtype::F32,
+            weight_dtype: WeightDtype::F32,
         };
         let mut e = Engine::new(Box::new(backend), econf);
         let d1 = e.add_request(vec![256, 1, 2], params(40)).unwrap();

@@ -27,9 +27,10 @@ pub mod sequence;
 
 pub use batcher::BucketPolicy;
 pub use engine::{Engine, EngineConfig, RequestOutput};
-// Re-exported so engine-config construction sites don't need a separate
-// kvcache import for the dtype knob.
+// Re-exported so engine-config construction sites don't need separate
+// kvcache/model imports for the storage-dtype knobs.
 pub use crate::kvcache::KvCacheDtype;
+pub use crate::model::WeightDtype;
 pub use metrics::{EngineMetrics, RunReport};
 pub use router::{Router, RouterConfig};
 pub use scheduler::{PrefillChunk, Scheduler, SchedulerConfig, StepPlan};

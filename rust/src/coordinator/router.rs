@@ -187,6 +187,7 @@ mod tests {
                 prefill_chunk: usize::MAX,
                 prefix_cache_blocks: 0,
                 kv_dtype: crate::kvcache::KvCacheDtype::F32,
+                weight_dtype: crate::model::WeightDtype::F32,
             },
             workers,
         };

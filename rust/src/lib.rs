@@ -24,9 +24,9 @@
 //! | [`tensor`] | minimal row-major f32 ndarray with the ops the native backend needs |
 //! | [`tokenizer`] | byte-level tokenizer (vocab 256 + specials) |
 //! | [`kvcache`] | paged block allocator, block tables, [`kvcache::KvStore`] pools (f32 + packed 8-bit), contiguous baseline, stats |
-//! | [`quant`] | GPTQ (Hessian/Cholesky, error propagation), RTN baseline, int4/int8 packing |
+//! | [`quant`] | GPTQ (Hessian/Cholesky, error propagation), RTN baseline, int4/int8 packing, fused dequant-matmul ([`quant::matmul`]) |
 //! | [`attention`] | block-tiled group-major kernel core ([`attention::kernel`]) + MHA / GQA / ALiBi / paged drivers |
-//! | [`model`] | Llama-architecture config, weights, native forward, sampler |
+//! | [`model`] | Llama-architecture config, [`model::WeightStore`] (dense f32 / packed GPTQ), native forward, sampler |
 //! | [`runtime`] | PJRT client (stubbed offline), artifact manifest, the persistent worker pool (`runtime::pool`), `Backend` trait with the `forward_step` mixed-batch entry point (Native / Xla) |
 //! | [`coordinator`] | sequence state machine, token-budget mixed-step scheduler (interleaved chunked prefill), batcher, router, engine, metrics |
 //! | [`server`] | threaded TCP/HTTP front-end speaking the JSON API |
@@ -94,6 +94,28 @@
 //! `tests/attention_parity.rs` bounds the quantized path's output error
 //! (decode and streamed prefill) and `tests/alloc_steadystate.rs`
 //! audits the allocation contract with a counting allocator.
+//!
+//! ## Weight storage dtypes — packed GPTQ serving
+//!
+//! Weights follow the same design through [`model::WeightStore`]:
+//! `EngineConfig::weight_dtype` picks dense f32
+//! ([`model::ModelWeights`]) or the packed store
+//! ([`model::PackedModelWeights`]: GPTQ/RTN integer levels + group
+//! grids, int3/int4/int8, produced by
+//! `model::weights::quantize_weights_packed` with no dequantized
+//! round-trip). The forward pass reads packed projections through the
+//! fused group-wise dequant-matmul ([`quant::matmul`]): weight row
+//! tiles are dequantized **once** into reusable workspace scratch
+//! (zero-alloc steady state, same discipline as the attention
+//! workspace) and shared across the step's activation rows, fanned
+//! over the worker pool on prefill/mixed steps. The kernel reproduces
+//! `tensor::matmul_nt`'s exact accumulation order, so packed serving
+//! is **bit-identical** to serving the dequantized reconstruction —
+//! every determinism/interleaving contract above holds at any weight
+//! dtype (`tests/weights_parity.rs`). Eager `.dequantize()` is
+//! grep-gated off the serving files by `scripts/verify.sh`; q4
+//! projections cost ≈0.16× their f32 bytes (tracked in
+//! `BENCH_gptq.json`).
 
 pub mod attention;
 pub mod coordinator;

@@ -1,22 +1,30 @@
 //! `opt-gptq` — CLI for the Opt-GPTQ serving stack.
 //!
 //! ```text
-//! opt-gptq serve    --model tiny --port 8765 --workers 1 [--kv-dtype q8] [--xla --artifacts DIR]
+//! opt-gptq serve    --model tiny --port 8765 --workers 1 [--kv-dtype q8]
+//!                   [--weight-dtype q4 [--weights w.bin]] [--xla --artifacts DIR]
 //! opt-gptq generate --model tiny --prompt "hello" --max-tokens 32
-//! opt-gptq quantize --model tiny --bits 4 --group-size 64 --out weights.bin
+//! opt-gptq quantize --model tiny --bits 4 --group-size 64 [--act-order]
+//!                   [--pack] --out weights.bin
 //! opt-gptq info     --model tiny
 //! ```
 //!
 //! Scheduling knobs (serve/generate): `--step-budget N` caps the tokens
 //! per mixed engine step (decode + prefill chunks, default 256);
 //! `--no-chunked-prefill` restores the legacy one-prompt-per-step
-//! planner.
+//! planner. Storage knobs: `--kv-dtype q8` packs the KV pool;
+//! `--weight-dtype q8|q4|q3` serves the projections from packed storage
+//! — from a saved `quantize --pack` artifact when `--weights FILE` is
+//! given, otherwise calibration-free RTN on the synthetic-init weights;
+//! either way bit-identical to f32 serving of the dequantized
+//! reconstruction. `quantize --pack` writes the GPTQ-calibrated packed
+//! artifact instead of the fake-quant dense one.
 
 use opt_gptq::coordinator::{
-    BucketPolicy, EngineConfig, KvCacheDtype, Router, RouterConfig, SchedulerConfig,
+    BucketPolicy, EngineConfig, KvCacheDtype, Router, RouterConfig, SchedulerConfig, WeightDtype,
 };
 use opt_gptq::model::{
-    weights::{quantize_weights, QuantMethod},
+    weights::{quantize_weights, quantize_weights_packed, QuantMethod},
     ModelConfig, ModelWeights, NativeModel, SamplingParams,
 };
 use opt_gptq::runtime::{ArtifactManifest, Backend, NativeBackend, XlaBackend};
@@ -52,9 +60,95 @@ fn model_config(args: &Args) -> ModelConfig {
     })
 }
 
+fn weight_dtype(args: &Args) -> WeightDtype {
+    let name = args.get_str("weight-dtype", "f32");
+    let dtype = WeightDtype::parse(name).unwrap_or_else(|| {
+        eprintln!("unknown --weight-dtype '{name}' (f32|q8|q4|q3)");
+        std::process::exit(2);
+    });
+    if dtype != WeightDtype::F32 && args.flag("xla") {
+        eprintln!("--weight-dtype {name} requires the native backend (the XLA artifacts upload raw f32 weight buffers)");
+        std::process::exit(2);
+    }
+    dtype
+}
+
+/// Build a model from a `--weights FILE` artifact, if one was given:
+/// the packed `OGPTQP01` format when a quantized `--weight-dtype` is
+/// requested (the `quantize --pack` output), the dense `OGPTQW01`
+/// format otherwise. Bit width and model config are validated against
+/// the flags (the engine budgets and reports by the `--model` preset,
+/// so a silently different artifact must not slip in). The returned
+/// model is Arc-backed — `serve` loads once and clones per worker.
+fn load_weights_model(args: &Args, cfg: &ModelConfig) -> Option<NativeModel> {
+    let path = args.get("weights")?;
+    let check_config = |loaded: &ModelConfig| {
+        if loaded != cfg {
+            eprintln!(
+                "--weights {path} holds a different model shape than --model {} — \
+                 pass the preset the artifact was quantized from",
+                args.get_str("model", "tiny")
+            );
+            std::process::exit(2);
+        }
+    };
+    Some(match weight_dtype(args).bits() {
+        Some(bits) => {
+            let packed = opt_gptq::model::PackedModelWeights::load(std::path::Path::new(path))
+                .unwrap_or_else(|e| {
+                    eprintln!("failed to load packed weights from {path}: {e:#}");
+                    std::process::exit(1);
+                });
+            if packed.bits != bits {
+                eprintln!(
+                    "--weight-dtype asks for {bits}-bit but {path} holds a {}-bit artifact",
+                    packed.bits
+                );
+                std::process::exit(2);
+            }
+            check_config(&packed.config);
+            NativeModel::from_store(Arc::new(packed))
+        }
+        None => {
+            let loaded = ModelWeights::load(std::path::Path::new(path)).unwrap_or_else(|e| {
+                eprintln!("failed to load weights from {path}: {e:#}");
+                std::process::exit(1);
+            });
+            check_config(&loaded.config);
+            NativeModel::new(loaded)
+        }
+    })
+}
+
+/// Native model for one worker: the `--weights` artifact when given,
+/// otherwise synthetic-init weights (packed with calibration-free RTN
+/// under a quantized `--weight-dtype`; GPTQ-calibrated artifacts come
+/// from `opt-gptq quantize --pack`). Either packed path is
+/// bit-identical to serving the dequantized reconstruction.
+fn native_model(args: &Args, cfg: &ModelConfig, seed: u64) -> NativeModel {
+    if let Some(model) = load_weights_model(args, cfg) {
+        return model;
+    }
+    match weight_dtype(args).bits() {
+        None => NativeModel::new(ModelWeights::init(cfg, seed)),
+        Some(bits) => {
+            let weights = ModelWeights::init(cfg, seed);
+            let group = args.get_usize("group-size", 64);
+            let (packed, report) =
+                quantize_weights_packed(&weights, QuantMethod::Rtn, bits, group, false, &[], &[], &[]);
+            log::info!(
+                "packed weights: {bits}-bit group {group}, mean rel err {:.5}, projections {} B",
+                report.mean_error(),
+                packed.projection_bytes()
+            );
+            NativeModel::from_store(Arc::new(packed))
+        }
+    }
+}
+
 fn make_backend(args: &Args, cfg: &ModelConfig, seed: u64) -> Box<dyn Backend> {
-    let weights = ModelWeights::init(cfg, seed);
     if args.flag("xla") {
+        let weights = ModelWeights::init(cfg, seed);
         let dir = std::path::PathBuf::from(args.get_str("artifacts", "artifacts"));
         let manifest = ArtifactManifest::load(&dir).unwrap_or_else(|e| {
             eprintln!("failed to load artifacts from {dir:?}: {e:#}\n(run `make artifacts` first)");
@@ -65,7 +159,7 @@ fn make_backend(args: &Args, cfg: &ModelConfig, seed: u64) -> Box<dyn Backend> {
             std::process::exit(1);
         }))
     } else {
-        Box::new(NativeBackend::new(NativeModel::new(weights)))
+        Box::new(NativeBackend::new(native_model(args, cfg, seed)))
     }
 }
 
@@ -102,6 +196,7 @@ fn engine_config(args: &Args, cfg: &ModelConfig) -> EngineConfig {
         prefill_chunk: usize::MAX,
         prefix_cache_blocks: 0,
         kv_dtype,
+        weight_dtype: weight_dtype(args),
     }
 }
 
@@ -110,8 +205,15 @@ fn cmd_serve(args: &Args) -> i32 {
     let econf = engine_config(args, &cfg);
     let workers = args.get_usize("workers", 1);
     let seed = args.get_u64("seed", 0);
+    // A `--weights` artifact is loaded ONCE and shared: NativeModel is
+    // Arc-backed, so every worker serves the same store instead of
+    // paying one artifact copy each.
+    let preloaded = (!args.flag("xla")).then(|| load_weights_model(args, &cfg)).flatten();
     let router = Arc::new(Router::new(RouterConfig { engine: econf, workers }, |w| {
-        make_backend(args, &cfg, seed + w as u64)
+        match &preloaded {
+            Some(model) => Box::new(NativeBackend::new(model.clone())) as Box<dyn Backend>,
+            None => make_backend(args, &cfg, seed + w as u64),
+        }
     }));
     let port = args.get_usize("port", 8765);
     let addr = format!("127.0.0.1:{port}");
@@ -164,6 +266,7 @@ fn cmd_quantize(args: &Args) -> i32 {
     let cfg = model_config(args);
     let bits = args.get_usize("bits", 4) as u32;
     let group_size = args.get_usize("group-size", 64);
+    let act_order = args.flag("act-order");
     let method = match args.get_str("method", "gptq") {
         "rtn" => QuantMethod::Rtn,
         _ => QuantMethod::Gptq,
@@ -174,12 +277,43 @@ fn cmd_quantize(args: &Args) -> i32 {
     let calib_tokens = ByteTokenizer::new().encode(&calib_text);
     log::info!("calibrating over {} tokens…", calib_tokens.len());
     let (a, m, f) = model.calibrate(&calib_tokens);
-    let report = quantize_weights(&mut weights, method, bits, group_size, &a, &m, &f);
+    if args.flag("pack") {
+        // Straight to the packed serving artifact — no dequantized-f32
+        // round-trip; `serve`/`generate` read it back via
+        // `--weight-dtype qN --weights FILE`.
+        if WeightDtype::from_bits(bits).is_none() {
+            eprintln!("--pack serves 3|4|8-bit weights, not {bits}");
+            return 2;
+        }
+        let (packed, report) =
+            quantize_weights_packed(&weights, method, bits, group_size, act_order, &a, &m, &f);
+        println!(
+            "packed {:?} to {} bits (group {}{}): mean relative error {:.5}, projections {} B ({:.2}× whole-model compression)",
+            args.get_str("model", "tiny"),
+            bits,
+            group_size,
+            if act_order { ", act_order" } else { "" },
+            report.mean_error(),
+            packed.projection_bytes(),
+            report.compression_ratio()
+        );
+        if let Some(out) = args.get("out") {
+            if let Err(e) = packed.save(std::path::Path::new(out)) {
+                eprintln!("save failed: {e:#}");
+                return 1;
+            }
+            println!("wrote packed weights to {out}");
+        }
+        return 0;
+    }
+    let report =
+        quantize_weights(&mut weights, method, bits, group_size, act_order, &a, &m, &f);
     println!(
-        "quantized {:?} to {} bits (group {}): mean relative error {:.5}, {:.2}× compression",
+        "quantized {:?} to {} bits (group {}{}): mean relative error {:.5}, {:.2}× compression",
         args.get_str("model", "tiny"),
         bits,
         group_size,
+        if act_order { ", act_order" } else { "" },
         report.mean_error(),
         report.compression_ratio()
     );

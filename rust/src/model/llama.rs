@@ -1,4 +1,4 @@
-//! Native f32 Llama-GQA forward pass over the paged KV cache.
+//! Native Llama-GQA forward pass over the paged KV cache.
 //!
 //! This is the reference/fast-CPU implementation of the same computation
 //! the AOT-lowered HLO performs (`python/compile/model.py`): RMSNorm →
@@ -8,8 +8,16 @@
 //! block table (blockwise online softmax, in-tile dequant on a Q8
 //! store) — mirroring the Pallas kernel's schedule. No dense KV copy is
 //! ever materialized on the forward path.
+//!
+//! Weights are reached through the [`WeightStore`] trait, so the same
+//! forward pass serves dense f32 tensors or packed GPTQ/RTN projections
+//! (`store::PackedModelWeights`, dequantized per row-tile inside the
+//! fused matmul — no dense weight copy either). Packed serving is
+//! **bit-identical** to serving the dequantized reconstruction, so every
+//! interleaving/determinism contract below holds at any weight dtype.
 
 use super::config::ModelConfig;
+use super::store::{Proj, WeightStore};
 use super::weights::ModelWeights;
 use crate::attention::gqa::{auto_prefill_threads, gqa_attention};
 use crate::attention::paged::{
@@ -17,20 +25,49 @@ use crate::attention::paged::{
 };
 use crate::kvcache::{BlockTable, KvStore};
 use crate::tensor::{rmsnorm, Tensor};
+use std::sync::Arc;
 
-/// A model executable on the native backend.
+/// A model executable on the native backend, over any [`WeightStore`].
 #[derive(Debug, Clone)]
 pub struct NativeModel {
-    pub weights: ModelWeights,
+    store: Arc<dyn WeightStore>,
 }
 
 impl NativeModel {
+    /// Model over dense f32 weights (the default store).
     pub fn new(weights: ModelWeights) -> Self {
-        NativeModel { weights }
+        Self::from_store(Arc::new(weights))
+    }
+
+    /// Model over an explicit weight store (dense or packed).
+    pub fn from_store(store: Arc<dyn WeightStore>) -> Self {
+        NativeModel { store }
+    }
+
+    /// The weight store this model serves from.
+    pub fn store(&self) -> &dyn WeightStore {
+        &*self.store
+    }
+
+    /// The dense f32 weights, when that is what the store holds (the
+    /// XLA upload and dense-save paths need raw tensors).
+    pub fn dense_weights(&self) -> Option<&ModelWeights> {
+        self.store.dense()
     }
 
     pub fn config(&self) -> &ModelConfig {
-        &self.weights.config
+        self.store.config()
+    }
+
+    /// `x · W(layer, p)ᵀ` through the store — the single projection
+    /// entry point for both weight dtypes (`threads == 0` auto-sizes
+    /// the row fan-out; bit-identical at every width).
+    fn proj(&self, layer: usize, p: Proj, x: &Tensor) -> Tensor {
+        let m = x.shape()[0];
+        let rows = self.store.proj_rows(layer, p);
+        let mut out = Tensor::zeros(&[m, rows]);
+        self.store.proj_into(layer, p, x.data(), m, 0, out.data_mut());
+        out
     }
 
     fn embed_tokens(&self, tokens: &[u32]) -> Tensor {
@@ -38,18 +75,17 @@ impl NativeModel {
         let mut x = Vec::with_capacity(tokens.len() * d);
         for &t in tokens {
             assert!((t as usize) < self.config().vocab, "token {t} out of vocab");
-            x.extend_from_slice(self.weights.embed.row(t as usize));
+            x.extend_from_slice(self.store.embed().row(t as usize));
         }
         Tensor::from_vec(&[tokens.len(), d], x)
     }
 
     /// One transformer block's MLP (SwiGLU) applied to `[n, d]`.
     fn mlp(&self, layer: usize, x: &Tensor) -> Tensor {
-        let l = &self.weights.layers[layer];
-        let mut gate = x.matmul_nt(&l.w_gate);
-        let up = x.matmul_nt(&l.w_up);
+        let mut gate = self.proj(layer, Proj::WGate, x);
+        let up = self.proj(layer, Proj::WUp, x);
         gate.silu_inplace();
-        gate.mul(&up).matmul_nt(&l.w_down)
+        self.proj(layer, Proj::WDown, &gate.mul(&up))
     }
 
     /// Process `tokens` (prompt chunk), appending their K/V to the cache.
@@ -101,12 +137,11 @@ impl NativeModel {
 
         let mut x = self.embed_tokens(tokens);
         for li in 0..cfg.n_layers {
-            let l = &self.weights.layers[li];
             // Attention sub-block.
-            let xn = rmsnorm(&x, &l.rms_attn, cfg.rms_eps);
-            let q = xn.matmul_nt(&l.wq);
-            let k = xn.matmul_nt(&l.wk);
-            let v = xn.matmul_nt(&l.wv);
+            let xn = rmsnorm(&x, self.store.rms_attn(li), cfg.rms_eps);
+            let q = self.proj(li, Proj::Wq, &xn);
+            let k = self.proj(li, Proj::Wk, &xn);
+            let v = self.proj(li, Proj::Wv, &xn);
             let kvd = cfg.kv_dim();
             for (i, &(b, s)) in slots.iter().enumerate() {
                 cache.write_token(li, b, s, &k.data()[i * kvd..(i + 1) * kvd], &v.data()[i * kvd..(i + 1) * kvd]);
@@ -126,10 +161,10 @@ impl NativeModel {
                 threads,
                 &mut attn,
             );
-            let attn = Tensor::from_vec(&[n, cfg.d_model], attn).matmul_nt(&l.wo);
+            let attn = self.proj(li, Proj::Wo, &Tensor::from_vec(&[n, cfg.d_model], attn));
             x.add_assign(&attn);
             // MLP sub-block.
-            let xn2 = rmsnorm(&x, &l.rms_mlp, cfg.rms_eps);
+            let xn2 = rmsnorm(&x, self.store.rms_mlp(li), cfg.rms_eps);
             let h = self.mlp(li, &xn2);
             x.add_assign(&h);
         }
@@ -200,11 +235,10 @@ impl NativeModel {
         // overwritten by every paged_decode_batch call).
         let mut attn = Tensor::zeros(&[n, cfg.d_model]);
         for li in 0..cfg.n_layers {
-            let l = &self.weights.layers[li];
-            let xn = rmsnorm(&x, &l.rms_attn, cfg.rms_eps);
-            let q = xn.matmul_nt(&l.wq); // [n, d]
-            let k = xn.matmul_nt(&l.wk); // [n, kvd]
-            let v = xn.matmul_nt(&l.wv);
+            let xn = rmsnorm(&x, self.store.rms_attn(li), cfg.rms_eps);
+            let q = self.proj(li, Proj::Wq, &xn); // [n, d]
+            let k = self.proj(li, Proj::Wk, &xn); // [n, kvd]
+            let v = self.proj(li, Proj::Wv, &xn);
             for (i, &(blk, slot)) in slots.iter().enumerate() {
                 cache.write_token(
                     li,
@@ -217,15 +251,15 @@ impl NativeModel {
             // Attention is per-sequence (distinct block tables): fan the
             // batch across scoped workers, one workspace each.
             paged_decode_batch(&acfg, cache, li, q.data(), &table_refs, threads, attn.data_mut());
-            let attn_out = attn.matmul_nt(&l.wo);
+            let attn_out = self.proj(li, Proj::Wo, &attn);
             x.add_assign(&attn_out);
-            let xn2 = rmsnorm(&x, &l.rms_mlp, cfg.rms_eps);
+            let xn2 = rmsnorm(&x, self.store.rms_mlp(li), cfg.rms_eps);
             let h = self.mlp(li, &xn2);
             x.add_assign(&h);
         }
         // Final norm + LM head for every row at once.
-        let normed = rmsnorm(&x, &self.weights.final_norm, cfg.rms_eps);
-        let logits = normed.matmul_nt(&self.weights.lm_head); // [n, vocab]
+        let normed = rmsnorm(&x, self.store.final_norm(), cfg.rms_eps);
+        let logits = normed.matmul_nt(self.store.lm_head()); // [n, vocab]
         (0..n).map(|i| logits.row(i).to_vec()).collect()
     }
 
@@ -336,11 +370,10 @@ impl NativeModel {
         let mut x = self.embed_tokens(&all_tokens); // [n, d]
         let mut attn = Tensor::zeros(&[n, cfg.d_model]);
         for li in 0..cfg.n_layers {
-            let l = &self.weights.layers[li];
-            let xn = rmsnorm(&x, &l.rms_attn, cfg.rms_eps);
-            let q = xn.matmul_nt(&l.wq); // [n, d] — one stream of wq for ALL rows
-            let k = xn.matmul_nt(&l.wk);
-            let v = xn.matmul_nt(&l.wv);
+            let xn = rmsnorm(&x, self.store.rms_attn(li), cfg.rms_eps);
+            let q = self.proj(li, Proj::Wq, &xn); // [n, d] — one stream of wq for ALL rows
+            let k = self.proj(li, Proj::Wk, &xn);
+            let v = self.proj(li, Proj::Wv, &xn);
             for (i, &(b, s)) in slots.iter().enumerate() {
                 cache.write_token(
                     li,
@@ -382,9 +415,9 @@ impl NativeModel {
                     &mut attn.data_mut()[n_p * row..],
                 );
             }
-            let attn_out = attn.matmul_nt(&l.wo); // one stream of wo
+            let attn_out = self.proj(li, Proj::Wo, &attn); // one stream of wo
             x.add_assign(&attn_out);
-            let xn2 = rmsnorm(&x, &l.rms_mlp, cfg.rms_eps);
+            let xn2 = rmsnorm(&x, self.store.rms_mlp(li), cfg.rms_eps);
             let h = self.mlp(li, &xn2); // one stream of the MLP weights
             x.add_assign(&h);
         }
@@ -412,8 +445,8 @@ impl NativeModel {
             sel.extend_from_slice(x.row(r));
         }
         let sel = Tensor::from_vec(&[sel_rows.len(), cfg.d_model], sel);
-        let normed = rmsnorm(&sel, &self.weights.final_norm, cfg.rms_eps);
-        let logits = normed.matmul_nt(&self.weights.lm_head);
+        let normed = rmsnorm(&sel, self.store.final_norm(), cfg.rms_eps);
+        let logits = normed.matmul_nt(self.store.lm_head());
         let mut next_want = 0usize;
         let chunk_logits = (0..n_c)
             .map(|ci| {
@@ -434,12 +467,8 @@ impl NativeModel {
         let cfg = self.config();
         let n = x.shape()[0];
         let last = Tensor::from_vec(&[1, cfg.d_model], x.row(n - 1).to_vec());
-        let normed = rmsnorm(&last, &self.final_norm(), cfg.rms_eps);
-        normed.matmul_nt(&self.weights.lm_head).into_vec()
-    }
-
-    fn final_norm(&self) -> Vec<f32> {
-        self.weights.final_norm.clone()
+        let normed = rmsnorm(&last, self.store.final_norm(), cfg.rms_eps);
+        normed.matmul_nt(self.store.lm_head()).into_vec()
     }
 
     /// Run a calibration pass over `tokens` *without* a cache, capturing
@@ -455,23 +484,22 @@ impl NativeModel {
 
         let mut x = self.embed_tokens(tokens);
         for li in 0..cfg.n_layers {
-            let l = &self.weights.layers[li];
-            let xn = rmsnorm(&x, &l.rms_attn, cfg.rms_eps);
+            let xn = rmsnorm(&x, self.store.rms_attn(li), cfg.rms_eps);
             attn_in.push(xn.data().to_vec());
-            let q = xn.matmul_nt(&l.wq);
-            let k = xn.matmul_nt(&l.wk);
-            let v = xn.matmul_nt(&l.wv);
+            let q = self.proj(li, Proj::Wq, &xn);
+            let k = self.proj(li, Proj::Wk, &xn);
+            let v = self.proj(li, Proj::Wv, &xn);
             let attn = gqa_attention(&cfg.attn_config(), q.data(), k.data(), v.data(), n, n, 0);
-            let attn = Tensor::from_vec(&[n, cfg.d_model], attn).matmul_nt(&l.wo);
+            let attn = self.proj(li, Proj::Wo, &Tensor::from_vec(&[n, cfg.d_model], attn));
             x.add_assign(&attn);
-            let xn2 = rmsnorm(&x, &l.rms_mlp, cfg.rms_eps);
+            let xn2 = rmsnorm(&x, self.store.rms_mlp(li), cfg.rms_eps);
             mlp_in.push(xn2.data().to_vec());
-            let mut gate = xn2.matmul_nt(&l.w_gate);
-            let up = xn2.matmul_nt(&l.w_up);
+            let mut gate = self.proj(li, Proj::WGate, &xn2);
+            let up = self.proj(li, Proj::WUp, &xn2);
             gate.silu_inplace();
             let h = gate.mul(&up);
             ff_hidden.push(h.data().to_vec());
-            let down = h.matmul_nt(&l.w_down);
+            let down = self.proj(li, Proj::WDown, &h);
             x.add_assign(&down);
         }
         (attn_in, mlp_in, ff_hidden)
@@ -762,16 +790,55 @@ mod tests {
     #[test]
     fn gptq_calibrated_model_still_generates() {
         use crate::model::weights::{quantize_weights, QuantMethod};
-        let (model, mut cache, mut alloc) = mk(7);
+        let cfg = ModelConfig::tiny();
+        let weights = ModelWeights::init(&cfg, 7);
+        let model = NativeModel::new(weights.clone());
+        let mut cache = PagedKvCache::new(cfg.n_layers, 32, 8, cfg.n_kv_heads, cfg.head_dim());
+        let mut alloc = BlockAllocator::new(32, 8);
         let calib_tokens: Vec<u32> = (0..32).map(|i| 256 + 0 * i + (i % 250)).collect();
         let (a, m, f) = model.calibrate(&calib_tokens);
-        let mut w = model.weights.clone();
-        let report = quantize_weights(&mut w, QuantMethod::Gptq, 4, 32, &a, &m, &f);
+        let mut w = weights;
+        let report = quantize_weights(&mut w, QuantMethod::Gptq, 4, 32, false, &a, &m, &f);
         assert!(report.mean_error() < 0.25, "mean err {}", report.mean_error());
         let qmodel = NativeModel::new(w);
         let mut table = BlockTable::new();
         table.reserve(4, &mut alloc);
         let logits = qmodel.prefill(&[256, 1, 2, 3], &mut cache, &mut table);
         assert!(logits.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn packed_store_forward_is_bit_identical_to_its_reconstruction() {
+        // The packed-weight serving contract at model level: a packed
+        // store and a dense store holding numerically-identical weights
+        // (the fake-quant reconstruction of the SAME quantization) give
+        // byte-identical logits on prefill and decode. The heavyweight
+        // grid (bits × threads × mixed steps × engine) lives in
+        // tests/weights_parity.rs.
+        use crate::model::weights::{quantize_weights, quantize_weights_packed, QuantMethod};
+        let cfg = ModelConfig::tiny();
+        let weights = ModelWeights::init(&cfg, 17);
+        let mut recon = weights.clone();
+        quantize_weights(&mut recon, QuantMethod::Rtn, 4, 32, false, &[], &[], &[]);
+        let (packed, _) =
+            quantize_weights_packed(&weights, QuantMethod::Rtn, 4, 32, false, &[], &[], &[]);
+        let dense_model = NativeModel::new(recon);
+        let packed_model = NativeModel::from_store(std::sync::Arc::new(packed));
+        assert_eq!(
+            packed_model.store().dtype(),
+            crate::model::WeightDtype::Q4,
+            "store dtype surfaces"
+        );
+        let run = |model: &NativeModel| {
+            let mut cache =
+                PagedKvCache::new(cfg.n_layers, 32, 8, cfg.n_kv_heads, cfg.head_dim());
+            let mut alloc = BlockAllocator::new(32, 8);
+            let mut table = BlockTable::new();
+            table.reserve(8, &mut alloc);
+            let pre = model.prefill(&[256, 1, 2, 3, 4], &mut cache, &mut table);
+            let dec = model.decode_step(5, &mut cache, &mut table);
+            (pre, dec)
+        };
+        assert_eq!(run(&dense_model), run(&packed_model));
     }
 }

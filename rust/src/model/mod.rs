@@ -1,19 +1,25 @@
 //! Llama-architecture model: config, weights, native forward, sampling.
 //!
 //! The serving engine is model-agnostic up to this module's interface:
-//! [`config::ModelConfig`] fixes shapes, [`weights::ModelWeights`] holds
-//! (optionally GPTQ-quantized) parameters, [`llama`] implements the native
-//! f32 forward pass over the paged KV cache, and [`sampler`] turns logits
-//! into tokens. The XLA backend executes the same architecture from
-//! AOT-lowered HLO (`python/compile/model.py`) — `llama` doubles as its
-//! numerics oracle in integration tests.
+//! [`config::ModelConfig`] fixes shapes, [`store::WeightStore`] abstracts
+//! parameter storage — dense f32 ([`weights::ModelWeights`]) or packed
+//! GPTQ/RTN ([`store::PackedModelWeights`], served through the fused
+//! dequant-matmul) — [`llama`] implements the native forward pass over
+//! the paged KV cache, and [`sampler`] turns logits into tokens. The XLA
+//! backend executes the same architecture from AOT-lowered HLO
+//! (`python/compile/model.py`) — `llama` doubles as its numerics oracle
+//! in integration tests.
 
 pub mod config;
 pub mod llama;
 pub mod sampler;
+pub mod store;
 pub mod weights;
 
 pub use config::ModelConfig;
 pub use llama::NativeModel;
 pub use sampler::{Sampler, SamplingParams};
+pub use store::{
+    PackedModelWeights, PackedProjection, Proj, QuantizedLayerWeights, WeightDtype, WeightStore,
+};
 pub use weights::ModelWeights;

@@ -5,6 +5,7 @@
 //! format shares with the Pallas dequant-matmul kernel.
 
 use super::config::ModelConfig;
+use super::store::{PackedModelWeights, PackedProjection, QuantizedLayerWeights, WeightDtype};
 use crate::quant::{gptq_quantize, rtn_quantize, GptqConfig, HessianAccumulator, QuantizedMatrix};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
@@ -261,19 +262,87 @@ pub enum QuantMethod {
     Rtn,
 }
 
+/// Finalized layer Hessian for one calibration slice (`[n, dim]` rows),
+/// or `None` when the method/slice can't use one — computed **once per
+/// slice per layer** and shared by every projection consuming that
+/// slice (wq/wk/wv share the attention Hessian; gate/up share the MLP
+/// one), since Hessian accumulation is the dominant calibration cost.
+fn slice_hessian(method: QuantMethod, acts: Option<&[f32]>, dim: usize) -> Option<Vec<f64>> {
+    match (method, acts) {
+        (QuantMethod::Gptq, Some(x)) if !x.is_empty() => {
+            let n = x.len() / dim;
+            let mut acc = HessianAccumulator::new(dim);
+            acc.add_batch(x, n);
+            Some(acc.finalize())
+        }
+        _ => None,
+    }
+}
+
+/// Quantize one `[rows, cols]` matrix: GPTQ against a precomputed
+/// Hessian when one is available, RTN otherwise. The single
+/// quantization core shared by the fake-quant path
+/// ([`quantize_weights`]) and the packed serving path
+/// ([`quantize_weights_packed`]), so both produce the *same* integer
+/// levels for the same inputs (the packed-vs-reconstruction parity
+/// tests lean on this determinism).
+fn quantize_matrix(
+    data: &[f32],
+    rows: usize,
+    cols: usize,
+    bits: u32,
+    group_size: usize,
+    act_order: bool,
+    hessian: Option<&[f64]>,
+) -> QuantizedMatrix {
+    match hessian {
+        Some(h) => {
+            let cfg = GptqConfig { bits, group_size, damp: 0.01, act_order };
+            gptq_quantize(data, rows, cols, h, &cfg)
+        }
+        None => rtn_quantize(data, rows, cols, bits, group_size),
+    }
+}
+
+/// One layer's Hessians in projection order: attention (wq/wk/wv), MLP
+/// input (gate/up), FFN hidden (down); `wo` never has one.
+fn layer_hessians(
+    method: QuantMethod,
+    layer: usize,
+    d_model: usize,
+    d_ff: usize,
+    calib_attn: &[Vec<f32>],
+    calib_mlp: &[Vec<f32>],
+    calib_ff: &[Vec<f32>],
+) -> (Option<Vec<f64>>, Option<Vec<f64>>, Option<Vec<f64>>) {
+    (
+        slice_hessian(method, calib_attn.get(layer).map(|v| v.as_slice()), d_model),
+        slice_hessian(method, calib_mlp.get(layer).map(|v| v.as_slice()), d_model),
+        slice_hessian(method, calib_ff.get(layer).map(|v| v.as_slice()), d_ff),
+    )
+}
+
 /// Quantize every projection matrix of `weights` in place (weights are
 /// replaced by their dequantized reconstruction — weight-only quantization
 /// with f32 compute, the W4A16 pattern) and report the damage.
 ///
+/// This is the **fake-quant** path: useful for accuracy ablations, but
+/// the serving memory win is zero because storage goes straight back to
+/// dense f32. Serve from [`quantize_weights_packed`]'s output to keep
+/// the projections packed end to end.
+///
 /// `calib[layer]` are calibration activation rows (`[n, d_model]` for
 /// attention/gate/up; the MLP-down Hessian uses hidden activations the
 /// caller captured, `calib_ff[layer]`: `[n, d_ff]`). For `Rtn` the
-/// calibration slices are ignored.
+/// calibration slices are ignored. `act_order` enables GPTQ's
+/// decreasing-Hessian-diagonal column ordering (`GptqConfig::act_order`).
+#[allow(clippy::too_many_arguments)]
 pub fn quantize_weights(
     weights: &mut ModelWeights,
     method: QuantMethod,
     bits: u32,
     group_size: usize,
+    act_order: bool,
     calib_attn: &[Vec<f32>],
     calib_mlp: &[Vec<f32>],
     calib_ff: &[Vec<f32>],
@@ -284,21 +353,12 @@ pub fn quantize_weights(
     let mut per_matrix_error = Vec::new();
     let mut quant_bytes = 0usize;
 
-    let mut do_matrix = |name: String, t: &mut Tensor, acts: Option<&[f32]>, in_dim: usize| {
-        let rows = t.shape()[0];
-        let cols = t.shape()[1];
-        debug_assert_eq!(cols, in_dim);
-        let qm: QuantizedMatrix = match (method, acts) {
-            (QuantMethod::Gptq, Some(x)) if !x.is_empty() => {
-                let n = x.len() / in_dim;
-                let mut acc = HessianAccumulator::new(in_dim);
-                acc.add_batch(x, n);
-                let h = acc.finalize();
-                let cfg = GptqConfig { bits, group_size, damp: 0.01, act_order: false };
-                gptq_quantize(t.data(), rows, cols, &h, &cfg)
-            }
-            _ => rtn_quantize(t.data(), rows, cols, bits, group_size),
-        };
+    // In-place per-matrix replacement: at most one matrix's
+    // reconstruction is alive at a time, so peak memory stays ≈ the
+    // model itself.
+    let mut do_matrix = |name: String, t: &mut Tensor, hessian: Option<&[f64]>| {
+        let (rows, cols) = (t.shape()[0], t.shape()[1]);
+        let qm = quantize_matrix(t.data(), rows, cols, bits, group_size, act_order, hessian);
         quant_bytes += qm.storage_bytes();
         let deq = qm.dequantize();
         per_matrix_error.push((name, crate::quant::relative_error(t.data(), &deq)));
@@ -306,21 +366,95 @@ pub fn quantize_weights(
     };
 
     for (i, l) in weights.layers.iter_mut().enumerate() {
-        let attn_x = calib_attn.get(i).map(|v| v.as_slice());
-        let mlp_x = calib_mlp.get(i).map(|v| v.as_slice());
-        let ff_x = calib_ff.get(i).map(|v| v.as_slice());
-        do_matrix(format!("layer{i}.wq"), &mut l.wq, attn_x, d);
-        do_matrix(format!("layer{i}.wk"), &mut l.wk, attn_x, d);
-        do_matrix(format!("layer{i}.wv"), &mut l.wv, attn_x, d);
-        do_matrix(format!("layer{i}.wo"), &mut l.wo, None, d);
-        do_matrix(format!("layer{i}.w_gate"), &mut l.w_gate, mlp_x, d);
-        do_matrix(format!("layer{i}.w_up"), &mut l.w_up, mlp_x, d);
-        do_matrix(format!("layer{i}.w_down"), &mut l.w_down, ff_x, ff);
+        let (attn_h, mlp_h, ff_h) =
+            layer_hessians(method, i, d, ff, calib_attn, calib_mlp, calib_ff);
+        do_matrix(format!("layer{i}.wq"), &mut l.wq, attn_h.as_deref());
+        do_matrix(format!("layer{i}.wk"), &mut l.wk, attn_h.as_deref());
+        do_matrix(format!("layer{i}.wv"), &mut l.wv, attn_h.as_deref());
+        do_matrix(format!("layer{i}.wo"), &mut l.wo, None);
+        do_matrix(format!("layer{i}.w_gate"), &mut l.w_gate, mlp_h.as_deref());
+        do_matrix(format!("layer{i}.w_up"), &mut l.w_up, mlp_h.as_deref());
+        do_matrix(format!("layer{i}.w_down"), &mut l.w_down, ff_h.as_deref());
     }
     // Embedding / lm_head stay f32 (standard GPTQ practice).
     quant_bytes += weights.embed.len() * 4 + weights.lm_head.len() * 4;
 
     QuantReport { bits, group_size, per_matrix_error, f32_bytes, quant_bytes }
+}
+
+/// Quantize every projection matrix straight into the **packed serving
+/// representation** — no dequantized-f32 round-trip. The returned
+/// [`PackedModelWeights`] is a `WeightStore` the engine serves from
+/// directly: the fused dequant-matmul (`quant::matmul`) reads the packed
+/// payload per row-tile, and the result is bit-identical to serving the
+/// eagerly-dequantized reconstruction (enforced by
+/// `tests/weights_parity.rs`).
+///
+/// `bits` must be a servable width (3 | 4 | 8 — see
+/// [`WeightDtype::from_bits`]); calibration slices behave exactly as in
+/// [`quantize_weights`]. Embedding, LM head, and norms are copied as
+/// f32.
+#[allow(clippy::too_many_arguments)]
+pub fn quantize_weights_packed(
+    weights: &ModelWeights,
+    method: QuantMethod,
+    bits: u32,
+    group_size: usize,
+    act_order: bool,
+    calib_attn: &[Vec<f32>],
+    calib_mlp: &[Vec<f32>],
+    calib_ff: &[Vec<f32>],
+) -> (PackedModelWeights, QuantReport) {
+    assert!(
+        WeightDtype::from_bits(bits).is_some(),
+        "packed serving supports 3/4/8-bit weights, not {bits}"
+    );
+    let d = weights.config.d_model;
+    let ff = weights.config.d_ff;
+    let f32_bytes = weights.f32_bytes();
+    let mut per_matrix_error = Vec::new();
+    let mut quant_bytes = 0usize;
+
+    let mut do_matrix = |name: String, t: &Tensor, hessian: Option<&[f64]>| {
+        let (rows, cols) = (t.shape()[0], t.shape()[1]);
+        let qm = quantize_matrix(t.data(), rows, cols, bits, group_size, act_order, hessian);
+        quant_bytes += qm.storage_bytes();
+        per_matrix_error
+            .push((name, crate::quant::relative_error(t.data(), &qm.dequantize())));
+        PackedProjection::from_quantized(&qm)
+    };
+
+    let layers = weights
+        .layers
+        .iter()
+        .enumerate()
+        .map(|(i, l)| {
+            let (attn_h, mlp_h, ff_h) =
+                layer_hessians(method, i, d, ff, calib_attn, calib_mlp, calib_ff);
+            QuantizedLayerWeights {
+                wq: do_matrix(format!("layer{i}.wq"), &l.wq, attn_h.as_deref()),
+                wk: do_matrix(format!("layer{i}.wk"), &l.wk, attn_h.as_deref()),
+                wv: do_matrix(format!("layer{i}.wv"), &l.wv, attn_h.as_deref()),
+                wo: do_matrix(format!("layer{i}.wo"), &l.wo, None),
+                w_gate: do_matrix(format!("layer{i}.w_gate"), &l.w_gate, mlp_h.as_deref()),
+                w_up: do_matrix(format!("layer{i}.w_up"), &l.w_up, mlp_h.as_deref()),
+                w_down: do_matrix(format!("layer{i}.w_down"), &l.w_down, ff_h.as_deref()),
+                rms_attn: l.rms_attn.clone(),
+                rms_mlp: l.rms_mlp.clone(),
+            }
+        })
+        .collect();
+    quant_bytes += weights.embed.len() * 4 + weights.lm_head.len() * 4;
+    let store = PackedModelWeights {
+        config: weights.config,
+        bits,
+        group_size,
+        embed: weights.embed.clone(),
+        layers,
+        final_norm: weights.final_norm.clone(),
+        lm_head: weights.lm_head.clone(),
+    };
+    (store, QuantReport { bits, group_size, per_matrix_error, f32_bytes, quant_bytes })
 }
 
 #[cfg(test)]
@@ -369,7 +503,7 @@ mod tests {
         let c = ModelConfig::tiny();
         let mut w = ModelWeights::init(&c, 4);
         let orig = w.layers[0].wq.data().to_vec();
-        let report = quantize_weights(&mut w, QuantMethod::Rtn, 4, 32, &[], &[], &[]);
+        let report = quantize_weights(&mut w, QuantMethod::Rtn, 4, 32, false, &[], &[], &[]);
         // tiny's f32 embed+lm_head dominate, so the whole-model ratio is
         // modest; the quantized projection payload itself must shrink ~6×.
         assert!(report.compression_ratio() > 1.5, "ratio={}", report.compression_ratio());
@@ -383,6 +517,47 @@ mod tests {
         );
         assert!(report.mean_error() > 0.0 && report.mean_error() < 0.2);
         assert_ne!(w.layers[0].wq.data(), orig.as_slice(), "weights replaced by dequant");
+    }
+
+    #[test]
+    fn packed_quantization_matches_fake_quant_levels() {
+        // The packed path must be the same quantizer as the fake-quant
+        // path — only the storage differs. RTN here (deterministic, no
+        // calibration); the reconstruction of the packed store equals
+        // the fake-quant weights bit for bit.
+        let c = ModelConfig::tiny();
+        let w = ModelWeights::init(&c, 6);
+        let mut fake = w.clone();
+        let r1 = quantize_weights(&mut fake, QuantMethod::Rtn, 4, 32, false, &[], &[], &[]);
+        let (packed, r2) = quantize_weights_packed(&w, QuantMethod::Rtn, 4, 32, false, &[], &[], &[]);
+        assert_eq!(r1.quant_bytes, r2.quant_bytes);
+        assert_eq!(r1.per_matrix_error, r2.per_matrix_error);
+        assert_eq!(packed.layers[0].wq.w.dequantize(), fake.layers[0].wq.data());
+        assert_eq!(packed.layers[1].w_down.w.dequantize(), fake.layers[1].w_down.data());
+        // Untouched sides are copied verbatim.
+        assert_eq!(packed.embed.data(), w.embed.data());
+        assert_eq!(packed.lm_head.data(), w.lm_head.data());
+        assert_eq!(packed.final_norm, w.final_norm);
+    }
+
+    #[test]
+    fn act_order_flag_reaches_gptq_and_stays_finite() {
+        // quantize_weights used to hardcode act_order: false; the flag
+        // now reaches GptqConfig. act_order stores per-column grids
+        // (group_size 1 semantics), which shows up as a larger params
+        // payload — observable proof the flag took effect.
+        let c = ModelConfig::tiny();
+        let w = ModelWeights::init(&c, 8);
+        let model = crate::model::NativeModel::new(w.clone());
+        let calib: Vec<u32> = (0..24).map(|i| 256 + (i % 120)).collect();
+        let (a, m, f) = model.calibrate(&calib);
+        let mut base = w.clone();
+        let rb = quantize_weights(&mut base, QuantMethod::Gptq, 4, 32, false, &a, &m, &f);
+        let mut ao = w.clone();
+        let ra = quantize_weights(&mut ao, QuantMethod::Gptq, 4, 32, true, &a, &m, &f);
+        assert!(ra.quant_bytes > rb.quant_bytes, "per-column grids must cost more bytes");
+        assert!(ao.layers[0].wq.data().iter().all(|v| v.is_finite()));
+        assert!(ra.mean_error() < 0.5, "act_order error {}", ra.mean_error());
     }
 
     #[test]

@@ -481,6 +481,38 @@ mod tests {
     }
 
     #[test]
+    fn act_order_permutes_and_unpermutes_columns_exactly() {
+        // With a DIAGONAL Hessian the inverse factor is diagonal, so no
+        // error propagates between columns — processing order cannot
+        // change any column's quantization. Per-column grids
+        // (group_size 1) remove the grouping difference too. act_order
+        // over a scrambled descending diagonal must therefore produce
+        // EXACTLY the no-reorder result: columns were processed in
+        // desc-diag order and stored back in original positions. A
+        // mis-permutation (or a missed un-permutation) would swap
+        // columns and fail bit-for-bit.
+        let mut rng = Rng::new(50);
+        let (rows, cols) = (5, 24);
+        let w = rng.normal_vec(rows * cols, 1.0);
+        // Distinct diagonal values in scrambled order, so the act_order
+        // permutation is a nontrivial derangement of 0..cols.
+        let mut h = vec![0.0f64; cols * cols];
+        for i in 0..cols {
+            h[i * cols + i] = 1.0 + ((i * 7 + 3) % cols) as f64;
+        }
+        let base = GptqConfig { bits: 4, group_size: 1, damp: 0.01, act_order: false };
+        let ao = GptqConfig { act_order: true, ..base };
+        let g_base = gptq_quantize(&w, rows, cols, &h, &base);
+        let g_ao = gptq_quantize(&w, rows, cols, &h, &ao);
+        assert_eq!(g_ao.q, g_base.q, "levels must land on original columns");
+        assert_eq!(g_ao.dequantize(), g_base.dequantize());
+        // act_order stores per-column grids regardless of the requested
+        // group size (the storage contract the packed store relies on).
+        assert_eq!(g_ao.group_size, 1);
+        assert_eq!(g_ao.params.len(), rows * cols);
+    }
+
+    #[test]
     fn dead_channels_are_survivable() {
         // Zero calibration activity on some channels must not break the
         // Cholesky (damping + diagonal rescue).

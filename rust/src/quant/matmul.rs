@@ -1,0 +1,365 @@
+//! Fused group-wise dequant-matmul — the packed-weight serving kernel.
+//!
+//! `out = A · Wᵀ` where `W` stays in its packed representation
+//! ([`PackedMatrix`]: nibble/byte-packed integer levels + per-(row,
+//! group) scale/zero grids). The kernel is cache-blocked over W's rows
+//! (output columns): each [`ROW_TILE`]-row tile is dequantized **once**
+//! into reusable workspace scratch — every group's scale/zero applied
+//! once per (tile row, group) — and then shared by every activation row,
+//! so the packed bytes are the only weight traffic per tile and the
+//! dequant cost amortizes over `m` activation rows.
+//!
+//! ## Bit-identity contract
+//!
+//! The fused kernel is **bit-identical** to
+//! [`crate::tensor::matmul_nt_into`] run over the eagerly-dequantized
+//! reconstruction ([`PackedMatrix::dequantize`]):
+//!
+//! * dequantized tile values are produced by the same
+//!   `(q - zero) as f32 * scale` expression
+//!   ([`PackedMatrix::dequant_row_into`]);
+//! * [`ROW_TILE`] is a multiple of 8 and tiles start at multiples of
+//!   `ROW_TILE`, so every complete 8-column block of the reference
+//!   schedule falls entirely inside one tile and keeps its eight
+//!   sequential accumulator chains; the global tail (`n/8*8..n`) uses
+//!   the same [`crate::tensor::dot`] reduction.
+//!
+//! Per-output-element accumulation order is therefore identical, which
+//! is what lets packed weights slide under the engine without touching
+//! any interleaving/determinism test (see `tests/weights_parity.rs`).
+//!
+//! ## Zero-alloc and threading
+//!
+//! Scratch lives in a [`MatmulWorkspace`] (same discipline as
+//! `attention::Workspace`): buffers grow once, steady-state calls
+//! allocate nothing (audited by `tests/alloc_steadystate.rs`). The
+//! allocating wrappers route through a thread-local workspace
+//! ([`with_matmul_workspace`]). [`packed_matmul_rows_parallel`] fans
+//! activation rows across the persistent worker pool
+//! (`crate::runtime::pool`) for prefill/mixed steps — each job
+//! re-dequantizes the tiles it walks, so jobs are capped at
+//! [`MIN_PACKED_ROWS_PER_JOB`] rows minimum to keep the duplicated
+//! dequant a small fraction of each job's MAC work. Outputs are
+//! bit-identical at every width (rows are independent).
+
+use super::packing::PackedMatrix;
+use crate::runtime::pool;
+use std::cell::RefCell;
+
+/// W rows dequantized per tile (multiple of 8 — required for the
+/// bit-identity argument above; 64 rows × a few-hundred-column `k` keeps
+/// the tile comfortably in L1/L2).
+pub const ROW_TILE: usize = 64;
+
+/// Minimum activation rows per parallel job on the packed path: each
+/// job dequantizes its own copy of every tile it needs, so narrower
+/// jobs would multiply the chunk's dequant work by the fan-out width
+/// (the weight-matmul twin of `attention::paged::MIN_Q8_ROWS_PER_JOB`).
+pub const MIN_PACKED_ROWS_PER_JOB: usize = 8;
+
+/// Minimum activation rows per parallel job on the dense path — no
+/// dequant to amortize there, this floor only keeps pool-dispatch
+/// overhead a small fraction of each job's work.
+pub const MIN_DENSE_ROWS_PER_JOB: usize = 8;
+
+/// Floor on per-job multiply-accumulate work before fanning out at all —
+/// a tiny matmul is faster run in place than dispatched.
+const MIN_MACS_PER_JOB: usize = 1 << 20;
+
+/// Reusable scratch for the fused dequant-matmul: one dequantized
+/// [`ROW_TILE`]`× k` weight tile. Grown once per shape, then reused —
+/// steady-state fused matmuls perform zero heap allocations.
+#[derive(Debug, Default)]
+pub struct MatmulWorkspace {
+    deq: Vec<f32>,
+}
+
+impl MatmulWorkspace {
+    pub fn new() -> MatmulWorkspace {
+        MatmulWorkspace { deq: Vec::new() }
+    }
+
+    #[inline]
+    fn ensure(&mut self, len: usize) {
+        if self.deq.len() < len {
+            self.deq.resize(len, 0.0);
+        }
+    }
+}
+
+thread_local! {
+    static WORKSPACE: RefCell<MatmulWorkspace> = RefCell::new(MatmulWorkspace::new());
+}
+
+/// Run `f` with this thread's reusable dequant-matmul workspace (the
+/// pool's worker threads are persistent, so worker workspaces live
+/// across jobs, layers and steps). `f` must not re-enter
+/// `with_matmul_workspace`.
+pub fn with_matmul_workspace<R>(f: impl FnOnce(&mut MatmulWorkspace) -> R) -> R {
+    WORKSPACE.with(|w| f(&mut w.borrow_mut()))
+}
+
+/// `out = a · wᵀ` straight off the packed representation: `a` is
+/// `[m, w.cols]` row-major activations, `out` is `[m, w.rows]` and fully
+/// overwritten. Bit-identical to [`crate::tensor::matmul_nt_into`] over
+/// `w.dequantize()` (see the module docs for why), without ever
+/// materializing the dense matrix.
+pub fn packed_matmul_nt_into(
+    a: &[f32],
+    m: usize,
+    w: &PackedMatrix,
+    ws: &mut MatmulWorkspace,
+    out: &mut [f32],
+) {
+    let k = w.cols;
+    let n = w.rows;
+    assert_eq!(a.len(), m * k, "packed_matmul_nt_into: bad A length");
+    assert_eq!(out.len(), m * n, "packed_matmul_nt_into: bad out length");
+    let n8 = n / 8 * 8;
+    ws.ensure(ROW_TILE.min(n) * k);
+    let mut tile_start = 0usize;
+    while tile_start < n {
+        let tile_rows = ROW_TILE.min(n - tile_start);
+        let tile_end = tile_start + tile_rows;
+        // Dequantize the tile's rows once — every group's scale/zero is
+        // applied exactly once per (tile row, group) — then reuse the
+        // tile for all `m` activation rows.
+        for r in 0..tile_rows {
+            w.dequant_row_into(tile_start + r, &mut ws.deq[r * k..(r + 1) * k]);
+        }
+        let deq = &ws.deq;
+        // Complete 8-column blocks of the reference schedule inside this
+        // tile (`tile_start` and `blk_end` are both multiples of 8).
+        let blk_end = tile_end.min(n8);
+        for i in 0..m {
+            let a_row = &a[i * k..(i + 1) * k];
+            let c_row = &mut out[i * n..(i + 1) * n];
+            let mut j = tile_start;
+            while j < blk_end {
+                let rows: [&[f32]; 8] = std::array::from_fn(|r| {
+                    let rr = j - tile_start + r;
+                    &deq[rr * k..(rr + 1) * k]
+                });
+                let mut s = [0.0f32; 8];
+                for (t, &a_v) in a_row.iter().enumerate() {
+                    for r in 0..8 {
+                        s[r] += a_v * rows[r][t];
+                    }
+                }
+                c_row[j..j + 8].copy_from_slice(&s);
+                j += 8;
+            }
+            // Global tail columns (only the last tile can hold any).
+            for j in blk_end..tile_end {
+                let rr = j - tile_start;
+                c_row[j] = crate::tensor::dot(a_row, &deq[rr * k..(rr + 1) * k]);
+            }
+        }
+        tile_start = tile_end;
+    }
+}
+
+/// Allocating convenience wrapper over [`packed_matmul_nt_into`]
+/// (thread-local workspace — test/oracle ergonomics; hot paths hold a
+/// workspace or go through the parallel driver).
+pub fn packed_matmul_nt(a: &[f32], m: usize, w: &PackedMatrix) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * w.rows];
+    with_matmul_workspace(|ws| packed_matmul_nt_into(a, m, w, ws, &mut out));
+    out
+}
+
+/// Auto-size a serving matmul's fan-out width for an `[m, k]·[n, k]ᵀ`
+/// call: bounded by the pool size, by the caller's `min_rows_per_job`
+/// floor (pass the same constant the parallel driver clamps with —
+/// [`MIN_PACKED_ROWS_PER_JOB`] or [`MIN_DENSE_ROWS_PER_JOB`] — so the
+/// sizing and the clamp can never drift apart), and by a MAC-work floor
+/// so small calls (decode GEMVs) stay serial. Purely a performance knob
+/// — outputs are identical at every width.
+pub fn auto_matmul_threads(m: usize, n: usize, k: usize, min_rows_per_job: usize) -> usize {
+    let by_rows = (m / min_rows_per_job.max(1)).max(1);
+    let by_work = (m.saturating_mul(n).saturating_mul(k) / MIN_MACS_PER_JOB).max(1);
+    pool::global().size().min(by_rows).min(by_work).max(1)
+}
+
+/// Shared row-fan-out driver: split `m` activation rows into at most
+/// `threads` contiguous chunks of at least `min_rows_per_job` rows each
+/// and run `stage(a_chunk, rows, out_chunk)` per chunk on the persistent
+/// worker pool (serially in place when one job suffices). Outputs are
+/// **bit-identical** at every width: rows are computed independently and
+/// a row's instruction order does not depend on the partition.
+fn rows_parallel(
+    a: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    threads: usize,
+    min_rows_per_job: usize,
+    out: &mut [f32],
+    stage: &(dyn Fn(&[f32], usize, &mut [f32]) + Sync),
+) {
+    assert_eq!(a.len(), m * k, "rows_parallel: bad A length");
+    assert_eq!(out.len(), m * n, "rows_parallel: bad out length");
+    if m == 0 {
+        return;
+    }
+    let threads = threads.clamp(1, (m / min_rows_per_job).max(1));
+    if threads == 1 {
+        return stage(a, m, out);
+    }
+    let per = m.div_ceil(threads);
+    let mut jobs: Vec<pool::Job<'_>> = Vec::with_capacity(m.div_ceil(per));
+    let mut rest = out;
+    let mut start = 0usize;
+    while start < m {
+        let take = per.min(m - start);
+        let (chunk_out, tail) = std::mem::take(&mut rest).split_at_mut(take * n);
+        rest = tail;
+        let a_chunk = &a[start * k..(start + take) * k];
+        jobs.push(Box::new(move || stage(a_chunk, take, chunk_out)));
+        start += take;
+    }
+    pool::global().run(jobs);
+}
+
+/// [`packed_matmul_nt_into`] with activation rows fanned across the
+/// persistent worker pool (each worker uses its own thread-local
+/// [`MatmulWorkspace`], so steady-state parallel calls stay
+/// allocation-free on the workers, and scratch grows once per worker —
+/// workspaces persist across jobs, layers and steps).
+///
+/// The effective width is clamped so every job covers at least
+/// [`MIN_PACKED_ROWS_PER_JOB`] rows — each job re-dequantizes the tiles
+/// it walks, and the clamp bounds that duplicated dequant at a small
+/// fraction of the job's MAC work. Bit-identical at every width.
+pub fn packed_matmul_rows_parallel(
+    a: &[f32],
+    m: usize,
+    w: &PackedMatrix,
+    threads: usize,
+    out: &mut [f32],
+) {
+    rows_parallel(a, m, w.cols, w.rows, threads, MIN_PACKED_ROWS_PER_JOB, out, &|a_chunk, rows, out_chunk| {
+        with_matmul_workspace(|ws| packed_matmul_nt_into(a_chunk, rows, w, ws, out_chunk));
+    });
+}
+
+/// Dense twin of [`packed_matmul_rows_parallel`]: `tensor::matmul_nt`'s
+/// schedule through the same `rows_parallel` driver, so dense and
+/// packed stores share one threading model (and the `BENCH_gptq.json`
+/// comparison is like-for-like). The dense path has no dequant to
+/// amortize; its row floor ([`MIN_DENSE_ROWS_PER_JOB`]) only keeps job
+/// dispatch overhead small. Bit-identical to the serial form at every
+/// width.
+pub fn dense_matmul_rows_parallel(
+    a: &[f32],
+    m: usize,
+    k: usize,
+    b: &[f32],
+    n: usize,
+    threads: usize,
+    out: &mut [f32],
+) {
+    assert_eq!(b.len(), n * k, "dense_matmul_rows_parallel: bad B length");
+    rows_parallel(a, m, k, n, threads, MIN_DENSE_ROWS_PER_JOB, out, &|a_chunk, rows, out_chunk| {
+        crate::tensor::matmul_nt_into(a_chunk, rows, k, b, n, out_chunk);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::rtn_quantize;
+    use crate::tensor::matmul_nt_into;
+    use crate::util::rng::Rng;
+
+    /// Dense reconstruction via the row-tile primitive (the in-file
+    /// oracle; eager `.dequantize()` stays off gated files).
+    fn reconstruct(w: &PackedMatrix) -> Vec<f32> {
+        let mut dense = vec![0.0f32; w.rows * w.cols];
+        for (r, row) in dense.chunks_mut(w.cols).enumerate() {
+            w.dequant_row_into(r, row);
+        }
+        dense
+    }
+
+    #[test]
+    fn fused_matmul_bit_identical_to_dense_reference_across_grid() {
+        // The tentpole contract: for every bit width, ragged output
+        // width (n % 8 ≠ 0, n < 8, n > ROW_TILE), ragged group, and
+        // activation count (including the decode GEMV m == 1), the fused
+        // kernel equals matmul_nt_into over the dequantized
+        // reconstruction EXACTLY (same f32 accumulation order).
+        let mut rng = Rng::new(21);
+        for &bits in &[2u32, 3, 4, 8] {
+            for &(m, k, n, group) in &[
+                (1usize, 16usize, 9usize, 16usize),
+                (3, 24, 7, 5),
+                (4, 32, 8, 32),
+                (5, 33, 70, 7),
+                (2, 16, ROW_TILE + 12, 16),
+                (9, 8, 2 * ROW_TILE + 3, 3),
+            ] {
+                let wd = rng.normal_vec(n * k, 1.0);
+                let qm = rtn_quantize(&wd, n, k, bits, group);
+                let packed = super::super::pack_rows(&qm);
+                let dense = reconstruct(&packed);
+                let a = rng.normal_vec(m * k, 1.0);
+                let mut want = vec![0.0f32; m * n];
+                matmul_nt_into(&a, m, k, &dense, n, &mut want);
+                let got = packed_matmul_nt(&a, m, &packed);
+                assert_eq!(got, want, "bits={bits} m={m} k={k} n={n} group={group}");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_fan_out_is_bit_identical_at_every_width() {
+        let mut rng = Rng::new(22);
+        let (m, k, n) = (37usize, 24usize, 50usize);
+        let wd = rng.normal_vec(n * k, 1.0);
+        let packed = super::super::pack_rows(&rtn_quantize(&wd, n, k, 4, 8));
+        let a = rng.normal_vec(m * k, 1.0);
+        let serial = packed_matmul_nt(&a, m, &packed);
+        for threads in [1usize, 2, 3, 5, 64] {
+            let mut out = vec![0.0f32; m * n];
+            packed_matmul_rows_parallel(&a, m, &packed, threads, &mut out);
+            assert_eq!(out, serial, "threads={threads}");
+        }
+        // Dense twin too.
+        let dense = reconstruct(&packed);
+        let mut want = vec![0.0f32; m * n];
+        matmul_nt_into(&a, m, k, &dense, n, &mut want);
+        for threads in [1usize, 3, 64] {
+            let mut out = vec![0.0f32; m * n];
+            dense_matmul_rows_parallel(&a, m, k, &dense, n, threads, &mut out);
+            assert_eq!(out, want, "dense threads={threads}");
+        }
+    }
+
+    #[test]
+    fn workspace_reuse_across_shapes() {
+        // One workspace across growing and shrinking shapes: results
+        // stay exact (stale scratch beyond the current shape is ignored).
+        let mut rng = Rng::new(23);
+        let mut ws = MatmulWorkspace::new();
+        for &(m, k, n) in &[(2usize, 8usize, 24usize), (4, 40, 9), (1, 8, 24), (3, 16, 80)] {
+            let wd = rng.normal_vec(n * k, 1.0);
+            let packed = super::super::pack_rows(&rtn_quantize(&wd, n, k, 8, 16));
+            let a = rng.normal_vec(m * k, 1.0);
+            let dense = reconstruct(&packed);
+            let mut want = vec![0.0f32; m * n];
+            matmul_nt_into(&a, m, k, &dense, n, &mut want);
+            let mut got = vec![0.0f32; m * n];
+            packed_matmul_nt_into(&a, m, &packed, &mut ws, &mut got);
+            assert_eq!(got, want, "m={m} k={k} n={n}");
+        }
+    }
+
+    #[test]
+    fn auto_threads_keeps_small_calls_serial() {
+        let floor = MIN_PACKED_ROWS_PER_JOB;
+        assert_eq!(auto_matmul_threads(1, 4096, 4096, floor), 1, "decode GEMV stays serial");
+        assert_eq!(auto_matmul_threads(7, 1 << 14, 1 << 14, floor), 1, "below the row floor");
+        assert!(auto_matmul_threads(256, 1024, 1024, MIN_DENSE_ROWS_PER_JOB) >= 1);
+    }
+}

@@ -11,15 +11,23 @@
 //!   against.
 //!
 //! [`packing`] defines the nibble-packed storage format shared with the
-//! Pallas dequant-matmul kernel (`python/compile/kernels/gptq_matmul.py`).
+//! Pallas dequant-matmul kernel (`python/compile/kernels/gptq_matmul.py`),
+//! and [`matmul`] is the native fused dequant-matmul that serves straight
+//! off it (group-major row tiles dequantized once into workspace scratch,
+//! bit-identical to the dense reference — the packed-weight serving hot
+//! path; see ARCHITECTURE.md "Packed-weight serving").
 
 pub mod error;
 pub mod gptq;
+pub mod matmul;
 pub mod packing;
 pub mod rtn;
 
 pub use error::{layer_mse, relative_error};
 pub use gptq::{gptq_quantize, GptqConfig, HessianAccumulator};
+pub use matmul::{
+    packed_matmul_nt, packed_matmul_nt_into, packed_matmul_rows_parallel, MatmulWorkspace,
+};
 pub use packing::{pack_rows, unpack_rows, PackedMatrix};
 pub use rtn::rtn_quantize;
 

@@ -136,18 +136,58 @@ pub fn unpack_dequant_row(words: &[i32], pack_bits: u32, scale: f32, zero: i32, 
 }
 
 impl PackedMatrix {
-    /// Dequantize the packed payload (must equal the source matrix's
-    /// `dequantize()` output).
-    pub fn dequantize(&self) -> Vec<f32> {
-        let q = unpack_rows(self);
-        let groups = self.cols.div_ceil(self.group_size);
-        let mut out = vec![0.0f32; self.rows * self.cols];
-        for r in 0..self.rows {
-            for c in 0..self.cols {
-                let g = r * groups + c / self.group_size;
-                out[r * self.cols + c] =
-                    (q[r * self.cols + c] as i32 - self.zeros[g]) as f32 * self.scales[g];
+    /// Grids per row (`ceil(cols / group_size)`).
+    #[inline]
+    pub fn groups_per_row(&self) -> usize {
+        self.cols.div_ceil(self.group_size)
+    }
+
+    /// Bytes actually held by the packed representation: payload words
+    /// plus the per-group scale/zero grids. This is the steady-state
+    /// serving footprint the `weight_pool_bytes_*` bench series reports
+    /// (3-bit levels ride in 4-bit fields, so q3 counts nibble bytes).
+    pub fn packed_bytes(&self) -> usize {
+        self.words.len() * 4 + self.scales.len() * 4 + self.zeros.len() * 4
+    }
+
+    /// Dequantize one row into `out` (`out.len() == cols`), applying each
+    /// group's scale/zero once — the fused dequant-matmul's per-row
+    /// primitive (`quant::matmul` calls it once per (tile, row), then
+    /// reuses the dequantized tile across every activation row).
+    ///
+    /// The produced values are **bit-identical** to
+    /// [`PackedMatrix::dequantize`]'s (same `(q - zero) as f32 * scale`
+    /// expression), which is what anchors the packed-serving bit-identity
+    /// contract.
+    #[inline]
+    pub fn dequant_row_into(&self, row: usize, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.cols);
+        let lpw = levels_per_word(self.pack_bits);
+        let mask = (1u32 << self.pack_bits) - 1;
+        let words = &self.words[row * self.words_per_row..(row + 1) * self.words_per_row];
+        let groups = self.groups_per_row();
+        let scales = &self.scales[row * groups..(row + 1) * groups];
+        let zeros = &self.zeros[row * groups..(row + 1) * groups];
+        for g in 0..groups {
+            let scale = scales[g];
+            let zero = zeros[g];
+            let lo = g * self.group_size;
+            let hi = (lo + self.group_size).min(self.cols);
+            for (c, o) in out[lo..hi].iter_mut().enumerate().map(|(i, o)| (lo + i, o)) {
+                let w = words[c / lpw] as u32;
+                let q = ((w >> ((c % lpw) as u32 * self.pack_bits)) & mask) as i32;
+                *o = (q - zero) as f32 * scale;
             }
+        }
+    }
+
+    /// Dequantize the packed payload (must equal the source matrix's
+    /// `dequantize()` output) — test/oracle path; serving dequantizes
+    /// per row-tile inside the fused matmul instead.
+    pub fn dequantize(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.rows * self.cols];
+        for (r, row_out) in out.chunks_mut(self.cols).enumerate() {
+            self.dequant_row_into(r, row_out);
         }
         out
     }
@@ -252,6 +292,49 @@ mod tests {
         let mut words = vec![0i32; packed.words_per_row];
         quant_pack_row(&w, &p, &mut words);
         assert_eq!(words, packed.words);
+    }
+
+    #[test]
+    fn roundtrip_grid_over_bits_shapes_and_ragged_groups() {
+        // Property-style grid: every supported bit width × shapes whose
+        // group size does not divide the column count, single-column
+        // matrices, and single-element groups. For each point the packed
+        // payload must unpack to the exact source levels and dequantize
+        // bit-identically to the unpacked matrix.
+        let mut rng = Rng::new(11);
+        for &bits in &[2u32, 3, 4, 8] {
+            for &(rows, cols) in &[(1usize, 1usize), (3, 1), (2, 5), (4, 20), (3, 33)] {
+                for &group in &[1usize, 3, 7, 32, 64] {
+                    let w = rng.normal_vec(rows * cols, 1.0);
+                    let qm = rtn_quantize(&w, rows, cols, bits, group);
+                    let packed = pack_rows(&qm);
+                    assert_eq!(packed.pack_bits, if bits <= 4 { 4 } else { 8 });
+                    assert_eq!(
+                        unpack_rows(&packed),
+                        qm.q,
+                        "levels: bits={bits} rows={rows} cols={cols} group={group}"
+                    );
+                    let a = qm.dequantize();
+                    let b = packed.dequantize();
+                    assert_eq!(
+                        a, b,
+                        "dequant: bits={bits} rows={rows} cols={cols} group={group}"
+                    );
+                    // Row-tile primitive agrees with the whole-matrix path.
+                    let mut row_out = vec![0.0f32; cols];
+                    for r in 0..rows {
+                        packed.dequant_row_into(r, &mut row_out);
+                        assert_eq!(
+                            &a[r * cols..(r + 1) * cols],
+                            row_out.as_slice(),
+                            "row {r}: bits={bits} cols={cols} group={group}"
+                        );
+                    }
+                    // Byte accounting never undercounts the payload.
+                    assert!(packed.packed_bytes() >= packed.words.len() * 4);
+                }
+            }
+        }
     }
 
     #[test]

@@ -1,7 +1,7 @@
 //! The `Backend` trait and its native implementation.
 
 use crate::kvcache::{BlockTable, KvStore};
-use crate::model::{ModelConfig, NativeModel};
+use crate::model::{ModelConfig, NativeModel, WeightDtype, WeightStore};
 
 /// One sequence's slot in a decode batch.
 pub struct DecodeItem<'a> {
@@ -121,6 +121,22 @@ pub trait Backend: Send {
     /// opts in. The engine checks this at construction.
     fn supports_quantized_kv(&self) -> bool {
         false
+    }
+
+    /// Storage dtype of the weights this backend serves from. The engine
+    /// checks it against `EngineConfig::weight_dtype` at construction so
+    /// a deployment's declared dtype and the backend actually wired in
+    /// can never drift apart silently. F32 unless the backend holds a
+    /// packed `WeightStore` (the XLA artifacts upload raw f32 buffers).
+    fn weight_dtype(&self) -> WeightDtype {
+        WeightDtype::F32
+    }
+
+    /// True bytes held by the backend's weight store (packed payload +
+    /// grids on a quantized store) — observability surface; 0 when the
+    /// backend does not track it.
+    fn weight_bytes(&self) -> usize {
+        0
     }
 }
 
@@ -248,6 +264,14 @@ impl Backend for NativeBackend {
 
     fn supports_quantized_kv(&self) -> bool {
         true
+    }
+
+    fn weight_dtype(&self) -> WeightDtype {
+        self.model.store().dtype()
+    }
+
+    fn weight_bytes(&self) -> usize {
+        self.model.store().weight_bytes()
     }
 }
 

@@ -126,10 +126,10 @@ impl Tensor {
     /// `C = A · Bᵀ` for `A: [m,k]`, `B: [n,k]` — the natural layout for
     /// weight matrices stored `[out_features, in_features]`.
     ///
-    /// The inner kernel processes 4 B-rows at a time so each A element is
-    /// loaded once per 4 outputs and the 4 accumulator chains keep the
-    /// FMA pipeline full (decode is a `[1,k]·[n,k]ᵀ` GEMV — this blocking
-    /// is its whole hot path).
+    /// Thin allocating wrapper over [`matmul_nt_into`], which is the
+    /// accumulation-order reference for every serving matmul (including
+    /// the fused dequant-matmul in `quant::matmul` — see the bit-identity
+    /// contract there).
     pub fn matmul_nt(&self, b: &Tensor) -> Tensor {
         assert_eq!(self.ndim(), 2);
         assert_eq!(b.ndim(), 2);
@@ -137,28 +137,7 @@ impl Tensor {
         let (n, k2) = (b.shape[0], b.shape[1]);
         assert_eq!(k, k2, "matmul_nt inner-dim mismatch: {k} vs {k2}");
         let mut out = vec![0.0f32; m * n];
-        let n8 = n / 8 * 8;
-        for i in 0..m {
-            let a_row = &self.data[i * k..(i + 1) * k];
-            let c_row = &mut out[i * n..(i + 1) * n];
-            let mut j = 0;
-            while j < n8 {
-                let rows: [&[f32]; 8] = std::array::from_fn(|r| {
-                    &b.data[(j + r) * k..(j + r + 1) * k]
-                });
-                let mut s = [0.0f32; 8];
-                for (t, &a_v) in a_row.iter().enumerate() {
-                    for r in 0..8 {
-                        s[r] += a_v * rows[r][t];
-                    }
-                }
-                c_row[j..j + 8].copy_from_slice(&s);
-                j += 8;
-            }
-            for j in n8..n {
-                c_row[j] = dot(a_row, &b.data[j * k..(j + 1) * k]);
-            }
-        }
+        matmul_nt_into(&self.data, m, k, &b.data, n, &mut out);
         Tensor::from_vec(&[m, n], out)
     }
 
@@ -219,6 +198,45 @@ impl Tensor {
                 best
             })
             .collect()
+    }
+}
+
+/// `out = A · Bᵀ` into a caller-owned buffer: `a` is `[m, k]` row-major,
+/// `b` is `[n, k]` row-major (`[out_features, in_features]` weights),
+/// `out` is `[m, n]` and fully overwritten.
+///
+/// This free function is the **accumulation-order contract** for serving
+/// matmuls: output columns in complete 8-blocks (`j < n/8*8`) use eight
+/// sequential accumulator chains over `k`; tail columns use [`dot`]'s
+/// 8-way unrolled reduction. `quant::matmul`'s fused dequant-matmul
+/// reproduces exactly this order over dequantized row-tiles, which is
+/// what makes packed serving bit-identical to the dense reconstruction.
+/// The 8-row blocking loads each A element once per 8 outputs and keeps
+/// the FMA pipeline full (decode is a `[1,k]·[n,k]ᵀ` GEMV — this
+/// blocking is its whole hot path).
+pub fn matmul_nt_into(a: &[f32], m: usize, k: usize, b: &[f32], n: usize, out: &mut [f32]) {
+    assert_eq!(a.len(), m * k, "matmul_nt_into: bad A length");
+    assert_eq!(b.len(), n * k, "matmul_nt_into: bad B length");
+    assert_eq!(out.len(), m * n, "matmul_nt_into: bad out length");
+    let n8 = n / 8 * 8;
+    for i in 0..m {
+        let a_row = &a[i * k..(i + 1) * k];
+        let c_row = &mut out[i * n..(i + 1) * n];
+        let mut j = 0;
+        while j < n8 {
+            let rows: [&[f32]; 8] = std::array::from_fn(|r| &b[(j + r) * k..(j + r + 1) * k]);
+            let mut s = [0.0f32; 8];
+            for (t, &a_v) in a_row.iter().enumerate() {
+                for r in 0..8 {
+                    s[r] += a_v * rows[r][t];
+                }
+            }
+            c_row[j..j + 8].copy_from_slice(&s);
+            j += 8;
+        }
+        for j in n8..n {
+            c_row[j] = dot(a_row, &b[j * k..(j + 1) * k]);
+        }
     }
 }
 
@@ -368,6 +386,19 @@ mod tests {
     fn reshape_roundtrip() {
         let t = Tensor::zeros(&[2, 6]).reshape(&[3, 4]);
         assert_eq!(t.shape(), &[3, 4]);
+    }
+
+    #[test]
+    fn matmul_nt_into_matches_allocating_form() {
+        let mut rng = crate::util::rng::Rng::new(7);
+        for (m, k, n) in [(1, 16, 9), (3, 5, 8), (4, 7, 23)] {
+            let a = Tensor::from_vec(&[m, k], rng.normal_vec(m * k, 1.0));
+            let b = Tensor::from_vec(&[n, k], rng.normal_vec(n * k, 1.0));
+            let c = a.matmul_nt(&b);
+            let mut out = vec![0.0f32; m * n];
+            matmul_nt_into(a.data(), m, k, b.data(), n, &mut out);
+            assert_eq!(c.data(), out.as_slice(), "m={m} k={k} n={n}");
+        }
     }
 
     #[test]

@@ -1,5 +1,5 @@
 //! Steady-state allocation audit for the paged attention paths — decode
-//! AND chunked prefill.
+//! AND chunked prefill — and the packed-weight matmul.
 //!
 //! The Workspace contract (see `attention::kernel`) promises that once
 //! scratch buffers have grown to a shape, repeated attention calls
@@ -7,8 +7,11 @@
 //! path, whose per-tile dequant scratch lives in the same workspace;
 //! the streamed prefill walk, whose per-row softmax states come from a
 //! reusable pool in the same workspace; and the quantized cache's own
-//! write path, whose requant scratch is preallocated. This binary
-//! installs a counting global allocator and proves all of it.
+//! write path, whose requant scratch is preallocated. The fused
+//! dequant-matmul (`quant::matmul`) makes the same promise for packed
+//! weights: its row-tile dequant scratch lives in a reusable
+//! `MatmulWorkspace`. This binary installs a counting global allocator
+//! and proves all of it.
 //!
 //! This file must hold exactly ONE `#[test]` (the harness runs tests in
 //! parallel threads inside one process; a second test would count its
@@ -21,6 +24,8 @@ use opt_gptq::attention::paged::{paged_decode_attention_into, paged_prefill_atte
 use opt_gptq::kvcache::{
     BlockAllocator, BlockTable, KvStore, PagedKvCache, QuantizedPagedKvCache,
 };
+use opt_gptq::quant::matmul::{packed_matmul_nt_into, MatmulWorkspace};
+use opt_gptq::quant::{pack_rows, rtn_quantize};
 use opt_gptq::util::rng::Rng;
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::cell::Cell;
@@ -152,4 +157,28 @@ fn steady_state_decode_attention_allocates_nothing() {
         assert_eq!(n, 0, "{name}: steady-state chunked prefill must not allocate");
     }
     assert!(chunk_out.iter().all(|v| v.is_finite()));
+
+    // Packed-weight serving matmul: once the workspace's row-tile
+    // dequant scratch is warm, steady-state fused dequant-matmuls over
+    // any packed bit width perform ZERO heap allocations — the contract
+    // that lets every projection of every layer run off packed storage
+    // without allocator churn. (Shapes exercise a ragged output width
+    // and a ragged group, the worst cases for scratch sizing.)
+    let (wm, wk, wn) = (6usize, 48usize, 75usize);
+    let acts = rng.normal_vec(wm * wk, 1.0);
+    let mut wout = vec![0.0f32; wm * wn];
+    let mut mws = MatmulWorkspace::new();
+    for bits in [4u32, 8] {
+        let wd = rng.normal_vec(wn * wk, 1.0);
+        let packed = pack_rows(&rtn_quantize(&wd, wn, wk, bits, 13));
+        // Warm-up grows the dequant tile for this shape.
+        packed_matmul_nt_into(&acts, wm, &packed, &mut mws, &mut wout);
+        let n = count_allocs(|| {
+            for _ in 0..10 {
+                packed_matmul_nt_into(&acts, wm, &packed, &mut mws, &mut wout);
+            }
+        });
+        assert_eq!(n, 0, "q{bits}: steady-state packed dequant-matmul must not allocate");
+    }
+    assert!(wout.iter().all(|v| v.is_finite()));
 }

@@ -34,6 +34,7 @@ fn engine_with_byte_budget(cfg: &ModelConfig, kv_bytes: usize, max_batch: usize)
             prefill_chunk: usize::MAX,
             prefix_cache_blocks: 0,
             kv_dtype: opt_gptq::coordinator::KvCacheDtype::F32,
+            weight_dtype: opt_gptq::coordinator::WeightDtype::F32,
         },
     )
 }
@@ -123,6 +124,7 @@ fn long_prompt_mid_decode_keeps_ttft_and_decode_bounded() {
             prefill_chunk: usize::MAX,
             prefix_cache_blocks: 0,
             kv_dtype: opt_gptq::coordinator::KvCacheDtype::F32,
+            weight_dtype: opt_gptq::coordinator::WeightDtype::F32,
         },
     );
     let tok = ByteTokenizer::new();
@@ -179,6 +181,7 @@ fn http_server_serves_concurrent_clients() {
                 prefill_chunk: usize::MAX,
                 prefix_cache_blocks: 0,
                 kv_dtype: opt_gptq::coordinator::KvCacheDtype::F32,
+                weight_dtype: opt_gptq::coordinator::WeightDtype::F32,
             },
             workers: 1,
         },

@@ -30,6 +30,7 @@ fn native_engine(seed: u64, num_blocks: usize, max_batch: usize) -> Engine {
             prefill_chunk: usize::MAX,
             prefix_cache_blocks: 0,
             kv_dtype: opt_gptq::coordinator::KvCacheDtype::F32,
+            weight_dtype: opt_gptq::coordinator::WeightDtype::F32,
         },
     )
 }
@@ -72,7 +73,7 @@ fn gptq_quantized_model_serves_requests() {
     let calib = tok.encode(&synth_prompt(128, 0));
     let (a, m, f) = model.calibrate(&calib);
     let mut qw = f32_weights;
-    let report = quantize_weights(&mut qw, QuantMethod::Gptq, 4, 32, &a, &m, &f);
+    let report = quantize_weights(&mut qw, QuantMethod::Gptq, 4, 32, false, &a, &m, &f);
     assert!(report.mean_error() < 0.2, "mean err {}", report.mean_error());
 
     let backend = NativeBackend::new(NativeModel::new(qw));
@@ -86,6 +87,7 @@ fn gptq_quantized_model_serves_requests() {
             prefill_chunk: usize::MAX,
             prefix_cache_blocks: 0,
             kv_dtype: opt_gptq::coordinator::KvCacheDtype::F32,
+            weight_dtype: opt_gptq::coordinator::WeightDtype::F32,
         },
     );
     for i in 0..4 {
@@ -173,6 +175,7 @@ fn long_prompt_chunked_prefill_equals_single_shot() {
                 prefill_chunk: chunk,
                 prefix_cache_blocks: 0,
                 kv_dtype: opt_gptq::coordinator::KvCacheDtype::F32,
+                weight_dtype: opt_gptq::coordinator::WeightDtype::F32,
             },
         );
         let params = SamplingParams { max_tokens: 8, ..Default::default() };

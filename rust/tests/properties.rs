@@ -135,6 +135,7 @@ fn prop_engine_completes_any_workload() {
                 prefill_chunk: usize::MAX,
                 prefix_cache_blocks: 0,
                 kv_dtype: opt_gptq::coordinator::KvCacheDtype::F32,
+                weight_dtype: opt_gptq::coordinator::WeightDtype::F32,
             },
         );
         let n_req = g.usize_in(1, 6);

@@ -1,0 +1,246 @@
+//! Packed-weight serving parity — the PR's acceptance contract.
+//!
+//! Serving from a packed store ([`PackedModelWeights`]) must be
+//! **bit-identical** to serving from the eagerly-dequantized f32
+//! reconstruction of the same quantization, for prefill, decode, and
+//! mixed steps, at every thread width — because the fused dequant-matmul
+//! (`quant::matmul`) reproduces `tensor::matmul_nt`'s exact accumulation
+//! order over tile-dequantized rows. These tests build the
+//! reconstruction straight from the packed payload
+//! (`PackedMatrix::dequantize`, the eager oracle that is banned from the
+//! serving files by `scripts/verify.sh`) so the comparison is
+//! self-contained: same bytes in, logits compared bit for bit.
+
+use opt_gptq::coordinator::{
+    BucketPolicy, Engine, EngineConfig, KvCacheDtype, SchedulerConfig, WeightDtype,
+};
+use opt_gptq::kvcache::{BlockAllocator, BlockTable, KvStore, PagedKvCache, QuantizedPagedKvCache};
+use opt_gptq::model::weights::{quantize_weights_packed, LayerWeights, QuantMethod};
+use opt_gptq::model::{
+    ModelConfig, ModelWeights, NativeModel, PackedModelWeights, SamplingParams,
+};
+use opt_gptq::runtime::NativeBackend;
+use opt_gptq::tensor::Tensor;
+use std::sync::Arc;
+
+/// Dense f32 twin of a packed store: every projection eagerly
+/// dequantized, everything else copied — the reference the bit-identity
+/// contract is stated against.
+fn reconstruction(p: &PackedModelWeights) -> ModelWeights {
+    let layers = p
+        .layers
+        .iter()
+        .map(|l| LayerWeights {
+            wq: Tensor::from_vec(&[l.wq.rows(), l.wq.cols()], l.wq.w.dequantize()),
+            wk: Tensor::from_vec(&[l.wk.rows(), l.wk.cols()], l.wk.w.dequantize()),
+            wv: Tensor::from_vec(&[l.wv.rows(), l.wv.cols()], l.wv.w.dequantize()),
+            wo: Tensor::from_vec(&[l.wo.rows(), l.wo.cols()], l.wo.w.dequantize()),
+            w_gate: Tensor::from_vec(
+                &[l.w_gate.rows(), l.w_gate.cols()],
+                l.w_gate.w.dequantize(),
+            ),
+            w_up: Tensor::from_vec(&[l.w_up.rows(), l.w_up.cols()], l.w_up.w.dequantize()),
+            w_down: Tensor::from_vec(
+                &[l.w_down.rows(), l.w_down.cols()],
+                l.w_down.w.dequantize(),
+            ),
+            rms_attn: l.rms_attn.clone(),
+            rms_mlp: l.rms_mlp.clone(),
+        })
+        .collect();
+    ModelWeights {
+        config: p.config,
+        embed: p.embed.clone(),
+        layers,
+        final_norm: p.final_norm.clone(),
+        lm_head: p.lm_head.clone(),
+    }
+}
+
+fn packed_pair(seed: u64, bits: u32, group: usize) -> (NativeModel, NativeModel) {
+    let cfg = ModelConfig::tiny();
+    let weights = ModelWeights::init(&cfg, seed);
+    let (packed, _) =
+        quantize_weights_packed(&weights, QuantMethod::Rtn, bits, group, false, &[], &[], &[]);
+    let recon = reconstruction(&packed);
+    (NativeModel::from_store(Arc::new(packed)), NativeModel::new(recon))
+}
+
+/// Prefill (chunked), decode batch, and a mixed step on both models at
+/// one thread width; returns everything observable (logits + dense cache
+/// dumps) for exact comparison.
+#[allow(clippy::type_complexity)]
+fn drive(
+    model: &NativeModel,
+    quant_kv: bool,
+    threads: Option<usize>,
+) -> (Vec<Vec<f32>>, Vec<Vec<f32>>, Vec<(Vec<f32>, Vec<f32>)>) {
+    let cfg = *model.config();
+    let mut cache: Box<dyn KvStore> = if quant_kv {
+        Box::new(QuantizedPagedKvCache::new(cfg.n_layers, 64, 8, cfg.n_kv_heads, cfg.head_dim()))
+    } else {
+        Box::new(PagedKvCache::new(cfg.n_layers, 64, 8, cfg.n_kv_heads, cfg.head_dim()))
+    };
+    let mut alloc = BlockAllocator::new(64, 8);
+    let mut t_a = BlockTable::new();
+    let mut t_b = BlockTable::new();
+    let mut t_c = BlockTable::new();
+    for t in [&mut t_a, &mut t_b, &mut t_c] {
+        t.reserve(24, &mut alloc);
+    }
+    let mut prefills = Vec::new();
+    // Chunked prefill for A (two chunks), whole-prompt for B.
+    let a_tokens: Vec<u32> = (0..13).map(|i| 256 + (i % 90)).collect();
+    prefills.push(model.prefill_with(&a_tokens[..5], cache.as_mut(), &mut t_a, threads));
+    prefills.push(model.prefill_with(&a_tokens[5..], cache.as_mut(), &mut t_a, threads));
+    prefills.push(model.prefill_with(&[256, 7, 8], cache.as_mut(), &mut t_b, threads));
+    // Mixed step: one prefill chunk (C) + two decoders (A, B).
+    let c_tokens: Vec<u32> = (0..9).map(|i| 300 + i).collect();
+    let (chunk_logits, dec_logits, _) = model.forward_mixed(
+        &[c_tokens.as_slice()],
+        &mut [&mut t_c],
+        &[true],
+        &[31, 32],
+        &mut [&mut t_a, &mut t_b],
+        cache.as_mut(),
+        threads,
+        threads,
+    );
+    let mut decodes: Vec<Vec<f32>> = dec_logits;
+    decodes.push(chunk_logits[0].clone().expect("wanted chunk logits"));
+    // Plain decode batch afterwards.
+    let mut tables = [&mut t_a, &mut t_b, &mut t_c];
+    decodes.extend(model.decode_batch_with(&[40, 41, 42], cache.as_mut(), &mut tables, threads));
+    let dumps = [&t_a, &t_b, &t_c]
+        .iter()
+        .map(|t| cache.gather(0, t))
+        .collect();
+    (prefills, decodes, dumps)
+}
+
+#[test]
+fn packed_serving_bit_identical_to_reconstruction_across_bits_and_widths() {
+    for &bits in &[8u32, 4, 3] {
+        let (packed, dense) = packed_pair(100 + bits as u64, bits, 32);
+        for quant_kv in [false, true] {
+            for threads in [Some(1), Some(3), None] {
+                let got = drive(&packed, quant_kv, threads);
+                let want = drive(&dense, quant_kv, threads);
+                assert_eq!(
+                    got, want,
+                    "bits={bits} quant_kv={quant_kv} threads={threads:?}: packed serving \
+                     diverged from the dequantized reconstruction"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn packed_engine_tokens_match_reconstruction_engine() {
+    // End to end through scheduler + mixed steps + sampling: a packed-q4
+    // engine and the reconstruction engine must emit IDENTICAL token
+    // streams (bit-identity composed through the whole serving stack).
+    let (packed, dense) = packed_pair(7, 4, 64);
+    let run = |model: NativeModel, weight_dtype: WeightDtype| {
+        let econf = EngineConfig {
+            num_blocks: 48,
+            block_size: 8,
+            sched: SchedulerConfig {
+                max_running: 8,
+                max_decode_batch: 4,
+                watermark_blocks: 1,
+                step_token_budget: 12,
+                chunked_prefill: true,
+            },
+            decode_buckets: BucketPolicy::exact(4),
+            prefill_chunk: usize::MAX,
+            prefix_cache_blocks: 0,
+            kv_dtype: KvCacheDtype::F32,
+            weight_dtype,
+        };
+        let mut e = Engine::new(Box::new(NativeBackend::new(model)), econf);
+        e.add_request(vec![256; 30], SamplingParams { max_tokens: 6, ..Default::default() })
+            .unwrap();
+        for i in 0..3 {
+            e.add_request(
+                vec![256, 60 + i, 61],
+                SamplingParams { max_tokens: 6, ..Default::default() },
+            )
+            .unwrap();
+        }
+        e.run_to_completion();
+        let bytes = e.weight_bytes();
+        let mut outs = e.take_outputs();
+        outs.sort_by_key(|o| o.id);
+        (outs.into_iter().map(|o| o.tokens).collect::<Vec<_>>(), bytes)
+    };
+    let (packed_tokens, packed_bytes) = run(packed, WeightDtype::Q4);
+    let (dense_tokens, dense_bytes) = run(dense, WeightDtype::F32);
+    assert_eq!(packed_tokens, dense_tokens, "token streams diverged");
+    assert!(
+        packed_bytes < dense_bytes,
+        "packed store must report smaller weight bytes ({packed_bytes} vs {dense_bytes})"
+    );
+}
+
+#[test]
+fn q4_projection_bytes_at_most_a_fifth_of_f32() {
+    // The acceptance bound, at the bench grid's group size (64): packed
+    // q4 projection bytes ≤ 0.20× the dense f32 projection bytes.
+    let cfg = ModelConfig::tiny();
+    let weights = ModelWeights::init(&cfg, 9);
+    let (q4, _) = quantize_weights_packed(&weights, QuantMethod::Rtn, 4, 64, false, &[], &[], &[]);
+    let f32_proj: usize = weights
+        .layers
+        .iter()
+        .flat_map(|l| {
+            [&l.wq, &l.wk, &l.wv, &l.wo, &l.w_gate, &l.w_up, &l.w_down].map(|t| t.len() * 4)
+        })
+        .sum();
+    let q4_proj = q4.projection_bytes();
+    assert!(
+        5 * q4_proj <= f32_proj,
+        "q4 projections {q4_proj} B > 0.20× f32 {f32_proj} B"
+    );
+}
+
+#[test]
+fn packed_artifact_roundtrip_serves_identically() {
+    // save → load → serve must equal serving the in-memory store (the
+    // artifact format preserves every packed word and grid).
+    let cfg = ModelConfig::tiny();
+    let weights = ModelWeights::init(&cfg, 11);
+    let (packed, _) =
+        quantize_weights_packed(&weights, QuantMethod::Rtn, 4, 32, false, &[], &[], &[]);
+    let dir = std::env::temp_dir().join("opt_gptq_weights_parity");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("roundtrip_packed.bin");
+    packed.save(&path).unwrap();
+    let loaded = PackedModelWeights::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    let a = drive(&NativeModel::from_store(Arc::new(packed)), false, Some(1));
+    let b = drive(&NativeModel::from_store(Arc::new(loaded)), false, Some(1));
+    assert_eq!(a, b);
+}
+
+#[test]
+fn gptq_calibrated_packed_store_matches_its_reconstruction() {
+    // Same contract under the full GPTQ pipeline (Hessian + error
+    // propagation + act_order): pack and reconstruction come from one
+    // quantization, serving stays bit-identical.
+    let cfg = ModelConfig::tiny();
+    let weights = ModelWeights::init(&cfg, 13);
+    let model = NativeModel::new(weights.clone());
+    let calib: Vec<u32> = (0..40).map(|i| 256 + (i % 110)).collect();
+    let (a, m, f) = model.calibrate(&calib);
+    for act_order in [false, true] {
+        let (packed, report) =
+            quantize_weights_packed(&weights, QuantMethod::Gptq, 4, 32, act_order, &a, &m, &f);
+        assert!(report.mean_error() < 0.3, "act_order={act_order}: {}", report.mean_error());
+        let recon = reconstruction(&packed);
+        let got = drive(&NativeModel::from_store(Arc::new(packed)), false, None);
+        let want = drive(&NativeModel::new(recon), false, None);
+        assert_eq!(got, want, "act_order={act_order}");
+    }
+}

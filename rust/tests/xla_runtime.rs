@@ -4,7 +4,7 @@
 //! Requires `make artifacts` (tests skip gracefully when absent so plain
 //! `cargo test` works before the Python step).
 
-use opt_gptq::coordinator::{BucketPolicy, Engine, EngineConfig, KvCacheDtype, SchedulerConfig};
+use opt_gptq::coordinator::{BucketPolicy, Engine, EngineConfig, KvCacheDtype, SchedulerConfig, WeightDtype};
 use opt_gptq::kvcache::{BlockAllocator, BlockTable, PagedKvCache};
 use opt_gptq::model::{ModelWeights, NativeModel, SamplingParams};
 use opt_gptq::quant::{pack_rows, rtn_quantize};
@@ -170,6 +170,7 @@ fn engine_end_to_end_on_xla_backend() {
         prefill_chunk: m.max_prefill_seq(),
         prefix_cache_blocks: 0,
         kv_dtype: KvCacheDtype::F32,
+        weight_dtype: WeightDtype::F32,
     };
     let mut engine = Engine::new(Box::new(xla), econf);
     let params = SamplingParams { max_tokens: 4, ..Default::default() };
@@ -200,6 +201,7 @@ fn engine_end_to_end_on_xla_backend() {
         prefill_chunk: usize::MAX,
         prefix_cache_blocks: 0,
         kv_dtype: KvCacheDtype::F32,
+        weight_dtype: WeightDtype::F32,
     };
     let mut engine_n = Engine::new(Box::new(native), econf2);
     for i in 0..3 {

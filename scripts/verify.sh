@@ -15,6 +15,18 @@
 set -euo pipefail
 cd "$(dirname "$0")/../rust"
 
+# ---- hot-path grep gates --------------------------------------------------
+# Eager whole-matrix dequantization must stay off the serving path: packed
+# weights are dequantized per row-tile inside the fused matmul
+# (quant::matmul), exactly like KV tiles inside the attention kernel (the
+# same pattern as the KvStore::gather gate — gather/dequantize are
+# test/oracle dumps, never hot-path ops).
+if grep -n '\.dequantize()' src/model/llama.rs src/model/store.rs src/quant/matmul.rs \
+    | grep -vE '^[^:]+:[0-9]+:[[:space:]]*//'; then
+  echo "verify: FAIL — eager .dequantize() on the packed-weight serving hot path" >&2
+  exit 1
+fi
+
 cargo build --release
 cargo test -q
 # Docs are tier-1: broken intra-doc links / malformed rustdoc fail the PR.
@@ -24,9 +36,17 @@ cargo bench --bench attention_core -- --smoke
 # Serving-spine smoke: open-loop mixed workload → BENCH_engine.json
 # (ttft p50/p95, inter-token latency, stall counters).
 cargo bench --bench engine_serving -- --smoke
+# Packed-weight matmul smoke: dense vs fused dequant-matmul per bit width
+# → BENCH_gptq.json (asserts packed/dense bit-identity and the q4 ≤ 0.20×
+# weight-bytes acceptance bound in release mode).
+cargo bench --bench gptq_matmul -- --smoke
+# GPTQ pipeline smoke: calibrate → quantize (GPTQ + RTN, 3 bit widths) →
+# packed-serving parity assert. Exercises the example the quickstart
+# points at, so it can never rot.
+cargo run --release --example quantize_gptq -- --calib-tokens 96
 
 # ---- bench-artifact gate + trajectory delta -------------------------------
-for f in BENCH_attention.json BENCH_engine.json; do
+for f in BENCH_attention.json BENCH_engine.json BENCH_gptq.json; do
   if [[ ! -s "../$f" ]]; then
     echo "verify: FAIL — $f missing after the bench smokes" >&2
     exit 1
