@@ -17,13 +17,18 @@
 
 mod common;
 
-use opt_gptq::coordinator::{BucketPolicy, Engine, EngineConfig, KvCacheDtype, SchedulerConfig, WeightDtype};
+use opt_gptq::coordinator::{
+    AdmissionConfig, BucketPolicy, Engine, EngineConfig, KvCacheDtype, Router, RouterConfig,
+    SchedulerConfig, SubmitError, WeightDtype,
+};
 use opt_gptq::model::{ModelConfig, ModelWeights, NativeModel, SamplingParams};
 use opt_gptq::runtime::NativeBackend;
 use opt_gptq::tokenizer::ByteTokenizer;
 use opt_gptq::util::benchkit::{f, Table};
 use opt_gptq::util::cli::Args;
+use opt_gptq::util::percentile;
 use opt_gptq::workload::{generate, synth_prompt, LenDist, WorkloadConfig};
+use std::time::{Duration, Instant};
 
 fn main() {
     opt_gptq::util::logging::init();
@@ -39,26 +44,25 @@ fn main() {
     let block_size = 16;
     let chunked = !args.flag("no-chunked-prefill");
 
-    let backend = NativeBackend::new(NativeModel::new(ModelWeights::init(&cfg, 3)));
-    let mut engine = Engine::new(
-        Box::new(backend),
-        EngineConfig {
-            num_blocks: kv_tokens / block_size,
-            block_size,
-            sched: SchedulerConfig {
-                max_running: 64,
-                max_decode_batch: max_batch,
-                watermark_blocks: 2,
-                step_token_budget: step_budget,
-                chunked_prefill: chunked,
-            },
-            decode_buckets: BucketPolicy::exact(max_batch),
-            prefill_chunk: usize::MAX,
-            prefix_cache_blocks: 0,
-            kv_dtype: KvCacheDtype::F32,
-            weight_dtype: WeightDtype::F32,
+    // One engine config for both phases (direct engine drive + router).
+    let mk_econf = move || EngineConfig {
+        num_blocks: kv_tokens / block_size,
+        block_size,
+        sched: SchedulerConfig {
+            max_running: 64,
+            max_decode_batch: max_batch,
+            watermark_blocks: 2,
+            step_token_budget: step_budget,
+            chunked_prefill: chunked,
         },
-    );
+        decode_buckets: BucketPolicy::exact(max_batch),
+        prefill_chunk: usize::MAX,
+        prefix_cache_blocks: 0,
+        kv_dtype: KvCacheDtype::F32,
+        weight_dtype: WeightDtype::F32,
+    };
+    let backend = NativeBackend::new(NativeModel::new(ModelWeights::init(&cfg, 3)));
+    let mut engine = Engine::new(Box::new(backend), mk_econf());
     println!(
         "model={preset}  requests={n_req}  rate={rate}/s  step budget={step_budget}  \
          chunked prefill={chunked}  KV pool={} tokens",
@@ -122,6 +126,154 @@ fn main() {
     t.print();
     assert_eq!(report.gather_bytes, 0, "the serving path must never dense-gather KV");
 
+    // ---- Phase 2: sustained 2× overload through bounded admission ----
+    //
+    // Saturation probe (closed-loop burst through a deep-queue router)
+    // measures this machine's capacity; then an open-loop run at 2× that
+    // rate hits a shallow queue with a scheduling deadline. The overload
+    // contract, gated here: the stack *sheds* (typed, counted) instead
+    // of buffering without bound — admitted-request latency stays
+    // bounded, the queue never exceeds its depth, and accounting is
+    // exact (completed + shed == submitted).
+    let router_factory = {
+        let cfg = cfg.clone();
+        move |_w: usize| -> Box<dyn opt_gptq::runtime::Backend> {
+            Box::new(NativeBackend::new(NativeModel::new(ModelWeights::init(&cfg, 3))))
+        }
+    };
+
+    let probe_n = if smoke { 8 } else { 16 };
+    let probe_router = Router::new(
+        RouterConfig { engine: mk_econf(), workers: 1, admission: AdmissionConfig::default() },
+        router_factory.clone(),
+    );
+    let probe_params = SamplingParams { max_tokens: 10, ..Default::default() };
+    // Warm the worker (thread spawn + first-step costs) before timing.
+    for i in 0..2 {
+        let prompt = tok.encode(&synth_prompt(32, 900 + i));
+        let rx = probe_router.submit(prompt, probe_params).expect("warmup submit");
+        rx.recv().expect("warmup reply").expect("warmup completes");
+    }
+    let probe_start = Instant::now();
+    let probe_rxs: Vec<_> = (0..probe_n)
+        .map(|i| {
+            let prompt = tok.encode(&synth_prompt(32, 1000 + i as u64));
+            probe_router.submit(prompt, probe_params).expect("probe submit")
+        })
+        .collect();
+    let mut probe_lat = Vec::new();
+    for rx in probe_rxs {
+        probe_lat.push(rx.recv().expect("probe reply").expect("probe completes").latency_s);
+    }
+    let capacity_rps = probe_n as f64 / probe_start.elapsed().as_secs_f64().max(1e-3);
+    let probe_mean_lat = probe_lat.iter().sum::<f64>() / probe_lat.len() as f64;
+    drop(probe_router);
+
+    let overload_rate = 2.0 * capacity_rps;
+    let n_over = if smoke { 48 } else { 120 };
+    let queue_depth = 8;
+    // Deadline: time-to-admission budget ≈ 2× the probe's mean service
+    // latency, clamped to a sane range.
+    let deadline_ms = ((probe_mean_lat * 2e3) as u64).clamp(25, 2_000);
+    let over_router = Router::new(
+        RouterConfig {
+            engine: mk_econf(),
+            workers: 1,
+            admission: AdmissionConfig {
+                queue_depth,
+                default_deadline_ms: deadline_ms,
+                ..Default::default()
+            },
+        },
+        router_factory,
+    );
+    let over_wl = WorkloadConfig {
+        num_requests: n_over,
+        arrival_rate: overload_rate,
+        prompt_len: LenDist::Uniform(16, 48),
+        gen_len: LenDist::Uniform(6, 12),
+        seed: 11,
+    };
+    let over_start = Instant::now();
+    let mut shed_queue_full = 0usize;
+    let mut queue_max = 0usize;
+    let mut replies = Vec::new();
+    for (i, r) in generate(&over_wl).iter().enumerate() {
+        let target = Duration::from_secs_f64(r.arrival_s);
+        let elapsed = over_start.elapsed();
+        if target > elapsed {
+            std::thread::sleep(target - elapsed);
+        }
+        let prompt = tok.encode(&synth_prompt(r.prompt_len, 2000 + i as u64));
+        let params = SamplingParams { max_tokens: r.gen_len, ..Default::default() };
+        match over_router.submit(prompt, params) {
+            Ok(rx) => replies.push(rx),
+            Err(SubmitError::QueueFull { .. }) => shed_queue_full += 1,
+            Err(e) => panic!("unexpected submit error under overload: {e}"),
+        }
+        queue_max = queue_max.max(over_router.worker_health()[0].queued);
+    }
+    let mut completed = 0usize;
+    let mut shed_deadline = 0usize;
+    let mut admitted_lat = Vec::new();
+    for rx in replies {
+        match rx.recv().expect("worker must answer every accepted request") {
+            Ok(out) => {
+                completed += 1;
+                admitted_lat.push(out.latency_s);
+            }
+            Err(SubmitError::DeadlineExceeded) => shed_deadline += 1,
+            Err(e) => panic!("unexpected rejection under overload: {e}"),
+        }
+    }
+    let snap = over_router.snapshot(0).expect("overload worker snapshot");
+    drop(over_router);
+
+    let shed_total = shed_queue_full + shed_deadline;
+    let shed_rate = shed_total as f64 / n_over as f64;
+    let admitted_p99_s = percentile(&admitted_lat, 99.0);
+
+    let mut t2 = Table::new(
+        "Engine serving: sustained 2x overload through bounded admission",
+        &["metric", "value"],
+    );
+    t2.row(&["capacity probe (req/s)".into(), f(capacity_rps, 1)]);
+    t2.row(&["overload rate (req/s)".into(), f(overload_rate, 1)]);
+    t2.row(&["deadline (ms)".into(), deadline_ms.to_string()]);
+    t2.row(&["submitted".into(), n_over.to_string()]);
+    t2.row(&["completed".into(), completed.to_string()]);
+    t2.row(&["shed: queue full".into(), shed_queue_full.to_string()]);
+    t2.row(&["shed: deadline".into(), shed_deadline.to_string()]);
+    t2.row(&["shed rate".into(), f(shed_rate, 3)]);
+    t2.row(&["admitted p99 latency (ms)".into(), f(admitted_p99_s * 1e3, 1)]);
+    t2.row(&[format!("queue depth max (bound {queue_depth})"), queue_max.to_string()]);
+    t2.row(&["concurrency limit (final)".into(), snap.concurrency_limit.to_string()]);
+    t2.row(&["worker restarts".into(), snap.restarts.to_string()]);
+    t2.print();
+
+    // The overload gates.
+    assert_eq!(completed + shed_total, n_over, "overload accounting must be exact");
+    assert!(shed_total > 0, "2x sustained overload must shed, not buffer without bound");
+    assert!(completed > 0, "overload must not collapse to zero goodput");
+    assert!(
+        queue_max <= queue_depth,
+        "admission queue exceeded its bound: {queue_max} > {queue_depth}"
+    );
+    let p99_bound = (probe_mean_lat * 100.0).max(2.0);
+    assert!(
+        admitted_p99_s <= p99_bound,
+        "admitted p99 {admitted_p99_s:.3}s not bounded under overload (limit {p99_bound:.3}s)"
+    );
+    assert_eq!(snap.restarts, 0, "overload alone must never crash a worker");
+    assert_eq!(
+        snap.report.deadline_miss_count, shed_deadline,
+        "worker-side deadline counter must match client-observed sheds"
+    );
+    assert_eq!(
+        snap.report.shed_count, shed_total,
+        "worker-side shed counter must match client-observed sheds"
+    );
+
     common::write_bench_json(
         "engine",
         &[
@@ -142,6 +294,19 @@ fn main() {
             ("mixed_steps", engine.metrics.mixed_steps as f64),
             ("prefill_dequant_tiles", report.prefill_dequant_tiles as f64),
             ("gather_bytes", report.gather_bytes as f64),
+            // Overload phase (2× saturation through bounded admission).
+            ("overload_requests", n_over as f64),
+            ("overload_completed", completed as f64),
+            ("overload_shed_total", shed_total as f64),
+            ("overload_shed_queue_full", shed_queue_full as f64),
+            ("overload_shed_deadline", shed_deadline as f64),
+            ("overload_shed_rate", shed_rate),
+            ("overload_deadline_ms", deadline_ms as f64),
+            ("overload_admitted_p99_s", admitted_p99_s),
+            ("overload_queue_depth", queue_depth as f64),
+            ("overload_queue_max", queue_max as f64),
+            ("overload_concurrency_limit_final", snap.concurrency_limit as f64),
+            ("overload_worker_restarts", snap.restarts as f64),
         ],
     );
 }

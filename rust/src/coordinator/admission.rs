@@ -1,0 +1,350 @@
+//! Overload control for the serving front door: typed rejection, a
+//! depth-bounded admission queue with per-request deadlines, and an
+//! AIMD concurrency limit.
+//!
+//! The paper's serving claim (§III: paging memory management inside
+//! vLLM to "maximize hardware efficiency" under large-scale load) only
+//! holds if overload degrades gracefully. This module is the policy
+//! layer the [`super::router`] applies **before** any work is
+//! scheduled:
+//!
+//! * [`SubmitError`] — every rejection is typed, so the HTTP layer can
+//!   answer 429/503/400 honestly instead of guessing.
+//! * [`AdmissionQueue`] — a bounded FCFS queue in front of each engine
+//!   worker; entries carry a deadline and are shed (never silently
+//!   dropped) once it passes, **before** they reach the scheduler.
+//! * [`AimdController`] — additive-increase / multiplicative-decrease
+//!   concurrency limit driven by observed inter-token latency vs an SLO
+//!   target (the congestion-control idiom: probe for capacity while the
+//!   signal is healthy, back off multiplicatively on breach).
+//!
+//! Because shedding happens strictly pre-scheduling, the bit-identity,
+//! zero-alloc and decode-liveness contracts of the engine are untouched:
+//! an admitted request runs exactly as it would without this layer.
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+/// Typed rejection for the submit path (engine → router → server).
+///
+/// Replaces the old dropped-reply-channel convention, where every
+/// failure reached the client as a guessed 400.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The worker's admission queue is at capacity. `retry_after_ms` is
+    /// the router's estimate of when a slot frees up (HTTP 429 +
+    /// `Retry-After`).
+    QueueFull { retry_after_ms: u64 },
+    /// The request's deadline passed before it could be scheduled
+    /// (HTTP 503). The deadline bounds time-to-admission, not
+    /// generation: once scheduled, a request runs to completion.
+    DeadlineExceeded,
+    /// The request can never be served by this deployment — empty
+    /// prompt, or prompt + max_tokens exceed the KV pool / model
+    /// max_seq (HTTP 400; retrying is pointless).
+    PromptTooLong { reason: String },
+    /// The engine worker crashed while the request was queued or in
+    /// flight, or no healthy worker exists (HTTP 503).
+    WorkerFailed,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::QueueFull { retry_after_ms } => {
+                write!(f, "admission queue full; retry after {retry_after_ms} ms")
+            }
+            SubmitError::DeadlineExceeded => {
+                write!(f, "deadline exceeded before the request could be scheduled")
+            }
+            SubmitError::PromptTooLong { reason } => write!(f, "{reason}"),
+            SubmitError::WorkerFailed => write!(f, "engine worker failed"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// Tunables for the [`AimdController`].
+#[derive(Debug, Clone, Copy)]
+pub struct AimdConfig {
+    /// Inter-token latency SLO target in seconds. Mean observed ITL at
+    /// or under this is "healthy" (additive increase); above it is a
+    /// breach (multiplicative decrease).
+    pub target_itl_s: f64,
+    /// Floor for the concurrency limit (never shed to zero capacity).
+    pub min_limit: usize,
+    /// Ceiling for the concurrency limit (the scheduler's own
+    /// `max_running` still applies independently).
+    pub max_limit: usize,
+    /// Starting limit.
+    pub initial_limit: usize,
+    /// Additive step per healthy observation window.
+    pub increase: f64,
+    /// Multiplicative factor applied on breach (e.g. 0.5 halves).
+    pub decrease: f64,
+    /// Minimum new inter-token samples per adjustment decision; smaller
+    /// windows would let a single gap swing the limit.
+    pub min_samples: u64,
+}
+
+impl Default for AimdConfig {
+    fn default() -> Self {
+        AimdConfig {
+            target_itl_s: 0.050,
+            min_limit: 1,
+            max_limit: 64,
+            initial_limit: 8,
+            increase: 1.0,
+            decrease: 0.5,
+            min_samples: 8,
+        }
+    }
+}
+
+/// AIMD concurrency-limit controller.
+///
+/// Fed the engine's *cumulative* inter-token totals (count, sum) each
+/// worker-loop iteration via [`observe_totals`](Self::observe_totals);
+/// it adjusts once at least [`AimdConfig::min_samples`] new gaps have
+/// accumulated, comparing the window's mean against the SLO target.
+#[derive(Debug, Clone)]
+pub struct AimdController {
+    cfg: AimdConfig,
+    limit: f64,
+    seen_count: u64,
+    seen_sum: f64,
+}
+
+impl AimdController {
+    pub fn new(cfg: AimdConfig) -> Self {
+        let limit =
+            (cfg.initial_limit as f64).clamp(cfg.min_limit as f64, cfg.max_limit as f64);
+        AimdController { cfg, limit, seen_count: 0, seen_sum: 0.0 }
+    }
+
+    /// Current integer limit (floor of the fractional state, at least
+    /// `min_limit` — additive probing accumulates fractionally).
+    pub fn limit(&self) -> usize {
+        (self.limit as usize).max(self.cfg.min_limit)
+    }
+
+    /// Feed cumulative (count, sum) inter-token totals, e.g. from
+    /// `EngineMetrics::inter_token_totals`. Returns `true` if the limit
+    /// was adjusted this call.
+    pub fn observe_totals(&mut self, count: u64, sum: f64) -> bool {
+        let new = count.saturating_sub(self.seen_count);
+        if new < self.cfg.min_samples {
+            return false;
+        }
+        let window_mean = (sum - self.seen_sum) / new as f64;
+        self.seen_count = count;
+        self.seen_sum = sum;
+        if window_mean > self.cfg.target_itl_s {
+            self.limit = (self.limit * self.cfg.decrease).max(self.cfg.min_limit as f64);
+        } else {
+            self.limit = (self.limit + self.cfg.increase).min(self.cfg.max_limit as f64);
+        }
+        true
+    }
+}
+
+/// Bounded FCFS admission queue with per-entry deadlines.
+///
+/// Generic over the payload so the policy is testable without an
+/// engine; the router queues its (prompt, params, reply-sender)
+/// triples. Depth enforcement lives at the submit side (the router
+/// rejects before enqueueing); this structure owns ordering and
+/// deadline shedding.
+#[derive(Debug)]
+pub struct AdmissionQueue<T> {
+    items: VecDeque<(Instant, T)>,
+}
+
+impl<T> Default for AdmissionQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> AdmissionQueue<T> {
+    pub fn new() -> Self {
+        AdmissionQueue { items: VecDeque::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    pub fn push(&mut self, deadline: Instant, item: T) {
+        self.items.push_back((deadline, item));
+    }
+
+    /// Remove and return every entry whose deadline is at or before
+    /// `now` (arrival order preserved). Run before admitting, so
+    /// expired requests are shed instead of scheduled.
+    pub fn shed_expired(&mut self, now: Instant) -> Vec<T> {
+        let mut shed = Vec::new();
+        let mut kept = VecDeque::with_capacity(self.items.len());
+        for (deadline, item) in self.items.drain(..) {
+            if deadline <= now {
+                shed.push(item);
+            } else {
+                kept.push_back((deadline, item));
+            }
+        }
+        self.items = kept;
+        shed
+    }
+
+    /// Pop the oldest entry (FCFS).
+    pub fn pop(&mut self) -> Option<(Instant, T)> {
+        self.items.pop_front()
+    }
+
+    /// Drain every entry (worker teardown: fail them all explicitly).
+    pub fn drain_all(&mut self) -> Vec<T> {
+        self.items.drain(..).map(|(_, item)| item).collect()
+    }
+}
+
+/// Admission-layer configuration, carried in `RouterConfig`.
+#[derive(Debug, Clone)]
+pub struct AdmissionConfig {
+    /// Max requests queued in front of each worker (accepted but not
+    /// yet handed to the engine) before submit sheds with
+    /// [`SubmitError::QueueFull`].
+    pub queue_depth: usize,
+    /// Server-side deadline (ms) applied when the client sends no
+    /// `timeout_ms`.
+    pub default_deadline_ms: u64,
+    /// AIMD concurrency-limit tunables.
+    pub aimd: AimdConfig,
+    /// Engine crashes tolerated per worker before it is declared dead
+    /// (supervision stops respawning and the worker goes permanently
+    /// unhealthy).
+    pub max_restarts: usize,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        AdmissionConfig {
+            queue_depth: 64,
+            default_deadline_ms: 30_000,
+            aimd: AimdConfig::default(),
+            max_restarts: 8,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn submit_error_display_is_actionable() {
+        assert!(SubmitError::QueueFull { retry_after_ms: 120 }.to_string().contains("120 ms"));
+        assert!(SubmitError::DeadlineExceeded.to_string().contains("deadline"));
+        assert_eq!(
+            SubmitError::PromptTooLong { reason: "needs 99 tokens".into() }.to_string(),
+            "needs 99 tokens"
+        );
+        assert!(SubmitError::WorkerFailed.to_string().contains("worker"));
+    }
+
+    #[test]
+    fn aimd_additive_increase_under_target() {
+        let mut c = AimdController::new(AimdConfig {
+            target_itl_s: 0.05,
+            initial_limit: 4,
+            min_samples: 8,
+            ..Default::default()
+        });
+        assert_eq!(c.limit(), 4);
+        // 8 gaps averaging 10 ms — healthy → +1.
+        assert!(c.observe_totals(8, 8.0 * 0.010));
+        assert_eq!(c.limit(), 5);
+        // Another healthy window on top of the cumulative totals.
+        assert!(c.observe_totals(16, 16.0 * 0.010));
+        assert_eq!(c.limit(), 6);
+    }
+
+    #[test]
+    fn aimd_multiplicative_decrease_on_breach() {
+        let mut c = AimdController::new(AimdConfig {
+            target_itl_s: 0.05,
+            initial_limit: 8,
+            min_samples: 4,
+            decrease: 0.5,
+            ..Default::default()
+        });
+        // Window mean 200 ms >> 50 ms target → halve.
+        assert!(c.observe_totals(4, 4.0 * 0.200));
+        assert_eq!(c.limit(), 4);
+        assert!(c.observe_totals(8, 8.0 * 0.200));
+        assert_eq!(c.limit(), 2);
+        assert!(c.observe_totals(12, 12.0 * 0.200));
+        assert_eq!(c.limit(), 1);
+        // Clamped at the floor — capacity never sheds to zero.
+        assert!(c.observe_totals(16, 16.0 * 0.200));
+        assert_eq!(c.limit(), 1);
+    }
+
+    #[test]
+    fn aimd_waits_for_min_samples() {
+        let mut c = AimdController::new(AimdConfig { min_samples: 8, ..Default::default() });
+        let before = c.limit();
+        // 7 new samples: no decision yet, regardless of their mean.
+        assert!(!c.observe_totals(7, 7.0 * 10.0));
+        assert_eq!(c.limit(), before);
+        // The 8th completes the window (cumulative totals include all 8).
+        assert!(c.observe_totals(8, 8.0 * 0.001));
+        assert_eq!(c.limit(), before + 1);
+    }
+
+    #[test]
+    fn aimd_ceiling_is_respected() {
+        let mut c = AimdController::new(AimdConfig {
+            initial_limit: 63,
+            max_limit: 64,
+            min_samples: 1,
+            ..Default::default()
+        });
+        c.observe_totals(1, 0.0);
+        c.observe_totals(2, 0.0);
+        c.observe_totals(3, 0.0);
+        assert_eq!(c.limit(), 64);
+    }
+
+    #[test]
+    fn queue_fcfs_and_deadline_shedding() {
+        let mut q: AdmissionQueue<u32> = AdmissionQueue::new();
+        let now = Instant::now();
+        q.push(now + Duration::from_secs(10), 1);
+        q.push(now, 2); // already expired
+        q.push(now + Duration::from_secs(10), 3);
+        assert_eq!(q.len(), 3);
+        let shed = q.shed_expired(now);
+        assert_eq!(shed, vec![2]);
+        assert_eq!(q.len(), 2);
+        // FCFS order among survivors.
+        assert_eq!(q.pop().unwrap().1, 1);
+        assert_eq!(q.pop().unwrap().1, 3);
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn queue_drain_all_empties_in_order() {
+        let mut q: AdmissionQueue<&str> = AdmissionQueue::new();
+        let now = Instant::now();
+        q.push(now + Duration::from_secs(1), "a");
+        q.push(now + Duration::from_secs(2), "b");
+        assert_eq!(q.drain_all(), vec!["a", "b"]);
+        assert!(q.is_empty());
+    }
+}

@@ -8,9 +8,9 @@ use crate::kvcache::{
     BlockAllocator, BlockTable, CacheStats, KvCacheDtype, KvStore, PagedKvCache,
     QuantizedPagedKvCache,
 };
+use super::admission::SubmitError;
 use crate::model::{SamplingParams, WeightDtype};
 use crate::runtime::{Backend, DecodeItem, MixedBatch, PrefillChunkItem};
-use anyhow::{bail, Result};
 use std::time::Instant;
 
 /// Engine construction parameters.
@@ -86,6 +86,11 @@ pub struct Engine {
     outputs: Vec<RequestOutput>,
     next_id: u64,
     t0: Instant,
+    /// Test-only deterministic fault injector (`runtime::fault`);
+    /// compiled out of release builds without the `fault-inject`
+    /// feature.
+    #[cfg(any(test, feature = "fault-inject"))]
+    faults: Option<crate::runtime::fault::FaultInjector>,
 }
 
 impl Engine {
@@ -144,7 +149,17 @@ impl Engine {
             outputs: Vec::new(),
             next_id: 1,
             t0: Instant::now(),
+            #[cfg(any(test, feature = "fault-inject"))]
+            faults: None,
         }
+    }
+
+    /// Arm a deterministic fault injector: each `step()` first consults
+    /// it and applies the planned fault (panic / latency spike /
+    /// admission-visible allocator exhaustion) before any scheduling.
+    #[cfg(any(test, feature = "fault-inject"))]
+    pub fn arm_faults(&mut self, inj: crate::runtime::fault::FaultInjector) {
+        self.faults = Some(inj);
     }
 
     /// Engine-clock seconds.
@@ -161,23 +176,31 @@ impl Engine {
         self.cfg.num_blocks * self.cfg.block_size
     }
 
-    /// Enqueue a request; returns its id.
-    pub fn add_request(&mut self, prompt: Vec<u32>, params: SamplingParams) -> Result<u64> {
+    /// Enqueue a request; returns its id. Rejections are typed
+    /// ([`SubmitError::PromptTooLong`] — every condition here is a
+    /// permanent property of request vs deployment, so retrying is
+    /// pointless) and flow unchanged through router and server.
+    pub fn add_request(
+        &mut self,
+        prompt: Vec<u32>,
+        params: SamplingParams,
+    ) -> Result<u64, SubmitError> {
+        let too_long = |reason: String| SubmitError::PromptTooLong { reason };
         if prompt.is_empty() {
-            bail!("empty prompt");
+            return Err(too_long("empty prompt".into()));
         }
         let total = prompt.len() + params.max_tokens;
         if total > self.capacity_tokens() {
-            bail!(
+            return Err(too_long(format!(
                 "request needs {total} KV tokens but the pool holds {}",
                 self.capacity_tokens()
-            );
+            )));
         }
-        if prompt.len() + params.max_tokens > self.backend.config().max_seq {
-            bail!(
+        if total > self.backend.config().max_seq {
+            return Err(too_long(format!(
                 "request length {total} exceeds model max_seq {}",
                 self.backend.config().max_seq
-            );
+            )));
         }
         let id = self.next_id;
         self.next_id += 1;
@@ -228,9 +251,33 @@ impl Engine {
         self.backend.weight_bytes()
     }
 
+    /// KV blocks currently allocated (leak probe for crash-recovery
+    /// tests: must return to 0 once all sequences finish).
+    pub fn used_blocks(&self) -> usize {
+        self.alloc.num_used()
+    }
+
+    /// KV blocks currently free.
+    pub fn free_blocks(&self) -> usize {
+        self.alloc.num_free()
+    }
+
     /// Execute one scheduler step (one mixed prefill+decode batch).
     /// Returns `false` when idle.
     pub fn step(&mut self) -> bool {
+        #[cfg(any(test, feature = "fault-inject"))]
+        if let Some(inj) = &self.faults {
+            let fault = inj.next_step();
+            // Exhaustion gates only admission-visible probes; scheduled
+            // work is never perturbed (the overload contract).
+            self.alloc.set_fault_exhausted(fault.exhaust);
+            if fault.delay_ms > 0 {
+                std::thread::sleep(std::time::Duration::from_millis(fault.delay_ms));
+            }
+            if fault.panic {
+                panic!("injected fault: engine step panic");
+            }
+        }
         let mut plan = self.scheduler.plan(&mut self.alloc, self.prefix_cache.as_mut());
         // Memory-pressure release valve: if the pool is too pinned by the
         // prefix cache to admit anything while work is queued, flush it.
@@ -787,6 +834,58 @@ mod tests {
         let r = e.run_to_completion();
         assert_eq!(r.num_requests, 3);
         assert_eq!(r.decode_stall_steps, 0);
+    }
+
+    #[test]
+    fn fault_exhaustion_blocks_admission_then_recovers() {
+        use crate::runtime::FaultPlan;
+        let mut e = engine(32);
+        // Steps [0, 3) report an exhausted pool to admission probes.
+        e.arm_faults(FaultPlan::new(1).exhaust_steps(0, 3).injector());
+        e.add_request(vec![256, 1, 2], params(4)).unwrap();
+        // While exhaustion is armed the scheduler cannot admit: the
+        // request stays waiting and steps report idle.
+        for _ in 0..3 {
+            assert!(!e.step(), "no work should be schedulable under exhaustion");
+            assert_eq!(e.num_waiting(), 1);
+            assert_eq!(e.num_running(), 0);
+        }
+        // Fault window over: the same request admits and completes.
+        let r = e.run_to_completion();
+        assert_eq!(r.num_requests, 1);
+        assert_eq!(e.take_outputs().len(), 1);
+        assert_eq!(e.used_blocks(), 0);
+        assert_eq!(e.free_blocks(), 32, "probes must recover after the fault window");
+    }
+
+    #[test]
+    fn fault_delay_inflates_observed_inter_token_latency() {
+        use crate::runtime::FaultPlan;
+        let run = |delay_ms: u64| {
+            let mut e = engine(32);
+            e.arm_faults(FaultPlan::new(1).delay_steps(0, u64::MAX, delay_ms).injector());
+            e.add_request(vec![256, 1, 2], params(6)).unwrap();
+            e.run_to_completion();
+            let (n, sum) = e.metrics.inter_token_totals();
+            assert!(n > 0);
+            sum / n as f64
+        };
+        let (fast, slow) = (run(0), run(15));
+        assert!(
+            slow > fast + 0.010,
+            "15 ms injected step delay must dominate ITL: fast {fast} slow {slow}"
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "injected fault: engine step panic")]
+    fn fault_panic_unwinds_out_of_step() {
+        use crate::runtime::FaultPlan;
+        let mut e = engine(32);
+        e.arm_faults(FaultPlan::new(1).panic_at_step(1).injector());
+        e.add_request(vec![256, 1], params(4)).unwrap();
+        e.step(); // step 0: clean
+        e.step(); // step 1: unwinds (what router supervision catches)
     }
 
     /// Preemption + re-admission under the mixed planner: the tight run

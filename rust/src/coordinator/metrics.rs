@@ -85,6 +85,20 @@ pub struct EngineMetrics {
     /// refactor; growth here means a dense KV copy crept back onto the
     /// hot path.
     pub gather_bytes: usize,
+    /// Requests shed by the admission layer before any work was
+    /// scheduled (queue-full rejections + deadline sheds). Mirrored in
+    /// by the router worker loop; stays 0 when the engine is driven
+    /// directly.
+    pub shed_count: usize,
+    /// Subset of `shed_count` shed because the request's deadline
+    /// passed before it could be scheduled.
+    pub deadline_miss_count: usize,
+    /// Current AIMD concurrency limit (gauge; mirrored in by the router
+    /// worker loop, 0 when the engine is driven directly).
+    pub concurrency_limit: usize,
+    /// Cumulative engine-worker crash/respawn count under supervision
+    /// (mirrored in by the router worker loop).
+    pub worker_restarts: usize,
 }
 
 /// Max inter-token gap samples retained for percentiles (~512 KiB).
@@ -108,6 +122,14 @@ impl EngineMetrics {
         }
     }
 
+    /// Cumulative inter-token totals `(count, sum_seconds)` over ALL
+    /// recorded gaps (exact, not the bounded percentile window). The
+    /// AIMD controller diffs consecutive snapshots to get per-window
+    /// means without copying the ring.
+    pub fn inter_token_totals(&self) -> (u64, f64) {
+        (self.inter_token_count, self.inter_token_sum)
+    }
+
     /// Mean decode batch occupancy (sequences per step).
     pub fn mean_decode_batch(&self) -> f64 {
         if self.decode_steps == 0 {
@@ -128,7 +150,15 @@ impl EngineMetrics {
     pub fn report(&self) -> RunReport {
         let n = self.records.len();
         if n == 0 {
-            return RunReport::default();
+            // No completions — but overload counters must still surface
+            // (a fully-shed run is exactly when they matter).
+            return RunReport {
+                shed_count: self.shed_count,
+                deadline_miss_count: self.deadline_miss_count,
+                concurrency_limit: self.concurrency_limit,
+                worker_restarts: self.worker_restarts,
+                ..RunReport::default()
+            };
         }
         let t0 = self.records.iter().map(|r| r.t_enqueue).fold(f64::INFINITY, f64::min);
         let t1 = self.records.iter().map(|r| r.t_finish).fold(0.0f64, f64::max);
@@ -162,6 +192,10 @@ impl EngineMetrics {
             peak_blocks: self.peak_blocks,
             prefill_dequant_tiles: self.prefill_dequant_tiles,
             gather_bytes: self.gather_bytes,
+            shed_count: self.shed_count,
+            deadline_miss_count: self.deadline_miss_count,
+            concurrency_limit: self.concurrency_limit,
+            worker_restarts: self.worker_restarts,
         }
     }
 }
@@ -200,6 +234,16 @@ pub struct RunReport {
     /// Dense f32 bytes materialized by `KvStore::gather` — ≈ 0 in a
     /// healthy engine (gather is test/debug only on the serving path).
     pub gather_bytes: usize,
+    /// Requests shed by the admission layer before scheduling
+    /// (queue-full + deadline); 0 when the engine is driven directly.
+    pub shed_count: usize,
+    /// Subset of `shed_count` shed for deadline expiry.
+    pub deadline_miss_count: usize,
+    /// AIMD concurrency limit at report time (gauge; 0 without a
+    /// router).
+    pub concurrency_limit: usize,
+    /// Cumulative supervised engine-worker restarts.
+    pub worker_restarts: usize,
 }
 
 impl RunReport {
@@ -269,6 +313,39 @@ mod tests {
         m.record_finish(rec(1, 0.0, 1.0, 1, 1));
         let r = m.report();
         assert!((r.mean_inter_token_s - expect).abs() < 1e-6, "{}", r.mean_inter_token_s);
+    }
+
+    #[test]
+    fn overload_counters_survive_empty_and_full_reports() {
+        let mut m = EngineMetrics::default();
+        m.shed_count = 7;
+        m.deadline_miss_count = 3;
+        m.concurrency_limit = 5;
+        m.worker_restarts = 2;
+        // No completions: the counters must still reach the report (a
+        // fully-shed run is exactly when they matter).
+        let r = m.report();
+        assert_eq!(r.num_requests, 0);
+        assert_eq!(r.shed_count, 7);
+        assert_eq!(r.deadline_miss_count, 3);
+        assert_eq!(r.concurrency_limit, 5);
+        assert_eq!(r.worker_restarts, 2);
+        // And with completions.
+        m.record_finish(rec(1, 0.0, 1.0, 4, 4));
+        let r = m.report();
+        assert_eq!(r.num_requests, 1);
+        assert_eq!((r.shed_count, r.deadline_miss_count), (7, 3));
+    }
+
+    #[test]
+    fn inter_token_totals_are_exact_cumulative() {
+        let mut m = EngineMetrics::default();
+        assert_eq!(m.inter_token_totals(), (0, 0.0));
+        m.record_gap(0.1);
+        m.record_gap(0.3);
+        let (n, s) = m.inter_token_totals();
+        assert_eq!(n, 2);
+        assert!((s - 0.4).abs() < 1e-12);
     }
 
     #[test]

@@ -13,11 +13,18 @@
 //! * [`engine`] — the step loop: scheduler plan → one
 //!   `Backend::forward_step` mixed batch → sampling → cache bookkeeping
 //!   → metrics.
-//! * [`router`] — front door: validation, request ids, fan-out to
-//!   engine workers.
+//! * [`admission`] — the overload-control vocabulary: typed rejections
+//!   ([`SubmitError`]), the bounded deadline queue, and the AIMD
+//!   concurrency controller (see ARCHITECTURE.md "Overload & failure
+//!   contract").
+//! * [`router`] — front door: validation, bounded admission with
+//!   deadlines, fan-out to *supervised* engine workers (crash →
+//!   typed failure → respawn).
 //! * [`metrics`] — the paper's measurement surface: latency, "all"
-//!   throughput (req/s and tok/s), generation throughput.
+//!   throughput (req/s and tok/s), generation throughput, plus the
+//!   overload counters (sheds, deadline misses, restarts).
 
+pub mod admission;
 pub mod batcher;
 pub mod engine;
 pub mod metrics;
@@ -25,6 +32,7 @@ pub mod router;
 pub mod scheduler;
 pub mod sequence;
 
+pub use admission::{AdmissionConfig, AdmissionQueue, AimdConfig, AimdController, SubmitError};
 pub use batcher::BucketPolicy;
 pub use engine::{Engine, EngineConfig, RequestOutput};
 // Re-exported so engine-config construction sites don't need separate
@@ -32,6 +40,6 @@ pub use engine::{Engine, EngineConfig, RequestOutput};
 pub use crate::kvcache::KvCacheDtype;
 pub use crate::model::WeightDtype;
 pub use metrics::{EngineMetrics, RunReport};
-pub use router::{Router, RouterConfig};
+pub use router::{Router, RouterConfig, SubmitResult, WorkerHealth, WorkerSnapshot};
 pub use scheduler::{PrefillChunk, Scheduler, SchedulerConfig, StepPlan};
 pub use sequence::{SeqPhase, Sequence};

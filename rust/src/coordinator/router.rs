@@ -1,109 +1,335 @@
-//! Request router: the front door over one or more engine workers.
+//! Request router: the overload-hardened front door over one or more
+//! engine workers.
 //!
-//! Each worker owns an [`Engine`] on its own thread; the router validates
-//! requests, assigns global ids, and dispatches to the least-loaded
-//! worker (paper §III.C "dynamic load balancing"). Responses flow back
-//! over a channel. With `workers == 1` this degenerates to a serialized
-//! engine with an async submission API — the configuration every bench
-//! uses (determinism), while multi-worker exercises the balancing path.
+//! Each worker owns an [`Engine`] on its own thread; the router
+//! validates requests, applies the admission policy, and dispatches to
+//! the least-loaded healthy worker (paper §III.C "dynamic load
+//! balancing"). Responses flow back over a per-request channel carrying
+//! a typed [`SubmitResult`]. With `workers == 1` this degenerates to a
+//! serialized engine with an async submission API — the configuration
+//! every bench uses (determinism), while multi-worker exercises the
+//! balancing and supervision paths.
+//!
+//! Overload control (see [`super::admission`] and ARCHITECTURE.md
+//! "Overload & failure contract"):
+//!
+//! * **Bounded admission** — at most `AdmissionConfig::queue_depth`
+//!   requests queue in front of each worker; beyond that `submit`
+//!   sheds synchronously with [`SubmitError::QueueFull`] and a
+//!   `retry_after_ms` hint instead of queueing without bound.
+//! * **Deadlines** — every request carries one (caller-supplied or the
+//!   config default); the worker sheds expired entries with
+//!   [`SubmitError::DeadlineExceeded`] *before* scheduling, never by
+//!   aborting scheduled work.
+//! * **AIMD concurrency limit** — the worker admits into the engine
+//!   only up to a limit that probes up additively while observed
+//!   inter-token latency tracks the SLO target and halves on breach.
+//! * **Supervision** — each worker thread is a supervisor around the
+//!   engine loop: `catch_unwind` on crash, pending (in-engine) requests
+//!   failed with [`SubmitError::WorkerFailed`], queued-but-unadmitted
+//!   requests retained, backend + engine rebuilt from the retained
+//!   factory (a fresh engine owns a fresh KV pool, so a crash can never
+//!   leak blocks). After `max_restarts` crashes the worker goes
+//!   permanently unhealthy: `pick_worker` skips it and `/health`
+//!   reports it (503 when none are left).
 
+use super::admission::{AdmissionConfig, AdmissionQueue, AimdController, SubmitError};
 use super::engine::{Engine, EngineConfig, RequestOutput};
+use super::metrics::{EngineMetrics, RunReport};
 use crate::model::SamplingParams;
 use crate::runtime::Backend;
-use anyhow::Result;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// What a reply channel yields: the completed output, or a typed
+/// rejection (queue full / deadline / too long / worker crash).
+pub type SubmitResult = Result<RequestOutput, SubmitError>;
 
 /// Router construction parameters.
 pub struct RouterConfig {
     pub engine: EngineConfig,
     pub workers: usize,
+    /// Overload-control policy (queue depth, deadlines, AIMD, restart
+    /// budget).
+    pub admission: AdmissionConfig,
 }
 
 enum WorkerMsg {
-    Request { prompt: Vec<u32>, params: SamplingParams, reply: Sender<RequestOutput> },
+    Request {
+        prompt: Vec<u32>,
+        params: SamplingParams,
+        deadline: Instant,
+        reply: Sender<SubmitResult>,
+    },
+    /// Point-in-time state probe, answered by the worker loop between
+    /// steps (tests, benches, observability).
+    Inspect { reply: Sender<WorkerSnapshot> },
     Shutdown,
+}
+
+/// A queued request the worker has accepted but not yet admitted into
+/// the engine.
+struct PendingReq {
+    prompt: Vec<u32>,
+    params: SamplingParams,
+    reply: Sender<SubmitResult>,
+}
+
+/// Point-in-time worker state (via [`Router::snapshot`]).
+#[derive(Debug, Clone)]
+pub struct WorkerSnapshot {
+    /// The worker engine's metrics report (includes the mirrored
+    /// overload counters). Reset on respawn — a dead worker reports
+    /// defaults plus its restart count.
+    pub report: RunReport,
+    /// Requests queued in front of the engine.
+    pub queued: usize,
+    /// Requests admitted into the engine and not yet completed.
+    pub engine_inflight: usize,
+    /// KV blocks currently allocated (leak probe: 0 when idle).
+    pub used_blocks: usize,
+    /// KV blocks currently free.
+    pub free_blocks: usize,
+    pub restarts: usize,
+    pub healthy: bool,
+    pub concurrency_limit: usize,
+}
+
+/// Cheap per-worker health view (atomics only, no worker round-trip) —
+/// the `/health` endpoint's data source.
+#[derive(Debug, Clone)]
+pub struct WorkerHealth {
+    pub healthy: bool,
+    pub restarts: usize,
+    pub inflight: usize,
+    pub queued: usize,
+    pub concurrency_limit: usize,
+}
+
+/// Counters shared between the submit side and the worker thread.
+struct WorkerShared {
+    /// Accepted but not yet admitted into the engine (the bounded
+    /// quantity: `submit` sheds when it reaches `queue_depth`).
+    queued: AtomicUsize,
+    /// Accepted and not yet replied to (load signal for `pick_worker`).
+    inflight: AtomicUsize,
+    healthy: AtomicBool,
+    /// Successful crash→respawn cycles (a permanently dead worker does
+    /// not count its final crash as a restart).
+    restarts: AtomicUsize,
+    shed_queue_full: AtomicUsize,
+    shed_deadline: AtomicUsize,
+    /// EWMA of completed-request latency in ms (retry-after hints).
+    service_ms: AtomicU64,
+    /// Mirror of the worker's current AIMD concurrency limit.
+    limit: AtomicUsize,
+}
+
+impl WorkerShared {
+    fn new(initial_limit: usize) -> Self {
+        WorkerShared {
+            queued: AtomicUsize::new(0),
+            inflight: AtomicUsize::new(0),
+            // Born healthy: requests submitted before the worker thread
+            // finishes construction just queue in its mailbox.
+            healthy: AtomicBool::new(true),
+            restarts: AtomicUsize::new(0),
+            shed_queue_full: AtomicUsize::new(0),
+            shed_deadline: AtomicUsize::new(0),
+            service_ms: AtomicU64::new(0),
+            limit: AtomicUsize::new(initial_limit),
+        }
+    }
+
+    fn observe_service_ms(&self, ms: f64) {
+        let old = self.service_ms.load(Ordering::Relaxed);
+        let new = if old == 0 { ms } else { 0.8 * old as f64 + 0.2 * ms };
+        self.service_ms.store(new.max(1.0) as u64, Ordering::Relaxed);
+    }
 }
 
 struct Worker {
     tx: Sender<WorkerMsg>,
     handle: Option<JoinHandle<()>>,
-    /// Requests submitted and not yet completed (load signal).
-    inflight: Arc<AtomicUsize>,
+    shared: Arc<WorkerShared>,
 }
 
-/// Multi-worker request router.
+/// Multi-worker request router with bounded admission and supervision.
 pub struct Router {
     workers: Vec<Worker>,
     next: AtomicUsize,
+    admission: AdmissionConfig,
 }
 
 impl Router {
-    /// Spawn `cfg.workers` engines; `make_backend` is called once per
-    /// worker (each worker owns its backend + cache).
+    /// Spawn `cfg.workers` supervised engine workers. `make_backend`
+    /// is retained (shared across worker threads) so a crashed worker
+    /// can rebuild its backend; it runs on the worker's own thread,
+    /// once per incarnation.
     pub fn new<F>(cfg: RouterConfig, make_backend: F) -> Router
     where
-        F: Fn(usize) -> Box<dyn Backend>,
+        F: Fn(usize) -> Box<dyn Backend> + Send + Sync + 'static,
     {
         assert!(cfg.workers > 0);
+        let factory = Arc::new(make_backend);
         let mut workers = Vec::with_capacity(cfg.workers);
         for w in 0..cfg.workers {
-            let backend = make_backend(w);
-            let econf = cfg.engine.clone();
             let (tx, rx) = channel::<WorkerMsg>();
-            let inflight = Arc::new(AtomicUsize::new(0));
-            let inflight_thread = inflight.clone();
+            let shared = Arc::new(WorkerShared::new(cfg.admission.aimd.initial_limit));
+            let econf = cfg.engine.clone();
+            let acfg = cfg.admission.clone();
+            let factory = factory.clone();
+            let shared_thread = shared.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("engine-worker-{w}"))
-                .spawn(move || worker_loop(backend, econf, rx, inflight_thread))
+                .spawn(move || supervise(w, factory, econf, acfg, rx, shared_thread))
                 .expect("spawn engine worker");
-            workers.push(Worker { tx, handle: Some(handle), inflight });
+            workers.push(Worker { tx, handle: Some(handle), shared });
         }
-        Router { workers, next: AtomicUsize::new(0) }
+        Router { workers, next: AtomicUsize::new(0), admission: cfg.admission }
     }
 
-    /// Submit a request; the returned receiver yields the output when
-    /// generation completes.
+    /// Submit with the config's default deadline. The receiver yields
+    /// exactly one [`SubmitResult`] — completion or typed rejection.
     pub fn submit(
         &self,
         prompt: Vec<u32>,
         params: SamplingParams,
-    ) -> Result<Receiver<RequestOutput>> {
+    ) -> Result<Receiver<SubmitResult>, SubmitError> {
+        self.submit_with_deadline(prompt, params, None)
+    }
+
+    /// Submit with an explicit scheduling deadline (`None` → the
+    /// admission config's `default_deadline_ms`). Synchronous errors:
+    /// [`SubmitError::QueueFull`] when the picked worker's admission
+    /// queue is at depth, [`SubmitError::WorkerFailed`] when no healthy
+    /// worker exists.
+    pub fn submit_with_deadline(
+        &self,
+        prompt: Vec<u32>,
+        params: SamplingParams,
+        timeout: Option<Duration>,
+    ) -> Result<Receiver<SubmitResult>, SubmitError> {
+        let w = self.pick_worker().ok_or(SubmitError::WorkerFailed)?;
+        self.submit_to(w, prompt, params, timeout)
+    }
+
+    fn submit_to(
+        &self,
+        w: usize,
+        prompt: Vec<u32>,
+        params: SamplingParams,
+        timeout: Option<Duration>,
+    ) -> Result<Receiver<SubmitResult>, SubmitError> {
+        let shared = &self.workers[w].shared;
+        // Strict bound under concurrent submitters: reserve the slot
+        // first; whoever overshoots rolls back and sheds.
+        if shared.queued.fetch_add(1, Ordering::SeqCst) >= self.admission.queue_depth {
+            shared.queued.fetch_sub(1, Ordering::SeqCst);
+            shared.shed_queue_full.fetch_add(1, Ordering::SeqCst);
+            return Err(SubmitError::QueueFull { retry_after_ms: self.retry_hint_ms(w) });
+        }
+        shared.inflight.fetch_add(1, Ordering::SeqCst);
+        let deadline = Instant::now()
+            + timeout.unwrap_or(Duration::from_millis(self.admission.default_deadline_ms));
         let (reply, rx) = channel();
-        let w = self.pick_worker();
-        self.workers[w].inflight.fetch_add(1, Ordering::SeqCst);
-        self.workers[w]
-            .tx
-            .send(WorkerMsg::Request { prompt, params, reply })
-            .map_err(|_| anyhow::anyhow!("worker {w} is gone"))?;
+        if self.workers[w].tx.send(WorkerMsg::Request { prompt, params, deadline, reply }).is_err()
+        {
+            // The worker is gone. Roll back BOTH counters — leaving
+            // `inflight` raised would skew pick_worker away from this
+            // worker forever (the pre-supervision leak).
+            shared.queued.fetch_sub(1, Ordering::SeqCst);
+            shared.inflight.fetch_sub(1, Ordering::SeqCst);
+            return Err(SubmitError::WorkerFailed);
+        }
         Ok(rx)
     }
 
-    /// Least-loaded worker, round-robin tie-break.
-    fn pick_worker(&self) -> usize {
-        let start = self.next.fetch_add(1, Ordering::Relaxed) % self.workers.len();
-        let mut best = start;
-        let mut best_load = usize::MAX;
-        for i in 0..self.workers.len() {
-            let w = (start + i) % self.workers.len();
-            let load = self.workers[w].inflight.load(Ordering::SeqCst);
-            if load < best_load {
-                best_load = load;
-                best = w;
+    /// Estimated ms until worker `w` frees a queue slot: its service
+    /// EWMA scaled by backlog over concurrency, clamped to a sane
+    /// client-retry range.
+    fn retry_hint_ms(&self, w: usize) -> u64 {
+        let shared = &self.workers[w].shared;
+        let service = shared.service_ms.load(Ordering::Relaxed).max(10);
+        let backlog = shared.queued.load(Ordering::SeqCst).max(1) as u64;
+        let limit = shared.limit.load(Ordering::SeqCst).max(1) as u64;
+        (service * backlog / limit).clamp(10, 60_000)
+    }
+
+    /// Least-loaded *healthy* worker, round-robin tie-break. `None`
+    /// when every worker is dead.
+    fn pick_worker(&self) -> Option<usize> {
+        let n = self.workers.len();
+        let start = self.next.fetch_add(1, Ordering::Relaxed) % n;
+        let mut best: Option<(usize, usize)> = None;
+        for i in 0..n {
+            let w = (start + i) % n;
+            let shared = &self.workers[w].shared;
+            if !shared.healthy.load(Ordering::SeqCst) {
+                continue;
+            }
+            let load = shared.inflight.load(Ordering::SeqCst);
+            if best.map_or(true, |(_, b)| load < b) {
+                best = Some((w, load));
             }
         }
-        best
+        best.map(|(w, _)| w)
     }
 
     /// Current total in-flight count.
     pub fn inflight(&self) -> usize {
-        self.workers.iter().map(|w| w.inflight.load(Ordering::SeqCst)).sum()
+        self.workers.iter().map(|w| w.shared.inflight.load(Ordering::SeqCst)).sum()
     }
 
     pub fn num_workers(&self) -> usize {
         self.workers.len()
+    }
+
+    pub fn num_healthy(&self) -> usize {
+        self.workers.iter().filter(|w| w.shared.healthy.load(Ordering::SeqCst)).count()
+    }
+
+    /// Total crash→respawn cycles across workers.
+    pub fn worker_restarts(&self) -> usize {
+        self.workers.iter().map(|w| w.shared.restarts.load(Ordering::SeqCst)).sum()
+    }
+
+    /// Per-worker health view from shared atomics (no worker
+    /// round-trip; safe to call on a wedged router).
+    pub fn worker_health(&self) -> Vec<WorkerHealth> {
+        self.workers
+            .iter()
+            .map(|w| WorkerHealth {
+                healthy: w.shared.healthy.load(Ordering::SeqCst),
+                restarts: w.shared.restarts.load(Ordering::SeqCst),
+                inflight: w.shared.inflight.load(Ordering::SeqCst),
+                queued: w.shared.queued.load(Ordering::SeqCst),
+                concurrency_limit: w.shared.limit.load(Ordering::SeqCst),
+            })
+            .collect()
+    }
+
+    /// Ask worker `w` for a state snapshot (engine metrics, queue and
+    /// pool occupancy). `None` if the worker cannot answer within 10 s.
+    pub fn snapshot(&self, w: usize) -> Option<WorkerSnapshot> {
+        let (reply, rx) = channel();
+        self.workers[w].tx.send(WorkerMsg::Inspect { reply }).ok()?;
+        rx.recv_timeout(Duration::from_secs(10)).ok()
+    }
+
+    /// Test hook: cleanly stop worker `w` and join its thread, leaving
+    /// its channel dead but its health flag untouched — the setup for
+    /// exercising the send-failure rollback in `submit_to`.
+    #[cfg(test)]
+    fn kill_worker_for_test(&mut self, w: usize) {
+        let _ = self.workers[w].tx.send(WorkerMsg::Shutdown);
+        if let Some(h) = self.workers[w].handle.take() {
+            let _ = h.join();
+        }
     }
 }
 
@@ -120,23 +346,131 @@ impl Drop for Router {
     }
 }
 
-fn worker_loop(
-    backend: Box<dyn Backend>,
+/// Supervisor body for one worker thread: run the engine loop under
+/// `catch_unwind`; on crash, fail in-engine requests with
+/// [`SubmitError::WorkerFailed`], keep queued-but-unadmitted requests
+/// (they were not the poison), and respawn the engine from the factory
+/// — a fresh engine owns a fresh allocator, so no KV block survives a
+/// crash. After `max_restarts` crashes, go permanently unhealthy and
+/// keep draining the mailbox so late submits get a typed failure.
+fn supervise<F>(
+    w: usize,
+    factory: Arc<F>,
     econf: EngineConfig,
+    acfg: AdmissionConfig,
     rx: Receiver<WorkerMsg>,
-    inflight: Arc<AtomicUsize>,
-) {
-    let mut engine = Engine::new(backend, econf);
-    let mut pending: Vec<(u64, Sender<RequestOutput>)> = Vec::new();
+    shared: Arc<WorkerShared>,
+) where
+    F: Fn(usize) -> Box<dyn Backend> + Send + Sync + 'static,
+{
+    let mut queue: AdmissionQueue<PendingReq> = AdmissionQueue::new();
+    let mut pending: Vec<(u64, Sender<SubmitResult>)> = Vec::new();
+    let mut restarts_left = acfg.max_restarts;
     loop {
-        // Drain the mailbox (non-blocking while there is engine work;
-        // blocking when idle to avoid spinning).
+        let run = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            worker_loop(w, &*factory, &econf, &acfg, &rx, &shared, &mut queue, &mut pending)
+        }));
+        match run {
+            // Clean exit: Shutdown message or every sender dropped.
+            Ok(()) => return,
+            Err(_) => {
+                log::warn!(
+                    "engine-worker-{w}: engine crashed; failing {} in-flight request(s), {} queued retained",
+                    pending.len(),
+                    queue.len()
+                );
+                let dead = restarts_left == 0;
+                if dead {
+                    // Permanently dead. Unhealthy FIRST — before any
+                    // failing reply is delivered — so a client that sees
+                    // WorkerFailed and immediately probes /health (or
+                    // resubmits through pick_worker) observes the
+                    // degraded state deterministically.
+                    shared.healthy.store(false, Ordering::SeqCst);
+                    log::error!(
+                        "engine-worker-{w}: crash budget exhausted (max_restarts = {}); going unhealthy",
+                        acfg.max_restarts
+                    );
+                }
+                for (_, reply) in pending.drain(..) {
+                    shared.inflight.fetch_sub(1, Ordering::SeqCst);
+                    let _ = reply.send(Err(SubmitError::WorkerFailed));
+                }
+                if dead {
+                    for req in queue.drain_all() {
+                        shared.queued.fetch_sub(1, Ordering::SeqCst);
+                        shared.inflight.fetch_sub(1, Ordering::SeqCst);
+                        let _ = req.reply.send(Err(SubmitError::WorkerFailed));
+                    }
+                    drain_dead(&rx, &shared);
+                    return;
+                }
+                restarts_left -= 1;
+                shared.restarts.fetch_add(1, Ordering::SeqCst);
+            }
+        }
+    }
+}
+
+/// Mailbox loop of a permanently dead worker: answer (rather than
+/// strand) anything that still arrives, until the router drops.
+fn drain_dead(rx: &Receiver<WorkerMsg>, shared: &WorkerShared) {
+    for msg in rx.iter() {
+        match msg {
+            WorkerMsg::Request { reply, .. } => {
+                shared.queued.fetch_sub(1, Ordering::SeqCst);
+                shared.inflight.fetch_sub(1, Ordering::SeqCst);
+                let _ = reply.send(Err(SubmitError::WorkerFailed));
+            }
+            WorkerMsg::Inspect { reply } => {
+                let restarts = shared.restarts.load(Ordering::SeqCst);
+                let _ = reply.send(WorkerSnapshot {
+                    report: RunReport { worker_restarts: restarts, ..Default::default() },
+                    queued: 0,
+                    engine_inflight: 0,
+                    used_blocks: 0,
+                    free_blocks: 0,
+                    restarts,
+                    healthy: false,
+                    concurrency_limit: 0,
+                });
+            }
+            WorkerMsg::Shutdown => return,
+        }
+    }
+}
+
+/// One engine incarnation: build backend + engine, then loop
+/// mailbox-drain → deadline-shed → AIMD-bounded admission → step →
+/// replies → controller update → metrics mirror. Returns on clean
+/// shutdown; panics (engine/backend crashes) unwind to [`supervise`].
+#[allow(clippy::too_many_arguments)]
+fn worker_loop<F>(
+    w: usize,
+    factory: &F,
+    econf: &EngineConfig,
+    acfg: &AdmissionConfig,
+    rx: &Receiver<WorkerMsg>,
+    shared: &WorkerShared,
+    queue: &mut AdmissionQueue<PendingReq>,
+    pending: &mut Vec<(u64, Sender<SubmitResult>)>,
+) where
+    F: Fn(usize) -> Box<dyn Backend>,
+{
+    let backend = factory(w);
+    let mut engine = Engine::new(backend, econf.clone());
+    let mut aimd = AimdController::new(acfg.aimd);
+    shared.limit.store(aimd.limit(), Ordering::SeqCst);
+    shared.healthy.store(true, Ordering::SeqCst);
+    loop {
+        // Drain the mailbox (non-blocking while there is engine or
+        // queued work; blocking when fully idle to avoid spinning).
         loop {
-            let msg = if engine.has_work() {
+            let msg = if engine.has_work() || !queue.is_empty() {
                 match rx.try_recv() {
                     Ok(m) => m,
-                    Err(std::sync::mpsc::TryRecvError::Empty) => break,
-                    Err(std::sync::mpsc::TryRecvError::Disconnected) => return,
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => return,
                 }
             } else {
                 match rx.recv() {
@@ -145,56 +479,116 @@ fn worker_loop(
                 }
             };
             match msg {
-                WorkerMsg::Request { prompt, params, reply } => {
-                    match engine.add_request(prompt, params) {
-                        Ok(id) => pending.push((id, reply)),
-                        Err(e) => {
-                            log::warn!("router: rejecting request: {e}");
-                            inflight.fetch_sub(1, Ordering::SeqCst);
-                            // Dropping `reply` signals the error to the caller.
-                        }
-                    }
+                WorkerMsg::Request { prompt, params, deadline, reply } => {
+                    queue.push(deadline, PendingReq { prompt, params, reply });
+                }
+                WorkerMsg::Inspect { reply } => {
+                    // Refresh the mirrored counters first: a shed can
+                    // land (on the submit side) while this loop idles in
+                    // recv, after its last end-of-iteration mirror.
+                    mirror_overload_counters(&mut engine.metrics, shared, aimd.limit());
+                    let _ = reply.send(WorkerSnapshot {
+                        report: engine.metrics.report(),
+                        queued: queue.len(),
+                        engine_inflight: pending.len(),
+                        used_blocks: engine.used_blocks(),
+                        free_blocks: engine.free_blocks(),
+                        restarts: shared.restarts.load(Ordering::SeqCst),
+                        healthy: true,
+                        concurrency_limit: aimd.limit(),
+                    });
                 }
                 WorkerMsg::Shutdown => return,
+            }
+        }
+        // Deadline shedding — strictly before admission/scheduling, so
+        // an expired request never costs engine work.
+        let now = Instant::now();
+        for req in queue.shed_expired(now) {
+            shared.queued.fetch_sub(1, Ordering::SeqCst);
+            shared.inflight.fetch_sub(1, Ordering::SeqCst);
+            shared.shed_deadline.fetch_add(1, Ordering::SeqCst);
+            let _ = req.reply.send(Err(SubmitError::DeadlineExceeded));
+        }
+        // Admit into the engine up to the AIMD concurrency limit.
+        while pending.len() < aimd.limit() {
+            let Some((_deadline, req)) = queue.pop() else { break };
+            shared.queued.fetch_sub(1, Ordering::SeqCst);
+            match engine.add_request(req.prompt, req.params) {
+                Ok(id) => pending.push((id, req.reply)),
+                Err(e) => {
+                    shared.inflight.fetch_sub(1, Ordering::SeqCst);
+                    let _ = req.reply.send(Err(e));
+                }
             }
         }
         engine.step();
         for out in engine.take_outputs() {
             if let Some(pos) = pending.iter().position(|(id, _)| *id == out.id) {
                 let (_, reply) = pending.swap_remove(pos);
-                inflight.fetch_sub(1, Ordering::SeqCst);
-                let _ = reply.send(out);
+                shared.inflight.fetch_sub(1, Ordering::SeqCst);
+                shared.observe_service_ms(out.latency_s * 1e3);
+                let _ = reply.send(Ok(out));
             }
         }
+        // Feed the AIMD controller the engine's cumulative inter-token
+        // totals; it adjusts once a full sample window has accumulated.
+        let (count, sum) = engine.metrics.inter_token_totals();
+        if aimd.observe_totals(count, sum) {
+            shared.limit.store(aimd.limit(), Ordering::SeqCst);
+        }
+        // Mirror admission-layer counters into the engine's metrics so
+        // RunReport carries the overload story.
+        mirror_overload_counters(&mut engine.metrics, shared, aimd.limit());
     }
+}
+
+/// Copy the admission-layer counters (kept in [`WorkerShared`] atomics,
+/// some bumped from the submit side) into the engine's metrics, where
+/// `RunReport` picks them up.
+fn mirror_overload_counters(metrics: &mut EngineMetrics, shared: &WorkerShared, limit: usize) {
+    metrics.deadline_miss_count = shared.shed_deadline.load(Ordering::SeqCst);
+    metrics.shed_count =
+        metrics.deadline_miss_count + shared.shed_queue_full.load(Ordering::SeqCst);
+    metrics.concurrency_limit = limit;
+    metrics.worker_restarts = shared.restarts.load(Ordering::SeqCst);
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::admission::AimdConfig;
     use crate::coordinator::batcher::BucketPolicy;
     use crate::coordinator::scheduler::SchedulerConfig;
     use crate::model::{ModelConfig, ModelWeights, NativeModel};
-    use crate::runtime::NativeBackend;
+    use crate::runtime::{FaultPlan, FaultyBackend, NativeBackend};
+
+    fn engine_cfg() -> EngineConfig {
+        EngineConfig {
+            num_blocks: 32,
+            block_size: 8,
+            sched: SchedulerConfig::default(),
+            decode_buckets: BucketPolicy::exact(8),
+            prefill_chunk: usize::MAX,
+            prefix_cache_blocks: 0,
+            kv_dtype: crate::kvcache::KvCacheDtype::F32,
+            weight_dtype: crate::model::WeightDtype::F32,
+        }
+    }
+
+    fn tiny_backend(seed: u64) -> Box<dyn Backend> {
+        let mc = ModelConfig::tiny();
+        Box::new(NativeBackend::new(NativeModel::new(ModelWeights::init(&mc, seed))))
+    }
+
+    fn router_with(workers: usize, admission: AdmissionConfig) -> Router {
+        Router::new(RouterConfig { engine: engine_cfg(), workers, admission }, |_| {
+            tiny_backend(7)
+        })
+    }
 
     fn router(workers: usize) -> Router {
-        let cfg = RouterConfig {
-            engine: EngineConfig {
-                num_blocks: 32,
-                block_size: 8,
-                sched: SchedulerConfig::default(),
-                decode_buckets: BucketPolicy::exact(8),
-                prefill_chunk: usize::MAX,
-                prefix_cache_blocks: 0,
-                kv_dtype: crate::kvcache::KvCacheDtype::F32,
-                weight_dtype: crate::model::WeightDtype::F32,
-            },
-            workers,
-        };
-        Router::new(cfg, |_| {
-            let mc = ModelConfig::tiny();
-            Box::new(NativeBackend::new(NativeModel::new(ModelWeights::init(&mc, 7))))
-        })
+        router_with(workers, AdmissionConfig::default())
     }
 
     #[test]
@@ -202,9 +596,11 @@ mod tests {
         let r = router(1);
         let params = SamplingParams { max_tokens: 4, ..Default::default() };
         let rx = r.submit(vec![256, 1, 2], params).unwrap();
-        let out = rx.recv_timeout(std::time::Duration::from_secs(30)).unwrap();
+        let out = rx.recv_timeout(Duration::from_secs(30)).unwrap().unwrap();
         assert_eq!(out.tokens.len(), 4);
         assert_eq!(r.inflight(), 0);
+        assert_eq!(r.num_healthy(), 1);
+        assert_eq!(r.worker_restarts(), 0);
     }
 
     #[test]
@@ -214,18 +610,202 @@ mod tests {
         let rxs: Vec<_> =
             (0..6).map(|i| r.submit(vec![256, i as u32], params).unwrap()).collect();
         for rx in rxs {
-            let out = rx.recv_timeout(std::time::Duration::from_secs(30)).unwrap();
+            let out = rx.recv_timeout(Duration::from_secs(30)).unwrap().unwrap();
             assert_eq!(out.tokens.len(), 3);
         }
         assert_eq!(r.inflight(), 0);
     }
 
     #[test]
-    fn oversized_request_drops_reply_channel() {
+    fn oversized_request_gets_typed_rejection() {
         let r = router(1);
         let params = SamplingParams { max_tokens: 100_000, ..Default::default() };
         let rx = r.submit(vec![256; 10], params).unwrap();
-        // Worker rejects → reply sender dropped → recv errors.
-        assert!(rx.recv_timeout(std::time::Duration::from_secs(10)).is_err());
+        match rx.recv_timeout(Duration::from_secs(10)).unwrap() {
+            Err(SubmitError::PromptTooLong { reason }) => {
+                assert!(reason.contains("KV tokens"), "{reason}");
+            }
+            other => panic!("expected PromptTooLong, got {other:?}"),
+        }
+        assert_eq!(r.inflight(), 0, "typed rejection must release the inflight slot");
+    }
+
+    #[test]
+    fn zero_depth_queue_sheds_with_retry_hint() {
+        let r = router_with(1, AdmissionConfig { queue_depth: 0, ..Default::default() });
+        let params = SamplingParams { max_tokens: 4, ..Default::default() };
+        match r.submit(vec![256, 1], params) {
+            Err(SubmitError::QueueFull { retry_after_ms }) => {
+                assert!(retry_after_ms >= 10, "hint {retry_after_ms} below the clamp floor");
+            }
+            other => panic!("expected QueueFull, got {other:?}"),
+        }
+        assert_eq!(r.inflight(), 0);
+        // The shed is visible in the worker's mirrored metrics.
+        let snap = r.snapshot(0).expect("live worker answers Inspect");
+        assert_eq!(snap.report.shed_count, 1);
+        assert_eq!(snap.report.deadline_miss_count, 0);
+    }
+
+    #[test]
+    fn expired_deadline_is_shed_before_scheduling() {
+        let r = router(1);
+        let params = SamplingParams { max_tokens: 4, ..Default::default() };
+        let rx = r
+            .submit_with_deadline(vec![256, 1, 2], params, Some(Duration::ZERO))
+            .expect("queue accepts; the worker sheds");
+        match rx.recv_timeout(Duration::from_secs(10)).unwrap() {
+            Err(SubmitError::DeadlineExceeded) => {}
+            other => panic!("expected DeadlineExceeded, got {other:?}"),
+        }
+        assert_eq!(r.inflight(), 0);
+        let snap = r.snapshot(0).unwrap();
+        assert_eq!(snap.report.deadline_miss_count, 1);
+        assert_eq!(snap.report.shed_count, 1);
+        // Shed strictly pre-scheduling: the engine never saw a request.
+        assert_eq!(snap.report.num_requests, 0);
+        assert_eq!(snap.engine_inflight, 0);
+    }
+
+    #[test]
+    fn send_failure_rolls_back_inflight_and_queued() {
+        // Regression for the pre-supervision leak: `submit` incremented
+        // inflight before `tx.send` and the error path never undid it,
+        // permanently skewing pick_worker.
+        let mut r = router(1);
+        r.kill_worker_for_test(0);
+        let params = SamplingParams { max_tokens: 4, ..Default::default() };
+        match r.submit_to(0, vec![256, 1], params, None) {
+            Err(SubmitError::WorkerFailed) => {}
+            other => panic!("expected WorkerFailed on a dead channel, got {other:?}"),
+        }
+        assert_eq!(r.inflight(), 0, "inflight leaked on the send-failure path");
+        assert_eq!(r.worker_health()[0].queued, 0, "queued leaked on the send-failure path");
+    }
+
+    #[test]
+    fn worker_crash_fails_pending_restarts_and_recovers_without_leaks() {
+        // Satellite: a backend panic mid-decode → the pending request
+        // fails typed, the worker respawns, the next request succeeds,
+        // and the fresh engine's pool shows zero leaked KV blocks.
+        let calls = Arc::new(AtomicUsize::new(0));
+        let calls_f = calls.clone();
+        let r = Router::new(
+            RouterConfig {
+                engine: engine_cfg(),
+                workers: 1,
+                admission: AdmissionConfig::default(),
+            },
+            move |_| {
+                let inner = tiny_backend(7);
+                if calls_f.fetch_add(1, Ordering::SeqCst) == 0 {
+                    // First incarnation: panic on the 3rd forward_step —
+                    // after prefill, mid-decode, with KV blocks live.
+                    Box::new(FaultyBackend::new(
+                        inner,
+                        FaultPlan::new(1).panic_at_step(2).injector(),
+                    ))
+                } else {
+                    inner
+                }
+            },
+        );
+        let params = SamplingParams { max_tokens: 8, ..Default::default() };
+        let rx = r.submit(vec![256, 1, 2, 3], params).unwrap();
+        match rx.recv_timeout(Duration::from_secs(30)).unwrap() {
+            Err(SubmitError::WorkerFailed) => {}
+            other => panic!("expected WorkerFailed from the crash, got {other:?}"),
+        }
+        assert_eq!(r.inflight(), 0, "crash recovery must release inflight slots");
+
+        // The respawned worker serves the next request.
+        let params = SamplingParams { max_tokens: 5, ..Default::default() };
+        let rx = r.submit(vec![256, 4, 5], params).unwrap();
+        let out = rx.recv_timeout(Duration::from_secs(30)).unwrap().unwrap();
+        assert_eq!(out.tokens.len(), 5);
+        assert_eq!(calls.load(Ordering::SeqCst), 2, "factory rebuilds the backend once");
+
+        let snap = r.snapshot(0).unwrap();
+        assert!(snap.healthy);
+        assert_eq!(snap.restarts, 1);
+        assert_eq!(snap.report.worker_restarts, 1);
+        assert_eq!(snap.used_blocks, 0, "KV blocks leaked across the crash");
+        assert_eq!(snap.free_blocks, engine_cfg().num_blocks);
+        assert_eq!(r.worker_restarts(), 1);
+    }
+
+    #[test]
+    fn crash_budget_exhaustion_goes_permanently_unhealthy() {
+        let r = Router::new(
+            RouterConfig {
+                engine: engine_cfg(),
+                workers: 1,
+                admission: AdmissionConfig { max_restarts: 0, ..Default::default() },
+            },
+            |_| {
+                Box::new(FaultyBackend::new(
+                    tiny_backend(7),
+                    FaultPlan::new(1).panic_at_step(0).injector(),
+                ))
+            },
+        );
+        let params = SamplingParams { max_tokens: 4, ..Default::default() };
+        let rx = r.submit(vec![256, 1], params).unwrap();
+        match rx.recv_timeout(Duration::from_secs(30)).unwrap() {
+            Err(SubmitError::WorkerFailed) => {}
+            other => panic!("expected WorkerFailed, got {other:?}"),
+        }
+        // healthy=false is stored before the failing reply is sent, so
+        // this observation is deterministic.
+        assert_eq!(r.num_healthy(), 0);
+        assert_eq!(r.worker_restarts(), 0, "a dead worker's final crash is not a restart");
+        // With no healthy worker, submit fails synchronously and typed.
+        match r.submit(vec![256, 2], SamplingParams::default()) {
+            Err(SubmitError::WorkerFailed) => {}
+            other => panic!("expected WorkerFailed with no healthy workers, got {other:?}"),
+        }
+        assert_eq!(r.inflight(), 0);
+        // A dead worker still answers Inspect (via the drain loop).
+        let snap = r.snapshot(0).unwrap();
+        assert!(!snap.healthy);
+    }
+
+    #[test]
+    fn slo_breach_halves_the_concurrency_limit() {
+        // A 25 ms injected step delay against a 2 ms ITL target: every
+        // observation window breaches, so the AIMD limit must have
+        // decreased from its initial value by completion.
+        let aimd = AimdConfig {
+            target_itl_s: 0.002,
+            initial_limit: 8,
+            min_samples: 2,
+            ..Default::default()
+        };
+        let r = Router::new(
+            RouterConfig {
+                engine: engine_cfg(),
+                workers: 1,
+                admission: AdmissionConfig { aimd, ..Default::default() },
+            },
+            |_| {
+                Box::new(FaultyBackend::new(
+                    tiny_backend(7),
+                    FaultPlan::new(1).delay_steps(0, u64::MAX, 25).injector(),
+                ))
+            },
+        );
+        let params = SamplingParams { max_tokens: 6, ..Default::default() };
+        let rxs: Vec<_> =
+            (0..2).map(|i| r.submit(vec![256, i as u32], params).unwrap()).collect();
+        for rx in rxs {
+            rx.recv_timeout(Duration::from_secs(30)).unwrap().unwrap();
+        }
+        let snap = r.snapshot(0).unwrap();
+        assert!(
+            snap.concurrency_limit < 8,
+            "limit {} did not decrease under sustained SLO breach",
+            snap.concurrency_limit
+        );
+        assert!(snap.concurrency_limit >= 1, "limit must respect the floor");
     }
 }

@@ -17,6 +17,14 @@ pub struct BlockAllocator {
     ref_counts: Vec<u32>,
     /// High-water mark of simultaneously allocated blocks.
     peak_used: usize,
+    /// Test-only fault hook (`runtime::fault`): while set, the
+    /// *admission-visible* probes (`num_free`, `can_alloc`) report an
+    /// exhausted pool, so the scheduler stops admitting new work.
+    /// `alloc` itself is untouched — already-scheduled sequences keep
+    /// their blocks and progress, per the overload contract (shedding
+    /// never perturbs scheduled work). Compiled out of release builds.
+    #[cfg(any(test, feature = "fault-inject"))]
+    fault_exhausted: bool,
 }
 
 impl BlockAllocator {
@@ -30,7 +38,16 @@ impl BlockAllocator {
             free: (0..num_blocks as BlockId).rev().collect(),
             ref_counts: vec![0; num_blocks],
             peak_used: 0,
+            #[cfg(any(test, feature = "fault-inject"))]
+            fault_exhausted: false,
         }
+    }
+
+    /// Arm/disarm the admission-visible exhaustion fault (see the
+    /// `fault_exhausted` field; driven by `Engine::arm_faults`).
+    #[cfg(any(test, feature = "fault-inject"))]
+    pub fn set_fault_exhausted(&mut self, on: bool) {
+        self.fault_exhausted = on;
     }
 
     pub fn block_size(&self) -> usize {
@@ -42,6 +59,10 @@ impl BlockAllocator {
     }
 
     pub fn num_free(&self) -> usize {
+        #[cfg(any(test, feature = "fault-inject"))]
+        if self.fault_exhausted {
+            return 0;
+        }
         self.free.len()
     }
 
@@ -64,6 +85,10 @@ impl BlockAllocator {
 
     /// Can `n` more blocks be allocated right now?
     pub fn can_alloc(&self, n: usize) -> bool {
+        #[cfg(any(test, feature = "fault-inject"))]
+        if self.fault_exhausted {
+            return n == 0;
+        }
         self.free.len() >= n
     }
 
@@ -159,6 +184,23 @@ mod tests {
         a.release(b1);
         assert_eq!(a.peak_used(), 2);
         assert_eq!(a.num_used(), 0);
+    }
+
+    #[test]
+    fn fault_exhaustion_gates_probes_not_alloc() {
+        let mut a = BlockAllocator::new(4, 8);
+        a.set_fault_exhausted(true);
+        // Admission-visible probes report an empty pool…
+        assert_eq!(a.num_free(), 0);
+        assert!(!a.can_alloc(1));
+        assert!(a.can_alloc(0));
+        // …but actual allocation (already-scheduled work) still works.
+        let b = a.alloc().expect("alloc is never fault-gated");
+        assert_eq!(a.num_used(), 1);
+        a.set_fault_exhausted(false);
+        assert_eq!(a.num_free(), 3);
+        a.release(b);
+        assert_eq!(a.num_free(), 4);
     }
 
     #[test]

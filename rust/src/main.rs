@@ -18,10 +18,13 @@
 //! given, otherwise calibration-free RTN on the synthetic-init weights;
 //! either way bit-identical to f32 serving of the dequantized
 //! reconstruction. `quantize --pack` writes the GPTQ-calibrated packed
-//! artifact instead of the fake-quant dense one.
+//! artifact instead of the fake-quant dense one. Overload knobs
+//! (serve): `--queue-depth`, `--deadline-ms`, `--target-itl-ms`,
+//! `--max-restarts` — see [`admission_config`].
 
 use opt_gptq::coordinator::{
-    BucketPolicy, EngineConfig, KvCacheDtype, Router, RouterConfig, SchedulerConfig, WeightDtype,
+    AdmissionConfig, AimdConfig, BucketPolicy, EngineConfig, KvCacheDtype, Router, RouterConfig,
+    SchedulerConfig, WeightDtype,
 };
 use opt_gptq::model::{
     weights::{quantize_weights, quantize_weights_packed, QuantMethod},
@@ -200,6 +203,27 @@ fn engine_config(args: &Args, cfg: &ModelConfig) -> EngineConfig {
     }
 }
 
+/// Overload-control knobs (see ARCHITECTURE.md "Overload & failure
+/// contract"): `--queue-depth N` bounds the per-worker admission queue
+/// (beyond it requests get 429 + Retry-After), `--deadline-ms D` is the
+/// default scheduling deadline for requests without `timeout_ms`,
+/// `--target-itl-ms T` is the inter-token SLO the AIMD concurrency
+/// controller steers to, and `--max-restarts R` caps crash→respawn
+/// cycles per worker before it goes permanently unhealthy.
+fn admission_config(args: &Args) -> AdmissionConfig {
+    let defaults = AdmissionConfig::default();
+    let aimd_defaults = defaults.aimd;
+    AdmissionConfig {
+        queue_depth: args.get_usize("queue-depth", defaults.queue_depth),
+        default_deadline_ms: args.get_u64("deadline-ms", defaults.default_deadline_ms),
+        max_restarts: args.get_usize("max-restarts", defaults.max_restarts),
+        aimd: AimdConfig {
+            target_itl_s: args.get_f64("target-itl-ms", aimd_defaults.target_itl_s * 1e3) / 1e3,
+            ..aimd_defaults
+        },
+    }
+}
+
 fn cmd_serve(args: &Args) -> i32 {
     let cfg = model_config(args);
     let econf = engine_config(args, &cfg);
@@ -209,12 +233,18 @@ fn cmd_serve(args: &Args) -> i32 {
     // Arc-backed, so every worker serves the same store instead of
     // paying one artifact copy each.
     let preloaded = (!args.flag("xla")).then(|| load_weights_model(args, &cfg)).flatten();
-    let router = Arc::new(Router::new(RouterConfig { engine: econf, workers }, |w| {
-        match &preloaded {
+    // The factory is retained by the router for crash→respawn, so it
+    // captures owned clones (it may outlive this frame and run on any
+    // worker's supervisor thread).
+    let factory_args = args.clone();
+    let factory_cfg = cfg.clone();
+    let router = Arc::new(Router::new(
+        RouterConfig { engine: econf, workers, admission: admission_config(args) },
+        move |w| match &preloaded {
             Some(model) => Box::new(NativeBackend::new(model.clone())) as Box<dyn Backend>,
-            None => make_backend(args, &cfg, seed + w as u64),
-        }
-    }));
+            None => make_backend(&factory_args, &factory_cfg, seed + w as u64),
+        },
+    ));
     let port = args.get_usize("port", 8765);
     let addr = format!("127.0.0.1:{port}");
     let server = match Server::bind(router, &addr) {

@@ -1,0 +1,270 @@
+//! Deterministic fault injection — the harness that makes the overload
+//! and supervision contracts testable.
+//!
+//! A [`FaultPlan`] is a seeded, declarative schedule of faults keyed by
+//! *step index* (each consult advances a counter):
+//!
+//! * **panic** — at fixed step indices or with a seeded per-step
+//!   probability (models a crashing backend / poisoned kernel);
+//! * **delay** — a latency spike over a step range (models a straggler
+//!   device; drives the AIMD controller's breach path);
+//! * **exhaust** — over a step range the KV allocator's
+//!   admission-visible probes report an empty pool (models memory
+//!   pressure; `BlockAllocator::alloc` itself is untouched so scheduled
+//!   work never stalls mid-flight).
+//!
+//! Two attachment points consume a plan, each with its own
+//! [`FaultInjector`] instance (the step counter is per-injector):
+//! [`FaultyBackend`] wraps any [`Backend`] and applies panic/delay in
+//! `forward_step` (what the router's supervision tests use — the panic
+//! unwinds through the engine into `catch_unwind`), and
+//! `Engine::arm_faults` consults an injector at the top of every
+//! `step()` (panic/delay/exhaust, before any scheduling).
+//!
+//! Everything here is `#[cfg(any(test, feature = "fault-inject"))]` —
+//! zero code and zero cost in a release build without the feature.
+//! `scripts/verify.sh` grep-gates fault hooks off the kernel hot-path
+//! files, same as the `gather`/`.dequantize()` gates.
+//!
+//! Determinism: the probabilistic panic derives from a splitmix64 hash
+//! of `(seed, step)` — no shared RNG state, so the fault sequence is a
+//! pure function of the plan regardless of thread interleaving.
+
+use crate::kvcache::{BlockTable, KvStore};
+use crate::model::{ModelConfig, WeightDtype};
+use crate::runtime::backend::{Backend, DecodeItem, MixedBatch, StepOutputs};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Declarative, seeded fault schedule. Build with the chainable
+/// constructors, then [`FaultPlan::injector`] to get the shareable
+/// runtime handle.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    seed: u64,
+    /// Exact step indices (0-based consult order) that panic.
+    panic_at: Vec<u64>,
+    /// Seeded per-step panic probability in [0, 1].
+    panic_prob: f64,
+    /// `(from, to, ms)`: steps in `[from, to)` sleep `ms` first.
+    delay: Option<(u64, u64, u64)>,
+    /// `(from, to)`: steps in `[from, to)` arm allocator exhaustion
+    /// (engine attachment point only).
+    exhaust: Option<(u64, u64)>,
+}
+
+impl FaultPlan {
+    pub fn new(seed: u64) -> Self {
+        FaultPlan { seed, ..Default::default() }
+    }
+
+    /// Panic on the given step index (repeatable for several).
+    pub fn panic_at_step(mut self, step: u64) -> Self {
+        self.panic_at.push(step);
+        self
+    }
+
+    /// Panic each step with probability `p`, derived deterministically
+    /// from `(seed, step)`.
+    pub fn panic_with_prob(mut self, p: f64) -> Self {
+        self.panic_prob = p.clamp(0.0, 1.0);
+        self
+    }
+
+    /// Sleep `ms` before every step in `[from, to)`.
+    pub fn delay_steps(mut self, from: u64, to: u64, ms: u64) -> Self {
+        self.delay = Some((from, to, ms));
+        self
+    }
+
+    /// Report an exhausted KV pool to admission probes for every step
+    /// in `[from, to)` (only meaningful via `Engine::arm_faults`).
+    pub fn exhaust_steps(mut self, from: u64, to: u64) -> Self {
+        self.exhaust = Some((from, to));
+        self
+    }
+
+    /// Finalize into a cloneable runtime handle with its own step
+    /// counter. Attach one injector to one site.
+    pub fn injector(self) -> FaultInjector {
+        FaultInjector { inner: Arc::new(InjectorInner { plan: self, step: AtomicU64::new(0) }) }
+    }
+}
+
+/// The fault decision for one step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StepFault {
+    pub panic: bool,
+    pub delay_ms: u64,
+    pub exhaust: bool,
+}
+
+#[derive(Debug)]
+struct InjectorInner {
+    plan: FaultPlan,
+    step: AtomicU64,
+}
+
+/// Shareable handle over a [`FaultPlan`]; each
+/// [`next_step`](Self::next_step) consult advances the step counter.
+#[derive(Debug, Clone)]
+pub struct FaultInjector {
+    inner: Arc<InjectorInner>,
+}
+
+impl FaultInjector {
+    /// Decide the fault for the current step and advance the counter.
+    pub fn next_step(&self) -> StepFault {
+        let s = self.inner.step.fetch_add(1, Ordering::SeqCst);
+        let plan = &self.inner.plan;
+        let mut panic = plan.panic_at.contains(&s);
+        if plan.panic_prob > 0.0 && unit_hash(plan.seed, s) < plan.panic_prob {
+            panic = true;
+        }
+        let delay_ms = match plan.delay {
+            Some((from, to, ms)) if s >= from && s < to => ms,
+            _ => 0,
+        };
+        let exhaust = matches!(plan.exhaust, Some((from, to)) if s >= from && s < to);
+        StepFault { panic, delay_ms, exhaust }
+    }
+
+    /// Steps consulted so far (test observability).
+    pub fn steps_taken(&self) -> u64 {
+        self.inner.step.load(Ordering::SeqCst)
+    }
+}
+
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+/// Uniform [0, 1) hash of (seed, step) — stateless, thread-safe,
+/// replay-identical.
+fn unit_hash(seed: u64, step: u64) -> f64 {
+    let h = splitmix64(seed ^ step.wrapping_mul(0xA24B_AED4_963E_E407));
+    (h >> 11) as f64 / (1u64 << 53) as f64
+}
+
+/// A [`Backend`] decorator that applies panic/delay faults at the top
+/// of `forward_step`, then delegates. The panic unwinds through
+/// `Engine::step` into the router's supervision `catch_unwind` — the
+/// exact crash path a poisoned kernel would take.
+pub struct FaultyBackend {
+    inner: Box<dyn Backend>,
+    faults: FaultInjector,
+}
+
+impl FaultyBackend {
+    pub fn new(inner: Box<dyn Backend>, faults: FaultInjector) -> Self {
+        FaultyBackend { inner, faults }
+    }
+}
+
+impl Backend for FaultyBackend {
+    fn config(&self) -> &ModelConfig {
+        self.inner.config()
+    }
+
+    fn prefill(
+        &self,
+        tokens: &[u32],
+        cache: &mut dyn KvStore,
+        table: &mut BlockTable,
+    ) -> Vec<f32> {
+        self.inner.prefill(tokens, cache, table)
+    }
+
+    fn decode(&self, items: &mut [DecodeItem<'_>], cache: &mut dyn KvStore) -> Vec<Vec<f32>> {
+        self.inner.decode(items, cache)
+    }
+
+    fn forward_step(&self, batch: &mut MixedBatch<'_>, cache: &mut dyn KvStore) -> StepOutputs {
+        let fault = self.faults.next_step();
+        if fault.delay_ms > 0 {
+            std::thread::sleep(std::time::Duration::from_millis(fault.delay_ms));
+        }
+        if fault.panic {
+            panic!(
+                "injected fault: backend step panic at step {}",
+                self.faults.steps_taken().saturating_sub(1)
+            );
+        }
+        self.inner.forward_step(batch, cache)
+    }
+
+    fn supports_mixed_step(&self) -> bool {
+        self.inner.supports_mixed_step()
+    }
+
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    fn supports_offset_prefill(&self) -> bool {
+        self.inner.supports_offset_prefill()
+    }
+
+    fn supports_quantized_kv(&self) -> bool {
+        self.inner.supports_quantized_kv()
+    }
+
+    fn weight_dtype(&self) -> WeightDtype {
+        self.inner.weight_dtype()
+    }
+
+    fn weight_bytes(&self) -> usize {
+        self.inner.weight_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_steps_are_deterministic() {
+        let mk = || FaultPlan::new(42).panic_with_prob(0.3).delay_steps(2, 4, 5).injector();
+        let (a, b) = (mk(), mk());
+        for _ in 0..64 {
+            assert_eq!(a.next_step(), b.next_step());
+        }
+        assert_eq!(a.steps_taken(), 64);
+    }
+
+    #[test]
+    fn fixed_panic_step_fires_exactly_there() {
+        let inj = FaultPlan::new(0).panic_at_step(3).injector();
+        let panics: Vec<bool> = (0..6).map(|_| inj.next_step().panic).collect();
+        assert_eq!(panics, vec![false, false, false, true, false, false]);
+    }
+
+    #[test]
+    fn delay_and_exhaust_windows_are_half_open() {
+        let inj = FaultPlan::new(0).delay_steps(1, 3, 7).exhaust_steps(2, 4).injector();
+        let faults: Vec<StepFault> = (0..5).map(|_| inj.next_step()).collect();
+        assert_eq!(faults.iter().map(|f| f.delay_ms).collect::<Vec<_>>(), vec![0, 7, 7, 0, 0]);
+        assert_eq!(
+            faults.iter().map(|f| f.exhaust).collect::<Vec<_>>(),
+            vec![false, false, true, true, false]
+        );
+    }
+
+    #[test]
+    fn probabilistic_panic_rate_tracks_p() {
+        let inj = FaultPlan::new(7).panic_with_prob(0.25).injector();
+        let n = 4000;
+        let hits = (0..n).filter(|_| inj.next_step().panic).count();
+        let rate = hits as f64 / n as f64;
+        assert!((rate - 0.25).abs() < 0.05, "seeded panic rate {rate} far from 0.25");
+    }
+
+    #[test]
+    fn zero_prob_never_panics() {
+        let inj = FaultPlan::new(9).injector();
+        assert!((0..256).all(|_| !inj.next_step().panic));
+    }
+}

@@ -17,11 +17,20 @@
 
 pub mod artifacts;
 pub mod backend;
+// Deterministic fault injection (panic / latency spike / allocator
+// exhaustion) for the overload & supervision tests. Gated so release
+// builds without the `fault-inject` feature compile none of it;
+// scripts/verify.sh additionally grep-gates fault hooks off the kernel
+// hot-path files.
+#[cfg(any(test, feature = "fault-inject"))]
+pub mod fault;
 pub mod pjrt_stub;
 pub mod pool;
 pub mod xla_backend;
 
 pub use artifacts::{ArtifactManifest, BucketSpec};
 pub use backend::{Backend, DecodeItem, MixedBatch, NativeBackend, PrefillChunkItem, StepOutputs};
+#[cfg(any(test, feature = "fault-inject"))]
+pub use fault::{FaultInjector, FaultPlan, FaultyBackend, StepFault};
 pub use pool::WorkerPool;
 pub use xla_backend::XlaBackend;

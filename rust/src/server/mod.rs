@@ -4,14 +4,30 @@
 //! speaking a JSON API over the [`Router`]:
 //!
 //! * `POST /generate` — `{"prompt": "...", "max_tokens": N,
-//!   "temperature": T?, "top_k": K?}` → `{"id", "text", "tokens",
-//!   "latency_s", "ttft_s"}`
-//! * `GET /health` — `{"status":"ok","workers":N,"inflight":M}`
+//!   "temperature": T?, "top_k": K?, "timeout_ms": D?}` → `{"id",
+//!   "text", "tokens", "latency_s", "ttft_s"}`
+//! * `GET /health` — `{"status", "workers", "healthy_workers",
+//!   "inflight", "worker_restarts", "detail": [...]}`; `503` when no
+//!   worker is healthy.
 //!
-//! Each connection is handled on its own thread; generation itself runs
-//! on the router's engine workers, so slow clients never stall decoding.
+//! Overload and failure map to honest statuses (ARCHITECTURE.md
+//! "Overload & failure contract") instead of a catch-all 400:
+//!
+//! | condition                         | status | extras              |
+//! |-----------------------------------|--------|---------------------|
+//! | malformed JSON / missing field    | 400    |                     |
+//! | [`SubmitError::PromptTooLong`]    | 400    | reason in `error`    |
+//! | body over [`MAX_BODY_BYTES`]      | 413    |                     |
+//! | [`SubmitError::QueueFull`]        | 429    | `Retry-After` header + `retry_after_ms` |
+//! | [`SubmitError::DeadlineExceeded`] | 503    |                     |
+//! | [`SubmitError::WorkerFailed`]     | 503    |                     |
+//!
+//! Each connection is handled on its own thread with socket read/write
+//! timeouts ([`SOCKET_TIMEOUT_S`]) so a stalled client can neither hold
+//! a handler thread forever nor stall decoding (generation itself runs
+//! on the router's engine workers).
 
-use crate::coordinator::Router;
+use crate::coordinator::{Router, SubmitError};
 use crate::model::SamplingParams;
 use crate::tokenizer::ByteTokenizer;
 use crate::util::json::{self, Value};
@@ -19,6 +35,15 @@ use anyhow::{Context, Result};
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::Arc;
+use std::time::Duration;
+
+/// Request bodies above this are rejected with `413 Payload Too Large`
+/// (never silently truncated — a truncated prompt would generate from a
+/// different prefix than the client sent).
+pub const MAX_BODY_BYTES: usize = 16 << 20;
+
+/// Per-connection socket read/write timeout, seconds.
+pub const SOCKET_TIMEOUT_S: u64 = 10;
 
 /// HTTP server over a router.
 pub struct Server {
@@ -59,8 +84,18 @@ impl Server {
     }
 }
 
-/// Parse one HTTP request; returns (method, path, body).
-fn read_request(stream: &mut TcpStream) -> Result<(String, String, String)> {
+/// One parsed HTTP request, or the typed refusal to read it.
+enum HttpRead {
+    Request { method: String, path: String, body: String },
+    /// Declared Content-Length over [`MAX_BODY_BYTES`]; the body was
+    /// not read.
+    TooLarge { content_length: usize },
+}
+
+/// Parse one HTTP request. Oversized bodies are refused before any
+/// body byte is read — truncating to a cap and serving the prefix (the
+/// old behavior) silently answers a different request than was sent.
+fn read_request(stream: &mut TcpStream) -> Result<HttpRead> {
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut request_line = String::new();
     reader.read_line(&mut request_line)?;
@@ -81,36 +116,140 @@ fn read_request(stream: &mut TcpStream) -> Result<(String, String, String)> {
             }
         }
     }
-    let mut body = vec![0u8; content_length.min(16 << 20)];
+    if content_length > MAX_BODY_BYTES {
+        return Ok(HttpRead::TooLarge { content_length });
+    }
+    let mut body = vec![0u8; content_length];
     reader.read_exact(&mut body)?;
-    Ok((method, path, String::from_utf8_lossy(&body).into_owned()))
+    Ok(HttpRead::Request { method, path, body: String::from_utf8_lossy(&body).into_owned() })
 }
 
 fn respond(stream: &mut TcpStream, status: &str, body: &str) -> Result<()> {
-    let resp = format!(
-        "HTTP/1.1 {status}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+    respond_with(stream, status, &[], body)
+}
+
+fn respond_with(
+    stream: &mut TcpStream,
+    status: &str,
+    extra_headers: &[(&str, String)],
+    body: &str,
+) -> Result<()> {
+    let mut resp = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n",
         body.len()
     );
+    for (k, v) in extra_headers {
+        resp.push_str(&format!("{k}: {v}\r\n"));
+    }
+    resp.push_str("\r\n");
+    resp.push_str(body);
     stream.write_all(resp.as_bytes())?;
     Ok(())
 }
 
+/// Generate-path failure, carrying enough to pick an honest status.
+enum ApiError {
+    /// Malformed request (bad JSON, missing field).
+    Bad(String),
+    /// Typed rejection from the serving stack.
+    Submit(SubmitError),
+}
+
+impl ApiError {
+    /// `(status line, extra headers, JSON body)`.
+    fn render(&self) -> (&'static str, Vec<(&'static str, String)>, Value) {
+        match self {
+            ApiError::Bad(msg) => (
+                "400 Bad Request",
+                vec![],
+                json::obj(vec![("error", msg.as_str().into()), ("kind", "bad_request".into())]),
+            ),
+            ApiError::Submit(e) => {
+                let kind = match e {
+                    SubmitError::QueueFull { .. } => "queue_full",
+                    SubmitError::DeadlineExceeded => "deadline_exceeded",
+                    SubmitError::PromptTooLong { .. } => "prompt_too_long",
+                    SubmitError::WorkerFailed => "worker_failed",
+                };
+                let mut body =
+                    vec![("error", format!("{e}").into()), ("kind", kind.into())];
+                match e {
+                    SubmitError::PromptTooLong { .. } => ("400 Bad Request", vec![], json::obj(body)),
+                    SubmitError::QueueFull { retry_after_ms } => {
+                        body.push(("retry_after_ms", (*retry_after_ms).into()));
+                        // Retry-After is whole seconds; round up so a
+                        // compliant client never retries early.
+                        let secs = retry_after_ms.div_ceil(1000).max(1);
+                        (
+                            "429 Too Many Requests",
+                            vec![("Retry-After", secs.to_string())],
+                            json::obj(body),
+                        )
+                    }
+                    SubmitError::DeadlineExceeded => {
+                        ("503 Service Unavailable", vec![], json::obj(body))
+                    }
+                    SubmitError::WorkerFailed => {
+                        ("503 Service Unavailable", vec![], json::obj(body))
+                    }
+                }
+            }
+        }
+    }
+}
+
 fn handle_connection(mut stream: TcpStream, router: &Router) -> Result<()> {
-    let (method, path, body) = read_request(&mut stream)?;
+    // A stalled or malicious client may neither wedge this handler on
+    // read nor on write.
+    let timeout = Some(Duration::from_secs(SOCKET_TIMEOUT_S));
+    stream.set_read_timeout(timeout)?;
+    stream.set_write_timeout(timeout)?;
+    let (method, path, body) = match read_request(&mut stream)? {
+        HttpRead::Request { method, path, body } => (method, path, body),
+        HttpRead::TooLarge { content_length } => {
+            let v = json::obj(vec![
+                (
+                    "error",
+                    format!("request body {content_length} bytes exceeds limit {MAX_BODY_BYTES}")
+                        .into(),
+                ),
+                ("kind", "payload_too_large".into()),
+            ]);
+            return respond(&mut stream, "413 Payload Too Large", &v.to_string_compact());
+        }
+    };
     match (method.as_str(), path.as_str()) {
         ("GET", "/health") => {
+            let detail: Vec<Value> = router
+                .worker_health()
+                .iter()
+                .map(|w| {
+                    json::obj(vec![
+                        ("healthy", w.healthy.into()),
+                        ("restarts", w.restarts.into()),
+                        ("inflight", w.inflight.into()),
+                        ("queued", w.queued.into()),
+                        ("concurrency_limit", w.concurrency_limit.into()),
+                    ])
+                })
+                .collect();
+            let healthy = router.num_healthy();
             let v = json::obj(vec![
-                ("status", "ok".into()),
+                ("status", if healthy > 0 { "ok" } else { "unhealthy" }.into()),
                 ("workers", router.num_workers().into()),
+                ("healthy_workers", healthy.into()),
                 ("inflight", router.inflight().into()),
+                ("worker_restarts", router.worker_restarts().into()),
+                ("detail", Value::Arr(detail)),
             ]);
-            respond(&mut stream, "200 OK", &v.to_string_compact())
+            let status = if healthy > 0 { "200 OK" } else { "503 Service Unavailable" };
+            respond(&mut stream, status, &v.to_string_compact())
         }
         ("POST", "/generate") => match handle_generate(router, &body) {
             Ok(v) => respond(&mut stream, "200 OK", &v.to_string_compact()),
             Err(e) => {
-                let v = json::obj(vec![("error", format!("{e}").into())]);
-                respond(&mut stream, "400 Bad Request", &v.to_string_compact())
+                let (status, headers, v) = e.render();
+                respond_with(&mut stream, status, &headers, &v.to_string_compact())
             }
         },
         _ => {
@@ -120,9 +259,10 @@ fn handle_connection(mut stream: TcpStream, router: &Router) -> Result<()> {
     }
 }
 
-fn handle_generate(router: &Router, body: &str) -> Result<Value> {
-    let req = json::parse(body).context("invalid JSON body")?;
-    let prompt_text = req.get_str("prompt").context("missing 'prompt'")?;
+fn handle_generate(router: &Router, body: &str) -> Result<Value, ApiError> {
+    let req = json::parse(body).map_err(|e| ApiError::Bad(format!("invalid JSON body: {e}")))?;
+    let prompt_text =
+        req.get_str("prompt").ok_or_else(|| ApiError::Bad("missing 'prompt'".into()))?;
     let tok = ByteTokenizer::new();
     let prompt = tok.encode(prompt_text);
     let params = SamplingParams {
@@ -131,10 +271,19 @@ fn handle_generate(router: &Router, body: &str) -> Result<Value> {
         top_k: req.get_usize("top_k").unwrap_or(0),
         ignore_eos: req.get("ignore_eos").and_then(|b| b.as_bool()).unwrap_or(false),
     };
-    let rx = router.submit(prompt, params)?;
-    let out = rx
-        .recv()
-        .map_err(|_| anyhow::anyhow!("request rejected (too long for the KV pool?)"))?;
+    // Client scheduling deadline; the admission config's default applies
+    // when absent.
+    let timeout = req.get_usize("timeout_ms").map(|ms| Duration::from_millis(ms as u64));
+    let rx = router
+        .submit_with_deadline(prompt, params, timeout)
+        .map_err(ApiError::Submit)?;
+    let out = match rx.recv() {
+        Ok(Ok(out)) => out,
+        Ok(Err(e)) => return Err(ApiError::Submit(e)),
+        // Reply channel dropped without an answer: the worker died in a
+        // way supervision could not translate.
+        Err(_) => return Err(ApiError::Submit(SubmitError::WorkerFailed)),
+    };
     Ok(json::obj(vec![
         ("id", out.id.into()),
         ("text", tok.decode(&out.tokens).into()),
@@ -148,36 +297,53 @@ fn handle_generate(router: &Router, body: &str) -> Result<Value> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::{BucketPolicy, EngineConfig, RouterConfig, SchedulerConfig};
+    use crate::coordinator::{
+        AdmissionConfig, BucketPolicy, EngineConfig, RouterConfig, SchedulerConfig,
+    };
     use crate::model::{ModelConfig, ModelWeights, NativeModel};
-    use crate::runtime::NativeBackend;
+    use crate::runtime::{FaultPlan, FaultyBackend, NativeBackend};
 
-    fn start_server() -> (std::net::SocketAddr, std::thread::JoinHandle<()>) {
+    fn engine_cfg() -> EngineConfig {
+        EngineConfig {
+            num_blocks: 32,
+            block_size: 8,
+            sched: SchedulerConfig::default(),
+            decode_buckets: BucketPolicy::exact(8),
+            prefill_chunk: usize::MAX,
+            prefix_cache_blocks: 0,
+            kv_dtype: crate::kvcache::KvCacheDtype::F32,
+            weight_dtype: crate::model::WeightDtype::F32,
+        }
+    }
+
+    fn tiny_backend() -> Box<dyn crate::runtime::Backend> {
+        let mc = ModelConfig::tiny();
+        Box::new(NativeBackend::new(NativeModel::new(ModelWeights::init(&mc, 3))))
+    }
+
+    fn start_server_with(
+        admission: AdmissionConfig,
+    ) -> (std::net::SocketAddr, std::thread::JoinHandle<()>) {
         let router = Arc::new(Router::new(
-            RouterConfig {
-                engine: EngineConfig {
-                    num_blocks: 32,
-                    block_size: 8,
-                    sched: SchedulerConfig::default(),
-                    decode_buckets: BucketPolicy::exact(8),
-                    prefill_chunk: usize::MAX,
-                    prefix_cache_blocks: 0,
-                    kv_dtype: crate::kvcache::KvCacheDtype::F32,
-                    weight_dtype: crate::model::WeightDtype::F32,
-                },
-                workers: 1,
-            },
-            |_| {
-                let mc = ModelConfig::tiny();
-                Box::new(NativeBackend::new(NativeModel::new(ModelWeights::init(&mc, 3))))
-            },
+            RouterConfig { engine: engine_cfg(), workers: 1, admission },
+            |_| tiny_backend(),
         ));
+        spawn_server(router)
+    }
+
+    fn spawn_server(
+        router: Arc<Router>,
+    ) -> (std::net::SocketAddr, std::thread::JoinHandle<()>) {
         let server = Server::bind(router, "127.0.0.1:0").unwrap();
         let addr = server.local_addr();
         let h = std::thread::spawn(move || {
             let _ = server.serve();
         });
         (addr, h)
+    }
+
+    fn start_server() -> (std::net::SocketAddr, std::thread::JoinHandle<()>) {
+        start_server_with(AdmissionConfig::default())
     }
 
     fn http(addr: std::net::SocketAddr, req: &str) -> String {
@@ -188,23 +354,28 @@ mod tests {
         buf
     }
 
+    fn post_generate(addr: std::net::SocketAddr, body: &str) -> String {
+        let req = format!(
+            "POST /generate HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        );
+        http(addr, &req)
+    }
+
     #[test]
     fn health_endpoint() {
         let (addr, _h) = start_server();
         let resp = http(addr, "GET /health HTTP/1.1\r\nHost: x\r\n\r\n");
         assert!(resp.contains("200 OK"), "{resp}");
         assert!(resp.contains("\"status\":\"ok\""), "{resp}");
+        assert!(resp.contains("\"healthy_workers\":1"), "{resp}");
+        assert!(resp.contains("\"detail\":[{\"healthy\":true"), "{resp}");
     }
 
     #[test]
     fn generate_endpoint_roundtrip() {
         let (addr, _h) = start_server();
-        let body = r#"{"prompt":"hello","max_tokens":4}"#;
-        let req = format!(
-            "POST /generate HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
-            body.len()
-        );
-        let resp = http(addr, &req);
+        let resp = post_generate(addr, r#"{"prompt":"hello","max_tokens":4}"#);
         assert!(resp.contains("200 OK"), "{resp}");
         let json_body = resp.split("\r\n\r\n").nth(1).unwrap();
         let v = json::parse(json_body).unwrap();
@@ -215,13 +386,9 @@ mod tests {
     #[test]
     fn bad_request_is_400() {
         let (addr, _h) = start_server();
-        let body = r#"{"max_tokens":4}"#; // missing prompt
-        let req = format!(
-            "POST /generate HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
-            body.len()
-        );
-        let resp = http(addr, &req);
+        let resp = post_generate(addr, r#"{"max_tokens":4}"#); // missing prompt
         assert!(resp.contains("400"), "{resp}");
+        assert!(resp.contains("\"kind\":\"bad_request\""), "{resp}");
     }
 
     #[test]
@@ -229,5 +396,76 @@ mod tests {
         let (addr, _h) = start_server();
         let resp = http(addr, "GET /nope HTTP/1.1\r\nHost: x\r\n\r\n");
         assert!(resp.contains("404"), "{resp}");
+    }
+
+    #[test]
+    fn oversized_body_is_413_not_truncated() {
+        // Only the header is sent: the server must refuse from the
+        // declared length alone, never read-then-truncate.
+        let (addr, _h) = start_server();
+        let req = format!(
+            "POST /generate HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n",
+            MAX_BODY_BYTES + 1
+        );
+        let resp = http(addr, &req);
+        assert!(resp.contains("413"), "{resp}");
+        assert!(resp.contains("\"kind\":\"payload_too_large\""), "{resp}");
+    }
+
+    #[test]
+    fn prompt_too_long_is_400_with_reason() {
+        let (addr, _h) = start_server();
+        // 32 blocks × 8 slots = 256-token pool; this can never fit.
+        let resp = post_generate(addr, r#"{"prompt":"hi","max_tokens":100000}"#);
+        assert!(resp.contains("400"), "{resp}");
+        assert!(resp.contains("\"kind\":\"prompt_too_long\""), "{resp}");
+        assert!(resp.contains("KV tokens"), "{resp}");
+    }
+
+    #[test]
+    fn queue_full_is_429_with_retry_after() {
+        let (addr, _h) =
+            start_server_with(AdmissionConfig { queue_depth: 0, ..Default::default() });
+        let resp = post_generate(addr, r#"{"prompt":"hello","max_tokens":4}"#);
+        assert!(resp.contains("429"), "{resp}");
+        assert!(resp.contains("Retry-After:"), "{resp}");
+        assert!(resp.contains("\"kind\":\"queue_full\""), "{resp}");
+        assert!(resp.contains("retry_after_ms"), "{resp}");
+    }
+
+    #[test]
+    fn expired_deadline_is_503() {
+        let (addr, _h) = start_server();
+        let resp = post_generate(addr, r#"{"prompt":"hello","max_tokens":4,"timeout_ms":0}"#);
+        assert!(resp.contains("503"), "{resp}");
+        assert!(resp.contains("\"kind\":\"deadline_exceeded\""), "{resp}");
+    }
+
+    #[test]
+    fn dead_worker_is_503_and_health_degrades() {
+        // A worker with no restart budget that panics on its first step:
+        // generate maps the crash to 503 and /health flips to 503.
+        let router = Arc::new(Router::new(
+            RouterConfig {
+                engine: engine_cfg(),
+                workers: 1,
+                admission: AdmissionConfig { max_restarts: 0, ..Default::default() },
+            },
+            |_| {
+                Box::new(FaultyBackend::new(
+                    tiny_backend(),
+                    FaultPlan::new(1).panic_at_step(0).injector(),
+                ))
+            },
+        ));
+        let (addr, _h) = spawn_server(router);
+        let resp = post_generate(addr, r#"{"prompt":"hello","max_tokens":4}"#);
+        assert!(resp.contains("503"), "{resp}");
+        assert!(resp.contains("\"kind\":\"worker_failed\""), "{resp}");
+        // healthy=false is stored before the failing reply is sent, so
+        // this follow-up observation is deterministic.
+        let health = http(addr, "GET /health HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert!(health.contains("503"), "{health}");
+        assert!(health.contains("\"status\":\"unhealthy\""), "{health}");
     }
 }

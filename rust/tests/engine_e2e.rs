@@ -184,6 +184,7 @@ fn http_server_serves_concurrent_clients() {
                 weight_dtype: opt_gptq::coordinator::WeightDtype::F32,
             },
             workers: 1,
+            admission: Default::default(),
         },
         |_| {
             Box::new(NativeBackend::new(NativeModel::new(ModelWeights::init(

@@ -27,6 +27,26 @@ if grep -n '\.dequantize()' src/model/llama.rs src/model/store.rs src/quant/matm
   exit 1
 fi
 
+# Fault injection (runtime::fault) is a test/chaos harness: its hooks live
+# in the coordinator/allocator only, behind #[cfg(any(test, feature =
+# "fault-inject"))]. The kernel hot-path files must never consult it —
+# a fault check inside attention/matmul would cost every step in every
+# build that enables the feature. (\bfault\b-style boundary so
+# "default"/"Default" never false-match.)
+if grep -nE '\b[Ff]ault' \
+    src/model/llama.rs src/model/store.rs src/quant/matmul.rs \
+    src/attention/*.rs src/kvcache/quantized.rs src/kvcache/paged.rs \
+    | grep -vE '^[^:]+:[0-9]+:[[:space:]]*//'; then
+  echo "verify: FAIL — fault-injection hook on a kernel hot-path file" >&2
+  exit 1
+fi
+# And the fault module itself must stay cfg-gated (zero code in a plain
+# release build).
+if ! grep -q '#\[cfg(any(test, feature = "fault-inject"))\]' src/runtime/mod.rs; then
+  echo "verify: FAIL — runtime::fault lost its cfg gate" >&2
+  exit 1
+fi
+
 cargo build --release
 cargo test -q
 # Docs are tier-1: broken intra-doc links / malformed rustdoc fail the PR.
