@@ -60,7 +60,7 @@ fn main() {
     opt_gptq::util::logging::init();
     let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
     let (h, kvh, d) = (8, 2, 32);
-    let cfg = AttnConfig { num_heads: h, num_kv_heads: kvh, head_dim: d, bias: Bias::Alibi };
+    let cfg = AttnConfig::dense(h, kvh, d, Bias::Alibi);
     let bencher = Bencher::new(Duration::from_millis(30), Duration::from_millis(250), 50);
 
     let seqs: Vec<usize> = if args.flag("quick") { vec![128, 512] } else { vec![128, 512, 1024, 2048] };

@@ -20,7 +20,7 @@ fn main() {
     let (h, kvh, hd) = (8, 2, 32);
     let kv_len = args.get_usize("kv-len", 500); // deliberately not a power of two
     let n_seqs = args.get_usize("seqs", 32);
-    let cfg = AttnConfig { num_heads: h, num_kv_heads: kvh, head_dim: hd, bias: Bias::Alibi };
+    let cfg = AttnConfig::dense(h, kvh, hd, Bias::Alibi);
     let bencher = Bencher::new(Duration::from_millis(30), Duration::from_millis(250), 50);
 
     let mut t = Table::new(

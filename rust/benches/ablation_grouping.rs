@@ -63,7 +63,7 @@ fn conversion_mse(
     };
 
     // Reference: full MHA.
-    let mha_cfg = AttnConfig { num_heads: h, num_kv_heads: h, head_dim: hd, bias: Bias::Alibi };
+    let mha_cfg = AttnConfig::dense(h, h, hd, Bias::Alibi);
     let k_full = project(&wk, h);
     let v_full = project(&wv, h);
     let ref_out = gqa_attention(&mha_cfg, &q, &k_full, &v_full, s, s, 0);
@@ -86,7 +86,7 @@ fn conversion_mse(
         }
     }
     let gqa_cfg =
-        AttnConfig { num_heads: h, num_kv_heads: num_groups, head_dim: hd, bias: Bias::Alibi };
+        AttnConfig::dense(h, num_groups, hd, Bias::Alibi);
     let gqa_out = gqa_attention(&gqa_cfg, &qr, &kg, &vg, s, s, 0);
     // Un-reorder the outputs for comparison.
     let mut out = vec![0.0f32; gqa_out.len()];

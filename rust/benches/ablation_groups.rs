@@ -30,7 +30,7 @@ fn main() {
     );
     let mut base_time = None;
     for kvh in [8usize, 4, 2, 1] {
-        let cfg = AttnConfig { num_heads: h, num_kv_heads: kvh, head_dim: hd, bias: Bias::Alibi };
+        let cfg = AttnConfig::dense(h, kvh, hd, Bias::Alibi);
         let num_blocks = kv_len / block_size + 1;
         let mut cache = PagedKvCache::new(1, num_blocks, block_size, kvh, hd);
         let mut alloc = BlockAllocator::new(num_blocks, block_size);

@@ -24,8 +24,10 @@ use opt_gptq::attention::alibi::{alibi_bias, alibi_slopes};
 use opt_gptq::attention::gqa::{gqa_attention_into, AttnConfig, Bias};
 use opt_gptq::attention::kernel::Workspace;
 use opt_gptq::attention::paged::{
-    paged_decode_batch, paged_prefill_attention_into, paged_prefill_rows_parallel,
+    paged_decode_attention_into, paged_decode_batch, paged_prefill_attention_into,
+    paged_prefill_rows_parallel,
 };
+use opt_gptq::attention::SparsityConfig;
 use opt_gptq::kvcache::{BlockAllocator, BlockTable, KvStore, PagedKvCache, QuantizedPagedKvCache};
 use opt_gptq::tensor::softmax_inplace;
 use opt_gptq::util::benchkit::{black_box, f, Bencher, Table};
@@ -168,7 +170,7 @@ fn main() {
     let h = args.get_usize("heads", 8);
     let kvh = args.get_usize("kv-heads", 2);
     let d = args.get_usize("head-dim", 64);
-    let cfg = AttnConfig { num_heads: h, num_kv_heads: kvh, head_dim: d, bias: Bias::Alibi };
+    let cfg = AttnConfig::dense(h, kvh, d, Bias::Alibi);
 
     let bench = if smoke {
         Bencher::new(Duration::from_millis(30), Duration::from_millis(250), 10)
@@ -311,6 +313,102 @@ fn main() {
     let prefill_f32_streamed_par_tok_s = p_rows as f64 / s_pre_stream_f32_par.mean();
     let prefill_q8_streamed_par_tok_s = p_rows as f64 / s_pre_stream_q8_par.mean();
 
+    // ---- 4. sparse attention: windowed prefill, skip rate, pool plateau -
+    // Windowed prefill over the same chunk: the walk only touches
+    // sink + window tiles per row, so tok/s scales with the window, not
+    // the context.
+    let wcfg = AttnConfig { sparsity: SparsityConfig::windowed(4, 1), ..cfg };
+    let s_pre_window_f32 = bench.bench("prefill f32 windowed(4+1 blocks)", || {
+        paged_prefill_attention_into(&wcfg, &cache, 0, &pq, p_rows, p_off, t0, &mut ws, &mut p_out);
+        black_box(p_out[0]);
+    });
+    let s_pre_window_q8 = bench.bench("prefill q8 windowed(4+1 blocks)", || {
+        paged_prefill_attention_into(&wcfg, &qcache, 0, &pq, p_rows, p_off, t0, &mut ws, &mut p_out);
+        black_box(p_out[0]);
+    });
+    let prefill_window_f32_tok_s = p_rows as f64 / s_pre_window_f32.mean();
+    let prefill_window_q8_tok_s = p_rows as f64 / s_pre_window_q8.mean();
+
+    // Score-bound skipping on a skewed context: block 0 carries keys
+    // aligned with the query (a long-range outlier / attention sink), the
+    // rest are near-zero — the regime the per-tile K bounds exploit. In
+    // exact mode every dead tile's weights provably underflow, so the
+    // measured skip rate is pure elision, not approximation.
+    let skew_len = kv_len;
+    let mut skew_cache = PagedKvCache::new(1, skew_len.div_ceil(block_size) + 1, block_size, kvh, d);
+    let mut skew_alloc =
+        BlockAllocator::new(skew_len.div_ceil(block_size) + 1, block_size);
+    let mut skew_t = BlockTable::new();
+    assert!(skew_t.reserve(skew_len, &mut skew_alloc));
+    let pattern: Vec<f32> = (0..kvh * d).map(|i| if i % 3 == 0 { -1.0 } else { 1.0 }).collect();
+    for tok in 0..skew_len {
+        let (b, s) = skew_t.append_slot(block_size);
+        let kr: Vec<f32> = if tok < block_size {
+            pattern.iter().map(|p| 6.0 * p).collect()
+        } else {
+            rng.normal_vec(kvh * d, 0.05)
+        };
+        let vr = rng.normal_vec(kvh * d, 1.0);
+        skew_cache.write_token(0, b, s, &kr, &vr);
+    }
+    let g = h / kvh;
+    let skew_q: Vec<f32> = (0..h * d)
+        .map(|i| {
+            let kv_head = ((i / d) % h) / g;
+            6.0 * pattern[kv_head * d + i % d]
+        })
+        .collect();
+    // Bias::None so the outlier dominates every head globally — under
+    // ALiBi the steep-slope heads' running max tracks their local
+    // neighborhood and the provable gap never opens at long range.
+    let skip_cfg = AttnConfig {
+        sparsity: SparsityConfig { window_blocks: 1 << 20, sink_blocks: 1, skip_threshold: 0.0 },
+        ..AttnConfig::dense(h, kvh, d, Bias::None)
+    };
+    let noskip_cfg = AttnConfig {
+        sparsity: SparsityConfig::windowed(1 << 20, 1),
+        ..AttnConfig::dense(h, kvh, d, Bias::None)
+    };
+    let mut skew_out = vec![0.0f32; h * d];
+    let skipped =
+        paged_decode_attention_into(&skip_cfg, &skew_cache, 0, &skew_q, &skew_t, &mut ws, &mut skew_out);
+    let total_tiles = skew_len.div_ceil(block_size);
+    let decode_skip_rate = skipped as f64 / total_tiles as f64;
+    let s_dec_skip_off = bench.bench("decode skewed ctx, skip off", || {
+        paged_decode_attention_into(&noskip_cfg, &skew_cache, 0, &skew_q, &skew_t, &mut ws, &mut skew_out);
+        black_box(skew_out[0]);
+    });
+    let s_dec_skip_on = bench.bench("decode skewed ctx, exact skip", || {
+        paged_decode_attention_into(&skip_cfg, &skew_cache, 0, &skew_q, &skew_t, &mut ws, &mut skew_out);
+        black_box(skew_out[0]);
+    });
+    let decode_skip_off_tok_s = 1.0 / s_dec_skip_off.mean();
+    let decode_skip_on_tok_s = 1.0 / s_dec_skip_on.mean();
+
+    // Long-context pool footprint: token-by-token growth with the
+    // engine's eviction sweep. Dense grows linearly; the windowed table
+    // plateaus at sink + window + 1 blocks — the memory headroom claim.
+    let long_tokens = if smoke { 1024 } else { 4096 };
+    let peak_live = |sp: SparsityConfig| -> usize {
+        let mut alloc = BlockAllocator::new(long_tokens.div_ceil(block_size) + 2, block_size);
+        let mut t = BlockTable::new();
+        let mut peak = 0usize;
+        for _ in 0..long_tokens {
+            assert!(t.reserve(1, &mut alloc));
+            t.append_slot(block_size);
+            t.evict_leading(sp.sink_blocks, sp.evict_frontier(t.len(), block_size), &mut alloc);
+            peak = peak.max(t.live_blocks());
+        }
+        t.free_all(&mut alloc);
+        peak
+    };
+    let pool_peak_dense = peak_live(SparsityConfig::dense());
+    let pool_peak_windowed = peak_live(SparsityConfig::windowed(4, 1));
+    assert!(
+        pool_peak_windowed < pool_peak_dense / 4,
+        "windowed pool must plateau: {pool_peak_windowed} vs dense {pool_peak_dense}"
+    );
+
     // ---- report ---------------------------------------------------------
     let mut t = Table::new(
         "Attention core: block-tiled kernel vs pre-refactor baseline",
@@ -394,10 +492,38 @@ fn main() {
         f(prefill_q8_streamed_par_tok_s, 1),
         f(prefill_q8_streamed_par_tok_s / prefill_q8_gather_tok_s, 2),
     ]);
+    t.row(&[
+        "prefill f32 windowed".into(),
+        format!("rows={p_rows} kv={kv_len} window=4+1 blocks"),
+        f(prefill_window_f32_tok_s, 1),
+        f(prefill_window_f32_tok_s / prefill_f32_gather_tok_s, 2),
+    ]);
+    t.row(&[
+        "prefill q8 windowed".into(),
+        format!("rows={p_rows} kv={kv_len} window=4+1 blocks"),
+        f(prefill_window_q8_tok_s, 1),
+        f(prefill_window_q8_tok_s / prefill_q8_gather_tok_s, 2),
+    ]);
+    t.row(&[
+        "decode skip off".into(),
+        format!("skewed kv={skew_len}"),
+        f(decode_skip_off_tok_s, 1),
+        f(1.0, 2),
+    ]);
+    t.row(&[
+        "decode exact skip".into(),
+        format!("skewed kv={skew_len} skip_rate={decode_skip_rate:.2}"),
+        f(decode_skip_on_tok_s, 1),
+        f(decode_skip_on_tok_s / decode_skip_off_tok_s, 2),
+    ]);
     t.print();
     println!(
         "KV pool bytes: f32 = {pool_bytes_f32}, q8 = {pool_bytes_q8} ({:.3}×)",
         pool_bytes_q8 as f64 / pool_bytes_f32 as f64
+    );
+    println!(
+        "Long-context pool peak over {long_tokens} tokens: dense = {pool_peak_dense} blocks, \
+         windowed(4+1) = {pool_peak_windowed} blocks (plateau)"
     );
 
     common::write_bench_json(
@@ -439,6 +565,18 @@ fn main() {
             ("prefill_parallel_jobs", p_threads as f64),
             ("prefill_f32_streamed_par_tok_s", prefill_f32_streamed_par_tok_s),
             ("prefill_q8_streamed_par_tok_s", prefill_q8_streamed_par_tok_s),
+            ("prefill_window_f32_tok_s", prefill_window_f32_tok_s),
+            ("prefill_window_q8_tok_s", prefill_window_q8_tok_s),
+            (
+                "prefill_window_speedup_vs_streamed",
+                prefill_window_f32_tok_s / prefill_f32_streamed_tok_s,
+            ),
+            ("decode_skip_rate", decode_skip_rate),
+            ("decode_skip_off_tok_s", decode_skip_off_tok_s),
+            ("decode_skip_on_tok_s", decode_skip_on_tok_s),
+            ("kv_window_long_tokens", long_tokens as f64),
+            ("kv_window_peak_blocks_dense", pool_peak_dense as f64),
+            ("kv_window_peak_blocks_windowed", pool_peak_windowed as f64),
         ],
     );
 }

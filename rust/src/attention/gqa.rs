@@ -21,6 +21,7 @@
 //! (`NativeModel::calibrate`), parity tests, and the bench baselines.
 
 use super::kernel::{self, with_workspace, Workspace};
+use super::sparsity::SparsityConfig;
 
 /// Positional bias mode.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -38,9 +39,22 @@ pub struct AttnConfig {
     pub num_kv_heads: usize,
     pub head_dim: usize,
     pub bias: Bias,
+    /// Sliding-window/sink/skip config consumed by the **paged** walk
+    /// drivers ([`super::paged`]). The contiguous routines in this
+    /// module stay dense — they are the calibration/test/bench
+    /// reference oracles and never see a cache block partition.
+    pub sparsity: SparsityConfig,
 }
 
 impl AttnConfig {
+    /// Dense shape constructor — the historical field set, with
+    /// [`SparsityConfig::dense`] sparsity. Every pre-sparsity call site
+    /// builds configs through this, so "no sparsity named" keeps
+    /// meaning "dense causal".
+    pub const fn dense(num_heads: usize, num_kv_heads: usize, head_dim: usize, bias: Bias) -> AttnConfig {
+        AttnConfig { num_heads, num_kv_heads, head_dim, bias, sparsity: SparsityConfig::dense() }
+    }
+
     /// Query heads per KV group (`G` in the paper).
     pub fn group_size(&self) -> usize {
         assert!(self.num_heads % self.num_kv_heads == 0, "heads must divide evenly into groups");
@@ -152,7 +166,7 @@ mod tests {
     use crate::util::rng::Rng;
 
     fn cfg(h: usize, kvh: usize, bias: Bias) -> AttnConfig {
-        AttnConfig { num_heads: h, num_kv_heads: kvh, head_dim: 8, bias }
+        AttnConfig::dense(h, kvh, 8, bias)
     }
 
     /// Naive single-head reference.
@@ -302,7 +316,7 @@ mod tests {
             &[(4usize, 2usize, 3usize, 9usize), (2, 1, 1, 70), (8, 8, 5, 5)]
         {
             let d = 8;
-            let c = AttnConfig { num_heads: h, num_kv_heads: kvh, head_dim: d, bias: Bias::Alibi };
+            let c = AttnConfig::dense(h, kvh, d, Bias::Alibi);
             let q = rng.normal_vec(q_len * h * d, 1.0);
             let k = rng.normal_vec(kv_len * kvh * d, 1.0);
             let v = rng.normal_vec(kv_len * kvh * d, 1.0);

@@ -71,7 +71,7 @@ pub const KV_TILE: usize = 64;
 /// use opt_gptq::attention::gqa::{AttnConfig, Bias};
 /// use opt_gptq::attention::kernel::Workspace;
 ///
-/// let cfg = AttnConfig { num_heads: 2, num_kv_heads: 1, head_dim: 4, bias: Bias::None };
+/// let cfg = AttnConfig::dense(2, 1, 4, Bias::None);
 /// let mut ws = Workspace::new();
 /// ws.configure(&cfg, 8); // tile capacity 8; reuse across calls of any shape
 /// ws.begin_row();
@@ -373,6 +373,107 @@ impl Workspace {
         self.put_quant_scratch(kd, vd);
     }
 
+    /// Decide whether a KV tile can be **skipped outright** for query row
+    /// `q_row` because its softmax contribution is provably negligible —
+    /// the score-bound test behind `SparsityConfig::skip_threshold`.
+    ///
+    /// `key_bounds(kv_head)` must return `(lo, hi)` such that every
+    /// element of every K row in the tile for that KV head lies in
+    /// `[lo, hi]` (per-tile metadata maintained by the KV stores; a
+    /// conservative `(−∞, +∞)` answer simply disables skipping). From
+    /// those bounds the raw dot product of a query head against any key
+    /// in the tile is bounded by
+    ///
+    /// ```text
+    /// dot(q, k) ≤ hi·Σ max(q_j, 0) − lo·Σ max(−q_j, 0)
+    /// ```
+    ///
+    /// and the ALiBi bias `−slope·(q_pos − k_pos)` is maximal at the
+    /// tile's **last** slot (slopes are ≥ 0), so
+    /// `ub = scale·ub_dot − slope·(q_pos − (tile_pos+visible−1))` bounds
+    /// every score the tile could produce for that head.
+    ///
+    /// The tile is skippable when, for every head, `ub` sits below the
+    /// running max `m` by at least `−log_margin` (a negative number):
+    ///
+    /// * With `log_margin == EXACT_LOG_MARGIN` the skip is **bit-exact**:
+    ///   every score satisfies `s − m ≤ −128`, `expf` of which underflows
+    ///   to exactly `0.0f32`, and the tile cannot raise `m` — so
+    ///   `process_tile` would have multiplied `l`/`acc` by `corr == 1.0`,
+    ///   added `0.0` weights, and hit the `wgt == 0.0` fast path in pass
+    ///   2. State is byte-identical either way (asserted in tests).
+    /// * With a larger (threshold-mode) margin the skipped mass is bounded
+    ///   by `visible · e^{log_margin}` per head, trading exactness for
+    ///   more skips.
+    ///
+    /// All bound arithmetic runs in f64 and carries an explicit rounding
+    /// slack, so f32 evaluation inside `process_tile` cannot legally land
+    /// above the bound. Non-finite queries, bounds, or running maxima
+    /// conservatively refuse the skip, preserving the kernel's
+    /// NaN-poisoning semantics. Never call this for a tile the window
+    /// rule already hides; window-invisible tiles are not "skipped", they
+    /// are simply outside the schedule.
+    pub fn tile_skippable(
+        &self,
+        q_row: &[f32],
+        key_bounds: &mut dyn FnMut(usize) -> (f32, f32),
+        tile_pos: usize,
+        visible: usize,
+        q_pos: usize,
+        log_margin: f32,
+    ) -> bool {
+        let (kvh, d, g) = (self.kv_heads, self.head_dim, self.group);
+        debug_assert!(visible > 0 && tile_pos + visible <= q_pos + 1);
+        debug_assert_eq!(q_row.len(), self.num_heads * d);
+        let scale = self.scale as f64;
+        let margin = log_margin as f64;
+        // Bias of the tile's closest (= last) slot; slopes are ≥ 0 so it
+        // dominates the whole tile. Zero slopes (Bias::None) fall out.
+        let gap = (q_pos - (tile_pos + visible - 1)) as f64;
+        for kv_head in 0..kvh {
+            let (lo, hi) = key_bounds(kv_head);
+            let (lo, hi) = (lo as f64, hi as f64);
+            if !lo.is_finite() || !hi.is_finite() {
+                return false; // no usable metadata — cannot prove anything
+            }
+            let kmax = lo.abs().max(hi.abs());
+            for gq in 0..g {
+                let head = kv_head * g + gq;
+                let m = self.m[head] as f64;
+                if !m.is_finite() {
+                    // −∞: no mass yet, the tile would *define* m. +∞/NaN:
+                    // upstream poison must keep propagating.
+                    return false;
+                }
+                let q_vec = &q_row[head * d..(head + 1) * d];
+                let (mut pos_mass, mut neg_mass) = (0.0f64, 0.0f64);
+                for &qv in q_vec {
+                    let q = qv as f64;
+                    if !q.is_finite() {
+                        return false;
+                    }
+                    if q > 0.0 {
+                        pos_mass += q;
+                    } else {
+                        neg_mass -= q;
+                    }
+                }
+                let ub_dot = hi * pos_mass - lo * neg_mass;
+                let bias = -(self.slopes[head] as f64) * gap;
+                let ub = scale * ub_dot + bias;
+                // Generous cover for the f32 dot/scale/bias rounding that
+                // process_tile would perform (relative error ~2⁻²⁴ per
+                // step; 1e-4 of the magnitude envelope is orders beyond).
+                let slack =
+                    1e-4 * (1.0 + scale * kmax * (pos_mass + neg_mass) + bias.abs());
+                if !(ub + slack < m + margin) {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
     /// Normalize the accumulator into `out_row` (`[num_heads*head_dim]`).
     ///
     /// A head whose normalizer is exactly zero — no visible keys, or
@@ -492,7 +593,7 @@ mod tests {
             for &(h, kvh) in &[(4usize, 1usize), (4, 2), (8, 8)] {
                 for &(kv_len, q_pos) in &[(1usize, 0usize), (5, 4), (16, 9), (33, 40)] {
                     let d = 8;
-                    let cfg = AttnConfig { num_heads: h, num_kv_heads: kvh, head_dim: d, bias };
+                    let cfg = AttnConfig::dense(h, kvh, d, bias);
                     let mut rng = Rng::new((h * 100 + kvh * 10 + kv_len) as u64);
                     let q = rng.normal_vec(h * d, 1.0);
                     let k = rng.normal_vec(kv_len * kvh * d, 1.0);
@@ -514,7 +615,7 @@ mod tests {
 
     #[test]
     fn no_visible_keys_yields_zeros() {
-        let cfg = AttnConfig { num_heads: 2, num_kv_heads: 1, head_dim: 4, bias: Bias::None };
+        let cfg = AttnConfig::dense(2, 1, 4, Bias::None);
         let mut ws = Workspace::new();
         ws.configure(&cfg, 8);
         ws.begin_row();
@@ -527,7 +628,7 @@ mod tests {
     fn neg_inf_scores_do_not_poison_state() {
         // A tile whose scores are all −∞ must contribute nothing and
         // leave later (finite) tiles intact.
-        let cfg = AttnConfig { num_heads: 1, num_kv_heads: 1, head_dim: 4, bias: Bias::None };
+        let cfg = AttnConfig::dense(1, 1, 4, Bias::None);
         let mut ws = Workspace::new();
         ws.configure(&cfg, 4);
         ws.begin_row();
@@ -553,7 +654,7 @@ mod tests {
         use crate::kvcache::QuantKvTile;
         use crate::quant::{packing, QuantParams};
         let (h, kvh, d, slots) = (4usize, 2usize, 8usize, 5usize);
-        let cfg = AttnConfig { num_heads: h, num_kv_heads: kvh, head_dim: d, bias: Bias::Alibi };
+        let cfg = AttnConfig::dense(h, kvh, d, Bias::Alibi);
         let mut rng = Rng::new(11);
         let q = rng.normal_vec(h * d, 1.0);
         let k = rng.normal_vec(slots * kvh * d, 1.0);
@@ -617,7 +718,7 @@ mod tests {
         // walk — a row's arithmetic sequence is unchanged, only the
         // interleaving across rows differs.
         let (h, kvh, d) = (4usize, 2usize, 8usize);
-        let cfg = AttnConfig { num_heads: h, num_kv_heads: kvh, head_dim: d, bias: Bias::Alibi };
+        let cfg = AttnConfig::dense(h, kvh, d, Bias::Alibi);
         let (q_len, kv_len, tile) = (5usize, 19usize, 4usize);
         let q_offset = kv_len - q_len;
         let rs = kvh * d;
@@ -678,16 +779,99 @@ mod tests {
         assert_eq!(got, expect, "tile-major must be bit-identical to row-major");
     }
 
+    /// Elementwise per-kv-head (lo, hi) over a tile — what the KV-store
+    /// metadata promises, computed exactly for the test.
+    fn tile_bounds(k_tile: &[f32], visible: usize, kvh: usize, d: usize) -> Vec<(f32, f32)> {
+        let mut b = vec![(f32::INFINITY, f32::NEG_INFINITY); kvh];
+        for slot in 0..visible {
+            for head in 0..kvh {
+                for &x in &k_tile[(slot * kvh + head) * d..(slot * kvh + head + 1) * d] {
+                    b[head].0 = b[head].0.min(x);
+                    b[head].1 = b[head].1.max(x);
+                }
+            }
+        }
+        b
+    }
+
+    #[test]
+    fn exact_skip_leaves_state_bit_identical() {
+        // A far-away tile under ALiBi: the score upper bound sits more
+        // than EXACT_LOG_MARGIN below the running max, tile_skippable
+        // must fire, and actually processing the tile anyway must leave
+        // (m, l, acc) and the finished row bit-unchanged — the skip is a
+        // pure elision, not an approximation.
+        let (h, kvh, d) = (4usize, 2usize, 8usize);
+        let cfg = AttnConfig::dense(h, kvh, d, Bias::Alibi);
+        let mut rng = Rng::new(41);
+        let q_pos = 100_000usize; // huge gap → even the shallowest slope buries the tile
+        let q = rng.normal_vec(h * d, 1.0);
+        let near_k = rng.normal_vec(4 * kvh * d, 1.0);
+        let near_v = rng.normal_vec(4 * kvh * d, 1.0);
+        let far_k: Vec<f32> = rng.normal_vec(4 * kvh * d, 1.0).iter().map(|x| x * 0.01).collect();
+        let far_v = rng.normal_vec(4 * kvh * d, 1.0);
+
+        let mut ws = Workspace::new();
+        ws.configure(&cfg, 4);
+        ws.begin_row();
+        // Establish a finite running max from the keys next to the query.
+        ws.process_tile(&q, &near_k, &near_v, q_pos - 3, 4, q_pos);
+        let bounds = tile_bounds(&far_k, 4, kvh, d);
+        let mut kb = |head: usize| bounds[head];
+        assert!(
+            ws.tile_skippable(&q, &mut kb, 0, 4, q_pos, crate::attention::EXACT_LOG_MARGIN),
+            "distant low-magnitude tile must be provably skippable"
+        );
+        let (m0, l0, acc0) = (ws.m.clone(), ws.l.clone(), ws.acc.clone());
+        let mut skipped_out = vec![0.0f32; h * d];
+        ws.finish_row(&mut skipped_out);
+        // Process the tile anyway: nothing may move.
+        ws.process_tile(&q, &far_k, &far_v, 0, 4, q_pos);
+        assert_eq!(ws.m, m0, "a skippable tile must not move the running max");
+        assert_eq!(ws.l, l0, "a skippable tile must not move the normalizer");
+        assert_eq!(ws.acc, acc0, "a skippable tile must not move the accumulator");
+        let mut processed_out = vec![0.0f32; h * d];
+        ws.finish_row(&mut processed_out);
+        assert_eq!(skipped_out, processed_out);
+    }
+
+    #[test]
+    fn near_tiles_and_unknown_bounds_refuse_to_skip() {
+        let (h, kvh, d) = (4usize, 2usize, 8usize);
+        let cfg = AttnConfig::dense(h, kvh, d, Bias::Alibi);
+        let mut rng = Rng::new(42);
+        let q = rng.normal_vec(h * d, 1.0);
+        let k = rng.normal_vec(4 * kvh * d, 1.0);
+        let v = rng.normal_vec(4 * kvh * d, 1.0);
+        let mut ws = Workspace::new();
+        ws.configure(&cfg, 4);
+        ws.begin_row();
+        // Before any tile: m is −∞, nothing is skippable.
+        let bounds = tile_bounds(&k, 4, kvh, d);
+        let mut kb = |head: usize| bounds[head];
+        assert!(!ws.tile_skippable(&q, &mut kb, 0, 4, 3, crate::attention::EXACT_LOG_MARGIN));
+        ws.process_tile(&q, &k, &v, 0, 4, 3);
+        // The tile that *set* the max can never sit 128 nats below it.
+        assert!(!ws.tile_skippable(&q, &mut kb, 0, 4, 3, crate::attention::EXACT_LOG_MARGIN));
+        // Conservative (−∞, +∞) metadata always refuses.
+        let mut unknown = |_head: usize| (f32::NEG_INFINITY, f32::INFINITY);
+        assert!(!ws.tile_skippable(&q, &mut unknown, 0, 4, 100, crate::attention::EXACT_LOG_MARGIN));
+        // NaN queries refuse (poison must flow through the real pass).
+        let mut q_bad = q.clone();
+        q_bad[0] = f32::NAN;
+        assert!(!ws.tile_skippable(&q_bad, &mut kb, 0, 4, 3, crate::attention::EXACT_LOG_MARGIN));
+    }
+
     #[test]
     fn workspace_reuse_across_shrinking_shapes() {
         // Reconfiguring to a smaller shape must not leak stale state.
         let mut ws = Workspace::new();
-        let big = AttnConfig { num_heads: 8, num_kv_heads: 4, head_dim: 8, bias: Bias::Alibi };
+        let big = AttnConfig::dense(8, 4, 8, Bias::Alibi);
         let mut rng = Rng::new(3);
         let (kq, kk, kv) =
             (rng.normal_vec(8 * 8, 1.0), rng.normal_vec(20 * 4 * 8, 1.0), rng.normal_vec(20 * 4 * 8, 1.0));
         let _ = run_tiled(&big, &mut ws, &kq, &kk, &kv, 20, 19, 16);
-        let small = AttnConfig { num_heads: 2, num_kv_heads: 1, head_dim: 4, bias: Bias::None };
+        let small = AttnConfig::dense(2, 1, 4, Bias::None);
         let sq = rng.normal_vec(2 * 4, 1.0);
         let sk = rng.normal_vec(3 * 4, 1.0);
         let sv = rng.normal_vec(3 * 4, 1.0);

@@ -15,6 +15,10 @@
 //!   slot.
 //! * [`grouping`] — dynamic activation-similarity head grouping
 //!   (paper §II.B "Dynamic Grouping Optimization").
+//! * [`sparsity`] — sliding-window + sink-block visibility rule and the
+//!   score-bound tile-skip margins ([`SparsityConfig`]); block-granular
+//!   so prefill and decode share one partition, dense by default so all
+//!   parity baselines are untouched.
 //! * [`paged`] — decode **and prefill** attention directly over the
 //!   paged KV cache (any [`crate::kvcache::KvStore`] dtype: quantized
 //!   blocks are dequantized per tile inside the kernel); cache blocks
@@ -30,6 +34,7 @@ pub mod gqa;
 pub mod grouping;
 pub mod kernel;
 pub mod paged;
+pub mod sparsity;
 
 pub use alibi::alibi_slopes;
 pub use gqa::{auto_prefill_threads, gqa_attention, gqa_attention_into, AttnConfig, Bias};
@@ -39,3 +44,4 @@ pub use paged::{
     auto_decode_threads, paged_decode_attention, paged_decode_attention_into, paged_decode_batch,
     paged_prefill_attention_into, paged_prefill_rows_parallel,
 };
+pub use sparsity::{SparsityConfig, EXACT_LOG_MARGIN};

@@ -34,8 +34,23 @@
 
 use super::gqa::AttnConfig;
 use super::kernel::{with_workspace, Workspace};
-use crate::kvcache::{BlockTable, KvBlockView, KvCacheDtype, KvStore};
+use crate::kvcache::{BlockTable, KvBlockView, KvCacheDtype, KvStore, TOMBSTONE};
 use crate::runtime::pool;
+
+// Sparsity in the walks (see `super::sparsity` for the contract):
+//
+// Both drivers enumerate the block table by *index* — `tile_pos =
+// index · block_size` — so a tile's absolute position survives eviction:
+// a tombstoned entry is stepped over without touching the store, and the
+// surviving tiles keep exactly the positions (and therefore exactly the
+// arithmetic) they had in the dense walk. Window-invisible blocks are
+// elided by `SparsityConfig::block_visible` (decode) / clipped per row by
+// `SparsityConfig::visible_q_end` (prefill) — the same block partition on
+// both paths, which is what makes chunked prefill, whole-prompt prefill
+// and decode agree under a window. Score-bound skips
+// (`Workspace::tile_skippable`) run only when `skip_enabled()` and are
+// counted separately: a window-invisible tile is *outside the schedule*,
+// not "skipped".
 
 /// Decode attention for one sequence.
 ///
@@ -64,6 +79,13 @@ pub fn paged_decode_attention(
 /// scratch lives in the same workspace, so steady-state decode stays
 /// allocation-free for both dtypes. A head whose every score is −∞
 /// yields zeros instead of the seed's `1.0 / 0.0` NaN.
+///
+/// Sparsity (`cfg.sparsity`): window-invisible and tombstoned blocks are
+/// stepped over without touching the store; with skipping enabled, a
+/// visible tile whose score upper bound (from the store's per-tile K
+/// metadata) provably underflows is elided too. Returns the number of
+/// score-bound skips (0 under a dense config — the `skipped_tiles`
+/// metrics feed).
 pub fn paged_decode_attention_into(
     cfg: &AttnConfig,
     cache: &dyn KvStore,
@@ -72,7 +94,7 @@ pub fn paged_decode_attention_into(
     table: &BlockTable,
     ws: &mut Workspace,
     out: &mut [f32],
-) {
+) -> usize {
     let (h, kvh, d) = (cfg.num_heads, cfg.num_kv_heads, cfg.head_dim);
     assert_eq!(q.len(), h * d);
     assert_eq!(out.len(), h * d);
@@ -83,26 +105,54 @@ pub fn paged_decode_attention_into(
     let q_pos = kv_len - 1;
     let block_size = cache.block_size();
     let rs = kvh * d;
+    let sp = &cfg.sparsity;
+    let query_block = q_pos / block_size;
+    let skip_enabled = sp.skip_enabled();
+    let log_margin = sp.log_margin();
+    let mut skipped = 0usize;
 
     ws.configure(cfg, block_size);
     ws.begin_row();
-    let mut pos = 0usize;
-    for &block in table.blocks() {
-        if pos >= kv_len {
+    for (bi, &block) in table.blocks().iter().enumerate() {
+        let tile_pos = bi * block_size;
+        if tile_pos >= kv_len {
             break;
         }
-        let in_block = block_size.min(kv_len - pos);
+        if block == TOMBSTONE {
+            debug_assert!(
+                !sp.block_visible(bi, query_block),
+                "evicted block {bi} still inside sink ∪ window of q_pos {q_pos}"
+            );
+            continue;
+        }
+        if !sp.block_visible(bi, query_block) {
+            continue;
+        }
+        let in_block = block_size.min(kv_len - tile_pos);
+        if skip_enabled
+            && ws.tile_skippable(
+                q,
+                &mut |head| cache.key_tile_bounds(layer, block, head),
+                tile_pos,
+                in_block,
+                q_pos,
+                log_margin,
+            )
+        {
+            skipped += 1;
+            continue;
+        }
         match cache.block_view(layer, block) {
             KvBlockView::F32 { k, v } => {
-                ws.process_tile(q, &k[..in_block * rs], &v[..in_block * rs], pos, in_block, q_pos);
+                ws.process_tile(q, &k[..in_block * rs], &v[..in_block * rs], tile_pos, in_block, q_pos);
             }
             KvBlockView::Q8 { k, v } => {
-                ws.process_quant_tile(q, &k, &v, pos, in_block, q_pos);
+                ws.process_quant_tile(q, &k, &v, tile_pos, in_block, q_pos);
             }
         }
-        pos += in_block;
     }
     ws.finish_row(out);
+    skipped
 }
 
 /// Minimum query rows per pool job when the store is packed (Q8): each
@@ -138,8 +188,19 @@ pub const MIN_Q8_ROWS_PER_JOB: usize = 4;
 /// chunked prefill, whole-prompt prefill, and the step-serial reference
 /// all produce identical rows.
 ///
-/// Returns the number of quantized tiles dequantized (0 on an f32
-/// store) — the feed for `EngineMetrics::prefill_dequant_tiles`.
+/// Returns `(quant_tiles, skipped_tiles)`: the number of quantized tiles
+/// dequantized (0 on an f32 store — the
+/// `EngineMetrics::prefill_dequant_tiles` feed) and the number of
+/// per-(row, tile) score-bound skips (0 under a dense config — the
+/// `skipped_tiles` feed).
+///
+/// Sparsity (`cfg.sparsity`): a tile's visible row range is clipped at
+/// the head by causality (`r0`) and at the tail by the sliding window
+/// (`SparsityConfig::visible_q_end` — rows whose block has slid past the
+/// tile). An empty range elides the tile entirely (no dequant);
+/// tombstoned entries are stepped over. The clip is the *same
+/// block-granular rule* decode applies, so windowed prefill rows stay
+/// bit-identical to windowed decode replay.
 #[allow(clippy::too_many_arguments)]
 pub fn paged_prefill_attention_into(
     cfg: &AttnConfig,
@@ -151,7 +212,7 @@ pub fn paged_prefill_attention_into(
     table: &BlockTable,
     ws: &mut Workspace,
     out: &mut [f32],
-) -> usize {
+) -> (usize, usize) {
     let (h, kvh, d) = (cfg.num_heads, cfg.num_kv_heads, cfg.head_dim);
     let row = h * d;
     assert!(q_len > 0, "empty prefill chunk");
@@ -163,26 +224,55 @@ pub fn paged_prefill_attention_into(
     assert!(table.len() >= kv_len, "chunk K/V must be written before its attention");
     let block_size = cache.block_size();
     let rs = kvh * d;
+    let sp = &cfg.sparsity;
+    let skip_enabled = sp.skip_enabled();
+    let log_margin = sp.log_margin();
 
     ws.configure(cfg, block_size);
     let mut states = ws.take_row_states(q_len);
     let mut quant_tiles = 0usize;
-    let mut tile_pos = 0usize;
-    for &block in table.blocks() {
+    let mut skipped = 0usize;
+    for (bi, &block) in table.blocks().iter().enumerate() {
+        let tile_pos = bi * block_size;
         if tile_pos >= kv_len {
             break;
         }
         let in_block = block_size.min(kv_len - tile_pos);
-        // First query row that sees this tile (causality: q_pos ≥ tile_pos).
+        // First query row that sees this tile (causality: q_pos ≥ tile_pos)
+        // and one past the last (window: the tile must not have slid out).
         let r0 = tile_pos.saturating_sub(q_offset);
+        let r1 = q_len.min(sp.visible_q_end(bi, block_size).saturating_sub(q_offset));
+        if block == TOMBSTONE {
+            debug_assert!(
+                r0 >= r1,
+                "evicted block {bi} still visible to prefill rows {r0}..{r1}"
+            );
+            continue;
+        }
+        if r0 >= r1 {
+            continue; // window-invisible for every row — skip the dequant too
+        }
         match cache.block_view(layer, block) {
             KvBlockView::F32 { k, v } => {
-                for (r, st) in states[r0..q_len].iter_mut().enumerate() {
+                for (r, st) in states[r0..r1].iter_mut().enumerate() {
                     let q_pos = q_offset + r0 + r;
                     let vis = in_block.min(q_pos + 1 - tile_pos);
                     let q_row = &q[(r0 + r) * row..(r0 + r + 1) * row];
                     ws.swap_row_state(st);
-                    ws.process_tile(q_row, &k[..in_block * rs], &v[..in_block * rs], tile_pos, vis, q_pos);
+                    if skip_enabled
+                        && ws.tile_skippable(
+                            q_row,
+                            &mut |head| cache.key_tile_bounds(layer, block, head),
+                            tile_pos,
+                            vis,
+                            q_pos,
+                            log_margin,
+                        )
+                    {
+                        skipped += 1;
+                    } else {
+                        ws.process_tile(q_row, &k[..in_block * rs], &v[..in_block * rs], tile_pos, vis, q_pos);
+                    }
                     ws.swap_row_state(st);
                 }
             }
@@ -192,18 +282,30 @@ pub fn paged_prefill_attention_into(
                 let (mut kd, mut vd) = ws.take_quant_scratch();
                 k.dequantize_into(in_block, kvh, d, &mut kd[..used]);
                 v.dequantize_into(in_block, kvh, d, &mut vd[..used]);
-                for (r, st) in states[r0..q_len].iter_mut().enumerate() {
+                for (r, st) in states[r0..r1].iter_mut().enumerate() {
                     let q_pos = q_offset + r0 + r;
                     let vis = in_block.min(q_pos + 1 - tile_pos);
                     let q_row = &q[(r0 + r) * row..(r0 + r + 1) * row];
                     ws.swap_row_state(st);
-                    ws.process_tile(q_row, &kd[..used], &vd[..used], tile_pos, vis, q_pos);
+                    if skip_enabled
+                        && ws.tile_skippable(
+                            q_row,
+                            &mut |head| cache.key_tile_bounds(layer, block, head),
+                            tile_pos,
+                            vis,
+                            q_pos,
+                            log_margin,
+                        )
+                    {
+                        skipped += 1;
+                    } else {
+                        ws.process_tile(q_row, &kd[..used], &vd[..used], tile_pos, vis, q_pos);
+                    }
                     ws.swap_row_state(st);
                 }
                 ws.put_quant_scratch(kd, vd);
             }
         }
-        tile_pos += in_block;
     }
     for (r, st) in states[..q_len].iter_mut().enumerate() {
         ws.swap_row_state(st);
@@ -211,7 +313,7 @@ pub fn paged_prefill_attention_into(
         ws.swap_row_state(st);
     }
     ws.put_row_states(states);
-    quant_tiles
+    (quant_tiles, skipped)
 }
 
 /// Row-parallel streamed prefill: splits the chunk's `q_len` query rows
@@ -222,9 +324,9 @@ pub fn paged_prefill_attention_into(
 /// tile schedule depends only on its absolute position and the block
 /// table — so outputs are **bit-identical** at every width.
 ///
-/// Returns the total quantized tiles dequantized across all workers
+/// Returns the total `(quant_tiles, skipped_tiles)` across all workers
 /// (each range walks its own tiles, so wider fan-outs re-dequantize
-/// shared prefixes — the count is the honest measured number).
+/// shared prefixes — the counts are the honest measured numbers).
 ///
 /// On a **packed (Q8) store** the effective width is additionally
 /// capped so every job covers at least [`MIN_Q8_ROWS_PER_JOB`] query
@@ -245,12 +347,12 @@ pub fn paged_prefill_rows_parallel(
     table: &BlockTable,
     threads: usize,
     out: &mut [f32],
-) -> usize {
+) -> (usize, usize) {
     let row = cfg.num_heads * cfg.head_dim;
     assert_eq!(q.len(), q_len * row);
     assert_eq!(out.len(), q_len * row);
     if q_len == 0 {
-        return 0;
+        return (0, 0);
     }
     let threads = match cache.dtype() {
         KvCacheDtype::F32 => threads.clamp(1, q_len),
@@ -267,7 +369,7 @@ pub fn paged_prefill_rows_parallel(
     }
     let per = q_len.div_ceil(threads);
     let n_jobs = q_len.div_ceil(per);
-    let mut tile_counts = vec![0usize; n_jobs];
+    let mut tile_counts = vec![(0usize, 0usize); n_jobs];
     let mut jobs: Vec<pool::Job<'_>> = Vec::with_capacity(n_jobs);
     let mut rest = out;
     let mut counts_rest = tile_counts.as_mut_slice();
@@ -288,7 +390,7 @@ pub fn paged_prefill_rows_parallel(
         start += take;
     }
     pool::global().run(jobs);
-    tile_counts.iter().sum()
+    tile_counts.iter().fold((0, 0), |(tq, ts), &(q2, s2)| (tq + q2, ts + s2))
 }
 
 /// Decode attention for a whole batch in one step, fanned across
@@ -305,6 +407,9 @@ pub fn paged_prefill_rows_parallel(
 /// the serial loop (`threads == 1`): each sequence's computation is
 /// independent and its instruction order is unchanged — the pool only
 /// changes *who* runs it.
+///
+/// Returns the batch's total score-bound tile skips (0 under a dense
+/// config) — the decode-side `skipped_tiles` metrics feed.
 pub fn paged_decode_batch(
     cfg: &AttnConfig,
     cache: &dyn KvStore,
@@ -313,19 +418,20 @@ pub fn paged_decode_batch(
     tables: &[&BlockTable],
     threads: usize,
     out: &mut [f32],
-) {
+) -> usize {
     let row = cfg.num_heads * cfg.head_dim;
     let n = tables.len();
     assert_eq!(qs.len(), n * row);
     assert_eq!(out.len(), n * row);
     if n == 0 {
-        return;
+        return 0;
     }
     let threads = threads.clamp(1, n);
     if threads == 1 {
-        with_workspace(|ws| {
+        return with_workspace(|ws| {
+            let mut skipped = 0usize;
             for i in 0..n {
-                paged_decode_attention_into(
+                skipped += paged_decode_attention_into(
                     cfg,
                     cache,
                     layer,
@@ -335,8 +441,8 @@ pub fn paged_decode_batch(
                     &mut out[i * row..(i + 1) * row],
                 );
             }
+            skipped
         });
-        return;
     }
     // Cost-balanced contiguous partition (greedy target cut): a chunk
     // closes as soon as its own cost reaches ⌈total/threads⌉, so every
@@ -347,7 +453,9 @@ pub fn paged_decode_batch(
     let total_cost: usize = costs.iter().sum();
     let target = total_cost.div_ceil(threads);
     let mut jobs: Vec<pool::Job<'_>> = Vec::with_capacity(threads);
+    let mut skip_counts = vec![0usize; threads.min(n)];
     let mut rest = out;
+    let mut counts_rest = skip_counts.as_mut_slice();
     let mut start = 0usize;
     while start < n {
         let mut take = 1usize;
@@ -360,6 +468,8 @@ pub fn paged_decode_batch(
         // the full borrow lifetime the pool job needs.
         let (chunk_out, tail) = std::mem::take(&mut rest).split_at_mut(take * row);
         rest = tail;
+        let (count, ctail) = std::mem::take(&mut counts_rest).split_at_mut(1);
+        counts_rest = ctail;
         let q_chunk = &qs[start * row..(start + take) * row];
         let t_chunk = &tables[start..start + take];
         jobs.push(Box::new(move || {
@@ -367,7 +477,7 @@ pub fn paged_decode_batch(
             // layers and steps — scratch grows once per worker.
             with_workspace(|ws| {
                 for (j, table) in t_chunk.iter().enumerate() {
-                    paged_decode_attention_into(
+                    count[0] += paged_decode_attention_into(
                         cfg,
                         cache,
                         layer,
@@ -382,6 +492,7 @@ pub fn paged_decode_batch(
         start += take;
     }
     pool::global().run(jobs);
+    skip_counts.iter().sum()
 }
 
 /// Heuristic fan-out width for one decode step: all cores once the
@@ -408,7 +519,9 @@ pub fn auto_decode_threads(batch: usize, total_kv_tokens: usize) -> usize {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::attention::alibi::alibi_slopes;
     use crate::attention::gqa::{gqa_attention, Bias};
+    use crate::attention::SparsityConfig;
     use crate::kvcache::{BlockAllocator, PagedKvCache, QuantizedPagedKvCache};
     use crate::util::rng::Rng;
 
@@ -440,7 +553,7 @@ mod tests {
         for (bias, block_size, kv_len) in
             [(Bias::Alibi, 4, 11), (Bias::None, 8, 16), (Bias::Alibi, 16, 3)]
         {
-            let cfg = AttnConfig { num_heads: 4, num_kv_heads: 2, head_dim: 8, bias };
+            let cfg = AttnConfig::dense(4, 2, 8, bias);
             let (cache, table, k, v) = setup(kv_len, 2, 8, block_size, 42);
             let mut rng = Rng::new(7);
             let q = rng.normal_vec(4 * 8, 1.0);
@@ -454,7 +567,7 @@ mod tests {
 
     #[test]
     fn single_token_cache() {
-        let cfg = AttnConfig { num_heads: 2, num_kv_heads: 1, head_dim: 4, bias: Bias::Alibi };
+        let cfg = AttnConfig::dense(2, 1, 4, Bias::Alibi);
         let (cache, table, _, v) = setup(1, 1, 4, 4, 3);
         let q = vec![0.5; 8];
         let out = paged_decode_attention(&cfg, &cache, 0, &q, &table);
@@ -468,7 +581,7 @@ mod tests {
 
     #[test]
     fn online_softmax_is_stable_with_huge_scores() {
-        let cfg = AttnConfig { num_heads: 1, num_kv_heads: 1, head_dim: 4, bias: Bias::None };
+        let cfg = AttnConfig::dense(1, 1, 4, Bias::None);
         let mut cache = PagedKvCache::new(1, 2, 4, 1, 4);
         let mut alloc = BlockAllocator::new(2, 4);
         let mut table = BlockTable::new();
@@ -490,7 +603,7 @@ mod tests {
     fn partial_final_block() {
         // kv_len not a multiple of block_size: stale slots in the final
         // block must not contribute.
-        let cfg = AttnConfig { num_heads: 2, num_kv_heads: 2, head_dim: 4, bias: Bias::None };
+        let cfg = AttnConfig::dense(2, 2, 4, Bias::None);
         let (mut cache, table, k, v) = setup(5, 2, 4, 4, 9);
         // Poison the unused slots of the last block.
         let last_block = *table.blocks().last().unwrap();
@@ -510,7 +623,7 @@ mod tests {
     fn all_neg_inf_scores_yield_zeros_not_nan() {
         // Regression for the seed's final-normalization divide-by-zero:
         // a head that saw only −∞ scores must produce finite zeros.
-        let cfg = AttnConfig { num_heads: 2, num_kv_heads: 1, head_dim: 4, bias: Bias::None };
+        let cfg = AttnConfig::dense(2, 1, 4, Bias::None);
         let mut cache = PagedKvCache::new(1, 2, 4, 1, 4);
         let mut alloc = BlockAllocator::new(2, 4);
         let mut table = BlockTable::new();
@@ -527,7 +640,7 @@ mod tests {
 
     #[test]
     fn batch_matches_serial_per_sequence() {
-        let cfg = AttnConfig { num_heads: 4, num_kv_heads: 2, head_dim: 8, bias: Bias::Alibi };
+        let cfg = AttnConfig::dense(4, 2, 8, Bias::Alibi);
         let (kvh, d, block_size) = (2usize, 8usize, 4usize);
         let lens = [3usize, 9, 17, 1];
         let total_blocks: usize = lens.iter().map(|l| l.div_ceil(block_size)).sum::<usize>() + 1;
@@ -565,7 +678,7 @@ mod tests {
         // Same tokens in an f32 and a q8 cache: outputs agree to within
         // the quantization error (tight bounds live in
         // tests/attention_parity.rs — this is the module smoke check).
-        let cfg = AttnConfig { num_heads: 4, num_kv_heads: 2, head_dim: 8, bias: Bias::Alibi };
+        let cfg = AttnConfig::dense(4, 2, 8, Bias::Alibi);
         let (kvh, d, block_size, kv_len) = (2usize, 8usize, 4usize, 13usize);
         let num_blocks = kv_len.div_ceil(block_size) + 1;
         let mut fcache = PagedKvCache::new(1, num_blocks, block_size, kvh, d);
@@ -591,7 +704,7 @@ mod tests {
 
     #[test]
     fn quantized_batch_bit_identical_across_threads() {
-        let cfg = AttnConfig { num_heads: 4, num_kv_heads: 2, head_dim: 8, bias: Bias::None };
+        let cfg = AttnConfig::dense(4, 2, 8, Bias::None);
         let (kvh, d, block_size) = (2usize, 8usize, 4usize);
         let lens = [3usize, 11, 6];
         let total_blocks: usize = lens.iter().map(|l| l.div_ceil(block_size)).sum::<usize>() + 1;
@@ -637,16 +750,17 @@ mod tests {
             [(Bias::Alibi, 4, 7, 5), (Bias::None, 8, 0, 9), (Bias::Alibi, 16, 20, 3)]
         {
             let (h, kvh, d) = (4usize, 2usize, 8usize);
-            let cfg = AttnConfig { num_heads: h, num_kv_heads: kvh, head_dim: d, bias };
+            let cfg = AttnConfig::dense(h, kvh, d, bias);
             let kv_len = base + q_len;
             let (cache, table, k, v) = setup(kv_len, kvh, d, block_size, 91);
             let mut rng = Rng::new(12);
             let q = rng.normal_vec(q_len * h * d, 1.0);
             let mut ws = Workspace::new();
             let mut out = vec![0.0f32; q_len * h * d];
-            let tiles =
+            let (tiles, skips) =
                 paged_prefill_attention_into(&cfg, &cache, 0, &q, q_len, base, &table, &mut ws, &mut out);
             assert_eq!(tiles, 0, "f32 store dequantizes nothing");
+            assert_eq!(skips, 0, "dense config never skips");
             let reference = gqa_attention(&cfg, &q, &k, &v, q_len, kv_len, base);
             for (i, (a, b)) in out.iter().zip(&reference).enumerate() {
                 assert!(
@@ -664,7 +778,7 @@ mod tests {
         // BIT-identical to paged decode replay of the same position
         // (f32 store: values never requantize).
         let (h, kvh, d, block_size) = (4usize, 2usize, 8usize, 4usize);
-        let cfg = AttnConfig { num_heads: h, num_kv_heads: kvh, head_dim: d, bias: Bias::Alibi };
+        let cfg = AttnConfig::dense(h, kvh, d, Bias::Alibi);
         let (base, q_len) = (6usize, 7usize);
         let kv_len = base + q_len;
         let mut rng = Rng::new(55);
@@ -700,7 +814,7 @@ mod tests {
         // The pool fan-out must never change numerics: row partition
         // depends only on the width, each row's walk is unchanged.
         let (h, kvh, d, block_size) = (4usize, 2usize, 8usize, 4usize);
-        let cfg = AttnConfig { num_heads: h, num_kv_heads: kvh, head_dim: d, bias: Bias::Alibi };
+        let cfg = AttnConfig::dense(h, kvh, d, Bias::Alibi);
         for (base, q_len) in [(0usize, 7usize), (9, 5), (0, 70)] {
             let kv_len = base + q_len;
             let (cache, table, _, _) = setup(kv_len, kvh, d, block_size, 71);
@@ -723,7 +837,7 @@ mod tests {
         // live in tests/attention_parity.rs), and the q8 walk reports
         // its dequantized tile count.
         let (h, kvh, d, block_size) = (4usize, 2usize, 8usize, 4usize);
-        let cfg = AttnConfig { num_heads: h, num_kv_heads: kvh, head_dim: d, bias: Bias::Alibi };
+        let cfg = AttnConfig::dense(h, kvh, d, Bias::Alibi);
         let (base, q_len) = (5usize, 6usize);
         let kv_len = base + q_len;
         let num_blocks = kv_len.div_ceil(block_size) + 1;
@@ -744,11 +858,12 @@ mod tests {
         let mut ws = Workspace::new();
         let mut f_out = vec![0.0f32; q_len * h * d];
         let mut q_out = vec![0.0f32; q_len * h * d];
-        let f_tiles =
+        let (f_tiles, f_skips) =
             paged_prefill_attention_into(&cfg, &fcache, 0, &q, q_len, base, &table, &mut ws, &mut f_out);
-        let q_tiles =
+        let (q_tiles, q_skips) =
             paged_prefill_attention_into(&cfg, &qcache, 0, &q, q_len, base, &table, &mut ws, &mut q_out);
         assert_eq!(f_tiles, 0);
+        assert_eq!((f_skips, q_skips), (0, 0), "dense config never skips");
         assert_eq!(q_tiles, kv_len.div_ceil(block_size), "one dequant per visible tile");
         for (a, b) in f_out.iter().zip(&q_out) {
             assert!((a - b).abs() < 0.05, "{a} vs {b}");
@@ -758,7 +873,7 @@ mod tests {
         // MIN_Q8_ROWS_PER_JOB rows, so total dequant work stays bounded
         // even at an absurd requested width — and numerics never change.
         let mut par_out = vec![0.0f32; q_len * h * d];
-        let par_tiles =
+        let (par_tiles, _) =
             paged_prefill_rows_parallel(&cfg, &qcache, 0, &q, q_len, base, &table, 64, &mut par_out);
         assert_eq!(par_out, q_out, "width must not change numerics");
         let max_jobs = (q_len / MIN_Q8_ROWS_PER_JOB).max(1);
@@ -766,5 +881,173 @@ mod tests {
             par_tiles <= max_jobs * kv_len.div_ceil(block_size),
             "q8 dequant amplification must be capped: {par_tiles}"
         );
+    }
+
+    #[test]
+    fn windowed_decode_matches_masked_naive_reference() {
+        // The windowed walk against an independent f64 softmax computed
+        // over exactly the positions `block_visible` admits — catches
+        // both a wrong mask and a walk that shifts tile positions.
+        let (h, kvh, d, block_size) = (4usize, 2usize, 8usize, 4usize);
+        let mut cfg = AttnConfig::dense(h, kvh, d, Bias::Alibi);
+        cfg.sparsity = SparsityConfig::windowed(2, 1);
+        let kv_len = 23usize;
+        let (cache, table, k, v) = setup(kv_len, kvh, d, block_size, 99);
+        let mut rng = Rng::new(17);
+        let q = rng.normal_vec(h * d, 1.0);
+        let out = paged_decode_attention(&cfg, &cache, 0, &q, &table);
+
+        let q_pos = kv_len - 1;
+        let qb = q_pos / block_size;
+        let slopes = alibi_slopes(h);
+        let scale = 1.0 / (d as f64).sqrt();
+        let g = h / kvh;
+        let rs = kvh * d;
+        for head in 0..h {
+            let kh = head / g;
+            let qv = &q[head * d..(head + 1) * d];
+            let mut scores = Vec::new();
+            let mut idx = Vec::new();
+            for j in 0..kv_len {
+                if !cfg.sparsity.block_visible(j / block_size, qb) {
+                    continue;
+                }
+                let kr = &k[j * rs + kh * d..j * rs + (kh + 1) * d];
+                let dot: f64 = qv.iter().zip(kr).map(|(a, b)| *a as f64 * *b as f64).sum();
+                scores.push(dot * scale - slopes[head] as f64 * (q_pos - j) as f64);
+                idx.push(j);
+            }
+            assert!(scores.len() < kv_len, "window must mask something at this shape");
+            let m = scores.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            let w: Vec<f64> = scores.iter().map(|s| (s - m).exp()).collect();
+            let l: f64 = w.iter().sum();
+            for t in 0..d {
+                let acc: f64 = w
+                    .iter()
+                    .zip(&idx)
+                    .map(|(wj, &j)| wj * v[j * rs + kh * d + t] as f64)
+                    .sum();
+                let expect = (acc / l) as f32;
+                let got = out[head * d + t];
+                assert!((got - expect).abs() < 1e-4, "head={head} t={t}: {got} vs {expect}");
+            }
+        }
+    }
+
+    #[test]
+    fn window_eviction_is_numerics_invariant() {
+        // Freeing everything behind the eviction frontier must leave the
+        // windowed walk bit-identical: index enumeration preserves the
+        // surviving tiles' absolute positions and the tombstoned entries
+        // were invisible already.
+        let (h, kvh, d, bs) = (4usize, 2usize, 8usize, 4usize);
+        let mut cfg = AttnConfig::dense(h, kvh, d, Bias::Alibi);
+        cfg.sparsity = SparsityConfig::windowed(2, 1);
+        let kv_len = 27usize;
+        let num_blocks = kv_len.div_ceil(bs) + 1;
+        let mut cache = PagedKvCache::new(1, num_blocks, bs, kvh, d);
+        let mut alloc = BlockAllocator::new(num_blocks, bs);
+        let mut table = BlockTable::new();
+        assert!(table.reserve(kv_len, &mut alloc));
+        let mut rng = Rng::new(23);
+        for _ in 0..kv_len {
+            let (b, s) = table.append_slot(bs);
+            let k = rng.normal_vec(kvh * d, 1.0);
+            let v = rng.normal_vec(kvh * d, 1.0);
+            cache.write_token(0, b, s, &k, &v);
+        }
+        let q = rng.normal_vec(h * d, 1.0);
+
+        let dense_cfg = AttnConfig::dense(h, kvh, d, Bias::Alibi);
+        let dense = paged_decode_attention(&dense_cfg, &cache, 0, &q, &table);
+        let before = paged_decode_attention(&cfg, &cache, 0, &q, &table);
+        assert_ne!(dense, before, "window must actually mask at this shape");
+
+        let used_before = alloc.num_used();
+        let frontier = cfg.sparsity.evict_frontier(kv_len - 1, bs);
+        let freed = table.evict_leading(cfg.sparsity.sink_blocks, frontier, &mut alloc);
+        assert!(freed > 0, "long context must evict something");
+        assert_eq!(alloc.num_used(), used_before - freed, "freed blocks return to the pool");
+
+        let after = paged_decode_attention(&cfg, &cache, 0, &q, &table);
+        assert_eq!(after, before, "eviction changed windowed decode numerics");
+    }
+
+    #[test]
+    fn windowed_prefill_rows_bit_identical_to_windowed_decode() {
+        // The prefill row clip (`visible_q_end`) and the decode mask
+        // (`block_visible`) are the same block partition: every prefill
+        // row must equal the decode replay at its causal cache state.
+        let (h, kvh, d, bs) = (4usize, 2usize, 8usize, 4usize);
+        let mut cfg = AttnConfig::dense(h, kvh, d, Bias::Alibi);
+        cfg.sparsity = SparsityConfig::windowed(2, 1);
+        let (base, q_len) = (10usize, 9usize);
+        let kv_len = base + q_len;
+        let mut rng = Rng::new(77);
+        let num_blocks = kv_len.div_ceil(bs) + 1;
+        let mut cache = PagedKvCache::new(1, num_blocks, bs, kvh, d);
+        let mut alloc = BlockAllocator::new(num_blocks, bs);
+        let mut table = BlockTable::new();
+        assert!(table.reserve(kv_len, &mut alloc));
+        let q = rng.normal_vec(q_len * h * d, 1.0);
+        let mut dec_rows = Vec::new();
+        for t in 0..kv_len {
+            let (b, s) = table.append_slot(bs);
+            let k = rng.normal_vec(kvh * d, 1.0);
+            let v = rng.normal_vec(kvh * d, 1.0);
+            cache.write_token(0, b, s, &k, &v);
+            if t >= base {
+                let r = t - base;
+                dec_rows
+                    .push(paged_decode_attention(&cfg, &cache, 0, &q[r * h * d..(r + 1) * h * d], &table));
+            }
+        }
+        let mut ws = Workspace::new();
+        let mut out = vec![0.0f32; q_len * h * d];
+        let (_, skipped) =
+            paged_prefill_attention_into(&cfg, &cache, 0, &q, q_len, base, &table, &mut ws, &mut out);
+        assert_eq!(skipped, 0, "window-invisible tiles are not score-bound skips");
+        for (r, dec) in dec_rows.iter().enumerate() {
+            assert_eq!(&out[r * h * d..(r + 1) * h * d], &dec[..], "row {r} diverged from decode");
+        }
+        // And the parallel fan-out preserves the windowed rows too.
+        for threads in [2usize, 4] {
+            let mut par = vec![0.0f32; q_len * h * d];
+            paged_prefill_rows_parallel(&cfg, &cache, 0, &q, q_len, base, &table, threads, &mut par);
+            assert_eq!(par, out, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn windowed_q8_prefill_elides_invisible_tiles_without_dequant() {
+        // A tile no chunk row can see must not even be dequantized: the
+        // quant-tile count drops to exactly the visible-block count.
+        let (h, kvh, d, bs) = (4usize, 2usize, 8usize, 4usize);
+        let mut cfg = AttnConfig::dense(h, kvh, d, Bias::Alibi);
+        cfg.sparsity = SparsityConfig::windowed(1, 1);
+        let (base, q_len) = (16usize, 4usize);
+        let kv_len = base + q_len; // 5 blocks; rows live in block 4
+        let num_blocks = kv_len.div_ceil(bs) + 1;
+        let mut qcache = QuantizedPagedKvCache::new(1, num_blocks, bs, kvh, d);
+        let mut alloc = BlockAllocator::new(num_blocks, bs);
+        let mut table = BlockTable::new();
+        assert!(table.reserve(kv_len, &mut alloc));
+        let mut rng = Rng::new(31);
+        for _ in 0..kv_len {
+            let (b, s) = table.append_slot(bs);
+            let k = rng.normal_vec(kvh * d, 1.0);
+            let v = rng.normal_vec(kvh * d, 1.0);
+            qcache.write_token(0, b, s, &k, &v);
+        }
+        let q = rng.normal_vec(q_len * h * d, 1.0);
+        let mut ws = Workspace::new();
+        let mut out = vec![0.0f32; q_len * h * d];
+        let (q_tiles, skipped) =
+            paged_prefill_attention_into(&cfg, &qcache, 0, &q, q_len, base, &table, &mut ws, &mut out);
+        // Visible blocks for rows 16..=19 (query block 4, W=1, sink=1):
+        // block 0 (sink) and block 4 (own) — blocks 1..=3 slid out.
+        assert_eq!(q_tiles, 2, "invisible tiles must not be dequantized");
+        assert_eq!(skipped, 0, "skipping is off");
+        assert!(out.iter().all(|x| x.is_finite()));
     }
 }

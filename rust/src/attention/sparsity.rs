@@ -1,0 +1,238 @@
+//! Sparse-attention configuration: sliding window, sink blocks, and
+//! score-bound tile skipping (ROADMAP direction 1 — the "sparse" half of
+//! the paper's title).
+//!
+//! ## Visibility rule
+//!
+//! Sparsity is **block-granular** and shared verbatim by the streamed
+//! prefill walk and the paged decode walk (so the PR-4 contract — both
+//! paths fold the same tile partition in the same order — extends to
+//! sparse configs). With `window_blocks = W > 0`, a query at absolute
+//! position `q_pos` (query block `qb = q_pos / block_size`) sees KV
+//! block `tb` iff
+//!
+//! ```text
+//! tb < sink_blocks          (attention sinks: always visible)
+//!   || tb + W > qb          (sliding window: the last W blocks,
+//!                            including the query's own block)
+//! ```
+//!
+//! `W == 0` means an infinite window — exactly dense causal attention,
+//! the default, so every existing parity baseline is untouched.
+//!
+//! ## Eviction boundary
+//!
+//! Because `qb` only ever grows, a block with `tb >= sink_blocks` and
+//! `tb + W <= next_qb` can never become visible to any future query:
+//! freeing it is **numerics-invariant**, not an approximation. That is
+//! the eviction frontier [`SparsityConfig::evict_frontier`] — the
+//! scheduler frees everything behind it each step
+//! (`Scheduler::enforce_window`), which is what turns long chats'
+//! pool capacity back into admission headroom.
+//!
+//! ## Skip modes
+//!
+//! `skip_threshold` selects the score-bound tile-skipping mode used by
+//! `Workspace::tile_skippable`:
+//!
+//! * `< 0.0` (default `-1.0`) — skipping disabled.
+//! * `== 0.0` — **exact** mode: a tile is skipped only when every one of
+//!   its softmax weights provably underflows to exactly `0.0f32` and the
+//!   running max cannot move ([`EXACT_LOG_MARGIN`]); skipping is then
+//!   bit-identical to processing the tile.
+//! * `(0, 1)` — **threshold** mode: tiles whose per-slot weight upper
+//!   bound (relative to the running max) is below the threshold are
+//!   dropped; bounded-error, opt-in only (grep-gated off default paths
+//!   by `scripts/verify.sh`).
+
+/// Log-space margin for **exact** skipping: `expf(x)` underflows to
+/// `0.0f32` for `x <= -104` (the smallest subnormal is `~1.4e-45 =
+/// e^-103.28`); `-128` leaves a 24-nat guard band on top of the slack
+/// term, so a skipped tile's weights are all exactly zero.
+pub const EXACT_LOG_MARGIN: f32 = -128.0;
+
+/// Sliding-window + sink + score-bound-skip configuration. Lives on
+/// [`crate::model::ModelConfig`] (CLI `--window-blocks`,
+/// `--sink-blocks`, `--skip-threshold`) and rides into the attention
+/// drivers on [`crate::attention::AttnConfig`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SparsityConfig {
+    /// Sliding-window width in KV **blocks** (the window includes the
+    /// query's own block). `0` = infinite window = dense causal.
+    pub window_blocks: usize,
+    /// Leading blocks that stay visible (and resident) forever —
+    /// attention sinks.
+    pub sink_blocks: usize,
+    /// Skip mode: `< 0` off, `== 0` exact, `(0, 1)` threshold.
+    pub skip_threshold: f32,
+}
+
+impl Default for SparsityConfig {
+    fn default() -> SparsityConfig {
+        SparsityConfig::dense()
+    }
+}
+
+impl SparsityConfig {
+    /// Dense causal attention — infinite window, no sinks, skipping off.
+    pub const fn dense() -> SparsityConfig {
+        SparsityConfig { window_blocks: 0, sink_blocks: 0, skip_threshold: -1.0 }
+    }
+
+    /// Windowed config with skipping off.
+    pub const fn windowed(window_blocks: usize, sink_blocks: usize) -> SparsityConfig {
+        SparsityConfig { window_blocks, sink_blocks, skip_threshold: -1.0 }
+    }
+
+    /// True when a finite sliding window is in force.
+    pub fn is_windowed(&self) -> bool {
+        self.window_blocks > 0
+    }
+
+    /// True when score-bound tile skipping is in force (exact or
+    /// threshold mode).
+    pub fn skip_enabled(&self) -> bool {
+        self.skip_threshold >= 0.0
+    }
+
+    /// True when the whole config is plain dense causal attention.
+    pub fn is_dense(&self) -> bool {
+        !self.is_windowed() && !self.skip_enabled()
+    }
+
+    /// The log-space skip margin: a tile is skippable when its score
+    /// upper bound stays below `running_max + log_margin()`.
+    /// [`EXACT_LOG_MARGIN`] in exact mode, `ln(threshold)` in threshold
+    /// mode.
+    pub fn log_margin(&self) -> f32 {
+        debug_assert!(self.skip_enabled());
+        if self.skip_threshold == 0.0 {
+            EXACT_LOG_MARGIN
+        } else {
+            self.skip_threshold.ln().max(EXACT_LOG_MARGIN)
+        }
+    }
+
+    /// The visibility rule (see module docs): may the query in block
+    /// `query_block` attend to KV block `tile_block`?
+    pub fn block_visible(&self, tile_block: usize, query_block: usize) -> bool {
+        self.window_blocks == 0
+            || tile_block < self.sink_blocks
+            || tile_block + self.window_blocks > query_block
+    }
+
+    /// One past the last absolute query position that can see
+    /// `tile_block` (`usize::MAX` when the block never leaves the
+    /// window). The streamed-prefill walk clips each tile's row range
+    /// with this so both drivers share one partition.
+    pub fn visible_q_end(&self, tile_block: usize, block_size: usize) -> usize {
+        if self.window_blocks == 0 || tile_block < self.sink_blocks {
+            usize::MAX
+        } else {
+            (tile_block + self.window_blocks).saturating_mul(block_size)
+        }
+    }
+
+    /// Eviction frontier for a sequence whose next query position is
+    /// `next_pos`: every block index in `sink_blocks..frontier` is
+    /// provably invisible to all queries at `>= next_pos` and may be
+    /// freed without changing any future output. `0` when dense.
+    pub fn evict_frontier(&self, next_pos: usize, block_size: usize) -> usize {
+        if self.window_blocks == 0 {
+            return 0;
+        }
+        (next_pos / block_size + 1).saturating_sub(self.window_blocks)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_default_sees_everything() {
+        let sp = SparsityConfig::default();
+        assert!(sp.is_dense());
+        assert!(!sp.skip_enabled());
+        for tb in [0usize, 5, 1000] {
+            assert!(sp.block_visible(tb, 1_000_000));
+            assert_eq!(sp.visible_q_end(tb, 16), usize::MAX);
+        }
+        assert_eq!(sp.evict_frontier(1 << 20, 16), 0);
+    }
+
+    #[test]
+    fn window_includes_own_block_and_sinks() {
+        let sp = SparsityConfig::windowed(2, 1);
+        // Query in block 5: window covers blocks 4..=5, sink covers 0.
+        assert!(sp.block_visible(0, 5), "sink");
+        assert!(!sp.block_visible(1, 5));
+        assert!(!sp.block_visible(3, 5));
+        assert!(sp.block_visible(4, 5));
+        assert!(sp.block_visible(5, 5), "own block");
+        // Early queries: everything in range is visible (causality is
+        // the kernel's job, not the window's).
+        assert!(sp.block_visible(0, 0));
+        assert!(sp.block_visible(1, 1));
+    }
+
+    #[test]
+    fn visible_q_end_matches_block_visible_exactly() {
+        let bs = 8;
+        for (w, sink) in [(1usize, 0usize), (2, 1), (3, 2)] {
+            let sp = SparsityConfig::windowed(w, sink);
+            for tb in 0..6 {
+                let end = sp.visible_q_end(tb, bs);
+                for q_pos in 0..64 {
+                    let expect = sp.block_visible(tb, q_pos / bs);
+                    assert_eq!(q_pos < end, expect, "w={w} sink={sink} tb={tb} q={q_pos}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn evict_frontier_is_exactly_the_invisibility_boundary() {
+        let bs = 4;
+        let sp = SparsityConfig::windowed(3, 1);
+        for next_pos in 0..80 {
+            let frontier = sp.evict_frontier(next_pos, bs);
+            for tb in 0..20 {
+                let dead = (sp.sink_blocks..frontier).contains(&tb);
+                // A dead block must be invisible to every future query.
+                if dead {
+                    for q_pos in next_pos..next_pos + 40 {
+                        assert!(
+                            !sp.block_visible(tb, q_pos / bs),
+                            "evicted tb={tb} visible at q={q_pos} (next={next_pos})"
+                        );
+                    }
+                }
+                // The first live non-sink block is still visible to the
+                // very next query.
+                if tb == frontier && tb >= sp.sink_blocks {
+                    assert!(sp.block_visible(tb, next_pos / bs), "frontier block must be live");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn huge_window_never_overflows() {
+        let sp = SparsityConfig::windowed(usize::MAX / 2, 0);
+        assert!(sp.block_visible(0, 1_000_000));
+        assert_eq!(sp.visible_q_end(3, 1 << 40), usize::MAX);
+        assert_eq!(sp.evict_frontier(1 << 30, 16), 0);
+    }
+
+    #[test]
+    fn skip_margins() {
+        assert!(!SparsityConfig::dense().skip_enabled());
+        let exact = SparsityConfig { skip_threshold: 0.0, ..SparsityConfig::dense() };
+        assert!(exact.skip_enabled());
+        assert_eq!(exact.log_margin(), EXACT_LOG_MARGIN);
+        let thresh = SparsityConfig { skip_threshold: 0.01, ..SparsityConfig::dense() };
+        assert!(thresh.skip_enabled());
+        assert!((thresh.log_margin() - 0.01f32.ln()).abs() < 1e-6);
+    }
+}

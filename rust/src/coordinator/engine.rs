@@ -297,6 +297,13 @@ impl Engine {
             }
             StepPlan::Idle => false,
         };
+        // Sliding-window eviction sweep: reclaim KV blocks behind every
+        // live sequence's window frontier (a no-op under the dense
+        // default). Freed blocks are admission-visible headroom by the
+        // next plan() call.
+        let sp = self.backend.config().sparsity;
+        self.scheduler.enforce_window(&sp, &mut self.alloc);
+        self.metrics.evicted_blocks = self.scheduler.evicted_blocks;
         self.metrics.preemptions = self.scheduler.preemptions;
         self.metrics.prefix_hit_tokens = self.scheduler.prefix_hit_tokens;
         self.metrics.decode_stall_steps = self.scheduler.decode_stall_steps;
@@ -369,6 +376,7 @@ impl Engine {
         self.metrics.prefill_steps += prefill.len(); // chunks executed
         self.metrics.prefill_chunk_tokens += prefill.iter().map(|c| c.len).sum::<usize>();
         self.metrics.prefill_dequant_tiles += outs.prefill_dequant_tiles;
+        self.metrics.skipped_tiles += outs.skipped_tiles;
         if !decode.is_empty() {
             self.metrics.decode_steps += 1;
             self.metrics.decode_batch_tokens += decode.len();
@@ -429,10 +437,14 @@ impl Engine {
         // before its references are released.
         if let Some(pc) = &mut self.prefix_cache {
             let seq = self.scheduler.get(id).unwrap();
-            let in_cache = seq.table.len();
-            let toks = seq.replay_tokens();
-            let blocks = seq.table.blocks().to_vec();
-            pc.insert(&toks[..in_cache.min(toks.len())], &blocks, &mut self.alloc);
+            // A window-evicted table has tombstoned leading blocks: its
+            // KV prefix is gone, so it must never seed the prefix cache.
+            if seq.table.live_blocks() == seq.table.blocks().len() {
+                let in_cache = seq.table.len();
+                let toks = seq.replay_tokens();
+                let blocks = seq.table.blocks().to_vec();
+                pc.insert(&toks[..in_cache.min(toks.len())], &blocks, &mut self.alloc);
+            }
         }
         self.scheduler.finish(id, &mut self.alloc);
         let seq = self.scheduler.collect(id).expect("finished sequence must collect");
@@ -721,6 +733,42 @@ mod tests {
         assert_eq!(r.gather_bytes, 0, "dense gather crept onto the hot path");
         assert_eq!(e.cache_stats().gather_bytes, 0);
         assert_eq!(r.prefill_dequant_tiles, 0, "f32 cache has nothing to dequantize");
+        // The dense-default sparsity contract, observable end to end:
+        // no tile was score-skipped and no block was window-evicted.
+        assert_eq!(r.skipped_tiles, 0, "dense default must never skip a tile");
+        assert_eq!(r.evicted_blocks, 0, "dense default must never evict a block");
+    }
+
+    /// The sliding-window memory claim end to end: a windowed engine
+    /// reclaims out-of-window KV blocks while the sequence still
+    /// decodes, so its live-block peak plateaus well below the dense
+    /// footprint of the same request.
+    #[test]
+    fn windowed_engine_evicts_blocks_and_pool_plateaus() {
+        use crate::attention::SparsityConfig;
+        let mut mc = ModelConfig::tiny();
+        mc.sparsity = SparsityConfig::windowed(2, 1);
+        let backend = NativeBackend::new(NativeModel::new(ModelWeights::init(&mc, 1)));
+        let mut econf = EngineConfig::native(256, 8);
+        econf.sched.watermark_blocks = 1;
+        let mut e = Engine::new(Box::new(backend), econf);
+        // 20 prompt + 30 generated = 50 tokens → 7 dense blocks; the
+        // window holds sink(1) + window(2) + the growth block.
+        e.add_request(vec![256; 20], params(30)).unwrap();
+        let mut peak_live = 0usize;
+        while e.step() {
+            peak_live = peak_live.max(e.used_blocks());
+        }
+        let r = e.metrics.report();
+        assert!(r.evicted_blocks > 0, "window must reclaim trailing blocks");
+        assert!(
+            peak_live <= 4,
+            "windowed pool peaked at {peak_live} blocks, expected plateau ≤ 4 (dense needs 7)"
+        );
+        assert_eq!(e.used_blocks(), 0, "all blocks released at completion");
+        let outs = e.take_outputs();
+        assert_eq!(outs.len(), 1);
+        assert_eq!(outs[0].tokens.len(), 30, "eviction must not end generation early");
     }
 
     #[test]

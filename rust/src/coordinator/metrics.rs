@@ -85,6 +85,17 @@ pub struct EngineMetrics {
     /// refactor; growth here means a dense KV copy crept back onto the
     /// hot path.
     pub gather_bytes: usize,
+    /// Attention tiles elided by the score-bound skip (from
+    /// `StepOutputs::skipped_tiles`). MUST stay 0 under the dense
+    /// default config — skipping only arms when `--skip-threshold` is
+    /// set (window-invisible tiles are outside the schedule and are
+    /// not counted here).
+    pub skipped_tiles: usize,
+    /// KV blocks reclaimed by the sliding-window eviction sweep
+    /// (mirrored from `Scheduler::evicted_blocks` each step). MUST stay
+    /// 0 under the dense default config; under a window it is the
+    /// admission headroom the AIMD controller sees come back.
+    pub evicted_blocks: usize,
     /// Requests shed by the admission layer before any work was
     /// scheduled (queue-full rejections + deadline sheds). Mirrored in
     /// by the router worker loop; stays 0 when the engine is driven
@@ -192,6 +203,8 @@ impl EngineMetrics {
             peak_blocks: self.peak_blocks,
             prefill_dequant_tiles: self.prefill_dequant_tiles,
             gather_bytes: self.gather_bytes,
+            skipped_tiles: self.skipped_tiles,
+            evicted_blocks: self.evicted_blocks,
             shed_count: self.shed_count,
             deadline_miss_count: self.deadline_miss_count,
             concurrency_limit: self.concurrency_limit,
@@ -234,6 +247,12 @@ pub struct RunReport {
     /// Dense f32 bytes materialized by `KvStore::gather` — ≈ 0 in a
     /// healthy engine (gather is test/debug only on the serving path).
     pub gather_bytes: usize,
+    /// Attention tiles elided by the score-bound skip (0 when
+    /// `--skip-threshold` is unset — the dense-default contract).
+    pub skipped_tiles: usize,
+    /// KV blocks reclaimed by sliding-window eviction (0 without
+    /// `--window-blocks`).
+    pub evicted_blocks: usize,
     /// Requests shed by the admission layer before scheduling
     /// (queue-full + deadline); 0 when the engine is driven directly.
     pub shed_count: usize,

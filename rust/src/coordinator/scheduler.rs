@@ -32,6 +32,8 @@
 //! prefill *or* one decode batch, the legacy exclusive policy.
 
 use super::sequence::{SeqPhase, Sequence};
+use crate::attention::SparsityConfig;
+use crate::kvcache::eviction::{EvictionCandidate, EvictionPolicy, LruEviction};
 use crate::kvcache::{BlockAllocator, BlockTable, PrefixCache};
 use std::collections::{BTreeMap, VecDeque};
 
@@ -106,8 +108,16 @@ pub struct Scheduler {
     /// resumes strictly after it (in id order), so no decoding sequence
     /// is ever skipped twice in a row even as the set churns.
     rr_last: u64,
+    /// Preemption-victim selection policy (youngest-admitted first —
+    /// `kvcache::eviction::LruEviction`).
+    eviction: LruEviction,
     /// Total preemptions (engine copies into metrics).
     pub preemptions: usize,
+    /// KV blocks freed by sliding-window eviction
+    /// ([`Scheduler::enforce_window`]) — reclaimed capacity the AIMD
+    /// admission controller sees as headroom. Engine copies into
+    /// metrics.
+    pub evicted_blocks: usize,
     /// Prompt tokens skipped via prefix-cache block adoption at
     /// admission (engine copies into metrics).
     pub prefix_hit_tokens: usize,
@@ -127,7 +137,9 @@ impl Scheduler {
             waiting: VecDeque::new(),
             running: Vec::new(),
             rr_last: 0,
+            eviction: LruEviction,
             preemptions: 0,
+            evicted_blocks: 0,
             prefix_hit_tokens: 0,
             decode_stall_steps: 0,
         }
@@ -297,9 +309,10 @@ impl Scheduler {
                     planned.push(id);
                     continue 'batch;
                 }
-                // Memory pressure: preempt the youngest running sequence.
+                // Memory pressure: the eviction policy picks the victim
+                // (youngest-admitted first under `LruEviction`).
                 let victim = self
-                    .youngest_running()
+                    .select_victim(None)
                     .expect("block pool too small for a single sequence");
                 self.preempt(victim, alloc);
                 evicted.push(victim);
@@ -464,21 +477,64 @@ impl Scheduler {
                 .iter()
                 .copied()
                 .find(|id| self.seqs[id].phase == SeqPhase::Prefilling);
-            let victim = self
-                .running
-                .iter()
-                .copied()
-                .filter(|&v| Some(v) != target)
-                .max_by_key(|&v| self.seqs[&v].arrival);
-            match victim {
+            match self.select_victim(target) {
                 Some(v) => self.preempt(v, alloc),
                 None => return Vec::new(),
             }
         }
     }
 
-    fn youngest_running(&self) -> Option<u64> {
-        self.running.iter().copied().max_by_key(|id| self.seqs[id].arrival)
+    /// Pick the next preemption victim via the eviction policy
+    /// ([`LruEviction`]: youngest-admitted first), sparing `protect`.
+    /// Falls back to raw youngest-by-arrival if the policy declines
+    /// (e.g. every candidate holds zero blocks) so the planner's
+    /// forward-progress guarantee is unchanged.
+    fn select_victim(&self, protect: Option<u64>) -> Option<u64> {
+        let cands: Vec<EvictionCandidate> = self
+            .running
+            .iter()
+            .copied()
+            .filter(|&v| Some(v) != protect)
+            .map(|v| {
+                let s = &self.seqs[&v];
+                EvictionCandidate {
+                    seq_id: v,
+                    blocks_held: s.table.live_blocks(),
+                    arrival: s.arrival,
+                }
+            })
+            .collect();
+        self.eviction
+            .select(&cands, 1)
+            .first()
+            .copied()
+            .or_else(|| cands.iter().max_by_key(|c| c.arrival).map(|c| c.seq_id))
+    }
+
+    /// Sliding-window eviction (the sparsity contract's eviction
+    /// boundary): for every running sequence, tombstone and free the KV
+    /// blocks behind `SparsityConfig::evict_frontier` — blocks that no
+    /// future query of that sequence can ever see, so freeing them is
+    /// numerics-invariant. Returns the number of blocks whose
+    /// reference was released this call (shared prefix blocks only truly
+    /// free once the last holder drops them); the running total is
+    /// [`Scheduler::evicted_blocks`]. No-op (0) under a dense config.
+    pub fn enforce_window(&mut self, sp: &SparsityConfig, alloc: &mut BlockAllocator) -> usize {
+        if !sp.is_windowed() {
+            return 0;
+        }
+        let bs = alloc.block_size();
+        let ids: Vec<u64> = self.running.clone();
+        let mut freed = 0usize;
+        for id in ids {
+            let seq = self.seqs.get_mut(&id).unwrap();
+            // The next query position: decode appends at `table.len()`,
+            // and a mid-prefill chunk resumes there too.
+            let frontier = sp.evict_frontier(seq.table.len(), bs);
+            freed += seq.table.evict_leading(sp.sink_blocks, frontier, alloc);
+        }
+        self.evicted_blocks += freed;
+        freed
     }
 
     /// Recompute-preemption: free blocks, reset the prefill cursor,
@@ -789,5 +845,29 @@ mod tests {
         let mut s = sched(4, 64);
         let mut alloc = BlockAllocator::new(8, 4);
         assert_eq!(s.plan(&mut alloc, None), StepPlan::Idle);
+    }
+
+    #[test]
+    fn enforce_window_frees_behind_the_frontier() {
+        let mut s = sched(4, 64);
+        let bs = 4usize;
+        let mut alloc = BlockAllocator::new(16, bs);
+        s.add(seq(1, 18, 8)); // 5 blocks once prefilled
+        let (p, _) = unpack(s.plan(&mut alloc, None));
+        complete_chunk(&mut s, &p[0], bs);
+        let used_before = alloc.num_used();
+        let sp = SparsityConfig::windowed(2, 1);
+        // next_pos = 18 → query block 4 → frontier 3: blocks 1 and 2 are
+        // behind it (block 0 is the sink, 3..=4 the window).
+        let freed = s.enforce_window(&sp, &mut alloc);
+        assert_eq!(freed, 2);
+        assert_eq!(s.evicted_blocks, 2);
+        assert_eq!(alloc.num_used(), used_before - 2, "evicted blocks return to the pool");
+        // Idempotent at the same position; dense is a no-op.
+        assert_eq!(s.enforce_window(&sp, &mut alloc), 0);
+        assert_eq!(s.enforce_window(&SparsityConfig::dense(), &mut alloc), 0);
+        // The sequence keeps decoding with a tombstoned table.
+        let (_, d) = unpack(s.plan(&mut alloc, None));
+        assert_eq!(d, vec![1]);
     }
 }

@@ -2,6 +2,16 @@
 
 use super::block_allocator::{BlockAllocator, BlockId};
 
+/// Sentinel for a block-table entry whose physical block was **evicted**
+/// under the sliding-window policy (`SparsityConfig`): the entry keeps
+/// its index — logical positions never renumber, so every tile keeps its
+/// absolute `index · block_size` position — but the pool block behind it
+/// has been released. Attention walks step over tombstones (the window
+/// rule already proves them invisible), `free_all`/`fork` skip them, and
+/// `locate` refuses them. `BlockId::MAX` can never be a real block: the
+/// allocator's pool is indexed by `usize` vectors far smaller than 2³².
+pub const TOMBSTONE: BlockId = BlockId::MAX;
+
 /// Maps a sequence's logical KV positions onto physical pool blocks.
 #[derive(Debug, Clone, Default)]
 pub struct BlockTable {
@@ -65,29 +75,76 @@ impl BlockTable {
             self.blocks.len()
         );
         self.len += 1;
-        (self.blocks[bidx], pos % block_size)
+        let b = self.blocks[bidx];
+        debug_assert!(b != TOMBSTONE, "append into an evicted block (pos {pos})");
+        (b, pos % block_size)
     }
 
     /// Physical location of an existing logical position.
     pub fn locate(&self, pos: usize, block_size: usize) -> (BlockId, usize) {
         assert!(pos < self.len, "position {pos} out of range (len {})", self.len);
-        (self.blocks[pos / block_size], pos % block_size)
+        let b = self.blocks[pos / block_size];
+        assert!(b != TOMBSTONE, "locate({pos}) hit an evicted (tombstoned) block");
+        (b, pos % block_size)
     }
 
-    /// Release every block back to the allocator and clear the table.
+    /// Number of entries still backed by a physical block (tombstones
+    /// excluded) — the figure block-accounting (stats, eviction-victim
+    /// sizing) must use on a windowed table.
+    pub fn live_blocks(&self) -> usize {
+        self.blocks.iter().filter(|&&b| b != TOMBSTONE).count()
+    }
+
+    /// Tombstone the leading window-expired entries and release their
+    /// pool blocks: every entry with index in `[sink_blocks, frontier)`
+    /// that still holds a block is replaced by [`TOMBSTONE`] and
+    /// `alloc.release`d (a block shared with another table merely drops
+    /// one reference; it returns to the free list when the last holder
+    /// lets go). Returns the number of entries evicted by this call.
+    ///
+    /// `frontier` is `SparsityConfig::evict_frontier(next_pos)` — the
+    /// exact invisibility boundary: the visibility rule
+    /// `tb + window > query_block` only ever *loses* blocks as the query
+    /// advances, so an entry behind the frontier can never be read again
+    /// and eviction is numerics-invariant by construction (proved by the
+    /// eviction property tests).
+    pub fn evict_leading(
+        &mut self,
+        sink_blocks: usize,
+        frontier: usize,
+        alloc: &mut BlockAllocator,
+    ) -> usize {
+        let hi = frontier.min(self.blocks.len());
+        let mut evicted = 0usize;
+        for b in self.blocks[sink_blocks.min(hi)..hi].iter_mut() {
+            if *b != TOMBSTONE {
+                alloc.release(*b);
+                *b = TOMBSTONE;
+                evicted += 1;
+            }
+        }
+        evicted
+    }
+
+    /// Release every live block back to the allocator and clear the table.
     pub fn free_all(&mut self, alloc: &mut BlockAllocator) {
         for &b in &self.blocks {
-            alloc.release(b);
+            if b != TOMBSTONE {
+                alloc.release(b);
+            }
         }
         self.blocks.clear();
         self.len = 0;
     }
 
-    /// Fork: share all blocks with a child table (copy-on-write prefix
-    /// sharing). The child starts with the same logical length.
+    /// Fork: share all live blocks with a child table (copy-on-write
+    /// prefix sharing; tombstoned entries stay tombstoned in the child).
+    /// The child starts with the same logical length.
     pub fn fork(&self, alloc: &mut BlockAllocator) -> BlockTable {
         for &b in &self.blocks {
-            alloc.share(b);
+            if b != TOMBSTONE {
+                alloc.share(b);
+            }
         }
         self.clone()
     }
@@ -97,6 +154,12 @@ impl BlockTable {
     /// the cache storage can copy the block contents; `None` otherwise.
     pub fn cow_last_block(&mut self, alloc: &mut BlockAllocator) -> Option<(BlockId, BlockId)> {
         let last = *self.blocks.last()?;
+        if last == TOMBSTONE {
+            // The fill block is never evicted (the frontier sits at or
+            // behind the query's own block), so a tombstoned tail means
+            // the next append lands in a block yet to be reserved.
+            return None;
+        }
         if alloc.ref_count(last) <= 1 {
             return None;
         }
@@ -115,6 +178,11 @@ impl BlockTable {
     pub fn adopt_prefix(&mut self, shared: &[BlockId], block_size: usize) {
         assert_eq!(self.len, 0, "adopt_prefix on a filled table");
         assert!(self.blocks.is_empty(), "adopt_prefix on a reserved table");
+        debug_assert!(
+            shared.iter().all(|&b| b != TOMBSTONE),
+            "adopting a prefix with evicted blocks (the prefix cache must \
+             never index a windowed table)"
+        );
         self.blocks.extend_from_slice(shared);
         self.len = shared.len() * block_size;
     }
@@ -237,6 +305,90 @@ mod tests {
         let mut t = BlockTable::new();
         t.reserve(2, &mut alloc);
         assert!(t.cow_last_block(&mut alloc).is_none());
+    }
+
+    #[test]
+    fn evict_leading_tombstones_and_frees() {
+        let mut alloc = BlockAllocator::new(8, 4);
+        let mut t = BlockTable::new();
+        t.reserve(20, &mut alloc); // 5 blocks
+        for _ in 0..20 {
+            t.append_slot(4);
+        }
+        assert_eq!(alloc.num_free(), 3);
+        // Evict [1, 3): indices 1 and 2; sinks (index 0) survive.
+        assert_eq!(t.evict_leading(1, 3, &mut alloc), 2);
+        assert_eq!(alloc.num_free(), 5, "evicted blocks return to the pool");
+        assert_eq!(t.blocks()[1], TOMBSTONE);
+        assert_eq!(t.blocks()[2], TOMBSTONE);
+        assert_ne!(t.blocks()[0], TOMBSTONE);
+        assert_ne!(t.blocks()[3], TOMBSTONE);
+        assert_eq!(t.live_blocks(), 3);
+        assert_eq!(t.len(), 20, "logical positions never renumber");
+        // Idempotent: a second pass over the same range frees nothing.
+        assert_eq!(t.evict_leading(1, 3, &mut alloc), 0);
+        assert_eq!(alloc.num_free(), 5);
+        // A wider frontier only evicts the newly-expired entry.
+        assert_eq!(t.evict_leading(1, 4, &mut alloc), 1);
+        // locate still works on live positions, free_all skips tombstones.
+        let _ = t.locate(0, 4); // sink block
+        let _ = t.locate(17, 4); // tail block
+        t.free_all(&mut alloc);
+        assert_eq!(alloc.num_free(), 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "evicted (tombstoned) block")]
+    fn locate_refuses_evicted_positions() {
+        let mut alloc = BlockAllocator::new(4, 4);
+        let mut t = BlockTable::new();
+        t.reserve(8, &mut alloc);
+        for _ in 0..8 {
+            t.append_slot(4);
+        }
+        t.evict_leading(0, 1, &mut alloc);
+        let _ = t.locate(2, 4);
+    }
+
+    #[test]
+    fn fork_shares_only_live_blocks_and_shared_eviction_defers_free() {
+        let mut alloc = BlockAllocator::new(8, 4);
+        let mut parent = BlockTable::new();
+        parent.reserve(12, &mut alloc); // 3 blocks
+        for _ in 0..12 {
+            parent.append_slot(4);
+        }
+        parent.evict_leading(0, 1, &mut alloc);
+        assert_eq!(alloc.num_free(), 6);
+        let mut child = parent.fork(&mut alloc);
+        assert_eq!(child.blocks()[0], TOMBSTONE, "tombstones survive the fork");
+        assert_eq!(alloc.ref_count(parent.blocks()[1]), 2);
+        // Parent evicts a block the child still reads: one reference
+        // drops, the block stays allocated until the child lets go.
+        let shared = parent.blocks()[1];
+        assert_eq!(parent.evict_leading(0, 2, &mut alloc), 1);
+        assert_eq!(alloc.ref_count(shared), 1);
+        assert_eq!(alloc.num_free(), 6, "child still holds the block");
+        assert_eq!(child.evict_leading(0, 2, &mut alloc), 1);
+        assert_eq!(alloc.num_free(), 7, "last reference frees it");
+        parent.free_all(&mut alloc);
+        child.free_all(&mut alloc);
+        assert_eq!(alloc.num_free(), 8);
+    }
+
+    #[test]
+    fn cow_after_tail_eviction_is_a_noop() {
+        let mut alloc = BlockAllocator::new(4, 4);
+        let mut t = BlockTable::new();
+        t.reserve(8, &mut alloc);
+        for _ in 0..8 {
+            t.append_slot(4);
+        }
+        // Evict everything (window fully advanced past both blocks).
+        t.evict_leading(0, 2, &mut alloc);
+        assert!(t.cow_last_block(&mut alloc).is_none());
+        t.free_all(&mut alloc);
+        assert_eq!(alloc.num_free(), 4);
     }
 
     #[test]

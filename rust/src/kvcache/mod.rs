@@ -25,7 +25,7 @@ pub mod stats;
 pub mod store;
 
 pub use block_allocator::{BlockAllocator, BlockId};
-pub use block_table::BlockTable;
+pub use block_table::{BlockTable, TOMBSTONE};
 pub use contiguous::ContiguousArena;
 pub use eviction::{EvictionPolicy, LruEviction};
 pub use paged::PagedKvCache;

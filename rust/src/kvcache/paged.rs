@@ -41,6 +41,18 @@ pub struct PagedKvCache {
     /// `keys[layer]` is the flat `[num_blocks, block_size, kv_heads, head_dim]` pool.
     keys: Vec<Vec<f32>>,
     values: Vec<Vec<f32>>,
+    /// Running per-(block, kv_head) K ranges, `[num_blocks * kv_heads]`
+    /// per layer — the `KvStore::key_tile_bounds` metadata feeding
+    /// score-bound tile skipping. Initialized to `(0.0, 0.0)`, which
+    /// exactly covers the zeroed pool; a slot-0 write resets the group
+    /// (new tenancy, same protocol as the packed store's grids), later
+    /// writes only widen. NaN keys poison the group to `(−∞, +∞)` so the
+    /// skip test refuses and the kernel's NaN semantics are preserved.
+    /// Deliberately excluded from [`PagedKvCache::pool_bytes`]: that
+    /// figure is the *pool* (the paper's capacity story), and the range
+    /// state is O(blocks · kv_heads) bookkeeping, not payload.
+    k_lo: Vec<Vec<f32>>,
+    k_hi: Vec<Vec<f32>>,
     /// Bytes materialized by [`PagedKvCache::gather`] since construction
     /// — the `CacheStats::gather_bytes` observability feed. Stays 0 on
     /// the serving hot path now that attention streams blocks in place.
@@ -64,6 +76,8 @@ impl PagedKvCache {
             head_dim,
             keys: (0..num_layers).map(|_| vec![0.0; pool]).collect(),
             values: (0..num_layers).map(|_| vec![0.0; pool]).collect(),
+            k_lo: (0..num_layers).map(|_| vec![0.0; num_blocks * kv_heads]).collect(),
+            k_hi: (0..num_layers).map(|_| vec![0.0; num_blocks * kv_heads]).collect(),
             gathered: AtomicUsize::new(0),
         }
     }
@@ -105,6 +119,42 @@ impl PagedKvCache {
         let off = self.offset(block, slot);
         self.keys[layer][off..off + d].copy_from_slice(k);
         self.values[layer][off..off + d].copy_from_slice(v);
+        // Maintain the per-(block, kv_head) K range metadata. Slot 0
+        // starts a tenancy: the group is re-seeded from this token alone
+        // (blocks fill front-to-back, so no earlier live data exists).
+        let hd = self.head_dim;
+        let base = block as usize * self.kv_heads;
+        for head in 0..self.kv_heads {
+            let gi = base + head;
+            let (mut lo, mut hi) = if slot == 0 {
+                (f32::INFINITY, f32::NEG_INFINITY)
+            } else {
+                (self.k_lo[layer][gi], self.k_hi[layer][gi])
+            };
+            let mut poisoned = false;
+            for &x in &k[head * hd..(head + 1) * hd] {
+                poisoned |= x.is_nan();
+                lo = lo.min(x);
+                hi = hi.max(x);
+            }
+            if poisoned {
+                // min/max ignore NaN; widen to the always-sound bound so
+                // the skip test refuses and the NaN reaches the kernel.
+                lo = f32::NEG_INFINITY;
+                hi = f32::INFINITY;
+            }
+            self.k_lo[layer][gi] = lo;
+            self.k_hi[layer][gi] = hi;
+        }
+    }
+
+    /// Elementwise bounds on every K value stored in `(block, kv_head)`
+    /// this tenancy — the [`super::KvStore::key_tile_bounds`] metadata.
+    /// Sound for any read the attention walk performs: reads never pass
+    /// the block's fill point, and every written value was folded in.
+    pub fn key_tile_bounds(&self, layer: usize, block: BlockId, kv_head: usize) -> (f32, f32) {
+        let gi = block as usize * self.kv_heads + kv_head;
+        (self.k_lo[layer][gi], self.k_hi[layer][gi])
     }
 
     /// Read one token's K vector (all kv heads).
@@ -139,10 +189,14 @@ impl PagedKvCache {
     pub fn copy_block(&mut self, src: BlockId, dst: BlockId) {
         let d = self.block_size * self.kv_heads * self.head_dim;
         let (s, t) = (src as usize * d, dst as usize * d);
+        let (gs, gt) = (src as usize * self.kv_heads, dst as usize * self.kv_heads);
+        let kvh = self.kv_heads;
         for layer in 0..self.num_layers {
             let (keys, values) = (&mut self.keys[layer], &mut self.values[layer]);
             keys.copy_within(s..s + d, t);
             values.copy_within(s..s + d, t);
+            self.k_lo[layer].copy_within(gs..gs + kvh, gt);
+            self.k_hi[layer].copy_within(gs..gs + kvh, gt);
         }
     }
 
@@ -241,6 +295,30 @@ mod tests {
         cache.copy_block(b0, b1);
         assert_eq!(cache.key_token(0, b1, 2), &[7.0; 6]);
         assert_eq!(cache.value_token(1, b1, 3), &[10.0; 6]);
+    }
+
+    #[test]
+    fn key_bounds_track_tenancy_and_poison_on_nan() {
+        let mut cache = PagedKvCache::new(1, 2, 4, 2, 3);
+        // Fresh pool: the zeroed blocks are exactly covered.
+        assert_eq!(cache.key_tile_bounds(0, 0, 0), (0.0, 0.0));
+        cache.write_token(0, 0, 0, &[1.0, 2.0, -3.0, 0.5, 0.5, 0.5], &[0.0; 6]);
+        assert_eq!(cache.key_tile_bounds(0, 0, 0), (-3.0, 2.0));
+        assert_eq!(cache.key_tile_bounds(0, 0, 1), (0.5, 0.5));
+        // Later slots only widen.
+        cache.write_token(0, 0, 1, &[4.0, 0.0, 0.0, -9.0, 0.0, 0.0], &[0.0; 6]);
+        assert_eq!(cache.key_tile_bounds(0, 0, 0), (-3.0, 4.0));
+        assert_eq!(cache.key_tile_bounds(0, 0, 1), (-9.0, 0.5));
+        // Slot-0 write = new tenancy: ranges reset, no stale widening.
+        cache.write_token(0, 0, 0, &[0.1; 6], &[0.0; 6]);
+        assert_eq!(cache.key_tile_bounds(0, 0, 0), (0.1, 0.1));
+        // COW copies carry their source's bounds.
+        cache.copy_block(0, 1);
+        assert_eq!(cache.key_tile_bounds(0, 1, 0), (0.1, 0.1));
+        // NaN keys poison to the always-sound (−∞, +∞).
+        cache.write_token(0, 1, 1, &[f32::NAN, 0.0, 0.0, 1.0, 1.0, 1.0], &[0.0; 6]);
+        let (lo, hi) = cache.key_tile_bounds(0, 1, 0);
+        assert_eq!((lo, hi), (f32::NEG_INFINITY, f32::INFINITY));
     }
 
     #[test]

@@ -385,6 +385,23 @@ impl QuantizedPagedKvCache {
         (k, v)
     }
 
+    /// Elementwise bounds on every K value `block_tiles` can decode for
+    /// `(block, kv_head)` — the [`super::KvStore::key_tile_bounds`]
+    /// metadata, derived from the quantization grid itself: a stored
+    /// level is in `0..=2^bits − 1` and decodes to `(level − zero)·scale`
+    /// (monotone in the level, `scale ≥ 0`), so the grid's end levels
+    /// bound everything the dequantizer can produce. The endpoints are
+    /// computed with the *same* f32 arithmetic as
+    /// `packing::unpack_dequant_row`, so the bound is exact, not merely
+    /// conservative — no extra state beyond the grids is needed.
+    pub fn key_tile_bounds(&self, layer: usize, block: BlockId, kv_head: usize) -> (f32, f32) {
+        let gi = self.grid_idx(block, kv_head);
+        let kp = &self.keys[layer];
+        let (scale, zero) = (kp.scales[gi], kp.zeros[gi]);
+        let max_level = (1i32 << KV_PACK_BITS) - 1;
+        ((0 - zero) as f32 * scale, (max_level - zero) as f32 * scale)
+    }
+
     /// Dequantize one token's K and V (all kv heads) into the tails of
     /// `k_out` / `v_out` — the gather building block.
     fn dequant_token(&self, layer: usize, block: BlockId, slot: usize, k_out: &mut [f32], v_out: &mut [f32]) {
@@ -657,6 +674,39 @@ mod tests {
         // Tenancy reset: a slot-0 write pulls the frontier back.
         cache.write_token(0, 0, 0, &[0.3; 4], &[0.0; 4]);
         assert_eq!(cache.keys[0].filled[0], 1);
+    }
+
+    #[test]
+    fn key_bounds_cover_every_decodable_value() {
+        // The grid-derived bound must dominate every value the tile view
+        // can decode — including requant-widened grids and the zero tail
+        // — because that is exactly what the attention kernel reads.
+        let (kvh, d, bs) = (2usize, 4usize, 4usize);
+        let mut cache = QuantizedPagedKvCache::new(1, 2, bs, kvh, d);
+        let mut rng = Rng::new(7);
+        for slot in 0..bs {
+            let mut k = rng.normal_vec(kvh * d, 1.0);
+            if slot == 2 {
+                k[0] = 8.0; // outlier → range refit mid-block
+            }
+            cache.write_token(0, 0, slot, &k, &rng.normal_vec(kvh * d, 1.0));
+        }
+        let (kt, _) = cache.block_tiles(0, 0);
+        let mut kd = vec![0.0f32; bs * kvh * d];
+        kt.dequantize_into(bs, kvh, d, &mut kd);
+        for head in 0..kvh {
+            let (lo, hi) = cache.key_tile_bounds(0, 0, head);
+            assert!(lo.is_finite() && hi.is_finite() && lo <= 0.0 && 0.0 <= hi);
+            for slot in 0..bs {
+                for j in 0..d {
+                    let x = kd[(slot * kvh + head) * d + j];
+                    assert!(lo <= x && x <= hi, "head={head} slot={slot} j={j}: {x} ∉ [{lo}, {hi}]");
+                }
+            }
+        }
+        // An untouched block's pristine grid bounds its all-zero decode.
+        let (lo, hi) = cache.key_tile_bounds(0, 1, 0);
+        assert!(lo <= 0.0 && 0.0 <= hi, "pristine grid must cover zero: [{lo}, {hi}]");
     }
 
     #[test]

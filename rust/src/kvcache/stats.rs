@@ -40,13 +40,17 @@ impl CacheStats {
         let mut table_blocks = 0usize;
         for t in tables {
             used_slots += t.len();
-            table_blocks += t.blocks().len();
+            // Tombstoned (window-evicted) entries hold no pool block.
+            table_blocks += t.live_blocks();
         }
         let allocated_slots = table_blocks * alloc.block_size();
+        // On a windowed table `len` counts evicted logical positions too,
+        // so it can exceed the live allocation — clamp: fragmentation is
+        // a measure of unused *allocated* slots, never negative.
         let internal_frag = if allocated_slots == 0 {
             0.0
         } else {
-            (allocated_slots - used_slots) as f64 / allocated_slots as f64
+            allocated_slots.saturating_sub(used_slots) as f64 / allocated_slots as f64
         };
         CacheStats {
             total_blocks: alloc.num_blocks(),

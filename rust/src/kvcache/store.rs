@@ -92,6 +92,24 @@ pub trait KvStore: Send + Sync + std::fmt::Debug {
     /// One block's K and V in the store's native representation.
     fn block_view(&self, layer: usize, block: BlockId) -> KvBlockView<'_>;
 
+    /// Conservative elementwise bounds `(lo, hi)` on every K value this
+    /// block's view can produce for one KV head — the per-tile metadata
+    /// behind score-bound tile skipping
+    /// (`attention::kernel::Workspace::tile_skippable`).
+    ///
+    /// The contract is *soundness*, not tightness: every element of
+    /// every K row that [`KvStore::block_view`] would expose for
+    /// `(layer, block, kv_head)` must lie in `[lo, hi]`. Returning
+    /// `(−∞, +∞)` is always correct and simply disables skipping for the
+    /// tile, which is why it is the trait default. Both in-tree stores
+    /// override it: the dense pool keeps running per-(block, kv_head)
+    /// ranges, the packed pool derives the bound from its quantization
+    /// grid (every decodable level lies on the grid).
+    fn key_tile_bounds(&self, layer: usize, block: BlockId, kv_head: usize) -> (f32, f32) {
+        let _ = (layer, block, kv_head);
+        (f32::NEG_INFINITY, f32::INFINITY)
+    }
+
     /// Gather a sequence's K and V into contiguous dense
     /// `[len, kv_heads*head_dim]` buffers (dequantized if packed).
     ///
@@ -150,6 +168,9 @@ impl KvStore for PagedKvCache {
     fn block_view(&self, layer: usize, block: BlockId) -> KvBlockView<'_> {
         KvBlockView::F32 { k: self.key_block(layer, block), v: self.value_block(layer, block) }
     }
+    fn key_tile_bounds(&self, layer: usize, block: BlockId, kv_head: usize) -> (f32, f32) {
+        PagedKvCache::key_tile_bounds(self, layer, block, kv_head)
+    }
     fn gather(&self, layer: usize, table: &BlockTable) -> (Vec<f32>, Vec<f32>) {
         PagedKvCache::gather(self, layer, table)
     }
@@ -195,6 +216,9 @@ impl KvStore for QuantizedPagedKvCache {
     fn block_view(&self, layer: usize, block: BlockId) -> KvBlockView<'_> {
         let (k, v) = self.block_tiles(layer, block);
         KvBlockView::Q8 { k, v }
+    }
+    fn key_tile_bounds(&self, layer: usize, block: BlockId, kv_head: usize) -> (f32, f32) {
+        QuantizedPagedKvCache::key_tile_bounds(self, layer, block, kv_head)
     }
     fn gather(&self, layer: usize, table: &BlockTable) -> (Vec<f32>, Vec<f32>) {
         QuantizedPagedKvCache::gather(self, layer, table)

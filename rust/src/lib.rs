@@ -25,7 +25,7 @@
 //! | [`tokenizer`] | byte-level tokenizer (vocab 256 + specials) |
 //! | [`kvcache`] | paged block allocator, block tables, [`kvcache::KvStore`] pools (f32 + packed 8-bit), contiguous baseline, stats |
 //! | [`quant`] | GPTQ (Hessian/Cholesky, error propagation), RTN baseline, int4/int8 packing, fused dequant-matmul ([`quant::matmul`]) |
-//! | [`attention`] | block-tiled group-major kernel core ([`attention::kernel`]) + MHA / GQA / ALiBi / paged drivers |
+//! | [`attention`] | block-tiled group-major kernel core ([`attention::kernel`]) + MHA / GQA / ALiBi / sparsity (windows, sinks, tile skip) / paged drivers |
 //! | [`model`] | Llama-architecture config, [`model::WeightStore`] (dense f32 / packed GPTQ), native forward, sampler |
 //! | [`runtime`] | PJRT client (stubbed offline), artifact manifest, the persistent worker pool (`runtime::pool`), `Backend` trait with the `forward_step` mixed-batch entry point (Native / Xla) |
 //! | [`coordinator`] | sequence state machine, token-budget mixed-step scheduler (interleaved chunked prefill), batcher, router, engine, metrics |
@@ -94,6 +94,27 @@
 //! `tests/attention_parity.rs` bounds the quantized path's output error
 //! (decode and streamed prefill) and `tests/alloc_steadystate.rs`
 //! audits the allocation contract with a counting allocator.
+//!
+//! ## Sparse attention — windows, sinks, score-bound skipping
+//!
+//! [`attention::SparsityConfig`] (dense by default — every parity
+//! baseline assumes it) adds three opt-in mechanisms over the existing
+//! block-tile partition, so prefill and decode agree on visibility by
+//! construction: a **sliding window** plus **sink blocks** clip which
+//! KV tiles a query folds (ALiBi composes untouched); the scheduler
+//! **evicts** KV blocks strictly behind every possible future window
+//! each step (tombstoned in the table, freed to the allocator as
+//! immediate admission headroom — a live sequence's pool usage
+//! plateaus at `sink + window + 1` blocks); and per-(block, kv_head)
+//! key min/max bounds maintained by both [`kvcache::KvStore`] pools
+//! feed a **score-bound tile skip** in the online-softmax pass —
+//! *exact* at `skip_threshold == 0.0` (skips only below f32 `exp`
+//! underflow, bit-identical to the unskipped walk) or lossy with a
+//! tested error bound at an explicit `0 < t < 1`. Enforced by
+//! `tests/sparse_parity.rs` and the eviction/bound properties in
+//! `tests/properties.rs`; `RunReport::{skipped_tiles, evicted_blocks}`
+//! meter both (asserted 0 under the dense default). Full contract:
+//! ARCHITECTURE.md "Sparsity contract".
 //!
 //! ## Weight storage dtypes — packed GPTQ serving
 //!

@@ -20,8 +20,15 @@
 //! reconstruction. `quantize --pack` writes the GPTQ-calibrated packed
 //! artifact instead of the fake-quant dense one. Overload knobs
 //! (serve): `--queue-depth`, `--deadline-ms`, `--target-itl-ms`,
-//! `--max-restarts` — see [`admission_config`].
+//! `--max-restarts` — see [`admission_config`]. Sparsity knobs
+//! (serve/generate, native backend): `--window-blocks W` caps attention
+//! to the last `W` KV blocks (out-of-window blocks are freed back to
+//! the pool), `--sink-blocks S` keeps the first `S` blocks always
+//! visible, `--skip-threshold T` enables score-bound tile skipping
+//! (`0` = provably exact, `0<T<1` = bounded-error threshold mode) — see
+//! [`sparsity_config`].
 
+use opt_gptq::attention::SparsityConfig;
 use opt_gptq::coordinator::{
     AdmissionConfig, AimdConfig, BucketPolicy, EngineConfig, KvCacheDtype, Router, RouterConfig,
     SchedulerConfig, WeightDtype,
@@ -57,10 +64,40 @@ fn main() {
 
 fn model_config(args: &Args) -> ModelConfig {
     let name = args.get_str("model", "tiny");
-    ModelConfig::preset(name).unwrap_or_else(|| {
+    let cfg = ModelConfig::preset(name).unwrap_or_else(|| {
         eprintln!("unknown model preset '{name}' (tiny|small|mini)");
         std::process::exit(2);
-    })
+    });
+    cfg.with_sparsity(sparsity_config(args))
+}
+
+/// Parse the sparse-attention flags into a [`SparsityConfig`]. Defaults
+/// are dense (`window-blocks 0`, `sink-blocks 0`, `skip-threshold -1`),
+/// so a flagless run is bit-identical to every pre-sparsity baseline.
+/// Threshold-mode skipping (`0 < T < 1`) is the only lossy mode and is
+/// reachable **only** through this explicit opt-in flag.
+fn sparsity_config(args: &Args) -> SparsityConfig {
+    let sp = SparsityConfig {
+        window_blocks: args.get_usize("window-blocks", 0),
+        sink_blocks: args.get_usize("sink-blocks", 0),
+        skip_threshold: args.get_f64("skip-threshold", -1.0) as f32,
+    };
+    if sp.skip_threshold >= 1.0 {
+        eprintln!(
+            "--skip-threshold must be below 1 (0 = exact skipping, 0<T<1 = lossy threshold \
+             mode, negative = off), got {}",
+            sp.skip_threshold
+        );
+        std::process::exit(2);
+    }
+    if !sp.is_dense() && args.flag("xla") {
+        eprintln!(
+            "--window-blocks/--sink-blocks/--skip-threshold require the native backend \
+             (the XLA decode HLO walks the full block table)"
+        );
+        std::process::exit(2);
+    }
+    sp
 }
 
 fn weight_dtype(args: &Args) -> WeightDtype {
@@ -85,8 +122,10 @@ fn weight_dtype(args: &Args) -> WeightDtype {
 /// model is Arc-backed — `serve` loads once and clones per worker.
 fn load_weights_model(args: &Args, cfg: &ModelConfig) -> Option<NativeModel> {
     let path = args.get("weights")?;
+    // Shape comparison only: sparsity is a runtime knob, never artifact
+    // state, so a windowed serve of a dense-saved artifact is fine.
     let check_config = |loaded: &ModelConfig| {
-        if loaded != cfg {
+        if !loaded.shape_eq(cfg) {
             eprintln!(
                 "--weights {path} holds a different model shape than --model {} — \
                  pass the preset the artifact was quantized from",

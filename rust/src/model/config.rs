@@ -1,6 +1,7 @@
 //! Model shape configuration and presets.
 
 use crate::attention::gqa::{AttnConfig, Bias};
+use crate::attention::sparsity::SparsityConfig;
 
 /// Llama-style decoder configuration.
 ///
@@ -21,6 +22,13 @@ pub struct ModelConfig {
     /// ALiBi position bias (paper config) vs pure causal.
     pub alibi: bool,
     pub rms_eps: f32,
+    /// Sliding-window/sink/skip attention sparsity (CLI
+    /// `--window-blocks`/`--sink-blocks`/`--skip-threshold`). Dense by
+    /// default; a **runtime serving knob**, not part of the weight
+    /// artifact — `ModelWeights::save`/`load` neither writes nor reads
+    /// it, and artifact config checks compare shapes with
+    /// [`ModelConfig::shape_eq`].
+    pub sparsity: SparsityConfig,
 }
 
 impl ModelConfig {
@@ -46,7 +54,22 @@ impl ModelConfig {
             num_kv_heads: self.n_kv_heads,
             head_dim: self.head_dim(),
             bias: if self.alibi { Bias::Alibi } else { Bias::None },
+            sparsity: self.sparsity,
         }
+    }
+
+    /// Shape equality — every field except the runtime [`SparsityConfig`]
+    /// knob. Weight artifacts pin the shape, not the serving policy, so
+    /// loaders compare with this instead of `==`.
+    pub fn shape_eq(&self, other: &ModelConfig) -> bool {
+        ModelConfig { sparsity: SparsityConfig::dense(), ..*self }
+            == ModelConfig { sparsity: SparsityConfig::dense(), ..*other }
+    }
+
+    /// This config with a different sparsity policy (builder-style, for
+    /// CLI flag application after a preset/artifact lookup).
+    pub fn with_sparsity(&self, sparsity: SparsityConfig) -> ModelConfig {
+        ModelConfig { sparsity, ..*self }
     }
 
     /// Total parameter count.
@@ -87,6 +110,7 @@ impl ModelConfig {
             max_seq: 256,
             alibi: true,
             rms_eps: 1e-5,
+            sparsity: SparsityConfig::dense(),
         }
     }
 
@@ -102,6 +126,7 @@ impl ModelConfig {
             max_seq: 1024,
             alibi: true,
             rms_eps: 1e-5,
+            sparsity: SparsityConfig::dense(),
         }
     }
 
@@ -118,6 +143,7 @@ impl ModelConfig {
             max_seq: 2048,
             alibi: true,
             rms_eps: 1e-5,
+            sparsity: SparsityConfig::dense(),
         }
     }
 

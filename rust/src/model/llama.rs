@@ -200,7 +200,7 @@ impl NativeModel {
         cache: &mut dyn KvStore,
         tables: &mut [&mut BlockTable],
     ) -> Vec<Vec<f32>> {
-        self.decode_batch_with(tokens, cache, tables, None)
+        self.decode_batch_with(tokens, cache, tables, None).0
     }
 
     /// [`Self::decode_batch`] with an explicit attention fan-out width.
@@ -209,13 +209,18 @@ impl NativeModel {
     /// from the batch's KV footprint and the available cores. Outputs
     /// are bit-identical across all widths (see
     /// [`paged_decode_batch`]), so threading never perturbs sampling.
+    ///
+    /// Returns `(logits, skipped_tiles)`: one logits vector per
+    /// sequence, plus the step's score-bound tile skips summed across
+    /// layers (0 under a dense [`crate::attention::SparsityConfig`] —
+    /// the decode-side `EngineMetrics::skipped_tiles` feed).
     pub fn decode_batch_with(
         &self,
         tokens: &[u32],
         cache: &mut dyn KvStore,
         tables: &mut [&mut BlockTable],
         threads: Option<usize>,
-    ) -> Vec<Vec<f32>> {
+    ) -> (Vec<Vec<f32>>, usize) {
         let cfg = self.config();
         let n = tokens.len();
         assert_eq!(n, tables.len());
@@ -234,6 +239,7 @@ impl NativeModel {
         // One attention output buffer reused across layers (fully
         // overwritten by every paged_decode_batch call).
         let mut attn = Tensor::zeros(&[n, cfg.d_model]);
+        let mut skipped_tiles = 0usize;
         for li in 0..cfg.n_layers {
             let xn = rmsnorm(&x, self.store.rms_attn(li), cfg.rms_eps);
             let q = self.proj(li, Proj::Wq, &xn); // [n, d]
@@ -250,7 +256,8 @@ impl NativeModel {
             }
             // Attention is per-sequence (distinct block tables): fan the
             // batch across scoped workers, one workspace each.
-            paged_decode_batch(&acfg, cache, li, q.data(), &table_refs, threads, attn.data_mut());
+            skipped_tiles +=
+                paged_decode_batch(&acfg, cache, li, q.data(), &table_refs, threads, attn.data_mut());
             let attn_out = self.proj(li, Proj::Wo, &attn);
             x.add_assign(&attn_out);
             let xn2 = rmsnorm(&x, self.store.rms_mlp(li), cfg.rms_eps);
@@ -260,7 +267,7 @@ impl NativeModel {
         // Final norm + LM head for every row at once.
         let normed = rmsnorm(&x, self.store.final_norm(), cfg.rms_eps);
         let logits = normed.matmul_nt(self.store.lm_head()); // [n, vocab]
-        (0..n).map(|i| logits.row(i).to_vec()).collect()
+        ((0..n).map(|i| logits.row(i).to_vec()).collect(), skipped_tiles)
     }
 
     /// One fused **mixed step**: prefill chunk rows and decode rows run
@@ -286,9 +293,12 @@ impl NativeModel {
     /// same cache state — interleaving never perturbs sampling.
     ///
     /// Returns (per-chunk last-position logits — `Some` iff wanted —
-    /// per-decode logits, and the number of quantized KV tiles the
-    /// prefill side dequantized — 0 on an f32 cache; the
-    /// `EngineMetrics::prefill_dequant_tiles` feed).
+    /// per-decode logits, the number of quantized KV tiles the prefill
+    /// side dequantized — 0 on an f32 cache; the
+    /// `EngineMetrics::prefill_dequant_tiles` feed — and the step's
+    /// score-bound tile skips across both sides and all layers — 0
+    /// under a dense sparsity config; the `EngineMetrics::skipped_tiles`
+    /// feed).
     #[allow(clippy::too_many_arguments)]
     pub fn forward_mixed(
         &self,
@@ -300,7 +310,7 @@ impl NativeModel {
         cache: &mut dyn KvStore,
         prefill_threads: Option<usize>,
         decode_threads: Option<usize>,
-    ) -> (Vec<Option<Vec<f32>>>, Vec<Vec<f32>>, usize) {
+    ) -> (Vec<Option<Vec<f32>>>, Vec<Vec<f32>>, usize, usize) {
         let cfg = self.config();
         let n_c = chunk_tokens.len();
         assert_eq!(n_c, chunk_tables.len());
@@ -311,13 +321,11 @@ impl NativeModel {
         // numerics; also the path audited by the zero-alloc test).
         if n_c == 0 {
             if n_d == 0 {
-                return (Vec::new(), Vec::new(), 0);
+                return (Vec::new(), Vec::new(), 0, 0);
             }
-            return (
-                Vec::new(),
-                self.decode_batch_with(decode_tokens, cache, decode_tables, decode_threads),
-                0,
-            );
+            let (logits, skipped) =
+                self.decode_batch_with(decode_tokens, cache, decode_tables, decode_threads);
+            return (Vec::new(), logits, 0, skipped);
         }
         let chunk_rows: Vec<usize> = chunk_tokens.iter().map(|t| t.len()).collect();
         assert!(chunk_rows.iter().all(|&r| r > 0), "empty prefill chunk");
@@ -366,6 +374,7 @@ impl NativeModel {
         let acfg = cfg.attn_config();
         let row = cfg.d_model;
         let mut dequant_tiles = 0usize;
+        let mut skipped_tiles = 0usize;
 
         let mut x = self.embed_tokens(&all_tokens); // [n, d]
         let mut attn = Tensor::zeros(&[n, cfg.d_model]);
@@ -390,7 +399,7 @@ impl NativeModel {
             for ci in 0..n_c {
                 let rows = chunk_rows[ci];
                 let base = chunk_base[ci];
-                dequant_tiles += paged_prefill_rows_parallel(
+                let (dq, sk) = paged_prefill_rows_parallel(
                     &acfg,
                     &*cache,
                     li,
@@ -401,11 +410,13 @@ impl NativeModel {
                     threads_c[ci],
                     &mut attn.data_mut()[r0 * row..(r0 + rows) * row],
                 );
+                dequant_tiles += dq;
+                skipped_tiles += sk;
                 r0 += rows;
             }
             // Decode rows: the per-sequence paged fan-out.
             if n_d > 0 {
-                paged_decode_batch(
+                skipped_tiles += paged_decode_batch(
                     &acfg,
                     cache,
                     li,
@@ -438,7 +449,7 @@ impl NativeModel {
         }
         if sel_rows.is_empty() {
             // Only mid-flight chunks this step: no logits needed at all.
-            return (vec![None; n_c], Vec::new(), dequant_tiles);
+            return (vec![None; n_c], Vec::new(), dequant_tiles, skipped_tiles);
         }
         let mut sel = Vec::with_capacity(sel_rows.len() * cfg.d_model);
         for &r in &sel_rows {
@@ -458,7 +469,7 @@ impl NativeModel {
             })
             .collect();
         let decode_logits = (0..n_d).map(|i| logits.row(n_want + i).to_vec()).collect();
-        (chunk_logits, decode_logits, dequant_tiles)
+        (chunk_logits, decode_logits, dequant_tiles, skipped_tiles)
     }
 
     /// Final norm + LM head on the last row only (decode never needs the
@@ -667,7 +678,7 @@ mod tests {
 
             let mut cache_mix = mk_cache();
             let (mut ta2, mut tb2) = setup(cache_mix.as_mut());
-            let (chunk_logits, dec_logits, dq_tiles) = model.forward_mixed(
+            let (chunk_logits, dec_logits, dq_tiles, skipped) = model.forward_mixed(
                 &[&b_tokens[3..]],
                 &mut [&mut tb2],
                 &[true],
@@ -688,6 +699,7 @@ mod tests {
                 quant,
                 "prefill dequant tiles counted iff the cache is packed"
             );
+            assert_eq!(skipped, 0, "dense default must never skip a tile");
             // Cache contents match too (gathers are dense dumps).
             for li in 0..cfg.n_layers {
                 assert_eq!(cache_ref.gather(li, &tb1), cache_mix.gather(li, &tb2), "layer {li}");
@@ -733,6 +745,7 @@ mod tests {
         assert_eq!(serial.0.len(), 2);
         assert_eq!(serial.1.len(), 2);
         assert_eq!(serial.2, 0, "f32 cache dequantizes no tiles");
+        assert_eq!(serial.3, 0, "dense default must never skip a tile");
         assert!(serial.0[0].as_ref().unwrap().iter().all(|v| v.is_finite()));
     }
 

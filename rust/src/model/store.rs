@@ -427,6 +427,9 @@ impl PackedModelWeights {
             max_seq,
             alibi,
             rms_eps,
+            // Runtime serving knob, never artifact state (see
+            // `ModelConfig::sparsity`).
+            sparsity: Default::default(),
         };
         // Config sanity before any dimension math (kv_dim/head_dim
         // assert on these; a corrupt header must error, not panic).

@@ -193,6 +193,10 @@ impl ModelWeights {
             max_seq,
             alibi,
             rms_eps: f32::from_le_bytes(eps_b),
+            // Sparsity is a runtime serving knob, not artifact state:
+            // loaded weights always come back dense and the caller
+            // applies its CLI policy afterwards (`with_sparsity`).
+            sparsity: Default::default(),
         };
         let read_f32s = |f: &mut dyn Read, n: usize| -> Result<Vec<f32>> {
             let mut bytes = vec![0u8; n * 4];

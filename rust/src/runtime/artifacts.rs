@@ -58,6 +58,9 @@ impl ArtifactManifest {
             max_seq: req("max_seq")?,
             alibi: cfg.get("alibi").and_then(|b| b.as_bool()).context("config missing 'alibi'")?,
             rms_eps: cfg.get_f64("rms_eps").context("config missing 'rms_eps'")? as f32,
+            // Runtime serving knob, never artifact state (see
+            // `ModelConfig::sparsity`).
+            sparsity: Default::default(),
         };
         let mut entries = Vec::new();
         for e in v.get("entries").and_then(|e| e.as_arr()).context("manifest missing 'entries'")? {

@@ -47,6 +47,12 @@ pub struct StepOutputs {
     /// attention (0 on an f32 cache or a backend without the counter) —
     /// mirrored into `EngineMetrics::prefill_dequant_tiles`.
     pub prefill_dequant_tiles: usize,
+    /// KV tiles elided by score-bound skipping across the step's prefill
+    /// and decode attention (0 under a dense sparsity config or on a
+    /// backend without the counter) — mirrored into
+    /// `EngineMetrics::skipped_tiles`. Window-invisible tiles are not
+    /// counted: they are outside the schedule, not skipped.
+    pub skipped_tiles: usize,
 }
 
 /// A model-execution backend the engine can drive.
@@ -91,7 +97,7 @@ pub trait Backend: Send {
         } else {
             self.decode(&mut batch.decode, cache)
         };
-        StepOutputs { prefill_logits, decode_logits, prefill_dequant_tiles: 0 }
+        StepOutputs { prefill_logits, decode_logits, prefill_dequant_tiles: 0, skipped_tiles: 0 }
     }
 
     /// Whether `forward_step` executes interleaved chunked prefill
@@ -220,7 +226,7 @@ impl Backend for NativeBackend {
         let tokens: Vec<u32> = items.iter().map(|i| i.token).collect();
         let mut tables: Vec<&mut BlockTable> =
             items.iter_mut().map(|i| &mut *i.table).collect();
-        self.model.decode_batch_with(&tokens, cache, &mut tables, self.decode_width())
+        self.model.decode_batch_with(&tokens, cache, &mut tables, self.decode_width()).0
     }
 
     fn forward_step(&self, batch: &mut MixedBatch<'_>, cache: &mut dyn KvStore) -> StepOutputs {
@@ -237,17 +243,18 @@ impl Backend for NativeBackend {
         let decode_tokens: Vec<u32> = batch.decode.iter().map(|i| i.token).collect();
         let mut decode_tables: Vec<&mut BlockTable> =
             batch.decode.iter_mut().map(|i| &mut *i.table).collect();
-        let (prefill_logits, decode_logits, prefill_dequant_tiles) = self.model.forward_mixed(
-            &chunk_tokens,
-            &mut chunk_tables,
-            &want,
-            &decode_tokens,
-            &mut decode_tables,
-            cache,
-            self.prefill_width(),
-            self.decode_width(),
-        );
-        StepOutputs { prefill_logits, decode_logits, prefill_dequant_tiles }
+        let (prefill_logits, decode_logits, prefill_dequant_tiles, skipped_tiles) =
+            self.model.forward_mixed(
+                &chunk_tokens,
+                &mut chunk_tables,
+                &want,
+                &decode_tokens,
+                &mut decode_tables,
+                cache,
+                self.prefill_width(),
+                self.decode_width(),
+            );
+        StepOutputs { prefill_logits, decode_logits, prefill_dequant_tiles, skipped_tiles }
     }
 
     fn supports_mixed_step(&self) -> bool {

@@ -60,7 +60,7 @@ unsafe impl Send for XlaBackend {}
 impl XlaBackend {
     /// Load every artifact in `manifest`, compile, and upload `weights`.
     pub fn load(manifest: ArtifactManifest, weights: &ModelWeights) -> Result<XlaBackend> {
-        if weights.config != manifest.config {
+        if !weights.config.shape_eq(&manifest.config) {
             bail!(
                 "weights config {:?} != artifact config {:?}",
                 weights.config,

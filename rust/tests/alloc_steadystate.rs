@@ -82,7 +82,7 @@ fn count_allocs(f: impl FnOnce()) -> u64 {
 #[test]
 fn steady_state_decode_attention_allocates_nothing() {
     let (h, kvh, d, block_size, kv_len) = (8usize, 2usize, 16usize, 8usize, 40usize);
-    let cfg = AttnConfig { num_heads: h, num_kv_heads: kvh, head_dim: d, bias: Bias::Alibi };
+    let cfg = AttnConfig::dense(h, kvh, d, Bias::Alibi);
     let num_blocks = kv_len.div_ceil(block_size) + 1;
     let mut fcache = PagedKvCache::new(1, num_blocks, block_size, kvh, d);
     let mut qcache = QuantizedPagedKvCache::new(1, num_blocks, block_size, kvh, d);

@@ -31,7 +31,7 @@ fn check_prefill_vs_paged(
     seed: u64,
 ) -> Result<(), String> {
     let kv_len = q_offset + q_len;
-    let cfg = AttnConfig { num_heads: h, num_kv_heads: kvh, head_dim: d, bias };
+    let cfg = AttnConfig::dense(h, kvh, d, bias);
     let mut rng = Rng::new(seed);
     let k = rng.normal_vec(kv_len * kvh * d, 1.0);
     let v = rng.normal_vec(kv_len * kvh * d, 1.0);
@@ -98,7 +98,7 @@ fn prop_prefill_matches_paged_decode_random_shapes() {
 #[test]
 fn batch_decode_bit_identical_across_thread_counts() {
     let (h, kvh, d, block_size) = (8usize, 2usize, 16usize, 8usize);
-    let cfg = AttnConfig { num_heads: h, num_kv_heads: kvh, head_dim: d, bias: Bias::Alibi };
+    let cfg = AttnConfig::dense(h, kvh, d, Bias::Alibi);
     let lens = [5usize, 17, 32, 9, 40, 1, 23];
     let n = lens.len();
     let total_blocks: usize = lens.iter().map(|l| l.div_ceil(block_size)).sum::<usize>() + 1;
@@ -149,7 +149,7 @@ fn quantized_vs_f32_decode_err(
     sigma: f32,
     seed: u64,
 ) -> f32 {
-    let cfg = AttnConfig { num_heads: h, num_kv_heads: kvh, head_dim: d, bias };
+    let cfg = AttnConfig::dense(h, kvh, d, bias);
     let num_blocks = kv_len.div_ceil(block_size) + 1;
     let mut fcache = PagedKvCache::new(1, num_blocks, block_size, kvh, d);
     let mut qcache = QuantizedPagedKvCache::new(1, num_blocks, block_size, kvh, d);
@@ -210,7 +210,7 @@ fn quantized_vs_f32_streamed_prefill_err(
     sigma: f32,
     seed: u64,
 ) -> f32 {
-    let cfg = AttnConfig { num_heads: h, num_kv_heads: kvh, head_dim: d, bias };
+    let cfg = AttnConfig::dense(h, kvh, d, bias);
     let q_len = q_len.min(kv_len);
     let q_offset = kv_len - q_len;
     let num_blocks = kv_len.div_ceil(block_size) + 1;
@@ -270,7 +270,7 @@ fn streamed_prefill_threads_bit_identical_both_dtypes() {
     // walk) must produce byte-identical output on BOTH stores — the
     // thread-width determinism contract extended to streamed prefill.
     let (h, kvh, d, block_size) = (8usize, 2usize, 16usize, 8usize);
-    let cfg = AttnConfig { num_heads: h, num_kv_heads: kvh, head_dim: d, bias: Bias::Alibi };
+    let cfg = AttnConfig::dense(h, kvh, d, Bias::Alibi);
     let (kv_len, q_len) = (45usize, 21usize);
     let q_offset = kv_len - q_len;
     let num_blocks = kv_len.div_ceil(block_size) + 1;
@@ -351,7 +351,7 @@ fn caller_owned_workspace_reuse_matches_fresh() {
         &[(8usize, 2usize, 4usize, 33usize), (2, 1, 2, 5), (8, 4, 3, 70), (4, 4, 1, 1)]
     {
         let d = 8;
-        let cfg = AttnConfig { num_heads: h, num_kv_heads: kvh, head_dim: d, bias: Bias::Alibi };
+        let cfg = AttnConfig::dense(h, kvh, d, Bias::Alibi);
         let q = rng.normal_vec(q_len * h * d, 1.0);
         let k = rng.normal_vec(kv_len * kvh * d, 1.0);
         let v = rng.normal_vec(kv_len * kvh * d, 1.0);

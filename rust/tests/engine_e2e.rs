@@ -167,6 +167,11 @@ fn report_accounts_every_token() {
     let window = r.latency_s;
     assert!((r.all_tok_per_s * window - all_tokens as f64).abs() < 1.0);
     assert!((r.gen_tok_per_s * window - gen_tokens as f64).abs() < 1.0);
+    // The dense-default sparsity contract through the whole stack: no
+    // engine run without --window-blocks/--skip-threshold may skip a
+    // tile or evict a block.
+    assert_eq!(r.skipped_tiles, 0, "dense default skipped an attention tile");
+    assert_eq!(r.evicted_blocks, 0, "dense default evicted a KV block");
 }
 
 #[test]

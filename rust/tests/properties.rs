@@ -3,8 +3,12 @@
 
 use opt_gptq::attention::gqa::{gqa_attention, AttnConfig, Bias};
 use opt_gptq::attention::paged::paged_decode_attention;
+use opt_gptq::attention::SparsityConfig;
 use opt_gptq::coordinator::{BucketPolicy, Engine, EngineConfig, SchedulerConfig};
-use opt_gptq::kvcache::{BlockAllocator, BlockTable, PagedKvCache};
+use opt_gptq::kvcache::{
+    BlockAllocator, BlockTable, KvBlockView, KvStore, PagedKvCache, QuantizedPagedKvCache,
+    TOMBSTONE,
+};
 use opt_gptq::model::{ModelConfig, ModelWeights, NativeModel, SamplingParams};
 use opt_gptq::runtime::NativeBackend;
 use opt_gptq::util::json;
@@ -90,7 +94,7 @@ fn prop_paged_equals_contiguous_attention() {
         let block_size = g.usize_in(1, 8);
         let kv_len = g.usize_in(1, 30);
         let bias = if g.bool() { Bias::Alibi } else { Bias::None };
-        let cfg = AttnConfig { num_heads: h, num_kv_heads: kvh, head_dim: d, bias };
+        let cfg = AttnConfig::dense(h, kvh, d, bias);
 
         let num_blocks = kv_len.div_ceil(block_size) + 1;
         let mut cache = PagedKvCache::new(1, num_blocks, block_size, kvh, d);
@@ -218,6 +222,169 @@ fn prop_json_roundtrip() {
 }
 
 #[test]
+fn prop_window_eviction_never_frees_a_live_block() {
+    // For any (block_size, window, sink, length): evicting behind the
+    // frontier (a) returns exactly the freed blocks to the allocator,
+    // (b) tombstones only blocks invisible to EVERY present and future
+    // query, and (c) leaves every block in sink ∪ window of the current
+    // position untouched.
+    forall("eviction-safety", 0xE71C7, 80, |g| {
+        let bs = g.usize_in(1, 8);
+        let w = g.usize_in(1, 6);
+        let sink = g.usize_in(0, 3);
+        let sp = SparsityConfig::windowed(w, sink);
+        let len = g.usize_in(1, 120);
+        let nblocks = len.div_ceil(bs) + 2;
+        let mut alloc = BlockAllocator::new(nblocks, bs);
+        let mut t = BlockTable::new();
+        if !t.reserve(len, &mut alloc) {
+            return Err("reserve failed".into());
+        }
+        for _ in 0..len {
+            t.append_slot(bs);
+        }
+        let free_before = alloc.num_free();
+        let frontier = sp.evict_frontier(t.len(), bs);
+        let freed = t.evict_leading(sp.sink_blocks, frontier, &mut alloc);
+        if alloc.num_free() != free_before + freed {
+            return Err(format!(
+                "allocator recovered {} of {freed} freed blocks",
+                alloc.num_free() - free_before
+            ));
+        }
+        let qb = (len - 1) / bs;
+        for (i, &b) in t.blocks().iter().enumerate() {
+            if b == TOMBSTONE {
+                if i < sink {
+                    return Err(format!("sink block {i} evicted"));
+                }
+                // Dead for the current query and every future one.
+                for q_pos in (len - 1)..(len + 2 * bs * (w + sink + 2)) {
+                    if sp.block_visible(i, q_pos / bs) {
+                        return Err(format!(
+                            "evicted block {i} visible at q_pos {q_pos} (len {len})"
+                        ));
+                    }
+                }
+            }
+        }
+        // Everything visible to the current query survived.
+        for (i, &b) in t.blocks().iter().enumerate() {
+            if sp.block_visible(i, qb) && b == TOMBSTONE {
+                return Err(format!("live-window block {i} evicted (qb {qb})"));
+            }
+        }
+        t.free_all(&mut alloc);
+        if alloc.num_free() != alloc.num_blocks() {
+            return Err("pool did not fully recover after free_all".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_window_eviction_free_count_monotonically_recovers() {
+    // Token-by-token growth with a per-step eviction sweep: each sweep
+    // only ever returns blocks (never takes), and the live footprint
+    // stays plateaued at sink + window + 1 blocks no matter how long
+    // the sequence runs — the long-context memory claim as a property.
+    forall("eviction-plateau", 0xF4EE, 40, |g| {
+        let bs = g.usize_in(1, 6);
+        let w = g.usize_in(1, 4);
+        let sink = g.usize_in(0, 2);
+        let sp = SparsityConfig::windowed(w, sink);
+        let steps = g.usize_in(1, 100);
+        let mut alloc = BlockAllocator::new(steps.div_ceil(bs) + 2, bs);
+        let mut t = BlockTable::new();
+        for _ in 0..steps {
+            if !t.reserve(1, &mut alloc) {
+                return Err("reserve failed mid-growth".into());
+            }
+            t.append_slot(bs);
+            let free_before = alloc.num_free();
+            let freed = t.evict_leading(sp.sink_blocks, sp.evict_frontier(t.len(), bs), &mut alloc);
+            if alloc.num_free() < free_before {
+                return Err("eviction sweep consumed blocks".into());
+            }
+            if alloc.num_free() != free_before + freed {
+                return Err("freed blocks not returned to the allocator".into());
+            }
+            if t.live_blocks() > sink + w + 1 {
+                return Err(format!(
+                    "live footprint {} exceeds plateau {} at len {}",
+                    t.live_blocks(),
+                    sink + w + 1,
+                    t.len()
+                ));
+            }
+        }
+        t.free_all(&mut alloc);
+        if alloc.num_free() != alloc.num_blocks() {
+            return Err("pool did not fully recover".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_key_tile_bounds_stay_sound_under_append_and_tenancy_reset() {
+    // Both KvStore impls' per-tile K metadata must remain a SOUND bound:
+    // after any sequence of appends — including slot-0 rewrites (a freed
+    // block re-tenanted by a new sequence) and outlier keys that force
+    // the q8 store's streaming requant to widen its grid — every stored
+    // key the walk can read back lies within key_tile_bounds.
+    forall("key-bounds-sound", 0x5EEDB, 40, |g| {
+        let kvh = [1, 2][g.usize_in(0, 1)];
+        let d = 4;
+        let bs = g.usize_in(1, 6);
+        let rs = kvh * d;
+        for quant in [false, true] {
+            let mut cache: Box<dyn KvStore> = if quant {
+                Box::new(QuantizedPagedKvCache::new(1, 2, bs, kvh, d))
+            } else {
+                Box::new(PagedKvCache::new(1, 2, bs, kvh, d))
+            };
+            for block in 0..2u32 {
+                for _tenancy in 0..g.usize_in(1, 3) {
+                    let n = g.usize_in(1, bs);
+                    for s in 0..n {
+                        // Occasional outliers exercise grid widening.
+                        let mag = if g.bool() { 8.0 } else { 0.5 };
+                        let k = g.vec_f32(rs, -mag, mag);
+                        let v = g.vec_f32(rs, -1.0, 1.0);
+                        cache.write_token(0, block, s, &k, &v);
+                        // Read the tile back exactly as the walk would and
+                        // check every key against the advertised bounds.
+                        let stored: Vec<f32> = match cache.block_view(0, block) {
+                            KvBlockView::F32 { k, .. } => k[..(s + 1) * rs].to_vec(),
+                            KvBlockView::Q8 { k, .. } => {
+                                let mut buf = vec![0.0f32; (s + 1) * rs];
+                                k.dequantize_into(s + 1, kvh, d, &mut buf);
+                                buf
+                            }
+                        };
+                        for head in 0..kvh {
+                            let (lo, hi) = cache.key_tile_bounds(0, block, head);
+                            for slot in 0..=s {
+                                for x in &stored[slot * rs + head * d..slot * rs + (head + 1) * d] {
+                                    if *x < lo || *x > hi {
+                                        return Err(format!(
+                                            "quant={quant} block={block} slot={slot} head={head}: \
+                                             key {x} outside bounds ({lo}, {hi})"
+                                        ));
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_gqa_grouping_reduces_kv_memory_linearly() {
     // KV bytes scale exactly with kv_heads — the paper's §II.C claim as a
     // property over random configs.
@@ -226,8 +393,8 @@ fn prop_gqa_grouping_reduces_kv_memory_linearly() {
         let gsz = 1 << g.usize_in(0, 2); // 1..4
         let h = kvh * gsz;
         let d = 8 * g.usize_in(1, 8);
-        let grouped = AttnConfig { num_heads: h, num_kv_heads: kvh, head_dim: d, bias: Bias::None };
-        let full = AttnConfig { num_heads: h, num_kv_heads: h, head_dim: d, bias: Bias::None };
+        let grouped = AttnConfig::dense(h, kvh, d, Bias::None);
+        let full = AttnConfig::dense(h, h, d, Bias::None);
         let a = opt_gptq::attention::gqa::kv_bytes_per_token(&grouped) * gsz;
         let b = opt_gptq::attention::gqa::kv_bytes_per_token(&full);
         if a != b {

@@ -1,0 +1,358 @@
+//! Sparse-attention accuracy harness — the PR's acceptance contract.
+//!
+//! Three claims, each stated as a parity test against the dense (or
+//! skip-free) twin of the same computation:
+//!
+//! 1. **window = ∞ ⇒ dense**: a huge `window_blocks` (with or without
+//!    sinks) must be *bit-identical* to the dense default — across
+//!    thread widths, KV cache dtypes, and mixed/exclusive scheduling —
+//!    because visibility then never clips anything and the walks
+//!    execute the exact same instruction stream.
+//! 2. **exact skip ⇒ no-op**: with `skip_threshold == 0.0` a tile is
+//!    skipped only when every softmax weight provably underflows to
+//!    `0.0f32` and the running max cannot move, so outputs stay
+//!    bit-identical to the skip-free walk even on adversarial score
+//!    grids (σ sweeps, long-range outliers) — while actually skipping.
+//! 3. **threshold mode ⇒ bounded error**: `skip_threshold = t` drops
+//!    tiles whose per-slot weight bound (relative to the running max)
+//!    is below `t`, so the normalized dropped mass — and therefore the
+//!    output perturbation — is bounded by `kv_len · t · max|v|`.
+
+use opt_gptq::attention::kernel::with_workspace;
+use opt_gptq::attention::paged::{
+    paged_decode_attention, paged_decode_attention_into, paged_prefill_rows_parallel,
+};
+use opt_gptq::attention::{AttnConfig, Bias, SparsityConfig};
+use opt_gptq::coordinator::{
+    BucketPolicy, Engine, EngineConfig, KvCacheDtype, SchedulerConfig, WeightDtype,
+};
+use opt_gptq::kvcache::{
+    BlockAllocator, BlockTable, KvStore, PagedKvCache, QuantizedPagedKvCache,
+};
+use opt_gptq::model::{ModelConfig, ModelWeights, NativeModel, SamplingParams};
+use opt_gptq::runtime::NativeBackend;
+use opt_gptq::util::rng::Rng;
+
+const BLOCK: usize = 4;
+
+/// One-layer cache of the requested dtype, filled with `kv_len` tokens
+/// of the given per-token K/V rows.
+fn cache_with(
+    quant: bool,
+    kvh: usize,
+    d: usize,
+    keys: &[f32],
+    vals: &[f32],
+) -> (Box<dyn KvStore>, BlockTable, BlockAllocator) {
+    let rs = kvh * d;
+    let kv_len = keys.len() / rs;
+    let num_blocks = kv_len.div_ceil(BLOCK) + 1;
+    let mut cache: Box<dyn KvStore> = if quant {
+        Box::new(QuantizedPagedKvCache::new(1, num_blocks, BLOCK, kvh, d))
+    } else {
+        Box::new(PagedKvCache::new(1, num_blocks, BLOCK, kvh, d))
+    };
+    let mut alloc = BlockAllocator::new(num_blocks, BLOCK);
+    let mut table = BlockTable::new();
+    for t in 0..kv_len {
+        assert!(table.reserve(1, &mut alloc));
+        let (b, s) = table.append_slot(BLOCK);
+        cache.write_token(0, b, s, &keys[t * rs..(t + 1) * rs], &vals[t * rs..(t + 1) * rs]);
+    }
+    (cache, table, alloc)
+}
+
+/// Adversarial KV grid: tile 0 is a long-range outlier whose keys align
+/// with the query direction (scores ≫ everything else), later tiles
+/// sweep σ over decades. Once the outlier sets the running max, low-σ
+/// tiles are provably dead — the construction exact skipping must
+/// elide and threshold skipping must drop without visible error.
+fn adversarial_kv(
+    seed: u64,
+    kv_len: usize,
+    kvh: usize,
+    d: usize,
+    outlier_mag: f32,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let rs = kvh * d;
+    let mut rng = Rng::new(seed);
+    // Fixed ± direction pattern shared by the outlier tile and the query
+    // so their dot product is large and positive.
+    let pattern: Vec<f32> = (0..rs).map(|i| if i % 3 == 0 { -1.0 } else { 1.0 }).collect();
+    let mut k = Vec::with_capacity(kv_len * rs);
+    let mut v = Vec::with_capacity(kv_len * rs);
+    for t in 0..kv_len {
+        let tile = t / BLOCK;
+        for i in 0..rs {
+            let x = if tile == 0 {
+                outlier_mag * pattern[i]
+            } else {
+                rng.normal_f32(0.0, [1e-3, 1e-2, 0.1, 0.4][tile % 4])
+            };
+            k.push(x);
+            v.push(rng.normal_f32(0.0, 1.0));
+        }
+    }
+    (k, v, pattern)
+}
+
+/// Query rows aligned with the outlier pattern (every query head copies
+/// the pattern of its KV group), magnitude `q_mag`.
+fn aligned_q(q_len: usize, h: usize, kvh: usize, d: usize, q_mag: f32, pattern: &[f32]) -> Vec<f32> {
+    let g = h / kvh;
+    (0..q_len * h * d)
+        .map(|i| {
+            let head = (i / d) % h;
+            let kv_head = head / g;
+            q_mag * pattern[kv_head * d + i % d]
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------
+// Claim 1: window = ∞ ⇒ bit-identical to dense.
+// ---------------------------------------------------------------------
+
+/// Model-level driver (chunked prefill + mixed step + decode batch),
+/// returning everything observable for exact comparison.
+fn drive(model: &NativeModel, quant_kv: bool, threads: Option<usize>) -> (Vec<Vec<f32>>, Vec<Vec<f32>>) {
+    let cfg = *model.config();
+    let mut cache: Box<dyn KvStore> = if quant_kv {
+        Box::new(QuantizedPagedKvCache::new(cfg.n_layers, 64, 8, cfg.n_kv_heads, cfg.head_dim()))
+    } else {
+        Box::new(PagedKvCache::new(cfg.n_layers, 64, 8, cfg.n_kv_heads, cfg.head_dim()))
+    };
+    let mut alloc = BlockAllocator::new(64, 8);
+    let mut t_a = BlockTable::new();
+    let mut t_b = BlockTable::new();
+    let mut t_c = BlockTable::new();
+    for t in [&mut t_a, &mut t_b, &mut t_c] {
+        t.reserve(24, &mut alloc);
+    }
+    let mut prefills = Vec::new();
+    let a_tokens: Vec<u32> = (0..13).map(|i| 256 + (i % 90)).collect();
+    prefills.push(model.prefill_with(&a_tokens[..5], cache.as_mut(), &mut t_a, threads));
+    prefills.push(model.prefill_with(&a_tokens[5..], cache.as_mut(), &mut t_a, threads));
+    prefills.push(model.prefill_with(&[256, 7, 8], cache.as_mut(), &mut t_b, threads));
+    let c_tokens: Vec<u32> = (0..9).map(|i| 300 + i).collect();
+    let (chunk_logits, dec_logits, _, skipped) = model.forward_mixed(
+        &[c_tokens.as_slice()],
+        &mut [&mut t_c],
+        &[true],
+        &[31, 32],
+        &mut [&mut t_a, &mut t_b],
+        cache.as_mut(),
+        threads,
+        threads,
+    );
+    assert_eq!(skipped, 0, "skipping is off in every config this driver sees");
+    let mut decodes: Vec<Vec<f32>> = dec_logits;
+    decodes.push(chunk_logits[0].clone().expect("wanted chunk logits"));
+    let mut tables = [&mut t_a, &mut t_b, &mut t_c];
+    decodes.extend(model.decode_batch_with(&[40, 41, 42], cache.as_mut(), &mut tables, threads).0);
+    (prefills, decodes)
+}
+
+#[test]
+fn infinite_window_is_bit_identical_to_dense_across_widths_and_dtypes() {
+    let mk = |sp: SparsityConfig| {
+        let mut cfg = ModelConfig::tiny();
+        cfg.sparsity = sp;
+        NativeModel::new(ModelWeights::init(&cfg, 21))
+    };
+    let dense = mk(SparsityConfig::dense());
+    // A window far larger than any sequence — with and without sinks —
+    // must leave every logit bit-identical to the dense default.
+    for sp in [SparsityConfig::windowed(1 << 20, 0), SparsityConfig::windowed(1 << 20, 3)] {
+        let windowed = mk(sp);
+        for quant_kv in [false, true] {
+            for threads in [Some(1), Some(3), None] {
+                let got = drive(&windowed, quant_kv, threads);
+                let want = drive(&dense, quant_kv, threads);
+                assert_eq!(
+                    got, want,
+                    "window={} sink={} quant_kv={quant_kv} threads={threads:?}: \
+                     infinite window diverged from dense",
+                    sp.window_blocks, sp.sink_blocks
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn infinite_window_engine_matches_dense_under_mixed_and_exclusive() {
+    let run = |sp: SparsityConfig, chunked: bool| {
+        let mut mc = ModelConfig::tiny();
+        mc.sparsity = sp;
+        let backend = NativeBackend::new(NativeModel::new(ModelWeights::init(&mc, 5)));
+        let econf = EngineConfig {
+            num_blocks: 48,
+            block_size: 8,
+            sched: SchedulerConfig {
+                max_running: 8,
+                max_decode_batch: 4,
+                watermark_blocks: 1,
+                step_token_budget: 12,
+                chunked_prefill: chunked,
+            },
+            decode_buckets: BucketPolicy::exact(4),
+            prefill_chunk: usize::MAX,
+            prefix_cache_blocks: 0,
+            kv_dtype: KvCacheDtype::F32,
+            weight_dtype: WeightDtype::F32,
+        };
+        let mut e = Engine::new(Box::new(backend), econf);
+        e.add_request(vec![256; 30], SamplingParams { max_tokens: 6, ..Default::default() })
+            .unwrap();
+        for i in 0..3 {
+            e.add_request(
+                vec![256, 60 + i, 61],
+                SamplingParams { max_tokens: 6, ..Default::default() },
+            )
+            .unwrap();
+        }
+        e.run_to_completion();
+        assert_eq!(e.metrics.skipped_tiles, 0);
+        assert_eq!(e.metrics.evicted_blocks, 0, "infinite window must never evict");
+        let mut outs = e.take_outputs();
+        outs.sort_by_key(|o| o.id);
+        outs.into_iter().map(|o| o.tokens).collect::<Vec<_>>()
+    };
+    for chunked in [false, true] {
+        assert_eq!(
+            run(SparsityConfig::windowed(1 << 20, 1), chunked),
+            run(SparsityConfig::dense(), chunked),
+            "chunked={chunked}: infinite-window token streams diverged from dense"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// Claim 2: exact skip ⇒ bit-identical while actually skipping.
+// ---------------------------------------------------------------------
+
+#[test]
+fn exact_skip_decode_is_bit_identical_on_adversarial_grids() {
+    let (h, kvh, d) = (4usize, 2usize, 8usize);
+    let kv_len = 10 * BLOCK + 3;
+    for quant in [false, true] {
+        for bias in [Bias::None, Bias::Alibi] {
+            // Outlier scores ≈ scale·q_mag·mag·d ≈ 0.354·12·12·8 ≈ 408
+            // nats above the σ-sweep tiles — far past the 128-nat exact
+            // margin plus slack, so the dead tiles provably underflow.
+            let (k, v, pattern) = adversarial_kv(7 + quant as u64, kv_len, kvh, d, 12.0);
+            let q = aligned_q(1, h, kvh, d, 12.0, &pattern);
+            let (cache, table, _alloc) = cache_with(quant, kvh, d, &k, &v);
+            let base = AttnConfig {
+                sparsity: SparsityConfig::windowed(1 << 20, 1),
+                ..AttnConfig::dense(h, kvh, d, bias)
+            };
+            let exact = AttnConfig {
+                sparsity: SparsityConfig { skip_threshold: 0.0, ..base.sparsity },
+                ..base
+            };
+            let want = paged_decode_attention(&base, cache.as_ref(), 0, &q, &table);
+            let mut got = vec![0.0f32; h * d];
+            let skips = with_workspace(|ws| {
+                paged_decode_attention_into(&exact, cache.as_ref(), 0, &q, &table, ws, &mut got)
+            });
+            assert_eq!(got, want, "quant={quant} bias={bias:?}: exact skip changed bits");
+            assert!(
+                skips >= 4,
+                "quant={quant} bias={bias:?}: adversarial grid must actually skip ({skips})"
+            );
+        }
+    }
+}
+
+#[test]
+fn exact_skip_prefill_rows_bit_identical_at_every_width() {
+    let (h, kvh, d) = (4usize, 2usize, 8usize);
+    let base_len = 8 * BLOCK; // context already in cache
+    let q_len = 6;
+    let kv_len = base_len + q_len;
+    for quant in [false, true] {
+        let (k, v, pattern) = adversarial_kv(11 + quant as u64, kv_len, kvh, d, 12.0);
+        let q = aligned_q(q_len, h, kvh, d, 12.0, &pattern);
+        let (cache, table, _alloc) = cache_with(quant, kvh, d, &k, &v);
+        let base = AttnConfig {
+            sparsity: SparsityConfig::windowed(1 << 20, 1),
+            ..AttnConfig::dense(h, kvh, d, Bias::Alibi)
+        };
+        let exact = AttnConfig {
+            sparsity: SparsityConfig { skip_threshold: 0.0, ..base.sparsity },
+            ..base
+        };
+        let row = h * d;
+        let mut want = vec![0.0f32; q_len * row];
+        paged_prefill_rows_parallel(&base, cache.as_ref(), 0, &q, q_len, base_len, &table, 1, &mut want);
+        for threads in [1usize, 2, 4] {
+            let mut got = vec![0.0f32; q_len * row];
+            let (_, skips) = paged_prefill_rows_parallel(
+                &exact, cache.as_ref(), 0, &q, q_len, base_len, &table, threads, &mut got,
+            );
+            assert_eq!(got, want, "quant={quant} threads={threads}: exact skip changed bits");
+            assert!(skips > 0, "quant={quant} threads={threads}: no tiles skipped");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Claim 3: threshold mode ⇒ bounded max-abs error.
+// ---------------------------------------------------------------------
+
+#[test]
+fn threshold_skip_error_is_bounded_and_discriminated_from_exact() {
+    let (h, kvh, d) = (4usize, 2usize, 8usize);
+    let kv_len = 12 * BLOCK + 1;
+    // Outlier scores ≈ 0.354·6·5·8 ≈ 85 nats above the dead tiles: too
+    // small for the 128-nat exact margin, far past ln(1e-5) ≈ −11.5 —
+    // so exact mode must refuse where threshold mode engages.
+    let (k, v, pattern) = adversarial_kv(23, kv_len, kvh, d, 5.0);
+    let q = aligned_q(1, h, kvh, d, 6.0, &pattern);
+    for quant in [false, true] {
+        let (cache, table, _alloc) = cache_with(quant, kvh, d, &k, &v);
+        let base = AttnConfig {
+            sparsity: SparsityConfig::windowed(1 << 20, 1),
+            ..AttnConfig::dense(h, kvh, d, Bias::None)
+        };
+        let run = |threshold: f32| {
+            let cfg = AttnConfig {
+                sparsity: SparsityConfig { skip_threshold: threshold, ..base.sparsity },
+                ..base
+            };
+            let mut out = vec![0.0f32; h * d];
+            let skips = with_workspace(|ws| {
+                paged_decode_attention_into(&cfg, cache.as_ref(), 0, &q, &table, ws, &mut out)
+            });
+            (out, skips)
+        };
+        let (want, _) = run(-1.0); // skipping off
+        let (exact_out, exact_skips) = run(0.0);
+        assert_eq!(exact_out, want, "quant={quant}: exact mode must stay bit-identical");
+        assert_eq!(
+            exact_skips, 0,
+            "quant={quant}: an 85-nat gap is below the exact margin — must refuse"
+        );
+        let threshold = 1e-5f32;
+        let (got, skips) = run(threshold);
+        assert!(skips >= 4, "quant={quant}: threshold mode must engage ({skips})");
+        // Dropped normalized mass ≤ kv_len·t (each dropped slot's weight
+        // is < t relative to the running max and the normalizer is ≥ 1),
+        // values are N(0,1): a generous 4σ bound on the perturbation.
+        let bound = kv_len as f32 * threshold * 4.0;
+        let max_abs = got
+            .iter()
+            .zip(&want)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(
+            max_abs <= bound,
+            "quant={quant}: threshold error {max_abs} exceeds bound {bound}"
+        );
+        // And the approximation is genuinely lossy-but-close, not exact:
+        // outputs must stay finite and within tolerance of the reference.
+        assert!(got.iter().all(|x| x.is_finite()));
+    }
+}

@@ -96,7 +96,7 @@ fn drive(
     prefills.push(model.prefill_with(&[256, 7, 8], cache.as_mut(), &mut t_b, threads));
     // Mixed step: one prefill chunk (C) + two decoders (A, B).
     let c_tokens: Vec<u32> = (0..9).map(|i| 300 + i).collect();
-    let (chunk_logits, dec_logits, _) = model.forward_mixed(
+    let (chunk_logits, dec_logits, _, _) = model.forward_mixed(
         &[c_tokens.as_slice()],
         &mut [&mut t_c],
         &[true],
@@ -110,7 +110,7 @@ fn drive(
     decodes.push(chunk_logits[0].clone().expect("wanted chunk logits"));
     // Plain decode batch afterwards.
     let mut tables = [&mut t_a, &mut t_b, &mut t_c];
-    decodes.extend(model.decode_batch_with(&[40, 41, 42], cache.as_mut(), &mut tables, threads));
+    decodes.extend(model.decode_batch_with(&[40, 41, 42], cache.as_mut(), &mut tables, threads).0);
     let dumps = [&t_a, &t_b, &t_c]
         .iter()
         .map(|t| cache.gather(0, t))

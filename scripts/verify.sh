@@ -47,6 +47,36 @@ if ! grep -q '#\[cfg(any(test, feature = "fault-inject"))\]' src/runtime/mod.rs;
   exit 1
 fi
 
+# ---- sparsity-default gates -----------------------------------------------
+# Sparse attention is strictly opt-in: every parity baseline in the repo
+# assumes the dense default is bit-identical to the pre-sparsity kernel.
+# Threshold-mode tile skipping (lossy) must therefore stay OFF on every
+# default-config path — both SparsityConfig constructors keep the
+# negative (disabled) sentinel, and the CLI flag defaults to it too.
+if [[ $(grep -c 'skip_threshold: -1.0' src/attention/sparsity.rs) -lt 2 ]]; then
+  echo "verify: FAIL — a SparsityConfig constructor lost its negative (off) skip_threshold" >&2
+  exit 1
+fi
+if ! grep -q '"skip-threshold", -1.0' src/main.rs; then
+  echo "verify: FAIL — --skip-threshold CLI default is no longer off (-1.0)" >&2
+  exit 1
+fi
+# No non-test source file may hard-code an enabled (>= 0) threshold.
+if grep -rnE 'skip_threshold:[[:space:]]*[0-9]' src/ \
+    | grep -vE '^src/attention/sparsity\.rs:' \
+    | grep -vE '^[^:]+:[0-9]+:[[:space:]]*//'; then
+  echo "verify: FAIL — a default-config path hard-codes an enabled skip_threshold" >&2
+  exit 1
+fi
+# The sparse accuracy harness and the eviction/bound property suites are
+# tier-1; `cargo test -q` runs them, but their deletion must be loud.
+for suite in tests/sparse_parity.rs tests/properties.rs; do
+  if [[ ! -s "$suite" ]]; then
+    echo "verify: FAIL — tier-1 suite $suite is missing" >&2
+    exit 1
+  fi
+done
+
 cargo build --release
 cargo test -q
 # Docs are tier-1: broken intra-doc links / malformed rustdoc fail the PR.
