@@ -21,7 +21,7 @@
 mod common;
 
 use opt_gptq::attention::alibi::{alibi_bias, alibi_slopes};
-use opt_gptq::attention::gqa::{gqa_attention_into, AttnConfig, Bias};
+use opt_gptq::attention::gqa::{gqa_attention_into, AttnConfig, Bias, ScoreDomain};
 use opt_gptq::attention::kernel::Workspace;
 use opt_gptq::attention::paged::{
     paged_decode_attention_into, paged_decode_batch, paged_prefill_attention_into,
@@ -29,7 +29,7 @@ use opt_gptq::attention::paged::{
 };
 use opt_gptq::attention::SparsityConfig;
 use opt_gptq::kvcache::{BlockAllocator, BlockTable, KvStore, PagedKvCache, QuantizedPagedKvCache};
-use opt_gptq::tensor::softmax_inplace;
+use opt_gptq::tensor::{simd, softmax_inplace};
 use opt_gptq::util::benchkit::{black_box, f, Bencher, Table};
 use opt_gptq::util::cli::Args;
 use opt_gptq::util::rng::Rng;
@@ -178,11 +178,30 @@ fn main() {
         Bencher::new(Duration::from_millis(200), Duration::from_secs(1), 50)
     };
 
+    // ---- 0. kernel dispatch: dot microbench -----------------------------
+    // The dispatched table vs the scalar-pinned reference on a long dot —
+    // the inner primitive every attention score and weight MAC routes
+    // through. On hosts without AVX2 both tables are scalar and the
+    // speedup reads ~1.0 (the bit-identity contract makes that honest,
+    // not a regression).
+    let mut rng = Rng::new(42);
+    let dot_len = 4096usize;
+    let da = rng.normal_vec(dot_len, 1.0);
+    let db = rng.normal_vec(dot_len, 1.0);
+    let act_tbl = simd::active();
+    let sca_tbl = simd::scalar();
+    let s_dot_act = bench.bench(&format!("dot[{dot_len}] dispatched ({})", act_tbl.name), || {
+        black_box((act_tbl.dot)(&da, &db));
+    });
+    let s_dot_sca = bench.bench(&format!("dot[{dot_len}] scalar-pinned"), || {
+        black_box((sca_tbl.dot)(&da, &db));
+    });
+    let dot_simd_speedup = s_dot_sca.mean() / s_dot_act.mean();
+
     // ---- 1. single-thread prefill at 2k context ------------------------
     let ctx = args.get_usize("ctx", 2048);
     let rows = args.get_usize("rows", if smoke { 96 } else { 256 }).min(ctx);
     let q_offset = ctx - rows;
-    let mut rng = Rng::new(42);
     let q = rng.normal_vec(rows * h * d, 1.0);
     let k = rng.normal_vec(ctx * kvh * d, 1.0);
     let v = rng.normal_vec(ctx * kvh * d, 1.0);
@@ -253,11 +272,22 @@ fn main() {
             paged_decode_batch(&cfg, &qcache, 0, &qs, &table_refs, threads, &mut dec_out);
             black_box(dec_out[0]);
         });
+    // Integer-domain q8 scoring (`--q8-score-domain int`): the query is
+    // quantized once per (row, kv-head) and K tiles are scored with
+    // widening integer dots straight off the packed words — no K
+    // dequantization on the score side.
+    let mut int_cfg = cfg;
+    int_cfg.score_domain = ScoreDomain::Int;
+    let s_dec_q8_int = bench.bench("decode batch q8 int-domain serial (1 thread)", || {
+        paged_decode_batch(&int_cfg, &qcache, 0, &qs, &table_refs, 1, &mut dec_out);
+        black_box(dec_out[0]);
+    });
     let decode_naive_tok_s = batch as f64 / s_dec_naive.mean();
     let decode_serial_tok_s = batch as f64 / s_dec_serial.mean();
     let decode_parallel_tok_s = batch as f64 / s_dec_par.mean();
     let decode_q8_serial_tok_s = batch as f64 / s_dec_q8_serial.mean();
     let decode_q8_parallel_tok_s = batch as f64 / s_dec_q8_par.mean();
+    let decode_q8_int_domain_tok_s = batch as f64 / s_dec_q8_int.mean();
     let pool_bytes_f32 = KvStore::pool_bytes(&cache);
     let pool_bytes_q8 = KvStore::pool_bytes(&qcache);
 
@@ -457,6 +487,12 @@ fn main() {
         f(decode_q8_parallel_tok_s / decode_naive_tok_s, 2),
     ]);
     t.row(&[
+        "decode q8 int-domain".into(),
+        format!("batch={batch} kv={kv_len} (integer scoring)"),
+        f(decode_q8_int_domain_tok_s, 1),
+        f(decode_q8_int_domain_tok_s / decode_naive_tok_s, 2),
+    ]);
+    t.row(&[
         "prefill f32 gather".into(),
         format!("rows={p_rows} kv={kv_len} (legacy dense copy)"),
         f(prefill_f32_gather_tok_s, 1),
@@ -518,6 +554,10 @@ fn main() {
     ]);
     t.print();
     println!(
+        "Kernel dispatch: {} (dot[{dot_len}] speedup over scalar = {dot_simd_speedup:.2}×)",
+        act_tbl.name
+    );
+    println!(
         "KV pool bytes: f32 = {pool_bytes_f32}, q8 = {pool_bytes_q8} ({:.3}×)",
         pool_bytes_q8 as f64 / pool_bytes_f32 as f64
     );
@@ -549,6 +589,14 @@ fn main() {
             ("decode_q8_serial_tok_s", decode_q8_serial_tok_s),
             ("decode_q8_parallel_tok_s", decode_q8_parallel_tok_s),
             ("decode_q8_relative_tok_s", decode_q8_parallel_tok_s / decode_parallel_tok_s),
+            ("decode_q8_int_domain_tok_s", decode_q8_int_domain_tok_s),
+            (
+                "decode_q8_int_domain_relative_tok_s",
+                decode_q8_int_domain_tok_s / decode_q8_serial_tok_s,
+            ),
+            ("simd_dispatch_avx2", if act_tbl.name == "avx2" { 1.0 } else { 0.0 }),
+            ("dot_simd_len", dot_len as f64),
+            ("dot_simd_speedup", dot_simd_speedup),
             ("kv_pool_bytes_f32", pool_bytes_f32 as f64),
             ("kv_pool_bytes_q8", pool_bytes_q8 as f64),
             ("kv_pool_ratio_q8_over_f32", pool_bytes_q8 as f64 / pool_bytes_f32 as f64),

@@ -18,9 +18,11 @@
 mod common;
 
 use opt_gptq::quant::matmul::{
-    dense_matmul_rows_parallel, packed_matmul_nt_into, packed_matmul_rows_parallel,
+    auto_gemv_threads, dense_matmul_rows_parallel, packed_gemv_cols_parallel,
+    packed_matmul_nt_into, packed_matmul_nt_into_scalar, packed_matmul_rows_parallel,
     MatmulWorkspace,
 };
+use opt_gptq::tensor::simd;
 use opt_gptq::quant::{pack_rows, rtn_quantize, PackedMatrix};
 use opt_gptq::tensor::matmul_nt_into;
 use opt_gptq::util::benchkit::{black_box, f, Bencher, Table};
@@ -80,6 +82,11 @@ fn main() {
     let dense_par_tok_s = m as f64 / s_dense_par.mean();
 
     let mut series: Vec<(u32, f64, f64, usize)> = Vec::new();
+    // SIMD dispatch series: the dispatched serial kernel (SIMD where the
+    // CPU has it) vs the same kernel pinned to the scalar table. The two
+    // are bit-identical (tensor::simd contract) so the ratio is pure
+    // kernel speed; ~1.0× on hosts without AVX2.
+    let mut simd_series: Vec<(u32, f64, f64)> = Vec::new();
     for (bits, p) in &packed {
         let s_serial = bench.bench(&format!("weight matmul q{bits} fused serial"), || {
             packed_matmul_nt_into(&acts, m, p, &mut ws, &mut out);
@@ -90,8 +97,32 @@ fn main() {
                 packed_matmul_rows_parallel(&acts, m, p, threads, &mut out);
                 black_box(out[0]);
             });
+        let s_scalar =
+            bench.bench(&format!("weight matmul q{bits} fused serial (scalar-pinned)"), || {
+                packed_matmul_nt_into_scalar(&acts, m, p, &mut ws, &mut out);
+                black_box(out[0]);
+            });
         series.push((*bits, m as f64 / s_serial.mean(), m as f64 / s_par.mean(), p.packed_bytes()));
+        simd_series.push((*bits, m as f64 / s_serial.mean(), m as f64 / s_scalar.mean()));
     }
+
+    // Decode GEMV (m == 1) through the column-split driver: serial vs
+    // the auto-sized tile-aligned column fan-out — the projection shape
+    // every decode step pays, where the row split has nothing to split.
+    let act1 = &acts[..k];
+    let mut gout = vec![0.0f32; n];
+    let (_, p4) = &packed[1];
+    let gemv_jobs = auto_gemv_threads(n, k);
+    let s_gemv_serial = bench.bench("decode GEMV q4 serial", || {
+        packed_gemv_cols_parallel(act1, p4, 1, &mut gout);
+        black_box(gout[0]);
+    });
+    let s_gemv_split = bench.bench(&format!("decode GEMV q4 col-split ({gemv_jobs} jobs)"), || {
+        packed_gemv_cols_parallel(act1, p4, gemv_jobs, &mut gout);
+        black_box(gout[0]);
+    });
+    let gemv_serial_tok_s = 1.0 / s_gemv_serial.mean();
+    let gemv_split_tok_s = 1.0 / s_gemv_split.mean();
 
     // ---- report ---------------------------------------------------------
     let f32_bytes = n * k * 4;
@@ -135,6 +166,20 @@ fn main() {
         ]);
     }
     t.print();
+    println!(
+        "Kernel dispatch: {} — fused serial vs scalar-pinned: {}",
+        simd::active().name,
+        simd_series
+            .iter()
+            .map(|&(b, s, sc)| format!("q{b} {:.2}×", s / sc))
+            .collect::<Vec<_>>()
+            .join(", ")
+    );
+    println!(
+        "Decode GEMV q4 (m=1): serial {gemv_serial_tok_s:.1} tok/s, col-split×{gemv_jobs} \
+         {gemv_split_tok_s:.1} tok/s ({:.2}×)",
+        gemv_split_tok_s / gemv_serial_tok_s
+    );
 
     let q8 = &series[0];
     let q4 = &series[1];
@@ -163,6 +208,20 @@ fn main() {
             ("weight_matmul_q3_tok_s", q3.1),
             ("weight_matmul_q3_par_tok_s", q3.2),
             ("weight_matmul_q4_relative_tok_s", q4.1 / dense_tok_s),
+            ("simd_dispatch_avx2", if simd::active().name == "avx2" { 1.0 } else { 0.0 }),
+            ("weight_matmul_q8_simd_tok_s", simd_series[0].1),
+            ("weight_matmul_q8_scalar_tok_s", simd_series[0].2),
+            ("weight_matmul_q8_simd_speedup", simd_series[0].1 / simd_series[0].2),
+            ("weight_matmul_q4_simd_tok_s", simd_series[1].1),
+            ("weight_matmul_q4_scalar_tok_s", simd_series[1].2),
+            ("weight_matmul_q4_simd_speedup", simd_series[1].1 / simd_series[1].2),
+            ("weight_matmul_q3_simd_tok_s", simd_series[2].1),
+            ("weight_matmul_q3_scalar_tok_s", simd_series[2].2),
+            ("weight_matmul_q3_simd_speedup", simd_series[2].1 / simd_series[2].2),
+            ("decode_gemv_jobs", gemv_jobs as f64),
+            ("decode_gemv_q4_serial_tok_s", gemv_serial_tok_s),
+            ("decode_gemv_q4_split_tok_s", gemv_split_tok_s),
+            ("decode_gemv_split_speedup", gemv_split_tok_s / gemv_serial_tok_s),
             ("weight_pool_bytes_f32", f32_bytes as f64),
             ("weight_pool_bytes_q8", q8.3 as f64),
             ("weight_pool_bytes_q4", q4.3 as f64),

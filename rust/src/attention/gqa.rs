@@ -32,6 +32,46 @@ pub enum Bias {
     Alibi,
 }
 
+/// Which arithmetic domain the attention score pass runs in on the
+/// quantized-KV decode path (CLI `--q8-score-domain`).
+///
+/// A **runtime serving knob** like [`SparsityConfig`] — not part of the
+/// weight artifact, excluded from `ModelConfig::shape_eq`. Only the
+/// paged decode walk over q8 KV tiles consults it; every other path
+/// (f32 KV, prefill, the contiguous reference drivers) always scores in
+/// f32.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ScoreDomain {
+    /// Dequantize K tiles to f32 and dot in f32 — the default; every
+    /// parity baseline assumes it.
+    #[default]
+    F32,
+    /// TurboAttention-style integer scoring: quantize the query once per
+    /// (row, kv_head), dot packed q8 K tiles in u8×u8→i32 widening
+    /// arithmetic, rescale once per (tile, kv_head). Skips the per-tile
+    /// K dequant on decode; bounded-error vs the f32 path
+    /// (`Workspace::process_quant_tile_int`).
+    Int,
+}
+
+impl ScoreDomain {
+    /// Parse the CLI surface (`"f32"` / `"int"`).
+    pub fn parse(s: &str) -> Option<ScoreDomain> {
+        match s {
+            "f32" => Some(ScoreDomain::F32),
+            "int" => Some(ScoreDomain::Int),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ScoreDomain::F32 => "f32",
+            ScoreDomain::Int => "int",
+        }
+    }
+}
+
 /// Attention shape parameters.
 #[derive(Debug, Clone, Copy)]
 pub struct AttnConfig {
@@ -44,6 +84,9 @@ pub struct AttnConfig {
     /// module stay dense — they are the calibration/test/bench
     /// reference oracles and never see a cache block partition.
     pub sparsity: SparsityConfig,
+    /// Score arithmetic domain for the quantized-KV decode walk (see
+    /// [`ScoreDomain`]); the contiguous routines here ignore it.
+    pub score_domain: ScoreDomain,
 }
 
 impl AttnConfig {
@@ -52,7 +95,14 @@ impl AttnConfig {
     /// builds configs through this, so "no sparsity named" keeps
     /// meaning "dense causal".
     pub const fn dense(num_heads: usize, num_kv_heads: usize, head_dim: usize, bias: Bias) -> AttnConfig {
-        AttnConfig { num_heads, num_kv_heads, head_dim, bias, sparsity: SparsityConfig::dense() }
+        AttnConfig {
+            num_heads,
+            num_kv_heads,
+            head_dim,
+            bias,
+            sparsity: SparsityConfig::dense(),
+            score_domain: ScoreDomain::F32,
+        }
     }
 
     /// Query heads per KV group (`G` in the paper).

@@ -49,7 +49,8 @@
 use super::alibi::alibi_slopes;
 use super::gqa::{AttnConfig, Bias};
 use crate::kvcache::QuantKvTile;
-use crate::tensor::dot;
+use crate::quant::QuantParams;
+use crate::tensor::{dot, simd};
 use std::cell::RefCell;
 
 /// KV rows per tile on the contiguous (prefill) path. Sized so one tile
@@ -111,6 +112,26 @@ pub struct Workspace {
     /// Reusable pool of detached per-row softmax states for tile-major
     /// multi-row walks (grown once by [`Workspace::take_row_states`]).
     row_states: Vec<RowState>,
+    /// Per-head precomputed score lower bound used **only** by
+    /// [`Workspace::tile_skippable`] in threshold (lossy) mode — seeded
+    /// by the decode driver from the query's self-score
+    /// ([`Workspace::seed_from_self_key`]) so the *first* visible tile
+    /// can participate in score-bound skipping. Never folded into
+    /// `(m, l, acc)`; exact mode never seeds, so its bit-identity is
+    /// untouched. `−∞` (the reset value) disables the seed.
+    m_seed: Vec<f32>,
+    /// Integer-domain query levels, `[num_heads, head_dim]` u8 (one
+    /// 8-bit grid per KV-head group; see
+    /// [`Workspace::quantize_int_query`]).
+    qi_levels: Vec<u8>,
+    /// Per query head, the sum of its `head_dim` levels (the `Σq̂`
+    /// term of the integer-domain correction).
+    qi_sums: Vec<i32>,
+    /// Per KV head, the query grid step (NaN poisons the group when
+    /// the query row holds non-finite values).
+    qi_scale: Vec<f32>,
+    /// Per KV head, the query grid zero point.
+    qi_zero: Vec<i32>,
 }
 
 /// Detached online-softmax state for one query row — the unit a
@@ -154,6 +175,7 @@ impl Workspace {
         self.l.resize(h, 0.0);
         self.acc.resize(h * d, 0.0);
         self.w.resize(g * self.tile_cap, 0.0);
+        self.m_seed.resize(h, f32::NEG_INFINITY);
     }
 
     /// Reset the online-softmax state for a fresh query row.
@@ -161,6 +183,7 @@ impl Workspace {
         self.m.fill(f32::NEG_INFINITY);
         self.l.fill(0.0);
         self.acc.fill(0.0);
+        self.m_seed.fill(f32::NEG_INFINITY);
     }
 
     /// Swap a detached row's online-softmax state into (or back out of)
@@ -181,6 +204,10 @@ impl Workspace {
     /// vector may be longer than `rows`; only the first `rows` entries
     /// are initialized).
     pub fn take_row_states(&mut self, rows: usize) -> Vec<RowState> {
+        // Tile-major walks never seed the skip bound (seeding is a
+        // decode-driver feature); clear any seed a previous decode row
+        // left behind so prefill skip decisions can't see stale state.
+        self.m_seed.fill(f32::NEG_INFINITY);
         let mut pool = std::mem::take(&mut self.row_states);
         if pool.len() < rows {
             pool.resize_with(rows, RowState::default);
@@ -250,7 +277,6 @@ impl Workspace {
     ) {
         let (kvh, d, g) = (self.kv_heads, self.head_dim, self.group);
         let tile_cap = self.tile_cap;
-        let scale = self.scale;
         let rs = kvh * d; // tile row stride
         debug_assert!(visible > 0 && visible <= tile_cap, "visible={visible} cap={tile_cap}");
         debug_assert!(tile_pos + visible <= q_pos + 1, "tile reaches past the query position");
@@ -270,76 +296,100 @@ impl Workspace {
                     self.w[gq * tile_cap + slot] = dot(q_vec, k_vec);
                 }
             }
-            // Per head: scale + incremental ALiBi, tile max, one online
-            // rescale of (m, l, acc), then score→weight transform.
-            for gq in 0..g {
-                let head = head0 + gq;
-                let slope = self.slopes[head];
-                let row = &mut self.w[gq * tile_cap..gq * tile_cap + visible];
-                let mut m_blk = f32::NEG_INFINITY;
-                if self.use_alibi {
-                    // bias(slot) = −slope·(q_pos − (tile_pos+slot)) is an
-                    // arithmetic progression: one add per slot.
-                    let mut bias = -slope * (q_pos - tile_pos) as f32;
-                    for s in row.iter_mut() {
-                        *s = *s * scale + bias;
-                        bias += slope;
-                        m_blk = m_blk.max(*s);
-                    }
-                } else {
-                    for s in row.iter_mut() {
-                        *s *= scale;
-                        m_blk = m_blk.max(*s);
-                    }
+            self.fold_tile_scores(kv_head, tile_pos, visible, q_pos);
+            self.fold_tile_values(kv_head, v_tile, rs, visible);
+        }
+    }
+
+    /// Shared score→weight fold for one KV head's group: scale +
+    /// incremental ALiBi over the raw scores already sitting in `w`,
+    /// tile max, one online rescale of `(m, l, acc)`, then the
+    /// `exp(s − m)` transform. Extracted from [`Workspace::process_tile`]
+    /// so the integer-domain score path
+    /// ([`Workspace::process_quant_tile_int`]) runs the *identical*
+    /// online-softmax update — only pass 1 (how raw scores are produced)
+    /// differs between the two.
+    fn fold_tile_scores(&mut self, kv_head: usize, tile_pos: usize, visible: usize, q_pos: usize) {
+        let (d, g) = (self.head_dim, self.group);
+        let tile_cap = self.tile_cap;
+        let scale = self.scale;
+        let head0 = kv_head * g;
+        // Per head: scale + incremental ALiBi, tile max, one online
+        // rescale of (m, l, acc), then score→weight transform.
+        for gq in 0..g {
+            let head = head0 + gq;
+            let slope = self.slopes[head];
+            let row = &mut self.w[gq * tile_cap..gq * tile_cap + visible];
+            let mut m_blk = f32::NEG_INFINITY;
+            if self.use_alibi {
+                // bias(slot) = −slope·(q_pos − (tile_pos+slot)) is an
+                // arithmetic progression: one add per slot.
+                let mut bias = -slope * (q_pos - tile_pos) as f32;
+                for s in row.iter_mut() {
+                    *s = *s * scale + bias;
+                    bias += slope;
+                    m_blk = m_blk.max(*s);
                 }
-                if m_blk == f32::NEG_INFINITY {
-                    // Every score in the tile is −∞ (e.g. ±∞ inputs): the
-                    // tile contributes zero weight. Zero the scratch so
-                    // pass 2 is a no-op and leave (m, l, acc) untouched —
-                    // this is what keeps the final normalization safe.
-                    // `max` ignores NaN, so an all-NaN tile also lands
-                    // here: poison the normalizer instead of masking the
-                    // upstream numerical bug behind zero output (mixed
-                    // finite/NaN tiles already propagate via exp()).
-                    if row.iter().any(|s| s.is_nan()) {
-                        self.l[head] = f32::NAN;
-                    }
-                    row.fill(0.0);
+            } else {
+                for s in row.iter_mut() {
+                    *s *= scale;
+                    m_blk = m_blk.max(*s);
+                }
+            }
+            if m_blk == f32::NEG_INFINITY {
+                // Every score in the tile is −∞ (e.g. ±∞ inputs): the
+                // tile contributes zero weight. Zero the scratch so
+                // pass 2 is a no-op and leave (m, l, acc) untouched —
+                // this is what keeps the final normalization safe.
+                // `max` ignores NaN, so an all-NaN tile also lands
+                // here: poison the normalizer instead of masking the
+                // upstream numerical bug behind zero output (mixed
+                // finite/NaN tiles already propagate via exp()).
+                if row.iter().any(|s| s.is_nan()) {
+                    self.l[head] = f32::NAN;
+                }
+                row.fill(0.0);
+                continue;
+            }
+            let m_prev = self.m[head];
+            let m_new = m_prev.max(m_blk);
+            self.m[head] = m_new;
+            let corr = if m_prev == f32::NEG_INFINITY { 0.0 } else { (m_prev - m_new).exp() };
+            self.l[head] *= corr;
+            if corr != 1.0 {
+                for a in &mut self.acc[head * d..(head + 1) * d] {
+                    *a *= corr;
+                }
+            }
+            let mut lsum = 0.0f32;
+            for s in row.iter_mut() {
+                *s = (*s - m_new).exp();
+                lsum += *s;
+            }
+            self.l[head] += lsum;
+        }
+    }
+
+    /// Shared pass 2 for one KV head's group — weighted values. Each V
+    /// row is loaded ONCE per group and accumulated into all G query
+    /// heads through the dispatched `axpy` kernel (element-wise
+    /// `acc[i] += w · v[i]`, bit-identical across tables by the dispatch
+    /// contract). `rs` is the V tile's row stride (`kv_heads·head_dim`).
+    fn fold_tile_values(&mut self, kv_head: usize, v_tile: &[f32], rs: usize, visible: usize) {
+        let (d, g) = (self.head_dim, self.group);
+        let tile_cap = self.tile_cap;
+        let head0 = kv_head * g;
+        let axpy = simd::active().axpy;
+        for slot in 0..visible {
+            let base = slot * rs + kv_head * d;
+            let v_vec = &v_tile[base..base + d];
+            for gq in 0..g {
+                let wgt = self.w[gq * tile_cap + slot];
+                if wgt == 0.0 {
                     continue;
                 }
-                let m_prev = self.m[head];
-                let m_new = m_prev.max(m_blk);
-                self.m[head] = m_new;
-                let corr =
-                    if m_prev == f32::NEG_INFINITY { 0.0 } else { (m_prev - m_new).exp() };
-                self.l[head] *= corr;
-                if corr != 1.0 {
-                    for a in &mut self.acc[head * d..(head + 1) * d] {
-                        *a *= corr;
-                    }
-                }
-                let mut lsum = 0.0f32;
-                for s in row.iter_mut() {
-                    *s = (*s - m_new).exp();
-                    lsum += *s;
-                }
-                self.l[head] += lsum;
-            }
-            // Pass 2 — weighted values. Each V row is loaded ONCE per
-            // group and accumulated into all G query heads.
-            for slot in 0..visible {
-                let base = slot * rs + kv_head * d;
-                let v_vec = &v_tile[base..base + d];
-                for gq in 0..g {
-                    let wgt = self.w[gq * tile_cap + slot];
-                    if wgt == 0.0 {
-                        continue;
-                    }
-                    let a = &mut self.acc[(head0 + gq) * d..(head0 + gq + 1) * d];
-                    for (av, &vv) in a.iter_mut().zip(v_vec) {
-                        *av += wgt * vv;
-                    }
-                }
+                let a = &mut self.acc[(head0 + gq) * d..(head0 + gq + 1) * d];
+                axpy(wgt, v_vec, a);
             }
         }
     }
@@ -373,6 +423,181 @@ impl Workspace {
         self.put_quant_scratch(kd, vd);
     }
 
+    /// Quantize the query row once per KV-head group for the
+    /// integer-domain score path (`--q8-score-domain int`).
+    ///
+    /// Each group's contiguous segment `q_row[kv_head·G·d ..]` gets one
+    /// asymmetric 8-bit grid ([`QuantParams::fit`]); the levels land in
+    /// `qi_levels` (`[num_heads, head_dim]` u8) and each head's level
+    /// sum in `qi_sums` — the `Σq̂` term of the expanded correction in
+    /// [`Workspace::process_quant_tile_int`]. Call once per decode row
+    /// before the tile walk; buffers grow once and are reused (the
+    /// zero-alloc contract holds in steady state).
+    ///
+    /// A non-finite query segment sets the group's `qi_scale` to NaN, so
+    /// every integer-domain score in that group is NaN and the kernel's
+    /// NaN-poisoning semantics apply exactly as on the f32 path.
+    pub fn quantize_int_query(&mut self, q_row: &[f32]) {
+        let (kvh, d, g, h) = (self.kv_heads, self.head_dim, self.group, self.num_heads);
+        debug_assert_eq!(q_row.len(), h * d);
+        if self.qi_levels.len() < h * d {
+            self.qi_levels.resize(h * d, 0);
+        }
+        if self.qi_sums.len() < h {
+            self.qi_sums.resize(h, 0);
+        }
+        if self.qi_scale.len() < kvh {
+            self.qi_scale.resize(kvh, 0.0);
+        }
+        if self.qi_zero.len() < kvh {
+            self.qi_zero.resize(kvh, 0);
+        }
+        for kv_head in 0..kvh {
+            let seg = &q_row[kv_head * g * d..(kv_head + 1) * g * d];
+            if seg.iter().any(|x| !x.is_finite()) {
+                self.qi_scale[kv_head] = f32::NAN;
+                self.qi_zero[kv_head] = 0;
+                for head in kv_head * g..(kv_head + 1) * g {
+                    self.qi_sums[head] = 0;
+                    self.qi_levels[head * d..(head + 1) * d].fill(0);
+                }
+                continue;
+            }
+            let p = QuantParams::fit(seg, 8);
+            self.qi_scale[kv_head] = p.scale;
+            self.qi_zero[kv_head] = p.zero;
+            for gq in 0..g {
+                let head = kv_head * g + gq;
+                let mut sum = 0i32;
+                for (t, &x) in q_row[head * d..(head + 1) * d].iter().enumerate() {
+                    let lvl = p.quantize(x);
+                    self.qi_levels[head * d + t] = lvl as u8;
+                    sum += lvl;
+                }
+                self.qi_sums[head] = sum;
+            }
+        }
+    }
+
+    /// Fold one quantized KV tile with **integer-domain scoring**
+    /// (TurboAttention-style; the opt-in `--q8-score-domain int` path).
+    ///
+    /// Instead of dequantizing K to f32 and dotting
+    /// ([`Workspace::process_quant_tile`]), the packed K levels are
+    /// scored directly against the query levels prepared by
+    /// [`Workspace::quantize_int_query`] with u8×u8→i32 widening dots.
+    /// With `q ≈ qs·(q̂ − qz)` and `k ≈ ks·(k̂ − kz)`, expanding the dot
+    /// gives
+    ///
+    /// ```text
+    /// dot(q, k) ≈ qs·ks · (Σq̂k̂ − kz·Σq̂ − qz·Σk̂ + d·qz·kz)
+    /// ```
+    ///
+    /// where the parenthesized correction is exact i64 integer
+    /// arithmetic and `qs·ks` is applied **once per (tile, kv_head)**
+    /// — the single rescale before the shared online-softmax update
+    /// ([`Workspace::fold_tile_scores`]). `Σk̂` is computed once per
+    /// (slot, kv_head) and shared across the group's query heads. K is
+    /// never dequantized; V still is (pass 2 needs f32 values), so the
+    /// tile's K dequant traffic disappears from the decode hot path.
+    ///
+    /// The score differs from the f32-score q8 path only by the query
+    /// quantization error: per score at most `qs/2 · Σ|k̂·ks − kz·ks|`
+    /// plus f32 rounding of the rescale — bounded on the parity grid in
+    /// `tests/simd_parity.rs`. **Decode-only by design**: the prefill
+    /// walk is tile-major and already amortizes each tile's K dequant
+    /// across every query row that sees it, so the win there is nil and
+    /// the per-row level cache would have to persist across the walk.
+    pub fn process_quant_tile_int(
+        &mut self,
+        q_row: &[f32],
+        k_tile: &QuantKvTile<'_>,
+        v_tile: &QuantKvTile<'_>,
+        tile_pos: usize,
+        visible: usize,
+        q_pos: usize,
+    ) {
+        let (kvh, d, g) = (self.kv_heads, self.head_dim, self.group);
+        let tile_cap = self.tile_cap;
+        debug_assert!(visible > 0 && visible <= tile_cap);
+        debug_assert_eq!(q_row.len(), self.num_heads * d);
+        debug_assert!(
+            self.qi_levels.len() >= self.num_heads * d,
+            "quantize_int_query must run before the tile walk"
+        );
+        let wph = k_tile.words_per_head;
+        let kr = simd::active();
+        let (q8_dot, q8_sum) = (kr.q8_dot, kr.q8_sum);
+        // V is still dequantized per tile; only the K dequant is skipped.
+        let used = visible * kvh * d;
+        let (kd, mut vd) = self.take_quant_scratch();
+        v_tile.dequantize_into(visible, kvh, d, &mut vd[..used]);
+        for kv_head in 0..kvh {
+            let head0 = kv_head * g;
+            let ks = k_tile.scales[kv_head];
+            let kz = k_tile.zeros[kv_head] as i64;
+            let qz = self.qi_zero[kv_head] as i64;
+            // One rescale per (tile, kv_head): both grid steps at once.
+            // NaN here (non-finite query) poisons every score below.
+            let tile_scale = self.qi_scale[kv_head] * ks;
+            for slot in 0..visible {
+                let w0 = (slot * kvh + kv_head) * wph;
+                let words = &k_tile.words[w0..w0 + wph];
+                let ksum = q8_sum(words, d) as i64;
+                for gq in 0..g {
+                    let head = head0 + gq;
+                    let ql = &self.qi_levels[head * d..(head + 1) * d];
+                    let idot = q8_dot(ql, words, d) as i64;
+                    let qsum = self.qi_sums[head] as i64;
+                    // (q̂−qz)·(k̂−kz) expanded; exact in i64.
+                    let corr = idot - kz * qsum - qz * ksum + d as i64 * qz * kz;
+                    self.w[gq * tile_cap + slot] = tile_scale * corr as f32;
+                }
+            }
+            self.fold_tile_scores(kv_head, tile_pos, visible, q_pos);
+            self.fold_tile_values(kv_head, &vd, kvh * d, visible);
+        }
+        self.put_quant_scratch(kd, vd);
+    }
+
+    /// Seed the threshold-mode skip bound from the query's own key — the
+    /// one key a causal decode row is always guaranteed to see, written
+    /// to the cache just before attention runs.
+    ///
+    /// Per head, the seed is `scale · dot(q_h, k_self)` (the ALiBi bias
+    /// at distance zero is 0), a score the row will actually fold — so
+    /// the final running max satisfies `m_final ≥ seed` and any tile
+    /// rejected against the seed is rejected against a *lower bound* of
+    /// `m_final`: the documented per-score mass bound `e^{log_margin}`
+    /// still holds. This is what lets the **first** visible tile
+    /// participate in score-bound skipping (before PR 8 the bound only
+    /// opened once some tile had set a finite running max).
+    ///
+    /// Drivers must call this **only in threshold (lossy) mode**
+    /// (`skip_threshold > 0`): exact-mode skips are proven against the
+    /// exp-underflow margin from the *running* max and stay bit-identical
+    /// precisely because no seed participates. (The seed itself can
+    /// differ from the folded self-score by ulps of the ALiBi
+    /// progression's rounding — harmless inside threshold mode's slack,
+    /// not acceptable in exact mode.) Int-domain decode also must not
+    /// seed: its folded scores carry quantization error the f32 seed
+    /// doesn't. Non-finite self-scores leave the seed disabled (−∞),
+    /// preserving NaN-refusal.
+    pub fn seed_from_self_key(&mut self, q_row: &[f32], k_self: &[f32]) {
+        let (d, g) = (self.head_dim, self.group);
+        debug_assert_eq!(q_row.len(), self.num_heads * d);
+        debug_assert!(k_self.len() >= self.kv_heads * d);
+        for head in 0..self.num_heads {
+            let kv_head = head / g;
+            let q_vec = &q_row[head * d..(head + 1) * d];
+            let k_vec = &k_self[kv_head * d..(kv_head + 1) * d];
+            let s = dot(q_vec, k_vec) * self.scale;
+            if s.is_finite() {
+                self.m_seed[head] = s;
+            }
+        }
+    }
+
     /// Decide whether a KV tile can be **skipped outright** for query row
     /// `q_row` because its softmax contribution is provably negligible —
     /// the score-bound test behind `SparsityConfig::skip_threshold`.
@@ -394,7 +619,12 @@ impl Workspace {
     /// every score the tile could produce for that head.
     ///
     /// The tile is skippable when, for every head, `ub` sits below the
-    /// running max `m` by at least `−log_margin` (a negative number):
+    /// running max `m` — or, in threshold-mode decode, below the
+    /// self-score seed planted by [`Workspace::seed_from_self_key`],
+    /// whichever is larger (the seed is a proven lower bound on the
+    /// final max, so rejecting against it preserves the mass bound even
+    /// before any tile has run) — by at least `−log_margin` (a negative
+    /// number):
     ///
     /// * With `log_margin == EXACT_LOG_MARGIN` the skip is **bit-exact**:
     ///   every score satisfies `s − m ≤ −128`, `expf` of which underflows
@@ -439,12 +669,24 @@ impl Workspace {
             let kmax = lo.abs().max(hi.abs());
             for gq in 0..g {
                 let head = kv_head * g + gq;
-                let m = self.m[head] as f64;
-                if !m.is_finite() {
-                    // −∞: no mass yet, the tile would *define* m. +∞/NaN:
-                    // upstream poison must keep propagating.
+                let m_run = self.m[head];
+                if m_run.is_nan() || m_run == f32::INFINITY {
+                    // Upstream poison must keep propagating.
                     return false;
                 }
+                // Threshold-mode decode seeds a per-head lower bound on
+                // the final max from the query's self-score
+                // (`seed_from_self_key`), so even the first tile — when
+                // the running max is still −∞ — can be rejected against
+                // it. `max` ignores the −∞ reset; NaN can't reach here
+                // (the seed setter rejects non-finite scores).
+                let eff = m_run.max(self.m_seed[head]);
+                if !eff.is_finite() {
+                    // −∞: no mass yet and no seed — the tile would
+                    // *define* m.
+                    return false;
+                }
+                let m = eff as f64;
                 let q_vec = &q_row[head * d..(head + 1) * d];
                 let (mut pos_mass, mut neg_mass) = (0.0f64, 0.0f64);
                 for &qv in q_vec {
@@ -709,6 +951,88 @@ mod tests {
             out
         };
         assert_eq!(run(true), run(false), "quantized path must share the exact schedule");
+
+        // Integer-domain scoring on the same packed tile: differs from
+        // the f32-score q8 path only by the query's 8-bit quantization
+        // error (the K-side correction is exact i64 arithmetic), so the
+        // outputs stay within a grid-step-sized bound.
+        let mut ws = Workspace::new();
+        ws.configure(&cfg, 8);
+        ws.begin_row();
+        ws.quantize_int_query(&q);
+        ws.process_quant_tile_int(&q, &k_tile, &v_tile, 0, slots, slots - 1);
+        let mut int_out = vec![0.0f32; h * d];
+        ws.finish_row(&mut int_out);
+        let f32_out = run(true);
+        for (i, (a, b)) in int_out.iter().zip(&f32_out).enumerate() {
+            assert!((a - b).abs() < 0.1, "i={i}: int {a} vs f32 {b}");
+        }
+    }
+
+    #[test]
+    fn int_domain_nan_query_poisons_normalizer() {
+        // The f32 path propagates NaN queries into a NaN normalizer;
+        // the integer path must do the same (via the NaN group scale),
+        // not round NaN onto the grid and emit plausible logits.
+        use crate::kvcache::QuantKvTile;
+        use crate::quant::{packing, QuantParams};
+        let (h, kvh, d, slots) = (2usize, 1usize, 8usize, 3usize);
+        let cfg = AttnConfig::dense(h, kvh, d, Bias::None);
+        let mut rng = Rng::new(13);
+        let mut q = rng.normal_vec(h * d, 1.0);
+        q[3] = f32::NAN;
+        let x = rng.normal_vec(slots * kvh * d, 1.0);
+        let wph = d.div_ceil(4);
+        let p = QuantParams::fit(&x, 8);
+        let mut words = vec![0i32; slots * kvh * wph];
+        for s in 0..slots {
+            packing::quant_pack_row(&x[s * d..(s + 1) * d], &p, &mut words[s * wph..(s + 1) * wph]);
+        }
+        let scales = vec![p.scale];
+        let zeros = vec![p.zero];
+        let tile = QuantKvTile { words: &words, scales: &scales, zeros: &zeros, words_per_head: wph };
+        let mut ws = Workspace::new();
+        ws.configure(&cfg, 4);
+        ws.begin_row();
+        ws.quantize_int_query(&q);
+        ws.process_quant_tile_int(&q, &tile, &tile, 0, slots, slots - 1);
+        assert!(ws.l.iter().any(|l| l.is_nan()), "NaN query must poison the normalizer");
+    }
+
+    #[test]
+    fn self_score_seed_opens_first_tile_skipping() {
+        // Threshold mode: with the self-score seed planted, a distant
+        // low-magnitude tile is skippable even though the running max is
+        // still −∞ — and the skipped mass stays inside the margin, so
+        // the output moves by at most a threshold-sized amount.
+        let (h, kvh, d) = (4usize, 2usize, 8usize);
+        let cfg = AttnConfig::dense(h, kvh, d, Bias::Alibi);
+        let mut rng = Rng::new(47);
+        let q_pos = 100_000usize;
+        let q = rng.normal_vec(h * d, 1.0);
+        let self_k = rng.normal_vec(kvh * d, 1.0);
+        let far_k: Vec<f32> = rng.normal_vec(4 * kvh * d, 1.0).iter().map(|x| x * 0.01).collect();
+        let threshold_margin = 0.01f32.ln(); // t = 1e-2
+
+        let mut ws = Workspace::new();
+        ws.configure(&cfg, 4);
+        ws.begin_row();
+        let bounds = tile_bounds(&far_k, 4, kvh, d);
+        let mut kb = |head: usize| bounds[head];
+        // Without the seed: running max is −∞, nothing can be proven.
+        assert!(!ws.tile_skippable(&q, &mut kb, 0, 4, q_pos, threshold_margin));
+        ws.seed_from_self_key(&q, &self_k);
+        assert!(
+            ws.tile_skippable(&q, &mut kb, 0, 4, q_pos, threshold_margin),
+            "seeded bound must open first-tile skipping in threshold mode"
+        );
+        // The seed only ever *feeds the comparison*: (m, l, acc) are
+        // untouched, so a fresh row is indistinguishable state-wise.
+        assert!(ws.m.iter().all(|&m| m == f32::NEG_INFINITY));
+        assert!(ws.l.iter().all(|&l| l == 0.0));
+        // A later begin_row clears the seed (fresh rows don't inherit).
+        ws.begin_row();
+        assert!(!ws.tile_skippable(&q, &mut kb, 0, 4, q_pos, threshold_margin));
     }
 
     #[test]

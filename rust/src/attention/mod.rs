@@ -37,7 +37,7 @@ pub mod paged;
 pub mod sparsity;
 
 pub use alibi::alibi_slopes;
-pub use gqa::{auto_prefill_threads, gqa_attention, gqa_attention_into, AttnConfig, Bias};
+pub use gqa::{auto_prefill_threads, gqa_attention, gqa_attention_into, AttnConfig, Bias, ScoreDomain};
 pub use grouping::{group_heads_by_similarity, merge_kv_heads};
 pub use kernel::{with_workspace, RowState, Workspace};
 pub use paged::{

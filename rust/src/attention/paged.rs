@@ -32,7 +32,7 @@
 //! `process_tile`, packed 8-bit blocks through the kernel's in-tile
 //! dequant scratch, so both cache dtypes share one schedule.
 
-use super::gqa::AttnConfig;
+use super::gqa::{AttnConfig, ScoreDomain};
 use super::kernel::{with_workspace, Workspace};
 use crate::kvcache::{BlockTable, KvBlockView, KvCacheDtype, KvStore, TOMBSTONE};
 use crate::runtime::pool;
@@ -86,6 +86,14 @@ pub fn paged_decode_attention(
 /// metadata) provably underflows is elided too. Returns the number of
 /// score-bound skips (0 under a dense config — the `skipped_tiles`
 /// metrics feed).
+///
+/// Score domain (`cfg.score_domain`): with [`ScoreDomain::Int`] and a
+/// packed (Q8) store, tile *scores* are computed in the integer domain —
+/// the query is quantized once per call and K tiles are scored in
+/// i8×i8→i32 widening dots without dequantizing K at all
+/// (`Workspace::process_quant_tile_int`); V is still dequantized for the
+/// value pass. Bounded-error (see the workspace docs), opt-in via
+/// `--q8-score-domain int`, default [`ScoreDomain::F32`].
 pub fn paged_decode_attention_into(
     cfg: &AttnConfig,
     cache: &dyn KvStore,
@@ -109,10 +117,42 @@ pub fn paged_decode_attention_into(
     let query_block = q_pos / block_size;
     let skip_enabled = sp.skip_enabled();
     let log_margin = sp.log_margin();
+    // Integer-domain scoring only applies to the packed decode walk:
+    // f32 tiles score in f32 regardless (there is nothing to save), so
+    // a mismatched library caller degrades gracefully instead of
+    // quantizing queries for nothing. The CLI rejects the combination.
+    let int_domain = cfg.score_domain == ScoreDomain::Int && cache.dtype() == KvCacheDtype::Q8;
     let mut skipped = 0usize;
 
     ws.configure(cfg, block_size);
     ws.begin_row();
+    if int_domain {
+        ws.quantize_int_query(q);
+    }
+    if skip_enabled && sp.skip_threshold > 0.0 && !int_domain {
+        // Threshold mode: seed the per-head skip bound with the query's
+        // self-score so even the *first* visible tile can participate in
+        // score-bound skipping (the own key is always visible, so the
+        // final running max is ≥ this seed — see
+        // `Workspace::seed_from_self_key`). Not in exact mode (seeding
+        // would break the skip-is-bit-identical contract via the corr=0
+        // rescale's signed zeros) and not in the int domain (an f32 seed
+        // would be compared against integer-domain scores).
+        let own_block = table.blocks()[query_block];
+        debug_assert_ne!(own_block, TOMBSTONE, "query's own block evicted");
+        let self_slot = q_pos % block_size;
+        match cache.block_view(layer, own_block) {
+            KvBlockView::F32 { k, .. } => {
+                ws.seed_from_self_key(q, &k[self_slot * rs..(self_slot + 1) * rs]);
+            }
+            KvBlockView::Q8 { k, .. } => {
+                let (mut kd, vd) = ws.take_quant_scratch();
+                k.dequantize_slot_into(self_slot, kvh, d, &mut kd[..rs]);
+                ws.seed_from_self_key(q, &kd[..rs]);
+                ws.put_quant_scratch(kd, vd);
+            }
+        }
+    }
     for (bi, &block) in table.blocks().iter().enumerate() {
         let tile_pos = bi * block_size;
         if tile_pos >= kv_len {
@@ -147,7 +187,11 @@ pub fn paged_decode_attention_into(
                 ws.process_tile(q, &k[..in_block * rs], &v[..in_block * rs], tile_pos, in_block, q_pos);
             }
             KvBlockView::Q8 { k, v } => {
-                ws.process_quant_tile(q, &k, &v, tile_pos, in_block, q_pos);
+                if int_domain {
+                    ws.process_quant_tile_int(q, &k, &v, tile_pos, in_block, q_pos);
+                } else {
+                    ws.process_quant_tile(q, &k, &v, tile_pos, in_block, q_pos);
+                }
             }
         }
     }
@@ -711,6 +755,72 @@ mod tests {
         let mut cache = QuantizedPagedKvCache::new(1, total_blocks, block_size, kvh, d);
         let mut alloc = BlockAllocator::new(total_blocks, block_size);
         let mut rng = Rng::new(31);
+        let mut tables = Vec::new();
+        for &len in &lens {
+            let mut t = BlockTable::new();
+            assert!(t.reserve(len, &mut alloc));
+            for _ in 0..len {
+                let (b, s) = t.append_slot(block_size);
+                cache.write_token(0, b, s, &rng.normal_vec(kvh * d, 1.0), &rng.normal_vec(kvh * d, 1.0));
+            }
+            tables.push(t);
+        }
+        let refs: Vec<&BlockTable> = tables.iter().collect();
+        let row = 4 * d;
+        let qs = rng.normal_vec(lens.len() * row, 1.0);
+        let run = |threads: usize| {
+            let mut out = vec![0.0f32; lens.len() * row];
+            paged_decode_batch(&cfg, &cache, 0, &qs, &refs, threads, &mut out);
+            out
+        };
+        let serial = run(1);
+        assert_eq!(serial, run(2));
+        assert_eq!(serial, run(3));
+    }
+
+    #[test]
+    fn int_domain_decode_tracks_f32_reference() {
+        // Integer-domain q8 scoring adds query-quantization error on top
+        // of the KV grid error; outputs must stay close to the f32-cache
+        // reference (tight grids live in tests/simd_parity.rs).
+        let mut cfg = AttnConfig::dense(4, 2, 8, Bias::Alibi);
+        cfg.score_domain = ScoreDomain::Int;
+        let (kvh, d, block_size, kv_len) = (2usize, 8usize, 4usize, 13usize);
+        let num_blocks = kv_len.div_ceil(block_size) + 1;
+        let mut fcache = PagedKvCache::new(1, num_blocks, block_size, kvh, d);
+        let mut qcache = QuantizedPagedKvCache::new(1, num_blocks, block_size, kvh, d);
+        let mut alloc = BlockAllocator::new(num_blocks, block_size);
+        let mut table = BlockTable::new();
+        assert!(table.reserve(kv_len, &mut alloc));
+        let mut rng = Rng::new(47);
+        for _ in 0..kv_len {
+            let (b, s) = table.append_slot(block_size);
+            let k = rng.normal_vec(kvh * d, 1.0);
+            let v = rng.normal_vec(kvh * d, 1.0);
+            fcache.write_token(0, b, s, &k, &v);
+            qcache.write_token(0, b, s, &k, &v);
+        }
+        let q = rng.normal_vec(4 * d, 1.0);
+        let f = paged_decode_attention(&cfg, &fcache, 0, &q, &table);
+        let qi = paged_decode_attention(&cfg, &qcache, 0, &q, &table);
+        for (a, b) in f.iter().zip(&qi) {
+            assert!((a - b).abs() < 0.1, "{a} vs {b}");
+        }
+        // On an f32 store the knob is inert: bit-identical to F32 mode.
+        let dense = AttnConfig::dense(4, 2, 8, Bias::Alibi);
+        assert_eq!(f, paged_decode_attention(&dense, &fcache, 0, &q, &table));
+    }
+
+    #[test]
+    fn int_domain_batch_bit_identical_across_threads() {
+        let mut cfg = AttnConfig::dense(4, 2, 8, Bias::None);
+        cfg.score_domain = ScoreDomain::Int;
+        let (kvh, d, block_size) = (2usize, 8usize, 4usize);
+        let lens = [3usize, 11, 6];
+        let total_blocks: usize = lens.iter().map(|l| l.div_ceil(block_size)).sum::<usize>() + 1;
+        let mut cache = QuantizedPagedKvCache::new(1, total_blocks, block_size, kvh, d);
+        let mut alloc = BlockAllocator::new(total_blocks, block_size);
+        let mut rng = Rng::new(37);
         let mut tables = Vec::new();
         for &len in &lens {
             let mut t = BlockTable::new();

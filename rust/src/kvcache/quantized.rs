@@ -86,6 +86,31 @@ impl QuantKvTile<'_> {
             }
         }
     }
+
+    /// Dequantize one slot's `[kv_heads, head_dim]` row into `out` —
+    /// the decode driver reads the query's own key for self-score skip
+    /// seeding without paying a whole-tile dequant.
+    pub fn dequantize_slot_into(
+        &self,
+        slot: usize,
+        kv_heads: usize,
+        head_dim: usize,
+        out: &mut [f32],
+    ) {
+        debug_assert_eq!(out.len(), kv_heads * head_dim);
+        let wph = self.words_per_head;
+        debug_assert!(self.words.len() >= (slot + 1) * kv_heads * wph);
+        for head in 0..kv_heads {
+            let w0 = (slot * kv_heads + head) * wph;
+            packing::unpack_dequant_row(
+                &self.words[w0..w0 + wph],
+                KV_PACK_BITS,
+                self.scales[head],
+                self.zeros[head],
+                &mut out[head * head_dim..(head + 1) * head_dim],
+            );
+        }
+    }
 }
 
 /// One side (K or V) of one layer: packed pool + per-(block, kv_head)

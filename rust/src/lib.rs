@@ -21,7 +21,7 @@
 //! | module | role |
 //! |---|---|
 //! | [`util`] | offline-environment substrates: JSON, CLI, RNG, bench + property-test harnesses |
-//! | [`tensor`] | minimal row-major f32 ndarray with the ops the native backend needs |
+//! | [`tensor`] | minimal row-major f32 ndarray with the ops the native backend needs; [`tensor::simd`] runtime-dispatched kernel table (AVX2/scalar, bit-identical) |
 //! | [`tokenizer`] | byte-level tokenizer (vocab 256 + specials) |
 //! | [`kvcache`] | paged block allocator, block tables, [`kvcache::KvStore`] pools (f32 + packed 8-bit), contiguous baseline, stats |
 //! | [`quant`] | GPTQ (Hessian/Cholesky, error propagation), RTN baseline, int4/int8 packing, fused dequant-matmul ([`quant::matmul`]) |
@@ -115,6 +115,26 @@
 //! `tests/properties.rs`; `RunReport::{skipped_tiles, evicted_blocks}`
 //! meter both (asserted 0 under the dense default). Full contract:
 //! ARCHITECTURE.md "Sparsity contract".
+//!
+//! ## Kernel dispatch — SIMD without losing bit-identity
+//!
+//! Every architecture-specific instruction lives in [`tensor::simd`]: a
+//! table of kernel function pointers (`dot`, `nt_block8`, `axpy`, and
+//! the integer `q8_dot`/`q8_sum`) resolved once at first use — AVX2
+//! when `is_x86_feature_detected!("avx2")` holds, the scalar reference
+//! otherwise (`OPT_GPTQ_NO_SIMD=1` forces scalar; non-x86 builds
+//! compile scalar only). The SIMD kernels freeze the scalar
+//! accumulation order (no FMA contraction), so **dispatch never
+//! changes bits** and every determinism contract in this crate holds
+//! identically on every host (`tests/simd_parity.rs`; `verify.sh` runs
+//! the suite under both settings). The same table powers the opt-in
+//! **integer-domain q8 attention scoring**
+//! (`ModelConfig::score_domain` / `--q8-score-domain int`): the query
+//! is quantized once per (row, kv-head) and packed K tiles are scored
+//! with widening integer dots, rescaled once per tile — no K dequant
+//! on the score side; not bit-identical to f32 scoring (bounded
+//! query-quantization error, tested), hence config-gated off by
+//! default and inert on f32 caches.
 //!
 //! ## Weight storage dtypes — packed GPTQ serving
 //!

@@ -26,9 +26,12 @@
 //! the pool), `--sink-blocks S` keeps the first `S` blocks always
 //! visible, `--skip-threshold T` enables score-bound tile skipping
 //! (`0` = provably exact, `0<T<1` = bounded-error threshold mode) — see
-//! [`sparsity_config`].
+//! [`sparsity_config`]. `--q8-score-domain int` (native + `--kv-dtype
+//! q8` only) scores decode attention in the integer domain straight off
+//! the packed K tiles — bounded-error, default `f32` — see
+//! [`score_domain`].
 
-use opt_gptq::attention::SparsityConfig;
+use opt_gptq::attention::{ScoreDomain, SparsityConfig};
 use opt_gptq::coordinator::{
     AdmissionConfig, AimdConfig, BucketPolicy, EngineConfig, KvCacheDtype, Router, RouterConfig,
     SchedulerConfig, WeightDtype,
@@ -68,7 +71,37 @@ fn model_config(args: &Args) -> ModelConfig {
         eprintln!("unknown model preset '{name}' (tiny|small|mini)");
         std::process::exit(2);
     });
-    cfg.with_sparsity(sparsity_config(args))
+    cfg.with_sparsity(sparsity_config(args)).with_score_domain(score_domain(args))
+}
+
+/// Parse `--q8-score-domain f32|int` (default `"f32"` — every baseline
+/// unchanged). `int` scores q8 decode attention in the integer domain
+/// (widening i8×i8→i32 dots over packed K tiles, one rescale per tile):
+/// bounded-error and **opt-in only**, and it needs both the packed KV
+/// cache to score from and the native kernels to score with.
+fn score_domain(args: &Args) -> ScoreDomain {
+    let name = args.get_str("q8-score-domain", "f32");
+    let sd = ScoreDomain::parse(name).unwrap_or_else(|| {
+        eprintln!("unknown --q8-score-domain '{name}' (f32|int)");
+        std::process::exit(2);
+    });
+    if sd == ScoreDomain::Int {
+        if args.flag("xla") {
+            eprintln!(
+                "--q8-score-domain int requires the native backend (the XLA decode HLO \
+                 scores in f32 over raw pools)"
+            );
+            std::process::exit(2);
+        }
+        if args.get_str("kv-dtype", "f32") != "q8" {
+            eprintln!(
+                "--q8-score-domain int requires --kv-dtype q8 (integer-domain scoring reads \
+                 packed K tiles; an f32 cache has nothing to score in the integer domain)"
+            );
+            std::process::exit(2);
+        }
+    }
+    sd
 }
 
 /// Parse the sparse-attention flags into a [`SparsityConfig`]. Defaults
@@ -418,5 +451,10 @@ fn cmd_info(args: &Args) -> i32 {
         mha.kv_bytes_per_token(),
         cfg.group_size()
     );
+    println!(
+        "kernel table : {} (runtime dispatch; OPT_GPTQ_NO_SIMD=1 forces scalar)",
+        opt_gptq::tensor::simd::active().name
+    );
+    println!("score domain : {} (--q8-score-domain)", cfg.score_domain.name());
     0
 }

@@ -1,6 +1,6 @@
 //! Model shape configuration and presets.
 
-use crate::attention::gqa::{AttnConfig, Bias};
+use crate::attention::gqa::{AttnConfig, Bias, ScoreDomain};
 use crate::attention::sparsity::SparsityConfig;
 
 /// Llama-style decoder configuration.
@@ -29,6 +29,11 @@ pub struct ModelConfig {
     /// it, and artifact config checks compare shapes with
     /// [`ModelConfig::shape_eq`].
     pub sparsity: SparsityConfig,
+    /// Attention score arithmetic domain for the q8 decode walk (CLI
+    /// `--q8-score-domain`). Like `sparsity`, a **runtime serving
+    /// knob**: not part of the weight artifact, ignored by
+    /// [`ModelConfig::shape_eq`], default `F32` everywhere.
+    pub score_domain: ScoreDomain,
 }
 
 impl ModelConfig {
@@ -55,21 +60,33 @@ impl ModelConfig {
             head_dim: self.head_dim(),
             bias: if self.alibi { Bias::Alibi } else { Bias::None },
             sparsity: self.sparsity,
+            score_domain: self.score_domain,
         }
     }
 
-    /// Shape equality — every field except the runtime [`SparsityConfig`]
-    /// knob. Weight artifacts pin the shape, not the serving policy, so
-    /// loaders compare with this instead of `==`.
+    /// Shape equality — every field except the runtime serving knobs
+    /// ([`SparsityConfig`], [`ScoreDomain`]). Weight artifacts pin the
+    /// shape, not the serving policy, so loaders compare with this
+    /// instead of `==`.
     pub fn shape_eq(&self, other: &ModelConfig) -> bool {
-        ModelConfig { sparsity: SparsityConfig::dense(), ..*self }
-            == ModelConfig { sparsity: SparsityConfig::dense(), ..*other }
+        let norm = |c: &ModelConfig| ModelConfig {
+            sparsity: SparsityConfig::dense(),
+            score_domain: ScoreDomain::F32,
+            ..*c
+        };
+        norm(self) == norm(other)
     }
 
     /// This config with a different sparsity policy (builder-style, for
     /// CLI flag application after a preset/artifact lookup).
     pub fn with_sparsity(&self, sparsity: SparsityConfig) -> ModelConfig {
         ModelConfig { sparsity, ..*self }
+    }
+
+    /// This config with a different score domain (builder-style, for
+    /// CLI flag application after a preset/artifact lookup).
+    pub fn with_score_domain(&self, score_domain: ScoreDomain) -> ModelConfig {
+        ModelConfig { score_domain, ..*self }
     }
 
     /// Total parameter count.
@@ -111,6 +128,7 @@ impl ModelConfig {
             alibi: true,
             rms_eps: 1e-5,
             sparsity: SparsityConfig::dense(),
+            score_domain: ScoreDomain::F32,
         }
     }
 
@@ -127,6 +145,7 @@ impl ModelConfig {
             alibi: true,
             rms_eps: 1e-5,
             sparsity: SparsityConfig::dense(),
+            score_domain: ScoreDomain::F32,
         }
     }
 
@@ -144,6 +163,7 @@ impl ModelConfig {
             alibi: true,
             rms_eps: 1e-5,
             sparsity: SparsityConfig::dense(),
+            score_domain: ScoreDomain::F32,
         }
     }
 

@@ -30,8 +30,9 @@
 use super::config::ModelConfig;
 use super::weights::{LayerWeights, ModelWeights};
 use crate::quant::matmul::{
-    auto_matmul_threads, dense_matmul_rows_parallel, packed_matmul_rows_parallel,
-    MIN_DENSE_ROWS_PER_JOB, MIN_PACKED_ROWS_PER_JOB,
+    auto_gemv_threads, auto_matmul_threads, dense_matmul_rows_parallel,
+    packed_gemv_cols_parallel, packed_matmul_rows_parallel, MIN_DENSE_ROWS_PER_JOB,
+    MIN_PACKED_ROWS_PER_JOB,
 };
 use crate::quant::packing::{pack_rows, PackedMatrix};
 use crate::quant::QuantizedMatrix;
@@ -427,9 +428,10 @@ impl PackedModelWeights {
             max_seq,
             alibi,
             rms_eps,
-            // Runtime serving knob, never artifact state (see
-            // `ModelConfig::sparsity`).
+            // Runtime serving knobs, never artifact state (see
+            // `ModelConfig::sparsity` / `ModelConfig::score_domain`).
             sparsity: Default::default(),
+            score_domain: Default::default(),
         };
         // Config sanity before any dimension math (kv_dim/head_dim
         // assert on these; a corrupt header must error, not panic).
@@ -562,6 +564,13 @@ impl WeightStore for PackedModelWeights {
     }
     fn proj_into(&self, layer: usize, p: Proj, a: &[f32], m: usize, threads: usize, out: &mut [f32]) {
         let w = &self.layers[layer].proj(p).w;
+        // Decode GEMV (m == 1): the row split is empty, so auto-sized
+        // calls fan the *output columns* instead (tile-aligned spans,
+        // bit-identical to serial — see `packed_gemv_cols_parallel`).
+        // A caller-pinned width keeps the legacy row-split behaviour.
+        if m == 1 && threads == 0 {
+            return packed_gemv_cols_parallel(a, w, auto_gemv_threads(w.rows, w.cols), out);
+        }
         let threads = if threads == 0 {
             auto_matmul_threads(m, w.rows, w.cols, MIN_PACKED_ROWS_PER_JOB)
         } else {

@@ -193,10 +193,12 @@ impl ModelWeights {
             max_seq,
             alibi,
             rms_eps: f32::from_le_bytes(eps_b),
-            // Sparsity is a runtime serving knob, not artifact state:
-            // loaded weights always come back dense and the caller
-            // applies its CLI policy afterwards (`with_sparsity`).
+            // Sparsity and score domain are runtime serving knobs, not
+            // artifact state: loaded weights always come back dense /
+            // f32-scored and the caller applies its CLI policy
+            // afterwards (`with_sparsity` / `with_score_domain`).
             sparsity: Default::default(),
+            score_domain: Default::default(),
         };
         let read_f32s = |f: &mut dyn Read, n: usize| -> Result<Vec<f32>> {
             let mut bytes = vec![0u8; n * 4];

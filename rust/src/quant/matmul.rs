@@ -40,10 +40,20 @@
 //! re-dequantizes the tiles it walks, so jobs are capped at
 //! [`MIN_PACKED_ROWS_PER_JOB`] rows minimum to keep the duplicated
 //! dequant a small fraction of each job's MAC work. Outputs are
-//! bit-identical at every width (rows are independent).
+//! bit-identical at every width (rows are independent). At decode
+//! (`m == 1`) the row split is empty — [`packed_gemv_cols_parallel`]
+//! fans the *output columns* instead, in [`ROW_TILE`]-aligned spans that
+//! preserve the serial schedule per element (and dequantize each tile
+//! exactly once across jobs).
+//!
+//! All f32 inner loops (the 8-row chains and the dot tail) go through
+//! the runtime-dispatched kernel table (`crate::tensor::simd`), whose
+//! SIMD entries are bit-identical to the scalar reference — the
+//! bit-identity contract above survives dispatch unchanged.
 
 use super::packing::PackedMatrix;
 use crate::runtime::pool;
+use crate::tensor::simd;
 use std::cell::RefCell;
 
 /// W rows dequantized per tile (multiple of 8 — required for the
@@ -111,6 +121,30 @@ pub fn packed_matmul_nt_into(
     ws: &mut MatmulWorkspace,
     out: &mut [f32],
 ) {
+    packed_matmul_nt_into_with(simd::active(), a, m, w, ws, out)
+}
+
+/// [`packed_matmul_nt_into`] pinned to the scalar kernel table — the bit
+/// reference the SIMD parity suite (`tests/simd_parity.rs`) compares the
+/// dispatched path against. Not a hot path.
+pub fn packed_matmul_nt_into_scalar(
+    a: &[f32],
+    m: usize,
+    w: &PackedMatrix,
+    ws: &mut MatmulWorkspace,
+    out: &mut [f32],
+) {
+    packed_matmul_nt_into_with(simd::scalar(), a, m, w, ws, out)
+}
+
+fn packed_matmul_nt_into_with(
+    kr: &simd::Kernels,
+    a: &[f32],
+    m: usize,
+    w: &PackedMatrix,
+    ws: &mut MatmulWorkspace,
+    out: &mut [f32],
+) {
     let k = w.cols;
     let n = w.rows;
     assert_eq!(a.len(), m * k, "packed_matmul_nt_into: bad A length");
@@ -129,31 +163,76 @@ pub fn packed_matmul_nt_into(
         }
         let deq = &ws.deq;
         // Complete 8-column blocks of the reference schedule inside this
-        // tile (`tile_start` and `blk_end` are both multiples of 8).
+        // tile (`tile_start` and `blk_end` are both multiples of 8); the
+        // 8-row chains and the dot tail go through the dispatched kernel
+        // table, whose SIMD entries are bit-identical to the scalar ones
+        // (frozen accumulation order — see `tensor::simd`).
         let blk_end = tile_end.min(n8);
         for i in 0..m {
             let a_row = &a[i * k..(i + 1) * k];
             let c_row = &mut out[i * n..(i + 1) * n];
             let mut j = tile_start;
             while j < blk_end {
-                let rows: [&[f32]; 8] = std::array::from_fn(|r| {
-                    let rr = j - tile_start + r;
-                    &deq[rr * k..(rr + 1) * k]
-                });
+                let r0 = j - tile_start;
                 let mut s = [0.0f32; 8];
-                for (t, &a_v) in a_row.iter().enumerate() {
-                    for r in 0..8 {
-                        s[r] += a_v * rows[r][t];
-                    }
-                }
+                (kr.nt_block8)(a_row, &deq[r0 * k..(r0 + 8) * k], &mut s);
                 c_row[j..j + 8].copy_from_slice(&s);
                 j += 8;
             }
             // Global tail columns (only the last tile can hold any).
             for j in blk_end..tile_end {
                 let rr = j - tile_start;
-                c_row[j] = crate::tensor::dot(a_row, &deq[rr * k..(rr + 1) * k]);
+                c_row[j] = (kr.dot)(a_row, &deq[rr * k..(rr + 1) * k]);
             }
+        }
+        tile_start = tile_end;
+    }
+}
+
+/// One job's span of the column-split decode GEMV: W rows
+/// `row_start..row_end` (`row_start` must be [`ROW_TILE`]-aligned)
+/// against the single activation row `a`, writing
+/// `out[0..row_end-row_start]`.
+///
+/// Because job boundaries are tile-aligned, the span's tile partition
+/// and its 8-chain/tail split (computed against the *global* `n8`) are
+/// exactly the serial kernel's — each output element sees the identical
+/// instruction sequence regardless of how spans are assigned to jobs.
+fn packed_gemv_span(
+    kr: &simd::Kernels,
+    a: &[f32],
+    w: &PackedMatrix,
+    row_start: usize,
+    row_end: usize,
+    ws: &mut MatmulWorkspace,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(row_start % ROW_TILE, 0, "span must start on a tile boundary");
+    debug_assert!(row_end <= w.rows);
+    debug_assert_eq!(out.len(), row_end - row_start);
+    let k = w.cols;
+    let n8 = w.rows / 8 * 8;
+    ws.ensure(ROW_TILE.min(row_end - row_start) * k);
+    let mut tile_start = row_start;
+    while tile_start < row_end {
+        let tile_rows = ROW_TILE.min(row_end - tile_start);
+        let tile_end = tile_start + tile_rows;
+        for r in 0..tile_rows {
+            w.dequant_row_into(tile_start + r, &mut ws.deq[r * k..(r + 1) * k]);
+        }
+        let deq = &ws.deq;
+        let blk_end = tile_end.min(n8);
+        let mut j = tile_start;
+        while j < blk_end {
+            let r0 = j - tile_start;
+            let mut s = [0.0f32; 8];
+            (kr.nt_block8)(a, &deq[r0 * k..(r0 + 8) * k], &mut s);
+            out[j - row_start..j - row_start + 8].copy_from_slice(&s);
+            j += 8;
+        }
+        for j in blk_end..tile_end {
+            let rr = j - tile_start;
+            out[j - row_start] = (kr.dot)(a, &deq[rr * k..(rr + 1) * k]);
         }
         tile_start = tile_end;
     }
@@ -241,6 +320,81 @@ pub fn packed_matmul_rows_parallel(
     rows_parallel(a, m, w.cols, w.rows, threads, MIN_PACKED_ROWS_PER_JOB, out, &|a_chunk, rows, out_chunk| {
         with_matmul_workspace(|ws| packed_matmul_nt_into(a_chunk, rows, w, ws, out_chunk));
     });
+}
+
+/// Minimum W rows (output columns) per job in the decode-GEMV column
+/// fan-out. Jobs must be a whole number of [`ROW_TILE`]s for the
+/// bit-identity argument, and unlike the row fan-out there is **no
+/// duplicated dequant to amortize** — the column split partitions W's
+/// tiles disjointly — so one tile per job is already sound; the MAC
+/// floor in [`auto_gemv_threads`] is what keeps dispatch overhead small.
+pub const MIN_GEMV_COLS_PER_JOB: usize = ROW_TILE;
+
+/// Floor on per-job multiply-accumulate work for the GEMV column split.
+/// Lower than the row-path `MIN_MACS_PER_JOB`: a decode GEMV is
+/// memory-bound on packed weight bytes and each job streams a disjoint
+/// span of them, so modest jobs still scale; `m == 1` work can never
+/// reach the row path's floor at serving shapes anyway.
+const MIN_GEMV_MACS_PER_JOB: usize = 1 << 18;
+
+/// Auto-size the decode-GEMV column fan-out for an `[1, k]·[n, k]ᵀ`
+/// call: bounded by the pool, a whole-tile floor
+/// ([`MIN_GEMV_COLS_PER_JOB`]), and a MAC floor
+/// (`MIN_GEMV_MACS_PER_JOB`). Purely a performance knob — outputs are
+/// bit-identical at every width. The complement of
+/// [`auto_matmul_threads`], which keeps `m == 1` calls serial because
+/// *row* fan-out has no rows to split at decode.
+pub fn auto_gemv_threads(n: usize, k: usize) -> usize {
+    let by_cols = (n / MIN_GEMV_COLS_PER_JOB.max(1)).max(1);
+    let by_work = (n.saturating_mul(k) / MIN_GEMV_MACS_PER_JOB).max(1);
+    pool::global().size().min(by_cols).min(by_work).max(1)
+}
+
+/// Column-split decode GEMV: `out = a · wᵀ` for a **single** activation
+/// row, with W's rows (the output columns) fanned across the persistent
+/// worker pool in contiguous [`ROW_TILE`]-aligned spans — the decode-side
+/// complement of [`packed_matmul_rows_parallel`], whose row split is
+/// empty at `m == 1`.
+///
+/// **Bit-identical to the serial kernel at every width**: span
+/// boundaries are tile-aligned, so each job's tile partition and
+/// 8-chain/tail schedule are exactly the serial walk's over its rows;
+/// every output element is produced by exactly one job with an unchanged
+/// instruction order, and there is no cross-job reduction. Each W tile
+/// is dequantized exactly once across all jobs (disjoint spans), so the
+/// fan-out adds no dequant work — unlike the row split, which
+/// re-dequantizes per job.
+pub fn packed_gemv_cols_parallel(a: &[f32], w: &PackedMatrix, threads: usize, out: &mut [f32]) {
+    let k = w.cols;
+    let n = w.rows;
+    assert_eq!(a.len(), k, "packed_gemv_cols_parallel: bad A length");
+    assert_eq!(out.len(), n, "packed_gemv_cols_parallel: bad out length");
+    if n == 0 {
+        return;
+    }
+    let tiles = n.div_ceil(ROW_TILE);
+    let threads = threads.clamp(1, tiles);
+    if threads == 1 {
+        return with_matmul_workspace(|ws| packed_matmul_nt_into(a, 1, w, ws, out));
+    }
+    let per_tiles = tiles.div_ceil(threads);
+    let mut jobs: Vec<pool::Job<'_>> = Vec::with_capacity(tiles.div_ceil(per_tiles));
+    let mut rest = out;
+    let mut tile0 = 0usize;
+    while tile0 < tiles {
+        let take = per_tiles.min(tiles - tile0);
+        let row_start = tile0 * ROW_TILE;
+        let row_end = n.min((tile0 + take) * ROW_TILE);
+        let (chunk_out, tail) = std::mem::take(&mut rest).split_at_mut(row_end - row_start);
+        rest = tail;
+        jobs.push(Box::new(move || {
+            with_matmul_workspace(|ws| {
+                packed_gemv_span(simd::active(), a, w, row_start, row_end, ws, chunk_out)
+            });
+        }));
+        tile0 += take;
+    }
+    pool::global().run(jobs);
 }
 
 /// Dense twin of [`packed_matmul_rows_parallel`]: `tensor::matmul_nt`'s
@@ -361,5 +515,56 @@ mod tests {
         assert_eq!(auto_matmul_threads(1, 4096, 4096, floor), 1, "decode GEMV stays serial");
         assert_eq!(auto_matmul_threads(7, 1 << 14, 1 << 14, floor), 1, "below the row floor");
         assert!(auto_matmul_threads(256, 1024, 1024, MIN_DENSE_ROWS_PER_JOB) >= 1);
+    }
+
+    #[test]
+    fn gemv_col_split_bit_identical_at_every_width() {
+        // The column fan-out must equal the serial m == 1 kernel exactly:
+        // ragged n (tail columns, partial last tile, sub-8 widths) and
+        // absurd requested widths included.
+        let mut rng = Rng::new(29);
+        for &(k, n, bits, group) in &[
+            (24usize, 7usize, 4u32, 8usize),     // single sub-8 tile
+            (16, 70, 8, 16),                     // 8-chains + tail in one tile
+            (33, ROW_TILE + 12, 4, 7),           // tile boundary + ragged tail
+            (8, 3 * ROW_TILE + 5, 2, 3),         // many tiles
+        ] {
+            let wd = rng.normal_vec(n * k, 1.0);
+            let packed = super::super::pack_rows(&rtn_quantize(&wd, n, k, bits, group));
+            let a = rng.normal_vec(k, 1.0);
+            let serial = packed_matmul_nt(&a, 1, &packed);
+            for threads in [1usize, 2, 3, 5, 64] {
+                let mut out = vec![0.0f32; n];
+                packed_gemv_cols_parallel(&a, &packed, threads, &mut out);
+                assert_eq!(out, serial, "k={k} n={n} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn auto_gemv_threads_heuristic() {
+        assert_eq!(auto_gemv_threads(ROW_TILE - 1, 1 << 14), 1, "sub-tile output stays serial");
+        assert_eq!(auto_gemv_threads(4 * ROW_TILE, 16), 1, "tiny MAC volume stays serial");
+        assert!(auto_gemv_threads(3072, 768) >= 1);
+        // The width never exceeds what tile-aligned jobs can use.
+        assert!(auto_gemv_threads(usize::MAX / 4, 4) <= pool::global().size().max(1));
+    }
+
+    #[test]
+    fn scalar_pinned_packed_matmul_matches_dispatched() {
+        // Dispatch contract: whatever table is active, the packed kernel
+        // must be bit-identical to its scalar-pinned twin.
+        let mut rng = Rng::new(31);
+        for &(m, k, n) in &[(1usize, 16usize, 9usize), (3, 33, 70), (2, 8, ROW_TILE + 3)] {
+            let wd = rng.normal_vec(n * k, 1.0);
+            let packed = super::super::pack_rows(&rtn_quantize(&wd, n, k, 4, 8));
+            let a = rng.normal_vec(m * k, 1.0);
+            let mut ws = MatmulWorkspace::new();
+            let mut got = vec![0.0f32; m * n];
+            let mut want = vec![0.0f32; m * n];
+            packed_matmul_nt_into(&a, m, &packed, &mut ws, &mut got);
+            packed_matmul_nt_into_scalar(&a, m, &packed, &mut ws, &mut want);
+            assert_eq!(got, want, "m={m} k={k} n={n}");
+        }
     }
 }

@@ -26,7 +26,8 @@ pub mod rtn;
 pub use error::{layer_mse, relative_error};
 pub use gptq::{gptq_quantize, GptqConfig, HessianAccumulator};
 pub use matmul::{
-    packed_matmul_nt, packed_matmul_nt_into, packed_matmul_rows_parallel, MatmulWorkspace,
+    auto_gemv_threads, packed_gemv_cols_parallel, packed_matmul_nt, packed_matmul_nt_into,
+    packed_matmul_nt_into_scalar, packed_matmul_rows_parallel, MatmulWorkspace,
 };
 pub use packing::{pack_rows, unpack_rows, PackedMatrix};
 pub use rtn::rtn_quantize;

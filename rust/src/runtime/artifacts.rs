@@ -58,9 +58,10 @@ impl ArtifactManifest {
             max_seq: req("max_seq")?,
             alibi: cfg.get("alibi").and_then(|b| b.as_bool()).context("config missing 'alibi'")?,
             rms_eps: cfg.get_f64("rms_eps").context("config missing 'rms_eps'")? as f32,
-            // Runtime serving knob, never artifact state (see
-            // `ModelConfig::sparsity`).
+            // Runtime serving knobs, never artifact state (see
+            // `ModelConfig::sparsity` / `ModelConfig::score_domain`).
             sparsity: Default::default(),
+            score_domain: Default::default(),
         };
         let mut entries = Vec::new();
         for e in v.get("entries").and_then(|e| e.as_arr()).context("manifest missing 'entries'")? {

@@ -144,6 +144,22 @@ pub trait Backend: Send {
     fn weight_bytes(&self) -> usize {
         0
     }
+
+    /// Which kernel table this backend's hot loops resolved to at
+    /// startup (`"scalar"`, `"avx2"` — see `tensor::simd`); `"n/a"` for
+    /// backends that do not run the native kernels. Observability
+    /// surface (`info`/metrics), never a behavioural switch.
+    fn kernel_dispatch(&self) -> &'static str {
+        "n/a"
+    }
+
+    /// Whether this backend can score q8 decode attention in the
+    /// integer domain (`ScoreDomain::Int`, CLI `--q8-score-domain int`).
+    /// Only the native kernel implements the widening i8×i8→i32 path;
+    /// the engine/CLI checks this before accepting the flag.
+    fn supports_int_score_domain(&self) -> bool {
+        false
+    }
 }
 
 /// Pure-Rust backend executing [`NativeModel`].
@@ -279,6 +295,14 @@ impl Backend for NativeBackend {
 
     fn weight_bytes(&self) -> usize {
         self.model.store().weight_bytes()
+    }
+
+    fn kernel_dispatch(&self) -> &'static str {
+        crate::tensor::simd::active().name
+    }
+
+    fn supports_int_score_domain(&self) -> bool {
+        true
     }
 }
 

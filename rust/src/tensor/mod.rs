@@ -5,6 +5,15 @@
 //! optionally transposed RHS, softmax, RMSNorm, SiLU, elementwise ops).
 //! The XLA backend does not use this module on its hot path; the native
 //! backend and the benches do.
+//!
+//! The reduction kernels ([`dot`], the 8-column block inside
+//! [`matmul_nt_into`]) route through the runtime-dispatched SIMD table in
+//! [`simd`] — scalar reference on every target, AVX2 twins (bit-identical
+//! by frozen accumulation order) picked once per process on x86_64 hosts
+//! that have them. [`dot_scalar`] / [`matmul_nt_into_scalar`] pin the
+//! reference table for parity tests and benches.
+
+pub mod simd;
 
 use std::fmt;
 
@@ -212,9 +221,29 @@ impl Tensor {
 /// reproduces exactly this order over dequantized row-tiles, which is
 /// what makes packed serving bit-identical to the dense reconstruction.
 /// The 8-row blocking loads each A element once per 8 outputs and keeps
-/// the FMA pipeline full (decode is a `[1,k]·[n,k]ᵀ` GEMV — this
-/// blocking is its whole hot path).
+/// the multiply-add pipeline full (decode is a `[1,k]·[n,k]ᵀ` GEMV —
+/// this blocking is its whole hot path). Runs on the process-wide
+/// [`simd`] kernel table; [`matmul_nt_into_scalar`] pins the scalar
+/// reference (bit-identical by the dispatch contract).
 pub fn matmul_nt_into(a: &[f32], m: usize, k: usize, b: &[f32], n: usize, out: &mut [f32]) {
+    matmul_nt_into_with(simd::active(), a, m, k, b, n, out);
+}
+
+/// [`matmul_nt_into`] forced onto the scalar reference table — the
+/// bit-reference side of `tests/simd_parity.rs` and the bench baseline.
+pub fn matmul_nt_into_scalar(a: &[f32], m: usize, k: usize, b: &[f32], n: usize, out: &mut [f32]) {
+    matmul_nt_into_with(simd::scalar(), a, m, k, b, n, out);
+}
+
+fn matmul_nt_into_with(
+    kr: &simd::Kernels,
+    a: &[f32],
+    m: usize,
+    k: usize,
+    b: &[f32],
+    n: usize,
+    out: &mut [f32],
+) {
     assert_eq!(a.len(), m * k, "matmul_nt_into: bad A length");
     assert_eq!(b.len(), n * k, "matmul_nt_into: bad B length");
     assert_eq!(out.len(), m * n, "matmul_nt_into: bad out length");
@@ -224,47 +253,34 @@ pub fn matmul_nt_into(a: &[f32], m: usize, k: usize, b: &[f32], n: usize, out: &
         let c_row = &mut out[i * n..(i + 1) * n];
         let mut j = 0;
         while j < n8 {
-            let rows: [&[f32]; 8] = std::array::from_fn(|r| &b[(j + r) * k..(j + r + 1) * k]);
             let mut s = [0.0f32; 8];
-            for (t, &a_v) in a_row.iter().enumerate() {
-                for r in 0..8 {
-                    s[r] += a_v * rows[r][t];
-                }
-            }
+            (kr.nt_block8)(a_row, &b[j * k..(j + 8) * k], &mut s);
             c_row[j..j + 8].copy_from_slice(&s);
             j += 8;
         }
         for j in n8..n {
-            c_row[j] = dot(a_row, &b[j * k..(j + 1) * k]);
+            c_row[j] = (kr.dot)(a_row, &b[j * k..(j + 1) * k]);
         }
     }
 }
 
-/// Dot product with 8-way manual unrolling, matching `matmul_nt`'s
-/// 8-row blocking (hot path of the GEMV tail and the attention kernel's
-/// score pass). Eight independent accumulator chains keep the FMA
-/// pipeline full; the 8-element subslices let the compiler drop bounds
-/// checks and vectorize the inner block.
+/// Dot product with 8-way unrolling, matching `matmul_nt`'s 8-row
+/// blocking (hot path of the GEMV tail and the attention kernel's score
+/// pass). Dispatches to the process-wide [`simd`] table; the scalar
+/// reference body (eight independent accumulator chains, fixed combine
+/// tree) lives in [`simd`] and [`dot_scalar`] pins it.
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
-    let n = a.len();
-    let n8 = n / 8 * 8;
-    let mut s = [0.0f32; 8];
-    let mut i = 0;
-    while i < n8 {
-        let aa = &a[i..i + 8];
-        let bb = &b[i..i + 8];
-        for r in 0..8 {
-            s[r] += aa[r] * bb[r];
-        }
-        i += 8;
-    }
-    let mut total = ((s[0] + s[4]) + (s[1] + s[5])) + ((s[2] + s[6]) + (s[3] + s[7]));
-    for j in n8..n {
-        total += a[j] * b[j];
-    }
-    total
+    (simd::active().dot)(a, b)
+}
+
+/// [`dot`] forced onto the scalar reference — the crate's frozen
+/// accumulation order, verbatim (see `simd::SCALAR`).
+#[inline]
+pub fn dot_scalar(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    (simd::SCALAR.dot)(a, b)
 }
 
 /// Numerically-stable in-place softmax of one row.
@@ -398,6 +414,23 @@ mod tests {
             let mut out = vec![0.0f32; m * n];
             matmul_nt_into(a.data(), m, k, b.data(), n, &mut out);
             assert_eq!(c.data(), out.as_slice(), "m={m} k={k} n={n}");
+        }
+    }
+
+    #[test]
+    fn dispatched_matmul_bit_identical_to_scalar_reference() {
+        let mut rng = crate::util::rng::Rng::new(11);
+        for (m, k, n) in [(1, 16, 9), (2, 7, 8), (3, 64, 24), (4, 33, 23)] {
+            let a = rng.normal_vec(m * k, 1.0);
+            let b = rng.normal_vec(n * k, 1.0);
+            let mut got = vec![0.0f32; m * n];
+            let mut want = vec![0.0f32; m * n];
+            matmul_nt_into(&a, m, k, &b, n, &mut got);
+            matmul_nt_into_scalar(&a, m, k, &b, n, &mut want);
+            assert_eq!(got, want, "m={m} k={k} n={n}");
+            let g = dot(&a[..k], &b[..k]);
+            let w = dot_scalar(&a[..k], &b[..k]);
+            assert_eq!(g.to_bits(), w.to_bits(), "k={k}");
         }
     }
 

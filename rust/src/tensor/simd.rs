@@ -1,0 +1,565 @@
+//! Runtime-dispatched SIMD kernels — the **only** module in the crate
+//! where `unsafe` compute code and `std::arch` are allowed
+//! (grep-gated by `scripts/verify.sh`).
+//!
+//! # Kernel dispatch contract
+//!
+//! One [`Kernels`] table of plain function pointers is selected **once**
+//! per process ([`active`]): the AVX2 table when the host CPU reports
+//! `avx2` at runtime (`is_x86_feature_detected!`), the scalar table
+//! otherwise. On non-x86_64 targets only the scalar table exists and the
+//! detector is compiled out (`#[cfg]` on the `detect` twin below), so the
+//! crate builds everywhere without feature flags. Setting the
+//! `OPT_GPTQ_NO_SIMD` environment variable (to anything but `0`/empty)
+//! before first use forces the scalar table — `verify.sh` runs the whole
+//! test suite a second time under it so both paths stay green.
+//!
+//! **The scalar table is the bit-reference.** Every SIMD kernel must
+//! return *bit-identical* output to its scalar twin on every input, so
+//! dispatch is invisible to all determinism contracts (thread-width,
+//! interleaving, weight-dtype parity). That holds because the
+//! accumulation order is frozen:
+//!
+//! * [`Kernels::dot`] — the scalar reference keeps 8 independent lane
+//!   accumulators over the unrolled body (`s[r] += a[i+r] * b[i+r]`) and
+//!   combines them as `((s0+s4)+(s1+s5)) + ((s2+s6)+(s3+s7))`, then folds
+//!   the `< 8` tail sequentially. The AVX2 kernel keeps the same 8 lanes
+//!   in one `__m256` register; its `extractf128`/`add_ps` reduction
+//!   produces `[s0+s4, s1+s5, s2+s6, s3+s7]` and the final two adds
+//!   reproduce the scalar combine tree exactly.
+//! * [`Kernels::nt_block8`] — 8 output columns advance together, one
+//!   `t`-step at a time (`s[r] += a[t] * row_r[t]`). The AVX2 kernel
+//!   loads 8 row vectors per 8 `t`-steps, transposes them in-register
+//!   (unpack/shuffle/permute2f128) into column vectors, and accumulates
+//!   the columns in ascending `t` order — lane `r` sees precisely the
+//!   scalar sequence of adds.
+//! * [`Kernels::axpy`] — element-wise `y[i] += s * x[i]`; each output
+//!   element is one multiply and one add in both kernels, so identity is
+//!   structural.
+//! * [`Kernels::q8_dot`] / [`Kernels::q8_sum`] — pure integer arithmetic
+//!   (`u8`×`u8`→`i32` widening). Integer addition is associative, so any
+//!   reduction order is exact and no freezing is needed.
+//!
+//! **FMA is deliberately not used or detected.** `_mm256_fmadd_ps` skips
+//! the intermediate rounding of the product that the scalar `s += a * b`
+//! performs, so a fused kernel cannot be bit-identical to the reference.
+//! Until the bit-identity contract is renegotiated (ROADMAP "Standing
+//! contracts"), the SIMD kernels use `mul_ps` + `add_ps` only and the
+//! detector asks for `avx2` alone.
+//!
+//! The q8 kernels read packed KV levels (4 `u8` levels per `i32` word,
+//! little-endian within the word — `quant::packing`'s layout). The AVX2
+//! versions reinterpret the word array as bytes, which matches the
+//! scalar shift/mask decode only on little-endian hosts; x86_64 implies
+//! little-endian, and every other target takes the (endian-independent)
+//! scalar table, so the cast is confined to where it is correct.
+//!
+//! `tests/simd_parity.rs` holds the active-vs-scalar bit-identity grid;
+//! ARCHITECTURE.md "Kernel dispatch contract" is the prose twin of this
+//! header.
+
+use std::sync::OnceLock;
+
+/// A table of the hot-path kernels, dispatched once per process.
+///
+/// `dot`, `nt_block8` and `axpy` are the f32 serving kernels behind
+/// `tensor::dot` / `tensor::matmul_nt_into`, the fused dequant-matmul
+/// tile loop (`quant::matmul`) and the attention value-accumulate pass
+/// (`attention::kernel`). `q8_dot` / `q8_sum` are the integer-domain
+/// scoring primitives used by the opt-in `--q8-score-domain int` path.
+#[derive(Clone, Copy)]
+pub struct Kernels {
+    /// Which table this is: `"scalar"` or `"avx2"` (the backend
+    /// capability surface reports it).
+    pub name: &'static str,
+    /// `dot(a, b)` over `a.len()` elements — the crate-wide
+    /// accumulation-order contract for matmul reductions.
+    pub dot: fn(&[f32], &[f32]) -> f32,
+    /// `nt_block8(a_row, b8, out)`: 8 dot products of `a_row` against 8
+    /// contiguous rows of length `a_row.len()` stored back-to-back in
+    /// `b8`, advancing all 8 accumulators together one `t`-step at a
+    /// time (the matmul 8-column block body).
+    pub nt_block8: fn(&[f32], &[f32], &mut [f32; 8]),
+    /// `axpy(s, x, y)`: `y[i] += s * x[i]` element-wise.
+    pub axpy: fn(f32, &[f32], &mut [f32]),
+    /// `q8_dot(q, words, d)`: widening integer dot of `d` `u8` query
+    /// levels against `d` packed `u8` KV levels (4 per `i32` word,
+    /// little-endian). Exact — integer sums have no rounding.
+    pub q8_dot: fn(&[u8], &[i32], usize) -> i32,
+    /// `q8_sum(words, d)`: sum of the first `d` packed `u8` KV levels.
+    pub q8_sum: fn(&[i32], usize) -> i32,
+}
+
+/// The scalar reference table — compiled on every target, and the
+/// bit-reference every SIMD table must match exactly.
+pub const SCALAR: Kernels = Kernels {
+    name: "scalar",
+    dot: dot_scalar,
+    nt_block8: nt_block8_scalar,
+    axpy: axpy_scalar,
+    q8_dot: q8_dot_scalar,
+    q8_sum: q8_sum_scalar,
+};
+
+#[cfg(target_arch = "x86_64")]
+const AVX2: Kernels = Kernels {
+    name: "avx2",
+    dot: dot_avx2,
+    nt_block8: nt_block8_avx2,
+    axpy: axpy_avx2,
+    q8_dot: q8_dot_avx2,
+    q8_sum: q8_sum_avx2,
+};
+
+static ACTIVE: OnceLock<Kernels> = OnceLock::new();
+
+/// The process-wide kernel table, detected on first use and fixed for
+/// the lifetime of the process.
+#[inline]
+pub fn active() -> &'static Kernels {
+    ACTIVE.get_or_init(detect)
+}
+
+/// The scalar reference table (for parity tests and benches that need
+/// both sides regardless of what `active()` resolved to).
+#[inline]
+pub fn scalar() -> &'static Kernels {
+    &SCALAR
+}
+
+/// `OPT_GPTQ_NO_SIMD` force-disable: set (non-empty, not `"0"`) means
+/// "always scalar". Read once, at detection time.
+fn force_scalar() -> bool {
+    match std::env::var_os("OPT_GPTQ_NO_SIMD") {
+        Some(v) => !v.is_empty() && v != "0",
+        None => false,
+    }
+}
+
+/// x86_64: pick AVX2 when the CPU has it and it isn't force-disabled.
+#[cfg(target_arch = "x86_64")]
+fn detect() -> Kernels {
+    if !force_scalar() && is_x86_feature_detected!("avx2") {
+        return AVX2;
+    }
+    SCALAR
+}
+
+/// Non-x86_64: only the scalar table exists. (The env check still runs
+/// so the knob's semantics don't vary by target.)
+#[cfg(not(target_arch = "x86_64"))]
+fn detect() -> Kernels {
+    let _ = force_scalar();
+    SCALAR
+}
+
+// ---------------------------------------------------------------------------
+// Scalar reference kernels.
+// ---------------------------------------------------------------------------
+
+/// The crate's frozen dot accumulation order: 8 independent lane
+/// accumulators over the unrolled body, fixed combine tree, sequential
+/// tail. (Moved verbatim from `tensor::dot`, which now dispatches.)
+fn dot_scalar(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len();
+    let n8 = n / 8 * 8;
+    let mut s = [0.0f32; 8];
+    let mut i = 0;
+    while i < n8 {
+        let aa = &a[i..i + 8];
+        let bb = &b[i..i + 8];
+        for r in 0..8 {
+            s[r] += aa[r] * bb[r];
+        }
+        i += 8;
+    }
+    let mut total = ((s[0] + s[4]) + (s[1] + s[5])) + ((s[2] + s[6]) + (s[3] + s[7]));
+    for j in n8..n {
+        total += a[j] * b[j];
+    }
+    total
+}
+
+/// The matmul 8-column block body: all 8 accumulators advance together,
+/// one `t`-step at a time. (The loop `tensor::matmul_nt_into` and the
+/// fused dequant-matmul both ran inline before dispatch existed.)
+fn nt_block8_scalar(a_row: &[f32], b8: &[f32], out: &mut [f32; 8]) {
+    let k = a_row.len();
+    debug_assert!(b8.len() >= 8 * k);
+    let rows: [&[f32]; 8] = std::array::from_fn(|r| &b8[r * k..(r + 1) * k]);
+    let mut s = [0.0f32; 8];
+    for (t, &a_v) in a_row.iter().enumerate() {
+        for r in 0..8 {
+            s[r] += a_v * rows[r][t];
+        }
+    }
+    *out = s;
+}
+
+/// `y[i] += s * x[i]` — the attention value-accumulate inner loop.
+fn axpy_scalar(s: f32, x: &[f32], y: &mut [f32]) {
+    for (yv, &xv) in y.iter_mut().zip(x.iter()) {
+        *yv += s * xv;
+    }
+}
+
+/// Widening integer dot of `d` query levels against `d` packed KV
+/// levels. Shift/mask decode — endian-independent.
+fn q8_dot_scalar(q: &[u8], words: &[i32], d: usize) -> i32 {
+    debug_assert!(q.len() >= d && words.len() * 4 >= d);
+    let mut s = 0i32;
+    for c in 0..d {
+        let w = words[c / 4] as u32;
+        let level = ((w >> ((c % 4) as u32 * 8)) & 0xFF) as i32;
+        s += q[c] as i32 * level;
+    }
+    s
+}
+
+/// Sum of the first `d` packed KV levels. Only the first `d` count:
+/// tail lanes of the last word hold the grid's zero level, not zero.
+fn q8_sum_scalar(words: &[i32], d: usize) -> i32 {
+    debug_assert!(words.len() * 4 >= d);
+    let mut s = 0i32;
+    for c in 0..d {
+        let w = words[c / 4] as u32;
+        s += ((w >> ((c % 4) as u32 * 8)) & 0xFF) as i32;
+    }
+    s
+}
+
+// ---------------------------------------------------------------------------
+// AVX2 kernels (x86_64 only; installed only after runtime detection).
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    //! `unsafe` bodies, one per kernel. Callers guarantee AVX2 is
+    //! present (the table is only installed after
+    //! `is_x86_feature_detected!("avx2")`); bounds are checked with
+    //! plain asserts before any raw-pointer load.
+    use std::arch::x86_64::*;
+
+    /// Bit-identical AVX2 twin of `dot_scalar`: one `__m256`
+    /// accumulator whose lane `r` is exactly the scalar `s[r]`, reduced
+    /// through the scalar's combine tree.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len();
+        assert!(b.len() >= n);
+        let n8 = n / 8 * 8;
+        let ap = a.as_ptr();
+        let bp = b.as_ptr();
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0;
+        while i < n8 {
+            let av = _mm256_loadu_ps(ap.add(i));
+            let bv = _mm256_loadu_ps(bp.add(i));
+            // mul + add, NOT fmadd: the scalar reference rounds the
+            // product before accumulating.
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(av, bv));
+            i += 8;
+        }
+        // [s0+s4, s1+s5, s2+s6, s3+s7] ...
+        let half = _mm_add_ps(_mm256_castps256_ps128(acc), _mm256_extractf128_ps(acc, 1));
+        let mut t = [0.0f32; 4];
+        _mm_storeu_ps(t.as_mut_ptr(), half);
+        // ... then the scalar combine tree `((s0+s4)+(s1+s5)) + ((s2+s6)+(s3+s7))`.
+        let mut total = (t[0] + t[1]) + (t[2] + t[3]);
+        for j in n8..n {
+            total += a[j] * b[j];
+        }
+        total
+    }
+
+    /// Transpose 8 row vectors (each `[r][t..t+8]`) into 8 column
+    /// vectors (each `[r0..r7][t+i]`), the canonical
+    /// unpack/shuffle/permute2f128 8×8 f32 transpose.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn transpose8(r: [__m256; 8]) -> [__m256; 8] {
+        let t0 = _mm256_unpacklo_ps(r[0], r[1]);
+        let t1 = _mm256_unpackhi_ps(r[0], r[1]);
+        let t2 = _mm256_unpacklo_ps(r[2], r[3]);
+        let t3 = _mm256_unpackhi_ps(r[2], r[3]);
+        let t4 = _mm256_unpacklo_ps(r[4], r[5]);
+        let t5 = _mm256_unpackhi_ps(r[4], r[5]);
+        let t6 = _mm256_unpacklo_ps(r[6], r[7]);
+        let t7 = _mm256_unpackhi_ps(r[6], r[7]);
+        let u0 = _mm256_shuffle_ps(t0, t2, 0x44);
+        let u1 = _mm256_shuffle_ps(t0, t2, 0xEE);
+        let u2 = _mm256_shuffle_ps(t1, t3, 0x44);
+        let u3 = _mm256_shuffle_ps(t1, t3, 0xEE);
+        let u4 = _mm256_shuffle_ps(t4, t6, 0x44);
+        let u5 = _mm256_shuffle_ps(t4, t6, 0xEE);
+        let u6 = _mm256_shuffle_ps(t5, t7, 0x44);
+        let u7 = _mm256_shuffle_ps(t5, t7, 0xEE);
+        [
+            _mm256_permute2f128_ps(u0, u4, 0x20),
+            _mm256_permute2f128_ps(u1, u5, 0x20),
+            _mm256_permute2f128_ps(u2, u6, 0x20),
+            _mm256_permute2f128_ps(u3, u7, 0x20),
+            _mm256_permute2f128_ps(u0, u4, 0x31),
+            _mm256_permute2f128_ps(u1, u5, 0x31),
+            _mm256_permute2f128_ps(u2, u6, 0x31),
+            _mm256_permute2f128_ps(u3, u7, 0x31),
+        ]
+    }
+
+    /// Bit-identical AVX2 twin of `nt_block8_scalar`: lane `r` of the
+    /// accumulator is the scalar `s[r]`, and columns fold in ascending
+    /// `t` order, so each lane sees the scalar's exact add sequence.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn nt_block8(a_row: &[f32], b8: &[f32], out: &mut [f32; 8]) {
+        let k = a_row.len();
+        assert!(b8.len() >= 8 * k);
+        let bp = b8.as_ptr();
+        let mut acc = _mm256_setzero_ps();
+        let k8 = k / 8 * 8;
+        let mut t = 0;
+        while t < k8 {
+            let rows: [__m256; 8] = std::array::from_fn(|r| _mm256_loadu_ps(bp.add(r * k + t)));
+            let cols = transpose8(rows);
+            for (i, &c) in cols.iter().enumerate() {
+                let av = _mm256_set1_ps(a_row[t + i]);
+                acc = _mm256_add_ps(acc, _mm256_mul_ps(av, c));
+            }
+            t += 8;
+        }
+        while t < k {
+            // set_ps takes lanes high-to-low.
+            let c = _mm256_set_ps(
+                *bp.add(7 * k + t),
+                *bp.add(6 * k + t),
+                *bp.add(5 * k + t),
+                *bp.add(4 * k + t),
+                *bp.add(3 * k + t),
+                *bp.add(2 * k + t),
+                *bp.add(k + t),
+                *bp.add(t),
+            );
+            let av = _mm256_set1_ps(a_row[t]);
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(av, c));
+            t += 1;
+        }
+        _mm256_storeu_ps(out.as_mut_ptr(), acc);
+    }
+
+    /// Element-wise `y[i] += s * x[i]`; identity with the scalar twin is
+    /// per-element (one mul, one add each), no reduction involved.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy(s: f32, x: &[f32], y: &mut [f32]) {
+        let n = y.len().min(x.len());
+        let n8 = n / 8 * 8;
+        let sv = _mm256_set1_ps(s);
+        let xp = x.as_ptr();
+        let yp = y.as_mut_ptr();
+        let mut i = 0;
+        while i < n8 {
+            let xv = _mm256_loadu_ps(xp.add(i));
+            let yv = _mm256_loadu_ps(yp.add(i));
+            _mm256_storeu_ps(yp.add(i), _mm256_add_ps(yv, _mm256_mul_ps(sv, xv)));
+            i += 8;
+        }
+        while i < n {
+            y[i] += s * x[i];
+            i += 1;
+        }
+    }
+
+    /// Widening u8×u8→i32 dot; exact, any reduction order. The packed
+    /// word array is reinterpreted as a byte stream — valid because the
+    /// in-word layout is little-endian and so is x86_64.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn q8_dot(q: &[u8], words: &[i32], d: usize) -> i32 {
+        assert!(q.len() >= d && words.len() * 4 >= d);
+        let qp = q.as_ptr();
+        let kp = words.as_ptr() as *const u8;
+        let d8 = d / 8 * 8;
+        let mut acc = _mm256_setzero_si256();
+        let mut i = 0;
+        while i < d8 {
+            let qv = _mm256_cvtepu8_epi32(_mm_loadl_epi64(qp.add(i) as *const __m128i));
+            let kv = _mm256_cvtepu8_epi32(_mm_loadl_epi64(kp.add(i) as *const __m128i));
+            acc = _mm256_add_epi32(acc, _mm256_mullo_epi32(qv, kv));
+            i += 8;
+        }
+        let mut lanes = [0i32; 8];
+        _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, acc);
+        let mut s: i32 = lanes.iter().sum();
+        while i < d {
+            let w = words[i / 4] as u32;
+            s += q[i] as i32 * (((w >> ((i % 4) as u32 * 8)) & 0xFF) as i32);
+            i += 1;
+        }
+        s
+    }
+
+    /// Sum of the first `d` packed levels via `sad_epu8` against zero;
+    /// exact, any reduction order.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn q8_sum(words: &[i32], d: usize) -> i32 {
+        assert!(words.len() * 4 >= d);
+        let kp = words.as_ptr() as *const u8;
+        let d32 = d / 32 * 32;
+        let zero = _mm256_setzero_si256();
+        let mut acc = _mm256_setzero_si256();
+        let mut i = 0;
+        while i < d32 {
+            let v = _mm256_loadu_si256(kp.add(i) as *const __m256i);
+            acc = _mm256_add_epi64(acc, _mm256_sad_epu8(v, zero));
+            i += 32;
+        }
+        let mut lanes = [0i64; 4];
+        _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, acc);
+        let mut s = lanes.iter().sum::<i64>() as i32;
+        while i < d {
+            let w = words[i / 4] as u32;
+            s += ((w >> ((i % 4) as u32 * 8)) & 0xFF) as i32;
+            i += 1;
+        }
+        s
+    }
+}
+
+// Safe fn-pointer wrappers for the table. SAFETY (all five): the AVX2
+// table is only ever installed by `detect()` after
+// `is_x86_feature_detected!("avx2")` returned true, so the target
+// feature is present whenever these run.
+
+#[cfg(target_arch = "x86_64")]
+fn dot_avx2(a: &[f32], b: &[f32]) -> f32 {
+    unsafe { avx2::dot(a, b) }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn nt_block8_avx2(a_row: &[f32], b8: &[f32], out: &mut [f32; 8]) {
+    unsafe { avx2::nt_block8(a_row, b8, out) }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn axpy_avx2(s: f32, x: &[f32], y: &mut [f32]) {
+    unsafe { avx2::axpy(s, x, y) }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn q8_dot_avx2(q: &[u8], words: &[i32], d: usize) -> i32 {
+    unsafe { avx2::q8_dot(q, words, d) }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn q8_sum_avx2(words: &[i32], d: usize) -> i32 {
+    unsafe { avx2::q8_sum(words, d) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic pseudo-random f32 in [-1, 1) (splitmix-style) so
+    /// these tests need no RNG plumbing.
+    fn noise(seed: u64, i: usize) -> f32 {
+        let mut z = seed.wrapping_add((i as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        ((z >> 40) as f32) / ((1u64 << 23) as f32) - 1.0
+    }
+
+    fn vecf(seed: u64, n: usize) -> Vec<f32> {
+        (0..n).map(|i| noise(seed, i)).collect()
+    }
+
+    /// Pack `levels` 4-per-word little-endian (the KV pool layout).
+    fn pack_levels(levels: &[u8]) -> Vec<i32> {
+        let mut words = vec![0i32; levels.len().div_ceil(4)];
+        for (c, &l) in levels.iter().enumerate() {
+            words[c / 4] |= (l as i32) << ((c % 4) * 8);
+        }
+        words
+    }
+
+    #[test]
+    fn dispatch_resolves_to_a_known_table() {
+        let k = active();
+        assert!(k.name == "scalar" || k.name == "avx2", "name = {}", k.name);
+        // The scalar handle is always the reference table.
+        assert_eq!(scalar().name, "scalar");
+    }
+
+    #[test]
+    fn active_dot_bit_identical_to_scalar_on_ragged_lengths() {
+        let act = active();
+        for n in [0, 1, 3, 7, 8, 9, 15, 16, 17, 31, 64, 65, 127, 257] {
+            let a = vecf(1, n);
+            let b = vecf(2, n);
+            let got = (act.dot)(&a, &b);
+            let want = (SCALAR.dot)(&a, &b);
+            assert_eq!(got.to_bits(), want.to_bits(), "n = {n}");
+        }
+    }
+
+    #[test]
+    fn active_nt_block8_bit_identical_to_scalar() {
+        let act = active();
+        for k in [1, 2, 7, 8, 9, 16, 23, 64, 65] {
+            let a = vecf(3, k);
+            let b8 = vecf(4, 8 * k);
+            let mut got = [0.0f32; 8];
+            let mut want = [0.0f32; 8];
+            (act.nt_block8)(&a, &b8, &mut got);
+            (SCALAR.nt_block8)(&a, &b8, &mut want);
+            for r in 0..8 {
+                assert_eq!(got[r].to_bits(), want[r].to_bits(), "k = {k}, r = {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn active_axpy_bit_identical_to_scalar() {
+        let act = active();
+        for n in [0, 1, 5, 8, 13, 64, 100] {
+            let x = vecf(5, n);
+            let mut got = vecf(6, n);
+            let mut want = got.clone();
+            (act.axpy)(0.37, &x, &mut got);
+            (SCALAR.axpy)(0.37, &x, &mut want);
+            for i in 0..n {
+                assert_eq!(got[i].to_bits(), want[i].to_bits(), "n = {n}, i = {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn q8_kernels_match_a_direct_reference() {
+        let act = active();
+        for d in [1, 3, 4, 5, 8, 16, 31, 32, 33, 64, 96, 100] {
+            let levels: Vec<u8> = (0..d).map(|i| (noise(7, i).abs() * 255.0) as u8).collect();
+            let q: Vec<u8> = (0..d).map(|i| (noise(8, i).abs() * 255.0) as u8).collect();
+            let words = pack_levels(&levels);
+            let want_sum: i32 = levels.iter().map(|&l| l as i32).sum();
+            let want_dot: i32 =
+                q.iter().zip(&levels).map(|(&a, &b)| a as i32 * b as i32).sum();
+            assert_eq!((SCALAR.q8_sum)(&words, d), want_sum, "d = {d}");
+            assert_eq!((SCALAR.q8_dot)(&q, &words, d), want_dot, "d = {d}");
+            assert_eq!((act.q8_sum)(&words, d), want_sum, "d = {d}");
+            assert_eq!((act.q8_dot)(&q, &words, d), want_dot, "d = {d}");
+        }
+    }
+
+    #[test]
+    fn q8_kernels_ignore_padding_lanes_past_d() {
+        // Tail lanes of the last word carry a nonzero "zero level" in
+        // the KV pools; the kernels must not count them.
+        let d = 5;
+        let mut levels = vec![0u8; 8];
+        levels[..d].copy_from_slice(&[10, 20, 30, 40, 50]);
+        levels[d..].fill(128); // poison the padding
+        let words = pack_levels(&levels);
+        let q = [2u8, 2, 2, 2, 2];
+        let act = active();
+        assert_eq!((act.q8_sum)(&words, d), 150);
+        assert_eq!((SCALAR.q8_sum)(&words, d), 150);
+        assert_eq!((act.q8_dot)(&q, &words, d), 300);
+        assert_eq!((SCALAR.q8_dot)(&q, &words, d), 300);
+    }
+}

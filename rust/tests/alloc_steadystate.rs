@@ -18,13 +18,13 @@
 //! allocations into ours). Counters are thread-local so harness threads
 //! cannot interfere either.
 
-use opt_gptq::attention::gqa::{AttnConfig, Bias};
+use opt_gptq::attention::gqa::{AttnConfig, Bias, ScoreDomain};
 use opt_gptq::attention::kernel::Workspace;
 use opt_gptq::attention::paged::{paged_decode_attention_into, paged_prefill_attention_into};
 use opt_gptq::kvcache::{
     BlockAllocator, BlockTable, KvStore, PagedKvCache, QuantizedPagedKvCache,
 };
-use opt_gptq::quant::matmul::{packed_matmul_nt_into, MatmulWorkspace};
+use opt_gptq::quant::matmul::{packed_gemv_cols_parallel, packed_matmul_nt_into, MatmulWorkspace};
 use opt_gptq::quant::{pack_rows, rtn_quantize};
 use opt_gptq::util::rng::Rng;
 use std::alloc::{GlobalAlloc, Layout, System};
@@ -117,6 +117,21 @@ fn steady_state_decode_attention_allocates_nothing() {
     }
     assert!(out.iter().all(|v| v.is_finite()));
 
+    // Integer-domain q8 scoring (`--q8-score-domain int`) adds one more
+    // scratch family — the quantized-query levels and per-head integer
+    // row sums — which lives in the same Workspace and obeys the same
+    // grow-once contract.
+    let mut int_cfg = cfg;
+    int_cfg.score_domain = ScoreDomain::Int;
+    paged_decode_attention_into(&int_cfg, &qcache, 0, &q, &table, &mut ws, &mut out);
+    let n = count_allocs(|| {
+        for _ in 0..10 {
+            paged_decode_attention_into(&int_cfg, &qcache, 0, &q, &table, &mut ws, &mut out);
+        }
+    });
+    assert_eq!(n, 0, "int-domain q8 decode must not allocate in steady state");
+    assert!(out.iter().all(|v| v.is_finite()));
+
     // The quantized write path is also allocation-free: rewriting tokens
     // (worst case: every write refits + requantizes its group) uses only
     // the cache's preallocated requant scratch.
@@ -181,4 +196,22 @@ fn steady_state_decode_attention_allocates_nothing() {
         assert_eq!(n, 0, "q{bits}: steady-state packed dequant-matmul must not allocate");
     }
     assert!(wout.iter().all(|v| v.is_finite()));
+
+    // Decode GEMV through the column-split driver, serial width: the
+    // single-job fast path routes through the thread-local workspace, so
+    // warm steady-state decode projections stay allocation-free. (Wider
+    // widths box their pool jobs on the submitting thread by design —
+    // same as every other pool fan-out, and not part of this audit.)
+    let wd = rng.normal_vec(wn * wk, 1.0);
+    let packed = pack_rows(&rtn_quantize(&wd, wn, wk, 4, 13));
+    let act = rng.normal_vec(wk, 1.0);
+    let mut gout = vec![0.0f32; wn];
+    packed_gemv_cols_parallel(&act, &packed, 1, &mut gout);
+    let n = count_allocs(|| {
+        for _ in 0..10 {
+            packed_gemv_cols_parallel(&act, &packed, 1, &mut gout);
+        }
+    });
+    assert_eq!(n, 0, "serial decode GEMV must not allocate in steady state");
+    assert!(gout.iter().all(|v| v.is_finite()));
 }

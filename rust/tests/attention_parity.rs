@@ -342,6 +342,39 @@ fn quantized_pool_bytes_at_most_03x_of_f32_across_shapes() {
 }
 
 #[test]
+fn int_score_domain_is_inert_on_f32_stores() {
+    use opt_gptq::attention::gqa::ScoreDomain;
+    // Graceful degrade: integer-domain scoring only applies to q8 tiles.
+    // On an f32 store the knob must be a bit-exact no-op — library
+    // callers may set it unconditionally and flip cache dtypes freely
+    // (the CLI separately rejects the mismatch up front).
+    let (h, kvh, d, block_size, kv_len) = (4usize, 2usize, 8usize, 4usize, 19usize);
+    let num_blocks = kv_len.div_ceil(block_size) + 1;
+    let mut cache = PagedKvCache::new(1, num_blocks, block_size, kvh, d);
+    let mut alloc = BlockAllocator::new(num_blocks, block_size);
+    let mut table = BlockTable::new();
+    assert!(table.reserve(kv_len, &mut alloc));
+    let mut rng = Rng::new(414);
+    for _ in 0..kv_len {
+        let (b, s) = table.append_slot(block_size);
+        let k = rng.normal_vec(kvh * d, 1.0);
+        let v = rng.normal_vec(kvh * d, 1.0);
+        cache.write_token(0, b, s, &k, &v);
+    }
+    for &bias in &[Bias::Alibi, Bias::None] {
+        let q = rng.normal_vec(h * d, 1.0);
+        let f32_cfg = AttnConfig::dense(h, kvh, d, bias);
+        let mut int_cfg = f32_cfg;
+        int_cfg.score_domain = ScoreDomain::Int;
+        assert_eq!(
+            paged_decode_attention(&f32_cfg, &cache, 0, &q, &table),
+            paged_decode_attention(&int_cfg, &cache, 0, &q, &table),
+            "bias={bias:?}"
+        );
+    }
+}
+
+#[test]
 fn caller_owned_workspace_reuse_matches_fresh() {
     // The Workspace contract: one workspace reused across calls of
     // different shapes gives exactly the same answers as fresh state.

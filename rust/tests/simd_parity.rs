@@ -1,0 +1,235 @@
+//! SIMD-vs-scalar parity — the kernel dispatch contract, end to end.
+//!
+//! `tensor::simd` resolves a kernel table once at startup (AVX2 when the
+//! CPU has it, scalar otherwise; `OPT_GPTQ_NO_SIMD=1` forces scalar —
+//! `scripts/verify.sh` runs this whole suite under both settings). The
+//! contract under test: **whatever table is active, every dispatched
+//! path is bit-identical to the scalar reference** — same accumulation
+//! order, no FMA contraction, sequential tails. These tests therefore
+//! pass vacuously-but-honestly on non-x86 hosts (both sides scalar) and
+//! catch any divergence on AVX2 hosts.
+//!
+//! Also here: the integer-domain q8 score path's accuracy grid
+//! (`--q8-score-domain int` adds query-quantization error on top of the
+//! KV grid error — bounded, opt-in) and its thread-width determinism.
+
+use opt_gptq::attention::{
+    paged_decode_attention, paged_decode_batch, AttnConfig, Bias, ScoreDomain,
+};
+use opt_gptq::kvcache::{BlockAllocator, BlockTable, QuantizedPagedKvCache};
+use opt_gptq::quant::{
+    packed_matmul_nt_into, packed_matmul_nt_into_scalar, pack_rows, rtn_quantize, MatmulWorkspace,
+};
+use opt_gptq::tensor::{self, simd};
+use opt_gptq::util::rng::Rng;
+
+/// Ragged lengths covering empty input, sub-lane tails (< 8), exact lane
+/// multiples, and multi-register strides.
+const LENGTHS: &[usize] = &[0, 1, 2, 3, 5, 7, 8, 9, 15, 16, 17, 31, 32, 33, 63, 64, 65, 127, 257];
+
+#[test]
+fn active_kernel_table_is_bit_identical_to_scalar() {
+    let act = simd::active();
+    let sca = simd::scalar();
+    let mut rng = Rng::new(0x51_4D_D0);
+    for &n in LENGTHS {
+        let a = rng.normal_vec(n, 1.0);
+        let b = rng.normal_vec(n, 1.0);
+        assert_eq!(
+            (act.dot)(&a, &b).to_bits(),
+            (sca.dot)(&a, &b).to_bits(),
+            "dot n={n} table={}",
+            act.name
+        );
+
+        let mut ya = rng.normal_vec(n, 1.0);
+        let mut ys = ya.clone();
+        (act.axpy)(0.37, &a, &mut ya);
+        (sca.axpy)(0.37, &a, &mut ys);
+        assert_eq!(
+            ya.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            ys.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            "axpy n={n} table={}",
+            act.name
+        );
+
+        let rows8 = rng.normal_vec(8 * n, 1.0);
+        let mut sa = [0.0f32; 8];
+        let mut ss = [0.0f32; 8];
+        (act.nt_block8)(&a, &rows8, &mut sa);
+        (sca.nt_block8)(&a, &rows8, &mut ss);
+        assert_eq!(
+            sa.map(f32::to_bits),
+            ss.map(f32::to_bits),
+            "nt_block8 k={n} table={}",
+            act.name
+        );
+    }
+}
+
+#[test]
+fn dispatched_dense_matmul_is_bit_identical_to_scalar_twin() {
+    let mut rng = Rng::new(77);
+    // (m, k, n) covering n < 8 (pure tail), n % 8 != 0 (chains + tail),
+    // exact 8-multiples, and k tails below one AVX2 register.
+    for &(m, k, n) in &[
+        (1usize, 16usize, 9usize),
+        (2, 7, 8),
+        (3, 64, 24),
+        (4, 33, 23),
+        (5, 5, 3),
+        (1, 128, 65),
+    ] {
+        let a = rng.normal_vec(m * k, 1.0);
+        let b = rng.normal_vec(n * k, 1.0);
+        let mut got = vec![0.0f32; m * n];
+        let mut want = vec![0.0f32; m * n];
+        tensor::matmul_nt_into(&a, m, k, &b, n, &mut got);
+        tensor::matmul_nt_into_scalar(&a, m, k, &b, n, &mut want);
+        assert_eq!(
+            got.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            want.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            "m={m} k={k} n={n}"
+        );
+        assert_eq!(
+            tensor::dot(&a[..k], &b[..k]).to_bits(),
+            tensor::dot_scalar(&a[..k], &b[..k]).to_bits(),
+            "dot k={k}"
+        );
+    }
+}
+
+#[test]
+fn dispatched_packed_matmul_is_bit_identical_to_scalar_twin() {
+    let mut rng = Rng::new(78);
+    let mut ws = MatmulWorkspace::new();
+    for &bits in &[3u32, 4, 8] {
+        for &(m, k, n, group) in &[
+            (1usize, 16usize, 9usize, 16usize),
+            (3, 24, 7, 5),
+            (2, 33, 70, 7),
+            (1, 8, 131, 3),
+        ] {
+            let wd = rng.normal_vec(n * k, 1.0);
+            let packed = pack_rows(&rtn_quantize(&wd, n, k, bits, group));
+            let a = rng.normal_vec(m * k, 1.0);
+            let mut got = vec![0.0f32; m * n];
+            let mut want = vec![0.0f32; m * n];
+            packed_matmul_nt_into(&a, m, &packed, &mut ws, &mut got);
+            packed_matmul_nt_into_scalar(&a, m, &packed, &mut ws, &mut want);
+            assert_eq!(
+                got.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                want.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "bits={bits} m={m} k={k} n={n} group={group}"
+            );
+        }
+    }
+}
+
+/// Build a quantized cache with `kv_len` random tokens.
+fn q8_setup(
+    kv_len: usize,
+    kvh: usize,
+    d: usize,
+    block_size: usize,
+    seed: u64,
+) -> (QuantizedPagedKvCache, BlockTable) {
+    let mut rng = Rng::new(seed);
+    let num_blocks = kv_len.div_ceil(block_size) + 1;
+    let mut cache = QuantizedPagedKvCache::new(1, num_blocks, block_size, kvh, d);
+    let mut alloc = BlockAllocator::new(num_blocks, block_size);
+    let mut table = BlockTable::new();
+    assert!(table.reserve(kv_len, &mut alloc));
+    for _ in 0..kv_len {
+        let (b, s) = table.append_slot(block_size);
+        let k = rng.normal_vec(kvh * d, 1.0);
+        let v = rng.normal_vec(kvh * d, 1.0);
+        cache.write_token(0, b, s, &k, &v);
+    }
+    (cache, table)
+}
+
+#[test]
+fn int_domain_decode_accuracy_grid() {
+    // Int-domain and f32-domain scoring share the same KV grids; their
+    // divergence is pure query-quantization error (8-bit asymmetric per
+    // (row, kv-head) segment), which stays small at attention scale.
+    // Grid spans GQA/MHA shapes, both biases, ragged tails, and
+    // multi-block contexts.
+    for (hi, &(h, kvh, d, block_size, kv_len, bias)) in [
+        (4usize, 2usize, 8usize, 4usize, 13usize, Bias::Alibi),
+        (4, 4, 8, 8, 16, Bias::None),
+        (8, 2, 16, 4, 29, Bias::Alibi),
+        (2, 1, 32, 16, 7, Bias::None),
+    ]
+    .iter()
+    .enumerate()
+    {
+        let (cache, table) = q8_setup(kv_len, kvh, d, block_size, 1000 + hi as u64);
+        let mut rng = Rng::new(2000 + hi as u64);
+        let q = rng.normal_vec(h * d, 1.0);
+        let mut f32_cfg = AttnConfig::dense(h, kvh, d, bias);
+        f32_cfg.score_domain = ScoreDomain::F32;
+        let mut int_cfg = f32_cfg;
+        int_cfg.score_domain = ScoreDomain::Int;
+        let base = paged_decode_attention(&f32_cfg, &cache, 0, &q, &table);
+        let int = paged_decode_attention(&int_cfg, &cache, 0, &q, &table);
+        let max_abs = base
+            .iter()
+            .zip(&int)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(
+            max_abs < 0.1,
+            "h={h} kvh={kvh} d={d} bs={block_size} kv={kv_len} bias={bias:?}: max |Δ| = {max_abs}"
+        );
+        assert!(int.iter().all(|x| x.is_finite()));
+        // Determinism: the integer path is order-independent integer
+        // arithmetic plus a fixed-order fold — repeat runs are identical.
+        let again = paged_decode_attention(&int_cfg, &cache, 0, &q, &table);
+        assert_eq!(int, again);
+    }
+}
+
+#[test]
+fn int_domain_decode_bit_identical_across_thread_widths() {
+    let (h, kvh, d, block_size) = (4usize, 2usize, 8usize, 4usize);
+    let mut cfg = AttnConfig::dense(h, kvh, d, Bias::Alibi);
+    cfg.score_domain = ScoreDomain::Int;
+    let lens = [5usize, 17, 9, 2];
+    let total_blocks: usize = lens.iter().map(|l| l.div_ceil(block_size)).sum::<usize>() + 1;
+    let mut cache = QuantizedPagedKvCache::new(1, total_blocks, block_size, kvh, d);
+    let mut alloc = BlockAllocator::new(total_blocks, block_size);
+    let mut rng = Rng::new(91);
+    let mut tables = Vec::new();
+    for &len in &lens {
+        let mut t = BlockTable::new();
+        assert!(t.reserve(len, &mut alloc));
+        for _ in 0..len {
+            let (b, s) = t.append_slot(block_size);
+            cache.write_token(0, b, s, &rng.normal_vec(kvh * d, 1.0), &rng.normal_vec(kvh * d, 1.0));
+        }
+        tables.push(t);
+    }
+    let refs: Vec<&BlockTable> = tables.iter().collect();
+    let row = h * d;
+    let qs = rng.normal_vec(lens.len() * row, 1.0);
+    let run = |threads: usize| {
+        let mut out = vec![0.0f32; lens.len() * row];
+        paged_decode_batch(&cfg, &cache, 0, &qs, &refs, threads, &mut out);
+        out
+    };
+    let serial = run(1);
+    for threads in [2usize, 3, 4, 8] {
+        assert_eq!(serial, run(threads), "threads={threads}");
+    }
+}
+
+#[test]
+fn dispatch_resolved_to_a_known_table() {
+    let name = simd::active().name;
+    assert!(name == "scalar" || name == "avx2", "unknown kernel table '{name}'");
+    // The scalar table is always reachable regardless of dispatch (it is
+    // the bit reference and the forced-off path).
+    assert_eq!(simd::scalar().name, "scalar");
+}

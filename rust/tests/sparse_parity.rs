@@ -356,3 +356,85 @@ fn threshold_skip_error_is_bounded_and_discriminated_from_exact() {
         assert!(got.iter().all(|x| x.is_finite()));
     }
 }
+
+#[test]
+fn self_score_seed_skips_leading_dead_tiles_in_threshold_decode() {
+    // Inverted adversarial grid: the outlier is the query's OWN key
+    // (the last position); every earlier tile is a dead σ-sweep tile.
+    // The running max only learns about the outlier when the walk
+    // reaches the final tile — so before the PR-8 self-score seed no
+    // leading tile could ever be skipped in this shape. With the seed
+    // (threshold mode only), every dead tile is provably below the
+    // margin from the very first visibility check.
+    let (h, kvh, d) = (4usize, 2usize, 8usize);
+    let kv_len = 10 * BLOCK + 3;
+    let rs = kvh * d;
+    let n_tiles = kv_len.div_ceil(BLOCK);
+    for quant in [false, true] {
+        for bias in [Bias::None, Bias::Alibi] {
+            let mut rng = Rng::new(41 + quant as u64);
+            let pattern: Vec<f32> =
+                (0..rs).map(|i| if i % 3 == 0 { -1.0 } else { 1.0 }).collect();
+            let mut k = Vec::with_capacity(kv_len * rs);
+            let mut v = Vec::with_capacity(kv_len * rs);
+            for t in 0..kv_len {
+                for i in 0..rs {
+                    let x = if t == kv_len - 1 {
+                        12.0 * pattern[i]
+                    } else {
+                        rng.normal_f32(0.0, [1e-3, 1e-2, 0.1, 0.4][(t / BLOCK) % 4])
+                    };
+                    k.push(x);
+                    v.push(rng.normal_f32(0.0, 1.0));
+                }
+            }
+            // Self-score ≈ 0.354·12·12·8 ≈ 407 nats above the dead tiles'
+            // bounds (≈ 54) — overwhelms ln(1e-5) ≈ −11.5 with room for
+            // q8 grid error on the dequantized own key.
+            let q = aligned_q(1, h, kvh, d, 12.0, &pattern);
+            let (cache, table, _alloc) = cache_with(quant, kvh, d, &k, &v);
+            let run = |threshold: f32| {
+                let cfg = AttnConfig {
+                    sparsity: SparsityConfig {
+                        skip_threshold: threshold,
+                        ..SparsityConfig::dense()
+                    },
+                    ..AttnConfig::dense(h, kvh, d, bias)
+                };
+                let mut out = vec![0.0f32; h * d];
+                let skips = with_workspace(|ws| {
+                    paged_decode_attention_into(&cfg, cache.as_ref(), 0, &q, &table, ws, &mut out)
+                });
+                (out, skips)
+            };
+            let (want, _) = run(-1.0); // skipping off
+            let threshold = 1e-5f32;
+            let (got, skips) = run(threshold);
+            assert_eq!(
+                skips,
+                n_tiles - 1,
+                "quant={quant} bias={bias:?}: the seed must open every leading dead tile"
+            );
+            let bound = kv_len as f32 * threshold * 4.0;
+            let max_abs = got
+                .iter()
+                .zip(&want)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            assert!(
+                max_abs <= bound,
+                "quant={quant} bias={bias:?}: seeded-skip error {max_abs} exceeds bound {bound}"
+            );
+            // Exact mode never seeds (that would perturb signed zeros in
+            // the corr-rescale and break the bit-identity contract): with
+            // the outlier folded last, nothing is provably dead mid-walk,
+            // so exact mode must refuse every skip and change no bits.
+            let (exact_out, exact_skips) = run(0.0);
+            assert_eq!(exact_out, want, "quant={quant} bias={bias:?}: exact mode changed bits");
+            assert_eq!(
+                exact_skips, 0,
+                "quant={quant} bias={bias:?}: exact mode must not inherit the seed"
+            );
+        }
+    }
+}

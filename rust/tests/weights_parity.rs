@@ -225,6 +225,45 @@ fn packed_artifact_roundtrip_serves_identically() {
 }
 
 #[test]
+fn decode_gemv_auto_fanout_bit_identical_to_pinned_serial() {
+    // PR-8 satellite: at m == 1 with auto width (threads == 0) the
+    // packed store fans W's *output columns* across the worker pool
+    // (tile-aligned spans — `quant::matmul::packed_gemv_cols_parallel`).
+    // The result must equal the pinned serial path bit for bit, and both
+    // must equal the dense reconstruction served serially — across every
+    // projection shape in the model (square, rectangular, wide, narrow).
+    use opt_gptq::model::{Proj, WeightStore};
+    use opt_gptq::util::rng::Rng;
+    let cfg = ModelConfig::tiny();
+    let weights = ModelWeights::init(&cfg, 17);
+    let (packed, _) =
+        quantize_weights_packed(&weights, QuantMethod::Rtn, 4, 32, false, &[], &[], &[]);
+    let recon = reconstruction(&packed);
+    let packed_store: &dyn WeightStore = &packed;
+    let dense_store: &dyn WeightStore = &recon;
+    let mut rng = Rng::new(5);
+    for layer in 0..cfg.n_layers {
+        let l = &packed.layers[layer];
+        for (p, k, n) in [
+            (Proj::Wq, l.wq.cols(), l.wq.rows()),
+            (Proj::Wk, l.wk.cols(), l.wk.rows()),
+            (Proj::WUp, l.w_up.cols(), l.w_up.rows()),
+            (Proj::WDown, l.w_down.cols(), l.w_down.rows()),
+        ] {
+            let a = rng.normal_vec(k, 1.0);
+            let mut auto = vec![0.0f32; n];
+            let mut serial = vec![0.0f32; n];
+            let mut want = vec![0.0f32; n];
+            packed_store.proj_into(layer, p, &a, 1, 0, &mut auto);
+            packed_store.proj_into(layer, p, &a, 1, 1, &mut serial);
+            dense_store.proj_into(layer, p, &a, 1, 1, &mut want);
+            assert_eq!(auto, serial, "layer={layer} {p:?}: GEMV fan-out changed bits");
+            assert_eq!(serial, want, "layer={layer} {p:?}: packed diverged from dense");
+        }
+    }
+}
+
+#[test]
 fn gptq_calibrated_packed_store_matches_its_reconstruction() {
     // Same contract under the full GPTQ pipeline (Hessian + error
     // propagation + act_order): pack and reconstruction come from one

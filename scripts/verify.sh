@@ -47,6 +47,40 @@ if ! grep -q '#\[cfg(any(test, feature = "fault-inject"))\]' src/runtime/mod.rs;
   exit 1
 fi
 
+# ---- SIMD dispatch gates --------------------------------------------------
+# Architecture-specific code is confined to the dispatch module: every
+# `std::arch` / feature-detection use lives in tensor/simd.rs, so the rest
+# of the crate stays portable and the bit-identity argument stays local.
+if grep -rnE 'std::arch|is_x86_feature_detected' src/ \
+    | grep -vE '^src/tensor/simd\.rs:' \
+    | grep -vE '^[^:]+:[0-9]+:[[:space:]]*//'; then
+  echo "verify: FAIL — std::arch / feature detection outside tensor/simd.rs" >&2
+  exit 1
+fi
+# `unsafe` stays on the allowlist (the SIMD kernels, the pool's lifetime
+# transmute, the PJRT handle's Send impl). New unsafe anywhere else needs
+# a deliberate decision, not a drive-by.
+if grep -rn 'unsafe' src/ \
+    | grep -vE '^src/(tensor/simd|runtime/pool|runtime/xla_backend)\.rs:' \
+    | grep -vE '^[^:]+:[0-9]+:[[:space:]]*//'; then
+  echo "verify: FAIL — unsafe outside the allowlisted modules" >&2
+  exit 1
+fi
+# The dispatch module must keep both cfg twins: the x86_64 detector and
+# the non-x86 fallback (deleting either breaks a platform silently).
+for marker in '#\[cfg(target_arch = "x86_64")\]' '#\[cfg(not(target_arch = "x86_64"))\]'; do
+  if ! grep -q "$marker" src/tensor/simd.rs; then
+    echo "verify: FAIL — tensor/simd.rs lost its $marker twin" >&2
+    exit 1
+  fi
+done
+# Integer-domain q8 scoring is opt-in: the CLI default must stay f32
+# (every accuracy baseline assumes f32-domain scoring).
+if ! grep -q '"q8-score-domain", "f32"' src/main.rs; then
+  echo "verify: FAIL — --q8-score-domain CLI default is no longer f32" >&2
+  exit 1
+fi
+
 # ---- sparsity-default gates -----------------------------------------------
 # Sparse attention is strictly opt-in: every parity baseline in the repo
 # assumes the dense default is bit-identical to the pre-sparsity kernel.
@@ -79,6 +113,10 @@ done
 
 cargo build --release
 cargo test -q
+# Second pass with SIMD dispatch forced off: the scalar table must pass
+# the identical suite (this is what makes the SIMD/scalar bit-identity
+# contract symmetric — either table can be the one in production).
+OPT_GPTQ_NO_SIMD=1 cargo test -q
 # Docs are tier-1: broken intra-doc links / malformed rustdoc fail the PR.
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 cargo bench --bench ablation_grouping -- --smoke
