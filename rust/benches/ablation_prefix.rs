@@ -29,6 +29,7 @@ fn run(prefix_cache_blocks: usize, n_req: usize, sys_len: usize) -> (f64, f64, u
             prefix_cache_blocks,
             kv_dtype: opt_gptq::coordinator::KvCacheDtype::F32,
             weight_dtype: opt_gptq::coordinator::WeightDtype::F32,
+            spill: None,
         },
     );
     let tok = ByteTokenizer::new();

@@ -53,6 +53,7 @@ pub fn engine_with_byte_budget(
             prefix_cache_blocks: 0,
             kv_dtype: opt_gptq::coordinator::KvCacheDtype::F32,
             weight_dtype: opt_gptq::coordinator::WeightDtype::F32,
+            spill: None,
         },
     )
 }

@@ -51,6 +51,7 @@ fn main() -> anyhow::Result<()> {
             prefix_cache_blocks: 0,
             kv_dtype: opt_gptq::coordinator::KvCacheDtype::F32,
             weight_dtype: opt_gptq::coordinator::WeightDtype::F32,
+            spill: None,
         },
     );
     let tok = ByteTokenizer::new();

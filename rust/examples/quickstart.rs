@@ -52,6 +52,7 @@ fn main() -> anyhow::Result<()> {
             prefix_cache_blocks: 0,
             kv_dtype,
             weight_dtype,
+            spill: None,
         };
         (Box::new(XlaBackend::load(manifest, &weights)?), econf)
     } else {
@@ -79,6 +80,7 @@ fn main() -> anyhow::Result<()> {
             prefix_cache_blocks: 0,
             kv_dtype,
             weight_dtype,
+            spill: None,
         };
         (Box::new(NativeBackend::new(model)), econf)
     };

@@ -69,6 +69,7 @@ fn main() -> anyhow::Result<()> {
             )
             .expect("--kv-dtype f32|q8"),
             weight_dtype: opt_gptq::coordinator::WeightDtype::F32,
+            spill: None,
         },
     );
     println!(

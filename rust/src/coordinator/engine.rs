@@ -2,11 +2,12 @@
 
 use super::batcher::BucketPolicy;
 use super::metrics::{EngineMetrics, RequestRecord, RunReport};
-use super::scheduler::{PrefillChunk, Scheduler, SchedulerConfig, StepPlan};
+use super::scheduler::{PrefillChunk, Scheduler, SchedulerConfig, SpillCtx, StepPlan};
 use super::sequence::{SeqPhase, Sequence};
+use crate::kvcache::spill::{dtype_tag, shape_fingerprint};
 use crate::kvcache::{
-    BlockAllocator, BlockTable, CacheStats, KvCacheDtype, KvStore, PagedKvCache,
-    QuantizedPagedKvCache,
+    BlockAllocator, BlockId, BlockTable, CacheStats, KvCacheDtype, KvStore, PagedKvCache,
+    QuantizedPagedKvCache, SpillConfig, SpillStats, SpillTier,
 };
 use super::admission::SubmitError;
 use crate::model::{SamplingParams, WeightDtype};
@@ -45,6 +46,16 @@ pub struct EngineConfig {
     /// "Packed-weight serving"), so flipping this knob on a quantized
     /// artifact never perturbs scheduling or sampling.
     pub weight_dtype: WeightDtype,
+    /// Crash-safe disk spill tier for evicted prefix KV
+    /// (`kvcache::spill`). **`None` (the default) leaves every
+    /// baseline byte-for-byte untouched** — no file IO, no extra
+    /// branches taken. When set, blocks evicted by the prefix cache or
+    /// the sliding-window sweep are offered to the on-disk store, and
+    /// admissions that miss the RAM pool restore them bit-identically
+    /// (exact bytes, CRC re-verified). Every tier failure degrades to
+    /// recompute-on-miss; an unopenable store logs and serves without
+    /// the tier.
+    pub spill: Option<SpillConfig>,
 }
 
 impl EngineConfig {
@@ -60,6 +71,7 @@ impl EngineConfig {
             prefix_cache_blocks: 0,
             kv_dtype: KvCacheDtype::F32,
             weight_dtype: WeightDtype::F32,
+            spill: None,
         }
     }
 }
@@ -83,6 +95,11 @@ pub struct Engine {
     scheduler: Scheduler,
     pub metrics: EngineMetrics,
     prefix_cache: Option<crate::kvcache::PrefixCache>,
+    /// Crash-safe disk tier for evicted prefix KV. `None` unless
+    /// `EngineConfig::spill` was set AND the store opened cleanly; every
+    /// failure afterwards degrades to recompute-on-miss, never an error
+    /// surfaced to requests.
+    spill: Option<SpillTier>,
     outputs: Vec<RequestOutput>,
     next_id: u64,
     t0: Instant,
@@ -138,6 +155,26 @@ impl Engine {
         } else {
             None
         };
+        // Spill tier: keyed to the exact pool geometry + dtype so a
+        // store written by a differently-shaped deployment can never be
+        // restored into this pool (records with a foreign fingerprint
+        // are skipped at recovery). Open failure downgrades to serving
+        // without the tier — never a construction error.
+        let spill = cfg.spill.as_ref().and_then(|sc| {
+            let fp = shape_fingerprint(&[
+                mc.n_layers,
+                cfg.block_size,
+                mc.n_kv_heads,
+                mc.head_dim(),
+            ]);
+            match SpillTier::open(sc.clone(), dtype_tag(cfg.kv_dtype), fp) {
+                Ok(tier) => Some(tier),
+                Err(e) => {
+                    log::warn!("spill tier unavailable, serving without it: {e}");
+                    None
+                }
+            }
+        });
         Engine {
             backend,
             cfg,
@@ -146,6 +183,7 @@ impl Engine {
             scheduler,
             metrics: EngineMetrics::default(),
             prefix_cache,
+            spill,
             outputs: Vec::new(),
             next_id: 1,
             t0: Instant::now(),
@@ -278,14 +316,29 @@ impl Engine {
                 panic!("injected fault: engine step panic");
             }
         }
-        let mut plan = self.scheduler.plan(&mut self.alloc, self.prefix_cache.as_mut());
+        let mut plan = match &mut self.spill {
+            Some(tier) if tier.enabled() => {
+                let mut ctx = SpillCtx::new(tier, self.cache.as_mut());
+                let plan = self.scheduler.plan_with_spill(
+                    &mut self.alloc,
+                    self.prefix_cache.as_mut(),
+                    Some(&mut ctx),
+                );
+                self.metrics.spill_hit_tokens += ctx.restored_tokens;
+                plan
+            }
+            _ => self.scheduler.plan(&mut self.alloc, self.prefix_cache.as_mut()),
+        };
         // Memory-pressure release valve: if the pool is too pinned by the
         // prefix cache to admit anything while work is queued, flush it.
+        // Victims go to the spill tier first (their bytes are intact
+        // until the allocator reuses the blocks).
         if plan == StepPlan::Idle && self.has_work() {
             if let Some(pc) = &mut self.prefix_cache {
                 if !pc.is_empty() {
                     log::debug!("flushing prefix cache under memory pressure");
-                    pc.clear(&mut self.alloc);
+                    let victims = pc.clear(&mut self.alloc);
+                    Self::offer_victims(&mut self.spill, self.cache.as_ref(), &victims);
                     plan = self.scheduler.plan(&mut self.alloc, None);
                 }
             }
@@ -302,7 +355,18 @@ impl Engine {
         // default). Freed blocks are admission-visible headroom by the
         // next plan() call.
         let sp = self.backend.config().sparsity;
-        self.scheduler.enforce_window(&sp, &mut self.alloc);
+        match &mut self.spill {
+            Some(tier) if tier.enabled() => {
+                let mut ctx = SpillCtx::new(tier, self.cache.as_mut());
+                self.scheduler.enforce_window_with_spill(&sp, &mut self.alloc, Some(&mut ctx));
+            }
+            _ => self.scheduler.enforce_window(&sp, &mut self.alloc),
+        }
+        if let Some(tier) = &self.spill {
+            let st = tier.stats();
+            self.metrics.spill_bytes = st.bytes_written as usize;
+            self.metrics.spill_corrupt_records = st.corrupt_records;
+        }
         self.metrics.evicted_blocks = self.scheduler.evicted_blocks;
         self.metrics.preemptions = self.scheduler.preemptions;
         self.metrics.prefix_hit_tokens = self.scheduler.prefix_hit_tokens;
@@ -443,7 +507,8 @@ impl Engine {
                 let in_cache = seq.table.len();
                 let toks = seq.replay_tokens();
                 let blocks = seq.table.blocks().to_vec();
-                pc.insert(&toks[..in_cache.min(toks.len())], &blocks, &mut self.alloc);
+                let victims = pc.insert(&toks[..in_cache.min(toks.len())], &blocks, &mut self.alloc);
+                Self::offer_victims(&mut self.spill, self.cache.as_ref(), &victims);
             }
         }
         self.scheduler.finish(id, &mut self.alloc);
@@ -463,6 +528,63 @@ impl Engine {
             latency_s: now - seq.t_enqueue,
             ttft_s: seq.t_first_token.unwrap_or(now) - seq.t_enqueue,
         });
+    }
+
+    /// Offer prefix-cache eviction victims to the spill tier. The
+    /// victims' bytes are still intact (the allocator has not reused
+    /// the blocks — no `alloc()` happens between eviction and here), so
+    /// `export_block` reads exactly the KV that was cached. Every
+    /// failure is absorbed by the tier's own degradation ladder.
+    fn offer_victims(
+        spill: &mut Option<SpillTier>,
+        cache: &dyn KvStore,
+        victims: &[(u64, BlockId)],
+    ) {
+        let Some(tier) = spill.as_mut() else { return };
+        if !tier.enabled() {
+            return;
+        }
+        for &(hash, block) in victims {
+            if tier.contains(hash) {
+                continue;
+            }
+            let payload = cache.export_block(block);
+            let _ = tier.offer(hash, &payload);
+        }
+    }
+
+    /// Flush the spill tier's commit frontier to durable storage — the
+    /// graceful-shutdown barrier (router workers call this before
+    /// exiting). No-op when the tier is off or already disabled.
+    pub fn flush_spill(&mut self) {
+        if let Some(tier) = &mut self.spill {
+            let _ = tier.flush();
+        }
+    }
+
+    /// Spill-tier counters, if a tier was configured (it may since have
+    /// self-disabled; `SpillStats` still reports what happened).
+    pub fn spill_stats(&self) -> Option<SpillStats> {
+        self.spill.as_ref().map(|t| t.stats())
+    }
+
+    /// Is the spill tier live (configured, opened, and not tripped by
+    /// its IO-failure circuit breaker)?
+    pub fn spill_enabled(&self) -> bool {
+        self.spill.as_ref().is_some_and(|t| t.enabled())
+    }
+
+    /// Arm deterministic IO faults on the spill tier (test-only twin of
+    /// [`Engine::arm_faults`]). Returns `false` if no tier is open.
+    #[cfg(any(test, feature = "fault-inject"))]
+    pub fn arm_spill_io_faults(&mut self, inj: crate::runtime::fault::IoFaultInjector) -> bool {
+        match &mut self.spill {
+            Some(tier) => {
+                tier.arm_io_faults(inj);
+                true
+            }
+            None => false,
+        }
     }
 }
 
@@ -493,6 +615,7 @@ mod tests {
             prefix_cache_blocks: 0,
             kv_dtype,
             weight_dtype: WeightDtype::F32,
+            spill: None,
         };
         Engine::new(Box::new(backend), econf)
     }
@@ -658,6 +781,7 @@ mod tests {
             prefix_cache_blocks: cache_blocks,
             kv_dtype: KvCacheDtype::F32,
             weight_dtype: WeightDtype::F32,
+            spill: None,
         };
         Engine::new(Box::new(backend), econf)
     }
@@ -812,6 +936,7 @@ mod tests {
                 prefix_cache_blocks: 0,
                 kv_dtype: KvCacheDtype::F32,
                 weight_dtype: WeightDtype::F32,
+                spill: None,
             };
             let mut e = Engine::new(Box::new(backend), econf);
             // A long prompt among short ones so chunking really happens.
@@ -853,6 +978,7 @@ mod tests {
             prefix_cache_blocks: 0,
             kv_dtype: KvCacheDtype::F32,
             weight_dtype: WeightDtype::F32,
+            spill: None,
         };
         let mut e = Engine::new(Box::new(backend), econf);
         let d1 = e.add_request(vec![256, 1, 2], params(40)).unwrap();
@@ -971,5 +1097,179 @@ mod tests {
         let (tight_again, preempt_again, _) = run(8);
         assert_eq!(tight_again, tight_tokens, "preempted schedule must be deterministic");
         assert_eq!(preempt_again, tight_preempt);
+    }
+
+    // ---- spill tier (ARCHITECTURE.md "Spill & recovery contract") ----
+
+    fn spill_dir(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("opt_gptq_engine_spill_{name}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    /// Spill-enabled engine: small prefix cache (so inserts evict to
+    /// disk quickly) over a roomy pool, tier rooted at `dir`.
+    fn engine_with_spill(
+        kv_dtype: KvCacheDtype,
+        threads: usize,
+        dir: &std::path::Path,
+    ) -> Engine {
+        let cfg = ModelConfig::tiny();
+        let backend = NativeBackend::new(NativeModel::new(ModelWeights::init(&cfg, 1)))
+            .with_decode_threads(threads);
+        let econf = EngineConfig {
+            num_blocks: 48,
+            block_size: 8,
+            sched: SchedulerConfig {
+                max_running: 8,
+                max_decode_batch: 4,
+                watermark_blocks: 1,
+                ..Default::default()
+            },
+            decode_buckets: BucketPolicy::exact(4),
+            prefill_chunk: usize::MAX,
+            prefix_cache_blocks: 2,
+            kv_dtype,
+            weight_dtype: WeightDtype::F32,
+            spill: Some(crate::kvcache::SpillConfig::new(dir)),
+        };
+        Engine::new(Box::new(backend), econf)
+    }
+
+    fn prompt_a() -> Vec<u32> {
+        (0..20).map(|i| 256 + (i % 100)).collect()
+    }
+
+    fn prompt_b() -> Vec<u32> {
+        (0..20).map(|i| 300 + (i % 90)).collect()
+    }
+
+    /// One request served to completion; returns its tokens.
+    fn serve(e: &mut Engine, prompt: Vec<u32>) -> Vec<u32> {
+        e.add_request(prompt, params(5)).unwrap();
+        e.run_to_completion();
+        e.take_outputs().pop().unwrap().tokens
+    }
+
+    #[test]
+    fn spill_disabled_by_default_and_counters_stay_zero() {
+        let mut e = engine(32);
+        assert!(!e.spill_enabled());
+        assert!(e.spill_stats().is_none());
+        e.add_request(vec![256, 1, 2, 3], params(5)).unwrap();
+        let r = e.run_to_completion();
+        assert_eq!(r.spill_hit_tokens, 0, "default config must never touch a spill tier");
+        assert_eq!(r.spill_bytes, 0);
+        assert_eq!(r.spill_corrupt_records, 0);
+    }
+
+    /// The restore-correctness anchor: a prompt whose prefix KV was
+    /// evicted to disk and restored must generate the SAME tokens as a
+    /// plain recompute engine — for both cache dtypes and across
+    /// attention thread widths (restored KV is exact bytes, not a
+    /// requantization).
+    #[test]
+    fn spill_restore_is_bit_identical_across_dtypes_and_thread_widths() {
+        for kv_dtype in [KvCacheDtype::F32, KvCacheDtype::Q8] {
+            // Baseline: no prefix cache, no spill — plain recompute.
+            let baseline = serve(&mut engine_with_dtype(48, kv_dtype), prompt_a());
+            for threads in [1usize, 4] {
+                let dir = spill_dir(&format!("roundtrip_{kv_dtype:?}_{threads}"));
+                let mut e = engine_with_spill(kv_dtype, threads, &dir);
+                // A seeds the 2-block prefix cache (its own tail insert
+                // already spills one block); B's insert evicts the rest
+                // of A's blocks to disk; A again misses RAM and must
+                // restore from the tier.
+                let first = serve(&mut e, prompt_a());
+                let _ = serve(&mut e, prompt_b());
+                let st = e.spill_stats().unwrap();
+                assert!(st.records >= 2, "eviction must have spilled A's blocks, got {st:?}");
+                let again = serve(&mut e, prompt_a());
+                let r = e.metrics.report();
+                assert!(
+                    r.spill_hit_tokens >= 16,
+                    "A's 2 leading blocks must restore from disk (hit {} tokens)",
+                    r.spill_hit_tokens
+                );
+                assert!(r.spill_bytes > 0);
+                assert_eq!(r.spill_corrupt_records, 0);
+                assert_eq!(r.decode_stall_steps, 0);
+                assert_eq!(first, baseline);
+                assert_eq!(
+                    again, baseline,
+                    "disk-restored KV diverged from recompute ({kv_dtype:?}, {threads} threads)"
+                );
+                let _ = std::fs::remove_dir_all(&dir);
+            }
+        }
+    }
+
+    /// Torn-record degradation: a bit flip on the restore read
+    /// quarantines the record and the request silently recomputes —
+    /// same tokens, no stall, tier still live.
+    #[test]
+    fn spill_corrupt_read_quarantines_and_serving_recomputes() {
+        use crate::runtime::fault::IoFaultPlan;
+        let baseline = serve(&mut engine_with_dtype(48, KvCacheDtype::F32), prompt_a());
+        let dir = spill_dir("corrupt");
+        let mut e = engine_with_spill(KvCacheDtype::F32, 0, &dir);
+        let _ = serve(&mut e, prompt_a());
+        let _ = serve(&mut e, prompt_b());
+        assert!(e.arm_spill_io_faults(IoFaultPlan::new(11).corrupt_read_bit(0).injector()));
+        let again = serve(&mut e, prompt_a());
+        let r = e.metrics.report();
+        assert_eq!(again, baseline, "recompute fallback must be invisible in the tokens");
+        assert!(r.spill_corrupt_records >= 1, "flipped bit must be counted: {r:?}");
+        assert_eq!(r.spill_hit_tokens, 0, "a failed first-block restore adopts nothing");
+        assert_eq!(r.decode_stall_steps, 0);
+        assert!(e.spill_enabled(), "corruption quarantines records, not the tier");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Kill-mid-write: a short write disables the tier (torn tail left
+    /// for recovery), serving continues undisturbed, and a NEW engine
+    /// over the same directory recovers the store and serves restores.
+    #[test]
+    fn spill_short_write_disables_tier_and_reopen_recovers() {
+        use crate::runtime::fault::IoFaultPlan;
+        let baseline = serve(&mut engine_with_dtype(48, KvCacheDtype::F32), prompt_a());
+        let dir = spill_dir("kill");
+        {
+            let mut e = engine_with_spill(KvCacheDtype::F32, 0, &dir);
+            assert!(e.arm_spill_io_faults(IoFaultPlan::new(42).short_write_at(0).injector()));
+            // First eviction offer is killed mid-record.
+            let first = serve(&mut e, prompt_a());
+            let second = serve(&mut e, prompt_b());
+            assert!(!e.spill_enabled(), "kill-model short write must trip the tier off");
+            assert_eq!(first, baseline);
+            assert_eq!(second.len(), 5, "serving must continue with the tier down");
+            assert_eq!(e.metrics.report().decode_stall_steps, 0);
+        }
+        // Reopen: recovery truncates the torn tail; the tier is live
+        // again and a full evict/restore cycle works on the same files.
+        let mut e = engine_with_spill(KvCacheDtype::F32, 0, &dir);
+        assert!(e.spill_enabled(), "recovery must reopen a store with a torn tail");
+        let _ = serve(&mut e, prompt_a());
+        let _ = serve(&mut e, prompt_b());
+        let again = serve(&mut e, prompt_a());
+        assert_eq!(again, baseline);
+        assert!(e.metrics.report().spill_hit_tokens >= 16);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// An unopenable store (path occupied by a regular file) degrades
+    /// to serving without the tier — never a construction failure.
+    #[test]
+    fn spill_open_failure_degrades_to_serving_without_tier() {
+        let dir = spill_dir("openfail");
+        std::fs::write(&dir, b"not a directory").unwrap();
+        let mut e = engine_with_spill(KvCacheDtype::F32, 0, &dir);
+        assert!(e.spill_stats().is_none(), "tier must be absent, not broken");
+        let toks = serve(&mut e, prompt_a());
+        assert_eq!(toks.len(), 5);
+        let r = e.metrics.report();
+        assert_eq!(r.spill_hit_tokens, 0);
+        assert_eq!(r.spill_bytes, 0);
+        let _ = std::fs::remove_file(&dir);
     }
 }

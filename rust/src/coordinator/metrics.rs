@@ -110,6 +110,16 @@ pub struct EngineMetrics {
     /// Cumulative engine-worker crash/respawn count under supervision
     /// (mirrored in by the router worker loop).
     pub worker_restarts: usize,
+    /// Prompt tokens covered by disk-spill restores at admission
+    /// (subset of `prefix_hit_tokens`). MUST stay 0 without `--spill-dir`
+    /// — the default baseline never touches the tier.
+    pub spill_hit_tokens: usize,
+    /// Record bytes appended to the spill store (mirrored from
+    /// `SpillTier::stats().bytes_written` each step; 0 when off).
+    pub spill_bytes: usize,
+    /// Spill records quarantined by a read-time checksum failure —
+    /// each one served via recompute instead (mirrored from the tier).
+    pub spill_corrupt_records: usize,
 }
 
 /// Max inter-token gap samples retained for percentiles (~512 KiB).
@@ -168,6 +178,9 @@ impl EngineMetrics {
                 deadline_miss_count: self.deadline_miss_count,
                 concurrency_limit: self.concurrency_limit,
                 worker_restarts: self.worker_restarts,
+                spill_hit_tokens: self.spill_hit_tokens,
+                spill_bytes: self.spill_bytes,
+                spill_corrupt_records: self.spill_corrupt_records,
                 ..RunReport::default()
             };
         }
@@ -209,6 +222,9 @@ impl EngineMetrics {
             deadline_miss_count: self.deadline_miss_count,
             concurrency_limit: self.concurrency_limit,
             worker_restarts: self.worker_restarts,
+            spill_hit_tokens: self.spill_hit_tokens,
+            spill_bytes: self.spill_bytes,
+            spill_corrupt_records: self.spill_corrupt_records,
         }
     }
 }
@@ -263,6 +279,14 @@ pub struct RunReport {
     pub concurrency_limit: usize,
     /// Cumulative supervised engine-worker restarts.
     pub worker_restarts: usize,
+    /// Prompt tokens restored from the disk spill tier at admission
+    /// (0 without `--spill-dir`).
+    pub spill_hit_tokens: usize,
+    /// Record bytes appended to the spill store (0 when off).
+    pub spill_bytes: usize,
+    /// Spill records quarantined by read-time checksum failures (each
+    /// one degraded to recompute).
+    pub spill_corrupt_records: usize,
 }
 
 impl RunReport {

@@ -38,8 +38,9 @@ pub use engine::{Engine, EngineConfig, RequestOutput};
 // Re-exported so engine-config construction sites don't need separate
 // kvcache/model imports for the storage-dtype knobs.
 pub use crate::kvcache::KvCacheDtype;
+pub use crate::kvcache::{SpillConfig, SpillError, SpillStats};
 pub use crate::model::WeightDtype;
 pub use metrics::{EngineMetrics, RunReport};
 pub use router::{Router, RouterConfig, SubmitResult, WorkerHealth, WorkerSnapshot};
-pub use scheduler::{PrefillChunk, Scheduler, SchedulerConfig, StepPlan};
+pub use scheduler::{PrefillChunk, Scheduler, SchedulerConfig, SpillCtx, StepPlan};
 pub use sequence::{SeqPhase, Sequence};

@@ -470,12 +470,21 @@ fn worker_loop<F>(
                 match rx.try_recv() {
                     Ok(m) => m,
                     Err(TryRecvError::Empty) => break,
-                    Err(TryRecvError::Disconnected) => return,
+                    Err(TryRecvError::Disconnected) => {
+                        // Orphaned worker (router dropped without
+                        // Shutdown): still flush the spill commit
+                        // frontier so restored-KV durability survives.
+                        engine.flush_spill();
+                        return;
+                    }
                 }
             } else {
                 match rx.recv() {
                     Ok(m) => m,
-                    Err(_) => return,
+                    Err(_) => {
+                        engine.flush_spill();
+                        return;
+                    }
                 }
             };
             match msg {
@@ -498,7 +507,14 @@ fn worker_loop<F>(
                         concurrency_limit: aimd.limit(),
                     });
                 }
-                WorkerMsg::Shutdown => return,
+                WorkerMsg::Shutdown => {
+                    // Graceful drain: the spill tier's commit frontier
+                    // must be durable before the worker exits, so a
+                    // restarted deployment recovers every offered block
+                    // (ARCHITECTURE.md "Spill & recovery contract").
+                    engine.flush_spill();
+                    return;
+                }
             }
         }
         // Deadline shedding — strictly before admission/scheduling, so
@@ -573,6 +589,7 @@ mod tests {
             prefix_cache_blocks: 0,
             kv_dtype: crate::kvcache::KvCacheDtype::F32,
             weight_dtype: crate::model::WeightDtype::F32,
+            spill: None,
         }
     }
 

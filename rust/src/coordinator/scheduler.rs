@@ -34,8 +34,30 @@
 use super::sequence::{SeqPhase, Sequence};
 use crate::attention::SparsityConfig;
 use crate::kvcache::eviction::{EvictionCandidate, EvictionPolicy, LruEviction};
-use crate::kvcache::{BlockAllocator, BlockTable, PrefixCache};
+use crate::kvcache::prefix_cache::chain_block_hashes;
+use crate::kvcache::{
+    BlockAllocator, BlockId, BlockTable, KvStore, PrefixCache, SpillTier, TOMBSTONE,
+};
 use std::collections::{BTreeMap, VecDeque};
+
+/// Borrowed cold-tier context for one scheduling call: the disk spill
+/// store plus the KV pool restores land in. Threaded through
+/// [`Scheduler::plan_with_spill`] /
+/// [`Scheduler::enforce_window_with_spill`]; every tier failure inside
+/// degrades to recompute-on-miss, never into a planning error.
+pub struct SpillCtx<'a> {
+    pub tier: &'a mut SpillTier,
+    pub cache: &'a mut dyn KvStore,
+    /// Prompt tokens covered by disk restores during this borrow (the
+    /// engine mirrors the total into `spill_hit_tokens`).
+    pub restored_tokens: usize,
+}
+
+impl<'a> SpillCtx<'a> {
+    pub fn new(tier: &'a mut SpillTier, cache: &'a mut dyn KvStore) -> SpillCtx<'a> {
+        SpillCtx { tier, cache, restored_tokens: 0 }
+    }
+}
 
 /// Scheduler tunables.
 #[derive(Debug, Clone, Copy)]
@@ -195,12 +217,25 @@ impl Scheduler {
     pub fn plan(
         &mut self,
         alloc: &mut BlockAllocator,
+        prefix: Option<&mut PrefixCache>,
+    ) -> StepPlan {
+        self.plan_with_spill(alloc, prefix, None)
+    }
+
+    /// [`Scheduler::plan`] with a cold-tier restore context: admissions
+    /// whose prefix run misses the RAM prefix cache consult the disk
+    /// spill index and restore evicted blocks into freshly allocated
+    /// ones before falling back to recomputation.
+    pub fn plan_with_spill(
+        &mut self,
+        alloc: &mut BlockAllocator,
         mut prefix: Option<&mut PrefixCache>,
+        mut spill: Option<&mut SpillCtx<'_>>,
     ) -> StepPlan {
         if self.cfg.chunked_prefill {
-            self.plan_mixed(alloc, prefix.as_deref_mut())
+            self.plan_mixed(alloc, prefix.as_deref_mut(), spill.as_deref_mut())
         } else {
-            self.plan_exclusive(alloc, prefix.as_deref_mut())
+            self.plan_exclusive(alloc, prefix.as_deref_mut(), spill.as_deref_mut())
         }
     }
 
@@ -208,6 +243,7 @@ impl Scheduler {
         &mut self,
         alloc: &mut BlockAllocator,
         prefix: Option<&mut PrefixCache>,
+        spill: Option<&mut SpillCtx<'_>>,
     ) -> StepPlan {
         // Effective floor of 2: at budget 1 either decode would starve
         // admission (unbounded TTFT) or prefill would starve decode —
@@ -221,7 +257,7 @@ impl Scheduler {
         let decode_cap = if prefill_pending { budget - 1 } else { budget };
         let decode = self.plan_decode(alloc, decode_cap);
         let left = budget - decode.len();
-        let mut prefill = self.plan_prefill(alloc, left, prefix);
+        let mut prefill = self.plan_prefill(alloc, left, prefix, spill);
         if prefill.is_empty() && decode.is_empty() {
             if self.is_idle() {
                 return StepPlan::Idle;
@@ -240,10 +276,12 @@ impl Scheduler {
         &mut self,
         alloc: &mut BlockAllocator,
         mut prefix: Option<&mut PrefixCache>,
+        mut spill: Option<&mut SpillCtx<'_>>,
     ) -> StepPlan {
         // 1. Prefill priority: admit the waiting head if its whole
         //    replay fits under the watermark.
-        if let Some(chunk) = self.try_admit_whole(alloc, prefix.as_deref_mut()) {
+        if let Some(chunk) = self.try_admit_whole(alloc, prefix.as_deref_mut(), spill.as_deref_mut())
+        {
             // Decoders idle behind a whole-prompt prefill (the admitted
             // sequence itself is Prefilling, so it isn't counted): the
             // head-of-line stall the mixed planner eliminates — and what
@@ -260,7 +298,7 @@ impl Scheduler {
             // A preemption storm may have pushed every decoder back to
             // the waiting queue; its freed blocks can admit the head now
             // instead of wasting a step.
-            if let Some(chunk) = self.try_admit_whole(alloc, prefix) {
+            if let Some(chunk) = self.try_admit_whole(alloc, prefix, spill) {
                 return StepPlan::Mixed { prefill: vec![chunk], decode: Vec::new() };
             }
             return StepPlan::Idle;
@@ -339,6 +377,7 @@ impl Scheduler {
         alloc: &mut BlockAllocator,
         mut left: usize,
         mut prefix: Option<&mut PrefixCache>,
+        mut spill: Option<&mut SpillCtx<'_>>,
     ) -> Vec<PrefillChunk> {
         let bs = alloc.block_size();
         let mut out = Vec::new();
@@ -390,42 +429,79 @@ impl Scheduler {
                 break;
             }
             self.waiting.pop_front();
-            let chunk = self.admit(cand, alloc, free_tokens.min(left), prefix.as_deref_mut());
+            let chunk = self.admit(
+                cand,
+                alloc,
+                free_tokens.min(left),
+                prefix.as_deref_mut(),
+                spill.as_deref_mut(),
+            );
             left -= chunk.len;
             out.push(chunk);
         }
         out
     }
 
-    /// Admit a popped waiting sequence: adopt any cached prefix blocks,
-    /// reserve its first chunk (≤ `cap` tokens, ≥ 1), move it to the
-    /// running set.
+    /// Admit a popped waiting sequence: adopt any cached prefix blocks
+    /// (RAM first, then disk-spill restores), reserve its first chunk
+    /// (≤ `cap` tokens, ≥ 1), move it to the running set.
     fn admit(
         &mut self,
         cand: u64,
         alloc: &mut BlockAllocator,
         cap: usize,
         prefix: Option<&mut PrefixCache>,
+        spill: Option<&mut SpillCtx<'_>>,
     ) -> PrefillChunk {
         debug_assert!(cap > 0);
+        let bs = alloc.block_size();
         let seq = self.seqs.get_mut(&cand).unwrap();
         debug_assert!(seq.table.is_empty() && seq.prefill_pos == 0, "admission of a live table");
+        let toks = seq.replay_tokens();
         // Prefix reuse (§III.C "cache sharing and reuse"): adopt cached
         // leading blocks outright — they are shared (refcounted), so
         // adoption consumes no free blocks, and `lookup_shared` always
         // leaves at least one token to compute logits from.
-        if let Some(pc) = prefix {
-            let toks = seq.replay_tokens();
-            let shared = pc.lookup_shared(&toks, alloc);
-            if !shared.is_empty() {
-                seq.table.adopt_prefix(&shared, alloc.block_size());
-                seq.prefill_pos = seq.table.len();
-                self.prefix_hit_tokens += seq.prefill_pos;
+        let mut adopted: Vec<BlockId> = match prefix {
+            Some(pc) => pc.lookup_shared(&toks, alloc),
+            None => Vec::new(),
+        };
+        // Cold-tier extension: where the RAM hits stop, consult the
+        // disk spill index and restore evicted blocks into freshly
+        // allocated ones — exact bytes, CRC re-verified on read, so the
+        // restored KV is bit-identical to the evicted KV. Any failure
+        // (miss, quarantine, IO, pool pressure) just ends the run:
+        // prefill recomputes the rest. One free block is always kept
+        // back so the computed chunk below can reserve.
+        if let Some(ctx) = spill {
+            let max_blocks = toks.len().saturating_sub(1) / bs;
+            let hashes = chain_block_hashes(bs, &toks);
+            for &h in hashes.iter().take(max_blocks).skip(adopted.len()) {
+                if !ctx.tier.enabled() || !ctx.tier.contains(h) || alloc.num_free() <= 1 {
+                    break;
+                }
+                let Some(b) = alloc.alloc() else { break };
+                if ctx.tier.restore_into(h, ctx.cache, b).is_ok() {
+                    ctx.restored_tokens += bs;
+                    adopted.push(b);
+                } else {
+                    alloc.release(b);
+                    break;
+                }
             }
         }
         let seq = self.seqs.get_mut(&cand).unwrap();
+        if !adopted.is_empty() {
+            seq.table.adopt_prefix(&adopted, bs);
+            seq.prefill_pos = seq.table.len();
+            self.prefix_hit_tokens += seq.prefill_pos;
+        }
         let remaining = seq.remaining_prefill();
-        let chunk = remaining.min(cap);
+        // Re-derived block bound: spill restores may have consumed free
+        // blocks since the caller sized `cap` (never to zero — the loop
+        // above keeps one back, so `chunk ≥ 1` still holds).
+        let spare = seq.table.blocks().len() * bs - seq.table.len();
+        let chunk = remaining.min(cap).min(spare + alloc.num_free() * bs);
         let ok = seq.table.reserve(chunk, alloc);
         debug_assert!(ok, "admission free-token math lied");
         seq.phase = SeqPhase::Prefilling;
@@ -439,6 +515,7 @@ impl Scheduler {
         &mut self,
         alloc: &mut BlockAllocator,
         prefix: Option<&mut PrefixCache>,
+        spill: Option<&mut SpillCtx<'_>>,
     ) -> Option<PrefillChunk> {
         if self.running.len() >= self.cfg.max_running {
             return None;
@@ -451,7 +528,7 @@ impl Scheduler {
             return None;
         }
         self.waiting.pop_front();
-        Some(self.admit(cand, alloc, replay, prefix))
+        Some(self.admit(cand, alloc, replay, prefix, spill))
     }
 
     /// Memory-stuck escape hatch: no decode could be planned and no
@@ -468,7 +545,7 @@ impl Scheduler {
         budget: usize,
     ) -> Vec<PrefillChunk> {
         loop {
-            let plan = self.plan_prefill(alloc, budget, None);
+            let plan = self.plan_prefill(alloc, budget, None, None);
             if !plan.is_empty() {
                 return plan;
             }
@@ -520,6 +597,21 @@ impl Scheduler {
     /// free once the last holder drops them); the running total is
     /// [`Scheduler::evicted_blocks`]. No-op (0) under a dense config.
     pub fn enforce_window(&mut self, sp: &SparsityConfig, alloc: &mut BlockAllocator) -> usize {
+        self.enforce_window_with_spill(sp, alloc, None)
+    }
+
+    /// [`Scheduler::enforce_window`] with a cold-tier context: each
+    /// victim block is offered to the disk spill store *before*
+    /// `evict_leading` releases it (its bytes are still intact — nothing
+    /// allocates between the offer and the release), keyed by the same
+    /// chain hash the prefix cache would use, so a later request with
+    /// the same prefix can restore it instead of recomputing.
+    pub fn enforce_window_with_spill(
+        &mut self,
+        sp: &SparsityConfig,
+        alloc: &mut BlockAllocator,
+        mut spill: Option<&mut SpillCtx<'_>>,
+    ) -> usize {
         if !sp.is_windowed() {
             return 0;
         }
@@ -531,6 +623,33 @@ impl Scheduler {
             // The next query position: decode appends at `table.len()`,
             // and a mid-prefill chunk resumes there too.
             let frontier = sp.evict_frontier(seq.table.len(), bs);
+            if let Some(ctx) = spill.as_deref_mut() {
+                if ctx.tier.enabled() {
+                    let hi = frontier.min(seq.table.blocks().len());
+                    let lo = sp.sink_blocks.min(hi);
+                    if lo < hi {
+                        // A block's KV depends only on the tokens up to
+                        // its end (causal attention), so the chain hash
+                        // over the replay prefix names its bytes exactly.
+                        let hashes = chain_block_hashes(bs, &seq.replay_tokens());
+                        for i in lo..hi {
+                            let b = seq.table.blocks()[i];
+                            if b == TOMBSTONE {
+                                continue; // evicted on an earlier pass
+                            }
+                            let Some(&h) = hashes.get(i) else { break };
+                            if ctx.tier.contains(h) {
+                                continue;
+                            }
+                            let payload = ctx.cache.export_block(b);
+                            // Failures degrade (recompute-on-miss) and
+                            // feed the tier's own circuit breaker.
+                            let _ = ctx.tier.offer(h, &payload);
+                        }
+                    }
+                }
+            }
+            let seq = self.seqs.get_mut(&id).unwrap();
             freed += seq.table.evict_leading(sp.sink_blocks, frontier, alloc);
         }
         self.evicted_blocks += freed;
@@ -845,6 +964,80 @@ mod tests {
         let mut s = sched(4, 64);
         let mut alloc = BlockAllocator::new(8, 4);
         assert_eq!(s.plan(&mut alloc, None), StepPlan::Idle);
+    }
+
+    #[test]
+    fn window_eviction_offers_victims_and_admission_restores_them() {
+        use crate::kvcache::spill::SpillConfig;
+        use crate::kvcache::{PagedKvCache, SpillTier};
+        let dir = std::env::temp_dir().join("opt_gptq_spill_sched_offer");
+        let _ = std::fs::remove_dir_all(&dir);
+
+        let bs = 4usize;
+        let mut alloc = BlockAllocator::new(16, bs);
+        // 1 layer, 16 blocks, bs 4, 1 kv head, dim 2 — enough to carry
+        // recognizable bytes through evict → spill → restore.
+        let mut cache = PagedKvCache::new(1, 16, bs, 1, 2);
+        let mut tier = SpillTier::open(SpillConfig::new(&dir), 0, 9).unwrap();
+
+        // Prefill an 18-token sequence, writing distinct KV per slot.
+        let mut s = sched(4, 64);
+        s.add(seq(1, 18, 8));
+        let (p, _) = unpack(s.plan(&mut alloc, None));
+        complete_chunk(&mut s, &p[0], bs);
+        let table_blocks = s.get(1).unwrap().table.blocks().to_vec();
+        for (i, &b) in table_blocks.iter().enumerate() {
+            for slot in 0..bs {
+                let t = (i * bs + slot) as f32;
+                cache.write_token(0, b, slot, &[t, -t], &[t * 2.0, t + 0.5]);
+            }
+        }
+        let replay = s.get(1).unwrap().replay_tokens();
+        let hashes = chain_block_hashes(bs, &replay);
+        let victim_bytes: Vec<Vec<u8>> =
+            (1..3).map(|i| cache.export_block(table_blocks[i])).collect();
+
+        // Window eviction with the spill observer: blocks 1 and 2 fall
+        // behind the frontier and must be offered before they are freed.
+        let sp = SparsityConfig::windowed(2, 1);
+        let mut ctx = SpillCtx::new(&mut tier, &mut cache);
+        let freed = s.enforce_window_with_spill(&sp, &mut alloc, Some(&mut ctx));
+        assert_eq!(freed, 2);
+        assert_eq!(tier.records(), 2, "both victims spilled");
+        assert!(tier.contains(hashes[1]) && tier.contains(hashes[2]));
+        // Spilled payloads are the exact evicted bytes.
+        for (i, bytes) in victim_bytes.iter().enumerate() {
+            assert_eq!(&tier.restore(hashes[i + 1]).unwrap(), bytes);
+        }
+        // Idempotent: a second pass has nothing new to offer.
+        let mut ctx = SpillCtx::new(&mut tier, &mut cache);
+        assert_eq!(s.enforce_window_with_spill(&sp, &mut alloc, Some(&mut ctx)), 0);
+        assert_eq!(tier.records(), 2);
+
+        // A fresh request whose prompt shares the prefix restores the
+        // evicted blocks at admission instead of recomputing. The tier
+        // needs block 0 too (restores are an unbroken *leading* run;
+        // block 0 was the sink and never offered), so seed it directly.
+        let h0_payload = cache.export_block(table_blocks[0]);
+        assert!(tier.offer(hashes[0], &h0_payload).unwrap());
+        let mut s2 = sched(4, 64);
+        let params = SamplingParams { max_tokens: 4, ..Default::default() };
+        s2.add(Sequence::new(9, replay[..12].to_vec(), params, 0.0));
+        // 12-token prompt → at most (12−1)/4 = 2 leading blocks may be
+        // adopted (≥ 1 token always left to compute logits from).
+        let mut restored_pool = PagedKvCache::new(1, 16, bs, 1, 2);
+        let mut ctx = SpillCtx::new(&mut tier, &mut restored_pool);
+        let (p2, _) = unpack(s2.plan_with_spill(&mut alloc, None, Some(&mut ctx)));
+        assert_eq!(ctx.restored_tokens, 8, "two full blocks restored from disk");
+        assert_eq!(p2.len(), 1);
+        assert_eq!(p2[0].start, 8, "prefill resumes after the restored run");
+        assert_eq!(p2[0].len, 4, "12-token prompt: last 4 tokens computed");
+        assert_eq!(s2.prefix_hit_tokens, 8);
+        let adopted = s2.get(9).unwrap().table.blocks().to_vec();
+        // Restored bytes are bit-identical to the evicted ones.
+        assert_eq!(restored_pool.export_block(adopted[0]), h0_payload);
+        assert_eq!(restored_pool.export_block(adopted[1]), victim_bytes[0]);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

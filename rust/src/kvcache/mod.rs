@@ -11,8 +11,10 @@
 //! implementations selected by [`KvCacheDtype`]: the dense f32 pool
 //! ([`PagedKvCache`]) and the packed 8-bit pool
 //! ([`QuantizedPagedKvCache`], quantize-on-append, per-(block, kv_head)
-//! grids, in-tile dequant in the attention kernel). See ARCHITECTURE.md
-//! for how the request path flows through this module.
+//! grids, in-tile dequant in the attention kernel). Evicted blocks can
+//! optionally spill to a crash-safe on-disk tier ([`SpillTier`], off by
+//! default) and be restored bit-identically on a later prefix hit. See
+//! ARCHITECTURE.md for how the request path flows through this module.
 
 pub mod block_allocator;
 pub mod block_table;
@@ -21,6 +23,7 @@ pub mod eviction;
 pub mod paged;
 pub mod prefix_cache;
 pub mod quantized;
+pub mod spill;
 pub mod stats;
 pub mod store;
 
@@ -31,5 +34,6 @@ pub use eviction::{EvictionPolicy, LruEviction};
 pub use paged::PagedKvCache;
 pub use prefix_cache::PrefixCache;
 pub use quantized::{QuantKvTile, QuantizedPagedKvCache};
+pub use spill::{SpillConfig, SpillError, SpillStats, SpillTier};
 pub use stats::CacheStats;
 pub use store::{KvBlockView, KvCacheDtype, KvStore};

@@ -231,6 +231,64 @@ impl PagedKvCache {
     pub fn raw_values(&self, layer: usize) -> &[f32] {
         &self.values[layer]
     }
+
+    /// Byte length of one [`PagedKvCache::export_block`] payload.
+    pub fn block_export_bytes(&self) -> usize {
+        let d = self.block_size * self.kv_heads * self.head_dim;
+        self.num_layers * (2 * d + 2 * self.kv_heads) * 4
+    }
+
+    /// Serialize one block's complete state — K and V payload plus the
+    /// per-(block, kv_head) K-range metadata, every layer — as exact
+    /// little-endian f32 bytes. [`PagedKvCache::import_block`] of this
+    /// payload reproduces the block bit-for-bit (NaN/∞ range poisons
+    /// included), which is what makes a spill/restore round trip
+    /// indistinguishable from never having evicted the block.
+    pub fn export_block(&self, block: BlockId) -> Vec<u8> {
+        let d = self.block_size * self.kv_heads * self.head_dim;
+        let off = block as usize * d;
+        let gs = block as usize * self.kv_heads;
+        let mut out = Vec::with_capacity(self.block_export_bytes());
+        let mut push = |xs: &[f32]| {
+            for &x in xs {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        };
+        for layer in 0..self.num_layers {
+            push(&self.keys[layer][off..off + d]);
+            push(&self.values[layer][off..off + d]);
+            push(&self.k_lo[layer][gs..gs + self.kv_heads]);
+            push(&self.k_hi[layer][gs..gs + self.kv_heads]);
+        }
+        out
+    }
+
+    /// Inverse of [`PagedKvCache::export_block`]: overwrite `block`
+    /// (all layers, payload + range metadata) from an exported payload.
+    /// Returns `false` (block untouched) on a length mismatch — the
+    /// caller treats that as a miss, never a panic.
+    pub fn import_block(&mut self, block: BlockId, bytes: &[u8]) -> bool {
+        if bytes.len() != self.block_export_bytes() {
+            return false;
+        }
+        let d = self.block_size * self.kv_heads * self.head_dim;
+        let off = block as usize * d;
+        let gs = block as usize * self.kv_heads;
+        let mut cursor = 0usize;
+        let mut pull = |dst: &mut [f32]| {
+            for x in dst {
+                *x = f32::from_le_bytes(bytes[cursor..cursor + 4].try_into().unwrap());
+                cursor += 4;
+            }
+        };
+        for layer in 0..self.num_layers {
+            pull(&mut self.keys[layer][off..off + d]);
+            pull(&mut self.values[layer][off..off + d]);
+            pull(&mut self.k_lo[layer][gs..gs + self.kv_heads]);
+            pull(&mut self.k_hi[layer][gs..gs + self.kv_heads]);
+        }
+        true
+    }
 }
 
 #[cfg(test)]
@@ -326,5 +384,35 @@ mod tests {
         let cache = PagedKvCache::new(2, 4, 4, 2, 3);
         // 2 (K+V) * 2 layers * 4 blocks * 4 slots * 2 heads * 3 dim * 4 bytes
         assert_eq!(cache.pool_bytes(), 2 * 2 * 4 * 4 * 2 * 3 * 4);
+    }
+
+    #[test]
+    fn export_import_roundtrips_payload_and_bounds_bit_exactly() {
+        let (mut cache, _alloc) = mk();
+        for s in 0..4 {
+            let k: Vec<f32> = (0..6).map(|j| (s * 6 + j) as f32 * 0.37 - 2.0).collect();
+            let v: Vec<f32> = (0..6).map(|j| (s * 6 + j) as f32 * -0.11).collect();
+            cache.write_token(0, 1, s, &k, &v);
+            cache.write_token(1, 1, s, &v, &k);
+        }
+        let bytes = cache.export_block(1);
+        assert_eq!(bytes.len(), cache.block_export_bytes());
+        // Restore into a *different* block of a fresh pool; every read
+        // and every bound must match the source bit-for-bit.
+        let mut other = PagedKvCache::new(2, 4, 4, 2, 3);
+        assert!(other.import_block(3, &bytes));
+        for layer in 0..2 {
+            assert_eq!(cache.key_block(layer, 1), other.key_block(layer, 3));
+            assert_eq!(cache.value_block(layer, 1), other.value_block(layer, 3));
+            for h in 0..2 {
+                assert_eq!(
+                    cache.key_tile_bounds(layer, 1, h),
+                    other.key_tile_bounds(layer, 3, h)
+                );
+            }
+        }
+        // Length mismatch is a refusal, not a panic or partial write.
+        assert!(!other.import_block(0, &bytes[..bytes.len() - 1]));
+        assert_eq!(other.key_block(0, 0), &[0.0; 24][..]);
     }
 }

@@ -24,6 +24,20 @@ fn chain_hash(parent: u64, tokens: &[u32]) -> u64 {
     h
 }
 
+/// Chain hashes for every *full* `block_size` block of `tokens` — the
+/// same hashes [`PrefixCache`] indexes by, exported as a free function
+/// so eviction paths that do not hold a cache (the sliding-window
+/// evictor, the spill tier) can name the blocks they are about to drop.
+pub fn chain_block_hashes(block_size: usize, tokens: &[u32]) -> Vec<u64> {
+    let mut out = Vec::new();
+    let mut parent = 0u64;
+    for chunk in tokens.chunks_exact(block_size) {
+        parent = chain_hash(parent, chunk);
+        out.push(parent);
+    }
+    out
+}
+
 /// Hash-indexed cache of full KV blocks.
 #[derive(Debug)]
 pub struct PrefixCache {
@@ -62,13 +76,7 @@ impl PrefixCache {
 
     /// Chain hashes for every *full* block of `tokens`.
     pub fn block_hashes(&self, tokens: &[u32]) -> Vec<u64> {
-        let mut out = Vec::new();
-        let mut parent = 0u64;
-        for chunk in tokens.chunks_exact(self.block_size) {
-            parent = chain_hash(parent, chunk);
-            out.push(parent);
-        }
-        out
+        chain_block_hashes(self.block_size, tokens)
     }
 
     /// Longest run of leading full blocks of `tokens` present in the
@@ -96,9 +104,16 @@ impl PrefixCache {
 
     /// Index a finished/filled sequence's full blocks. The cache takes
     /// its own reference on each newly indexed block; already-indexed
-    /// hashes keep their existing block.
-    pub fn insert(&mut self, tokens: &[u32], blocks: &[BlockId], alloc: &mut BlockAllocator) {
+    /// hashes keep their existing block. Returns the victims evicted to
+    /// make room (see [`PrefixCache::evict_to`] for the contract).
+    pub fn insert(
+        &mut self,
+        tokens: &[u32],
+        blocks: &[BlockId],
+        alloc: &mut BlockAllocator,
+    ) -> Vec<(u64, BlockId)> {
         let hashes = self.block_hashes(tokens);
+        let mut victims = Vec::new();
         for (i, h) in hashes.into_iter().enumerate() {
             if i >= blocks.len() {
                 break;
@@ -106,27 +121,40 @@ impl PrefixCache {
             if self.map.contains_key(&h) {
                 continue;
             }
-            self.evict_to(self.capacity.saturating_sub(1), alloc);
+            victims.extend(self.evict_to(self.capacity.saturating_sub(1), alloc));
             alloc.share(blocks[i]);
             self.map.insert(h, blocks[i]);
             self.order.push_back(h);
             self.insertions += 1;
         }
+        victims
     }
 
-    /// Release cache references until at most `target` blocks are pinned.
-    pub fn evict_to(&mut self, target: usize, alloc: &mut BlockAllocator) {
+    /// Release cache references until at most `target` blocks are
+    /// pinned, returning each victim as a `(chain_hash, block)` pair so
+    /// the caller can offer it to a colder tier (the disk spill store)
+    /// before the pool reuses it.
+    ///
+    /// The cache's reference is already released when this returns, but
+    /// the block's *bytes* are untouched until the allocator hands the
+    /// block out again — so a caller that exports victim bytes before
+    /// its next `alloc()` reads exactly the KV that was cached.
+    pub fn evict_to(&mut self, target: usize, alloc: &mut BlockAllocator) -> Vec<(u64, BlockId)> {
+        let mut victims = Vec::new();
         while self.map.len() > target {
             let Some(h) = self.order.pop_front() else { break };
             if let Some(b) = self.map.remove(&h) {
                 alloc.release(b);
+                victims.push((h, b));
             }
         }
+        victims
     }
 
-    /// Drop everything (memory-pressure flush).
-    pub fn clear(&mut self, alloc: &mut BlockAllocator) {
-        self.evict_to(0, alloc);
+    /// Drop everything (memory-pressure flush), returning the victims
+    /// as in [`PrefixCache::evict_to`].
+    pub fn clear(&mut self, alloc: &mut BlockAllocator) -> Vec<(u64, BlockId)> {
+        self.evict_to(0, alloc)
     }
 
     pub fn hit_rate(&self) -> f64 {
@@ -230,6 +258,43 @@ mod tests {
         assert!(c.len() <= 2, "cache pinned {} blocks", c.len());
         // Evicted blocks were fully released.
         assert_eq!(alloc.num_used(), c.len());
+    }
+
+    #[test]
+    fn eviction_reports_every_victim_and_matches_allocator_accounting() {
+        // Regression: `evict_to` used to free victims silently, so no
+        // observer (e.g. the spill tier) could see a block before the
+        // pool reused it. Every eviction path must now report exactly
+        // the (hash, block) pairs whose references it released, and the
+        // allocator's free count must move in lockstep.
+        let mut c = PrefixCache::new(4, 2);
+        let mut alloc = BlockAllocator::new(16, 4);
+        let mut inserted: Vec<(u64, BlockId)> = Vec::new();
+        let mut victims: Vec<(u64, BlockId)> = Vec::new();
+        for seed in 0..5u32 {
+            let toks: Vec<u32> = (0..5).map(|i| seed * 100 + i).collect();
+            let b = alloc.alloc().unwrap();
+            let free_before = alloc.num_free();
+            let evicted = c.insert(&toks, &[b], &mut alloc);
+            // Owner departs immediately: only cache references remain,
+            // so every reported victim was fully freed.
+            alloc.release(b);
+            assert_eq!(
+                alloc.num_free(),
+                free_before + evicted.len(),
+                "free-count delta must equal reported victims at seed {seed}"
+            );
+            inserted.push((c.block_hashes(&toks)[0], b));
+            victims.extend(evicted);
+        }
+        victims.extend(c.clear(&mut alloc));
+        // All 5 singly-referenced inserts were eventually evicted, FIFO,
+        // with the exact (hash, block) pairs that went in.
+        assert_eq!(victims, inserted);
+        assert_eq!(alloc.num_free(), 16, "no block leaked by eviction");
+        // An over-inserted hash is never double-reported.
+        assert!(c.is_empty());
+        assert!(c.evict_to(0, &mut alloc).is_empty());
     }
 
     #[test]

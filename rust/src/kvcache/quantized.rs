@@ -476,6 +476,95 @@ impl QuantizedPagedKvCache {
         self.gathered.load(Ordering::Relaxed)
     }
 
+    /// Byte length of one [`QuantizedPagedKvCache::export_block`] payload.
+    pub fn block_export_bytes(&self) -> usize {
+        let wpb = self.block_size * self.kv_heads * self.words_per_head;
+        // Per plane: packed words + 5 grid/state arrays of kv_heads u32-width values.
+        self.num_layers * 2 * (wpb + 5 * self.kv_heads) * 4
+    }
+
+    /// Serialize one block's complete state — packed words, grids,
+    /// running ranges and fill frontiers, all layers, both sides — as
+    /// exact little-endian bytes (the same per-block state
+    /// [`QuantizedPagedKvCache::copy_block`] copies).
+    /// [`QuantizedPagedKvCache::import_block`] of this payload
+    /// reproduces the block bit-for-bit: the stored levels are moved as
+    /// levels, never dequantized, so a round trip involves no
+    /// requantization and decodes identically to the source block.
+    pub fn export_block(&self, block: BlockId) -> Vec<u8> {
+        let wpb = self.block_size * self.kv_heads * self.words_per_head;
+        let w0 = block as usize * wpb;
+        let g0 = block as usize * self.kv_heads;
+        let kvh = self.kv_heads;
+        let mut out = Vec::with_capacity(self.block_export_bytes());
+        for layer in 0..self.num_layers {
+            for plane in [&self.keys[layer], &self.values[layer]] {
+                for &w in &plane.words[w0..w0 + wpb] {
+                    out.extend_from_slice(&w.to_le_bytes());
+                }
+                for &s in &plane.scales[g0..g0 + kvh] {
+                    out.extend_from_slice(&s.to_le_bytes());
+                }
+                for &z in &plane.zeros[g0..g0 + kvh] {
+                    out.extend_from_slice(&z.to_le_bytes());
+                }
+                for &x in &plane.lo[g0..g0 + kvh] {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+                for &x in &plane.hi[g0..g0 + kvh] {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+                for &f in &plane.filled[g0..g0 + kvh] {
+                    out.extend_from_slice(&f.to_le_bytes());
+                }
+            }
+        }
+        out
+    }
+
+    /// Inverse of [`QuantizedPagedKvCache::export_block`]: overwrite
+    /// `block` (all layers, both sides) from an exported payload.
+    /// Returns `false` (block untouched) on a length mismatch — the
+    /// caller treats that as a miss, never a panic.
+    pub fn import_block(&mut self, block: BlockId, bytes: &[u8]) -> bool {
+        if bytes.len() != self.block_export_bytes() {
+            return false;
+        }
+        let wpb = self.block_size * self.kv_heads * self.words_per_head;
+        let w0 = block as usize * wpb;
+        let g0 = block as usize * self.kv_heads;
+        let kvh = self.kv_heads;
+        let mut cursor = 0usize;
+        let mut word = |c: &mut usize| {
+            let b: [u8; 4] = bytes[*c..*c + 4].try_into().unwrap();
+            *c += 4;
+            b
+        };
+        for layer in 0..self.num_layers {
+            for plane in [&mut self.keys[layer], &mut self.values[layer]] {
+                for w in &mut plane.words[w0..w0 + wpb] {
+                    *w = i32::from_le_bytes(word(&mut cursor));
+                }
+                for s in &mut plane.scales[g0..g0 + kvh] {
+                    *s = f32::from_le_bytes(word(&mut cursor));
+                }
+                for z in &mut plane.zeros[g0..g0 + kvh] {
+                    *z = i32::from_le_bytes(word(&mut cursor));
+                }
+                for x in &mut plane.lo[g0..g0 + kvh] {
+                    *x = f32::from_le_bytes(word(&mut cursor));
+                }
+                for x in &mut plane.hi[g0..g0 + kvh] {
+                    *x = f32::from_le_bytes(word(&mut cursor));
+                }
+                for f in &mut plane.filled[g0..g0 + kvh] {
+                    *f = u32::from_le_bytes(word(&mut cursor));
+                }
+            }
+        }
+        true
+    }
+
     /// Copy a block's contents — packed words, grids and ranges, all
     /// layers, both sides (used after a COW split).
     pub fn copy_block(&mut self, src: BlockId, dst: BlockId) {
@@ -732,6 +821,52 @@ mod tests {
         // An untouched block's pristine grid bounds its all-zero decode.
         let (lo, hi) = cache.key_tile_bounds(0, 1, 0);
         assert!(lo <= 0.0 && 0.0 <= hi, "pristine grid must cover zero: [{lo}, {hi}]");
+    }
+
+    #[test]
+    fn export_import_roundtrips_levels_grids_and_frontier_bit_exactly() {
+        let (kvh, d, bs) = (2usize, 4usize, 4usize);
+        let mut cache = QuantizedPagedKvCache::new(2, 3, bs, kvh, d);
+        let mut rng = Rng::new(9);
+        for layer in 0..2 {
+            for slot in 0..3 {
+                // Partial fill (3 of 4 slots) so the frontier matters.
+                let mut k = rng.normal_vec(kvh * d, 1.0);
+                if slot == 1 {
+                    k[0] = 6.0; // mid-block refit → nontrivial grids
+                }
+                cache.write_token(layer, 1, slot, &k, &rng.normal_vec(kvh * d, 1.0));
+            }
+        }
+        let bytes = cache.export_block(1);
+        assert_eq!(bytes.len(), cache.block_export_bytes());
+        let mut other = QuantizedPagedKvCache::new(2, 3, bs, kvh, d);
+        assert!(other.import_block(2, &bytes));
+        for layer in 0..2 {
+            // Raw packed state matches word-for-word (no requantization).
+            let (sk, sv) = cache.block_tiles(layer, 1);
+            let (ok, ov) = other.block_tiles(layer, 2);
+            assert_eq!(sk.words, ok.words);
+            assert_eq!(sk.scales, ok.scales);
+            assert_eq!(sk.zeros, ok.zeros);
+            assert_eq!(sv.words, ov.words);
+            assert_eq!(sv.scales, ov.scales);
+            assert_eq!(sv.zeros, ov.zeros);
+            for h in 0..kvh {
+                let sgi = cache.grid_idx(1, h);
+                let ogi = other.grid_idx(2, h);
+                assert_eq!(cache.keys[layer].filled[sgi], other.keys[layer].filled[ogi]);
+                assert_eq!(cache.keys[layer].lo[sgi], other.keys[layer].lo[ogi]);
+                assert_eq!(cache.keys[layer].hi[sgi], other.keys[layer].hi[ogi]);
+                assert_eq!(
+                    cache.key_tile_bounds(layer, 1, h),
+                    other.key_tile_bounds(layer, 2, h)
+                );
+            }
+        }
+        // And a continued fill behaves as if the block never left: the
+        // restored fill frontier keeps the tail zero-level-filled.
+        assert!(!other.import_block(0, &bytes[1..]), "length mismatch is a refusal");
     }
 
     #[test]

@@ -1,0 +1,941 @@
+//! Crash-safe disk spill tier for evicted prefix-KV blocks.
+//!
+//! When the prefix cache or the sliding-window policy evicts a block,
+//! its exact bytes ([`super::KvStore::export_block`]) can be **offered**
+//! here instead of being lost; a later prefix hit that misses the RAM
+//! pool consults the spill index and **restores** the bytes into a
+//! freshly allocated block ([`SpillTier::restore_into`]) — bit-identical
+//! to the block that was evicted, because the payload is the pool's own
+//! byte representation (packed q8 levels move as levels, f32 as f32; no
+//! requantization round trip). See ARCHITECTURE.md "Spill & recovery
+//! contract".
+//!
+//! ## On-disk format
+//!
+//! The store is a directory of append-only **segment files**
+//! (`seg-NNNNNNNN.ogptqs`), each starting with the 8-byte magic
+//! [`SEGMENT_MAGIC`] (`OGPTQS01` — format version 01) followed by
+//! self-describing records, all fields little-endian:
+//!
+//! ```text
+//! [len: u32] [hash: u64] [dtype: u8] [shape_fp: u64] [payload: len bytes] [crc32: u32]
+//! ```
+//!
+//! `hash` is the prefix-chain hash that keys the record (the same chain
+//! the RAM prefix cache uses), `dtype`/`shape_fp` pin the pool geometry
+//! the payload came from, and the CRC32 (IEEE) covers everything before
+//! it — a record either verifies end to end or does not exist.
+//!
+//! ## Crash safety: the commit frontier
+//!
+//! Each segment has an in-memory **commit frontier**: the byte offset up
+//! to which every record has been fully written and flushed. The
+//! frontier advances only *after* a successful append + flush, so a kill
+//! mid-write leaves a torn tail strictly beyond it. The open-time
+//! recovery scan re-derives the frontier from the bytes themselves —
+//! records are walked until the first incomplete or CRC-failing one, and
+//! the tail from that point is **truncated**, never served and never
+//! grounds for refusing to start. Live IO failures (e.g. ENOSPC) repair
+//! the file back to the frontier with `set_len` and count toward a
+//! self-disabling circuit ([`SpillConfig::max_consecutive_io_failures`]):
+//! a persistently failing disk turns the tier off, and serving continues
+//! with recompute-on-miss — a spill failure is a cache miss, never a
+//! wrong token, a panic, or a stuck engine.
+//!
+//! ## Degradation ladder
+//!
+//! 1. open fails → tier disabled at construction, serving undegraded;
+//! 2. append fails → record dropped (the block is simply recomputed on
+//!    its next miss), failure counted, circuit may open;
+//! 3. restore read fails → miss, failure counted;
+//! 4. restore CRC fails → record **quarantined** (never consulted
+//!    again), counted in `corrupt_records`, miss;
+//! 5. capacity cap reached → oldest closed segment reclaimed (deleted
+//!    with its index entries) — the tier is a bounded cache, not a log.
+//!
+//! Deterministic IO fault injection (`runtime::fault::IoFaultPlan`)
+//! drives every path above in tests; the hooks are compiled out of
+//! plain release builds.
+
+use super::block_allocator::BlockId;
+use super::store::{KvCacheDtype, KvStore};
+use std::collections::{HashMap, HashSet};
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+#[cfg(any(test, feature = "fault-inject"))]
+use crate::runtime::fault::{IoFaultInjector, IoWriteFault};
+
+/// Segment-file magic: format name + version (`01`). Bump the version
+/// when the record layout changes; old segments then fail the magic
+/// check and are discarded rather than misparsed.
+pub const SEGMENT_MAGIC: &[u8; 8] = b"OGPTQS01";
+
+/// Fixed record header: len (4) + hash (8) + dtype (1) + shape_fp (8).
+const RECORD_HEADER_BYTES: usize = 21;
+/// Record trailer: the CRC32.
+const RECORD_TRAILER_BYTES: usize = 4;
+
+/// CRC32 (IEEE 802.3, reflected) over a list of byte slices — the
+/// per-record integrity check. Bitwise implementation: this runs on the
+/// spill path only (eviction/restore), never per token.
+pub fn crc32(parts: &[&[u8]]) -> u32 {
+    let mut crc = 0xFFFF_FFFFu32;
+    for part in parts {
+        for &b in *part {
+            crc ^= b as u32;
+            for _ in 0..8 {
+                let mask = (crc & 1).wrapping_neg();
+                crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+            }
+        }
+    }
+    !crc
+}
+
+/// Order-sensitive fingerprint of a pool geometry (layers, heads, dims,
+/// block size, …) — stored in every record so a store opened against a
+/// different model/config treats foreign records as misses instead of
+/// importing bytes into the wrong shape.
+pub fn shape_fingerprint(dims: &[usize]) -> u64 {
+    let mut h: u64 = u64::from_le_bytes(*SEGMENT_MAGIC);
+    for &d in dims {
+        h ^= d as u64;
+        h = h.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        h = (h ^ (h >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        h = (h ^ (h >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        h ^= h >> 31;
+    }
+    h
+}
+
+/// Record dtype tag for a [`KvCacheDtype`].
+pub fn dtype_tag(dtype: KvCacheDtype) -> u8 {
+    match dtype {
+        KvCacheDtype::F32 => 0,
+        KvCacheDtype::Q8 => 1,
+    }
+}
+
+/// Typed spill-tier failure. Every variant is a *degradation*, not an
+/// abort: callers fall back to recompute-on-miss.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SpillError {
+    /// The store directory / segment files could not be opened.
+    OpenFailed(String),
+    /// An underlying read/write/flush failed.
+    Io(String),
+    /// A write landed only a prefix of its bytes (kill mid-append).
+    ShortWrite { written: usize, expected: usize },
+    /// The filesystem is out of space.
+    NoSpace,
+    /// A record's CRC did not verify at read; it is now quarantined.
+    ChecksumMismatch { hash: u64 },
+    /// The record was quarantined by an earlier checksum failure.
+    Quarantined { hash: u64 },
+    /// The record's dtype/shape fingerprint does not match this pool.
+    ShapeMismatch { hash: u64 },
+    /// No record under this hash.
+    Missing { hash: u64 },
+    /// The self-disabling circuit is open (or the tier was never live).
+    Disabled,
+}
+
+impl std::fmt::Display for SpillError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SpillError::OpenFailed(e) => write!(f, "spill open failed: {e}"),
+            SpillError::Io(e) => write!(f, "spill io error: {e}"),
+            SpillError::ShortWrite { written, expected } => {
+                write!(f, "spill short write: {written} of {expected} bytes")
+            }
+            SpillError::NoSpace => write!(f, "spill device out of space"),
+            SpillError::ChecksumMismatch { hash } => {
+                write!(f, "spill record {hash:#018x} failed checksum (quarantined)")
+            }
+            SpillError::Quarantined { hash } => {
+                write!(f, "spill record {hash:#018x} is quarantined")
+            }
+            SpillError::ShapeMismatch { hash } => {
+                write!(f, "spill record {hash:#018x} has a foreign dtype/shape")
+            }
+            SpillError::Missing { hash } => write!(f, "spill record {hash:#018x} not found"),
+            SpillError::Disabled => write!(f, "spill tier is disabled"),
+        }
+    }
+}
+
+impl std::error::Error for SpillError {}
+
+/// Spill-tier configuration (`EngineConfig::spill`; **off by default** —
+/// the engine only builds a tier when this is `Some`, so the dense
+/// default baseline never touches the filesystem).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SpillConfig {
+    /// Directory holding the segment files (created if absent).
+    pub dir: PathBuf,
+    /// Total on-disk budget; crossing it reclaims the oldest closed
+    /// segment (the tier is a bounded cache, not an unbounded log).
+    pub cap_bytes: u64,
+    /// Segment rotation size: an active segment at or beyond this many
+    /// bytes is closed and a fresh one started (reclamation granularity).
+    pub segment_bytes: u64,
+    /// Consecutive live IO failures before the tier disables itself.
+    pub max_consecutive_io_failures: u32,
+}
+
+impl SpillConfig {
+    pub fn new(dir: impl Into<PathBuf>) -> SpillConfig {
+        SpillConfig {
+            dir: dir.into(),
+            cap_bytes: 256 << 20,
+            segment_bytes: 8 << 20,
+            max_consecutive_io_failures: 3,
+        }
+    }
+
+    /// Builder: override the capacity cap.
+    pub fn with_cap_bytes(mut self, cap: u64) -> SpillConfig {
+        self.cap_bytes = cap;
+        self
+    }
+
+    /// Builder: override the segment rotation size.
+    pub fn with_segment_bytes(mut self, seg: u64) -> SpillConfig {
+        self.segment_bytes = seg;
+        self
+    }
+}
+
+/// Observability counters (all monotonic since open, except `records`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SpillStats {
+    /// Records currently indexed (restorable).
+    pub records: usize,
+    /// Record bytes appended since open (headers + payloads + CRCs).
+    pub bytes_written: u64,
+    /// Blocks restored into a pool (`restore_into` successes).
+    pub restored_blocks: usize,
+    /// Records quarantined by a checksum failure at read.
+    pub corrupt_records: usize,
+    /// Live IO failures observed (reads + writes).
+    pub io_failures: usize,
+    /// Closed segments reclaimed by the capacity cap.
+    pub reclaimed_segments: usize,
+    /// Records re-indexed by the open-time recovery scan.
+    pub recovered_records: usize,
+    /// Torn-tail bytes truncated by the open-time recovery scan.
+    pub truncated_tail_bytes: u64,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct RecordLoc {
+    seg: u64,
+    off: u64,
+    payload_len: u32,
+}
+
+#[derive(Debug)]
+struct Segment {
+    idx: u64,
+    path: PathBuf,
+    /// Commit frontier: bytes known fully written, flushed and
+    /// CRC-valid. Advanced only after a successful append + flush.
+    committed: u64,
+}
+
+/// The crash-safe on-disk store. See the module docs for the format and
+/// the crash-safety argument.
+#[derive(Debug)]
+pub struct SpillTier {
+    cfg: SpillConfig,
+    dtype: u8,
+    shape_fp: u64,
+    /// Sorted by `idx`; the last entry is the active (append) segment.
+    segments: Vec<Segment>,
+    /// Write handle on the active segment.
+    active: File,
+    index: HashMap<u64, RecordLoc>,
+    /// Hashes whose records failed CRC at read — never consulted again.
+    quarantined: HashSet<u64>,
+    stats: SpillStats,
+    consecutive_io_failures: u32,
+    disabled: bool,
+    #[cfg(any(test, feature = "fault-inject"))]
+    io_faults: Option<IoFaultInjector>,
+}
+
+impl SpillTier {
+    /// Open (or create) the store at `cfg.dir` for a pool of the given
+    /// dtype/shape, running the recovery scan over every existing
+    /// segment: CRC-valid records are re-indexed, the first torn or
+    /// corrupt record and everything after it is truncated away, and
+    /// records from a different dtype/shape are ignored. Only
+    /// environmental failures (unreadable directory, unopenable files)
+    /// error — torn state never does.
+    pub fn open(cfg: SpillConfig, dtype: u8, shape_fp: u64) -> Result<SpillTier, SpillError> {
+        std::fs::create_dir_all(&cfg.dir)
+            .map_err(|e| SpillError::OpenFailed(format!("create {:?}: {e}", cfg.dir)))?;
+        let mut found: Vec<(u64, PathBuf)> = Vec::new();
+        let entries = std::fs::read_dir(&cfg.dir)
+            .map_err(|e| SpillError::OpenFailed(format!("read {:?}: {e}", cfg.dir)))?;
+        for entry in entries.flatten() {
+            let path = entry.path();
+            if let Some(idx) = segment_index(&path) {
+                found.push((idx, path));
+            }
+        }
+        found.sort_by_key(|(idx, _)| *idx);
+
+        let mut segments = Vec::new();
+        let mut index = HashMap::new();
+        let mut stats = SpillStats::default();
+        for (idx, path) in found {
+            match recover_segment(&path, dtype, shape_fp, idx, &mut index, &mut stats) {
+                Some(committed) => segments.push(Segment { idx, path, committed }),
+                // Unreadable / headerless / foreign file under our
+                // naming scheme: discard rather than misparse.
+                None => {
+                    let _ = std::fs::remove_file(&path);
+                }
+            }
+        }
+        if segments.is_empty() {
+            let path = cfg.dir.join(segment_name(0));
+            let mut f = OpenOptions::new()
+                .read(true)
+                .write(true)
+                .create(true)
+                .truncate(true)
+                .open(&path)
+                .map_err(|e| SpillError::OpenFailed(format!("create {path:?}: {e}")))?;
+            f.write_all(SEGMENT_MAGIC)
+                .and_then(|_| f.flush())
+                .map_err(|e| SpillError::OpenFailed(format!("init {path:?}: {e}")))?;
+            segments.push(Segment { idx: 0, path, committed: SEGMENT_MAGIC.len() as u64 });
+        }
+        let active_path = &segments.last().expect("at least one segment").path;
+        let active = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .open(active_path)
+            .map_err(|e| SpillError::OpenFailed(format!("open {active_path:?}: {e}")))?;
+        stats.records = index.len();
+        Ok(SpillTier {
+            cfg,
+            dtype,
+            shape_fp,
+            segments,
+            active,
+            index,
+            quarantined: HashSet::new(),
+            stats,
+            consecutive_io_failures: 0,
+            disabled: false,
+            #[cfg(any(test, feature = "fault-inject"))]
+            io_faults: None,
+        })
+    }
+
+    /// [`SpillTier::open`] under an IO fault injector (test/chaos
+    /// builds): a `fail_open` plan fails here, before any disk state is
+    /// touched; otherwise the injector is armed on the opened tier.
+    #[cfg(any(test, feature = "fault-inject"))]
+    pub fn open_faulted(
+        cfg: SpillConfig,
+        dtype: u8,
+        shape_fp: u64,
+        faults: IoFaultInjector,
+    ) -> Result<SpillTier, SpillError> {
+        if faults.fail_open() {
+            return Err(SpillError::OpenFailed("injected open failure".to_string()));
+        }
+        let mut tier = SpillTier::open(cfg, dtype, shape_fp)?;
+        tier.io_faults = Some(faults);
+        Ok(tier)
+    }
+
+    /// Arm an IO fault injector on a live tier (test/chaos builds).
+    #[cfg(any(test, feature = "fault-inject"))]
+    pub fn arm_io_faults(&mut self, faults: IoFaultInjector) {
+        self.io_faults = Some(faults);
+    }
+
+    /// Is the tier live (circuit closed)?
+    pub fn enabled(&self) -> bool {
+        !self.disabled
+    }
+
+    /// Observability counters.
+    pub fn stats(&self) -> SpillStats {
+        let mut s = self.stats;
+        s.records = self.index.len();
+        s
+    }
+
+    /// Restorable record count.
+    pub fn records(&self) -> usize {
+        self.index.len()
+    }
+
+    /// Committed bytes across all segments (magic headers included).
+    pub fn total_bytes(&self) -> u64 {
+        self.segments.iter().map(|s| s.committed).sum()
+    }
+
+    /// Is `hash` restorable right now? (Indexed, not quarantined, tier
+    /// live.) The admission path gates restore attempts on this.
+    pub fn contains(&self, hash: u64) -> bool {
+        !self.disabled && self.index.contains_key(&hash)
+    }
+
+    /// Offer an evicted block's exact bytes under `hash`. Returns
+    /// `Ok(true)` when a record was durably appended (commit frontier
+    /// advanced), `Ok(false)` when skipped (duplicate, quarantined hash,
+    /// or tier disabled), `Err` on an IO failure — after which the store
+    /// is back at its commit frontier (live errors repair by
+    /// truncation; a short write models a crash and disables the tier,
+    /// leaving the torn tail for the next open's recovery scan).
+    pub fn offer(&mut self, hash: u64, payload: &[u8]) -> Result<bool, SpillError> {
+        if self.disabled {
+            return Ok(false);
+        }
+        if self.index.contains_key(&hash) || self.quarantined.contains(&hash) {
+            return Ok(false);
+        }
+        match self.append_record(hash, payload) {
+            Ok(()) => {
+                self.consecutive_io_failures = 0;
+                Ok(true)
+            }
+            Err(e) => {
+                self.note_io_failure(&e);
+                Err(e)
+            }
+        }
+    }
+
+    /// Read back the payload stored under `hash`, CRC re-verified at
+    /// read time. A checksum failure quarantines the record (it will
+    /// never be consulted again) and reports `ChecksumMismatch`; the
+    /// caller falls back to recompute.
+    pub fn restore(&mut self, hash: u64) -> Result<Vec<u8>, SpillError> {
+        if self.disabled {
+            return Err(SpillError::Disabled);
+        }
+        if self.quarantined.contains(&hash) {
+            return Err(SpillError::Quarantined { hash });
+        }
+        let Some(loc) = self.index.get(&hash).copied() else {
+            return Err(SpillError::Missing { hash });
+        };
+        let Some(seg) = self.segments.iter().find(|s| s.idx == loc.seg) else {
+            return Err(SpillError::Missing { hash });
+        };
+        let total = RECORD_HEADER_BYTES + loc.payload_len as usize + RECORD_TRAILER_BYTES;
+        let mut buf = vec![0u8; total];
+        let read = File::open(&seg.path).and_then(|mut f| {
+            f.seek(SeekFrom::Start(loc.off))?;
+            f.read_exact(&mut buf)
+        });
+        if let Err(e) = read {
+            let err = SpillError::Io(e.to_string());
+            self.note_io_failure(&err);
+            return Err(err);
+        }
+        #[cfg(any(test, feature = "fault-inject"))]
+        if let Some(inj) = &self.io_faults {
+            inj.corrupt_read(&mut buf);
+        }
+        let crc_off = RECORD_HEADER_BYTES + loc.payload_len as usize;
+        let stored = u32::from_le_bytes(buf[crc_off..crc_off + 4].try_into().unwrap());
+        if crc32(&[&buf[..crc_off]]) != stored {
+            self.index.remove(&hash);
+            self.quarantined.insert(hash);
+            self.stats.corrupt_records += 1;
+            return Err(SpillError::ChecksumMismatch { hash });
+        }
+        let rhash = u64::from_le_bytes(buf[4..12].try_into().unwrap());
+        let rdtype = buf[12];
+        let rfp = u64::from_le_bytes(buf[13..21].try_into().unwrap());
+        if rhash != hash || rdtype != self.dtype || rfp != self.shape_fp {
+            return Err(SpillError::ShapeMismatch { hash });
+        }
+        self.consecutive_io_failures = 0;
+        Ok(buf[RECORD_HEADER_BYTES..crc_off].to_vec())
+    }
+
+    /// Restore the record under `hash` straight into `block` of `cache`
+    /// — the admission-path entry point. The payload is the pool's own
+    /// exact bytes, so a successful restore leaves the block
+    /// bit-identical to the one that was evicted.
+    pub fn restore_into(
+        &mut self,
+        hash: u64,
+        cache: &mut dyn KvStore,
+        block: BlockId,
+    ) -> Result<(), SpillError> {
+        let bytes = self.restore(hash)?;
+        if !cache.import_block(block, &bytes) {
+            return Err(SpillError::ShapeMismatch { hash });
+        }
+        self.stats.restored_blocks += 1;
+        Ok(())
+    }
+
+    /// Flush the active segment and sync it to the device — the
+    /// shutdown-path barrier (graceful drain calls this before exit so
+    /// the commit frontier is durable).
+    pub fn flush(&mut self) -> Result<(), SpillError> {
+        if self.disabled {
+            return Ok(());
+        }
+        self.active
+            .flush()
+            .and_then(|_| self.active.sync_all())
+            .map_err(|e| SpillError::Io(e.to_string()))
+    }
+
+    // ---- internals -----------------------------------------------------
+
+    fn append_record(&mut self, hash: u64, payload: &[u8]) -> Result<(), SpillError> {
+        self.rotate_if_needed()?;
+        let rec_len = (RECORD_HEADER_BYTES + payload.len() + RECORD_TRAILER_BYTES) as u64;
+        self.reclaim_if_needed(rec_len);
+
+        let mut rec = Vec::with_capacity(rec_len as usize);
+        rec.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        rec.extend_from_slice(&hash.to_le_bytes());
+        rec.push(self.dtype);
+        rec.extend_from_slice(&self.shape_fp.to_le_bytes());
+        rec.extend_from_slice(payload);
+        let crc = crc32(&[&rec]);
+        rec.extend_from_slice(&crc.to_le_bytes());
+
+        let (seg_idx, off) = {
+            let seg = self.segments.last().expect("active segment");
+            (seg.idx, seg.committed)
+        };
+        self.active
+            .seek(SeekFrom::Start(off))
+            .map_err(|e| SpillError::Io(e.to_string()))?;
+        self.write_buf(&rec)?;
+        self.active.flush().map_err(|e| SpillError::Io(e.to_string()))?;
+        // Success: advance the commit frontier and index the record.
+        let seg = self.segments.last_mut().expect("active segment");
+        seg.committed += rec.len() as u64;
+        self.stats.bytes_written += rec.len() as u64;
+        self.index
+            .insert(hash, RecordLoc { seg: seg_idx, off, payload_len: payload.len() as u32 });
+        Ok(())
+    }
+
+    /// Write `buf` through the (possibly fault-injected) device. On an
+    /// injected short write / ENOSPC the allowed prefix really lands in
+    /// the file — exactly the bytes a kill or a full disk would leave —
+    /// and the matching typed error is returned.
+    fn write_buf(&mut self, buf: &[u8]) -> Result<(), SpillError> {
+        #[cfg(any(test, feature = "fault-inject"))]
+        if let Some(inj) = &self.io_faults {
+            match inj.write_outcome(buf.len()) {
+                IoWriteFault::Short(n) => {
+                    let _ = self.active.write_all(&buf[..n]).and_then(|_| self.active.flush());
+                    return Err(SpillError::ShortWrite { written: n, expected: buf.len() });
+                }
+                IoWriteFault::Enospc(n) => {
+                    let _ = self.active.write_all(&buf[..n]).and_then(|_| self.active.flush());
+                    return Err(SpillError::NoSpace);
+                }
+                IoWriteFault::None => {}
+            }
+        }
+        self.active.write_all(buf).map_err(|e| SpillError::Io(e.to_string()))
+    }
+
+    /// Close the active segment and start a fresh one once it reaches
+    /// the rotation size.
+    fn rotate_if_needed(&mut self) -> Result<(), SpillError> {
+        let last = self.segments.last().expect("active segment");
+        if last.committed < self.cfg.segment_bytes {
+            return Ok(());
+        }
+        let idx = last.idx + 1;
+        let path = self.cfg.dir.join(segment_name(idx));
+        let mut f = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(&path)
+            .map_err(|e| SpillError::Io(format!("rotate to {path:?}: {e}")))?;
+        f.write_all(SEGMENT_MAGIC)
+            .and_then(|_| f.flush())
+            .map_err(|e| SpillError::Io(format!("init {path:?}: {e}")))?;
+        self.active = f;
+        self.segments.push(Segment { idx, path, committed: SEGMENT_MAGIC.len() as u64 });
+        Ok(())
+    }
+
+    /// Reclaim oldest closed segments until `incoming` more bytes fit
+    /// under the capacity cap (the active segment is never reclaimed).
+    fn reclaim_if_needed(&mut self, incoming: u64) {
+        while self.segments.len() > 1 && self.total_bytes() + incoming > self.cfg.cap_bytes {
+            let old = self.segments.remove(0);
+            let _ = std::fs::remove_file(&old.path);
+            self.index.retain(|_, loc| loc.seg != old.idx);
+            self.stats.reclaimed_segments += 1;
+        }
+    }
+
+    /// Account a live IO failure and drive the degradation ladder: a
+    /// short write models a kill (tier off immediately, torn tail left
+    /// for recovery); other failures repair the file back to the commit
+    /// frontier and open the circuit after N consecutive ones.
+    fn note_io_failure(&mut self, e: &SpillError) {
+        self.stats.io_failures += 1;
+        match e {
+            SpillError::ShortWrite { .. } => {
+                self.disabled = true;
+            }
+            _ => {
+                let committed = self.segments.last().expect("active segment").committed;
+                let _ = self.active.set_len(committed);
+                self.consecutive_io_failures += 1;
+                if self.consecutive_io_failures >= self.cfg.max_consecutive_io_failures {
+                    self.disabled = true;
+                }
+            }
+        }
+    }
+}
+
+fn segment_name(idx: u64) -> String {
+    format!("seg-{idx:08}.ogptqs")
+}
+
+/// Parse a segment index out of a `seg-NNNNNNNN.ogptqs` file name.
+fn segment_index(path: &Path) -> Option<u64> {
+    let name = path.file_name()?.to_str()?;
+    let rest = name.strip_prefix("seg-")?.strip_suffix(".ogptqs")?;
+    rest.parse().ok()
+}
+
+/// Scan one segment: index every CRC-valid record matching
+/// `(dtype, shape_fp)`, stop at the first incomplete or corrupt record
+/// and truncate the tail there. Returns the recovered commit frontier,
+/// or `None` when the file is unreadable or headerless (caller
+/// discards it).
+fn recover_segment(
+    path: &Path,
+    dtype: u8,
+    shape_fp: u64,
+    idx: u64,
+    index: &mut HashMap<u64, RecordLoc>,
+    stats: &mut SpillStats,
+) -> Option<u64> {
+    let mut buf = Vec::new();
+    File::open(path).and_then(|mut f| f.read_to_end(&mut buf)).ok()?;
+    if buf.len() < SEGMENT_MAGIC.len() || &buf[..SEGMENT_MAGIC.len()] != SEGMENT_MAGIC {
+        return None;
+    }
+    let mut off = SEGMENT_MAGIC.len();
+    loop {
+        if off + RECORD_HEADER_BYTES + RECORD_TRAILER_BYTES > buf.len() {
+            break;
+        }
+        let plen = u32::from_le_bytes(buf[off..off + 4].try_into().unwrap()) as usize;
+        let total = RECORD_HEADER_BYTES + plen + RECORD_TRAILER_BYTES;
+        if off + total > buf.len() {
+            break; // torn mid-payload
+        }
+        let crc_off = off + RECORD_HEADER_BYTES + plen;
+        let stored = u32::from_le_bytes(buf[crc_off..crc_off + 4].try_into().unwrap());
+        if crc32(&[&buf[off..crc_off]]) != stored {
+            break; // torn or corrupt: truncate from here
+        }
+        let hash = u64::from_le_bytes(buf[off + 4..off + 12].try_into().unwrap());
+        let rdtype = buf[off + 12];
+        let rfp = u64::from_le_bytes(buf[off + 13..off + 21].try_into().unwrap());
+        if rdtype == dtype && rfp == shape_fp {
+            // Later duplicates win (a reclaimed-then-respilled hash).
+            index.insert(hash, RecordLoc { seg: idx, off: off as u64, payload_len: plen as u32 });
+            stats.recovered_records += 1;
+        }
+        off += total;
+    }
+    if off < buf.len() {
+        stats.truncated_tail_bytes += (buf.len() - off) as u64;
+        OpenOptions::new().write(true).open(path).and_then(|f| f.set_len(off as u64)).ok()?;
+    }
+    Some(off as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::{PagedKvCache, QuantizedPagedKvCache};
+    use crate::runtime::fault::IoFaultPlan;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("opt_gptq_spill_{name}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn cfg(name: &str) -> SpillConfig {
+        SpillConfig::new(tmp(name))
+    }
+
+    fn payload(seed: u8, len: usize) -> Vec<u8> {
+        (0..len).map(|i| seed.wrapping_add(i as u8).wrapping_mul(31)).collect()
+    }
+
+    #[test]
+    fn crc32_known_vector() {
+        // The standard IEEE check value.
+        assert_eq!(crc32(&[b"123456789"]), 0xCBF4_3926);
+        // Streaming over parts equals one pass.
+        assert_eq!(crc32(&[b"1234", b"56789"]), 0xCBF4_3926);
+    }
+
+    #[test]
+    fn offer_restore_roundtrip_and_dedup() {
+        let mut t = SpillTier::open(cfg("roundtrip"), 1, 77).unwrap();
+        let p = payload(3, 200);
+        assert!(t.offer(0xAB, &p).unwrap());
+        assert!(!t.offer(0xAB, &p).unwrap(), "duplicate hash is skipped");
+        assert!(t.contains(0xAB));
+        assert!(!t.contains(0xCD));
+        assert_eq!(t.restore(0xAB).unwrap(), p);
+        assert_eq!(t.restore(0xCD), Err(SpillError::Missing { hash: 0xCD }));
+        assert_eq!(t.records(), 1);
+        let _ = std::fs::remove_dir_all(&t.cfg.dir);
+    }
+
+    #[test]
+    fn reopen_recovers_committed_records() {
+        let dir = tmp("reopen");
+        let c = SpillConfig::new(&dir);
+        let ps: Vec<Vec<u8>> = (0..5).map(|i| payload(i as u8, 64 + i * 7)).collect();
+        {
+            let mut t = SpillTier::open(c.clone(), 0, 9).unwrap();
+            for (i, p) in ps.iter().enumerate() {
+                assert!(t.offer(i as u64, p).unwrap());
+            }
+            t.flush().unwrap();
+        }
+        let mut t = SpillTier::open(c, 0, 9).unwrap();
+        assert_eq!(t.stats().recovered_records, 5);
+        assert_eq!(t.stats().truncated_tail_bytes, 0);
+        for (i, p) in ps.iter().enumerate() {
+            assert_eq!(&t.restore(i as u64).unwrap(), p, "record {i}");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn kill_mid_write_reopens_with_torn_tail_truncated() {
+        let dir = tmp("torn");
+        let c = SpillConfig::new(&dir);
+        let good: Vec<Vec<u8>> = (0..3).map(|i| payload(10 + i as u8, 128)).collect();
+        let committed_before;
+        {
+            let mut t = SpillTier::open(c.clone(), 1, 5).unwrap();
+            for (i, p) in good.iter().enumerate() {
+                assert!(t.offer(i as u64, p).unwrap());
+            }
+            committed_before = t.total_bytes();
+            // Write call 0 after arming = the 4th offer: killed mid-record.
+            t.arm_io_faults(IoFaultPlan::new(42).short_write_at(0).injector());
+            let err = t.offer(99, &payload(9, 128)).unwrap_err();
+            assert!(matches!(err, SpillError::ShortWrite { .. }));
+            assert!(!t.enabled(), "a kill-model short write disables the tier");
+            assert!(!t.contains(99), "torn record is never indexed");
+            // The torn tail is really on disk (the crash left it there).
+            let len = std::fs::metadata(dir.join("seg-00000000.ogptqs")).unwrap().len();
+            assert!(len > committed_before, "torn bytes beyond the frontier");
+        }
+        // "Restart": recovery scan must truncate the torn tail and serve
+        // every surviving record, each CRC-verified.
+        let mut t = SpillTier::open(c, 1, 5).unwrap();
+        assert_eq!(t.stats().recovered_records, 3);
+        assert!(t.stats().truncated_tail_bytes > 0, "torn tail was truncated");
+        assert_eq!(t.total_bytes(), committed_before, "frontier re-derived exactly");
+        for (i, p) in good.iter().enumerate() {
+            assert_eq!(&t.restore(i as u64).unwrap(), p, "surviving record {i}");
+        }
+        assert!(!t.contains(99), "the torn record does not exist after recovery");
+        // The store keeps working after recovery.
+        assert!(t.offer(99, &payload(9, 128)).unwrap());
+        assert_eq!(t.restore(99).unwrap(), payload(9, 128));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_read_quarantines_record() {
+        let dir = tmp("corrupt");
+        let mut t = SpillTier::open(SpillConfig::new(&dir), 1, 5).unwrap();
+        let p = payload(7, 256);
+        assert!(t.offer(0x11, &p).unwrap());
+        assert!(t.offer(0x22, &p).unwrap());
+        t.arm_io_faults(IoFaultPlan::new(8).corrupt_read_bit(0).injector());
+        // Read 0: one flipped bit → checksum mismatch → quarantine.
+        assert_eq!(t.restore(0x11), Err(SpillError::ChecksumMismatch { hash: 0x11 }));
+        assert_eq!(t.stats().corrupt_records, 1);
+        assert!(!t.contains(0x11), "quarantined record leaves the index");
+        assert_eq!(t.restore(0x11), Err(SpillError::Quarantined { hash: 0x11 }));
+        // Other records are untouched, and the tier stays enabled:
+        // corruption is a data loss, not a device failure.
+        assert!(t.enabled());
+        assert_eq!(t.restore(0x22).unwrap(), p);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn enospc_repairs_to_frontier_and_circuit_opens() {
+        let dir = tmp("enospc");
+        let c = SpillConfig::new(&dir);
+        let mut t = SpillTier::open(c.clone(), 0, 1).unwrap();
+        let p = payload(1, 300);
+        assert!(t.offer(1, &p).unwrap());
+        let frontier = t.total_bytes();
+        // Budget already spent: every further write gets ENOSPC.
+        t.arm_io_faults(IoFaultPlan::new(0).enospc_after_bytes(0).injector());
+        for i in 0..c.max_consecutive_io_failures {
+            let enabled_before = t.enabled();
+            assert!(enabled_before, "circuit must still be closed before failure {i}");
+            assert_eq!(t.offer(100 + i as u64, &p), Err(SpillError::NoSpace));
+            // Live failure: the file is repaired back to the frontier.
+            let len = std::fs::metadata(dir.join("seg-00000000.ogptqs")).unwrap().len();
+            assert_eq!(len, frontier, "repair after failure {i}");
+        }
+        assert!(!t.enabled(), "circuit opens after max consecutive failures");
+        assert_eq!(t.stats().io_failures, 3);
+        // Disabled tier: offers are silently skipped, restores refuse.
+        assert_eq!(t.offer(200, &p), Ok(false));
+        assert_eq!(t.restore(1), Err(SpillError::Disabled));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn success_resets_the_failure_streak() {
+        let dir = tmp("streak");
+        let mut t = SpillTier::open(SpillConfig::new(&dir), 0, 1).unwrap();
+        let p = payload(2, 100);
+        // Two failures, then unlimited budget again.
+        t.arm_io_faults(IoFaultPlan::new(0).enospc_after_bytes(0).injector());
+        assert_eq!(t.offer(1, &p), Err(SpillError::NoSpace));
+        assert_eq!(t.offer(2, &p), Err(SpillError::NoSpace));
+        t.arm_io_faults(IoFaultPlan::new(0).injector());
+        assert!(t.offer(3, &p).unwrap(), "healthy write succeeds");
+        // The streak reset: two more failures do not trip the circuit.
+        t.arm_io_faults(IoFaultPlan::new(0).enospc_after_bytes(0).injector());
+        assert_eq!(t.offer(4, &p), Err(SpillError::NoSpace));
+        assert_eq!(t.offer(5, &p), Err(SpillError::NoSpace));
+        assert!(t.enabled(), "streak was reset by the success");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn fail_open_is_a_typed_error() {
+        let err = SpillTier::open_faulted(
+            cfg("failopen"),
+            0,
+            1,
+            IoFaultPlan::new(0).fail_open().injector(),
+        )
+        .unwrap_err();
+        assert!(matches!(err, SpillError::OpenFailed(_)));
+    }
+
+    #[test]
+    fn capacity_cap_reclaims_oldest_segment() {
+        let dir = tmp("reclaim");
+        // Tiny geometry: each record ≈ 21 + 64 + 4 = 89 bytes; rotate
+        // every 100 bytes, cap at 400 → old segments must be deleted.
+        let c = SpillConfig::new(&dir).with_segment_bytes(100).with_cap_bytes(400);
+        let mut t = SpillTier::open(c, 0, 1).unwrap();
+        for i in 0..8u64 {
+            assert!(t.offer(i, &payload(i as u8, 64)).unwrap());
+        }
+        assert!(t.stats().reclaimed_segments > 0, "cap must reclaim");
+        assert!(t.total_bytes() <= 400 + 89 + 8, "bounded near the cap");
+        // Newest records survive, oldest were reclaimed with their segment.
+        assert!(t.contains(7));
+        assert!(!t.contains(0), "oldest record reclaimed");
+        assert_eq!(t.restore(7).unwrap(), payload(7, 64));
+        // A reclaimed hash can be re-offered (it is a miss now).
+        assert!(t.offer(0, &payload(0, 64)).unwrap());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn foreign_shape_records_are_ignored_at_recovery() {
+        let dir = tmp("foreign");
+        let c = SpillConfig::new(&dir);
+        {
+            let mut t = SpillTier::open(c.clone(), 0, 111).unwrap();
+            assert!(t.offer(1, &payload(1, 50)).unwrap());
+        }
+        // Same dir, different shape fingerprint: the record is a miss,
+        // not an import into the wrong geometry.
+        let t = SpillTier::open(c.clone(), 0, 222).unwrap();
+        assert!(!t.contains(1));
+        assert_eq!(t.stats().recovered_records, 0);
+        // And the original shape still sees it.
+        let mut t = SpillTier::open(c, 0, 111).unwrap();
+        assert_eq!(t.restore(1).unwrap(), payload(1, 50));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn restore_into_is_bit_identical_for_both_pools() {
+        let dir = tmp("into");
+        // f32 pool.
+        let mut f32_pool = PagedKvCache::new(2, 4, 4, 2, 3);
+        for s in 0..4 {
+            f32_pool.write_token(0, 1, s, &[s as f32 * 0.3 - 1.0; 6], &[s as f32; 6]);
+        }
+        let fp = shape_fingerprint(&[2, 4, 4, 2, 3, 0]);
+        let mut t = SpillTier::open(SpillConfig::new(dir.join("f32")), 0, fp).unwrap();
+        assert!(t.offer(7, &f32_pool.export_block(1)).unwrap());
+        let mut restored = PagedKvCache::new(2, 4, 4, 2, 3);
+        t.restore_into(7, &mut restored, 2).unwrap();
+        for layer in 0..2 {
+            assert_eq!(f32_pool.key_block(layer, 1), restored.key_block(layer, 2));
+            assert_eq!(f32_pool.value_block(layer, 1), restored.value_block(layer, 2));
+        }
+        assert_eq!(t.stats().restored_blocks, 1);
+        // q8 pool: levels move as levels — raw words identical.
+        let mut q8_pool = QuantizedPagedKvCache::new(1, 4, 4, 2, 4);
+        for s in 0..4 {
+            q8_pool.write_token(0, 0, s, &[0.1 * s as f32; 8], &[-0.2 * s as f32; 8]);
+        }
+        let qfp = shape_fingerprint(&[1, 4, 4, 2, 4, 1]);
+        let mut tq = SpillTier::open(SpillConfig::new(dir.join("q8")), 1, qfp).unwrap();
+        assert!(tq.offer(8, &q8_pool.export_block(0)).unwrap());
+        let mut qrestored = QuantizedPagedKvCache::new(1, 4, 4, 2, 4);
+        tq.restore_into(8, &mut qrestored, 3).unwrap();
+        let (sk, sv) = q8_pool.block_tiles(0, 0);
+        let (rk, rv) = qrestored.block_tiles(0, 3);
+        assert_eq!(sk.words, rk.words);
+        assert_eq!(sk.scales, rk.scales);
+        assert_eq!(sv.words, rv.words);
+        assert_eq!(sv.zeros, rv.zeros);
+        // A wrong-geometry pool refuses the import as a shape mismatch.
+        let mut wrong = PagedKvCache::new(1, 4, 4, 2, 3);
+        assert_eq!(
+            t.restore_into(7, &mut wrong, 0),
+            Err(SpillError::ShapeMismatch { hash: 7 })
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn shape_fingerprint_is_order_sensitive() {
+        assert_ne!(shape_fingerprint(&[1, 2]), shape_fingerprint(&[2, 1]));
+        assert_eq!(shape_fingerprint(&[1, 2]), shape_fingerprint(&[1, 2]));
+        assert_ne!(shape_fingerprint(&[]), shape_fingerprint(&[0]));
+    }
+}

@@ -89,6 +89,26 @@ pub trait KvStore: Send + Sync + std::fmt::Debug {
     /// Copy a block's contents across all layers (COW split support).
     fn copy_block(&mut self, src: BlockId, dst: BlockId);
 
+    /// Byte length of one [`KvStore::export_block`] payload (constant
+    /// for a given pool geometry — the spill tier's shape fingerprint
+    /// feeds on it).
+    fn block_export_bytes(&self) -> usize;
+
+    /// Serialize one block's complete state (payload + per-block
+    /// metadata, all layers) as exact bytes, such that
+    /// [`KvStore::import_block`] reproduces the block bit-for-bit in
+    /// this or any identically-shaped store. This is the spill tier's
+    /// record payload: because the bytes are exact (packed q8 levels
+    /// move as levels, f32 moves as f32 — no requantization round
+    /// trip), a block restored from disk is indistinguishable from one
+    /// that never left the pool, and every parity contract survives
+    /// eviction + restore.
+    fn export_block(&self, block: BlockId) -> Vec<u8>;
+
+    /// Overwrite `block` from an [`KvStore::export_block`] payload.
+    /// Returns `false` (block untouched) on a length mismatch.
+    fn import_block(&mut self, block: BlockId, bytes: &[u8]) -> bool;
+
     /// One block's K and V in the store's native representation.
     fn block_view(&self, layer: usize, block: BlockId) -> KvBlockView<'_>;
 
@@ -165,6 +185,15 @@ impl KvStore for PagedKvCache {
     fn copy_block(&mut self, src: BlockId, dst: BlockId) {
         PagedKvCache::copy_block(self, src, dst)
     }
+    fn block_export_bytes(&self) -> usize {
+        PagedKvCache::block_export_bytes(self)
+    }
+    fn export_block(&self, block: BlockId) -> Vec<u8> {
+        PagedKvCache::export_block(self, block)
+    }
+    fn import_block(&mut self, block: BlockId, bytes: &[u8]) -> bool {
+        PagedKvCache::import_block(self, block, bytes)
+    }
     fn block_view(&self, layer: usize, block: BlockId) -> KvBlockView<'_> {
         KvBlockView::F32 { k: self.key_block(layer, block), v: self.value_block(layer, block) }
     }
@@ -212,6 +241,15 @@ impl KvStore for QuantizedPagedKvCache {
     }
     fn copy_block(&mut self, src: BlockId, dst: BlockId) {
         QuantizedPagedKvCache::copy_block(self, src, dst)
+    }
+    fn block_export_bytes(&self) -> usize {
+        QuantizedPagedKvCache::block_export_bytes(self)
+    }
+    fn export_block(&self, block: BlockId) -> Vec<u8> {
+        QuantizedPagedKvCache::export_block(self, block)
+    }
+    fn import_block(&mut self, block: BlockId, bytes: &[u8]) -> bool {
+        QuantizedPagedKvCache::import_block(self, block, bytes)
     }
     fn block_view(&self, layer: usize, block: BlockId) -> KvBlockView<'_> {
         let (k, v) = self.block_tiles(layer, block);

@@ -23,7 +23,7 @@
 //! | [`util`] | offline-environment substrates: JSON, CLI, RNG, bench + property-test harnesses |
 //! | [`tensor`] | minimal row-major f32 ndarray with the ops the native backend needs; [`tensor::simd`] runtime-dispatched kernel table (AVX2/scalar, bit-identical) |
 //! | [`tokenizer`] | byte-level tokenizer (vocab 256 + specials) |
-//! | [`kvcache`] | paged block allocator, block tables, [`kvcache::KvStore`] pools (f32 + packed 8-bit), contiguous baseline, stats |
+//! | [`kvcache`] | paged block allocator, block tables, [`kvcache::KvStore`] pools (f32 + packed 8-bit), crash-safe disk spill tier ([`kvcache::SpillTier`]), contiguous baseline, stats |
 //! | [`quant`] | GPTQ (Hessian/Cholesky, error propagation), RTN baseline, int4/int8 packing, fused dequant-matmul ([`quant::matmul`]) |
 //! | [`attention`] | block-tiled group-major kernel core ([`attention::kernel`]) + MHA / GQA / ALiBi / sparsity (windows, sinks, tile skip) / paged drivers |
 //! | [`model`] | Llama-architecture config, [`model::WeightStore`] (dense f32 / packed GPTQ), native forward, sampler |
@@ -94,6 +94,15 @@
 //! `tests/attention_parity.rs` bounds the quantized path's output error
 //! (decode and streamed prefill) and `tests/alloc_steadystate.rs`
 //! audits the allocation contract with a counting allocator.
+//!
+//! Below the RAM pool sits an **opt-in disk spill tier**
+//! ([`kvcache::SpillTier`], `EngineConfig::spill` / `--spill-dir`):
+//! prefix-cache-evicted blocks are appended to crash-safe CRC-checked
+//! segment files and restored bit-identically at admission on a later
+//! prefix match; every IO failure degrades toward recompute (circuit
+//! breaker, quarantine), never toward a request error, and the
+//! `None` default performs zero file IO. Contract: ARCHITECTURE.md
+//! "Spill & recovery contract".
 //!
 //! ## Sparse attention — windows, sinks, score-bound skipping
 //!

@@ -29,12 +29,16 @@
 //! [`sparsity_config`]. `--q8-score-domain int` (native + `--kv-dtype
 //! q8` only) scores decode attention in the integer domain straight off
 //! the packed K tiles — bounded-error, default `f32` — see
-//! [`score_domain`].
+//! [`score_domain`]. Spill knobs (serve/generate, **opt-in**):
+//! `--spill-dir DIR` roots the crash-safe disk tier for evicted prefix
+//! KV (without it no tier is built and the serving path performs no
+//! file IO); `--spill-cap-bytes B` bounds its on-disk footprint
+//! (oldest segment reclaimed past the cap) — see [`spill_config`].
 
 use opt_gptq::attention::{ScoreDomain, SparsityConfig};
 use opt_gptq::coordinator::{
     AdmissionConfig, AimdConfig, BucketPolicy, EngineConfig, KvCacheDtype, Router, RouterConfig,
-    SchedulerConfig, WeightDtype,
+    SchedulerConfig, SpillConfig, WeightDtype,
 };
 use opt_gptq::model::{
     weights::{quantize_weights, quantize_weights_packed, QuantMethod},
@@ -272,7 +276,23 @@ fn engine_config(args: &Args, cfg: &ModelConfig) -> EngineConfig {
         prefix_cache_blocks: 0,
         kv_dtype,
         weight_dtype: weight_dtype(args),
+        spill: spill_config(args),
     }
+}
+
+/// Parse the spill-tier flags (`--spill-dir`, `--spill-cap-bytes`).
+/// **Off unless `--spill-dir` is given** — the default serving path
+/// must never touch the filesystem (ARCHITECTURE.md "Spill & recovery
+/// contract"). A tier that fails to open degrades to serving without
+/// it; it is never a startup error.
+fn spill_config(args: &Args) -> Option<SpillConfig> {
+    let dir = args.get_str("spill-dir", "");
+    if dir.is_empty() {
+        return None;
+    }
+    let mut sc = SpillConfig::new(dir);
+    sc.cap_bytes = args.get_u64("spill-cap-bytes", sc.cap_bytes);
+    Some(sc)
 }
 
 /// Overload-control knobs (see ARCHITECTURE.md "Overload & failure

@@ -135,6 +135,161 @@ impl FaultInjector {
     }
 }
 
+/// Declarative, seeded schedule of **IO** faults — consumed by the KV
+/// spill tier (`kvcache::spill`), the disk analogue of [`FaultPlan`]:
+///
+/// * **short write** — the nth write call stops short at a seeded torn
+///   point, modelling a kill mid-append (the torn tail stays on disk;
+///   recovery must truncate it at the next open);
+/// * **ENOSPC** — a running byte budget; the write that would cross it
+///   gets the partial write a full filesystem would allow, then the
+///   error (the live process repairs back to its commit frontier);
+/// * **corrupt read** — the nth read call has one seeded bit flipped
+///   after the bytes arrive, modelling media rot (CRC must catch it);
+/// * **fail open** — every open attempt fails (missing mount / perms).
+///
+/// Counters are per-injector atomics, so the fault sequence is a pure
+/// function of the plan and the call order — replay-identical.
+#[derive(Debug, Clone, Default)]
+pub struct IoFaultPlan {
+    seed: u64,
+    /// 0-based write-call index that stops short.
+    short_write_at: Option<u64>,
+    /// Total byte budget before ENOSPC.
+    enospc_after_bytes: Option<u64>,
+    /// 0-based read-call index that gets one bit flipped.
+    corrupt_read_bit: Option<u64>,
+    /// Every open attempt fails.
+    fail_open: bool,
+}
+
+impl IoFaultPlan {
+    pub fn new(seed: u64) -> Self {
+        IoFaultPlan { seed, ..Default::default() }
+    }
+
+    /// The `nth` write call (0-based) writes only a seeded prefix of
+    /// its bytes and reports a short write (kill mid-append).
+    pub fn short_write_at(mut self, nth: u64) -> Self {
+        self.short_write_at = Some(nth);
+        self
+    }
+
+    /// Writes succeed until `bytes` total bytes have been written; the
+    /// crossing write lands its allowed prefix and reports ENOSPC.
+    pub fn enospc_after_bytes(mut self, bytes: u64) -> Self {
+        self.enospc_after_bytes = Some(bytes);
+        self
+    }
+
+    /// The `nth` read call (0-based) has one seeded bit flipped in the
+    /// buffer after the read completes.
+    pub fn corrupt_read_bit(mut self, nth: u64) -> Self {
+        self.corrupt_read_bit = Some(nth);
+        self
+    }
+
+    /// Every open attempt fails.
+    pub fn fail_open(mut self) -> Self {
+        self.fail_open = true;
+        self
+    }
+
+    /// Finalize into a cloneable runtime handle with its own write/read
+    /// counters. Attach one injector to one store.
+    pub fn injector(self) -> IoFaultInjector {
+        IoFaultInjector {
+            inner: Arc::new(IoInjectorInner {
+                plan: self,
+                writes: AtomicU64::new(0),
+                reads: AtomicU64::new(0),
+                bytes_written: AtomicU64::new(0),
+            }),
+        }
+    }
+}
+
+/// The injected outcome of one write call.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IoWriteFault {
+    /// Write proceeds in full.
+    None,
+    /// Only this many leading bytes reach the file; the process is
+    /// (simulated-)killed before the rest (no error returned to a real
+    /// caller — the tier must treat it as a crash).
+    Short(usize),
+    /// This many leading bytes land, then the filesystem is full.
+    Enospc(usize),
+}
+
+#[derive(Debug)]
+struct IoInjectorInner {
+    plan: IoFaultPlan,
+    writes: AtomicU64,
+    reads: AtomicU64,
+    bytes_written: AtomicU64,
+}
+
+/// Shareable handle over an [`IoFaultPlan`]; write/read consults
+/// advance their own counters.
+#[derive(Debug, Clone)]
+pub struct IoFaultInjector {
+    inner: Arc<IoInjectorInner>,
+}
+
+impl IoFaultInjector {
+    /// Does the next open attempt fail?
+    pub fn fail_open(&self) -> bool {
+        self.inner.plan.fail_open
+    }
+
+    /// Decide the fault for a write of `len` bytes and advance the
+    /// write counter (the byte counter advances by what actually
+    /// lands, so an ENOSPC budget is a true running total).
+    pub fn write_outcome(&self, len: usize) -> IoWriteFault {
+        let w = self.inner.writes.fetch_add(1, Ordering::SeqCst);
+        let plan = &self.inner.plan;
+        if plan.short_write_at == Some(w) && len > 0 {
+            let torn = (splitmix64(plan.seed ^ w) as usize) % len;
+            self.inner.bytes_written.fetch_add(torn as u64, Ordering::SeqCst);
+            return IoWriteFault::Short(torn);
+        }
+        if let Some(cap) = plan.enospc_after_bytes {
+            let before = self.inner.bytes_written.load(Ordering::SeqCst);
+            if before + len as u64 > cap {
+                let allowed = cap.saturating_sub(before) as usize;
+                self.inner.bytes_written.fetch_add(allowed as u64, Ordering::SeqCst);
+                return IoWriteFault::Enospc(allowed);
+            }
+        }
+        self.inner.bytes_written.fetch_add(len as u64, Ordering::SeqCst);
+        IoWriteFault::None
+    }
+
+    /// Advance the read counter and, on the armed call, flip one seeded
+    /// bit in `buf`. Returns whether a flip happened.
+    pub fn corrupt_read(&self, buf: &mut [u8]) -> bool {
+        let r = self.inner.reads.fetch_add(1, Ordering::SeqCst);
+        if self.inner.plan.corrupt_read_bit == Some(r) && !buf.is_empty() {
+            let bit = (splitmix64(self.inner.plan.seed ^ r.wrapping_mul(0x9E37)) as usize)
+                % (buf.len() * 8);
+            buf[bit / 8] ^= 1 << (bit % 8);
+            return true;
+        }
+        false
+    }
+
+    /// Write calls consulted so far (test observability).
+    pub fn writes_taken(&self) -> u64 {
+        self.inner.writes.load(Ordering::SeqCst)
+    }
+
+    /// Read calls consulted so far (test observability).
+    pub fn reads_taken(&self) -> u64 {
+        self.inner.reads.load(Ordering::SeqCst)
+    }
+}
+
 fn splitmix64(mut x: u64) -> u64 {
     x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
     x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
@@ -266,5 +421,55 @@ mod tests {
     fn zero_prob_never_panics() {
         let inj = FaultPlan::new(9).injector();
         assert!((0..256).all(|_| !inj.next_step().panic));
+    }
+
+    #[test]
+    fn io_short_write_fires_once_at_nth_and_is_deterministic() {
+        let mk = || IoFaultPlan::new(5).short_write_at(2).injector();
+        let (a, b) = (mk(), mk());
+        let outs_a: Vec<IoWriteFault> = (0..5).map(|_| a.write_outcome(100)).collect();
+        let outs_b: Vec<IoWriteFault> = (0..5).map(|_| b.write_outcome(100)).collect();
+        assert_eq!(outs_a, outs_b);
+        assert_eq!(outs_a[0], IoWriteFault::None);
+        assert_eq!(outs_a[1], IoWriteFault::None);
+        match outs_a[2] {
+            IoWriteFault::Short(n) => assert!(n < 100, "torn point must be a strict prefix"),
+            other => panic!("expected Short at write 2, got {other:?}"),
+        }
+        assert_eq!(outs_a[3], IoWriteFault::None);
+        assert_eq!(a.writes_taken(), 5);
+    }
+
+    #[test]
+    fn io_enospc_budget_is_a_running_total() {
+        let inj = IoFaultPlan::new(0).enospc_after_bytes(250).injector();
+        assert_eq!(inj.write_outcome(100), IoWriteFault::None);
+        assert_eq!(inj.write_outcome(100), IoWriteFault::None);
+        // 200 written; the next 100 crosses the 250 budget at 50.
+        assert_eq!(inj.write_outcome(100), IoWriteFault::Enospc(50));
+        // Budget stays exhausted: nothing more fits.
+        assert_eq!(inj.write_outcome(10), IoWriteFault::Enospc(0));
+    }
+
+    #[test]
+    fn io_corrupt_read_flips_exactly_one_bit_on_the_nth_read() {
+        let inj = IoFaultPlan::new(11).corrupt_read_bit(1).injector();
+        let clean = vec![0xA5u8; 64];
+        let mut buf = clean.clone();
+        assert!(!inj.corrupt_read(&mut buf));
+        assert_eq!(buf, clean, "read 0 untouched");
+        assert!(inj.corrupt_read(&mut buf));
+        let flipped: u32 =
+            buf.iter().zip(&clean).map(|(a, b)| (a ^ b).count_ones()).sum();
+        assert_eq!(flipped, 1, "exactly one bit differs");
+        assert!(!inj.corrupt_read(&mut buf));
+        assert_eq!(inj.reads_taken(), 3);
+    }
+
+    #[test]
+    fn io_fail_open_is_sticky() {
+        let inj = IoFaultPlan::new(0).fail_open().injector();
+        assert!(inj.fail_open() && inj.fail_open());
+        assert!(!IoFaultPlan::new(0).injector().fail_open());
     }
 }

@@ -31,6 +31,8 @@ pub mod xla_backend;
 pub use artifacts::{ArtifactManifest, BucketSpec};
 pub use backend::{Backend, DecodeItem, MixedBatch, NativeBackend, PrefillChunkItem, StepOutputs};
 #[cfg(any(test, feature = "fault-inject"))]
-pub use fault::{FaultInjector, FaultPlan, FaultyBackend, StepFault};
+pub use fault::{
+    FaultInjector, FaultPlan, FaultyBackend, IoFaultInjector, IoFaultPlan, IoWriteFault, StepFault,
+};
 pub use pool::WorkerPool;
 pub use xla_backend::XlaBackend;

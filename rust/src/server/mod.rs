@@ -26,6 +26,13 @@
 //! timeouts ([`SOCKET_TIMEOUT_S`]) so a stalled client can neither hold
 //! a handler thread forever nor stall decoding (generation itself runs
 //! on the router's engine workers).
+//!
+//! **Graceful drain**: setting the flag from [`Server::shutdown_flag`]
+//! stops the accept loop, lets in-flight connections finish under
+//! [`DRAIN_DEADLINE_MS`], then returns from `serve`. Dropping the
+//! router afterwards delivers `Shutdown` to every engine worker, which
+//! flushes the spill tier's commit frontier before exiting — so an
+//! orderly shutdown never loses an acknowledged spill record.
 
 use crate::coordinator::{Router, SubmitError};
 use crate::model::SamplingParams;
@@ -34,8 +41,9 @@ use crate::util::json::{self, Value};
 use anyhow::{Context, Result};
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Request bodies above this are rejected with `413 Payload Too Large`
 /// (never silently truncated — a truncated prompt would generate from a
@@ -45,40 +53,100 @@ pub const MAX_BODY_BYTES: usize = 16 << 20;
 /// Per-connection socket read/write timeout, seconds.
 pub const SOCKET_TIMEOUT_S: u64 = 10;
 
+/// Default in-flight drain budget at shutdown, ms. Connections still
+/// open past this are detached (their socket timeouts bound them), so
+/// drain can never wedge shutdown behind a stalled client.
+pub const DRAIN_DEADLINE_MS: u64 = 5_000;
+
+/// How often the accept loop polls the shutdown flag while idle.
+const ACCEPT_POLL_MS: u64 = 5;
+
 /// HTTP server over a router.
 pub struct Server {
     router: Arc<Router>,
     listener: TcpListener,
+    shutdown: Arc<AtomicBool>,
+    drain_deadline: Duration,
 }
 
 impl Server {
     /// Bind to `addr` (e.g. "127.0.0.1:8765"; port 0 picks a free port).
     pub fn bind(router: Arc<Router>, addr: &str) -> Result<Server> {
         let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
-        Ok(Server { router, listener })
+        Ok(Server {
+            router,
+            listener,
+            shutdown: Arc::new(AtomicBool::new(false)),
+            drain_deadline: Duration::from_millis(DRAIN_DEADLINE_MS),
+        })
+    }
+
+    /// Override the drain budget (tests; operational tuning).
+    pub fn with_drain_deadline(mut self, deadline: Duration) -> Server {
+        self.drain_deadline = deadline;
+        self
     }
 
     pub fn local_addr(&self) -> std::net::SocketAddr {
         self.listener.local_addr().expect("listener has an address")
     }
 
-    /// Accept loop; one thread per connection. Blocks forever (callers
-    /// run it on a dedicated thread; tests connect then drop).
+    /// Cloneable shutdown flag: store `true` (any thread, a signal
+    /// handler, …) and `serve` stops accepting, drains in-flight
+    /// connections under the drain deadline, and returns.
+    pub fn shutdown_flag(&self) -> Arc<AtomicBool> {
+        self.shutdown.clone()
+    }
+
+    /// Accept loop; one thread per connection. Runs until the shutdown
+    /// flag is set (callers run it on a dedicated thread; tests connect
+    /// then drop), then drains and returns.
     pub fn serve(&self) -> Result<()> {
-        for stream in self.listener.incoming() {
-            let stream = match stream {
-                Ok(s) => s,
-                Err(e) => {
-                    log::warn!("accept error: {e}");
-                    continue;
+        // Nonblocking accept so the loop can observe the shutdown flag;
+        // handler sockets are switched back to blocking (+timeouts).
+        self.listener.set_nonblocking(true).context("listener set_nonblocking")?;
+        let mut handlers: Vec<std::thread::JoinHandle<()>> = Vec::new();
+        while !self.shutdown.load(Ordering::SeqCst) {
+            match self.listener.accept() {
+                Ok((stream, _peer)) => {
+                    // Accepted sockets may inherit the listener's
+                    // nonblocking mode on some platforms — undo it.
+                    if let Err(e) = stream.set_nonblocking(false) {
+                        log::warn!("set_nonblocking(false) failed: {e}");
+                        continue;
+                    }
+                    let router = self.router.clone();
+                    handlers.push(std::thread::spawn(move || {
+                        if let Err(e) = handle_connection(stream, &router) {
+                            log::debug!("connection error: {e}");
+                        }
+                    }));
                 }
-            };
-            let router = self.router.clone();
-            std::thread::spawn(move || {
-                if let Err(e) = handle_connection(stream, &router) {
-                    log::debug!("connection error: {e}");
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    handlers.retain(|h| !h.is_finished());
+                    std::thread::sleep(Duration::from_millis(ACCEPT_POLL_MS));
                 }
-            });
+                Err(e) => log::warn!("accept error: {e}"),
+            }
+        }
+        // Drain: nothing new is accepted; in-flight connections get the
+        // deadline to finish, stragglers are detached (bounded by their
+        // socket timeouts). The spill-tier flush rides the router's
+        // worker shutdown, after the caller drops it.
+        let deadline = Instant::now() + self.drain_deadline;
+        while handlers.iter().any(|h| !h.is_finished()) && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(ACCEPT_POLL_MS));
+        }
+        let (done, stragglers): (Vec<_>, Vec<_>) =
+            handlers.into_iter().partition(|h| h.is_finished());
+        for h in done {
+            let _ = h.join();
+        }
+        if !stragglers.is_empty() {
+            log::warn!(
+                "drain deadline hit with {} connection(s) in flight; detaching",
+                stragglers.len()
+            );
         }
         Ok(())
     }
@@ -313,6 +381,7 @@ mod tests {
             prefix_cache_blocks: 0,
             kv_dtype: crate::kvcache::KvCacheDtype::F32,
             weight_dtype: crate::model::WeightDtype::F32,
+            spill: None,
         }
     }
 
@@ -439,6 +508,37 @@ mod tests {
         let resp = post_generate(addr, r#"{"prompt":"hello","max_tokens":4,"timeout_ms":0}"#);
         assert!(resp.contains("503"), "{resp}");
         assert!(resp.contains("\"kind\":\"deadline_exceeded\""), "{resp}");
+    }
+
+    #[test]
+    fn graceful_shutdown_drains_in_flight_then_stops_accepting() {
+        let router = Arc::new(Router::new(
+            RouterConfig {
+                engine: engine_cfg(),
+                workers: 1,
+                admission: AdmissionConfig::default(),
+            },
+            |_| tiny_backend(),
+        ));
+        let server = Server::bind(router, "127.0.0.1:0").unwrap();
+        let addr = server.local_addr();
+        let flag = server.shutdown_flag();
+        let h = std::thread::spawn(move || server.serve().unwrap());
+        // A request in flight when the flag flips must still complete.
+        let client = std::thread::spawn(move || {
+            post_generate(addr, r#"{"prompt":"hello","max_tokens":16}"#)
+        });
+        std::thread::sleep(Duration::from_millis(100));
+        flag.store(true, Ordering::SeqCst);
+        let resp = client.join().unwrap();
+        assert!(resp.contains("200 OK"), "in-flight request must drain cleanly: {resp}");
+        h.join().unwrap();
+        // serve returned → the server (and its listener) are gone; new
+        // connections are refused rather than silently queued.
+        assert!(
+            TcpStream::connect(addr).is_err(),
+            "listener must be closed once drain completes"
+        );
     }
 
     #[test]

@@ -35,6 +35,7 @@ fn engine_with_byte_budget(cfg: &ModelConfig, kv_bytes: usize, max_batch: usize)
             prefix_cache_blocks: 0,
             kv_dtype: opt_gptq::coordinator::KvCacheDtype::F32,
             weight_dtype: opt_gptq::coordinator::WeightDtype::F32,
+            spill: None,
         },
     )
 }
@@ -125,6 +126,7 @@ fn long_prompt_mid_decode_keeps_ttft_and_decode_bounded() {
             prefix_cache_blocks: 0,
             kv_dtype: opt_gptq::coordinator::KvCacheDtype::F32,
             weight_dtype: opt_gptq::coordinator::WeightDtype::F32,
+            spill: None,
         },
     );
     let tok = ByteTokenizer::new();
@@ -187,6 +189,7 @@ fn http_server_serves_concurrent_clients() {
                 prefix_cache_blocks: 0,
                 kv_dtype: opt_gptq::coordinator::KvCacheDtype::F32,
                 weight_dtype: opt_gptq::coordinator::WeightDtype::F32,
+                spill: None,
             },
             workers: 1,
             admission: Default::default(),

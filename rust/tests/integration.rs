@@ -31,6 +31,7 @@ fn native_engine(seed: u64, num_blocks: usize, max_batch: usize) -> Engine {
             prefix_cache_blocks: 0,
             kv_dtype: opt_gptq::coordinator::KvCacheDtype::F32,
             weight_dtype: opt_gptq::coordinator::WeightDtype::F32,
+            spill: None,
         },
     )
 }
@@ -88,6 +89,7 @@ fn gptq_quantized_model_serves_requests() {
             prefix_cache_blocks: 0,
             kv_dtype: opt_gptq::coordinator::KvCacheDtype::F32,
             weight_dtype: opt_gptq::coordinator::WeightDtype::F32,
+            spill: None,
         },
     );
     for i in 0..4 {
@@ -176,6 +178,7 @@ fn long_prompt_chunked_prefill_equals_single_shot() {
                 prefix_cache_blocks: 0,
                 kv_dtype: opt_gptq::coordinator::KvCacheDtype::F32,
                 weight_dtype: opt_gptq::coordinator::WeightDtype::F32,
+                spill: None,
             },
         );
         let params = SamplingParams { max_tokens: 8, ..Default::default() };

@@ -140,6 +140,7 @@ fn prop_engine_completes_any_workload() {
                 prefix_cache_blocks: 0,
                 kv_dtype: opt_gptq::coordinator::KvCacheDtype::F32,
                 weight_dtype: opt_gptq::coordinator::WeightDtype::F32,
+                spill: None,
             },
         );
         let n_req = g.usize_in(1, 6);

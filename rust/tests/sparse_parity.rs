@@ -201,6 +201,7 @@ fn infinite_window_engine_matches_dense_under_mixed_and_exclusive() {
             prefix_cache_blocks: 0,
             kv_dtype: KvCacheDtype::F32,
             weight_dtype: WeightDtype::F32,
+            spill: None,
         };
         let mut e = Engine::new(Box::new(backend), econf);
         e.add_request(vec![256; 30], SamplingParams { max_tokens: 6, ..Default::default() })

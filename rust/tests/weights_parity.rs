@@ -158,6 +158,7 @@ fn packed_engine_tokens_match_reconstruction_engine() {
             prefix_cache_blocks: 0,
             kv_dtype: KvCacheDtype::F32,
             weight_dtype,
+            spill: None,
         };
         let mut e = Engine::new(Box::new(NativeBackend::new(model)), econf);
         e.add_request(vec![256; 30], SamplingParams { max_tokens: 6, ..Default::default() })

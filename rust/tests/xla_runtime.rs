@@ -171,6 +171,7 @@ fn engine_end_to_end_on_xla_backend() {
         prefix_cache_blocks: 0,
         kv_dtype: KvCacheDtype::F32,
         weight_dtype: WeightDtype::F32,
+        spill: None,
     };
     let mut engine = Engine::new(Box::new(xla), econf);
     let params = SamplingParams { max_tokens: 4, ..Default::default() };
@@ -202,6 +203,7 @@ fn engine_end_to_end_on_xla_backend() {
         prefix_cache_blocks: 0,
         kv_dtype: KvCacheDtype::F32,
         weight_dtype: WeightDtype::F32,
+        spill: None,
     };
     let mut engine_n = Engine::new(Box::new(native), econf2);
     for i in 0..3 {

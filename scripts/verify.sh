@@ -47,6 +47,31 @@ if ! grep -q '#\[cfg(any(test, feature = "fault-inject"))\]' src/runtime/mod.rs;
   exit 1
 fi
 
+# ---- file-IO confinement gates --------------------------------------------
+# File IO is confined to the modules whose JOB is storage: the spill tier
+# (kvcache/spill.rs), weight artifacts (model/weights.rs, model/store.rs)
+# and the XLA manifest loader (runtime/artifacts.rs). coordinator/{engine,
+# scheduler}.rs appear only for their #[cfg(test)] modules (temp dirs for
+# spill tests). A syscall creeping into attention/quant/tensor or the
+# paged pools would put blocking IO on the per-step hot path.
+if grep -rnE 'std::fs|File::|OpenOptions' src/ \
+    | grep -vE '^src/(kvcache/spill|model/weights|model/store|runtime/artifacts|coordinator/engine|coordinator/scheduler)\.rs:' \
+    | grep -vE '^[^:]+:[0-9]+:[[:space:]]*//'; then
+  echo "verify: FAIL — file IO outside the storage-module allowlist" >&2
+  exit 1
+fi
+# The spill tier is strictly opt-in: EngineConfig::native() must keep
+# spill: None (the dense default baseline performs zero file IO), and the
+# CLI only builds a tier when --spill-dir is explicitly given.
+if ! grep -q 'spill: None' src/coordinator/engine.rs; then
+  echo "verify: FAIL — EngineConfig::native() no longer defaults spill to None" >&2
+  exit 1
+fi
+if ! grep -q '"spill-dir", ""' src/main.rs; then
+  echo "verify: FAIL — --spill-dir is no longer opt-in (empty default)" >&2
+  exit 1
+fi
+
 # ---- SIMD dispatch gates --------------------------------------------------
 # Architecture-specific code is confined to the dispatch module: every
 # `std::arch` / feature-detection use lives in tensor/simd.rs, so the rest
@@ -134,6 +159,14 @@ cargo bench --bench gptq_matmul -- --smoke
 cargo run --release --example quantize_gptq -- --calib-tokens 96
 
 # ---- bench-artifact gate + trajectory delta -------------------------------
+# The serving smoke must exercise the spill tier and record its counters
+# (hit tokens, bytes, corrupt records) in the trajectory artifact.
+for key in spill_hit_tokens spill_bytes spill_corrupt_records; do
+  if ! grep -q "\"$key\"" ../BENCH_engine.json; then
+    echo "verify: FAIL — BENCH_engine.json lost its $key field" >&2
+    exit 1
+  fi
+done
 for f in BENCH_attention.json BENCH_engine.json BENCH_gptq.json; do
   if [[ ! -s "../$f" ]]; then
     echo "verify: FAIL — $f missing after the bench smokes" >&2
