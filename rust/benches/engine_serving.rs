@@ -22,12 +22,14 @@ use opt_gptq::coordinator::{
     SchedulerConfig, SubmitError, WeightDtype,
 };
 use opt_gptq::model::{ModelConfig, ModelWeights, NativeModel, SamplingParams};
+use opt_gptq::obs::StepPhase;
 use opt_gptq::runtime::NativeBackend;
 use opt_gptq::tokenizer::ByteTokenizer;
 use opt_gptq::util::benchkit::{f, Table};
 use opt_gptq::util::cli::Args;
 use opt_gptq::util::percentile;
 use opt_gptq::workload::{generate, synth_prompt, LenDist, WorkloadConfig};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 fn main() {
@@ -124,8 +126,25 @@ fn main() {
     t.row(&["mixed steps".into(), engine.metrics.mixed_steps.to_string()]);
     t.row(&["prefill dequant tiles".into(), report.prefill_dequant_tiles.to_string()]);
     t.row(&["dense gather bytes".into(), report.gather_bytes.to_string()]);
+    // Per-phase step-time p50s from the engine's telemetry histograms
+    // (log₂ buckets, so these are bucket upper bounds — coarse but
+    // trajectory-trackable).
+    let phase_p50_us =
+        |ph: StepPhase| engine.telemetry().phase(ph).quantile_us(0.5) as f64;
+    let (plan_p50, prefill_p50, decode_p50) = (
+        phase_p50_us(StepPhase::Plan),
+        phase_p50_us(StepPhase::Prefill),
+        phase_p50_us(StepPhase::Decode),
+    );
+    t.row(&["step plan p50 (µs)".into(), f(plan_p50, 0)]);
+    t.row(&["step prefill p50 (µs)".into(), f(prefill_p50, 0)]);
+    t.row(&["step decode p50 (µs)".into(), f(decode_p50, 0)]);
     t.print();
     assert_eq!(report.gather_bytes, 0, "the serving path must never dense-gather KV");
+    assert!(
+        engine.telemetry().phase(StepPhase::Decode).count() > 0,
+        "a mixed workload must have stamped decode-phase spans"
+    );
 
     // ---- Phase 2: sustained 2× overload through bounded admission ----
     //
@@ -144,10 +163,10 @@ fn main() {
     };
 
     let probe_n = if smoke { 8 } else { 16 };
-    let probe_router = Router::new(
+    let probe_router = Arc::new(Router::new(
         RouterConfig { engine: mk_econf(), workers: 1, admission: AdmissionConfig::default() },
         router_factory.clone(),
-    );
+    ));
     let probe_params = SamplingParams { max_tokens: 10, ..Default::default() };
     // Warm the worker (thread spawn + first-step costs) before timing.
     for i in 0..2 {
@@ -168,6 +187,33 @@ fn main() {
     }
     let capacity_rps = probe_n as f64 / probe_start.elapsed().as_secs_f64().max(1e-3);
     let probe_mean_lat = probe_lat.iter().sum::<f64>() / probe_lat.len() as f64;
+
+    // /metrics scrape smoke: bind the HTTP front-end over the warm
+    // router, scrape the exposition once, and gate that the serving
+    // counters made it out — the cheapest end-to-end check that the
+    // telemetry pipeline (mirror → registry → exposition) is live.
+    {
+        use std::io::{Read as _, Write as _};
+        let server = opt_gptq::server::Server::bind(probe_router.clone(), "127.0.0.1:0")
+            .expect("bind metrics smoke server");
+        let addr = server.local_addr();
+        let flag = server.shutdown_flag();
+        let sh = std::thread::spawn(move || {
+            let _ = server.serve();
+        });
+        let mut s = std::net::TcpStream::connect(addr).expect("connect metrics smoke");
+        s.write_all(b"GET /metrics HTTP/1.1\r\nHost: bench\r\n\r\n").expect("scrape write");
+        let mut scrape = String::new();
+        s.read_to_string(&mut scrape).expect("scrape read");
+        flag.store(true, std::sync::atomic::Ordering::SeqCst);
+        sh.join().expect("metrics smoke server thread");
+        assert!(scrape.contains("200 OK"), "metrics scrape failed:\n{scrape}");
+        assert!(
+            scrape.contains("opt_gptq_requests_completed{worker=\"0\"}"),
+            "exposition missing serving counters:\n{scrape}"
+        );
+        println!("metrics scrape smoke: {} exposition bytes", scrape.len());
+    }
     drop(probe_router);
 
     let overload_rate = 2.0 * capacity_rps;
@@ -342,6 +388,10 @@ fn main() {
             ("mixed_steps", engine.metrics.mixed_steps as f64),
             ("prefill_dequant_tiles", report.prefill_dequant_tiles as f64),
             ("gather_bytes", report.gather_bytes as f64),
+            // Per-phase step timing (telemetry histogram p50s, µs).
+            ("step_time_plan_p50_us", plan_p50),
+            ("step_time_prefill_p50_us", prefill_p50),
+            ("step_time_decode_p50_us", decode_p50),
             // Overload phase (2× saturation through bounded admission).
             ("overload_requests", n_over as f64),
             ("overload_completed", completed as f64),

@@ -48,6 +48,20 @@ pub enum SubmitError {
     WorkerFailed,
 }
 
+impl SubmitError {
+    /// Stable machine-readable discriminant — the `"error_kind"` field
+    /// of HTTP error bodies and the label on shed log lines, so clients
+    /// and dashboards can branch without parsing the human message.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            SubmitError::QueueFull { .. } => "queue_full",
+            SubmitError::DeadlineExceeded => "deadline_exceeded",
+            SubmitError::PromptTooLong { .. } => "prompt_too_long",
+            SubmitError::WorkerFailed => "worker_failed",
+        }
+    }
+}
+
 impl std::fmt::Display for SubmitError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {

@@ -11,7 +11,9 @@ use crate::kvcache::{
 };
 use super::admission::SubmitError;
 use crate::model::{SamplingParams, WeightDtype};
+use crate::obs::{EngineStat, StepPhase, StepRecord, Telemetry, TraceEvent, TraceKind};
 use crate::runtime::{Backend, DecodeItem, MixedBatch, PrefillChunkItem};
+use std::sync::Arc;
 use std::time::Instant;
 
 /// Engine construction parameters.
@@ -103,6 +105,13 @@ pub struct Engine {
     outputs: Vec<RequestOutput>,
     next_id: u64,
     t0: Instant,
+    /// Steps executed by this engine incarnation (flight-record index).
+    steps: u64,
+    /// Telemetry registry: step-phase histograms, the `EngineMetrics`
+    /// mirror, the trace ring and the flight recorder. Shared by `Arc`
+    /// so the router's supervisor and the HTTP server read it without
+    /// touching the engine — and so it survives a panic unwind.
+    telem: Arc<Telemetry>,
     /// Test-only deterministic fault injector (`runtime::fault`);
     /// compiled out of release builds without the `fault-inject`
     /// feature.
@@ -111,7 +120,21 @@ pub struct Engine {
 }
 
 impl Engine {
-    pub fn new(backend: Box<dyn Backend>, mut cfg: EngineConfig) -> Engine {
+    pub fn new(backend: Box<dyn Backend>, cfg: EngineConfig) -> Engine {
+        Self::with_telemetry(backend, cfg, Arc::new(Telemetry::new()))
+    }
+
+    /// [`Engine::new`] with a caller-owned telemetry registry. The
+    /// router creates one `Arc<Telemetry>` per worker *outside* the
+    /// worker thread and re-attaches it to every engine incarnation, so
+    /// step-time histograms and the flight ring survive crash-restarts
+    /// (the mirrored `EngineMetrics` scalars reset with the engine, as
+    /// they always have).
+    pub fn with_telemetry(
+        backend: Box<dyn Backend>,
+        mut cfg: EngineConfig,
+        telem: Arc<Telemetry>,
+    ) -> Engine {
         // Mixed-step (interleaved chunked prefill) planning needs a
         // backend whose prefill can resume at a nonzero cache position;
         // otherwise fall back to exclusive whole-prompt planning (the
@@ -187,9 +210,17 @@ impl Engine {
             outputs: Vec::new(),
             next_id: 1,
             t0: Instant::now(),
+            steps: 0,
+            telem,
             #[cfg(any(test, feature = "fault-inject"))]
             faults: None,
         }
+    }
+
+    /// This engine's telemetry registry (shared with the router's
+    /// supervisor and the HTTP scrape path).
+    pub fn telemetry(&self) -> &Arc<Telemetry> {
+        &self.telem
     }
 
     /// Arm a deterministic fault injector: each `step()` first consults
@@ -203,6 +234,11 @@ impl Engine {
     /// Engine-clock seconds.
     pub fn now(&self) -> f64 {
         self.t0.elapsed().as_secs_f64()
+    }
+
+    /// Engine-clock microseconds (the trace/flight timestamp domain).
+    fn now_us(&self) -> u64 {
+        self.t0.elapsed().as_micros().min(u64::MAX as u128) as u64
     }
 
     pub fn backend_name(&self) -> &'static str {
@@ -223,6 +259,23 @@ impl Engine {
         prompt: Vec<u32>,
         params: SamplingParams,
     ) -> Result<u64, SubmitError> {
+        let id = self.next_id;
+        self.add_request_with_id(id, prompt, params)
+    }
+
+    /// [`Engine::add_request`] with a caller-assigned id. The router
+    /// threads one globally unique request id end to end — client JSON,
+    /// error bodies, log lines and trace rings all agree on it even
+    /// across workers (each engine's own counter restarts at 1, so
+    /// engine-local ids would collide between workers). The id must not
+    /// collide with a live sequence; internal assignment continues
+    /// after the largest id seen.
+    pub fn add_request_with_id(
+        &mut self,
+        id: u64,
+        prompt: Vec<u32>,
+        params: SamplingParams,
+    ) -> Result<u64, SubmitError> {
         let too_long = |reason: String| SubmitError::PromptTooLong { reason };
         if prompt.is_empty() {
             return Err(too_long("empty prompt".into()));
@@ -240,10 +293,17 @@ impl Engine {
                 self.backend.config().max_seq
             )));
         }
-        let id = self.next_id;
-        self.next_id += 1;
+        assert!(self.scheduler.get(id).is_none(), "request id {id} is already live");
+        self.next_id = self.next_id.max(id + 1);
+        let prompt_len = prompt.len();
         let seq = Sequence::new(id, prompt, params, self.now());
         self.scheduler.add(seq);
+        self.telem.traces.record(TraceEvent {
+            id,
+            t_us: self.now_us(),
+            kind: TraceKind::Enqueue,
+            detail: prompt_len as u64,
+        });
         Ok(id)
     }
 
@@ -316,6 +376,12 @@ impl Engine {
                 panic!("injected fault: engine step panic");
             }
         }
+        // Phase spans are stamped HERE, at the coordinator layer —
+        // around the plan, the single forward_step call (inside
+        // run_mixed), sampling, spill offers and the eviction sweep —
+        // never inside kernels (verify.sh grep-gates clock reads off
+        // the kernel hot files), so timing cannot perturb bit-identity.
+        let t_plan = Instant::now();
         let mut plan = match &mut self.spill {
             Some(tier) if tier.enabled() => {
                 let mut ctx = SpillCtx::new(tier, self.cache.as_mut());
@@ -338,22 +404,32 @@ impl Engine {
                 if !pc.is_empty() {
                     log::debug!("flushing prefix cache under memory pressure");
                     let victims = pc.clear(&mut self.alloc);
+                    let t_spill = Instant::now();
                     Self::offer_victims(&mut self.spill, self.cache.as_ref(), &victims);
+                    if self.spill.is_some() {
+                        self.telem.phase(StepPhase::Spill).observe(t_spill.elapsed());
+                    }
                     plan = self.scheduler.plan(&mut self.alloc, None);
                 }
             }
         }
-        let worked = match plan {
+        self.telem.phase(StepPhase::Plan).observe(t_plan.elapsed());
+        self.trace_plan_events();
+        let (worked, prefill_chunks, prefill_tokens, decode_batch) = match plan {
             StepPlan::Mixed { prefill, decode } => {
+                let chunks = prefill.len();
+                let chunk_tokens = prefill.iter().map(|c| c.len).sum::<usize>();
+                let batch = decode.len();
                 self.run_mixed(&prefill, &decode);
-                true
+                (true, chunks, chunk_tokens, batch)
             }
-            StepPlan::Idle => false,
+            StepPlan::Idle => (false, 0, 0, 0),
         };
         // Sliding-window eviction sweep: reclaim KV blocks behind every
         // live sequence's window frontier (a no-op under the dense
         // default). Freed blocks are admission-visible headroom by the
         // next plan() call.
+        let t_evict = Instant::now();
         let sp = self.backend.config().sparsity;
         match &mut self.spill {
             Some(tier) if tier.enabled() => {
@@ -362,6 +438,7 @@ impl Engine {
             }
             _ => self.scheduler.enforce_window(&sp, &mut self.alloc),
         }
+        self.telem.phase(StepPhase::Evict).observe(t_evict.elapsed());
         if let Some(tier) = &self.spill {
             let st = tier.stats();
             self.metrics.spill_bytes = st.bytes_written as usize;
@@ -373,7 +450,66 @@ impl Engine {
         self.metrics.decode_stall_steps = self.scheduler.decode_stall_steps;
         self.metrics.peak_blocks = self.metrics.peak_blocks.max(self.alloc.num_used());
         self.metrics.gather_bytes = self.cache.gather_bytes();
+        self.steps += 1;
+        self.telem.flight.record(StepRecord {
+            step: self.steps,
+            t_us: self.now_us(),
+            prefill_chunks: prefill_chunks as u32,
+            prefill_tokens: prefill_tokens as u32,
+            decode_batch: decode_batch as u32,
+            budget_tokens: self.scheduler.config().step_token_budget as u32,
+            waiting: self.scheduler.num_waiting() as u32,
+            running: self.scheduler.num_running() as u32,
+            // Router-side gauges, stamped into the registry by the
+            // worker loop before each step; 0 when engine-driven.
+            queue_depth: self.telem.get(EngineStat::QueueDepth) as u32,
+            aimd_limit: self.metrics.concurrency_limit as u32,
+            used_blocks: self.alloc.num_used() as u32,
+            free_blocks: self.alloc.num_free() as u32,
+        });
+        self.mirror_telemetry();
         worked
+    }
+
+    /// Turn the scheduler's per-plan admission/preemption/restore lists
+    /// into request trace events.
+    fn trace_plan_events(&self) {
+        let t_us = self.now_us();
+        for &(id, start) in &self.scheduler.last_admitted {
+            self.telem.traces.record(TraceEvent {
+                id,
+                t_us,
+                kind: TraceKind::Admit,
+                detail: start as u64,
+            });
+        }
+        for &(id, tokens) in &self.scheduler.last_restored {
+            self.telem.traces.record(TraceEvent {
+                id,
+                t_us,
+                kind: TraceKind::SpillRestore,
+                detail: tokens as u64,
+            });
+        }
+        for &id in &self.scheduler.last_preempted {
+            self.telem.traces.record(TraceEvent { id, t_us, kind: TraceKind::Preempt, detail: 0 });
+        }
+    }
+
+    /// Refresh the telemetry registry from the engine's plain counters
+    /// — one batch of relaxed stores at the end of each step.
+    fn mirror_telemetry(&self) {
+        self.metrics.mirror_into(&self.telem);
+        if let Some(tier) = &self.spill {
+            let st = tier.stats();
+            self.telem.set(EngineStat::SpillRecords, st.records as u64);
+            self.telem.set(EngineStat::SpillDiskBytes, tier.total_bytes());
+            self.telem.set(EngineStat::SpillIoFailures, st.io_failures as u64);
+        }
+        self.telem.set(
+            EngineStat::InflightRequests,
+            (self.scheduler.num_waiting() + self.scheduler.num_running()) as u64,
+        );
     }
 
     /// Drive until every queued request completes; returns the run report.
@@ -433,8 +569,19 @@ impl Engine {
                 .collect(),
             prefill_call_cap: self.cfg.prefill_chunk,
         };
+        let t_fwd = Instant::now();
         let outs = self.backend.forward_step(&mut batch, &mut self.cache);
         drop(batch);
+        // Step-level forward attribution: prefill and decode execute in
+        // ONE forward_step call, so the span goes to `prefill` whenever
+        // the step carried a chunk (the chunk dominates its cost) and
+        // to `decode` only for pure-decode steps — which makes the
+        // decode histogram exactly the inter-token-latency-critical
+        // number. Documented in ARCHITECTURE.md "Observability
+        // contract".
+        let fwd_phase = if prefill.is_empty() { StepPhase::Decode } else { StepPhase::Prefill };
+        self.telem.phase(fwd_phase).observe(t_fwd.elapsed());
+        let t_sample = Instant::now();
 
         self.metrics.mixed_steps += 1;
         self.metrics.prefill_steps += prefill.len(); // chunks executed
@@ -448,6 +595,15 @@ impl Engine {
         }
 
         let now = self.now();
+        let t_us = self.now_us();
+        for c in prefill {
+            self.telem.traces.record(TraceEvent {
+                id: c.seq_id,
+                t_us,
+                kind: TraceKind::Chunk,
+                detail: c.len as u64,
+            });
+        }
         let mut done = Vec::new();
         // Prefill side: advance cursors; sample on completed prefills.
         for ((c, table), logits) in prefill.iter().zip(chunk_tables).zip(outs.prefill_logits) {
@@ -462,6 +618,14 @@ impl Engine {
                 let tok = seq.sampler.sample(&logits, &seq.params);
                 seq.phase = SeqPhase::Decoding;
                 seq.generated.push(tok);
+                if seq.t_first_token.is_none() {
+                    self.telem.traces.record(TraceEvent {
+                        id: c.seq_id,
+                        t_us,
+                        kind: TraceKind::FirstToken,
+                        detail: 0,
+                    });
+                }
                 seq.t_first_token.get_or_insert(now);
                 if let Some(prev) = seq.t_last_token {
                     // A replayed (preempted) sequence emitting again:
@@ -480,6 +644,14 @@ impl Engine {
             seq.table = table;
             let tok = seq.sampler.sample(&logit, &seq.params);
             seq.generated.push(tok);
+            if seq.t_first_token.is_none() {
+                self.telem.traces.record(TraceEvent {
+                    id,
+                    t_us,
+                    kind: TraceKind::FirstToken,
+                    detail: 0,
+                });
+            }
             seq.t_first_token.get_or_insert(now);
             if let Some(prev) = seq.t_last_token {
                 self.metrics.record_gap(now - prev);
@@ -492,6 +664,10 @@ impl Engine {
         for id in done {
             self.finish_seq(id);
         }
+        // Sample span: everything after the forward — cursor updates,
+        // sampling, gap accounting and request finish (which may nest a
+        // spill offer; its span is stamped independently).
+        self.telem.phase(StepPhase::Sample).observe(t_sample.elapsed());
     }
 
     fn finish_seq(&mut self, id: u64) {
@@ -508,11 +684,21 @@ impl Engine {
                 let toks = seq.replay_tokens();
                 let blocks = seq.table.blocks().to_vec();
                 let victims = pc.insert(&toks[..in_cache.min(toks.len())], &blocks, &mut self.alloc);
+                let t_spill = Instant::now();
                 Self::offer_victims(&mut self.spill, self.cache.as_ref(), &victims);
+                if self.spill.is_some() {
+                    self.telem.phase(StepPhase::Spill).observe(t_spill.elapsed());
+                }
             }
         }
         self.scheduler.finish(id, &mut self.alloc);
         let seq = self.scheduler.collect(id).expect("finished sequence must collect");
+        self.telem.traces.record(TraceEvent {
+            id,
+            t_us: self.now_us(),
+            kind: TraceKind::Finish,
+            detail: seq.generated.len() as u64,
+        });
         self.metrics.record_finish(RequestRecord {
             id,
             prompt_tokens: seq.prompt.len(),
@@ -637,6 +823,65 @@ mod tests {
         assert!(outs[0].ttft_s <= outs[0].latency_s);
         // All blocks returned.
         assert_eq!(e.alloc.num_used(), 0);
+    }
+
+    #[test]
+    fn telemetry_stamps_phases_traces_and_flight() {
+        use crate::obs::{EngineStat, StepPhase, TraceKind};
+        let mut e = engine(32);
+        let id = e.add_request(vec![256, 1, 2, 3], params(5)).unwrap();
+        e.run_to_completion();
+        let t = e.telemetry().clone();
+        // Phase histograms: every step stamps plan + evict; the forward
+        // span lands in prefill (chunk-carrying step) or decode.
+        assert!(t.phase(StepPhase::Plan).count() > 0, "plan spans stamped");
+        assert!(t.phase(StepPhase::Evict).count() > 0, "evict spans stamped");
+        assert!(t.phase(StepPhase::Prefill).count() >= 1, "prefill forward span");
+        assert!(t.phase(StepPhase::Decode).count() >= 1, "decode-only forward spans");
+        assert!(t.phase(StepPhase::Sample).count() > 0, "sample spans stamped");
+        // No spill tier armed: the spill phase must stay untouched.
+        assert_eq!(t.phase(StepPhase::Spill).count(), 0);
+        // Trace ring: the request's whole life is spanned.
+        let evs = t.traces.events_for(id);
+        let kinds: Vec<TraceKind> = evs.iter().map(|e| e.kind).collect();
+        assert_eq!(kinds.first(), Some(&TraceKind::Enqueue));
+        assert!(kinds.contains(&TraceKind::Admit));
+        assert!(kinds.contains(&TraceKind::Chunk));
+        assert!(kinds.contains(&TraceKind::FirstToken));
+        assert_eq!(kinds.last(), Some(&TraceKind::Finish));
+        for w in evs.windows(2) {
+            assert!(w[0].t_us <= w[1].t_us, "trace events in time order");
+        }
+        // Flight ring: one record per step, mirrored counters fresh.
+        assert_eq!(t.flight.total(), e.metrics.mixed_steps as u64 + 1, "one record per step (incl. final idle)");
+        assert_eq!(t.get(EngineStat::RequestsCompleted), 1);
+        assert_eq!(t.get(EngineStat::MixedSteps), e.metrics.mixed_steps as u64);
+        // Default config: every sparse/spill counter stays 0.
+        for s in [
+            EngineStat::SkippedTiles,
+            EngineStat::EvictedBlocks,
+            EngineStat::SpillHitTokens,
+            EngineStat::SpillBytes,
+            EngineStat::SpillCorruptRecords,
+            EngineStat::GatherBytes,
+        ] {
+            assert_eq!(t.get(s), 0, "{s:?} must stay 0 on the dense default");
+        }
+    }
+
+    #[test]
+    fn caller_assigned_ids_thread_through() {
+        let mut e = engine(32);
+        let id = e.add_request_with_id(41, vec![256, 1, 2], params(3)).unwrap();
+        assert_eq!(id, 41);
+        // Internal assignment continues after the largest id seen.
+        let id2 = e.add_request(vec![256, 4, 5], params(3)).unwrap();
+        assert_eq!(id2, 42);
+        e.run_to_completion();
+        let outs = e.take_outputs();
+        assert_eq!(outs.len(), 2);
+        assert!(outs.iter().any(|o| o.id == 41));
+        assert!(outs.iter().any(|o| o.id == 42));
     }
 
     #[test]

@@ -6,6 +6,7 @@
 //!   that window;
 //! * **generate throughput** — generated tokens/s over the same window.
 
+use crate::obs::{EngineStat, Telemetry};
 use crate::util::{mean, percentile};
 
 /// Per-request completion record.
@@ -149,6 +150,41 @@ impl EngineMetrics {
     /// means without copying the ring.
     pub fn inter_token_totals(&self) -> (u64, f64) {
         (self.inter_token_count, self.inter_token_sum)
+    }
+
+    /// Mirror every counter into a worker's telemetry registry
+    /// ([`Telemetry`]) — one batch of `Relaxed` stores, called by the
+    /// engine at the end of each step so the `/metrics` scrape thread
+    /// reads fresh atomics without ever touching the engine. The
+    /// engine keeps accumulating into these plain fields exactly as
+    /// before; the registry is a read-side mirror, not a replacement.
+    pub fn mirror_into(&self, t: &Telemetry) {
+        use EngineStat as S;
+        t.set(S::RequestsCompleted, self.records.len() as u64);
+        t.set(S::MixedSteps, self.mixed_steps as u64);
+        t.set(S::PrefillChunks, self.prefill_steps as u64);
+        t.set(S::PrefillChunkTokens, self.prefill_chunk_tokens as u64);
+        t.set(S::DecodeSteps, self.decode_steps as u64);
+        t.set(S::DecodeBatchTokens, self.decode_batch_tokens as u64);
+        t.set(S::DecodeBucketTokens, self.decode_bucket_tokens as u64);
+        t.set(S::DecodeStallSteps, self.decode_stall_steps as u64);
+        let (gaps, sum_s) = self.inter_token_totals();
+        t.set(S::InterTokenCount, gaps);
+        t.set(S::InterTokenSumUs, (sum_s * 1e6) as u64);
+        t.set(S::Preemptions, self.preemptions as u64);
+        t.set(S::PeakBlocks, self.peak_blocks as u64);
+        t.set(S::PrefixHitTokens, self.prefix_hit_tokens as u64);
+        t.set(S::PrefillDequantTiles, self.prefill_dequant_tiles as u64);
+        t.set(S::GatherBytes, self.gather_bytes as u64);
+        t.set(S::SkippedTiles, self.skipped_tiles as u64);
+        t.set(S::EvictedBlocks, self.evicted_blocks as u64);
+        t.set(S::ShedCount, self.shed_count as u64);
+        t.set(S::DeadlineMissCount, self.deadline_miss_count as u64);
+        t.set(S::ConcurrencyLimit, self.concurrency_limit as u64);
+        t.set(S::WorkerRestarts, self.worker_restarts as u64);
+        t.set(S::SpillHitTokens, self.spill_hit_tokens as u64);
+        t.set(S::SpillBytes, self.spill_bytes as u64);
+        t.set(S::SpillCorruptRecords, self.spill_corrupt_records as u64);
     }
 
     /// Mean decode batch occupancy (sequences per step).

@@ -37,6 +37,7 @@ use super::admission::{AdmissionConfig, AdmissionQueue, AimdController, SubmitEr
 use super::engine::{Engine, EngineConfig, RequestOutput};
 use super::metrics::{EngineMetrics, RunReport};
 use crate::model::SamplingParams;
+use crate::obs::{EngineStat, Telemetry, TraceEvent};
 use crate::runtime::Backend;
 use std::panic::AssertUnwindSafe;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
@@ -60,6 +61,9 @@ pub struct RouterConfig {
 
 enum WorkerMsg {
     Request {
+        /// Router-assigned request id: globally unique across workers,
+        /// threaded into the engine so engine id == client-visible id.
+        id: u64,
         prompt: Vec<u32>,
         params: SamplingParams,
         deadline: Instant,
@@ -74,6 +78,7 @@ enum WorkerMsg {
 /// A queued request the worker has accepted but not yet admitted into
 /// the engine.
 struct PendingReq {
+    id: u64,
     prompt: Vec<u32>,
     params: SamplingParams,
     reply: Sender<SubmitResult>,
@@ -156,12 +161,20 @@ struct Worker {
     tx: Sender<WorkerMsg>,
     handle: Option<JoinHandle<()>>,
     shared: Arc<WorkerShared>,
+    /// Telemetry registry shared with every engine incarnation on this
+    /// worker. Created router-side so it survives a panic unwind — the
+    /// supervisor dumps the flight ring from it after a crash, and
+    /// `/metrics` scrapes it without a worker round-trip.
+    telem: Arc<Telemetry>,
 }
 
 /// Multi-worker request router with bounded admission and supervision.
 pub struct Router {
     workers: Vec<Worker>,
     next: AtomicUsize,
+    /// Monotonic request-id source: ids are assigned *before* admission
+    /// so even shed requests carry one in their error body and logs.
+    req_ids: AtomicU64,
     admission: AdmissionConfig,
 }
 
@@ -180,17 +193,26 @@ impl Router {
         for w in 0..cfg.workers {
             let (tx, rx) = channel::<WorkerMsg>();
             let shared = Arc::new(WorkerShared::new(cfg.admission.aimd.initial_limit));
+            let telem = Arc::new(Telemetry::new());
             let econf = cfg.engine.clone();
             let acfg = cfg.admission.clone();
             let factory = factory.clone();
             let shared_thread = shared.clone();
+            let telem_thread = telem.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("engine-worker-{w}"))
-                .spawn(move || supervise(w, factory, econf, acfg, rx, shared_thread))
+                .spawn(move || {
+                    supervise(w, factory, econf, acfg, rx, shared_thread, telem_thread)
+                })
                 .expect("spawn engine worker");
-            workers.push(Worker { tx, handle: Some(handle), shared });
+            workers.push(Worker { tx, handle: Some(handle), shared, telem });
         }
-        Router { workers, next: AtomicUsize::new(0), admission: cfg.admission }
+        Router {
+            workers,
+            next: AtomicUsize::new(0),
+            req_ids: AtomicU64::new(0),
+            admission: cfg.admission,
+        }
     }
 
     /// Submit with the config's default deadline. The receiver yields
@@ -214,13 +236,32 @@ impl Router {
         params: SamplingParams,
         timeout: Option<Duration>,
     ) -> Result<Receiver<SubmitResult>, SubmitError> {
-        let w = self.pick_worker().ok_or(SubmitError::WorkerFailed)?;
-        self.submit_to(w, prompt, params, timeout)
+        self.submit_traced(prompt, params, timeout).1
+    }
+
+    /// [`Router::submit_with_deadline`] that also returns the assigned
+    /// request id. The id is minted *before* admission, so a shed
+    /// request still has one for its error body and log line — and it
+    /// is the engine-side id too ([`Engine::add_request_with_id`]), so
+    /// `GET /debug/trace/{id}` resolves unambiguously across workers.
+    pub fn submit_traced(
+        &self,
+        prompt: Vec<u32>,
+        params: SamplingParams,
+        timeout: Option<Duration>,
+    ) -> (u64, Result<Receiver<SubmitResult>, SubmitError>) {
+        let id = self.req_ids.fetch_add(1, Ordering::Relaxed) + 1;
+        let Some(w) = self.pick_worker() else {
+            log::debug!("request {id}: no healthy worker");
+            return (id, Err(SubmitError::WorkerFailed));
+        };
+        (id, self.submit_to(w, id, prompt, params, timeout))
     }
 
     fn submit_to(
         &self,
         w: usize,
+        id: u64,
         prompt: Vec<u32>,
         params: SamplingParams,
         timeout: Option<Duration>,
@@ -231,19 +272,22 @@ impl Router {
         if shared.queued.fetch_add(1, Ordering::SeqCst) >= self.admission.queue_depth {
             shared.queued.fetch_sub(1, Ordering::SeqCst);
             shared.shed_queue_full.fetch_add(1, Ordering::SeqCst);
-            return Err(SubmitError::QueueFull { retry_after_ms: self.retry_hint_ms(w) });
+            let retry_after_ms = self.retry_hint_ms(w);
+            log::debug!("request {id}: shed queue-full at worker {w} (retry {retry_after_ms} ms)");
+            return Err(SubmitError::QueueFull { retry_after_ms });
         }
         shared.inflight.fetch_add(1, Ordering::SeqCst);
         let deadline = Instant::now()
             + timeout.unwrap_or(Duration::from_millis(self.admission.default_deadline_ms));
         let (reply, rx) = channel();
-        if self.workers[w].tx.send(WorkerMsg::Request { prompt, params, deadline, reply }).is_err()
-        {
+        let msg = WorkerMsg::Request { id, prompt, params, deadline, reply };
+        if self.workers[w].tx.send(msg).is_err() {
             // The worker is gone. Roll back BOTH counters — leaving
             // `inflight` raised would skew pick_worker away from this
             // worker forever (the pre-supervision leak).
             shared.queued.fetch_sub(1, Ordering::SeqCst);
             shared.inflight.fetch_sub(1, Ordering::SeqCst);
+            log::debug!("request {id}: worker {w} channel dead");
             return Err(SubmitError::WorkerFailed);
         }
         Ok(rx)
@@ -313,6 +357,42 @@ impl Router {
             .collect()
     }
 
+    /// Worker `w`'s telemetry registry (counters, histograms, trace
+    /// ring, flight recorder). Always readable — even mid-crash or
+    /// after the worker went permanently unhealthy — because the
+    /// registry is owned router-side and only *shared* with the engine.
+    pub fn telemetry(&self, w: usize) -> Option<&Arc<Telemetry>> {
+        self.workers.get(w).map(|w| &w.telem)
+    }
+
+    /// Every worker's telemetry, in worker order (the `/metrics`
+    /// scrape path).
+    pub fn telemetries(&self) -> Vec<Arc<Telemetry>> {
+        self.workers.iter().map(|w| w.telem.clone()).collect()
+    }
+
+    /// Trace events recorded for request `id`, searched across every
+    /// worker's ring (ids are globally unique, so at most one worker
+    /// has any). Empty when the id is unknown or its events have been
+    /// overwritten by ring wrap.
+    pub fn trace_events(&self, id: u64) -> Vec<TraceEvent> {
+        for w in &self.workers {
+            let evs = w.telem.traces.events_for(id);
+            if !evs.is_empty() {
+                return evs;
+            }
+        }
+        Vec::new()
+    }
+
+    /// Resize every worker's flight-recorder ring (startup-time
+    /// configuration: clears any recorded history).
+    pub fn set_flight_records(&self, records: usize) {
+        for w in &self.workers {
+            w.telem.flight.set_capacity(records);
+        }
+    }
+
     /// Ask worker `w` for a state snapshot (engine metrics, queue and
     /// pool occupancy). `None` if the worker cannot answer within 10 s.
     pub fn snapshot(&self, w: usize) -> Option<WorkerSnapshot> {
@@ -360,6 +440,7 @@ fn supervise<F>(
     acfg: AdmissionConfig,
     rx: Receiver<WorkerMsg>,
     shared: Arc<WorkerShared>,
+    telem: Arc<Telemetry>,
 ) where
     F: Fn(usize) -> Box<dyn Backend> + Send + Sync + 'static,
 {
@@ -368,7 +449,7 @@ fn supervise<F>(
     let mut restarts_left = acfg.max_restarts;
     loop {
         let run = std::panic::catch_unwind(AssertUnwindSafe(|| {
-            worker_loop(w, &*factory, &econf, &acfg, &rx, &shared, &mut queue, &mut pending)
+            worker_loop(w, &*factory, &econf, &acfg, &rx, &shared, &telem, &mut queue, &mut pending)
         }));
         match run {
             // Clean exit: Shutdown message or every sender dropped.
@@ -379,6 +460,10 @@ fn supervise<F>(
                     pending.len(),
                     queue.len()
                 );
+                // The flight recorder survives the unwind (router-owned
+                // Arc): dump the last N step records — the black box for
+                // the post-mortem — before touching any request state.
+                telem.flight.dump_to_log(w);
                 let dead = restarts_left == 0;
                 if dead {
                     // Permanently dead. Unhealthy FIRST — before any
@@ -392,8 +477,9 @@ fn supervise<F>(
                         acfg.max_restarts
                     );
                 }
-                for (_, reply) in pending.drain(..) {
+                for (id, reply) in pending.drain(..) {
                     shared.inflight.fetch_sub(1, Ordering::SeqCst);
+                    log::debug!("request {id}: failed by engine-worker-{w} crash");
                     let _ = reply.send(Err(SubmitError::WorkerFailed));
                 }
                 if dead {
@@ -417,9 +503,10 @@ fn supervise<F>(
 fn drain_dead(rx: &Receiver<WorkerMsg>, shared: &WorkerShared) {
     for msg in rx.iter() {
         match msg {
-            WorkerMsg::Request { reply, .. } => {
+            WorkerMsg::Request { id, reply, .. } => {
                 shared.queued.fetch_sub(1, Ordering::SeqCst);
                 shared.inflight.fetch_sub(1, Ordering::SeqCst);
+                log::debug!("request {id}: rejected by permanently dead worker");
                 let _ = reply.send(Err(SubmitError::WorkerFailed));
             }
             WorkerMsg::Inspect { reply } => {
@@ -452,13 +539,17 @@ fn worker_loop<F>(
     acfg: &AdmissionConfig,
     rx: &Receiver<WorkerMsg>,
     shared: &WorkerShared,
+    telem: &Arc<Telemetry>,
     queue: &mut AdmissionQueue<PendingReq>,
     pending: &mut Vec<(u64, Sender<SubmitResult>)>,
 ) where
     F: Fn(usize) -> Box<dyn Backend>,
 {
     let backend = factory(w);
-    let mut engine = Engine::new(backend, econf.clone());
+    // Re-attach the worker's long-lived telemetry: histograms, traces
+    // and the flight ring accumulate across engine incarnations, while
+    // the mirrored scalar counters reset with the engine's metrics.
+    let mut engine = Engine::with_telemetry(backend, econf.clone(), telem.clone());
     let mut aimd = AimdController::new(acfg.aimd);
     shared.limit.store(aimd.limit(), Ordering::SeqCst);
     shared.healthy.store(true, Ordering::SeqCst);
@@ -488,8 +579,8 @@ fn worker_loop<F>(
                 }
             };
             match msg {
-                WorkerMsg::Request { prompt, params, deadline, reply } => {
-                    queue.push(deadline, PendingReq { prompt, params, reply });
+                WorkerMsg::Request { id, prompt, params, deadline, reply } => {
+                    queue.push(deadline, PendingReq { id, prompt, params, reply });
                 }
                 WorkerMsg::Inspect { reply } => {
                     // Refresh the mirrored counters first: a shed can
@@ -524,26 +615,42 @@ fn worker_loop<F>(
             shared.queued.fetch_sub(1, Ordering::SeqCst);
             shared.inflight.fetch_sub(1, Ordering::SeqCst);
             shared.shed_deadline.fetch_add(1, Ordering::SeqCst);
+            log::debug!("request {}: shed expired deadline at engine-worker-{w}", req.id);
             let _ = req.reply.send(Err(SubmitError::DeadlineExceeded));
         }
-        // Admit into the engine up to the AIMD concurrency limit.
+        // Admit into the engine up to the AIMD concurrency limit. The
+        // router-assigned id becomes the engine id, so the trace ring,
+        // response JSON and log lines all speak one id space.
         while pending.len() < aimd.limit() {
             let Some((_deadline, req)) = queue.pop() else { break };
             shared.queued.fetch_sub(1, Ordering::SeqCst);
-            match engine.add_request(req.prompt, req.params) {
+            match engine.add_request_with_id(req.id, req.prompt, req.params) {
                 Ok(id) => pending.push((id, req.reply)),
                 Err(e) => {
                     shared.inflight.fetch_sub(1, Ordering::SeqCst);
+                    log::debug!("request {}: rejected at engine-worker-{w}: {e:?}", req.id);
                     let _ = req.reply.send(Err(e));
                 }
             }
         }
+        // Stamp the queue-depth gauge the engine cannot see (it lives
+        // in the admission layer) before the step records its flight
+        // entry, which reads QueueDepth back from the registry. The
+        // InflightRequests gauge is the engine's to write — it mirrors
+        // waiting + running at the end of every step.
+        telem.set(EngineStat::QueueDepth, queue.len() as u64);
         engine.step();
         for out in engine.take_outputs() {
             if let Some(pos) = pending.iter().position(|(id, _)| *id == out.id) {
                 let (_, reply) = pending.swap_remove(pos);
                 shared.inflight.fetch_sub(1, Ordering::SeqCst);
                 shared.observe_service_ms(out.latency_s * 1e3);
+                log::debug!(
+                    "request {}: completed at engine-worker-{w} ({} tokens, {:.1} ms)",
+                    out.id,
+                    out.tokens.len(),
+                    out.latency_s * 1e3
+                );
                 let _ = reply.send(Ok(out));
             }
         }
@@ -785,6 +892,71 @@ mod tests {
         // A dead worker still answers Inspect (via the drain loop).
         let snap = r.snapshot(0).unwrap();
         assert!(!snap.healthy);
+    }
+
+    #[test]
+    fn traced_submit_threads_ids_end_to_end() {
+        use crate::obs::TraceKind;
+        let r = router(1);
+        let params = SamplingParams { max_tokens: 3, ..Default::default() };
+        let (id1, rx1) = r.submit_traced(vec![256, 1, 2], params, None);
+        let (id2, rx2) = r.submit_traced(vec![256, 3], params, None);
+        assert_eq!((id1, id2), (1, 2), "router ids are minted 1, 2, ...");
+        let out1 = rx1.unwrap().recv_timeout(Duration::from_secs(30)).unwrap().unwrap();
+        let out2 = rx2.unwrap().recv_timeout(Duration::from_secs(30)).unwrap().unwrap();
+        // The engine id IS the router id — the response echoes it.
+        assert_eq!(out1.id, id1);
+        assert_eq!(out2.id, id2);
+        // And the trace ring resolves it: full lifecycle, in order.
+        let evs = r.trace_events(id1);
+        assert!(!evs.is_empty(), "no trace events for request {id1}");
+        assert_eq!(evs.first().unwrap().kind, TraceKind::Enqueue);
+        assert_eq!(evs.last().unwrap().kind, TraceKind::Finish);
+        assert!(evs.iter().any(|e| e.kind == TraceKind::FirstToken));
+        assert!(r.trace_events(999).is_empty(), "unknown id has no trace");
+    }
+
+    #[test]
+    fn crash_dumps_the_flight_recorder() {
+        // The supervisor's black box: a worker crash must dump the
+        // flight ring (recorded by the doomed incarnation) before any
+        // failing reply is delivered, so observing WorkerFailed implies
+        // the dump already happened.
+        let calls = Arc::new(AtomicUsize::new(0));
+        let calls_f = calls.clone();
+        let r = Router::new(
+            RouterConfig {
+                engine: engine_cfg(),
+                workers: 1,
+                admission: AdmissionConfig::default(),
+            },
+            move |_| {
+                let inner = tiny_backend(7);
+                if calls_f.fetch_add(1, Ordering::SeqCst) == 0 {
+                    Box::new(FaultyBackend::new(
+                        inner,
+                        FaultPlan::new(1).panic_at_step(2).injector(),
+                    ))
+                } else {
+                    inner
+                }
+            },
+        );
+        let params = SamplingParams { max_tokens: 8, ..Default::default() };
+        let rx = r.submit(vec![256, 1, 2, 3], params).unwrap();
+        match rx.recv_timeout(Duration::from_secs(30)).unwrap() {
+            Err(SubmitError::WorkerFailed) => {}
+            other => panic!("expected WorkerFailed from the crash, got {other:?}"),
+        }
+        let telem = r.telemetry(0).expect("worker 0 exists");
+        assert_eq!(telem.flight.dumps(), 1, "crash must dump the flight ring exactly once");
+        assert!(telem.flight.total() > 0, "the doomed incarnation recorded step records");
+        // The registry survives the respawn: the ring keeps appending.
+        let before = telem.flight.total();
+        let params = SamplingParams { max_tokens: 2, ..Default::default() };
+        let rx = r.submit(vec![256, 9], params).unwrap();
+        rx.recv_timeout(Duration::from_secs(30)).unwrap().unwrap();
+        assert!(telem.flight.total() > before, "flight ring froze across respawn");
     }
 
     #[test]

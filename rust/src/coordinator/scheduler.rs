@@ -149,6 +149,16 @@ pub struct Scheduler {
     /// decoders are no longer in the `Decoding` phase. Engine copies
     /// into metrics.
     pub decode_stall_steps: usize,
+    /// Sequences admitted by the most recent `plan*` call, as
+    /// `(seq_id, prefill start position after prefix/spill adoption)`.
+    /// The engine turns these into request trace events. Cleared (not
+    /// shrunk) each plan, so the steady state never reallocates.
+    pub last_admitted: Vec<(u64, usize)>,
+    /// Sequences preempted by the most recent `plan*` call.
+    pub last_preempted: Vec<u64>,
+    /// Disk-spill restores performed at admission by the most recent
+    /// `plan*` call, as `(seq_id, restored tokens)`.
+    pub last_restored: Vec<(u64, usize)>,
 }
 
 impl Scheduler {
@@ -164,6 +174,9 @@ impl Scheduler {
             evicted_blocks: 0,
             prefix_hit_tokens: 0,
             decode_stall_steps: 0,
+            last_admitted: Vec::new(),
+            last_preempted: Vec::new(),
+            last_restored: Vec::new(),
         }
     }
 
@@ -232,6 +245,9 @@ impl Scheduler {
         mut prefix: Option<&mut PrefixCache>,
         mut spill: Option<&mut SpillCtx<'_>>,
     ) -> StepPlan {
+        self.last_admitted.clear();
+        self.last_preempted.clear();
+        self.last_restored.clear();
         if self.cfg.chunked_prefill {
             self.plan_mixed(alloc, prefix.as_deref_mut(), spill.as_deref_mut())
         } else {
@@ -476,6 +492,7 @@ impl Scheduler {
         if let Some(ctx) = spill {
             let max_blocks = toks.len().saturating_sub(1) / bs;
             let hashes = chain_block_hashes(bs, &toks);
+            let mut restored_here = 0usize;
             for &h in hashes.iter().take(max_blocks).skip(adopted.len()) {
                 if !ctx.tier.enabled() || !ctx.tier.contains(h) || alloc.num_free() <= 1 {
                     break;
@@ -483,11 +500,15 @@ impl Scheduler {
                 let Some(b) = alloc.alloc() else { break };
                 if ctx.tier.restore_into(h, ctx.cache, b).is_ok() {
                     ctx.restored_tokens += bs;
+                    restored_here += bs;
                     adopted.push(b);
                 } else {
                     alloc.release(b);
                     break;
                 }
+            }
+            if restored_here > 0 {
+                self.last_restored.push((cand, restored_here));
             }
         }
         let seq = self.seqs.get_mut(&cand).unwrap();
@@ -507,6 +528,7 @@ impl Scheduler {
         seq.phase = SeqPhase::Prefilling;
         let start = seq.prefill_pos;
         self.running.push(cand);
+        self.last_admitted.push((cand, start));
         PrefillChunk { seq_id: cand, start, len: chunk, last: chunk == remaining }
     }
 
@@ -668,6 +690,7 @@ impl Scheduler {
         self.running.retain(|&r| r != id);
         self.waiting.push_front(id);
         self.preemptions += 1;
+        self.last_preempted.push(id);
     }
 
     /// Mark a sequence finished: free its blocks and remove it from the

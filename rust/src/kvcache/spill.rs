@@ -209,6 +209,14 @@ impl SpillConfig {
 }
 
 /// Observability counters (all monotonic since open, except `records`).
+///
+/// The engine mirrors these into the telemetry registry once per step
+/// (`spill_hit_tokens`, `spill_bytes`, `spill_corrupt_records`,
+/// `spill_records`, `spill_disk_bytes`, `spill_io_failures` on
+/// `GET /metrics`), so dashboards see the tier's health without any
+/// extra instrumentation inside the IO paths themselves — the same
+/// coordinator-layer-only placement rule attention kernels follow
+/// (ARCHITECTURE.md "Observability contract").
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct SpillStats {
     /// Records currently indexed (restorable).

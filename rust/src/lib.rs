@@ -29,6 +29,7 @@
 //! | [`model`] | Llama-architecture config, [`model::WeightStore`] (dense f32 / packed GPTQ), native forward, sampler |
 //! | [`runtime`] | PJRT client (stubbed offline), artifact manifest, the persistent worker pool (`runtime::pool`), `Backend` trait with the `forward_step` mixed-batch entry point (Native / Xla) |
 //! | [`coordinator`] | sequence state machine, token-budget mixed-step scheduler (interleaved chunked prefill), batcher, router, engine, metrics |
+//! | [`obs`] | telemetry: lock-free metrics registry + log₂ latency histograms, per-request trace rings, crash flight recorder, Prometheus exposition |
 //! | [`server`] | threaded TCP/HTTP front-end speaking the JSON API |
 //! | [`workload`] | synthetic request-trace generator (Poisson arrivals) |
 //!
@@ -166,11 +167,29 @@
 //! grep-gated off the serving files by `scripts/verify.sh`; q4
 //! projections cost ≈0.16× their f32 bytes (tracked in
 //! `BENCH_gptq.json`).
+//!
+//! ## Observability — telemetry that cannot perturb the engine
+//!
+//! Every worker owns an [`obs::Telemetry`]: a lock-free registry of
+//! atomic counters/gauges (a once-per-step mirror of
+//! `EngineMetrics`), six per-phase step-time histograms
+//! (plan/prefill/decode/sample/spill/evict, log₂-scale µs buckets), a
+//! bounded per-request trace ring, and a crash flight recorder the
+//! supervisor dumps on worker panic. All storage is preallocated at
+//! construction, so the zero-alloc steady-state contract extends to
+//! armed telemetry; spans are stamped at the coordinator layer only —
+//! never inside kernels (`verify.sh` grep-gates clock reads off the
+//! kernel hot files) — so bit-identity is untouched by construction.
+//! The server exposes it at `GET /metrics` (Prometheus text,
+//! per-worker labels), `GET /debug/trace/{id}` and
+//! `GET /debug/flight`. Full contract: ARCHITECTURE.md "Observability
+//! contract".
 
 pub mod attention;
 pub mod coordinator;
 pub mod kvcache;
 pub mod model;
+pub mod obs;
 pub mod quant;
 pub mod runtime;
 pub mod server;

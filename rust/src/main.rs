@@ -34,6 +34,11 @@
 //! KV (without it no tier is built and the serving path performs no
 //! file IO); `--spill-cap-bytes B` bounds its on-disk footprint
 //! (oldest segment reclaimed past the cap) — see [`spill_config`].
+//! Observability knobs (serve): `--flight-records N` sizes each
+//! worker's crash flight-recorder ring (default 128 recent step
+//! records, dumped to the log on a worker crash and served at
+//! `GET /debug/flight`); `/metrics` (Prometheus text) and
+//! `GET /debug/trace/{id}` need no flags.
 
 use opt_gptq::attention::{ScoreDomain, SparsityConfig};
 use opt_gptq::coordinator::{
@@ -337,6 +342,13 @@ fn cmd_serve(args: &Args) -> i32 {
             None => make_backend(&factory_args, &factory_cfg, seed + w as u64),
         },
     ));
+    // Flight-recorder depth is a startup knob (resizing clears the
+    // ring); the default keeps well above the 64-record post-mortem
+    // floor while staying a bounded, preallocated buffer.
+    let flight_records = args.get_usize("flight-records", 128);
+    if flight_records != opt_gptq::obs::DEFAULT_FLIGHT_RECORDS {
+        router.set_flight_records(flight_records.max(1));
+    }
     let port = args.get_usize("port", 8765);
     let addr = format!("127.0.0.1:{port}");
     let server = match Server::bind(router, &addr) {

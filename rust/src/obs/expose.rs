@@ -1,0 +1,198 @@
+//! Prometheus text exposition (format 0.0.4) over the telemetry
+//! registry.
+//!
+//! One `# HELP`/`# TYPE` pair per metric name, then one sample line per
+//! worker with a `worker="i"` label — the shape a federation scraper
+//! expects from a multi-worker process. Histograms render the full
+//! cumulative `_bucket{le=...}` ladder plus `_sum`/`_count`. Rendering
+//! reads the atomics lock-free (the rings are untouched); it allocates
+//! the output string, which is fine — scrapes run on the server thread,
+//! never the engine loop.
+
+use super::registry::{Histogram, MetricDef, Telemetry, ENGINE_STATS, HIST_BUCKETS};
+use crate::obs::StepPhase;
+
+/// Metric name prefix for every exported series.
+pub const PREFIX: &str = "opt_gptq";
+
+/// A router-side scalar series injected at scrape time (values the
+/// engine cannot see, e.g. supervisor health flags), one value per
+/// worker.
+pub struct ExtraMetric {
+    /// Static series definition (name suffix, help, kind).
+    pub def: MetricDef,
+    /// `(worker index, value)` samples.
+    pub values: Vec<(usize, u64)>,
+}
+
+/// Render the full exposition for a set of workers plus any
+/// router-side extras. Worker entries are `(worker index, telemetry)`.
+pub fn render_prometheus(workers: &[(usize, &Telemetry)], extras: &[ExtraMetric]) -> String {
+    // Rough sizing: scalar table + 6 histograms × 30 lines, per worker.
+    let mut out = String::with_capacity(4096 + workers.len() * 16 * 1024);
+    for (row, def) in ENGINE_STATS.iter().enumerate() {
+        header(&mut out, def);
+        for &(w, t) in workers {
+            sample(&mut out, def.name, w, t.get_by_index(row));
+        }
+    }
+    for phase in StepPhase::ALL {
+        let name = format!("step_time_{}_us", phase.as_str());
+        out.push_str(&format!(
+            "# HELP {PREFIX}_{name} Wall time of the {} phase per engine step, microseconds.\n",
+            phase.as_str()
+        ));
+        out.push_str(&format!("# TYPE {PREFIX}_{name} histogram\n"));
+        for &(w, t) in workers {
+            histogram(&mut out, &name, w, t.phase(phase));
+        }
+    }
+    for extra in extras {
+        header(&mut out, &extra.def);
+        for &(w, v) in &extra.values {
+            sample(&mut out, extra.def.name, w, v);
+        }
+    }
+    out
+}
+
+fn header(out: &mut String, def: &MetricDef) {
+    out.push_str(&format!("# HELP {PREFIX}_{} {}\n", def.name, def.help));
+    out.push_str(&format!("# TYPE {PREFIX}_{} {}\n", def.name, def.kind.as_str()));
+}
+
+fn sample(out: &mut String, name: &str, worker: usize, v: u64) {
+    out.push_str(&format!("{PREFIX}_{name}{{worker=\"{worker}\"}} {v}\n"));
+}
+
+fn histogram(out: &mut String, name: &str, worker: usize, h: &Histogram) {
+    let mut cum = 0u64;
+    for i in 0..HIST_BUCKETS {
+        cum += h.bucket_count(i);
+        match Histogram::bucket_bound_us(i) {
+            Some(b) => out.push_str(&format!(
+                "{PREFIX}_{name}_bucket{{worker=\"{worker}\",le=\"{b}\"}} {cum}\n"
+            )),
+            None => out.push_str(&format!(
+                "{PREFIX}_{name}_bucket{{worker=\"{worker}\",le=\"+Inf\"}} {cum}\n"
+            )),
+        }
+    }
+    out.push_str(&format!("{PREFIX}_{name}_sum{{worker=\"{worker}\"}} {}\n", h.sum_us()));
+    out.push_str(&format!("{PREFIX}_{name}_count{{worker=\"{worker}\"}} {}\n", h.count()));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{EngineStat, MetricKind};
+
+    /// Minimal grammar check for one sample line:
+    /// `name{label="v",...} value` with a bare-integer value.
+    fn is_sample_line(line: &str) -> bool {
+        let Some(brace) = line.find('{') else {
+            // Unlabeled sample: `name value`.
+            let mut parts = line.split_whitespace();
+            let (Some(name), Some(value), None) = (parts.next(), parts.next(), parts.next())
+            else {
+                return false;
+            };
+            return is_metric_name(name) && value.parse::<f64>().is_ok();
+        };
+        let name = &line[..brace];
+        let Some(close) = line.rfind('}') else { return false };
+        let labels = &line[brace + 1..close];
+        let value = line[close + 1..].trim();
+        is_metric_name(name)
+            && value.parse::<f64>().is_ok()
+            && labels.split(',').all(|kv| {
+                let Some((k, v)) = kv.split_once('=') else { return false };
+                !k.is_empty()
+                    && k.chars().all(|c| c.is_ascii_alphanumeric() || c == '_')
+                    && v.starts_with('"')
+                    && v.ends_with('"')
+            })
+    }
+
+    fn is_metric_name(name: &str) -> bool {
+        !name.is_empty()
+            && !name.starts_with(|c: char| c.is_ascii_digit())
+            && name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+    }
+
+    #[test]
+    fn exposition_grammar_holds_on_every_line() {
+        let t = Telemetry::new();
+        t.set(EngineStat::MixedSteps, 12);
+        t.phase(StepPhase::Plan).observe_us(100);
+        let extras = [ExtraMetric {
+            def: MetricDef {
+                name: "worker_healthy",
+                help: "1 while the worker accepts requests.",
+                kind: MetricKind::Gauge,
+            },
+            values: vec![(0, 1)],
+        }];
+        let text = render_prometheus(&[(0, &t)], &extras);
+        assert!(text.ends_with('\n'), "exposition must end with a newline");
+        for line in text.lines() {
+            if let Some(rest) = line.strip_prefix("# HELP ") {
+                assert!(rest.split(' ').next().unwrap().starts_with(PREFIX), "{line}");
+            } else if let Some(rest) = line.strip_prefix("# TYPE ") {
+                let mut it = rest.split(' ');
+                let name = it.next().unwrap();
+                let kind = it.next().unwrap();
+                assert!(name.starts_with(PREFIX), "{line}");
+                assert!(
+                    matches!(kind, "counter" | "gauge" | "histogram"),
+                    "bad TYPE keyword: {line}"
+                );
+            } else {
+                assert!(is_sample_line(line), "malformed sample line: {line}");
+            }
+        }
+    }
+
+    #[test]
+    fn counter_vs_gauge_typing_matches_table() {
+        let t = Telemetry::new();
+        let text = render_prometheus(&[(0, &t)], &[]);
+        assert!(text.contains("# TYPE opt_gptq_mixed_steps counter"));
+        assert!(text.contains("# TYPE opt_gptq_shed_count counter"));
+        assert!(text.contains("# TYPE opt_gptq_concurrency_limit gauge"));
+        assert!(text.contains("# TYPE opt_gptq_queue_depth gauge"));
+        assert!(text.contains("# TYPE opt_gptq_peak_blocks gauge"));
+        assert!(text.contains("# TYPE opt_gptq_step_time_plan_us histogram"));
+    }
+
+    #[test]
+    fn per_worker_labels_and_values() {
+        let a = Telemetry::new();
+        let b = Telemetry::new();
+        a.set(EngineStat::ShedCount, 3);
+        b.set(EngineStat::ShedCount, 9);
+        let text = render_prometheus(&[(0, &a), (1, &b)], &[]);
+        assert!(text.contains("opt_gptq_shed_count{worker=\"0\"} 3\n"));
+        assert!(text.contains("opt_gptq_shed_count{worker=\"1\"} 9\n"));
+        // HELP/TYPE emitted once per metric name, not once per worker.
+        assert_eq!(text.matches("# TYPE opt_gptq_shed_count ").count(), 1);
+    }
+
+    #[test]
+    fn histogram_ladder_is_cumulative_and_complete() {
+        let t = Telemetry::new();
+        t.phase(StepPhase::Decode).observe_us(3); // bucket le="4"
+        t.phase(StepPhase::Decode).observe_us(3);
+        t.phase(StepPhase::Decode).observe_us(1 << 30); // +Inf bucket
+        let text = render_prometheus(&[(0, &t)], &[]);
+        assert!(text.contains("opt_gptq_step_time_decode_us_bucket{worker=\"0\",le=\"2\"} 0\n"));
+        assert!(text.contains("opt_gptq_step_time_decode_us_bucket{worker=\"0\",le=\"4\"} 2\n"));
+        assert!(text.contains("opt_gptq_step_time_decode_us_bucket{worker=\"0\",le=\"+Inf\"} 3\n"));
+        assert!(text.contains("opt_gptq_step_time_decode_us_count{worker=\"0\"} 3\n"));
+        let n_buckets = text
+            .lines()
+            .filter(|l| l.starts_with("opt_gptq_step_time_decode_us_bucket{worker=\"0\""))
+            .count();
+        assert_eq!(n_buckets, HIST_BUCKETS, "full le ladder rendered");
+    }
+}

@@ -1,0 +1,221 @@
+//! Crash flight recorder: a fixed ring of the last N engine step
+//! records — batch composition, budget use, queue depth, AIMD limit,
+//! pool occupancy — written once per step and dumped to the log by the
+//! worker supervisor when an engine crashes.
+//!
+//! The point is post-mortem context: a panic inside `forward_step`
+//! tells you *where* it died, the flight ring tells you *what the
+//! engine was doing* for the last N steps leading up to it (was the
+//! pool pinned? was a preemption storm running? had the AIMD limit
+//! collapsed?). The ring is preallocated, bounded, and overwrites
+//! oldest-first, so a long-lived engine's memory never grows; the
+//! `Arc<Telemetry>` holding it is created by the router *outside* the
+//! worker thread, so it survives the engine's panic unwind.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Default flight-ring capacity (step records). The acceptance floor
+/// is 64; the default doubles it so a crash dump covers a couple of
+/// preemption cycles.
+pub const DEFAULT_FLIGHT_RECORDS: usize = 128;
+
+/// One engine step, compressed to the numbers a post-mortem needs.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StepRecord {
+    /// Monotonic step counter for this engine incarnation.
+    pub step: u64,
+    /// Engine-clock timestamp, microseconds since engine start.
+    pub t_us: u64,
+    /// Prefill chunks executed this step.
+    pub prefill_chunks: u32,
+    /// Prompt tokens those chunks covered.
+    pub prefill_tokens: u32,
+    /// Decode rows executed this step.
+    pub decode_batch: u32,
+    /// The step token budget the plan was sized against.
+    pub budget_tokens: u32,
+    /// Sequences waiting for admission after this step.
+    pub waiting: u32,
+    /// Sequences in the running set after this step.
+    pub running: u32,
+    /// Admission-queue depth (router-side gauge at step time).
+    pub queue_depth: u32,
+    /// AIMD concurrency limit at step time.
+    pub aimd_limit: u32,
+    /// KV blocks in use after this step.
+    pub used_blocks: u32,
+    /// KV blocks free after this step.
+    pub free_blocks: u32,
+}
+
+struct FlightInner {
+    slots: Vec<StepRecord>,
+    /// Index of the oldest slot once the ring is full.
+    head: usize,
+    cap: usize,
+    total: u64,
+}
+
+/// Bounded ring of [`StepRecord`]s with a crash-dump hook.
+#[derive(Debug)]
+pub struct FlightRecorder {
+    inner: Mutex<FlightInner>,
+    dumps: AtomicU64,
+}
+
+impl std::fmt::Debug for FlightInner {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("FlightInner")
+            .field("len", &self.slots.len())
+            .field("cap", &self.cap)
+            .field("total", &self.total)
+            .finish()
+    }
+}
+
+impl FlightRecorder {
+    /// Ring with room for `cap ≥ 1` records, fully preallocated.
+    pub fn new(cap: usize) -> Self {
+        let cap = cap.max(1);
+        FlightRecorder {
+            inner: Mutex::new(FlightInner {
+                slots: Vec::with_capacity(cap),
+                head: 0,
+                cap,
+                total: 0,
+            }),
+            dumps: AtomicU64::new(0),
+        }
+    }
+
+    /// Resize the ring (startup configuration — `--flight-records`).
+    /// Clears retained records; the new capacity is preallocated here
+    /// so the steady state stays allocation-free.
+    pub fn set_capacity(&self, cap: usize) {
+        let cap = cap.max(1);
+        let mut g = self.inner.lock().unwrap();
+        g.slots = Vec::with_capacity(cap);
+        g.head = 0;
+        g.cap = cap;
+    }
+
+    /// Current ring capacity in records.
+    pub fn capacity(&self) -> usize {
+        self.inner.lock().unwrap().cap
+    }
+
+    /// Records ever written (including overwritten ones).
+    pub fn total(&self) -> u64 {
+        self.inner.lock().unwrap().total
+    }
+
+    /// Times [`dump_to_log`](Self::dump_to_log) ran (crash-dump count).
+    pub fn dumps(&self) -> u64 {
+        self.dumps.load(Ordering::Relaxed)
+    }
+
+    /// Record one step, evicting the oldest when full. Never allocates
+    /// once constructed.
+    pub fn record(&self, r: StepRecord) {
+        let mut g = self.inner.lock().unwrap();
+        if g.slots.len() < g.cap {
+            g.slots.push(r);
+        } else {
+            let h = g.head;
+            g.slots[h] = r;
+            g.head = (h + 1) % g.cap;
+        }
+        g.total += 1;
+    }
+
+    /// Retained records, oldest → newest. Allocates the result —
+    /// debug/dump path only.
+    pub fn snapshot(&self) -> Vec<StepRecord> {
+        let g = self.inner.lock().unwrap();
+        let n = g.slots.len();
+        (0..n).map(|i| g.slots[(g.head + i) % n.max(1)]).collect()
+    }
+
+    /// Dump the retained ring to the log at `warn` — the supervisor
+    /// calls this from the crash branch, so the last N steps of engine
+    /// state land next to the panic report.
+    pub fn dump_to_log(&self, worker: usize) {
+        let records = self.snapshot();
+        self.dumps.fetch_add(1, Ordering::Relaxed);
+        log::warn!(
+            "engine-worker-{worker}: flight recorder dump — {} step record(s), {} written total",
+            records.len(),
+            self.total(),
+        );
+        for r in &records {
+            log::warn!(
+                "engine-worker-{worker}: flight step={} t_us={} prefill={}ch/{}tok \
+                 decode={} budget={} wait={} run={} queue={} limit={} blocks={}used/{}free",
+                r.step,
+                r.t_us,
+                r.prefill_chunks,
+                r.prefill_tokens,
+                r.decode_batch,
+                r.budget_tokens,
+                r.waiting,
+                r.running,
+                r.queue_depth,
+                r.aimd_limit,
+                r.used_blocks,
+                r.free_blocks,
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(step: u64) -> StepRecord {
+        StepRecord { step, decode_batch: 1, ..StepRecord::default() }
+    }
+
+    #[test]
+    fn ring_wraps_bounded() {
+        let f = FlightRecorder::new(64);
+        for s in 0..200u64 {
+            f.record(rec(s));
+        }
+        let snap = f.snapshot();
+        assert_eq!(snap.len(), 64, "ring stays bounded at capacity");
+        // Oldest 136 evicted: survivors are exactly steps 136..200 in order.
+        assert_eq!(snap.first().unwrap().step, 136);
+        assert_eq!(snap.last().unwrap().step, 199);
+        for w in snap.windows(2) {
+            assert_eq!(w[1].step, w[0].step + 1, "chronological order");
+        }
+        assert_eq!(f.total(), 200);
+    }
+
+    #[test]
+    fn set_capacity_resizes_and_clears() {
+        let f = FlightRecorder::new(4);
+        for s in 0..10u64 {
+            f.record(rec(s));
+        }
+        f.set_capacity(2);
+        assert_eq!(f.capacity(), 2);
+        assert!(f.snapshot().is_empty());
+        f.record(rec(1));
+        f.record(rec(2));
+        f.record(rec(3));
+        let snap = f.snapshot();
+        assert_eq!(snap.iter().map(|r| r.step).collect::<Vec<_>>(), vec![2, 3]);
+    }
+
+    #[test]
+    fn dump_counts() {
+        let f = FlightRecorder::new(8);
+        f.record(rec(1));
+        assert_eq!(f.dumps(), 0);
+        f.dump_to_log(0);
+        assert_eq!(f.dumps(), 1);
+    }
+}

@@ -1,0 +1,39 @@
+//! Telemetry subsystem: the layer every serving PR reads its own
+//! behavior through.
+//!
+//! Four pieces, all bounded and preallocated:
+//!
+//! * [`registry`] — lock-free atomic counters/gauges ([`Telemetry`])
+//!   plus fixed-bucket log₂-scale latency [`Histogram`]s, mirrored from
+//!   `EngineMetrics` once per step and stamped with per-phase
+//!   [`StepPhase`] spans by the engine loop.
+//! * [`trace`] — per-request [`TraceRing`]: bounded span records
+//!   (enqueue → admit → chunks → first token → preemptions → spill
+//!   restores → finish), served at `GET /debug/trace/{id}`.
+//! * [`flight`] — the crash [`FlightRecorder`]: a fixed ring of recent
+//!   step records the supervisor dumps to the log on a worker crash,
+//!   served at `GET /debug/flight`.
+//! * [`expose`] — Prometheus text exposition for `GET /metrics`, with
+//!   per-worker labels.
+//!
+//! **Placement contract.** Spans are stamped at the coordinator layer
+//! only — around the scheduler plan, the single `forward_step` call,
+//! sampling, spill offers and the eviction sweep — never inside the
+//! attention/matmul kernels (`verify.sh` grep-gates clock reads off the
+//! kernel hot-path files). Timing therefore cannot perturb kernel
+//! control flow, and the bit-identity contracts hold with telemetry
+//! armed by construction. Recording is allocation-free once the rings
+//! are built (`tests/alloc_steadystate.rs` audits this with the
+//! counting allocator).
+
+pub mod expose;
+pub mod flight;
+pub mod registry;
+pub mod trace;
+
+pub use expose::{render_prometheus, ExtraMetric, PREFIX};
+pub use flight::{FlightRecorder, StepRecord, DEFAULT_FLIGHT_RECORDS};
+pub use registry::{
+    EngineStat, Histogram, MetricDef, MetricKind, StepPhase, Telemetry, ENGINE_STATS, HIST_BUCKETS,
+};
+pub use trace::{TraceEvent, TraceKind, TraceRing, DEFAULT_TRACE_EVENTS};

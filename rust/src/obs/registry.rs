@@ -1,0 +1,571 @@
+//! Lock-free metrics registry: atomic counters/gauges plus fixed-bucket
+//! log₂-scale latency histograms.
+//!
+//! Everything here is sized and allocated at construction
+//! ([`Telemetry::new`]); recording is a handful of `Relaxed` atomic adds
+//! with no locks and no allocation, so arming telemetry cannot perturb
+//! the engine's zero-alloc steady-state contract (audited by
+//! `tests/alloc_steadystate.rs`). Reads are equally lock-free — a
+//! `/metrics` scrape never stalls a worker.
+//!
+//! The registry is deliberately *mirror-shaped*: the engine keeps
+//! accumulating into its plain-field [`EngineMetrics`] exactly as
+//! before (single-threaded, no atomics on the hot path beyond what the
+//! mirror costs once per step), and [`EngineMetrics::mirror_into`]
+//! copies every counter into this registry's atomics at the end of each
+//! step. The server thread then reads the atomics without touching the
+//! engine. One mirror per step, not one atomic RMW per event.
+//!
+//! [`EngineMetrics`]: crate::coordinator::EngineMetrics
+//! [`EngineMetrics::mirror_into`]: crate::coordinator::EngineMetrics::mirror_into
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use super::flight::{FlightRecorder, DEFAULT_FLIGHT_RECORDS};
+use super::trace::{TraceRing, DEFAULT_TRACE_EVENTS};
+
+/// Metric kind for the Prometheus exposition (`# TYPE` line).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MetricKind {
+    /// Monotonically non-decreasing over an engine incarnation.
+    Counter,
+    /// Instantaneous level; may go down.
+    Gauge,
+}
+
+impl MetricKind {
+    /// Prometheus `# TYPE` keyword.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            MetricKind::Counter => "counter",
+            MetricKind::Gauge => "gauge",
+        }
+    }
+}
+
+/// Static description of one exported scalar series.
+#[derive(Debug, Clone, Copy)]
+pub struct MetricDef {
+    /// Metric name *suffix* (the exposition prepends `opt_gptq_`).
+    pub name: &'static str,
+    /// One-line `# HELP` text.
+    pub help: &'static str,
+    /// Counter vs gauge typing.
+    pub kind: MetricKind,
+}
+
+/// Every scalar the engine mirrors into the registry, one enum variant
+/// per [`ENGINE_STATS`] row (the discriminant is the row index).
+///
+/// The list covers every `EngineMetrics` counter — scheduling, sparse
+/// attention, overload control, and the spill tier — plus the
+/// router-side queue gauges the worker loop stamps in directly.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(usize)]
+pub enum EngineStat {
+    /// Requests finished (≡ `RunReport` record count).
+    RequestsCompleted = 0,
+    /// Engine steps that executed any work.
+    MixedSteps,
+    /// Prefill chunks executed (a prompt spans several).
+    PrefillChunks,
+    /// Prompt tokens processed through prefill chunks.
+    PrefillChunkTokens,
+    /// Steps that decoded at least one token.
+    DecodeSteps,
+    /// Decode tokens generated.
+    DecodeBatchTokens,
+    /// Decode tokens after bucket padding (batch-shape waste metric).
+    DecodeBucketTokens,
+    /// Steps where decoders existed but none could run.
+    DecodeStallSteps,
+    /// Inter-token gaps observed (windowed ITL sample count).
+    InterTokenCount,
+    /// Sum of inter-token gaps, microseconds.
+    InterTokenSumUs,
+    /// Sequences preempted under memory pressure.
+    Preemptions,
+    /// High-water mark of KV blocks in use.
+    PeakBlocks,
+    /// Prompt tokens served from the RAM prefix cache.
+    PrefixHitTokens,
+    /// KV tiles dequantized during prefill walks.
+    PrefillDequantTiles,
+    /// Bytes moved by dense `KvStore::gather` dumps (≈ 0 in serving).
+    GatherBytes,
+    /// KV tiles skipped by the score-bound sparse test.
+    SkippedTiles,
+    /// KV blocks evicted by the sliding-window policy.
+    EvictedBlocks,
+    /// Requests shed by admission control (queue full).
+    ShedCount,
+    /// Requests shed because their deadline passed while queued.
+    DeadlineMissCount,
+    /// Current AIMD concurrency limit.
+    ConcurrencyLimit,
+    /// Worker crash-restarts performed by the supervisor.
+    WorkerRestarts,
+    /// Prompt tokens restored from the disk spill tier.
+    SpillHitTokens,
+    /// Bytes appended to spill segments.
+    SpillBytes,
+    /// Spill records quarantined by checksum failures.
+    SpillCorruptRecords,
+    /// Restorable records currently indexed by the spill tier.
+    SpillRecords,
+    /// Bytes currently committed across spill segments.
+    SpillDiskBytes,
+    /// Live spill IO failures (reads + writes).
+    SpillIoFailures,
+    /// Requests waiting in the admission queue (router-side gauge).
+    QueueDepth,
+    /// Requests admitted into the engine and not yet answered.
+    InflightRequests,
+}
+
+/// Exposition metadata for every [`EngineStat`], indexed by
+/// discriminant. Order must match the enum exactly.
+pub const ENGINE_STATS: &[MetricDef] = &[
+    MetricDef {
+        name: "requests_completed",
+        help: "Requests finished by this worker's engine.",
+        kind: MetricKind::Counter,
+    },
+    MetricDef {
+        name: "mixed_steps",
+        help: "Engine steps that executed any work.",
+        kind: MetricKind::Counter,
+    },
+    MetricDef {
+        name: "prefill_chunks",
+        help: "Prefill chunks executed (a prompt spans several).",
+        kind: MetricKind::Counter,
+    },
+    MetricDef {
+        name: "prefill_chunk_tokens",
+        help: "Prompt tokens processed through prefill chunks.",
+        kind: MetricKind::Counter,
+    },
+    MetricDef {
+        name: "decode_steps",
+        help: "Steps that decoded at least one token.",
+        kind: MetricKind::Counter,
+    },
+    MetricDef {
+        name: "decode_batch_tokens",
+        help: "Decode tokens generated.",
+        kind: MetricKind::Counter,
+    },
+    MetricDef {
+        name: "decode_bucket_tokens",
+        help: "Decode tokens after bucket padding (batch-shape waste).",
+        kind: MetricKind::Counter,
+    },
+    MetricDef {
+        name: "decode_stall_steps",
+        help: "Steps where decoders existed but none could run.",
+        kind: MetricKind::Counter,
+    },
+    MetricDef {
+        name: "inter_token_count",
+        help: "Inter-token gaps observed (windowed ITL samples).",
+        kind: MetricKind::Counter,
+    },
+    MetricDef {
+        name: "inter_token_sum_us",
+        help: "Sum of observed inter-token gaps in microseconds.",
+        kind: MetricKind::Counter,
+    },
+    MetricDef {
+        name: "preemptions",
+        help: "Sequences preempted under memory pressure.",
+        kind: MetricKind::Counter,
+    },
+    MetricDef {
+        name: "peak_blocks",
+        help: "High-water mark of KV blocks in use.",
+        kind: MetricKind::Gauge,
+    },
+    MetricDef {
+        name: "prefix_hit_tokens",
+        help: "Prompt tokens served from the RAM prefix cache.",
+        kind: MetricKind::Counter,
+    },
+    MetricDef {
+        name: "prefill_dequant_tiles",
+        help: "KV tiles dequantized during prefill walks.",
+        kind: MetricKind::Counter,
+    },
+    MetricDef {
+        name: "gather_bytes",
+        help: "Bytes moved by dense KvStore::gather dumps (~0 serving).",
+        kind: MetricKind::Counter,
+    },
+    MetricDef {
+        name: "skipped_tiles",
+        help: "KV tiles skipped by the score-bound sparse test.",
+        kind: MetricKind::Counter,
+    },
+    MetricDef {
+        name: "evicted_blocks",
+        help: "KV blocks evicted by the sliding-window policy.",
+        kind: MetricKind::Counter,
+    },
+    MetricDef {
+        name: "shed_count",
+        help: "Requests shed by admission control (queue full).",
+        kind: MetricKind::Counter,
+    },
+    MetricDef {
+        name: "deadline_miss_count",
+        help: "Requests shed because their deadline passed while queued.",
+        kind: MetricKind::Counter,
+    },
+    MetricDef {
+        name: "concurrency_limit",
+        help: "Current AIMD concurrency limit.",
+        kind: MetricKind::Gauge,
+    },
+    MetricDef {
+        name: "worker_restarts",
+        help: "Crash-restarts performed by the supervisor.",
+        kind: MetricKind::Counter,
+    },
+    MetricDef {
+        name: "spill_hit_tokens",
+        help: "Prompt tokens restored from the disk spill tier.",
+        kind: MetricKind::Counter,
+    },
+    MetricDef {
+        name: "spill_bytes",
+        help: "Bytes appended to spill segments.",
+        kind: MetricKind::Counter,
+    },
+    MetricDef {
+        name: "spill_corrupt_records",
+        help: "Spill records quarantined by checksum failures.",
+        kind: MetricKind::Counter,
+    },
+    MetricDef {
+        name: "spill_records",
+        help: "Restorable records currently indexed by the spill tier.",
+        kind: MetricKind::Gauge,
+    },
+    MetricDef {
+        name: "spill_disk_bytes",
+        help: "Bytes currently committed across spill segments.",
+        kind: MetricKind::Gauge,
+    },
+    MetricDef {
+        name: "spill_io_failures",
+        help: "Live spill IO failures (reads + writes).",
+        kind: MetricKind::Counter,
+    },
+    MetricDef {
+        name: "queue_depth",
+        help: "Requests waiting in the admission queue.",
+        kind: MetricKind::Gauge,
+    },
+    MetricDef {
+        name: "inflight_requests",
+        help: "Requests admitted into the engine and not yet answered.",
+        kind: MetricKind::Gauge,
+    },
+];
+
+/// The step phases the engine stamps into latency histograms — spans
+/// taken at the **coordinator layer only**. Kernels are never timed
+/// from inside (a clock read in the attention/matmul inner loops would
+/// cost every tile and tempt data-dependent control flow, so the
+/// bit-identity argument stays structural; `verify.sh` grep-gates
+/// `Instant::now` off the kernel hot-path files).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(usize)]
+pub enum StepPhase {
+    /// Scheduler planning (includes prefix-cache lookups and any disk
+    /// spill restores performed at admission).
+    Plan = 0,
+    /// `forward_step` wall time for steps carrying ≥ 1 prefill chunk
+    /// (the chunk dominates the step's cost; decode rows ride along).
+    Prefill,
+    /// `forward_step` wall time for decode-only steps — the
+    /// inter-token-latency-critical number.
+    Decode,
+    /// Post-forward sampling, bookkeeping and request finish handling.
+    Sample,
+    /// Prefix-cache eviction offers into the disk spill tier (write
+    /// side; only stamped when a tier is armed).
+    Spill,
+    /// The sliding-window KV eviction sweep.
+    Evict,
+}
+
+impl StepPhase {
+    /// Every phase, in discriminant order.
+    pub const ALL: [StepPhase; 6] = [
+        StepPhase::Plan,
+        StepPhase::Prefill,
+        StepPhase::Decode,
+        StepPhase::Sample,
+        StepPhase::Spill,
+        StepPhase::Evict,
+    ];
+
+    /// Stable lowercase name used in metric names and docs.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            StepPhase::Plan => "plan",
+            StepPhase::Prefill => "prefill",
+            StepPhase::Decode => "decode",
+            StepPhase::Sample => "sample",
+            StepPhase::Spill => "spill",
+            StepPhase::Evict => "evict",
+        }
+    }
+}
+
+/// Number of histogram buckets: finite upper bounds 2⁰..2²⁶ µs
+/// (1 µs .. ~67 s) plus a `+Inf` overflow bucket.
+pub const HIST_BUCKETS: usize = 28;
+
+/// Fixed-bucket log₂-scale latency histogram over microseconds.
+///
+/// Bucket `i < 27` counts samples `v` with `v ≤ 2^i` µs (and, for
+/// `i > 0`, `v > 2^(i-1)`); the last bucket is the `+Inf` overflow.
+/// Storage is a fixed array of atomics — recording is two `Relaxed`
+/// adds and one `fetch_add` on the bucket, allocation-free and
+/// wait-free.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    count: AtomicU64,
+    sum_us: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    /// An empty histogram (all storage inline, no heap).
+    pub fn new() -> Self {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+        }
+    }
+
+    /// Bucket index for a sample of `us` microseconds:
+    /// `ceil(log2(us))` clamped to the `+Inf` bucket (0 and 1 µs both
+    /// land in bucket 0, bound 1 µs).
+    pub fn bucket_index(us: u64) -> usize {
+        if us <= 1 {
+            0
+        } else {
+            let idx = (64 - (us - 1).leading_zeros()) as usize;
+            idx.min(HIST_BUCKETS - 1)
+        }
+    }
+
+    /// Inclusive upper bound of bucket `i` in µs; `None` for `+Inf`.
+    pub fn bucket_bound_us(i: usize) -> Option<u64> {
+        if i + 1 < HIST_BUCKETS {
+            Some(1u64 << i)
+        } else {
+            None
+        }
+    }
+
+    /// Record one sample.
+    pub fn observe_us(&self, us: u64) {
+        self.buckets[Self::bucket_index(us)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+    }
+
+    /// Record one span duration (saturating at u64 µs).
+    pub fn observe(&self, d: Duration) {
+        self.observe_us(d.as_micros().min(u64::MAX as u128) as u64);
+    }
+
+    /// Total samples recorded.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Sum of all samples, microseconds.
+    pub fn sum_us(&self) -> u64 {
+        self.sum_us.load(Ordering::Relaxed)
+    }
+
+    /// Raw (non-cumulative) count in bucket `i`.
+    pub fn bucket_count(&self, i: usize) -> u64 {
+        self.buckets[i].load(Ordering::Relaxed)
+    }
+
+    /// Upper-bound estimate of the `q`-quantile (`0 < q ≤ 1`): the
+    /// bound of the first bucket whose cumulative count reaches
+    /// `q · count`. Returns 0 for an empty histogram; samples in the
+    /// `+Inf` bucket report the largest finite bound.
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let rank = ((q * total as f64).ceil() as u64).clamp(1, total);
+        let mut cum = 0u64;
+        for i in 0..HIST_BUCKETS {
+            cum += self.bucket_count(i);
+            if cum >= rank {
+                return Self::bucket_bound_us(i)
+                    .unwrap_or_else(|| Self::bucket_bound_us(HIST_BUCKETS - 2).unwrap());
+            }
+        }
+        Self::bucket_bound_us(HIST_BUCKETS - 2).unwrap()
+    }
+}
+
+/// One worker's complete telemetry surface: the scalar mirror of
+/// `EngineMetrics`, six per-phase step-time histograms, the crash
+/// flight recorder, and the per-request trace ring.
+///
+/// Created once (per worker) and shared by `Arc`: the engine stamps it
+/// from the worker thread, the supervisor dumps the flight ring on a
+/// crash (the `Arc` outlives the panicked engine), and the HTTP server
+/// scrapes it lock-free. All storage is preallocated here — nothing
+/// grows afterwards.
+#[derive(Debug)]
+pub struct Telemetry {
+    engine: Vec<AtomicU64>,
+    step_time: [Histogram; StepPhase::ALL.len()],
+    /// Bounded ring of recent step records, dumped on worker crash.
+    pub flight: FlightRecorder,
+    /// Bounded ring of per-request span records.
+    pub traces: TraceRing,
+}
+
+impl Default for Telemetry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Telemetry {
+    /// Registry with the default flight/trace ring capacities.
+    pub fn new() -> Self {
+        Self::with_capacities(DEFAULT_FLIGHT_RECORDS, DEFAULT_TRACE_EVENTS)
+    }
+
+    /// Registry with explicit ring capacities (both ≥ 1).
+    pub fn with_capacities(flight_records: usize, trace_events: usize) -> Self {
+        Telemetry {
+            engine: (0..ENGINE_STATS.len()).map(|_| AtomicU64::new(0)).collect(),
+            step_time: std::array::from_fn(|_| Histogram::new()),
+            flight: FlightRecorder::new(flight_records),
+            traces: TraceRing::new(trace_events),
+        }
+    }
+
+    /// Set a mirrored scalar (last-write-wins; the engine mirrors once
+    /// per step, the router stamps the queue gauges per iteration).
+    pub fn set(&self, s: EngineStat, v: u64) {
+        self.engine[s as usize].store(v, Ordering::Relaxed);
+    }
+
+    /// Read a mirrored scalar.
+    pub fn get(&self, s: EngineStat) -> u64 {
+        self.engine[s as usize].load(Ordering::Relaxed)
+    }
+
+    /// Read a mirrored scalar by [`ENGINE_STATS`] row index.
+    pub fn get_by_index(&self, i: usize) -> u64 {
+        self.engine[i].load(Ordering::Relaxed)
+    }
+
+    /// The step-time histogram for one phase.
+    pub fn phase(&self, p: StepPhase) -> &Histogram {
+        &self.step_time[p as usize]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_index_boundaries() {
+        assert_eq!(Histogram::bucket_index(0), 0);
+        assert_eq!(Histogram::bucket_index(1), 0);
+        assert_eq!(Histogram::bucket_index(2), 1);
+        assert_eq!(Histogram::bucket_index(3), 2);
+        assert_eq!(Histogram::bucket_index(4), 2);
+        assert_eq!(Histogram::bucket_index(5), 3);
+        // Exactly on a power of two stays in that bucket (inclusive
+        // upper bounds).
+        for i in 1..(HIST_BUCKETS - 1) {
+            let bound = 1u64 << i;
+            assert_eq!(Histogram::bucket_index(bound), i, "bound 2^{i}");
+            assert_eq!(Histogram::bucket_index(bound + 1), i + 1, "2^{i}+1");
+        }
+        // Past the largest finite bound everything overflows to +Inf.
+        assert_eq!(Histogram::bucket_index(u64::MAX), HIST_BUCKETS - 1);
+    }
+
+    #[test]
+    fn histogram_counts_and_sum() {
+        let h = Histogram::new();
+        h.observe_us(1);
+        h.observe_us(3);
+        h.observe_us(1000);
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.sum_us(), 1004);
+        assert_eq!(h.bucket_count(0), 1);
+        assert_eq!(h.bucket_count(2), 1);
+        assert_eq!(h.bucket_count(10), 1); // 1000 ≤ 1024 = 2^10
+    }
+
+    #[test]
+    fn quantile_reports_bucket_upper_bound() {
+        let h = Histogram::new();
+        assert_eq!(h.quantile_us(0.5), 0); // empty
+        for _ in 0..9 {
+            h.observe_us(10); // bucket 4 (bound 16)
+        }
+        h.observe_us(100_000); // bucket 17 (bound 131072)
+        assert_eq!(h.quantile_us(0.5), 16);
+        assert_eq!(h.quantile_us(0.9), 16);
+        assert_eq!(h.quantile_us(1.0), 131_072);
+    }
+
+    #[test]
+    fn engine_stat_table_matches_enum() {
+        // The enum discriminants index the metadata table; the last
+        // variant must land on the last row.
+        assert_eq!(EngineStat::InflightRequests as usize, ENGINE_STATS.len() - 1);
+        let t = Telemetry::new();
+        t.set(EngineStat::ShedCount, 7);
+        assert_eq!(t.get(EngineStat::ShedCount), 7);
+        assert_eq!(t.get_by_index(EngineStat::ShedCount as usize), 7);
+        // Names are unique (duplicate exposition series would be
+        // rejected by a Prometheus scraper).
+        for (i, a) in ENGINE_STATS.iter().enumerate() {
+            for b in ENGINE_STATS.iter().skip(i + 1) {
+                assert_ne!(a.name, b.name);
+            }
+        }
+    }
+
+    #[test]
+    fn phase_histograms_are_independent() {
+        let t = Telemetry::new();
+        t.phase(StepPhase::Plan).observe_us(5);
+        t.phase(StepPhase::Decode).observe_us(50);
+        assert_eq!(t.phase(StepPhase::Plan).count(), 1);
+        assert_eq!(t.phase(StepPhase::Decode).count(), 1);
+        assert_eq!(t.phase(StepPhase::Sample).count(), 0);
+    }
+}

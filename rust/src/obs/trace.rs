@@ -1,0 +1,188 @@
+//! Per-request trace rings: bounded span records covering a request's
+//! life (enqueue → admit → prefill chunks → first token → preemptions →
+//! spill restores → finish).
+//!
+//! The ring is a fixed slot array preallocated at construction; a
+//! record is one short `Mutex` critical section writing a `Copy` struct
+//! into a slot (no allocation once the ring reaches capacity, and none
+//! before it either — the backing `Vec` is reserved up front). The
+//! lock-free guarantee of the registry does not extend here, but the
+//! critical section is a couple of stores and the ring is only written
+//! by the owning worker thread — readers are the debug endpoints.
+//!
+//! Retention is by eviction, not by request: the ring keeps the most
+//! recent `capacity` events across *all* requests, so a long-lived
+//! request's earliest spans may have been overwritten by the time it is
+//! queried. That is the deal a bounded ring makes; size it with
+//! `Telemetry::with_capacities` if the default window is too short.
+
+use std::sync::Mutex;
+
+/// Default per-worker trace ring capacity (events, not requests).
+pub const DEFAULT_TRACE_EVENTS: usize = 4096;
+
+/// The span kinds a request can stamp.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceKind {
+    /// Request entered the engine (`detail` = prompt tokens).
+    Enqueue,
+    /// Scheduler admitted it into the running set (`detail` = prefill
+    /// start position, i.e. tokens adopted from prefix cache + spill).
+    Admit,
+    /// One prefill chunk executed (`detail` = chunk tokens).
+    Chunk,
+    /// First generated token sampled (`detail` = 0).
+    FirstToken,
+    /// Preempted back to the waiting queue (`detail` = 0).
+    Preempt,
+    /// KV blocks restored from the disk spill tier at admission
+    /// (`detail` = restored tokens).
+    SpillRestore,
+    /// Request finished (`detail` = generated tokens).
+    Finish,
+}
+
+impl TraceKind {
+    /// Stable lowercase name used in JSON renderings.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            TraceKind::Enqueue => "enqueue",
+            TraceKind::Admit => "admit",
+            TraceKind::Chunk => "chunk",
+            TraceKind::FirstToken => "first_token",
+            TraceKind::Preempt => "preempt",
+            TraceKind::SpillRestore => "spill_restore",
+            TraceKind::Finish => "finish",
+        }
+    }
+}
+
+/// One span record. `Copy` on purpose: recording is a slot store.
+#[derive(Debug, Clone, Copy)]
+pub struct TraceEvent {
+    /// Request id (router-assigned, echoed to the client).
+    pub id: u64,
+    /// Engine-clock timestamp, microseconds since engine start.
+    pub t_us: u64,
+    /// Span kind.
+    pub kind: TraceKind,
+    /// Kind-specific detail (see [`TraceKind`] variants).
+    pub detail: u64,
+}
+
+struct TraceInner {
+    slots: Vec<TraceEvent>,
+    /// Index of the oldest slot once the ring is full.
+    head: usize,
+    total: u64,
+}
+
+/// Bounded ring of [`TraceEvent`]s, oldest-evicted.
+#[derive(Debug)]
+pub struct TraceRing {
+    inner: Mutex<TraceInner>,
+    cap: usize,
+}
+
+impl std::fmt::Debug for TraceInner {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TraceInner")
+            .field("len", &self.slots.len())
+            .field("head", &self.head)
+            .field("total", &self.total)
+            .finish()
+    }
+}
+
+impl TraceRing {
+    /// Ring with room for `cap ≥ 1` events, fully preallocated.
+    pub fn new(cap: usize) -> Self {
+        let cap = cap.max(1);
+        TraceRing {
+            inner: Mutex::new(TraceInner { slots: Vec::with_capacity(cap), head: 0, total: 0 }),
+            cap,
+        }
+    }
+
+    /// Ring capacity in events.
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Events ever recorded (including evicted ones).
+    pub fn total(&self) -> u64 {
+        self.inner.lock().unwrap().total
+    }
+
+    /// Record one event, evicting the oldest when full. Never
+    /// allocates: pushes land inside the reserved capacity, overwrites
+    /// after that.
+    pub fn record(&self, ev: TraceEvent) {
+        let mut g = self.inner.lock().unwrap();
+        if g.slots.len() < self.cap {
+            g.slots.push(ev);
+        } else {
+            let h = g.head;
+            g.slots[h] = ev;
+            g.head = (h + 1) % self.cap;
+        }
+        g.total += 1;
+    }
+
+    /// All retained events for request `id`, in chronological order.
+    /// Allocates the result — debug-endpoint path, not the hot path.
+    pub fn events_for(&self, id: u64) -> Vec<TraceEvent> {
+        let g = self.inner.lock().unwrap();
+        let n = g.slots.len();
+        (0..n)
+            .map(|i| g.slots[(g.head + i) % n.max(1)])
+            .filter(|ev| ev.id == id)
+            .collect()
+    }
+
+    /// Retained event count (≤ capacity).
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().slots.len()
+    }
+
+    /// True when nothing has been recorded yet.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(id: u64, t_us: u64) -> TraceEvent {
+        TraceEvent { id, t_us, kind: TraceKind::Chunk, detail: 0 }
+    }
+
+    #[test]
+    fn ring_retains_and_filters() {
+        let r = TraceRing::new(8);
+        r.record(ev(1, 10));
+        r.record(ev(2, 20));
+        r.record(ev(1, 30));
+        let got = r.events_for(1);
+        assert_eq!(got.len(), 2);
+        assert_eq!((got[0].t_us, got[1].t_us), (10, 30));
+        assert!(r.events_for(3).is_empty());
+        assert_eq!(r.total(), 3);
+    }
+
+    #[test]
+    fn ring_wraps_evicting_oldest() {
+        let r = TraceRing::new(4);
+        for t in 0..10u64 {
+            r.record(ev(7, t));
+        }
+        let got = r.events_for(7);
+        assert_eq!(got.len(), 4);
+        // Oldest six evicted; survivors in chronological order.
+        assert_eq!(got.iter().map(|e| e.t_us).collect::<Vec<_>>(), vec![6, 7, 8, 9]);
+        assert_eq!(r.total(), 10);
+        assert_eq!(r.len(), 4);
+    }
+}

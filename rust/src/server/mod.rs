@@ -4,11 +4,24 @@
 //! speaking a JSON API over the [`Router`]:
 //!
 //! * `POST /generate` — `{"prompt": "...", "max_tokens": N,
-//!   "temperature": T?, "top_k": K?, "timeout_ms": D?}` → `{"id",
-//!   "text", "tokens", "latency_s", "ttft_s"}`
+//!   "temperature": T?, "top_k": K?, "timeout_ms": D?, "trace":
+//!   bool?}` → `{"id", "text", "tokens", "latency_s", "ttft_s"}`,
+//!   plus a `"trace"` span array when requested.
 //! * `GET /health` — `{"status", "workers", "healthy_workers",
 //!   "inflight", "worker_restarts", "detail": [...]}`; `503` when no
 //!   worker is healthy.
+//! * `GET /metrics` — Prometheus text exposition (0.0.4) of every
+//!   worker's telemetry registry: all mirrored `EngineMetrics`
+//!   counters, the per-phase step-time histograms and router-side
+//!   health gauges, labeled `worker="i"`.
+//! * `GET /debug/trace/{id}` — span records for one request from the
+//!   bounded trace ring (404 once overwritten or unknown).
+//! * `GET /debug/flight` — every worker's flight-recorder ring: the
+//!   last N step records the supervisor would dump on a crash.
+//!
+//! Every response and error body that concerns a specific request
+//! carries its router-assigned `"id"`, and the same id appears on the
+//! worker-side log lines — one id space from client to engine.
 //!
 //! Overload and failure map to honest statuses (ARCHITECTURE.md
 //! "Overload & failure contract") instead of a catch-all 400:
@@ -36,6 +49,7 @@
 
 use crate::coordinator::{Router, SubmitError};
 use crate::model::SamplingParams;
+use crate::obs::{render_prometheus, ExtraMetric, MetricDef, MetricKind};
 use crate::tokenizer::ByteTokenizer;
 use crate::util::json::{self, Value};
 use anyhow::{Context, Result};
@@ -202,8 +216,20 @@ fn respond_with(
     extra_headers: &[(&str, String)],
     body: &str,
 ) -> Result<()> {
+    respond_typed(stream, status, "application/json", extra_headers, body)
+}
+
+/// The Prometheus exposition format has its own content type; every
+/// JSON route goes through [`respond_with`] instead.
+fn respond_typed(
+    stream: &mut TcpStream,
+    status: &str,
+    content_type: &str,
+    extra_headers: &[(&str, String)],
+    body: &str,
+) -> Result<()> {
     let mut resp = format!(
-        "HTTP/1.1 {status}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n",
+        "HTTP/1.1 {status}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n",
         body.len()
     );
     for (k, v) in extra_headers {
@@ -217,10 +243,13 @@ fn respond_with(
 
 /// Generate-path failure, carrying enough to pick an honest status.
 enum ApiError {
-    /// Malformed request (bad JSON, missing field).
+    /// Malformed request (bad JSON, missing field) — rejected before a
+    /// request id was minted.
     Bad(String),
-    /// Typed rejection from the serving stack.
-    Submit(SubmitError),
+    /// Typed rejection from the serving stack, tagged with the id the
+    /// router assigned before admission — shed requests are debuggable
+    /// by id too.
+    Submit { id: u64, err: SubmitError },
 }
 
 impl ApiError {
@@ -232,15 +261,12 @@ impl ApiError {
                 vec![],
                 json::obj(vec![("error", msg.as_str().into()), ("kind", "bad_request".into())]),
             ),
-            ApiError::Submit(e) => {
-                let kind = match e {
-                    SubmitError::QueueFull { .. } => "queue_full",
-                    SubmitError::DeadlineExceeded => "deadline_exceeded",
-                    SubmitError::PromptTooLong { .. } => "prompt_too_long",
-                    SubmitError::WorkerFailed => "worker_failed",
-                };
-                let mut body =
-                    vec![("error", format!("{e}").into()), ("kind", kind.into())];
+            ApiError::Submit { id, err: e } => {
+                let mut body = vec![
+                    ("error", format!("{e}").into()),
+                    ("kind", e.kind().into()),
+                    ("id", (*id).into()),
+                ];
                 match e {
                     SubmitError::PromptTooLong { .. } => ("400 Bad Request", vec![], json::obj(body)),
                     SubmitError::QueueFull { retry_after_ms } => {
@@ -320,11 +346,137 @@ fn handle_connection(mut stream: TcpStream, router: &Router) -> Result<()> {
                 respond_with(&mut stream, status, &headers, &v.to_string_compact())
             }
         },
+        ("GET", "/metrics") => {
+            let text = render_metrics(router);
+            respond_typed(&mut stream, "200 OK", "text/plain; version=0.0.4", &[], &text)
+        }
+        ("GET", "/debug/flight") => {
+            let v = render_flight(router);
+            respond(&mut stream, "200 OK", &v.to_string_compact())
+        }
+        ("GET", p) if p.strip_prefix("/debug/trace/").is_some() => {
+            let id_str = p.strip_prefix("/debug/trace/").unwrap();
+            match id_str.parse::<u64>() {
+                Err(_) => {
+                    let v = json::obj(vec![
+                        ("error", format!("invalid request id '{id_str}'").into()),
+                        ("kind", "bad_request".into()),
+                    ]);
+                    respond(&mut stream, "400 Bad Request", &v.to_string_compact())
+                }
+                Ok(id) => {
+                    let events = router.trace_events(id);
+                    if events.is_empty() {
+                        let v = json::obj(vec![
+                            (
+                                "error",
+                                "no trace events for this id (unknown, or evicted from the bounded ring)".into(),
+                            ),
+                            ("kind", "not_found".into()),
+                            ("id", id.into()),
+                        ]);
+                        respond(&mut stream, "404 Not Found", &v.to_string_compact())
+                    } else {
+                        let v = json::obj(vec![
+                            ("id", id.into()),
+                            ("events", trace_events_json(&events)),
+                        ]);
+                        respond(&mut stream, "200 OK", &v.to_string_compact())
+                    }
+                }
+            }
+        }
         _ => {
             let v = json::obj(vec![("error", "not found".into())]);
             respond(&mut stream, "404 Not Found", &v.to_string_compact())
         }
     }
+}
+
+/// The `/metrics` exposition: every worker's registry plus the
+/// router-side health gauges the engine cannot see.
+fn render_metrics(router: &Router) -> String {
+    let telems = router.telemetries();
+    let workers: Vec<(usize, &crate::obs::Telemetry)> =
+        telems.iter().enumerate().map(|(i, t)| (i, t.as_ref())).collect();
+    let health = router.worker_health();
+    let extras = [
+        ExtraMetric {
+            def: MetricDef {
+                name: "worker_healthy",
+                help: "1 while the worker accepts requests, 0 once permanently dead.",
+                kind: MetricKind::Gauge,
+            },
+            values: health.iter().enumerate().map(|(i, h)| (i, h.healthy as u64)).collect(),
+        },
+        ExtraMetric {
+            def: MetricDef {
+                name: "flight_dumps",
+                help: "Crash dumps emitted from the worker's flight recorder.",
+                kind: MetricKind::Counter,
+            },
+            values: telems.iter().enumerate().map(|(i, t)| (i, t.flight.dumps())).collect(),
+        },
+    ];
+    render_prometheus(&workers, &extras)
+}
+
+/// The `/debug/flight` body: each worker's ring of recent step records,
+/// oldest first (bounded by the configured ring capacity).
+fn render_flight(router: &Router) -> Value {
+    let workers: Vec<Value> = router
+        .telemetries()
+        .iter()
+        .enumerate()
+        .map(|(i, t)| {
+            let records: Vec<Value> = t
+                .flight
+                .snapshot()
+                .iter()
+                .map(|r| {
+                    json::obj(vec![
+                        ("step", r.step.into()),
+                        ("t_us", r.t_us.into()),
+                        ("prefill_chunks", (r.prefill_chunks as u64).into()),
+                        ("prefill_tokens", (r.prefill_tokens as u64).into()),
+                        ("decode_batch", (r.decode_batch as u64).into()),
+                        ("budget_tokens", (r.budget_tokens as u64).into()),
+                        ("waiting", (r.waiting as u64).into()),
+                        ("running", (r.running as u64).into()),
+                        ("queue_depth", (r.queue_depth as u64).into()),
+                        ("aimd_limit", (r.aimd_limit as u64).into()),
+                        ("used_blocks", (r.used_blocks as u64).into()),
+                        ("free_blocks", (r.free_blocks as u64).into()),
+                    ])
+                })
+                .collect();
+            json::obj(vec![
+                ("worker", i.into()),
+                ("capacity", t.flight.capacity().into()),
+                ("total_recorded", t.flight.total().into()),
+                ("dumps", t.flight.dumps().into()),
+                ("records", Value::Arr(records)),
+            ])
+        })
+        .collect();
+    json::obj(vec![("workers", Value::Arr(workers))])
+}
+
+/// Trace events as a JSON array (shared by `/debug/trace/{id}` and the
+/// generate response's opt-in `"trace"` summary).
+fn trace_events_json(events: &[crate::obs::TraceEvent]) -> Value {
+    Value::Arr(
+        events
+            .iter()
+            .map(|e| {
+                json::obj(vec![
+                    ("t_us", e.t_us.into()),
+                    ("event", e.kind.as_str().into()),
+                    ("detail", e.detail.into()),
+                ])
+            })
+            .collect(),
+    )
 }
 
 fn handle_generate(router: &Router, body: &str) -> Result<Value, ApiError> {
@@ -342,24 +494,42 @@ fn handle_generate(router: &Router, body: &str) -> Result<Value, ApiError> {
     // Client scheduling deadline; the admission config's default applies
     // when absent.
     let timeout = req.get_usize("timeout_ms").map(|ms| Duration::from_millis(ms as u64));
-    let rx = router
-        .submit_with_deadline(prompt, params, timeout)
-        .map_err(ApiError::Submit)?;
+    let want_trace = req.get("trace").and_then(|b| b.as_bool()).unwrap_or(false);
+    let (id, submitted) = router.submit_traced(prompt, params, timeout);
+    let rx = match submitted {
+        Ok(rx) => rx,
+        Err(e) => {
+            log::debug!("request {id}: rejected at submit ({})", e.kind());
+            return Err(ApiError::Submit { id, err: e });
+        }
+    };
     let out = match rx.recv() {
         Ok(Ok(out)) => out,
-        Ok(Err(e)) => return Err(ApiError::Submit(e)),
+        Ok(Err(e)) => {
+            log::debug!("request {id}: failed ({})", e.kind());
+            return Err(ApiError::Submit { id, err: e });
+        }
         // Reply channel dropped without an answer: the worker died in a
         // way supervision could not translate.
-        Err(_) => return Err(ApiError::Submit(SubmitError::WorkerFailed)),
+        Err(_) => {
+            log::debug!("request {id}: reply channel dropped");
+            return Err(ApiError::Submit { id, err: SubmitError::WorkerFailed });
+        }
     };
-    Ok(json::obj(vec![
+    let mut fields = vec![
         ("id", out.id.into()),
         ("text", tok.decode(&out.tokens).into()),
         ("tokens", out.tokens.iter().map(|&t| t as usize).collect::<Vec<usize>>().into()),
         ("prompt_len", out.prompt_len.into()),
         ("latency_s", out.latency_s.into()),
         ("ttft_s", out.ttft_s.into()),
-    ]))
+    ];
+    if want_trace {
+        // Best-effort: events may already be evicted from the bounded
+        // ring under heavy traffic — an empty array, never an error.
+        fields.push(("trace", trace_events_json(&router.trace_events(id))));
+    }
+    Ok(json::obj(fields))
 }
 
 #[cfg(test)]
@@ -508,6 +678,84 @@ mod tests {
         let resp = post_generate(addr, r#"{"prompt":"hello","max_tokens":4,"timeout_ms":0}"#);
         assert!(resp.contains("503"), "{resp}");
         assert!(resp.contains("\"kind\":\"deadline_exceeded\""), "{resp}");
+    }
+
+    #[test]
+    fn metrics_exposition_covers_counters_and_default_run_keeps_opt_ins_zero() {
+        let (addr, _h) = start_server();
+        // Drive one request through so the mirrored counters move; its
+        // reply is sent after the engine's end-of-step mirror, so the
+        // scrape below observes it deterministically.
+        let resp = post_generate(addr, r#"{"prompt":"hello","max_tokens":4}"#);
+        assert!(resp.contains("200 OK"), "{resp}");
+        let m = http(addr, "GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert!(m.contains("200 OK"), "{m}");
+        assert!(m.contains("text/plain; version=0.0.4"), "{m}");
+        assert!(m.contains("opt_gptq_requests_completed{worker=\"0\"} 1"), "{m}");
+        assert!(m.contains("# TYPE opt_gptq_requests_completed counter"), "{m}");
+        assert!(m.contains("# TYPE opt_gptq_step_time_decode_us histogram"), "{m}");
+        assert!(m.contains("opt_gptq_step_time_decode_us_bucket{worker=\"0\",le=\"+Inf\"}"), "{m}");
+        assert!(m.contains("opt_gptq_worker_healthy{worker=\"0\"} 1"), "{m}");
+        // The default config is dense, spill-less and fault-free: every
+        // opt-in mechanism's counter must read exactly 0.
+        for series in [
+            "opt_gptq_skipped_tiles",
+            "opt_gptq_evicted_blocks",
+            "opt_gptq_spill_hit_tokens",
+            "opt_gptq_spill_bytes",
+            "opt_gptq_spill_corrupt_records",
+            "opt_gptq_spill_io_failures",
+            "opt_gptq_gather_bytes",
+            "opt_gptq_worker_restarts",
+            "opt_gptq_shed_count",
+            "opt_gptq_preemptions",
+        ] {
+            assert!(
+                m.contains(&format!("{series}{{worker=\"0\"}} 0\n")),
+                "{series} must be 0 under the default config:\n{m}"
+            );
+        }
+    }
+
+    #[test]
+    fn trace_flag_and_debug_endpoints_roundtrip() {
+        let (addr, _h) = start_server();
+        let resp = post_generate(addr, r#"{"prompt":"hello","max_tokens":4,"trace":true}"#);
+        assert!(resp.contains("200 OK"), "{resp}");
+        let json_body = resp.split("\r\n\r\n").nth(1).unwrap();
+        let v = json::parse(json_body).unwrap();
+        let id = v.get_usize("id").unwrap();
+        let trace = v.get("trace").unwrap().as_arr().unwrap();
+        assert!(!trace.is_empty(), "trace requested but empty");
+        let kinds: Vec<&str> =
+            trace.iter().map(|e| e.get_str("event").unwrap()).collect();
+        assert_eq!(kinds.first().copied(), Some("enqueue"));
+        assert_eq!(kinds.last().copied(), Some("finish"));
+        assert!(kinds.contains(&"first_token"), "{kinds:?}");
+        // The same lifecycle is served at the debug endpoint.
+        let t = http(addr, &format!("GET /debug/trace/{id} HTTP/1.1\r\nHost: x\r\n\r\n"));
+        assert!(t.contains("200 OK"), "{t}");
+        assert!(t.contains("\"event\":\"enqueue\""), "{t}");
+        assert!(t.contains("\"event\":\"finish\""), "{t}");
+        // Unknown ids 404; non-numeric ids 400.
+        let missing = http(addr, "GET /debug/trace/999 HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert!(missing.contains("404"), "{missing}");
+        let bad = http(addr, "GET /debug/trace/xyz HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert!(bad.contains("400"), "{bad}");
+        // And the flight recorder holds step records for the run.
+        let f = http(addr, "GET /debug/flight HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert!(f.contains("200 OK"), "{f}");
+        assert!(f.contains("\"records\":[{"), "{f}");
+        assert!(f.contains("\"dumps\":0"), "{f}");
+    }
+
+    #[test]
+    fn error_bodies_carry_the_request_id() {
+        let (addr, _h) =
+            start_server_with(AdmissionConfig { queue_depth: 0, ..Default::default() });
+        let resp = post_generate(addr, r#"{"prompt":"hello","max_tokens":4}"#);
+        assert!(resp.contains("429"), "{resp}");
+        assert!(resp.contains("\"id\":1"), "shed errors must carry the minted id: {resp}");
     }
 
     #[test]

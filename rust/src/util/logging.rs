@@ -1,7 +1,10 @@
 //! Minimal `log` facade backend (env_logger is unavailable offline).
 //!
 //! `init()` installs a stderr logger whose level comes from `OPT_GPTQ_LOG`
-//! (error|warn|info|debug|trace; default info). Safe to call repeatedly.
+//! (off|error|warn|info|debug|trace; default info). An unrecognized
+//! value falls back to info and warns once — a typo like
+//! `OPT_GPTQ_LOG=dbug` must not silently serve at the wrong verbosity.
+//! Safe to call repeatedly.
 
 use log::{Level, LevelFilter, Metadata, Record};
 use std::sync::Once;
@@ -39,16 +42,28 @@ static INIT: Once = Once::new();
 /// Install the logger (idempotent).
 pub fn init() {
     INIT.call_once(|| {
-        let level = match std::env::var("OPT_GPTQ_LOG").as_deref() {
-            Ok("error") => LevelFilter::Error,
-            Ok("warn") => LevelFilter::Warn,
-            Ok("debug") => LevelFilter::Debug,
-            Ok("trace") => LevelFilter::Trace,
-            _ => LevelFilter::Info,
+        let var = std::env::var("OPT_GPTQ_LOG");
+        let (level, unrecognized) = match var.as_deref() {
+            Ok("off") => (LevelFilter::Off, None),
+            Ok("error") => (LevelFilter::Error, None),
+            Ok("warn") => (LevelFilter::Warn, None),
+            Ok("info") => (LevelFilter::Info, None),
+            Ok("debug") => (LevelFilter::Debug, None),
+            Ok("trace") => (LevelFilter::Trace, None),
+            // Unset: the info default, silently.
+            Err(_) => (LevelFilter::Info, None),
+            // Set to something we don't know: info, plus a warning.
+            Ok(other) => (LevelFilter::Info, Some(other.to_string())),
         };
         let logger = Box::new(StderrLogger { start: Instant::now() });
         if log::set_boxed_logger(logger).is_ok() {
             log::set_max_level(level);
+            if let Some(v) = unrecognized {
+                log::warn!(
+                    "unrecognized OPT_GPTQ_LOG value '{v}' \
+                     (off|error|warn|info|debug|trace); defaulting to info"
+                );
+            }
         }
     });
 }

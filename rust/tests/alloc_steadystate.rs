@@ -214,4 +214,40 @@ fn steady_state_decode_attention_allocates_nothing() {
     });
     assert_eq!(n, 0, "serial decode GEMV must not allocate in steady state");
     assert!(gout.iter().all(|v| v.is_finite()));
+
+    // Armed telemetry rides the same contract: every counter store,
+    // histogram observation, flight record and at-capacity trace record
+    // hits preallocated storage — so stamping spans every engine step
+    // cannot reintroduce allocator churn (the obs/ placement contract).
+    use opt_gptq::obs::{EngineStat, StepPhase, StepRecord, Telemetry, TraceEvent, TraceKind};
+    let telem = Telemetry::with_capacities(16, 8);
+    // Warm the rings to capacity (ring-overwrite mode, like a warm
+    // engine mid-run).
+    for i in 0..16u64 {
+        telem.flight.record(StepRecord { step: i, ..Default::default() });
+    }
+    for i in 0..8u64 {
+        telem.traces.record(TraceEvent { id: i, t_us: i, kind: TraceKind::Enqueue, detail: 0 });
+    }
+    let n = count_allocs(|| {
+        for i in 0..50u64 {
+            telem.set(EngineStat::MixedSteps, i);
+            telem.phase(StepPhase::Decode).observe_us(i * 7 + 1);
+            telem.phase(StepPhase::Plan).observe_us(i);
+            telem.flight.record(StepRecord {
+                step: i,
+                decode_batch: i as u32,
+                ..Default::default()
+            });
+            telem.traces.record(TraceEvent {
+                id: i,
+                t_us: i,
+                kind: TraceKind::FirstToken,
+                detail: 0,
+            });
+        }
+    });
+    assert_eq!(n, 0, "warm telemetry must not allocate: counters, histograms and rings");
+    assert_eq!(telem.flight.total(), 66);
+    assert_eq!(telem.traces.total(), 58);
 }

@@ -404,3 +404,54 @@ fn prop_gqa_grouping_reduces_kv_memory_linearly() {
         Ok(())
     });
 }
+
+#[test]
+fn prop_histogram_bucket_boundaries() {
+    // The log₂ bucketing invariants, over random samples: a sample lands
+    // in the unique bucket whose inclusive upper bound covers it, the
+    // cumulative ladder is monotone, and the quantile always reports a
+    // bound at or above the sample's own bucket bound.
+    use opt_gptq::obs::{Histogram, HIST_BUCKETS};
+    forall("histogram-buckets", 0x0B5E11, 200, |g| {
+        // Exercise every magnitude: 2^k ± {0,1} plus uniform fill.
+        let k = g.usize_in(0, 40) as u32;
+        let base = 1u64 << k.min(63);
+        let us = match g.usize_in(0, 3) {
+            0 => base.saturating_sub(1),
+            1 => base,
+            2 => base.saturating_add(1),
+            _ => g.usize_in(0, 1 << 20) as u64,
+        };
+        let idx = Histogram::bucket_index(us);
+        if idx >= HIST_BUCKETS {
+            return Err(format!("index {idx} out of range for {us}"));
+        }
+        // The bucket's bound covers the sample…
+        if let Some(bound) = Histogram::bucket_bound_us(idx) {
+            if us > bound {
+                return Err(format!("{us} µs above its bucket bound {bound}"));
+            }
+        }
+        // …and it is the FIRST bucket that does (tightness).
+        if idx > 0 {
+            let prev = Histogram::bucket_bound_us(idx - 1).expect("finite below +Inf");
+            if us <= prev {
+                return Err(format!("{us} µs also fits bucket {} (bound {prev})", idx - 1));
+            }
+        }
+        // Recording keeps count/sum coherent and the quantile reports a
+        // bound no smaller than the sample's bucket bound.
+        let h = Histogram::new();
+        h.observe_us(us);
+        if h.count() != 1 || h.sum_us() != us || h.bucket_count(idx) != 1 {
+            return Err(format!("bookkeeping wrong after observing {us}"));
+        }
+        let q = h.quantile_us(1.0);
+        let expect = Histogram::bucket_bound_us(idx)
+            .unwrap_or_else(|| Histogram::bucket_bound_us(HIST_BUCKETS - 2).unwrap());
+        if q != expect {
+            return Err(format!("quantile {q} != bucket bound {expect} for {us}"));
+        }
+        Ok(())
+    });
+}

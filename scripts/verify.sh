@@ -47,6 +47,19 @@ if ! grep -q '#\[cfg(any(test, feature = "fault-inject"))\]' src/runtime/mod.rs;
   exit 1
 fi
 
+# Telemetry placement: spans are stamped at the coordinator layer ONLY.
+# A clock read inside the attention/matmul/SIMD kernels would cost every
+# tile in every build (and invite data-dependent instrumentation that
+# breaks the structural bit-identity argument), so the kernel hot-path
+# files must never touch a timer.
+if grep -nE 'Instant::now|SystemTime|elapsed\(' \
+    src/attention/kernel.rs src/attention/paged.rs \
+    src/tensor/simd.rs src/quant/matmul.rs \
+    | grep -vE '^[^:]+:[0-9]+:[[:space:]]*//'; then
+  echo "verify: FAIL — clock read on a kernel hot-path file (spans belong to the coordinator)" >&2
+  exit 1
+fi
+
 # ---- file-IO confinement gates --------------------------------------------
 # File IO is confined to the modules whose JOB is storage: the spill tier
 # (kvcache/spill.rs), weight artifacts (model/weights.rs, model/store.rs)
@@ -160,8 +173,12 @@ cargo run --release --example quantize_gptq -- --calib-tokens 96
 
 # ---- bench-artifact gate + trajectory delta -------------------------------
 # The serving smoke must exercise the spill tier and record its counters
-# (hit tokens, bytes, corrupt records) in the trajectory artifact.
-for key in spill_hit_tokens spill_bytes spill_corrupt_records; do
+# (hit tokens, bytes, corrupt records) in the trajectory artifact, and it
+# must publish the telemetry histograms' per-phase step-time p50s (the
+# serving smoke also scrapes /metrics once, so the exposition path is
+# exercised on every PR).
+for key in spill_hit_tokens spill_bytes spill_corrupt_records \
+    step_time_plan_p50_us step_time_prefill_p50_us step_time_decode_p50_us; do
   if ! grep -q "\"$key\"" ../BENCH_engine.json; then
     echo "verify: FAIL — BENCH_engine.json lost its $key field" >&2
     exit 1
